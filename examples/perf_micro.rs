@@ -1,0 +1,26 @@
+// Microbench: PJRT launch and GEMM library cost decomposition.
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let dev = std::rc::Rc::new(disc::runtime::pjrt::Device::cpu()?);
+    let mut lib = disc::library::GemmLibrary::new(dev.clone());
+    let a = disc::runtime::tensor::Tensor::f32(&[176,128], vec![0.5; 176*128]);
+    let b = disc::runtime::tensor::Tensor::f32(&[128,128], vec![0.5; 128*128]);
+    for _ in 0..5 { lib.matmul(&a, &b)?; }
+    let t = Instant::now(); let n = 100;
+    for _ in 0..n { lib.matmul(&a, &b)?; }
+    println!("lib 176x128x128 gemm: {:?}/call", t.elapsed()/n);
+
+    // batched
+    let a3 = disc::runtime::tensor::Tensor::f32(&[4,176,44], vec![0.5; 4*176*44]);
+    let b3 = disc::runtime::tensor::Tensor::f32(&[4,44,176], vec![0.5; 4*44*176]);
+    for _ in 0..5 { lib.matmul(&a3, &b3)?; }
+    let t = Instant::now();
+    for _ in 0..n { lib.matmul(&a3, &b3)?; }
+    println!("lib 4x176x44x176 bgemm: {:?}/call", t.elapsed()/n);
+
+    // reference naive dot for comparison
+    let t = Instant::now();
+    for _ in 0..20 { disc::runtime::reference::eval_op(&disc::dhlo::Op::Dot, &[&a, &b], &[176,128], disc::dhlo::DType::F32)?; }
+    println!("naive rust dot: {:?}/call", t.elapsed()/20);
+    Ok(())
+}

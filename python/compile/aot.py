@@ -1,0 +1,132 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts the Rust runtime loads.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the bundled xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts produced (under ``artifacts/``):
+  * ``model_s{bucket}.hlo.txt`` — the L2 encoder block at each sequence
+    bucket (the §4.3 shape-adaptive variant family the Rust serving example
+    selects from at runtime);
+  * ``gemm_{m}x{k}x{n}.hlo.txt`` — pre-generated library entries (§4.5)
+    for the transformer workload's GEMM shapes;
+  * ``manifest.json`` — machine-readable index (shapes, parameter order)
+    the Rust `runtime::artifacts` loader consumes.
+
+Python runs ONCE at build time (`make artifacts`); the request path is
+pure Rust.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+
+BUCKETS = [32, 64, 128]
+GEMM_SHAPES = [
+    # (m_bucket, k, n): transformer workload projections and FFN.
+    (32, 64, 64),
+    (64, 64, 64),
+    (128, 64, 64),
+    (64, 64, 128),
+    (64, 128, 64),
+]
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """StableHLO → XlaComputation → HLO text (the only interchange the
+    bundled XLA parses; `.serialize()` protos are rejected)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model_bucket(bucket: int) -> str:
+    fn = model_mod.block_fn_for_bucket(bucket)
+    x = jax.ShapeDtypeStruct((bucket, model_mod.HIDDEN), jnp.float32)
+    n = jax.ShapeDtypeStruct((), jnp.int32)
+    w = model_mod.BlockWeights.init(jax.random.PRNGKey(0))
+    flat_specs = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in w.flat()]
+    lowered = jax.jit(fn).lower(x, n, *flat_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_gemm(m: int, k: int, n: int) -> str:
+    # Bare (non-tuple) root: the Rust GemmLibrary expects an array output.
+    def fn(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(a, b), return_tuple=False)
+
+
+def weight_arrays():
+    """The deterministic weights baked into the artifacts' manifest so the
+    Rust side feeds the same values the pytest oracle used."""
+    w = model_mod.BlockWeights.init(jax.random.PRNGKey(0))
+    return w.flat()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"models": [], "gemms": [], "hidden": model_mod.HIDDEN}
+
+    for bucket in BUCKETS:
+        path = f"model_s{bucket}.hlo.txt"
+        text = lower_model_bucket(bucket)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["models"].append(
+            {
+                "path": path,
+                "bucket": bucket,
+                "hidden": model_mod.HIDDEN,
+                "params": "x, n, wq, wk, wv, wo, ln1_g, ln1_b, w1, b1, w2, b2, ln2_g, ln2_b",
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for (m, k, n) in GEMM_SHAPES:
+        path = f"gemm_{m}x{k}x{n}.hlo.txt"
+        text = lower_gemm(m, k, n)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["gemms"].append({"path": path, "m": m, "k": k, "n": n})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Weights, flattened row-major, so the Rust driver can reproduce the
+    # exact pytest numerics end-to-end.
+    weights_path = os.path.join(args.out_dir, "weights.json")
+    flat = weight_arrays()
+    names = [
+        "wq", "wk", "wv", "wo", "ln1_g", "ln1_b",
+        "w1", "b1", "w2", "b2", "ln2_g", "ln2_b",
+    ]
+    weights = {
+        name: {"dims": list(t.shape), "data": [float(v) for v in t.reshape(-1)]}
+        for name, t in zip(names, flat)
+    }
+    with open(weights_path, "w") as f:
+        json.dump(weights, f)
+    print(f"wrote weights.json ({os.path.getsize(weights_path)} bytes)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Layer-1 Pallas kernels: DISC's fused-kernel templates, adapted for TPU.
+
+The paper's CUDA fusion templates (classic loop fusion, input fusion with a
+reduce root, §4.3) become Pallas kernels whose iteration space is expressed
+with BlockSpecs (HBM→VMEM tiling in place of thread-block shaping). Dynamic
+shapes are handled exactly like the Rust codegen handles them — and exactly
+like the paper's "shape-adaptive fusion configuration": each kernel is
+compiled at a *bucket* shape, takes the actual extent as a scalar operand,
+and masks the padded tail in-kernel where a reduction would otherwise read
+garbage. Host-side selection logic (the Rust runtime) picks the right
+bucket variant per incoming shape.
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so lowering goes through the interpreter to plain HLO
+(numerically identical; see DESIGN.md §Hardware-Adaptation for the real-TPU
+performance estimate).
+
+Block-shape conventions (TPU VPU lanes are 8×128):
+  * the minor (feature/sequence) axis is padded to a multiple of 128 by the
+    bucket choice where possible;
+  * full rows stay resident in VMEM across each fused chain, which is what
+    removes the HBM round-trips the paper counts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-PJRT compatibility; flip off on a real TPU.
+
+
+def erf_approx(x):
+    """Abramowitz–Stegun 7.1.26 erf (|err| < 1.5e-7).
+
+    Used instead of ``jax.lax.erf`` because the bundled xla_extension 0.5.1
+    HLO-text parser predates the dedicated `erf` opcode; this expansion
+    lowers to mul/add/exp only, and matches the Rust reference interpreter
+    and HLO emitter bit-for-bit in formula.
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t + 0.254829592
+    y = 1.0 - poly * t * jnp.exp(-ax * ax)
+    return sign * y
+
+
+# ---------------------------------------------------------------------------
+# bias + gelu (classic loop fusion: matmul epilogue chain)
+# ---------------------------------------------------------------------------
+
+
+def _bias_gelu_kernel(x_ref, b_ref, o_ref):
+    x = x_ref[...]
+    b = b_ref[...]
+    h = x + b[None, :]
+    # erf-based gelu, matching the Rust reference and HLO emitter.
+    o_ref[...] = 0.5 * h * (1.0 + erf_approx(h / jnp.sqrt(2.0).astype(h.dtype)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def bias_gelu(x, b, block_rows: int = 128):
+    """Fused ``gelu(x + b)`` over ``x: [rows, hidden]``, ``b: [hidden]``.
+
+    Elementwise-only fusion: no masking needed — padded-tail garbage is
+    never read back (the caller crops), mirroring the Rust executor's
+    box-validity invariant.
+    """
+    rows, hidden = x.shape
+    grid = (max(1, rows // min(block_rows, rows)),)
+    rb = rows // grid[0]
+    return pl.pallas_call(
+        _bias_gelu_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, hidden), lambda i: (i, 0)),
+        interpret=INTERPRET,
+    )(x, b)
+
+
+# ---------------------------------------------------------------------------
+# layernorm (input fusion rooted at the mean/variance reduces)
+# ---------------------------------------------------------------------------
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    centered = x - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = centered * inv * g_ref[...][None, :] + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layernorm(x, gamma, beta, eps: float = 1e-5, block_rows: int = 128):
+    """Row layernorm over ``x: [rows, hidden]`` (hidden is static, so the
+    reduction needs no runtime mask)."""
+    rows, hidden = x.shape
+    grid = (max(1, rows // min(block_rows, rows)),)
+    rb = rows // grid[0]
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, hidden), lambda i: (i, 0)),
+        interpret=INTERPRET,
+    )(x, gamma, beta)
+
+
+# ---------------------------------------------------------------------------
+# masked softmax (the shape-adaptive kernel: dynamic axis in a bucket)
+# ---------------------------------------------------------------------------
+
+
+def _masked_softmax_kernel(x_ref, n_ref, o_ref):
+    x = x_ref[...]
+    n = n_ref[0]
+    cols = x.shape[-1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, len(x.shape) - 1)
+    valid = lane < n
+    neg_inf = jnp.finfo(x.dtype).min
+    masked = jnp.where(valid, x, neg_inf)
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - mx)
+    e = jnp.where(valid, e, 0.0)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = e / s
+    del cols
+
+
+@jax.jit
+def masked_softmax(x, n):
+    """Softmax over the last axis of a *bucket-shaped* ``x: [rows, bucket]``
+    where only the first ``n`` lanes are valid (attention scores over a
+    dynamic sequence length).
+
+    This is the §4.3 shape-adaptive template: one compiled artifact per
+    bucket, the actual extent arrives at runtime as ``n``, and the masked
+    tail produces exact zeros so downstream matmuls ignore the padding.
+    """
+    rows, bucket = x.shape
+    return pl.pallas_call(
+        _masked_softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, bucket), x.dtype),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, bucket), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, bucket), lambda i: (0, 0)),
+        interpret=INTERPRET,
+    )(x, n.reshape((1,)))
+
+
+# ---------------------------------------------------------------------------
+# residual add + layernorm (the transformer's hottest fused epilogue)
+# ---------------------------------------------------------------------------
+
+
+def _residual_layernorm_kernel(x_ref, r_ref, g_ref, b_ref, o_ref, *, eps):
+    h = x_ref[...] + r_ref[...]
+    mean = jnp.mean(h, axis=-1, keepdims=True)
+    centered = h - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = centered * inv * g_ref[...][None, :] + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def residual_layernorm(x, resid, gamma, beta, eps: float = 1e-5):
+    """Fused ``layernorm(x + resid)`` — loop fusion feeding an input fusion,
+    one VMEM-resident pass instead of two kernels + an HBM round trip."""
+    rows, hidden = x.shape
+    return pl.pallas_call(
+        functools.partial(_residual_layernorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((rows, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, hidden), lambda i: (0, 0)),
+        interpret=INTERPRET,
+    )(x, resid, gamma, beta)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+contract: pytest asserts allclose between each kernel and its oracle over
+hypothesis-driven shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+
+from .fused import erf_approx
+
+
+def bias_gelu(x, b):
+    h = x + b[None, :]
+    return 0.5 * h * (1.0 + erf_approx(h / jnp.sqrt(2.0).astype(h.dtype)))
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    centered = x - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return centered * inv * gamma[None, :] + beta[None, :]
+
+
+def masked_softmax(x, n):
+    """Softmax over the first ``n`` lanes of the last axis; zeros beyond."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    valid = lane < n
+    masked = jnp.where(valid, x, jnp.finfo(x.dtype).min)
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - mx)
+    e = jnp.where(valid, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def residual_layernorm(x, resid, gamma, beta, eps: float = 1e-5):
+    return layernorm(x + resid, gamma, beta, eps)

@@ -1,0 +1,132 @@
+"""Layer-2 JAX model: a transformer encoder block over a *bucket-shaped*
+sequence, calling the Layer-1 Pallas kernels.
+
+This is the AOT half of the reproduction's §4.3/§4.5 story: the block is
+lowered once per sequence bucket (with the actual length arriving as a
+scalar ``n``), and the Rust runtime's host-side selection logic picks the
+variant per request — DISC's shape-adaptive fusion configuration realized
+as AOT artifacts. Padding rows beyond ``n`` are garbage-tolerant: every
+reduction over the dynamic axis is masked (attention via
+``masked_softmax``) and the caller crops the output box.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused
+
+HIDDEN = 64
+HEADS = 4
+HEAD_DIM = HIDDEN // HEADS
+FFN = 128
+
+
+@dataclass
+class BlockWeights:
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    ln1_g: jax.Array
+    ln1_b: jax.Array
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+    ln2_g: jax.Array
+    ln2_b: jax.Array
+
+    @staticmethod
+    def init(key, hidden: int = HIDDEN, ffn: int = FFN) -> "BlockWeights":
+        ks = jax.random.split(key, 12)
+        s = 1.0 / jnp.sqrt(hidden)
+        return BlockWeights(
+            wq=jax.random.normal(ks[0], (hidden, hidden), jnp.float32) * s,
+            wk=jax.random.normal(ks[1], (hidden, hidden), jnp.float32) * s,
+            wv=jax.random.normal(ks[2], (hidden, hidden), jnp.float32) * s,
+            wo=jax.random.normal(ks[3], (hidden, hidden), jnp.float32) * s,
+            ln1_g=jnp.ones((hidden,), jnp.float32),
+            ln1_b=jnp.zeros((hidden,), jnp.float32),
+            w1=jax.random.normal(ks[4], (hidden, ffn), jnp.float32) * s,
+            b1=jnp.zeros((ffn,), jnp.float32),
+            w2=jax.random.normal(ks[5], (ffn, hidden), jnp.float32) * (1.0 / jnp.sqrt(ffn)),
+            b2=jnp.zeros((hidden,), jnp.float32),
+            ln2_g=jnp.ones((hidden,), jnp.float32),
+            ln2_b=jnp.zeros((hidden,), jnp.float32),
+        )
+
+    def flat(self):
+        return [
+            self.wq, self.wk, self.wv, self.wo,
+            self.ln1_g, self.ln1_b,
+            self.w1, self.b1, self.w2, self.b2,
+            self.ln2_g, self.ln2_b,
+        ]
+
+
+def encoder_block(x, n, w: BlockWeights):
+    """One encoder block over ``x: [bucket, HIDDEN]`` with ``n`` valid rows.
+
+    Matmuls use the MXU path (plain jnp.dot lowers to XLA dot); the
+    memory-intensive epilogues go through the Pallas kernels.
+    """
+    bucket = x.shape[0]
+
+    q = x @ w.wq
+    k = x @ w.wk
+    v = x @ w.wv
+
+    def heads(t):  # [bucket, H] -> [HEADS, bucket, HEAD_DIM]
+        return t.reshape(bucket, HEADS, HEAD_DIM).transpose(1, 0, 2)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("hsd,htd->hst", qh, kh) / jnp.sqrt(float(HEAD_DIM))
+    # Masked softmax over the dynamic axis, head by head through the fused
+    # kernel (rows = HEADS * bucket after flattening).
+    flat_scores = scores.reshape(HEADS * bucket, bucket)
+    attn = fused.masked_softmax(flat_scores, n).reshape(HEADS, bucket, bucket)
+    ctx = jnp.einsum("hst,htd->hsd", attn, vh)
+    merged = ctx.transpose(1, 0, 2).reshape(bucket, HIDDEN)
+    proj = merged @ w.wo
+
+    h1 = fused.residual_layernorm(proj, x, w.ln1_g, w.ln1_b)
+
+    f = fused.bias_gelu(h1 @ w.w1, w.b1)
+    f2 = (f @ w.w2) + w.b2[None, :]
+    return fused.residual_layernorm(f2, h1, w.ln2_g, w.ln2_b)
+
+
+def reference_block(x, n, w: BlockWeights):
+    """Pure-jnp oracle of :func:`encoder_block` (no Pallas)."""
+    from .kernels import ref
+
+    bucket = x.shape[0]
+    q, k, v = x @ w.wq, x @ w.wk, x @ w.wv
+
+    def heads(t):
+        return t.reshape(bucket, HEADS, HEAD_DIM).transpose(1, 0, 2)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("hsd,htd->hst", qh, kh) / jnp.sqrt(float(HEAD_DIM))
+    attn = ref.masked_softmax(scores.reshape(HEADS * bucket, bucket), n)
+    attn = attn.reshape(HEADS, bucket, bucket)
+    ctx = jnp.einsum("hst,htd->hsd", attn, vh)
+    merged = ctx.transpose(1, 0, 2).reshape(bucket, HIDDEN)
+    proj = merged @ w.wo
+    h1 = ref.residual_layernorm(proj, x, w.ln1_g, w.ln1_b)
+    f = ref.bias_gelu(h1 @ w.w1, w.b1)
+    f2 = (f @ w.w2) + w.b2[None, :]
+    return ref.residual_layernorm(f2, h1, w.ln2_g, w.ln2_b)
+
+
+def block_fn_for_bucket(bucket: int):
+    """A jit-able function of (x, n, *flat_weights) for AOT lowering at a
+    fixed bucket shape. Returns a 1-tuple (the Rust loader unwraps it)."""
+
+    def fn(x, n, *flat):
+        w = BlockWeights(*flat)
+        return (encoder_block(x, n, w),)
+
+    return fn

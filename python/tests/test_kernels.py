@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: the L1 correctness signal.
+
+Hypothesis sweeps shapes (and the valid-extent scalar for the masked
+kernels); every kernel must match its oracle to float32 tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(0.0, scale, size=shape).astype(np.float32))
+
+
+dims_rows = st.integers(min_value=1, max_value=96)
+dims_hidden = st.sampled_from([8, 16, 64, 128])
+
+
+@given(rows=dims_rows, hidden=dims_hidden)
+def test_bias_gelu_matches_ref(rows, hidden):
+    x = rand((rows, hidden))
+    b = rand((hidden,), 0.5)
+    got = fused.bias_gelu(x, b)
+    want = ref.bias_gelu(x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(rows=dims_rows, hidden=dims_hidden)
+def test_layernorm_matches_ref(rows, hidden):
+    x = rand((rows, hidden))
+    g = rand((hidden,), 0.5) + 1.0
+    b = rand((hidden,), 0.5)
+    got = fused.layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(rows=st.integers(1, 32), bucket=st.sampled_from([16, 32, 64]), data=st.data())
+def test_masked_softmax_matches_ref(rows, bucket, data):
+    n = data.draw(st.integers(min_value=1, max_value=bucket))
+    x = rand((rows, bucket), 2.0)
+    got = fused.masked_softmax(x, jnp.int32(n))
+    want = ref.masked_softmax(x, jnp.int32(n))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # Valid lanes sum to one; masked lanes are exactly zero.
+    np.testing.assert_allclose(np.asarray(got)[:, :n].sum(axis=1), 1.0, rtol=1e-5)
+    assert (np.asarray(got)[:, n:] == 0.0).all()
+
+
+@given(rows=st.integers(1, 64), hidden=dims_hidden)
+def test_residual_layernorm_matches_ref(rows, hidden):
+    x = rand((rows, hidden))
+    r = rand((rows, hidden))
+    g = rand((hidden,), 0.5) + 1.0
+    b = rand((hidden,), 0.5)
+    got = fused.residual_layernorm(x, r, g, b)
+    want = ref.residual_layernorm(x, r, g, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_softmax_ignores_garbage_tail():
+    """The shape-adaptive contract: tail contents must not affect results."""
+    x = rand((4, 32), 1.0)
+    poisoned = x.at[:, 20:].set(1e30)
+    n = jnp.int32(20)
+    clean = fused.masked_softmax(x, n)
+    dirty = fused.masked_softmax(poisoned, n)
+    np.testing.assert_allclose(np.asarray(clean)[:, :20], np.asarray(dirty)[:, :20], rtol=1e-6)
+
+
+@pytest.mark.parametrize("block_rows", [16, 64, 128])
+def test_bias_gelu_block_shapes_equivalent(block_rows):
+    """Different BlockSpec tilings must not change numerics (the L1 perf
+    knob is layout-only)."""
+    x = rand((128, 64))
+    b = rand((64,))
+    got = fused.bias_gelu(x, b, block_rows=block_rows)
+    want = ref.bias_gelu(x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_kernels_lower_to_hlo_text():
+    """Every kernel must survive the AOT path (StableHLO → HLO text)."""
+    from compile.aot import to_hlo_text
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64,), jnp.float32)
+    lowered = jax.jit(lambda a, c: (fused.bias_gelu(a, c),)).lower(x, b)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text and "ENTRY" in text

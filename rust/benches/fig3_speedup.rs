@@ -1,0 +1,104 @@
+//! Figure 3: DISC speedup over TensorFlow/PyTorch (framework-eager) for
+//! every Table 1 workload, plus the §5.1 Transformer and BERT case-study
+//! rows (memory-intensive time and kernel-call reduction).
+//!
+//! Paper reference: up to 3.35×, average 2.27× end-to-end; Transformer
+//! mem-intensive 66.06 → 21.52 ms, kernel calls 42884 → 6186; BERT
+//! mem-intensive 5.96 → 3.33 ms, kernels 198 → 97.
+//!
+//! Our numbers come from the T4 cost model over measured launch/byte
+//! counts (see DESIGN.md §3): the *shape* — who wins and by roughly what
+//! factor — is the reproduction target, not absolute milliseconds.
+
+use disc::bench::{speedup, Table};
+use disc::compiler::{CompileOptions, DiscCompiler, Mode};
+use disc::coordinator::serve_closed_loop;
+use disc::runtime::metrics::RunMetrics;
+use disc::sim::GpuModel;
+
+const REQUESTS: usize = 20;
+const SEED: u64 = 31;
+
+fn run_mode(
+    compiler: &DiscCompiler,
+    w: &disc::workloads::Workload,
+    mode: Mode,
+) -> (RunMetrics, f64) {
+    let module = disc::bridge::lower(&w.graph).expect("lower");
+    let mut model = compiler.compile(module, &CompileOptions::mode(mode)).expect("compile");
+    // Warm with the same stream: the measured pass is steady-state
+    // (compilation is measured by the compile_overhead bench, not here).
+    for inputs in w.request_stream(REQUESTS, SEED) {
+        model.run(&inputs).expect("warmup");
+    }
+    let stream = w.request_stream(REQUESTS, SEED);
+    let report = serve_closed_loop(&mut model, stream).expect("serve");
+    (report.metrics.clone(), report.wall.as_secs_f64() * 1e3)
+}
+
+fn main() {
+    let compiler = DiscCompiler::new().expect("pjrt device");
+    let gpu = GpuModel::default();
+
+    println!("=== Figure 3: speedup vs TensorFlow/PyTorch (T4 cost model) ===\n");
+    let mut table = Table::new(&[
+        "workload", "fw", "batch", "eager e2e(ms)", "disc e2e(ms)", "speedup",
+        "mem eager(ms)", "mem disc(ms)", "mem speedup",
+    ]);
+    let mut speedups = Vec::new();
+    let mut case_rows: Vec<(String, RunMetrics, RunMetrics)> = Vec::new();
+
+    for w in disc::workloads::all() {
+        let (em, _) = run_mode(&compiler, &w, Mode::Eager);
+        let (dm, _) = run_mode(&compiler, &w, Mode::Disc);
+        let eb = gpu.breakdown(&em);
+        let db = gpu.breakdown(&dm);
+        // Device-side comparison (comp + mem): host CPU time is measured on
+        // this testbed's CPU executor and reported separately in Table 2.
+        let e_dev = eb.comp_bound_ms + eb.mem_bound_ms;
+        let d_dev = db.comp_bound_ms + db.mem_bound_ms;
+        speedups.push(e_dev / d_dev);
+        table.row(&[
+            w.name.to_string(),
+            w.framework.to_string(),
+            w.batch.to_string(),
+            format!("{e_dev:.3}"),
+            format!("{d_dev:.3}"),
+            speedup(e_dev, d_dev),
+            format!("{:.3}", eb.mem_bound_ms),
+            format!("{:.3}", db.mem_bound_ms),
+            speedup(eb.mem_bound_ms, db.mem_bound_ms),
+        ]);
+        if w.name == "transformer" || w.name == "bert" {
+            case_rows.push((w.name.to_string(), em, dm));
+        }
+    }
+    table.print();
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "\naverage device speedup {avg:.2}x, max {max:.2}x \
+         (paper: avg 2.27x, max 3.35x end-to-end on T4)"
+    );
+
+    println!("\n=== §5.1 case studies: kernel-call reduction ===\n");
+    let mut cs = Table::new(&[
+        "model", "eager mem-kernels", "disc mem-kernels", "reduction",
+        "eager mem-bytes", "disc mem-bytes",
+    ]);
+    for (name, em, dm) in &case_rows {
+        cs.row(&[
+            name.clone(),
+            em.mem_kernels.to_string(),
+            dm.mem_kernels.to_string(),
+            format!("{:.2}x", em.mem_kernels as f64 / dm.mem_kernels as f64),
+            disc::util::fmt_bytes(em.mem_bytes as usize),
+            disc::util::fmt_bytes(dm.mem_bytes as usize),
+        ]);
+    }
+    cs.print();
+    println!(
+        "\n(paper: Transformer 42884 → 6186 kernel calls over its full run; \
+         BERT 198 → 97 per inference)"
+    );
+}

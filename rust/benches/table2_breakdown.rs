@@ -1,0 +1,69 @@
+//! Table 2: Transformer performance breakdown, Nimble-like VM vs DISC.
+//!
+//! Paper (ms): Nimble 66.58 / 56.09 / 65.83 / 188.5 vs
+//!             DISC   59.68 / 21.52 / 24.08 / 105.28
+//!             (comp-bound / mem-bound / CPU / E2E)
+//!
+//! Device columns come from the T4 cost model over measured counts; the
+//! CPU column is *measured host time* on this testbed (that comparison —
+//! interpreted VM flow vs compile-time-generated flow over identical
+//! kernels — is the paper's architectural claim, and is hardware-real
+//! here). Paper's CPU ratio: DISC = 36.6% of Nimble.
+
+use disc::bench::Table;
+use disc::compiler::{CompileOptions, DiscCompiler, Mode};
+use disc::coordinator::serve_closed_loop;
+use disc::sim::GpuModel;
+
+const REQUESTS: usize = 30;
+const SEED: u64 = 77;
+
+fn main() {
+    let compiler = DiscCompiler::new().expect("pjrt device");
+    let gpu = GpuModel::default();
+    let w = disc::workloads::transformer::workload();
+
+    let mut rows = Vec::new();
+    for (label, mode) in [("Nimble (VM)", Mode::VmNimble), ("DISC", Mode::Disc)] {
+        let module = disc::bridge::lower(&w.graph).expect("lower");
+        let mut model =
+            compiler.compile(module, &CompileOptions::mode(mode)).expect("compile");
+        // Warm with the SAME stream: the measured pass is all cache hits,
+        // so host-time comparison is steady-state (compilation is measured
+        // by compile_overhead).
+        for inputs in w.request_stream(REQUESTS, SEED) {
+            model.run(&inputs).expect("warmup");
+        }
+        let report =
+            serve_closed_loop(&mut model, w.request_stream(REQUESTS, SEED)).expect("serve");
+        let b = gpu.breakdown(&report.metrics);
+        rows.push((label, b, report.metrics.clone()));
+    }
+
+    println!("=== Table 2: Transformer breakdown (per {REQUESTS}-request stream) ===\n");
+    let mut t = Table::new(&["backend", "comp-bound(ms)", "mem-bound(ms)", "CPU(ms)", "E2E(ms)"]);
+    for (label, b, _) in &rows {
+        t.row(&[
+            label.to_string(),
+            format!("{:.3}", b.comp_bound_ms),
+            format!("{:.3}", b.mem_bound_ms),
+            format!("{:.3}", b.cpu_ms),
+            format!("{:.3}", b.e2e_ms),
+        ]);
+    }
+    t.print();
+
+    let nimble_cpu = rows[0].1.cpu_ms;
+    let disc_cpu = rows[1].1.cpu_ms;
+    println!(
+        "\nCPU time: DISC = {:.1}% of Nimble (paper: 36.6%) — the generated \
+         runtime flow vs VM interpretation gap, measured on real host time.",
+        100.0 * disc_cpu / nimble_cpu
+    );
+    println!(
+        "mem-bound: DISC = {:.2}x faster (paper: 2.61x) — constraint-driven \
+         fusion scope.",
+        rows[0].1.mem_bound_ms / rows[1].1.mem_bound_ms
+    );
+    println!("\npaper reference (ms): Nimble 66.58/56.09/65.83/188.5, DISC 59.68/21.52/24.08/105.28");
+}

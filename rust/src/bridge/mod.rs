@@ -1,0 +1,459 @@
+//! Computation-graph bridging: framework graph → DHLO (§3, §4.1).
+//!
+//! Besides op-by-op lowering (with explicit broadcast materialization and
+//! composite expansion for Softmax/LayerNorm), the bridge performs the
+//! paper's *shape constraint collection from high-level ops* (§4.2.1,
+//! second source). The canonical example is `tf.Split`: it lowers to
+//! independent `DSlice`s whose result dims are fresh symbols — the fact
+//! that all outputs share a shape would be lost, so the bridge injects
+//! dimension-equality constraints across the outputs and against the
+//! unsplit input axes. The fusion planner then sees through them.
+
+use crate::dhlo::{Builder, Literal, Module, ValueId};
+use crate::graph::{GOp, Graph};
+use crate::shape::{Dim, ShapeExpr};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+/// Lower a framework graph to a DHLO module.
+pub fn lower(g: &Graph) -> Result<Module> {
+    let mut b = Builder::new(g.name.clone());
+    let mut env: HashMap<(usize, usize), ValueId> = HashMap::new();
+    let mut param_count = 0usize;
+
+    for (nid, node) in g.nodes.iter().enumerate() {
+        let ins: Vec<ValueId> = node
+            .inputs
+            .iter()
+            .map(|e| {
+                env.get(&(e.node, e.port))
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("node {} input missing", node.name))
+            })
+            .collect::<Result<_>>()?;
+        let outs: Vec<ValueId> = lower_node(&mut b, node, &ins, &mut param_count)
+            .with_context(|| format!("lowering node '{}' ({})", node.name, node.op.name()))?;
+        ensure!(outs.len() == node.op.num_outputs(), "output arity mismatch");
+        for (port, v) in outs.into_iter().enumerate() {
+            b.set_name(v, format!("{}:{port}", node.name));
+            env.insert((nid, port), v);
+        }
+    }
+
+    let outputs: Vec<ValueId> = g
+        .outputs
+        .iter()
+        .map(|e| {
+            env.get(&(e.node, e.port))
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("graph output missing"))
+        })
+        .collect::<Result<_>>()?;
+    let m = b.finish(outputs);
+    crate::dhlo::verify::verify(&m)?;
+    Ok(m)
+}
+
+/// Insert broadcasts so the two operands share a shape (numpy trailing-axis
+/// rules restricted to the cases frameworks actually emit).
+fn broadcast_pair(b: &mut Builder, x: ValueId, y: ValueId) -> Result<(ValueId, ValueId)> {
+    let (rx, ry) = (b.m.ty(x).rank(), b.m.ty(y).rank());
+    if rx == ry {
+        return Ok((x, y));
+    }
+    if rx == 0 {
+        let xb = b.broadcast_scalar_like(x, y)?;
+        return Ok((xb, y));
+    }
+    if ry == 0 {
+        let yb = b.broadcast_scalar_like(y, x)?;
+        return Ok((x, yb));
+    }
+    if rx == 1 && ry > 1 {
+        let xb = b.broadcast_row_like(x, y)?;
+        return Ok((xb, y));
+    }
+    if ry == 1 && rx > 1 {
+        let yb = b.broadcast_row_like(y, x)?;
+        return Ok((x, yb));
+    }
+    bail!("unsupported broadcast ranks {rx} vs {ry}")
+}
+
+/// Build an s64[rank] index tensor from per-axis scalar values, where each
+/// scalar is either a constant or a host-computed value (GetDimSize math).
+fn pack_index_tensor(b: &mut Builder, parts: &[ValueId]) -> Result<ValueId> {
+    // All-constant fast path.
+    let consts: Option<Vec<i64>> = parts
+        .iter()
+        .map(|&v| match &b.m.instrs[v].op {
+            crate::dhlo::Op::Const { lit: Literal::I64(vals), .. } => Some(vals[0]),
+            _ => None,
+        })
+        .collect();
+    if let Some(vals) = consts {
+        return Ok(b.i64_vec(&vals));
+    }
+    let mut ones: Vec<ValueId> = Vec::with_capacity(parts.len());
+    for &p in parts {
+        ones.push(b.reshape(p, vec![Dim::Fixed(1)])?);
+    }
+    b.concat(&ones, 0)
+}
+
+fn lower_node(
+    b: &mut Builder,
+    node: &crate::graph::Node,
+    ins: &[ValueId],
+    param_count: &mut usize,
+) -> Result<Vec<ValueId>> {
+    Ok(match &node.op {
+        GOp::Placeholder { dtype, dims } => {
+            let p = *param_count;
+            *param_count += 1;
+            let d: Vec<Dim> = dims
+                .iter()
+                .enumerate()
+                .map(|(axis, &d)| {
+                    if d < 0 {
+                        b.dyn_dim(format!("{}_{axis}", node.name), p, axis)
+                    } else {
+                        Dim::Fixed(d as usize)
+                    }
+                })
+                .collect();
+            vec![b.param(*dtype, d)]
+        }
+        GOp::Const { lit, dims } => vec![b.constant(lit.clone(), dims)],
+        GOp::Unary(k) => vec![b.unary(*k, ins[0])],
+        GOp::Binary(k) => {
+            let (x, y) = broadcast_pair(b, ins[0], ins[1])?;
+            vec![b.binary(*k, x, y)?]
+        }
+        GOp::Compare(d) => {
+            let (x, y) = broadcast_pair(b, ins[0], ins[1])?;
+            vec![b.compare(*d, x, y)?]
+        }
+        GOp::Select => vec![b.select(ins[0], ins[1], ins[2])?],
+        GOp::Cast { to } => vec![b.convert(ins[0], *to)],
+        GOp::Scale { c } => {
+            let s = b.scalar_f32(*c);
+            let sb = b.broadcast_scalar_like(s, ins[0])?;
+            vec![b.mul(ins[0], sb)?]
+        }
+        GOp::MatMul => vec![b.dot(ins[0], ins[1])?],
+        GOp::Softmax => vec![b.softmax_last(ins[0])?],
+        GOp::LayerNorm { eps } => vec![b.layernorm_last(ins[0], ins[1], ins[2], *eps)?],
+        GOp::BiasAdd => {
+            let bias = b.broadcast_row_like(ins[1], ins[0])?;
+            vec![b.add(ins[0], bias)?]
+        }
+        GOp::Transpose { perm } => vec![b.transpose(ins[0], perm.clone())?],
+        GOp::Concat { axis } => vec![b.concat(ins, *axis)?],
+        GOp::Reduce { kind, axes } => vec![b.reduce(*kind, ins[0], axes.clone())?],
+        GOp::Gather { axis } => vec![b.gather(ins[0], ins[1], *axis)?],
+        GOp::Unique => vec![b.unique(ins[0])?],
+        GOp::Pad { low, high, value } => {
+            let v = b.scalar_f32(*value);
+            vec![b.pad(ins[0], v, low.clone(), high.clone())?]
+        }
+        GOp::Reshape { dims } => vec![lower_reshape(b, ins[0], dims)?],
+        GOp::Slice { begin, size } => vec![lower_slice(b, ins[0], begin, size)?],
+        GOp::Split { axis, num } => lower_split(b, ins[0], *axis, *num)?,
+    })
+}
+
+/// TF-style reshape with at most one `-1` (inferred) dim. With dynamic
+/// inputs the inferred dim becomes a symbol `total / known`.
+fn lower_reshape(b: &mut Builder, x: ValueId, dims: &[i64]) -> Result<ValueId> {
+    let in_dims = b.m.ty(x).dims.clone();
+    ensure!(dims.iter().filter(|&&d| d == -1).count() <= 1, "reshape: multiple -1 dims");
+    let known: i64 = dims.iter().filter(|&&d| d >= 0).product::<i64>().max(1);
+    let mut out: Vec<Dim> = Vec::with_capacity(dims.len());
+    for &d in dims {
+        if d >= 0 {
+            out.push(Dim::Fixed(d as usize));
+        } else if in_dims.iter().all(|dd| !dd.is_dynamic()) {
+            let total: usize = in_dims.iter().map(|dd| dd.fixed().unwrap()).product();
+            out.push(Dim::Fixed(total / known as usize));
+        } else {
+            // total(symbolic) / known
+            let total = in_dims
+                .iter()
+                .map(|&dd| ShapeExpr::Dim(dd))
+                .reduce(ShapeExpr::mul)
+                .unwrap_or(ShapeExpr::Const(1));
+            let expr = ShapeExpr::ceil_div(total, ShapeExpr::Const(known));
+            out.push(Dim::Sym(b.m.syms.fresh(format!("rsh{}", b.m.instrs.len()), expr)));
+        }
+    }
+    b.reshape(x, out)
+}
+
+/// TF-style slice (`begin` + `size`, `-1` = to end). Static inputs lower to
+/// HLO `Slice`; dynamic inputs take the DHLO `DSlice` twin with host-side
+/// index tensors (figure 2 of the paper).
+fn lower_slice(b: &mut Builder, x: ValueId, begin: &[i64], size: &[i64]) -> Result<ValueId> {
+    let in_dims = b.m.ty(x).dims.clone();
+    let rank = in_dims.len();
+    ensure!(begin.len() == rank && size.len() == rank, "slice: rank mismatch");
+    let all_static = in_dims.iter().all(|d| !d.is_dynamic());
+    if all_static {
+        let mut limits = Vec::with_capacity(rank);
+        for a in 0..rank {
+            let n = in_dims[a].fixed().unwrap() as i64;
+            limits.push(if size[a] < 0 { n } else { begin[a] + size[a] });
+        }
+        return b.slice(x, begin.to_vec(), limits, vec![1; rank]);
+    }
+    // Dynamic: build index tensors on the host.
+    let mut start_parts = Vec::with_capacity(rank);
+    let mut limit_parts = Vec::with_capacity(rank);
+    for a in 0..rank {
+        start_parts.push(b.scalar_i64(begin[a]));
+        if size[a] < 0 {
+            let lim = b.get_dim_size(x, a)?;
+            limit_parts.push(lim);
+        } else {
+            limit_parts.push(b.scalar_i64(begin[a] + size[a]));
+        }
+    }
+    let starts = pack_index_tensor(b, &start_parts)?;
+    let limits = pack_index_tensor(b, &limit_parts)?;
+    let strides = b.i64_vec(&vec![1i64; rank]);
+    b.dslice(x, starts, limits, strides)
+}
+
+/// `tf.Split`: `num` equal parts along `axis`, with constraint injection.
+fn lower_split(b: &mut Builder, x: ValueId, axis: usize, num: usize) -> Result<Vec<ValueId>> {
+    let in_dims = b.m.ty(x).dims.clone();
+    let rank = in_dims.len();
+    ensure!(axis < rank, "split: axis out of range");
+    ensure!(num >= 1, "split: num >= 1");
+
+    let mut outs = Vec::with_capacity(num);
+    match b.m.syms.canon_dim(in_dims[axis]) {
+        Dim::Fixed(n) => {
+            ensure!(n % num == 0, "split: {n} not divisible by {num}");
+            let part = (n / num) as i64;
+            for i in 0..num {
+                let mut starts = vec![0i64; rank];
+                let mut limits: Vec<i64> = Vec::with_capacity(rank);
+                for a in 0..rank {
+                    if a == axis {
+                        starts[a] = part * i as i64;
+                        limits.push(part * (i as i64 + 1));
+                    } else if let Dim::Fixed(d) = b.m.syms.canon_dim(in_dims[a]) {
+                        limits.push(d as i64);
+                    } else {
+                        // Mixed: fall back to the dynamic path entirely.
+                        return lower_split_dynamic(b, x, axis, num);
+                    }
+                }
+                outs.push(b.slice(x, starts, limits, vec![1; rank])?);
+            }
+        }
+        Dim::Sym(_) => return lower_split_dynamic(b, x, axis, num),
+    }
+    inject_split_constraints(b, x, &outs, axis);
+    Ok(outs)
+}
+
+fn lower_split_dynamic(
+    b: &mut Builder,
+    x: ValueId,
+    axis: usize,
+    num: usize,
+) -> Result<Vec<ValueId>> {
+    let rank = b.m.ty(x).rank();
+    // part = dim(axis) / num, computed on the host.
+    let dim_axis = b.get_dim_size(x, axis)?;
+    let num_c = b.scalar_i64(num as i64);
+    let part = b.div(dim_axis, num_c)?;
+
+    let mut outs = Vec::with_capacity(num);
+    for i in 0..num {
+        let i_c = b.scalar_i64(i as i64);
+        let i1_c = b.scalar_i64(i as i64 + 1);
+        let start_axis = b.mul(part, i_c)?;
+        let limit_axis = b.mul(part, i1_c)?;
+        let mut start_parts = Vec::with_capacity(rank);
+        let mut limit_parts = Vec::with_capacity(rank);
+        for a in 0..rank {
+            if a == axis {
+                start_parts.push(start_axis);
+                limit_parts.push(limit_axis);
+            } else {
+                start_parts.push(b.scalar_i64(0));
+                let lim = b.get_dim_size(x, a)?;
+                limit_parts.push(lim);
+            }
+        }
+        let starts = pack_index_tensor(b, &start_parts)?;
+        let limits = pack_index_tensor(b, &limit_parts)?;
+        let strides = b.i64_vec(&vec![1i64; rank]);
+        outs.push(b.dslice(x, starts, limits, strides)?);
+    }
+    inject_split_constraints(b, x, &outs, axis);
+    Ok(outs)
+}
+
+/// The paper's §4.2.1 example: after lowering, the `DSlice`s' result dims
+/// are unrelated fresh symbols. Re-inject what `Split` semantics guarantee:
+/// all outputs share a shape, and non-split axes equal the input's.
+fn inject_split_constraints(b: &mut Builder, x: ValueId, outs: &[ValueId], axis: usize) {
+    let in_dims = b.m.ty(x).dims.clone();
+    let rank = in_dims.len();
+    for w in 1..outs.len() {
+        // Pairwise dim equality across sibling outputs.
+        for a in 0..rank {
+            let d0 = b.m.ty(outs[0]).dims[a];
+            let dw = b.m.ty(outs[w]).dims[a];
+            b.m.inject_dim_equality(d0, dw);
+        }
+        b.m.inject_size_equality(outs[0], outs[w]);
+    }
+    for out in outs {
+        for a in 0..rank {
+            if a != axis {
+                let dout = b.m.ty(*out).dims[a];
+                b.m.inject_dim_equality(dout, in_dims[a]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{BinKind, DType, UnKind};
+    use crate::graph::GraphBuilder;
+    use crate::runtime::reference::eval_module;
+    use crate::runtime::tensor::Tensor;
+
+    #[test]
+    fn lowers_mlp_with_bias_broadcast() {
+        let mut gb = GraphBuilder::new("mlp");
+        let x = gb.placeholder("x", DType::F32, &[-1, 4]);
+        let w = gb.weight("w", &[4, 4], 1);
+        let bias = gb.weight("b", &[4], 2);
+        let h = gb.matmul("h", x, w);
+        let hb = gb.bias_add("hb", h, bias);
+        let y = gb.unary("y", UnKind::Relu, hb);
+        let g = gb.finish(&[y]);
+        let m = lower(&g).unwrap();
+        let r = eval_module(&m, &[Tensor::f32(&[3, 4], vec![0.1; 12])]).unwrap();
+        assert_eq!(r.outputs[0].dims, vec![3, 4]);
+    }
+
+    #[test]
+    fn split_on_dynamic_axis_injects_equalities() {
+        let mut gb = GraphBuilder::new("split");
+        let x = gb.placeholder("x", DType::F32, &[-1, 8]);
+        let parts = gb.split("sp", x, 0, 2);
+        let y = gb.binary("merge", BinKind::Add, parts[0], parts[1]);
+        let g = gb.finish(&[y]);
+        let m = lower(&g).unwrap();
+        // The add typechecks only because the injected constraints unified
+        // the two DSlice output shapes. Numerics:
+        let input = Tensor::f32(&[6, 8], (0..48).map(|i| i as f32).collect());
+        let r = eval_module(&m, &[input]).unwrap();
+        assert_eq!(r.outputs[0].dims, vec![3, 8]);
+        // top half + bottom half
+        assert_eq!(r.outputs[0].as_f32().unwrap()[0], 0.0 + 24.0);
+    }
+
+    #[test]
+    fn split_static_axis_uses_plain_slices() {
+        // Fully static input: the split lowers to plain HLO slices.
+        let mut gb = GraphBuilder::new("split");
+        let x = gb.placeholder("x", DType::F32, &[2, 8]);
+        let parts = gb.split("sp", x, 1, 2);
+        let y = gb.binary("merge", BinKind::Mul, parts[0], parts[1]);
+        let g = gb.finish(&[y]);
+        let m = lower(&g).unwrap();
+        assert!(m.instrs.iter().any(|i| matches!(i.op, crate::dhlo::Op::Slice { .. })));
+        assert!(!m.instrs.iter().any(|i| matches!(i.op, crate::dhlo::Op::DSlice)));
+        let input = Tensor::f32(&[2, 8], (0..16).map(|i| i as f32).collect());
+        let r = eval_module(&m, &[input]).unwrap();
+        assert_eq!(r.outputs[0].dims, vec![2, 4]);
+        assert_eq!(r.outputs[0].as_f32().unwrap()[0], 0.0 * 4.0);
+        assert_eq!(r.outputs[0].as_f32().unwrap()[1], 1.0 * 5.0);
+    }
+
+    #[test]
+    fn split_constraints_enable_sibling_fusion() {
+        // Without injected constraints the two dslice outputs would have
+        // unrelated symbolic shapes and `add` could not even typecheck;
+        // with them, the downstream elementwise chain fuses into one group.
+        let mut gb = GraphBuilder::new("fusetest");
+        let x = gb.placeholder("x", DType::F32, &[-1, 8]);
+        let parts = gb.split("sp", x, 0, 2);
+        let s = gb.binary("s", BinKind::Add, parts[0], parts[1]);
+        let t = gb.unary("t", UnKind::Tanh, s);
+        let g = gb.finish(&[t]);
+        let m = lower(&g).unwrap();
+        let plan = crate::fusion::plan(&m, &crate::fusion::FusionOptions::default());
+        let gid_s = plan.membership[m.outputs[0]];
+        assert!(gid_s.is_some());
+        let group = &plan.groups[gid_s.unwrap()];
+        assert!(group.len() >= 2, "add+tanh fuse across split outputs");
+    }
+
+    #[test]
+    fn dynamic_reshape_infers_symbolic_dim() {
+        let mut gb = GraphBuilder::new("rsh");
+        let x = gb.placeholder("x", DType::F32, &[-1, 2, 4]);
+        let y = gb.reshape("y", x, &[-1, 8]);
+        let g = gb.finish(&[y]);
+        let m = lower(&g).unwrap();
+        let input = Tensor::f32(&[3, 2, 4], vec![1.0; 24]);
+        let r = eval_module(&m, &[input]).unwrap();
+        assert_eq!(r.outputs[0].dims, vec![3, 8]);
+    }
+
+    #[test]
+    fn dynamic_slice_to_end() {
+        let mut gb = GraphBuilder::new("sl");
+        let x = gb.placeholder("x", DType::F32, &[-1, 4]);
+        let y = gb.add(
+            "sl",
+            GOp::Slice { begin: vec![1, 0], size: vec![-1, 2] },
+            &[x],
+        );
+        let g = gb.finish(&[y]);
+        let m = lower(&g).unwrap();
+        let input = Tensor::f32(&[4, 4], (0..16).map(|i| i as f32).collect());
+        let r = eval_module(&m, &[input]).unwrap();
+        assert_eq!(r.outputs[0].dims, vec![3, 2]);
+        assert_eq!(r.outputs[0].as_f32().unwrap()[0], 4.0);
+    }
+
+    #[test]
+    fn end_to_end_through_compiler() {
+        // Bridge → optimize → fuse → program → PJRT, numerics vs reference.
+        let mut gb = GraphBuilder::new("e2e");
+        let x = gb.placeholder("x", DType::F32, &[-1, 8]);
+        let w = gb.weight("w", &[8, 8], 3);
+        let gma = gb.weight("g", &[8], 4);
+        let bta = gb.weight("bt", &[8], 5);
+        let h = gb.matmul("h", x, w);
+        let act = gb.unary("act", UnKind::Gelu, h);
+        let ln = gb.layernorm("ln", act, gma, bta);
+        let sm = gb.softmax("sm", ln);
+        let g = gb.finish(&[sm]);
+        let m = lower(&g).unwrap();
+
+        let compiler = crate::compiler::DiscCompiler::new().unwrap();
+        let mut model = compiler
+            .compile(m, &crate::compiler::CompileOptions::mode(crate::compiler::Mode::Disc))
+            .unwrap();
+        let mut rng = crate::util::prng::Prng::new(9);
+        for n in [2usize, 5, 12] {
+            let input = Tensor::f32(&[n, 8], rng.fill_f32(n * 8, 1.0));
+            let got = model.run(&[input.clone()]).unwrap();
+            let want = eval_module(model.module(), &[input]).unwrap();
+            assert!(got.outputs[0].allclose(&want.outputs[0], 1e-4, 1e-4).unwrap());
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal argument parser (no external crates available offline) and the
+//! `disc` CLI subcommands.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments: a subcommand, `--key value` flags, and positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --flag=value or --flag value or boolean --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} wants an integer")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+pub fn parse_mode(s: &str) -> Result<crate::compiler::Mode> {
+    use crate::compiler::Mode;
+    Ok(match s {
+        "eager" => Mode::Eager,
+        "vm" | "nimble" => Mode::VmNimble,
+        "disc" | "dynamic" => Mode::Disc,
+        "static" | "xla" => Mode::Static,
+        "auto" => Mode::Auto,
+        other => bail!("unknown mode '{other}' (eager|vm|disc|static|auto)"),
+    })
+}
+
+pub const USAGE: &str = "\
+disc — dynamic shape compiler (DISC reproduction)
+
+USAGE:
+  disc run      --workload <name> [--mode disc] [--requests 50] [--seed 1] [--open-rate <rps>]
+  disc inspect  --workload <name> | --file <graph.json>
+  disc import   --file <graph.json> [--mode disc] [--requests N]
+  disc list     (show available workloads)
+
+Workloads: asr_tf asr_pt seq2seq tts bert ad_ranking transformer
+Modes:     eager (TF/PyTorch baseline), vm (Nimble-like), disc, static (XLA-like), auto
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&sv(&["run", "--workload", "bert", "--requests=10", "x", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("workload"), Some("bert"));
+        assert_eq!(a.get_usize("requests", 0).unwrap(), 10);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&sv(&["run"])).unwrap();
+        assert_eq!(a.get_usize("requests", 7).unwrap(), 7);
+        let b = Args::parse(&sv(&["run", "--requests", "abc"])).unwrap();
+        assert!(b.get_usize("requests", 0).is_err());
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert!(parse_mode("disc").is_ok());
+        assert!(parse_mode("nimble").is_ok());
+        assert!(parse_mode("wat").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! The compiled-kernel cache.
+//!
+//! DISC's cache is keyed by *shape-agnostic pattern signature* plus bucket
+//! extents; the XLA-like static pipeline uses the same cache with
+//! [`crate::codegen::BucketPolicy::Exact`], which degenerates the key to
+//! one entry per concrete shape — reproducing the §2 compilation-overhead
+//! pathology that the `compile_overhead` bench measures.
+
+use crate::codegen::hlo::{emit_group, group_syms, KernelSpec};
+use crate::codegen::BucketPolicy;
+use crate::dhlo::Module;
+use crate::fusion::{signature::signature, FusionGroup};
+use crate::runtime::pjrt::{Device, Executable};
+use crate::shape::SymId;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Duration;
+
+/// A compiled fusion kernel plus its launch metadata.
+pub struct CompiledKernel {
+    pub spec: KernelSpec,
+    pub exe: Executable,
+}
+
+/// Cache statistics (compilation overhead accounting).
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub compile_time: Duration,
+    pub entries: usize,
+}
+
+/// Kernel cache over one device.
+pub struct KernelCache {
+    device: Rc<Device>,
+    policy: BucketPolicy,
+    map: HashMap<(String, Vec<usize>), Rc<CompiledKernel>>,
+    pub stats: CacheStats,
+}
+
+impl KernelCache {
+    pub fn new(device: Rc<Device>, policy: BucketPolicy) -> Self {
+        KernelCache { device, policy, map: HashMap::new(), stats: CacheStats::default() }
+    }
+
+    pub fn policy(&self) -> BucketPolicy {
+        self.policy
+    }
+
+    /// Look up (or compile) the kernel for `group` given the *actual*
+    /// extents of its dynamic symbols. Returns the kernel and the bucketed
+    /// extents used.
+    pub fn get_or_compile(
+        &mut self,
+        m: &Module,
+        g: &FusionGroup,
+        sig: &str,
+        actual: &HashMap<crate::shape::SymId, usize>,
+    ) -> Result<(Rc<CompiledKernel>, HashMap<SymId, usize>)> {
+        let syms = group_syms(m, g);
+        let mut bucketed: HashMap<crate::shape::SymId, usize> = HashMap::with_capacity(syms.len());
+        let mut key_dims = Vec::with_capacity(syms.len());
+        for s in &syms {
+            let a = *actual
+                .get(s)
+                .ok_or_else(|| anyhow::anyhow!("missing actual extent for {s}"))?;
+            let bk = self.policy.bucket(a);
+            bucketed.insert(*s, bk);
+            key_dims.push(bk);
+        }
+        let key = (sig.to_string(), key_dims);
+        if let Some(k) = self.map.get(&key) {
+            self.stats.hits += 1;
+            return Ok((k.clone(), bucketed));
+        }
+        self.stats.misses += 1;
+        let name = format!("fusion_{}", self.map.len());
+        let spec = emit_group(m, g, &bucketed, &name)?;
+        let exe = self.device.compile_hlo_text(&spec.hlo)?;
+        self.stats.compile_time += exe.compile_time;
+        let k = Rc::new(CompiledKernel { spec, exe });
+        self.map.insert(key, k.clone());
+        self.stats.entries = self.map.len();
+        Ok((k, bucketed))
+    }
+
+    /// Convenience: signature + lookup in one call (used by tests; the
+    /// executor precomputes signatures at compile time).
+    pub fn get_for(
+        &mut self,
+        m: &Module,
+        g: &FusionGroup,
+        actual: &HashMap<crate::shape::SymId, usize>,
+    ) -> Result<(Rc<CompiledKernel>, HashMap<SymId, usize>)> {
+        let sig = signature(m, g);
+        self.get_or_compile(m, g, &sig, actual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::fusion::{plan, FusionOptions};
+
+    fn chain() -> Module {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let t = b.unary(UnKind::Tanh, x);
+        let y = b.add(x, t).unwrap();
+        b.finish(vec![y])
+    }
+
+    #[test]
+    fn bucket_cache_no_recompilation_within_bucket() {
+        let m = chain();
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut cache = KernelCache::new(dev, BucketPolicy::NextPow2);
+        let syms = group_syms(&m, g);
+        // Shapes 5, 6, 7, 8 all land in bucket 8: one compile, three hits.
+        for n in [5usize, 6, 7, 8] {
+            let actual: HashMap<SymId, usize> = syms.iter().map(|&s| (s, n)).collect();
+            cache.get_for(&m, g, &actual).unwrap();
+        }
+        assert_eq!(cache.stats.misses, 1);
+        assert_eq!(cache.stats.hits, 3);
+        // Shape 9 needs bucket 16: one more compile.
+        let actual: HashMap<SymId, usize> = syms.iter().map(|&s| (s, 9)).collect();
+        cache.get_for(&m, g, &actual).unwrap();
+        assert_eq!(cache.stats.misses, 2);
+    }
+
+    #[test]
+    fn exact_policy_recompiles_per_shape() {
+        let m = chain();
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut cache = KernelCache::new(dev, BucketPolicy::Exact);
+        let syms = group_syms(&m, g);
+        for n in [5usize, 6, 7, 8] {
+            let actual: HashMap<SymId, usize> = syms.iter().map(|&s| (s, n)).collect();
+            cache.get_for(&m, g, &actual).unwrap();
+        }
+        assert_eq!(cache.stats.misses, 4, "static pipeline compiles per shape");
+        assert_eq!(cache.stats.hits, 0);
+    }
+
+    #[test]
+    fn same_pattern_shares_cache_across_modules() {
+        // Two structurally identical modules share cache entries: the
+        // signature is shape- and identity-agnostic.
+        let m1 = chain();
+        let m2 = chain();
+        let p1 = plan(&m1, &FusionOptions::default());
+        let p2 = plan(&m2, &FusionOptions::default());
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut cache = KernelCache::new(dev, BucketPolicy::NextPow2);
+        let syms1 = group_syms(&m1, &p1.groups[0]);
+        let actual1: HashMap<SymId, usize> = syms1.iter().map(|&s| (s, 7)).collect();
+        cache.get_for(&m1, &p1.groups[0], &actual1).unwrap();
+        let syms2 = group_syms(&m2, &p2.groups[0]);
+        let actual2: HashMap<SymId, usize> = syms2.iter().map(|&s| (s, 8)).collect();
+        cache.get_for(&m2, &p2.groups[0], &actual2).unwrap();
+        assert_eq!(cache.stats.misses, 1);
+        assert_eq!(cache.stats.hits, 1);
+    }
+}

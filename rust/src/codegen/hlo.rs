@@ -1,0 +1,652 @@
+//! HLO-text emission for fusion groups.
+
+use crate::dhlo::{BinKind, DType, Module, Op, ReduceKind, UnKind, ValueId};
+use crate::fusion::signature::external_inputs;
+use crate::fusion::FusionGroup;
+use crate::shape::{Dim, SymId};
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Everything the executor needs to launch a compiled fusion kernel.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: String,
+    /// The HLO text module.
+    pub hlo: String,
+    /// External tensor inputs, in parameter order.
+    pub inputs: Vec<ValueId>,
+    /// Bucketed dims of each tensor parameter (executor pads inputs to
+    /// these extents before launch).
+    pub input_dims: Vec<Vec<usize>>,
+    /// Positions (into the group's [`group_syms`] order) of the symbols
+    /// whose *actual* extents are passed as trailing s32[] scalar
+    /// parameters (mask extents for dynamic reduces). Positional — a cache
+    /// hit may serve a *different* group with the same signature, whose
+    /// SymIds differ but whose local symbol order matches.
+    pub extent_locals: Vec<usize>,
+    /// The root value the kernel computes.
+    pub out: ValueId,
+    /// Bucketed output dims (executor crops to actual afterwards).
+    pub out_dims: Vec<usize>,
+    pub out_dtype: DType,
+}
+
+/// Distinct canonical dynamic symbols of a group, in deterministic
+/// first-appearance order over (externals, members). The bucket cache key
+/// assigns extents in this order.
+pub fn group_syms(m: &Module, g: &FusionGroup) -> Vec<SymId> {
+    let mut out = Vec::new();
+    let push_dims = |dims: &[Dim], out: &mut Vec<SymId>| {
+        for &d in dims {
+            if let Dim::Sym(s) = m.syms.canon_dim(d) {
+                if !out.contains(&s) {
+                    out.push(s);
+                }
+            }
+        }
+    };
+    for e in external_inputs(m, g) {
+        push_dims(&m.ty(e.value).dims.clone(), &mut out);
+    }
+    for &v in &g.members {
+        push_dims(&m.ty(v).dims.clone(), &mut out);
+    }
+    out
+}
+
+struct Emitter<'m> {
+    m: &'m Module,
+    buckets: HashMap<SymId, usize>,
+    body: Vec<String>,
+    counter: usize,
+    /// member value -> emitted name
+    names: HashMap<ValueId, String>,
+    need_regions: Vec<ReduceKind>,
+    extent_syms: Vec<SymId>,
+    extent_names: HashMap<SymId, String>,
+}
+
+impl<'m> Emitter<'m> {
+    fn bucket_dims(&self, dims: &[Dim]) -> Result<Vec<usize>> {
+        dims.iter()
+            .map(|&d| match self.m.syms.canon_dim(d) {
+                Dim::Fixed(n) => Ok(n),
+                Dim::Sym(s) => self
+                    .buckets
+                    .get(&s)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("no bucket for symbol {s}")),
+            })
+            .collect()
+    }
+
+    fn fresh(&mut self, prefix: &str) -> String {
+        self.counter += 1;
+        format!("{prefix}{}", self.counter)
+    }
+
+    fn line(&mut self, name: &str, ty: &str, rhs: &str) {
+        self.body.push(format!("  {name} = {ty} {rhs}"));
+    }
+
+    /// Emit an instruction and return its name.
+    fn emit_simple(&mut self, prefix: &str, ty: &str, rhs: String) -> String {
+        let n = self.fresh(prefix);
+        self.line(&n, ty, &rhs);
+        n
+    }
+
+    fn scalar_const_f32(&mut self, v: f32) -> String {
+        let rhs = format!("constant({})", crate::dhlo::types::format_f32_hlo(v));
+        self.emit_simple("c", "f32[]", rhs)
+    }
+
+    /// Broadcast a scalar-typed value to `dims`.
+    fn splat(&mut self, scalar: &str, dtype: DType, dims: &[usize]) -> String {
+        let ty = type_str(dtype, dims);
+        self.emit_simple("b", &ty, format!("broadcast({scalar}), dimensions={{}}"))
+    }
+
+    fn splat_f32(&mut self, v: f32, dims: &[usize]) -> String {
+        let c = self.scalar_const_f32(v);
+        self.splat(&c, DType::F32, dims)
+    }
+
+    fn extent_param_name(&mut self, s: SymId) -> String {
+        if let Some(n) = self.extent_names.get(&s) {
+            return n.clone();
+        }
+        let n = format!("ext{}", self.extent_syms.len());
+        self.extent_syms.push(s);
+        self.extent_names.insert(s, n.clone());
+        n
+    }
+}
+
+/// HLO type string with default (row-major) layout.
+pub fn type_str(dtype: DType, dims: &[usize]) -> String {
+    let d: Vec<String> = dims.iter().map(|x| x.to_string()).collect();
+    if dims.is_empty() {
+        format!("{}[]", dtype.hlo_name())
+    } else {
+        let layout: Vec<String> = (0..dims.len()).rev().map(|i| i.to_string()).collect();
+        format!("{}[{}]{{{}}}", dtype.hlo_name(), d.join(","), layout.join(","))
+    }
+}
+
+fn un_hlo_name(k: UnKind) -> Option<&'static str> {
+    Some(match k {
+        UnKind::Abs => "abs",
+        UnKind::Neg => "negate",
+        UnKind::Exp => "exponential",
+        UnKind::Log => "log",
+        UnKind::Tanh => "tanh",
+        UnKind::Sqrt => "sqrt",
+        UnKind::Rsqrt => "rsqrt",
+        UnKind::Floor => "floor",
+        UnKind::Sign => "sign",
+        UnKind::Relu | UnKind::Gelu | UnKind::Erf | UnKind::Sigmoid => return None,
+    })
+}
+
+fn bin_hlo_name(k: BinKind) -> &'static str {
+    match k {
+        BinKind::Add => "add",
+        BinKind::Sub => "subtract",
+        BinKind::Mul => "multiply",
+        BinKind::Div => "divide",
+        BinKind::Max => "maximum",
+        BinKind::Min => "minimum",
+        BinKind::Pow => "power",
+    }
+}
+
+/// Emit the Abramowitz–Stegun erf expansion (identical to the reference
+/// interpreter's formula, so compiled and interpreted numerics agree).
+fn emit_erf(e: &mut Emitter, x: &str, dims: &[usize]) -> String {
+    let ty = type_str(DType::F32, dims);
+    let sign = e.emit_simple("v", &ty, format!("sign({x})"));
+    let ax = e.emit_simple("v", &ty, format!("abs({x})"));
+    let c = e.splat_f32(0.3275911, dims);
+    let cx = e.emit_simple("v", &ty, format!("multiply({c}, {ax})"));
+    let one = e.splat_f32(1.0, dims);
+    let denom = e.emit_simple("v", &ty, format!("add({one}, {cx})"));
+    let t = e.emit_simple("v", &ty, format!("divide({one}, {denom})"));
+    // Horner: ((((a5 t + a4) t + a3) t + a2) t + a1) t
+    let coefs = [1.061405429f32, -1.453152027, 1.421413741, -0.284496736, 0.254829592];
+    let mut acc = e.splat_f32(coefs[0], dims);
+    for &cf in &coefs[1..] {
+        let prod = e.emit_simple("v", &ty, format!("multiply({acc}, {t})"));
+        let cc = e.splat_f32(cf, dims);
+        acc = e.emit_simple("v", &ty, format!("add({prod}, {cc})"));
+    }
+    let poly_t = e.emit_simple("v", &ty, format!("multiply({acc}, {t})"));
+    let xx = e.emit_simple("v", &ty, format!("multiply({ax}, {ax})"));
+    let nxx = e.emit_simple("v", &ty, format!("negate({xx})"));
+    let exx = e.emit_simple("v", &ty, format!("exponential({nxx})"));
+    let prod = e.emit_simple("v", &ty, format!("multiply({poly_t}, {exx})"));
+    let y = e.emit_simple("v", &ty, format!("subtract({one}, {prod})"));
+    e.emit_simple("v", &ty, format!("multiply({sign}, {y})"))
+}
+
+fn emit_unary(e: &mut Emitter, k: UnKind, x: &str, dims: &[usize]) -> String {
+    let ty = type_str(DType::F32, dims);
+    match k {
+        UnKind::Relu => {
+            let z = e.splat_f32(0.0, dims);
+            e.emit_simple("v", &ty, format!("maximum({x}, {z})"))
+        }
+        UnKind::Sigmoid => {
+            // 1 / (1 + exp(-x)) — matches the reference formula.
+            let nx = e.emit_simple("v", &ty, format!("negate({x})"));
+            let ex = e.emit_simple("v", &ty, format!("exponential({nx})"));
+            let one = e.splat_f32(1.0, dims);
+            let den = e.emit_simple("v", &ty, format!("add({one}, {ex})"));
+            e.emit_simple("v", &ty, format!("divide({one}, {den})"))
+        }
+        UnKind::Erf => emit_erf(e, x, dims),
+        UnKind::Gelu => {
+            // 0.5 * x * (1 + erf(x / sqrt(2)))
+            let s = e.splat_f32(std::f32::consts::SQRT_2, dims);
+            let xs = e.emit_simple("v", &ty, format!("divide({x}, {s})"));
+            let erf = emit_erf(e, &xs, dims);
+            let one = e.splat_f32(1.0, dims);
+            let t1 = e.emit_simple("v", &ty, format!("add({one}, {erf})"));
+            let xt = e.emit_simple("v", &ty, format!("multiply({x}, {t1})"));
+            let half = e.splat_f32(0.5, dims);
+            e.emit_simple("v", &ty, format!("multiply({half}, {xt})"))
+        }
+        _ => {
+            let name = un_hlo_name(k).expect("covered above");
+            e.emit_simple("v", &ty, format!("{name}({x})"))
+        }
+    }
+}
+
+/// Mask the padded tail of `operand` (shape `dims`) along the dynamic
+/// reduced axes: out-of-range lanes are replaced by `neutral`.
+fn emit_mask(
+    e: &mut Emitter,
+    m: &Module,
+    operand: &str,
+    operand_dims_sym: &[Dim],
+    dims: &[usize],
+    axes: &[usize],
+    neutral: f32,
+) -> Result<String> {
+    let ty_pred = type_str(DType::Pred, dims);
+    let ty_s32 = type_str(DType::I32, dims);
+    let mut mask: Option<String> = None;
+    for &a in axes {
+        let canon = m.syms.canon_dim(operand_dims_sym[a]);
+        if let Dim::Sym(s) = canon {
+            let ext = e.extent_param_name(s);
+            let iota = e.emit_simple("v", &ty_s32, format!("iota(), iota_dimension={a}"));
+            let extb = e.splat(&ext, DType::I32, dims);
+            let cmp =
+                e.emit_simple("v", &ty_pred, format!("compare({iota}, {extb}), direction=LT"));
+            mask = Some(match mask {
+                None => cmp,
+                Some(prev) => e.emit_simple("v", &ty_pred, format!("and({prev}, {cmp})")),
+            });
+        }
+    }
+    match mask {
+        None => Ok(operand.to_string()),
+        Some(mk) => {
+            let neutral_b = e.splat_f32(neutral, dims);
+            let ty = type_str(DType::F32, dims);
+            Ok(e.emit_simple("v", &ty, format!("select({mk}, {operand}, {neutral_b})")))
+        }
+    }
+}
+
+fn region_text(kind: ReduceKind) -> (&'static str, &'static str) {
+    match kind {
+        ReduceKind::Sum | ReduceKind::Mean => ("region_add", "add"),
+        ReduceKind::Max => ("region_max", "maximum"),
+        ReduceKind::Min => ("region_min", "minimum"),
+    }
+}
+
+/// Emit a fusion group as an HLO-text kernel at the given bucket extents.
+///
+/// `buckets` maps each canonical dynamic symbol of the group (see
+/// [`group_syms`]) to its bucketed extent.
+pub fn emit_group(
+    m: &Module,
+    g: &FusionGroup,
+    buckets: &HashMap<SymId, usize>,
+    name: &str,
+) -> Result<KernelSpec> {
+    let externals = external_inputs(m, g);
+    let mut e = Emitter {
+        m,
+        buckets: buckets.clone(),
+        body: Vec::new(),
+        counter: 0,
+        names: HashMap::new(),
+        need_regions: Vec::new(),
+        extent_syms: Vec::new(),
+        extent_names: HashMap::new(),
+    };
+
+    // Tensor parameters.
+    let mut param_types = Vec::new();
+    let mut input_dims = Vec::new();
+    for (i, ext) in externals.iter().enumerate() {
+        let t = m.ty(ext.value);
+        ensure!(t.dtype != DType::Pred, "pred kernel inputs unsupported");
+        let dims = e.bucket_dims(&t.dims)?;
+        let ty = type_str(t.dtype, &dims);
+        let pname = format!("p{i}");
+        e.line(&pname, &ty, &format!("parameter({i})"));
+        e.names.insert(ext.value, pname);
+        param_types.push(ty);
+        input_dims.push(dims);
+    }
+
+    // Body: members in topological order. Extent parameters are discovered
+    // during emission and appended after the tensor parameters, so we emit
+    // the body into a scratch buffer first.
+    let header_len = e.body.len();
+    for &v in &g.members {
+        let ins = &m.instrs[v];
+        let dims = e.bucket_dims(&ins.ty.dims)?;
+        let ty = type_str(ins.ty.dtype, &dims);
+        let opnames: Vec<String> = ins
+            .operands
+            .iter()
+            .map(|o| {
+                e.names
+                    .get(o)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("operand %{o} not materialized in kernel"))
+            })
+            .collect::<Result<_>>()?;
+        let out_name = match &ins.op {
+            Op::Un(k) => {
+                ensure!(ins.ty.dtype == DType::F32, "fused unary must be f32");
+                emit_unary(&mut e, *k, &opnames[0], &dims)
+            }
+            Op::Bin(k) => e.emit_simple(
+                "v",
+                &ty,
+                format!("{}({}, {})", bin_hlo_name(*k), opnames[0], opnames[1]),
+            ),
+            Op::Cmp(d) => e.emit_simple(
+                "v",
+                &ty,
+                format!("compare({}, {}), direction={}", opnames[0], opnames[1], d.hlo_direction()),
+            ),
+            Op::Select => e.emit_simple(
+                "v",
+                &ty,
+                format!("select({}, {}, {})", opnames[0], opnames[1], opnames[2]),
+            ),
+            Op::Convert(_) => e.emit_simple("v", &ty, format!("convert({})", opnames[0])),
+            Op::Broadcast { dims: mapping } => {
+                let map: Vec<String> = mapping.iter().map(|d| d.to_string()).collect();
+                e.emit_simple(
+                    "v",
+                    &ty,
+                    format!("broadcast({}), dimensions={{{}}}", opnames[0], map.join(",")),
+                )
+            }
+            Op::Transpose { perm } => {
+                let p: Vec<String> = perm.iter().map(|d| d.to_string()).collect();
+                e.emit_simple(
+                    "v",
+                    &ty,
+                    format!("transpose({}), dimensions={{{}}}", opnames[0], p.join(",")),
+                )
+            }
+            Op::Reduce { kind, axes } => {
+                ensure!(ins.ty.dtype == DType::F32, "fused reduce must be f32");
+                let operand_ty = m.ty(ins.operands[0]).clone();
+                let operand_bdims = e.bucket_dims(&operand_ty.dims)?;
+                let masked = emit_mask(
+                    &mut e,
+                    m,
+                    &opnames[0],
+                    &operand_ty.dims,
+                    &operand_bdims,
+                    axes,
+                    kind.neutral(),
+                )?;
+                let (region, _) = region_text(*kind);
+                if !e.need_regions.contains(kind) {
+                    e.need_regions.push(*kind);
+                }
+                let init = e.scalar_const_f32(kind.neutral());
+                let ax: Vec<String> = axes.iter().map(|a| a.to_string()).collect();
+                let red = e.emit_simple(
+                    "v",
+                    &ty,
+                    format!(
+                        "reduce({masked}, {init}), dimensions={{{}}}, to_apply={region}",
+                        ax.join(",")
+                    ),
+                );
+                if *kind == ReduceKind::Mean {
+                    // Divide by the *actual* reduced element count.
+                    let mut divisor: Option<String> = None;
+                    for &a in axes {
+                        let term = match m.syms.canon_dim(operand_ty.dims[a]) {
+                            Dim::Fixed(n) => e.scalar_const_f32(n as f32),
+                            Dim::Sym(s) => {
+                                let ext = e.extent_param_name(s);
+                                e.emit_simple("v", "f32[]", format!("convert({ext})"))
+                            }
+                        };
+                        divisor = Some(match divisor {
+                            None => term,
+                            Some(prev) => {
+                                e.emit_simple("v", "f32[]", format!("multiply({prev}, {term})"))
+                            }
+                        });
+                    }
+                    let div = divisor.expect("mean reduce has axes");
+                    let divb = e.splat(&div, DType::F32, &dims);
+                    e.emit_simple("v", &ty, format!("divide({red}, {divb})"))
+                } else {
+                    red
+                }
+            }
+            other => bail!("op {} cannot be emitted in a fused kernel", other.name()),
+        };
+        e.names.insert(v, out_name);
+    }
+
+    // Extent (s32 scalar) parameters come after the tensor parameters.
+    let n_tensor = externals.len();
+    let mut param_lines = Vec::new();
+    for (j, s) in e.extent_syms.iter().enumerate() {
+        let pname = e.extent_names[s].clone();
+        param_lines.push(format!("  {pname} = s32[] parameter({})", n_tensor + j));
+        param_types.push("s32[]".to_string());
+    }
+    // Insert extent parameter lines right after the tensor parameters.
+    let mut body = e.body.clone();
+    let tail = body.split_off(header_len);
+    body.extend(param_lines);
+    body.extend(tail);
+
+    // ROOT.
+    let root_name = e.names[&g.root].clone();
+    let out_dims = e.bucket_dims(&m.ty(g.root).dims)?;
+    let out_dtype = m.ty(g.root).dtype;
+    ensure!(out_dtype != DType::Pred, "pred kernel outputs unsupported");
+    let root_ty = type_str(out_dtype, &out_dims);
+    // Re-emit the root under a ROOT alias via a copy to keep naming simple.
+    body.push(format!("  ROOT out = {root_ty} copy({root_name})"));
+
+    // Assemble module text.
+    let mut hlo = String::new();
+    let _ = write!(
+        hlo,
+        "HloModule {name}, entry_computation_layout={{({})->{root_ty}}}\n\n",
+        param_types.join(", ")
+    );
+    for kind in &e.need_regions {
+        let (rname, rop) = region_text(*kind);
+        let _ = write!(
+            hlo,
+            "{rname} {{\n  {rname}_a = f32[] parameter(0)\n  {rname}_b = f32[] parameter(1)\n  ROOT {rname}_r = f32[] {rop}({rname}_a, {rname}_b)\n}}\n\n"
+        );
+    }
+    hlo.push_str("ENTRY main {\n");
+    for l in &body {
+        hlo.push_str(l);
+        hlo.push('\n');
+    }
+    hlo.push_str("}\n");
+
+    let locals = group_syms(m, g);
+    let extent_locals = e
+        .extent_syms
+        .iter()
+        .map(|s| {
+            locals
+                .iter()
+                .position(|l| l == s)
+                .expect("extent symbol always appears in the group's symbol list")
+        })
+        .collect();
+    Ok(KernelSpec {
+        name: name.to_string(),
+        hlo,
+        inputs: externals.iter().map(|x| x.value).collect(),
+        input_dims,
+        extent_locals,
+        out: g.root,
+        out_dims,
+        out_dtype,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::Builder;
+    use crate::fusion::{plan, FusionOptions};
+    use crate::runtime::pjrt::Device;
+    use crate::runtime::tensor::Tensor;
+
+    fn bucket_all(m: &Module, g: &FusionGroup, n: usize) -> HashMap<SymId, usize> {
+        group_syms(m, g).into_iter().map(|s| (s, n)).collect()
+    }
+
+    #[test]
+    fn emit_elementwise_chain_runs() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let t = b.unary(UnKind::Tanh, x);
+        let y = b.add(x, t).unwrap();
+        let m = b.finish(vec![y]);
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let spec = emit_group(&m, g, &bucket_all(&m, g, 8), "k0").unwrap();
+        assert!(spec.extent_locals.is_empty(), "no reduce, no masks: {}", spec.hlo);
+
+        let dev = Device::cpu().unwrap();
+        let exe = dev.compile_hlo_text(&spec.hlo).unwrap();
+        // Actual length 5, bucket 8 — pad with zeros.
+        let mut data = vec![0.5f32, -1.0, 0.0, 2.0, -0.25];
+        let actual = data.clone();
+        data.resize(8, 0.0);
+        let out = exe
+            .run(&[&Tensor::f32(&[8], data)], &spec.out_dims, spec.out_dtype)
+            .unwrap();
+        let v = out.as_f32().unwrap();
+        for (i, &a) in actual.iter().enumerate() {
+            assert!((v[i] - (a + a.tanh())).abs() < 1e-6, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn emit_masked_softmax_runs() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let s2 = b.dyn_dim("m", 0, 1);
+        let x = b.param(DType::F32, vec![s, s2]);
+        let y = b.softmax_last(x).unwrap();
+        let m = b.finish(vec![y]);
+        let p = plan(&m, &FusionOptions::default());
+
+        // Execute the groups in dependency order against a bucketed input
+        // and compare with the reference on the valid box.
+        let dev = Device::cpu().unwrap();
+        let actual_rows = 2usize;
+        let actual_cols = 3usize;
+        let (rb, cb) = (2usize, 4usize); // bucket cols up
+        let input = Tensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 0.5, 0.5, 0.5]);
+        // Reference.
+        let r = crate::runtime::reference::eval_module(&m, &[input.clone()]).unwrap();
+        let want = r.outputs[0].as_f32().unwrap().to_vec();
+
+        // Padded input (garbage in the pad to prove masking).
+        let mut padded = vec![777.0f32; rb * cb];
+        for i in 0..actual_rows {
+            for j in 0..actual_cols {
+                padded[i * cb + j] = input.as_f32().unwrap()[i * actual_cols + j];
+            }
+        }
+
+        // Run groups topologically; intermediate values keyed by root id.
+        let mut vals: HashMap<ValueId, Tensor> = HashMap::new();
+        vals.insert(x, Tensor::f32(&[rb, cb], padded));
+        let mut groups: Vec<&FusionGroup> = p.groups.iter().collect();
+        groups.sort_by_key(|g| g.root);
+        for g in groups {
+            let syms = group_syms(&m, g);
+            let mut buckets = HashMap::new();
+            let mut extents = HashMap::new();
+            for s in &syms {
+                // Identify which sym is rows vs cols by its bound value.
+                // rows sym resolves to 2 (bucket 2), cols to 3 (bucket 4).
+                let is_rows = m.syms.canon_dim(m.ty(x).dims[0]) == crate::shape::Dim::Sym(*s);
+                buckets.insert(*s, if is_rows { rb } else { cb });
+                extents.insert(*s, if is_rows { actual_rows } else { actual_cols });
+            }
+            let spec = emit_group(&m, g, &buckets, "k").unwrap();
+            let exe = dev.compile_hlo_text(&spec.hlo).unwrap();
+            let mut args: Vec<Tensor> =
+                spec.inputs.iter().map(|v| vals[v].clone()).collect();
+            for &li in &spec.extent_locals {
+                args.push(Tensor::i32(&[], vec![extents[&syms[li]] as i32]));
+            }
+            let arg_refs: Vec<&Tensor> = args.iter().collect();
+            let out = exe.run(&arg_refs, &spec.out_dims, spec.out_dtype).unwrap();
+            vals.insert(g.root, out);
+        }
+        let got = vals[&m.outputs[0]].as_f32().unwrap();
+        for i in 0..actual_rows {
+            for j in 0..actual_cols {
+                let w = want[i * actual_cols + j];
+                let g = got[i * cb + j];
+                assert!((w - g).abs() < 1e-5, "({i},{j}): want {w}, got {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn emit_gelu_matches_reference() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let y = b.unary(UnKind::Gelu, x);
+        let m = b.finish(vec![y]);
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let spec = emit_group(&m, g, &bucket_all(&m, g, 4), "gelu").unwrap();
+        let dev = Device::cpu().unwrap();
+        let exe = dev.compile_hlo_text(&spec.hlo).unwrap();
+        let input = vec![-2.0f32, -0.5, 0.5, 2.0];
+        let out = exe
+            .run(&[&Tensor::f32(&[4], input.clone())], &spec.out_dims, spec.out_dtype)
+            .unwrap();
+        let r = crate::runtime::reference::eval_module(&m, &[Tensor::f32(&[4], input)]).unwrap();
+        let diff = out.max_abs_diff(&r.outputs[0]).unwrap();
+        assert!(diff < 1e-6, "compiled vs reference gelu diff {diff}");
+    }
+
+    #[test]
+    fn mean_reduce_divides_by_actual() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let s2 = b.dyn_dim("m", 0, 1);
+        let x = b.param(DType::F32, vec![s, s2]);
+        let y = b.reduce(ReduceKind::Mean, x, vec![1]).unwrap();
+        let m = b.finish(vec![y]);
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let syms = group_syms(&m, g);
+        let buckets: HashMap<SymId, usize> =
+            syms.iter().map(|&s| (s, 4usize)).collect();
+        let spec = emit_group(&m, g, &buckets, "mean").unwrap();
+        assert_eq!(spec.extent_locals.len(), 1, "only the reduced dim needs an extent");
+        let dev = Device::cpu().unwrap();
+        let exe = dev.compile_hlo_text(&spec.hlo).unwrap();
+        // actual 2x3 in a 4x4 bucket, garbage elsewhere.
+        let mut padded = vec![500.0f32; 16];
+        let data = [3.0f32, 6.0, 9.0, 1.0, 2.0, 3.0];
+        for i in 0..2 {
+            for j in 0..3 {
+                padded[i * 4 + j] = data[i * 3 + j];
+            }
+        }
+        let out = exe
+            .run(
+                &[&Tensor::f32(&[4, 4], padded), &Tensor::i32(&[], vec![3])],
+                &spec.out_dims,
+                spec.out_dtype,
+            )
+            .unwrap();
+        let v = out.as_f32().unwrap();
+        assert!((v[0] - 6.0).abs() < 1e-6);
+        assert!((v[1] - 2.0).abs() < 1e-6);
+    }
+}

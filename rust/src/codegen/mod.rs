@@ -1,0 +1,58 @@
+//! Device-side code generation (§4.3 "fusion and code generation").
+//!
+//! For each fusion group the emitter produces an HLO-text kernel at
+//! *bucketed* extents: every dynamic dimension is rounded up by the active
+//! [`BucketPolicy`], so one compiled executable serves every runtime shape
+//! that lands in the same bucket — DISC's "compile once per pattern"
+//! property, adapted to an AOT-executable device (see DESIGN.md
+//! §Hardware-Adaptation: this is the same mechanism as the paper's
+//! shape-adaptive fusion configuration, where a family of kernel variants
+//! plus host-side selection logic replaces per-shape recompilation).
+//!
+//! Reductions over dynamic axes are masked in-kernel against s32 runtime
+//! extent parameters (iota → compare → select with the reduce's neutral
+//! element), so tail garbage in the padding never contaminates results.
+
+pub mod cache;
+pub mod hlo;
+
+pub use cache::{CacheStats, KernelCache};
+pub use hlo::{emit_group, KernelSpec};
+
+/// How dynamic extents map to compiled-kernel extents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BucketPolicy {
+    /// Exact extents: one executable per concrete shape — the XLA-like
+    /// static pipeline (fast kernels, unbounded recompilation).
+    Exact,
+    /// Round up to the next power of two (default dynamic policy).
+    NextPow2,
+    /// Round up to a multiple of `m` (TPU-lane-friendly alternative,
+    /// benchmarked in the ablations).
+    MultipleOf(usize),
+}
+
+impl BucketPolicy {
+    pub fn bucket(&self, n: usize) -> usize {
+        match self {
+            BucketPolicy::Exact => n.max(1),
+            BucketPolicy::NextPow2 => crate::util::next_pow2(n),
+            BucketPolicy::MultipleOf(m) => crate::util::round_up(n.max(1), *m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_policies() {
+        assert_eq!(BucketPolicy::Exact.bucket(17), 17);
+        assert_eq!(BucketPolicy::NextPow2.bucket(17), 32);
+        assert_eq!(BucketPolicy::NextPow2.bucket(16), 16);
+        assert_eq!(BucketPolicy::MultipleOf(128).bucket(17), 128);
+        assert_eq!(BucketPolicy::MultipleOf(128).bucket(130), 256);
+        assert_eq!(BucketPolicy::Exact.bucket(0), 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! Serving coordinator: the request loop wrapped around compiled models.
+//!
+//! DISC's artifact is a compiler, but it is deployed inside serving
+//! systems; this coordinator is the harness the end-to-end example and the
+//! benches drive. It owns a request queue fed by a generator thread,
+//! executes requests against a `CompiledModel` (single executor loop — the
+//! PJRT client and kernel caches are deliberately not shared across
+//! threads, as in the paper's per-stream deployment), and reports latency
+//! percentiles, throughput, and the accumulated metric counters.
+
+use crate::compiler::CompiledModel;
+use crate::runtime::metrics::RunMetrics;
+use crate::runtime::tensor::Tensor;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub inputs: Vec<Tensor>,
+    pub arrived: Instant,
+}
+
+/// Per-request record.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub latency: Duration,
+    pub queue_delay: Duration,
+}
+
+/// Aggregate serving report.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub wall: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub mean: Duration,
+    pub throughput_rps: f64,
+    pub metrics: RunMetrics,
+}
+
+impl ServeReport {
+    fn from_completions(
+        mut lat: Vec<Completion>,
+        wall: Duration,
+        metrics: RunMetrics,
+    ) -> ServeReport {
+        if lat.is_empty() {
+            return ServeReport { wall, metrics, ..Default::default() };
+        }
+        lat.sort_by_key(|c| c.latency);
+        let pick = |q: f64| lat[((lat.len() - 1) as f64 * q) as usize].latency;
+        let mean = lat.iter().map(|c| c.latency).sum::<Duration>() / lat.len() as u32;
+        ServeReport {
+            completed: lat.len(),
+            wall,
+            p50: pick(0.50),
+            p95: pick(0.95),
+            p99: pick(0.99),
+            mean,
+            throughput_rps: lat.len() as f64 / wall.as_secs_f64().max(1e-9),
+            metrics,
+        }
+    }
+}
+
+/// Drive a compiled model over a pre-generated request stream, closed-loop
+/// (back-to-back, as the paper's inference measurements are).
+pub fn serve_closed_loop(
+    model: &mut CompiledModel,
+    stream: Vec<Vec<Tensor>>,
+) -> Result<ServeReport> {
+    let start = Instant::now();
+    let mut completions = Vec::with_capacity(stream.len());
+    let mut metrics = RunMetrics::default();
+    for (i, inputs) in stream.into_iter().enumerate() {
+        let t0 = Instant::now();
+        let out = model.run(&inputs)?;
+        metrics += &out.metrics;
+        completions.push(Completion {
+            id: i as u64,
+            latency: t0.elapsed(),
+            queue_delay: Duration::ZERO,
+        });
+    }
+    Ok(ServeReport::from_completions(completions, start.elapsed(), metrics))
+}
+
+/// Open-loop serving: a producer thread feeds the queue at a fixed rate
+/// while this thread (owning the model — PJRT state is not `Send`) drains
+/// it. Queue delay shows up in latency, as in a real deployment.
+pub fn serve_open_loop(
+    model: &mut CompiledModel,
+    stream: Vec<Vec<Tensor>>,
+    rate_rps: f64,
+) -> Result<ServeReport> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let n = stream.len();
+    let producer = std::thread::spawn(move || {
+        let gap = Duration::from_secs_f64(1.0 / rate_rps.max(1e-3));
+        for (i, inputs) in stream.into_iter().enumerate() {
+            let _ = tx.send(Request { id: i as u64, inputs, arrived: Instant::now() });
+            std::thread::sleep(gap);
+        }
+    });
+
+    let start = Instant::now();
+    let mut completions = Vec::with_capacity(n);
+    let mut metrics = RunMetrics::default();
+    while completions.len() < n {
+        let req = rx.recv()?;
+        let queue_delay = req.arrived.elapsed();
+        let t0 = Instant::now();
+        let out = model.run(&req.inputs)?;
+        metrics += &out.metrics;
+        completions.push(Completion {
+            id: req.id,
+            latency: queue_delay + t0.elapsed(),
+            queue_delay,
+        });
+    }
+    producer.join().ok();
+    Ok(ServeReport::from_completions(completions, start.elapsed(), metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+
+    fn small_model() -> CompiledModel {
+        let w = crate::workloads::tts::workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap()
+    }
+
+    #[test]
+    fn closed_loop_serves_stream() {
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(8, 42);
+        let report = serve_closed_loop(&mut model, stream).unwrap();
+        assert_eq!(report.completed, 8);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p95 >= report.p50);
+        assert!(report.metrics.mem_kernels > 0);
+    }
+
+    #[test]
+    fn open_loop_includes_queue_delay() {
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(5, 43);
+        let report = serve_open_loop(&mut model, stream, 200.0).unwrap();
+        assert_eq!(report.completed, 5);
+        assert!(report.mean > Duration::ZERO);
+    }
+}

@@ -1,0 +1,26 @@
+//! DHLO — the dynamic-shape IR at the center of DISC (§4.1).
+//!
+//! DHLO is an HLO-dialect-like SSA IR in which tensor dimensions may be
+//! *symbolic* ([`crate::shape::Dim::Sym`]). Following the paper's "IR
+//! supplementation" design, ops whose HLO form carries constant-folded shape
+//! attributes get a dynamic twin whose indices arrive as *tensor operands*
+//! instead (figure 2 of the paper): [`op::Op::DSlice`], [`op::Op::DPad`],
+//! [`op::Op::DReshape`], [`op::Op::DBroadcast`]. Ops whose HLO definition is
+//! already expressive enough for dynamic shapes (elementwise `Add`/`Mul`,
+//! `Dot`, `Reduce`, …) are kept as they are — DHLO is an extension, not a
+//! replacement.
+//!
+//! A [`module::Module`] owns its instructions (topologically ordered SSA),
+//! its entry parameter types, and the [`crate::shape::SymbolTable`] holding
+//! the shape constraints collected so far.
+
+pub mod module;
+pub mod parse;
+pub mod op;
+pub mod print;
+pub mod types;
+pub mod verify;
+
+pub use module::{Builder, Instr, Module, ValueId};
+pub use op::{BinKind, CmpDir, Op, ReduceKind, UnKind};
+pub use types::{DType, Literal, TensorType};

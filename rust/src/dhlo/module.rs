@@ -1,0 +1,767 @@
+//! DHLO modules, instructions, and the typed builder.
+//!
+//! The builder performs shape inference *during construction* and records
+//! the paper's op-semantic shape constraints as it goes (§4.2.1, first
+//! source): a binary elementwise op unifies the symbolic dims of its
+//! operands; `Transpose`/`Reshape` record tensor-size equality; `Concat`
+//! derives a sum expression for the concatenated axis; the dynamic twins
+//! (`DSlice`, `DPad`, …) mint symbols whose definitions read runtime shape
+//! tensors. Bridge-injected constraints (the paper's second source) are
+//! added afterwards via [`Module::inject_dim_equality`] /
+//! [`Module::inject_size_equality`].
+
+use super::op::{BinKind, CmpDir, Op, ReduceKind, UnKind};
+use super::types::{DType, Literal, TensorType};
+use crate::shape::{Dim, ShapeExpr, SymbolTable};
+use anyhow::{bail, ensure, Result};
+
+/// SSA value id: index into [`Module::instrs`].
+pub type ValueId = usize;
+
+/// One SSA instruction.
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub op: Op,
+    pub operands: Vec<ValueId>,
+    pub ty: TensorType,
+    /// Optional debug name, carried from the frontend graph.
+    pub name: Option<String>,
+}
+
+/// A DHLO module: topologically-ordered SSA instructions, entry parameter
+/// types, module outputs, and the symbol/constraint store.
+#[derive(Debug, Clone, Default)]
+pub struct Module {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub params: Vec<TensorType>,
+    pub outputs: Vec<ValueId>,
+    pub syms: SymbolTable,
+}
+
+impl Module {
+    pub fn ty(&self, v: ValueId) -> &TensorType {
+        &self.instrs[v].ty
+    }
+
+    pub fn op(&self, v: ValueId) -> &Op {
+        &self.instrs[v].op
+    }
+
+    /// Users of each value (recomputed on demand; modules are small).
+    pub fn users(&self) -> Vec<Vec<ValueId>> {
+        let mut users = vec![Vec::new(); self.instrs.len()];
+        for (id, ins) in self.instrs.iter().enumerate() {
+            for &o in &ins.operands {
+                users[o].push(id);
+            }
+        }
+        users
+    }
+
+    /// Inject a dimension-size equality constraint discovered by the bridge
+    /// (§4.2.1 second source, e.g. `tf.Split` siblings).
+    pub fn inject_dim_equality(&mut self, a: Dim, b: Dim) {
+        if let (Dim::Sym(sa), Dim::Sym(sb)) = (a, b) {
+            self.syms.unify(sa, sb);
+        }
+    }
+
+    /// Inject a tensor-size equality constraint discovered by the bridge.
+    pub fn inject_size_equality(&mut self, a: ValueId, b: ValueId) {
+        self.syms.record_size_equal(a, b);
+    }
+
+    /// Values that are provably the same shape under collected constraints.
+    pub fn same_shape(&self, a: ValueId, b: ValueId) -> bool {
+        self.ty(a).dtype == self.ty(b).dtype
+            && self.syms.shapes_equal(&self.ty(a).dims, &self.ty(b).dims)
+    }
+
+    /// Values provably holding the same number of elements: either their
+    /// canonical dim vectors match, or a size-equality was recorded.
+    pub fn same_size(&self, a: ValueId, b: ValueId) -> bool {
+        self.syms.shapes_equal(&self.ty(a).dims, &self.ty(b).dims)
+            || self.syms.size_equal(a, b)
+            || match (self.ty(a).static_elems(), self.ty(b).static_elems()) {
+                (Some(x), Some(y)) => x == y,
+                _ => false,
+            }
+    }
+
+    /// True if every instruction (and thus the whole module) is static —
+    /// used by the mixed static/dynamic pipeline to fall back (§4.4).
+    pub fn is_fully_static(&self) -> bool {
+        self.instrs.iter().all(|i| i.ty.canon(&self.syms).is_static())
+    }
+
+    /// Count of memory-intensive (fusable-class) tensor ops, for metrics.
+    pub fn memory_intensive_count(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter(|i| {
+                !i.op.is_compute_intensive()
+                    && !matches!(i.op, Op::Param { .. } | Op::Const { .. })
+            })
+            .count()
+    }
+}
+
+/// Typed builder over a [`Module`].
+pub struct Builder {
+    pub m: Module,
+}
+
+impl Builder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Builder { m: Module { name: name.into(), ..Default::default() } }
+    }
+
+    pub fn finish(mut self, outputs: Vec<ValueId>) -> Module {
+        self.m.outputs = outputs;
+        self.m
+    }
+
+    fn push(&mut self, op: Op, operands: Vec<ValueId>, ty: TensorType) -> ValueId {
+        self.m.instrs.push(Instr { op, operands, ty, name: None });
+        self.m.instrs.len() - 1
+    }
+
+    pub fn set_name(&mut self, v: ValueId, name: impl Into<String>) {
+        self.m.instrs[v].name = Some(name.into());
+    }
+
+    fn ty(&self, v: ValueId) -> &TensorType {
+        &self.m.instrs[v].ty
+    }
+
+    // ---- parameters & constants -------------------------------------------
+
+    /// Declare an entry parameter. Symbolic dims must already be minted via
+    /// [`Builder::dyn_dim`] (so their definitions point at input extents).
+    pub fn param(&mut self, dtype: DType, dims: Vec<Dim>) -> ValueId {
+        let index = self.m.params.len();
+        let ty = TensorType::new(dtype, dims);
+        self.m.params.push(ty.clone());
+        self.push(Op::Param { index }, vec![], ty)
+    }
+
+    /// Mint a symbol bound to `axis` of the *next* parameter index `param`.
+    pub fn dyn_dim(&mut self, name: impl Into<String>, param: usize, axis: usize) -> Dim {
+        Dim::Sym(self.m.syms.fresh(name, ShapeExpr::InputDim { param, axis }))
+    }
+
+    pub fn constant(&mut self, lit: Literal, dims: &[usize]) -> ValueId {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        assert_eq!(lit.len(), n, "constant literal length mismatch");
+        let ty = TensorType::fixed(lit.dtype(), dims);
+        self.push(Op::Const { lit, dims: dims.to_vec() }, vec![], ty)
+    }
+
+    pub fn scalar_f32(&mut self, v: f32) -> ValueId {
+        self.constant(Literal::F32(vec![v]), &[])
+    }
+
+    pub fn scalar_i64(&mut self, v: i64) -> ValueId {
+        self.constant(Literal::I64(vec![v]), &[])
+    }
+
+    pub fn i64_vec(&mut self, vals: &[i64]) -> ValueId {
+        self.constant(Literal::I64(vals.to_vec()), &[vals.len()])
+    }
+
+    // ---- elementwise -------------------------------------------------------
+
+    pub fn unary(&mut self, k: UnKind, x: ValueId) -> ValueId {
+        let ty = self.ty(x).clone();
+        let id = self.push(Op::Un(k), vec![x], ty);
+        // Elementwise ops trivially preserve element count; recording it
+        // makes tensor-size equality transitive across reshapes.
+        self.m.syms.record_size_equal(x, id);
+        id
+    }
+
+    /// Binary elementwise op. Operand shapes must agree rank-wise; symbolic
+    /// dims are *unified* — the op-semantic constraint source of §4.2.1.
+    pub fn binary(&mut self, k: BinKind, a: ValueId, b: ValueId) -> Result<ValueId> {
+        let (ta, tb) = (self.ty(a).clone(), self.ty(b).clone());
+        ensure!(ta.dtype == tb.dtype, "binary {k:?}: dtype mismatch {ta} vs {tb}");
+        ensure!(ta.rank() == tb.rank(), "binary {k:?}: rank mismatch {ta} vs {tb}");
+        let dims = self.unify_shapes(&ta.dims, &tb.dims)?;
+        let id = self.push(Op::Bin(k), vec![a, b], TensorType::new(ta.dtype, dims));
+        self.m.syms.record_size_equal(a, id);
+        self.m.syms.record_size_equal(b, id);
+        Ok(id)
+    }
+
+    pub fn add(&mut self, a: ValueId, b: ValueId) -> Result<ValueId> {
+        self.binary(BinKind::Add, a, b)
+    }
+    pub fn sub(&mut self, a: ValueId, b: ValueId) -> Result<ValueId> {
+        self.binary(BinKind::Sub, a, b)
+    }
+    pub fn mul(&mut self, a: ValueId, b: ValueId) -> Result<ValueId> {
+        self.binary(BinKind::Mul, a, b)
+    }
+    pub fn div(&mut self, a: ValueId, b: ValueId) -> Result<ValueId> {
+        self.binary(BinKind::Div, a, b)
+    }
+    pub fn maximum(&mut self, a: ValueId, b: ValueId) -> Result<ValueId> {
+        self.binary(BinKind::Max, a, b)
+    }
+
+    pub fn compare(&mut self, dir: CmpDir, a: ValueId, b: ValueId) -> Result<ValueId> {
+        let (ta, tb) = (self.ty(a).clone(), self.ty(b).clone());
+        ensure!(ta.dtype == tb.dtype, "compare: dtype mismatch");
+        ensure!(ta.rank() == tb.rank(), "compare: rank mismatch");
+        let dims = self.unify_shapes(&ta.dims, &tb.dims)?;
+        Ok(self.push(Op::Cmp(dir), vec![a, b], TensorType::new(DType::Pred, dims)))
+    }
+
+    pub fn select(&mut self, pred: ValueId, t: ValueId, f: ValueId) -> Result<ValueId> {
+        ensure!(self.ty(pred).dtype == DType::Pred, "select: pred must be pred-typed");
+        let (tt, tf) = (self.ty(t).clone(), self.ty(f).clone());
+        ensure!(tt.dtype == tf.dtype, "select: branch dtype mismatch");
+        let dims = self.unify_shapes(&tt.dims, &tf.dims)?;
+        let pdims = self.ty(pred).dims.clone();
+        let dims = self.unify_shapes(&dims, &pdims)?;
+        Ok(self.push(Op::Select, vec![pred, t, f], TensorType::new(tt.dtype, dims)))
+    }
+
+    pub fn convert(&mut self, x: ValueId, to: DType) -> ValueId {
+        let dims = self.ty(x).dims.clone();
+        self.push(Op::Convert(to), vec![x], TensorType::new(to, dims))
+    }
+
+    /// Unify two dim vectors, recording equality constraints; returns the
+    /// canonical merged dims. Errors if two *fixed* dims conflict.
+    fn unify_shapes(&mut self, a: &[Dim], b: &[Dim]) -> Result<Vec<Dim>> {
+        ensure!(a.len() == b.len(), "rank mismatch in unify");
+        let mut out = Vec::with_capacity(a.len());
+        for (&da, &db) in a.iter().zip(b) {
+            let (ca, cb) = (self.m.syms.canon_dim(da), self.m.syms.canon_dim(db));
+            let merged = match (ca, cb) {
+                (Dim::Fixed(x), Dim::Fixed(y)) => {
+                    ensure!(x == y, "dim mismatch {x} vs {y}");
+                    Dim::Fixed(x)
+                }
+                (Dim::Sym(s), Dim::Sym(t)) => {
+                    self.m.syms.unify(s, t);
+                    self.m.syms.canon_dim(Dim::Sym(s))
+                }
+                // Fixed vs symbolic: the op requires them equal, so the
+                // symbol is refined to the constant.
+                (Dim::Fixed(x), Dim::Sym(s)) | (Dim::Sym(s), Dim::Fixed(x)) => {
+                    let refined = self.m.syms.fresh(
+                        format!("refine_{}", self.m.syms.name(s)),
+                        ShapeExpr::Const(x as i64),
+                    );
+                    self.m.syms.unify(s, refined);
+                    Dim::Fixed(x)
+                }
+            };
+            out.push(merged);
+        }
+        Ok(out)
+    }
+
+    // ---- broadcast / layout -----------------------------------------------
+
+    /// `broadcast_in_dim` to an explicit output shape. `mapping[i]` gives
+    /// the output axis that operand axis `i` occupies.
+    pub fn broadcast(&mut self, x: ValueId, out_dims: Vec<Dim>, mapping: Vec<usize>) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        ensure!(mapping.len() == tx.rank(), "broadcast: mapping rank mismatch");
+        for (i, &m) in mapping.iter().enumerate() {
+            ensure!(m < out_dims.len(), "broadcast: mapping axis out of range");
+            // Mapped dims must agree (or be 1 in the operand).
+            if tx.dims[i].fixed() != Some(1) {
+                let merged = self.unify_shapes(&[tx.dims[i]], &[out_dims[m]])?;
+                let _ = merged;
+            }
+        }
+        Ok(self.push(Op::Broadcast { dims: mapping }, vec![x], TensorType::new(tx.dtype, out_dims)))
+    }
+
+    /// Broadcast a scalar to the shape of `like`.
+    pub fn broadcast_scalar_like(&mut self, scalar: ValueId, like: ValueId) -> Result<ValueId> {
+        ensure!(self.ty(scalar).rank() == 0, "expected scalar");
+        let out = self.ty(like).dims.clone();
+        self.broadcast(scalar, out, vec![])
+    }
+
+    /// Dynamic broadcast: output extents read from `shape: s64[r]`.
+    pub fn dbroadcast(&mut self, x: ValueId, shape: ValueId, mapping: Vec<usize>, out_rank: usize) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        ensure!(self.ty(shape).dtype == DType::I64, "dbroadcast: shape tensor must be s64");
+        let mut dims = Vec::with_capacity(out_rank);
+        for axis in 0..out_rank {
+            let s = self.m.syms.fresh(
+                format!("dbc{}_{axis}", self.m.instrs.len()),
+                ShapeExpr::Elem { value: shape, index: axis },
+            );
+            dims.push(Dim::Sym(s));
+        }
+        Ok(self.push(Op::DBroadcast { dims: mapping }, vec![x, shape], TensorType::new(tx.dtype, dims)))
+    }
+
+    pub fn transpose(&mut self, x: ValueId, perm: Vec<usize>) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        ensure!(perm.len() == tx.rank(), "transpose: perm rank mismatch");
+        let mut seen = vec![false; perm.len()];
+        for &p in &perm {
+            ensure!(p < perm.len() && !seen[p], "transpose: invalid perm");
+            seen[p] = true;
+        }
+        let dims: Vec<Dim> = perm.iter().map(|&p| tx.dims[p]).collect();
+        let id = self.push(Op::Transpose { perm }, vec![x], TensorType::new(tx.dtype, dims));
+        // Op-semantic tensor-size equality (§4.2.1).
+        self.m.syms.record_size_equal(x, id);
+        Ok(id)
+    }
+
+    /// Static-target reshape. If both sides are fully static the element
+    /// counts must match; with symbolic dims the tensor-size equality is
+    /// recorded as a constraint instead.
+    pub fn reshape(&mut self, x: ValueId, dims: Vec<Dim>) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        let out = TensorType::new(tx.dtype, dims);
+        if let (Some(a), Some(b)) = (tx.static_elems(), out.static_elems()) {
+            ensure!(a == b, "reshape: element count mismatch {a} vs {b}");
+        }
+        let id = self.push(Op::Reshape, vec![x], out);
+        self.m.syms.record_size_equal(x, id);
+        Ok(id)
+    }
+
+    /// Dynamic reshape: target extents read from `shape: s64[r]` at runtime.
+    pub fn dreshape(&mut self, x: ValueId, shape: ValueId, out_rank: usize) -> Result<ValueId> {
+        ensure!(self.ty(shape).dtype == DType::I64, "dreshape: shape tensor must be s64");
+        let dtype = self.ty(x).dtype;
+        let mut dims = Vec::with_capacity(out_rank);
+        for axis in 0..out_rank {
+            let s = self.m.syms.fresh(
+                format!("drs{}_{axis}", self.m.instrs.len()),
+                ShapeExpr::Elem { value: shape, index: axis },
+            );
+            dims.push(Dim::Sym(s));
+        }
+        let id = self.push(Op::DReshape, vec![x, shape], TensorType::new(dtype, dims));
+        self.m.syms.record_size_equal(x, id);
+        Ok(id)
+    }
+
+    // ---- shape-changing memory ops ------------------------------------------
+
+    pub fn concat(&mut self, xs: &[ValueId], axis: usize) -> Result<ValueId> {
+        ensure!(!xs.is_empty(), "concat: empty operand list");
+        let t0 = self.ty(xs[0]).clone();
+        ensure!(axis < t0.rank(), "concat: axis out of range");
+        let mut axis_dims: Vec<Dim> = vec![t0.dims[axis]];
+        let mut other = t0.dims.clone();
+        for &x in &xs[1..] {
+            let tx = self.ty(x).clone();
+            ensure!(tx.dtype == t0.dtype && tx.rank() == t0.rank(), "concat: type mismatch");
+            for a in 0..t0.rank() {
+                if a != axis {
+                    let merged = self.unify_shapes(&[other[a]], &[tx.dims[a]])?;
+                    other[a] = merged[0];
+                }
+            }
+            axis_dims.push(tx.dims[axis]);
+        }
+        let total: Option<usize> = axis_dims.iter().map(|d| d.fixed()).sum::<Option<usize>>();
+        let cat_dim = match total {
+            Some(n) => Dim::Fixed(n),
+            None => {
+                let expr = axis_dims
+                    .iter()
+                    .map(|&d| ShapeExpr::Dim(d))
+                    .reduce(ShapeExpr::add)
+                    .unwrap();
+                Dim::Sym(self.m.syms.fresh(format!("cat{}", self.m.instrs.len()), expr))
+            }
+        };
+        let mut dims = other;
+        dims[axis] = cat_dim;
+        Ok(self.push(Op::Concat { axis }, xs.to_vec(), TensorType::new(t0.dtype, dims)))
+    }
+
+    /// Static slice: HLO semantics, constant bounding box.
+    pub fn slice(&mut self, x: ValueId, starts: Vec<i64>, limits: Vec<i64>, strides: Vec<i64>) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        ensure!(
+            starts.len() == tx.rank() && limits.len() == tx.rank() && strides.len() == tx.rank(),
+            "slice: index rank mismatch"
+        );
+        let mut dims = Vec::with_capacity(tx.rank());
+        for i in 0..tx.rank() {
+            ensure!(strides[i] > 0 && starts[i] >= 0 && limits[i] >= starts[i], "slice: bad box");
+            if let Some(n) = tx.dims[i].fixed() {
+                ensure!(limits[i] as usize <= n, "slice: limit beyond dim {i}");
+            }
+            let extent = (limits[i] - starts[i] + strides[i] - 1) / strides[i];
+            dims.push(Dim::Fixed(extent as usize));
+        }
+        Ok(self.push(
+            Op::Slice { starts, limits, strides },
+            vec![x],
+            TensorType::new(tx.dtype, dims),
+        ))
+    }
+
+    /// Dynamic slice (figure 2): the bounding box arrives as s64 tensors.
+    /// Result dims are fresh symbols defined as
+    /// `ceildiv(limit[i] - start[i], stride[i])` over runtime tensor reads.
+    pub fn dslice(&mut self, x: ValueId, starts: ValueId, limits: ValueId, strides: ValueId) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        for &idx in &[starts, limits, strides] {
+            ensure!(self.ty(idx).dtype == DType::I64, "dslice: indices must be s64");
+            ensure!(
+                self.ty(idx).dims == vec![Dim::Fixed(tx.rank())],
+                "dslice: index tensors must be s64[rank]"
+            );
+        }
+        let mut dims = Vec::with_capacity(tx.rank());
+        for i in 0..tx.rank() {
+            let expr = ShapeExpr::ceil_div(
+                ShapeExpr::sub(
+                    ShapeExpr::Elem { value: limits, index: i },
+                    ShapeExpr::Elem { value: starts, index: i },
+                ),
+                ShapeExpr::Elem { value: strides, index: i },
+            );
+            dims.push(Dim::Sym(self.m.syms.fresh(format!("dsl{}_{i}", self.m.instrs.len()), expr)));
+        }
+        Ok(self.push(
+            Op::DSlice,
+            vec![x, starts, limits, strides],
+            TensorType::new(tx.dtype, dims),
+        ))
+    }
+
+    /// Static pad: `(x, pad_value)` with constant low/high widths.
+    pub fn pad(&mut self, x: ValueId, value: ValueId, low: Vec<i64>, high: Vec<i64>) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        ensure!(self.ty(value).rank() == 0, "pad: value must be scalar");
+        ensure!(low.len() == tx.rank() && high.len() == tx.rank(), "pad: width rank mismatch");
+        let mut dims = Vec::with_capacity(tx.rank());
+        for i in 0..tx.rank() {
+            ensure!(low[i] >= 0 && high[i] >= 0, "pad: negative width");
+            let extra = (low[i] + high[i]) as usize;
+            dims.push(match tx.dims[i] {
+                Dim::Fixed(n) => Dim::Fixed(n + extra),
+                Dim::Sym(s) if extra == 0 => Dim::Sym(s),
+                Dim::Sym(s) => {
+                    let expr = ShapeExpr::add(
+                        ShapeExpr::Dim(Dim::Sym(s)),
+                        ShapeExpr::Const(extra as i64),
+                    );
+                    Dim::Sym(self.m.syms.fresh(format!("pad{}_{i}", self.m.instrs.len()), expr))
+                }
+            });
+        }
+        Ok(self.push(Op::Pad { low, high }, vec![x, value], TensorType::new(tx.dtype, dims)))
+    }
+
+    /// Dynamic pad: widths arrive as s64 tensors.
+    pub fn dpad(&mut self, x: ValueId, value: ValueId, low: ValueId, high: ValueId) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        ensure!(self.ty(value).rank() == 0, "dpad: value must be scalar");
+        let mut dims = Vec::with_capacity(tx.rank());
+        for i in 0..tx.rank() {
+            let expr = ShapeExpr::add(
+                ShapeExpr::Dim(tx.dims[i]),
+                ShapeExpr::add(
+                    ShapeExpr::Elem { value: low, index: i },
+                    ShapeExpr::Elem { value: high, index: i },
+                ),
+            );
+            dims.push(Dim::Sym(self.m.syms.fresh(format!("dpd{}_{i}", self.m.instrs.len()), expr)));
+        }
+        Ok(self.push(Op::DPad, vec![x, value, low, high], TensorType::new(tx.dtype, dims)))
+    }
+
+    // ---- reductions / contractions ------------------------------------------
+
+    pub fn reduce(&mut self, kind: ReduceKind, x: ValueId, axes: Vec<usize>) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        for &a in &axes {
+            ensure!(a < tx.rank(), "reduce: axis out of range");
+        }
+        let dims: Vec<Dim> = tx
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !axes.contains(i))
+            .map(|(_, &d)| d)
+            .collect();
+        Ok(self.push(Op::Reduce { kind, axes }, vec![x], TensorType::new(tx.dtype, dims)))
+    }
+
+    /// Matrix product. `[m,k]·[k,n]` or batched `[b,m,k]·[b,k,n]`; the
+    /// contracting (and batch) dims are unified — another op-semantic
+    /// constraint.
+    pub fn dot(&mut self, a: ValueId, b: ValueId) -> Result<ValueId> {
+        let (ta, tb) = (self.ty(a).clone(), self.ty(b).clone());
+        ensure!(ta.dtype == DType::F32 && tb.dtype == DType::F32, "dot: f32 only");
+        match (ta.rank(), tb.rank()) {
+            (2, 2) => {
+                let k = self.unify_shapes(&[ta.dims[1]], &[tb.dims[0]])?;
+                let _ = k;
+                let dims = vec![ta.dims[0], tb.dims[1]];
+                Ok(self.push(Op::Dot, vec![a, b], TensorType::new(DType::F32, dims)))
+            }
+            (3, 3) => {
+                let bdim = self.unify_shapes(&[ta.dims[0]], &[tb.dims[0]])?;
+                let _ = self.unify_shapes(&[ta.dims[2]], &[tb.dims[1]])?;
+                let dims = vec![bdim[0], ta.dims[1], tb.dims[2]];
+                Ok(self.push(Op::Dot, vec![a, b], TensorType::new(DType::F32, dims)))
+            }
+            (ra, rb) => bail!("dot: unsupported ranks {ra}x{rb}"),
+        }
+    }
+
+    // ---- gather / iota / unique ---------------------------------------------
+
+    /// Take rows of `x` along `axis` at positions `idx: s64[m]`.
+    pub fn gather(&mut self, x: ValueId, idx: ValueId, axis: usize) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        let ti = self.ty(idx).clone();
+        ensure!(ti.dtype == DType::I64 && ti.rank() == 1, "gather: idx must be s64[m]");
+        ensure!(axis < tx.rank(), "gather: axis out of range");
+        let mut dims = tx.dims.clone();
+        dims[axis] = ti.dims[0];
+        Ok(self.push(Op::Gather { axis }, vec![x, idx], TensorType::new(tx.dtype, dims)))
+    }
+
+    pub fn iota(&mut self, dtype: DType, dims: Vec<Dim>, axis: usize) -> Result<ValueId> {
+        ensure!(axis < dims.len().max(1), "iota: axis out of range");
+        Ok(self.push(Op::Iota { axis }, vec![], TensorType::new(dtype, dims)))
+    }
+
+    /// `unique(x: s64[n]) → s64[u]`: `u` is data-dependent, modeled as a
+    /// symbol whose value the executor fills after running the kernel.
+    pub fn unique(&mut self, x: ValueId) -> Result<ValueId> {
+        let tx = self.ty(x).clone();
+        ensure!(tx.dtype == DType::I64 && tx.rank() == 1, "unique: wants s64[n]");
+        let id = self.m.instrs.len();
+        let s = self.m.syms.fresh(format!("uniq{id}"), ShapeExpr::DataDep { value: id });
+        Ok(self.push(Op::Unique, vec![x], TensorType::new(DType::I64, vec![Dim::Sym(s)])))
+    }
+
+    pub fn get_dim_size(&mut self, x: ValueId, axis: usize) -> Result<ValueId> {
+        ensure!(axis < self.ty(x).rank(), "get_dim_size: axis out of range");
+        Ok(self.push(Op::GetDimSize { axis }, vec![x], TensorType::scalar(DType::I64)))
+    }
+
+    // ---- composites (bridge-level conveniences) -------------------------------
+
+    /// Numerically-stable softmax over the last axis, expanded to primitives
+    /// so the fusion planner sees the real memory-intensive op mix.
+    pub fn softmax_last(&mut self, x: ValueId) -> Result<ValueId> {
+        let rank = self.ty(x).rank();
+        ensure!(rank >= 1, "softmax: rank >= 1");
+        let last = rank - 1;
+        let mx = self.reduce(ReduceKind::Max, x, vec![last])?;
+        let mxb = self.broadcast_like_insert(mx, x, last)?;
+        let centered = self.sub(x, mxb)?;
+        let e = self.unary(UnKind::Exp, centered);
+        let s = self.reduce(ReduceKind::Sum, e, vec![last])?;
+        let sb = self.broadcast_like_insert(s, x, last)?;
+        self.div(e, sb)
+    }
+
+    /// Layer norm over the last axis (mean/variance/normalize), expanded.
+    pub fn layernorm_last(&mut self, x: ValueId, gamma: ValueId, beta: ValueId, eps: f32) -> Result<ValueId> {
+        let rank = self.ty(x).rank();
+        let last = rank - 1;
+        let mean = self.reduce(ReduceKind::Mean, x, vec![last])?;
+        let meanb = self.broadcast_like_insert(mean, x, last)?;
+        let centered = self.sub(x, meanb)?;
+        let sq = self.mul(centered, centered)?;
+        let var = self.reduce(ReduceKind::Mean, sq, vec![last])?;
+        let varb = self.broadcast_like_insert(var, x, last)?;
+        let epsc = self.scalar_f32(eps);
+        let epsb = self.broadcast_scalar_like(epsc, x)?;
+        let denom_in = self.add(varb, epsb)?;
+        let inv = self.unary(UnKind::Rsqrt, denom_in);
+        let normed = self.mul(centered, inv)?;
+        // gamma/beta are [hidden]; broadcast over leading axes.
+        let gb = self.broadcast_row_like(gamma, x)?;
+        let bb = self.broadcast_row_like(beta, x)?;
+        let scaled = self.mul(normed, gb)?;
+        self.add(scaled, bb)
+    }
+
+    /// Broadcast a reduced tensor back over the reduced axis `axis` of
+    /// `like` (i.e. keepdims-style broadcast).
+    pub fn broadcast_like_insert(&mut self, reduced: ValueId, like: ValueId, axis: usize) -> Result<ValueId> {
+        let out = self.ty(like).dims.clone();
+        let mapping: Vec<usize> = (0..out.len()).filter(|&a| a != axis).collect();
+        self.broadcast(reduced, out, mapping)
+    }
+
+    /// Broadcast a `[hidden]` vector over the leading axes of `like`.
+    pub fn broadcast_row_like(&mut self, row: ValueId, like: ValueId) -> Result<ValueId> {
+        let out = self.ty(like).dims.clone();
+        ensure!(self.ty(row).rank() == 1, "broadcast_row_like: wants rank-1");
+        let mapping = vec![out.len() - 1];
+        self.broadcast(row, out, mapping)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dyn_builder() -> (Builder, ValueId, ValueId, Dim) {
+        let mut b = Builder::new("t");
+        let seq = b.dyn_dim("seq", 0, 0);
+        let x = b.param(DType::F32, vec![seq, Dim::Fixed(8)]);
+        let seq2 = b.dyn_dim("seq2", 1, 0);
+        let y = b.param(DType::F32, vec![seq2, Dim::Fixed(8)]);
+        (b, x, y, seq)
+    }
+
+    #[test]
+    fn binary_unifies_symbolic_dims() {
+        let (mut b, x, y, seq) = dyn_builder();
+        // Before the add, the two seq symbols are distinct.
+        assert!(!b.m.same_shape(x, y));
+        let z = b.add(x, y).unwrap();
+        // Op semantics forced them equal (§4.2.1 first constraint source).
+        assert!(b.m.same_shape(x, y));
+        assert_eq!(b.m.syms.canon_dim(b.m.ty(z).dims[0]), b.m.syms.canon_dim(seq));
+    }
+
+    #[test]
+    fn binary_rejects_fixed_mismatch() {
+        let mut b = Builder::new("t");
+        let x = b.param(DType::F32, vec![Dim::Fixed(2)]);
+        let y = b.param(DType::F32, vec![Dim::Fixed(3)]);
+        assert!(b.add(x, y).is_err());
+    }
+
+    #[test]
+    fn fixed_refines_symbol() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let y = b.param(DType::F32, vec![Dim::Fixed(16)]);
+        let z = b.add(x, y).unwrap();
+        assert_eq!(b.m.syms.canon_dim(s), Dim::Fixed(16));
+        // The merged result dim collapses to the constant.
+        assert_eq!(b.m.ty(z).canon(&b.m.syms).dims[0], Dim::Fixed(16));
+    }
+
+    #[test]
+    fn transpose_records_size_equality() {
+        let (mut b, x, _, _) = dyn_builder();
+        let t = b.transpose(x, vec![1, 0]).unwrap();
+        assert!(b.m.same_size(x, t));
+        assert_eq!(b.m.ty(t).dims[0], Dim::Fixed(8));
+    }
+
+    #[test]
+    fn concat_dynamic_axis_is_sum() {
+        let (mut b, x, y, _) = dyn_builder();
+        let c = b.concat(&[x, y], 0).unwrap();
+        let d = b.m.ty(c).dims[0];
+        match d {
+            Dim::Sym(s) => {
+                let def = b.m.syms.def(s).to_string();
+                assert!(def.contains('+'), "expected sum expr, got {def}");
+            }
+            Dim::Fixed(_) => panic!("expected symbolic concat dim"),
+        }
+        assert_eq!(b.m.ty(c).dims[1], Dim::Fixed(8));
+    }
+
+    #[test]
+    fn dslice_mints_ceildiv_symbols() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let st = b.i64_vec(&[0, 0]);
+        let li = b.i64_vec(&[2, 4]);
+        let sr = b.i64_vec(&[1, 1]);
+        let sl = b.dslice(x, st, li, sr).unwrap();
+        for d in &b.m.ty(sl).dims {
+            match d {
+                Dim::Sym(sy) => {
+                    assert!(b.m.syms.def(*sy).to_string().contains("ceildiv"));
+                }
+                _ => panic!("dslice dims should be symbolic"),
+            }
+        }
+    }
+
+    #[test]
+    fn dot_shapes_and_contract_unification() {
+        let mut b = Builder::new("t");
+        let m = b.dyn_dim("m", 0, 0);
+        let a = b.param(DType::F32, vec![m, Dim::Fixed(64)]);
+        let w = b.param(DType::F32, vec![Dim::Fixed(64), Dim::Fixed(32)]);
+        let d = b.dot(a, w).unwrap();
+        assert_eq!(b.m.ty(d).dims[1], Dim::Fixed(32));
+        assert!(b.m.ty(d).dims[0].is_dynamic());
+        assert!(b.m.op(d).is_compute_intensive());
+    }
+
+    #[test]
+    fn reduce_drops_axes() {
+        let (mut b, x, _, _) = dyn_builder();
+        let r = b.reduce(ReduceKind::Sum, x, vec![1]).unwrap();
+        assert_eq!(b.m.ty(r).rank(), 1);
+        assert!(b.m.ty(r).dims[0].is_dynamic());
+    }
+
+    #[test]
+    fn unique_is_data_dependent() {
+        let mut b = Builder::new("t");
+        let n = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::I64, vec![n]);
+        let u = b.unique(x).unwrap();
+        match b.m.ty(u).dims[0] {
+            Dim::Sym(s) => assert!(matches!(b.m.syms.def(s), ShapeExpr::DataDep { .. })),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn softmax_expansion_op_mix() {
+        let (mut b, x, _, _) = dyn_builder();
+        let y = b.softmax_last(x).unwrap();
+        let m = b.finish(vec![y]);
+        // max, 2 broadcasts, sub, exp, sum, div = 7 new memory-intensive ops.
+        let kinds: Vec<String> = m.instrs.iter().map(|i| i.op.name()).collect();
+        assert!(kinds.iter().any(|k| k == "reduce.max"));
+        assert!(kinds.iter().any(|k| k == "exponential"));
+        assert!(kinds.iter().any(|k| k == "divide"));
+        assert!(m.same_shape(m.outputs[0], 0));
+    }
+
+    #[test]
+    fn layernorm_expansion_shapes() {
+        let (mut b, x, _, _) = dyn_builder();
+        let g = b.param(DType::F32, vec![Dim::Fixed(8)]);
+        let be = b.param(DType::F32, vec![Dim::Fixed(8)]);
+        let y = b.layernorm_last(x, g, be, 1e-5).unwrap();
+        assert!(b.m.same_shape(y, x));
+    }
+
+    #[test]
+    fn fully_static_detection() {
+        let mut b = Builder::new("t");
+        let x = b.param(DType::F32, vec![Dim::Fixed(4), Dim::Fixed(4)]);
+        let y = b.unary(UnKind::Tanh, x);
+        let m = b.finish(vec![y]);
+        assert!(m.is_fully_static());
+
+        let (mut b2, x2, _, _) = dyn_builder();
+        let y2 = b2.unary(UnKind::Tanh, x2);
+        let m2 = b2.finish(vec![y2]);
+        assert!(!m2.is_fully_static());
+    }
+}

@@ -1,0 +1,312 @@
+//! The DHLO op set and its classification tables.
+
+use super::types::{DType, Literal};
+
+/// Elementwise unary kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnKind {
+    Abs,
+    Neg,
+    Exp,
+    Log,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+    Sigmoid,
+    Relu,
+    Gelu,
+    Erf,
+    Floor,
+    Sign,
+}
+
+impl UnKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UnKind::Abs => "abs",
+            UnKind::Neg => "negate",
+            UnKind::Exp => "exponential",
+            UnKind::Log => "log",
+            UnKind::Tanh => "tanh",
+            UnKind::Sqrt => "sqrt",
+            UnKind::Rsqrt => "rsqrt",
+            UnKind::Sigmoid => "logistic",
+            UnKind::Relu => "relu",   // composite; expanded in codegen
+            UnKind::Gelu => "gelu",   // composite; expanded in codegen
+            UnKind::Erf => "erf",     // composite; expanded in codegen
+            UnKind::Floor => "floor",
+            UnKind::Sign => "sign",
+        }
+    }
+}
+
+/// Elementwise binary kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+}
+
+impl BinKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BinKind::Add => "add",
+            BinKind::Sub => "subtract",
+            BinKind::Mul => "multiply",
+            BinKind::Div => "divide",
+            BinKind::Max => "maximum",
+            BinKind::Min => "minimum",
+            BinKind::Pow => "power",
+        }
+    }
+}
+
+/// Comparison directions (result dtype is `pred`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpDir {
+    pub fn hlo_direction(&self) -> &'static str {
+        match self {
+            CmpDir::Eq => "EQ",
+            CmpDir::Ne => "NE",
+            CmpDir::Lt => "LT",
+            CmpDir::Le => "LE",
+            CmpDir::Gt => "GT",
+            CmpDir::Ge => "GE",
+        }
+    }
+}
+
+/// Reduction kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Min,
+    Mean,
+}
+
+impl ReduceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceKind::Sum => "sum",
+            ReduceKind::Max => "max",
+            ReduceKind::Min => "min",
+            ReduceKind::Mean => "mean",
+        }
+    }
+    /// Neutral element for masked (bucketed) reductions.
+    pub fn neutral(&self) -> f32 {
+        match self {
+            ReduceKind::Sum | ReduceKind::Mean => 0.0,
+            ReduceKind::Max => f32::NEG_INFINITY,
+            ReduceKind::Min => f32::INFINITY,
+        }
+    }
+}
+
+/// Shape-propagation classes — the paper's table of propagation properties
+/// (§4.3: "some ops may have the same shape propagation property, like Add
+/// and Sub; we classify ops according to their shape propagation properties
+/// in the table to avoid repeated enumeration").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PropClass {
+    /// Output shape equals every (non-scalar) operand's shape.
+    ElementwiseSameShape,
+    /// Output holds exactly the operand's elements rearranged
+    /// (Transpose/Reshape): tensor-size equality propagates.
+    SizePreserving,
+    /// Reduction roots: output covers the operand minus reduced axes;
+    /// fusable as the root of an input fusion.
+    Contracting,
+    /// No useful propagation property (Slice, Pad, Concat, Gather, …).
+    Opaque,
+}
+
+/// A DHLO operation. Static-attribute ops and their dynamic twins (figure 2
+/// of the paper) coexist: `Slice` carries constant indices, `DSlice` reads
+/// them from tensor operands at runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Entry parameter `index`.
+    Param { index: usize },
+    /// Constant tensor with static dims.
+    Const { lit: Literal, dims: Vec<usize> },
+    Un(UnKind),
+    Bin(BinKind),
+    Cmp(CmpDir),
+    /// `select(pred, on_true, on_false)`.
+    Select,
+    /// Elementwise dtype conversion.
+    Convert(DType),
+    /// `broadcast_in_dim`: `dims[i]` is the output axis operand axis `i`
+    /// maps to. Output shape is fixed at construction time.
+    Broadcast { dims: Vec<usize> },
+    /// Dynamic broadcast: output extents come from an i64 shape-tensor
+    /// operand (DHLO supplement of `broadcast_in_dim`).
+    DBroadcast { dims: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    /// Static reshape; target dims recorded in the instruction type.
+    Reshape,
+    /// Dynamic reshape; target extents come from an i64 shape-tensor operand.
+    DReshape,
+    Concat { axis: usize },
+    /// Static slice (HLO form, constant attributes).
+    Slice { starts: Vec<i64>, limits: Vec<i64>, strides: Vec<i64> },
+    /// Dynamic slice (DHLO form): operands are
+    /// `(input, starts: s64[r], limits: s64[r], strides: s64[r])`.
+    DSlice,
+    /// Static pad; operands `(input, pad_value)`.
+    Pad { low: Vec<i64>, high: Vec<i64> },
+    /// Dynamic pad: operands `(input, pad_value, low: s64[r], high: s64[r])`.
+    DPad,
+    Reduce { kind: ReduceKind, axes: Vec<usize> },
+    /// Matrix product: `[m,k]·[k,n] → [m,n]`, or batched
+    /// `[b,m,k]·[b,k,n] → [b,m,n]`. Compute-intensive: routed through the
+    /// kernel library (§4.5), never fused.
+    Dot,
+    /// `gather(x, idx)`: take rows of `x` along `axis` (embedding lookup).
+    Gather { axis: usize },
+    /// Iota along `axis`; output shape fixed at construction.
+    Iota { axis: usize },
+    /// `unique(x: s64[n]) → s64[u]` with data-dependent `u` — the sparse
+    /// workload driver the paper cites (tf.Unique).
+    Unique,
+    /// Extent of `axis` as an s64 scalar (host-side shape calculation).
+    GetDimSize { axis: usize },
+}
+
+impl Op {
+    pub fn name(&self) -> String {
+        match self {
+            Op::Param { index } => format!("param{index}"),
+            Op::Const { .. } => "constant".into(),
+            Op::Un(k) => k.name().into(),
+            Op::Bin(k) => k.name().into(),
+            Op::Cmp(d) => format!("compare.{}", d.hlo_direction()),
+            Op::Select => "select".into(),
+            Op::Convert(t) => format!("convert.{t}"),
+            Op::Broadcast { .. } => "broadcast_in_dim".into(),
+            Op::DBroadcast { .. } => "d_broadcast_in_dim".into(),
+            Op::Transpose { .. } => "transpose".into(),
+            Op::Reshape => "reshape".into(),
+            Op::DReshape => "d_reshape".into(),
+            Op::Concat { .. } => "concatenate".into(),
+            Op::Slice { .. } => "slice".into(),
+            Op::DSlice => "d_slice".into(),
+            Op::Pad { .. } => "pad".into(),
+            Op::DPad => "d_pad".into(),
+            Op::Reduce { kind, .. } => format!("reduce.{}", kind.name()),
+            Op::Dot => "dot".into(),
+            Op::Gather { .. } => "gather".into(),
+            Op::Iota { .. } => "iota".into(),
+            Op::Unique => "unique".into(),
+            Op::GetDimSize { .. } => "get_dimension_size".into(),
+        }
+    }
+
+    /// Compute-intensive ops go through the library (§4.5) and are excluded
+    /// from fusion; everything else is memory-intensive (§2).
+    pub fn is_compute_intensive(&self) -> bool {
+        matches!(self, Op::Dot)
+    }
+
+    /// Whether this is one of the dynamic twins introduced by DHLO.
+    pub fn is_dynamic_variant(&self) -> bool {
+        matches!(self, Op::DSlice | Op::DPad | Op::DReshape | Op::DBroadcast { .. })
+    }
+
+    /// Shape-propagation class (the fusion planner's table, §4.3).
+    pub fn prop_class(&self) -> PropClass {
+        match self {
+            Op::Un(_) | Op::Bin(_) | Op::Cmp(_) | Op::Select | Op::Convert(_) => {
+                PropClass::ElementwiseSameShape
+            }
+            Op::Transpose { .. } | Op::Reshape | Op::DReshape => PropClass::SizePreserving,
+            Op::Reduce { .. } => PropClass::Contracting,
+            _ => PropClass::Opaque,
+        }
+    }
+
+    /// Ops that can appear *inside* a fused kernel body (memory-intensive,
+    /// expressible in the emitted HLO fusion body, and *bucket-safe*: with
+    /// dynamic dims rounded up to bucket extents, the valid data always
+    /// occupies the per-axis prefix box, so tail garbage can be masked at
+    /// reduces and cropped at the root. Reshape is excluded — it scatters
+    /// the valid box — and is instead executed as a free bitcast).
+    pub fn is_fusable(&self) -> bool {
+        matches!(
+            self,
+            Op::Un(_)
+                | Op::Bin(_)
+                | Op::Cmp(_)
+                | Op::Select
+                | Op::Convert(_)
+                | Op::Broadcast { .. }
+                | Op::Reduce { .. }
+                | Op::Transpose { .. }
+        )
+    }
+
+    /// Operand slots that carry *shape* information (s64 index tensors of
+    /// the dynamic twins). The placer pins the producers of these operands
+    /// to the host, mirroring DISC's host-side shape calculation.
+    pub fn shape_operand_slots(&self) -> &'static [usize] {
+        match self {
+            Op::DSlice => &[1, 2, 3],
+            Op::DPad => &[2, 3],
+            Op::DReshape | Op::DBroadcast { .. } => &[1],
+            _ => &[],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_table() {
+        assert!(Op::Dot.is_compute_intensive());
+        assert!(!Op::Bin(BinKind::Add).is_compute_intensive());
+        assert_eq!(Op::Bin(BinKind::Add).prop_class(), PropClass::ElementwiseSameShape);
+        // Add and Sub share a propagation class — the paper's example.
+        assert_eq!(Op::Bin(BinKind::Sub).prop_class(), Op::Bin(BinKind::Add).prop_class());
+        assert_eq!(Op::Transpose { perm: vec![1, 0] }.prop_class(), PropClass::SizePreserving);
+        assert_eq!(
+            Op::Reduce { kind: ReduceKind::Sum, axes: vec![1] }.prop_class(),
+            PropClass::Contracting
+        );
+        assert_eq!(Op::Concat { axis: 0 }.prop_class(), PropClass::Opaque);
+    }
+
+    #[test]
+    fn dynamic_twins() {
+        assert!(Op::DSlice.is_dynamic_variant());
+        assert!(!Op::Slice { starts: vec![], limits: vec![], strides: vec![] }
+            .is_dynamic_variant());
+        assert_eq!(Op::DSlice.shape_operand_slots(), &[1, 2, 3]);
+        assert_eq!(Op::DPad.shape_operand_slots(), &[2, 3]);
+        assert!(Op::Bin(BinKind::Mul).shape_operand_slots().is_empty());
+    }
+
+    #[test]
+    fn reduce_neutrals() {
+        assert_eq!(ReduceKind::Sum.neutral(), 0.0);
+        assert_eq!(ReduceKind::Max.neutral(), f32::NEG_INFINITY);
+        assert_eq!(ReduceKind::Min.neutral(), f32::INFINITY);
+    }
+}

@@ -1,0 +1,383 @@
+//! Parser for the DHLO textual form emitted by [`super::print`].
+//!
+//! Round-trips `print_module` output (modulo symbol *definitions*, which are
+//! re-derived: parsing re-runs the builder so op-semantic constraints are
+//! re-collected; bridge-injected extras are re-applied from the printed
+//! constraint-class comments). Used by `disc inspect --file x.dhlo` and the
+//! golden round-trip tests.
+
+use super::module::{Builder, Module, ValueId};
+use super::op::{BinKind, CmpDir, Op, ReduceKind, UnKind};
+use super::types::{DType, Literal};
+use crate::shape::Dim;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    Ok(match s {
+        "f32" => DType::F32,
+        "s64" => DType::I64,
+        "s32" => DType::I32,
+        "pred" => DType::Pred,
+        other => bail!("unknown dtype '{other}'"),
+    })
+}
+
+/// Parse `f32[s0,768]`-style types. Symbolic dims are named `s<N>`; the
+/// name table maps them to freshly minted symbols.
+fn parse_type(
+    s: &str,
+    b: &mut Builder,
+    sym_names: &mut HashMap<String, Dim>,
+    param_hint: Option<(usize, usize)>,
+) -> Result<(DType, Vec<Dim>)> {
+    let open = s.find('[').context("type needs '['")?;
+    let dtype = parse_dtype(&s[..open])?;
+    let inner = s[open + 1..].trim_end_matches(']');
+    let mut dims = Vec::new();
+    if !inner.is_empty() {
+        for (axis, part) in inner.split(',').enumerate() {
+            let part = part.trim();
+            if let Ok(n) = part.parse::<usize>() {
+                dims.push(Dim::Fixed(n));
+            } else if let Some(d) = sym_names.get(part) {
+                dims.push(*d);
+            } else {
+                // Fresh symbol; bind to the input dim when this is a
+                // parameter type. Otherwise use an unresolvable sentinel
+                // definition (NOT a constant — constants collapse to Fixed
+                // in canon_dim): the post-registration pass unifies the
+                // name with the builder-minted symbol, whose real
+                // definition then wins when it becomes the representative.
+                let def = match param_hint {
+                    Some((p, _)) => crate::shape::ShapeExpr::InputDim { param: p, axis },
+                    None => crate::shape::ShapeExpr::InputDim { param: usize::MAX, axis },
+                };
+                let sym = b.m.syms.fresh(part.to_string(), def);
+                let d = Dim::Sym(sym);
+                sym_names.insert(part.to_string(), d);
+                dims.push(d);
+            }
+        }
+    }
+    Ok((dtype, dims))
+}
+
+fn parse_attr_list(s: &str) -> Vec<i64> {
+    s.trim_start_matches('[')
+        .trim_end_matches(']')
+        .split(',')
+        .filter_map(|p| p.trim().parse::<i64>().ok())
+        .collect()
+}
+
+/// Extract `name=value` attrs (values are `[..]` lists or scalars). The
+/// printer uses Debug list formatting (`[0, 2]`), so inner ", " is
+/// collapsed before whitespace-splitting.
+fn attrs_of(rest: &str) -> HashMap<String, String> {
+    let compact = rest.replace(", ", ",");
+    let mut out = HashMap::new();
+    for piece in compact.split_whitespace() {
+        if let Some((k, v)) = piece.split_once('=') {
+            out.insert(k.to_string(), v.to_string());
+        }
+    }
+    out
+}
+
+/// Parse a module printed by [`super::print::print_module`].
+pub fn parse_module(text: &str) -> Result<Module> {
+    let mut lines = text.lines().peekable();
+    let header = lines.next().context("empty module text")?;
+    ensure!(header.starts_with("module @"), "expected 'module @...' header");
+    let name = header
+        .trim_start_matches("module @")
+        .split(' ')
+        .next()
+        .unwrap_or("parsed")
+        .to_string();
+
+    // Output list: "... -> (%a, %b) {"
+    let outs_str = header
+        .split("-> (")
+        .nth(1)
+        .and_then(|s| s.split(')').next())
+        .context("header outputs")?;
+    let outputs: Vec<ValueId> = outs_str
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().trim_start_matches('%').parse::<usize>().context("output id"))
+        .collect::<Result<_>>()?;
+
+    let mut b = Builder::new(name);
+    let mut sym_names: HashMap<String, Dim> = HashMap::new();
+    let mut next_param = 0usize;
+
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('}') || line.starts_with("//") {
+            continue;
+        }
+        // "%3 = add(%1, %2) : f32[s0,8]" possibly with attrs before ':'.
+        let (lhs, rhs) = line.split_once(" = ").context("instruction '='")?;
+        let id: usize = lhs.trim_start_matches('%').parse().context("value id")?;
+        let (body, ty_and_name) = rhs.rsplit_once(" : ").context("type separator")?;
+        let ty_str = ty_and_name.split("  //").next().unwrap_or(ty_and_name).trim();
+
+        let open = body.find('(').context("op open paren")?;
+        let opname = &body[..open];
+        let close = body.rfind(')').context("op close paren")?;
+        let operand_str = &body[open + 1..close];
+        let attrs = attrs_of(&body[close + 1..]);
+        let operands: Vec<ValueId> = operand_str
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().trim_start_matches('%').parse::<usize>().context("operand"))
+            .collect::<Result<_>>()?;
+
+        let made: ValueId = match opname {
+            p if p.starts_with("param") => {
+                let idx = next_param;
+                next_param += 1;
+                let (dt, dims) =
+                    parse_type(ty_str, &mut b, &mut sym_names, Some((idx, 0)))?;
+                b.param(dt, dims)
+            }
+            "constant" => {
+                // Constants print only their dims; values are not embedded
+                // in the textual form (they may be megabytes). Re-parse as
+                // zeros of the right shape — the round-trip contract covers
+                // structure, not weights (weights travel via artifacts).
+                let (dt, dims) = parse_type(ty_str, &mut b, &mut sym_names, None)?;
+                let fixed: Vec<usize> =
+                    dims.iter().map(|d| d.fixed().context("const dims")).collect::<Result<_>>()?;
+                let n: usize = fixed.iter().product::<usize>().max(1);
+                let lit = match dt {
+                    DType::F32 => Literal::F32(vec![0.0; n]),
+                    DType::I64 => Literal::I64(vec![0; n]),
+                    DType::I32 => Literal::I32(vec![0; n]),
+                    DType::Pred => Literal::Pred(vec![false; n]),
+                };
+                b.constant(lit, &fixed)
+            }
+            "abs" => b.unary(UnKind::Abs, operands[0]),
+            "negate" => b.unary(UnKind::Neg, operands[0]),
+            "exponential" => b.unary(UnKind::Exp, operands[0]),
+            "log" => b.unary(UnKind::Log, operands[0]),
+            "tanh" => b.unary(UnKind::Tanh, operands[0]),
+            "sqrt" => b.unary(UnKind::Sqrt, operands[0]),
+            "rsqrt" => b.unary(UnKind::Rsqrt, operands[0]),
+            "logistic" => b.unary(UnKind::Sigmoid, operands[0]),
+            "relu" => b.unary(UnKind::Relu, operands[0]),
+            "gelu" => b.unary(UnKind::Gelu, operands[0]),
+            "erf" => b.unary(UnKind::Erf, operands[0]),
+            "floor" => b.unary(UnKind::Floor, operands[0]),
+            "sign" => b.unary(UnKind::Sign, operands[0]),
+            "add" => b.add(operands[0], operands[1])?,
+            "subtract" => b.sub(operands[0], operands[1])?,
+            "multiply" => b.mul(operands[0], operands[1])?,
+            "divide" => b.div(operands[0], operands[1])?,
+            "maximum" => b.maximum(operands[0], operands[1])?,
+            "minimum" => b.binary(BinKind::Min, operands[0], operands[1])?,
+            "power" => b.binary(BinKind::Pow, operands[0], operands[1])?,
+            s if s.starts_with("compare.") => {
+                let dir = match &s[8..] {
+                    "EQ" => CmpDir::Eq,
+                    "NE" => CmpDir::Ne,
+                    "LT" => CmpDir::Lt,
+                    "LE" => CmpDir::Le,
+                    "GT" => CmpDir::Gt,
+                    "GE" => CmpDir::Ge,
+                    o => bail!("compare direction {o}"),
+                };
+                b.compare(dir, operands[0], operands[1])?
+            }
+            "select" => b.select(operands[0], operands[1], operands[2])?,
+            s if s.starts_with("convert.") => {
+                b.convert(operands[0], parse_dtype(&s[8..])?)
+            }
+            "broadcast_in_dim" => {
+                let mapping: Vec<usize> = parse_attr_list(
+                    attrs.get("dims").context("broadcast dims attr")?,
+                )
+                .into_iter()
+                .map(|x| x as usize)
+                .collect();
+                let (_, out_dims) = parse_type(ty_str, &mut b, &mut sym_names, None)?;
+                b.broadcast(operands[0], out_dims, mapping)?
+            }
+            "transpose" => {
+                let perm: Vec<usize> =
+                    parse_attr_list(attrs.get("perm").context("perm")?)
+                        .into_iter()
+                        .map(|x| x as usize)
+                        .collect();
+                b.transpose(operands[0], perm)?
+            }
+            "reshape" => {
+                let (_, out_dims) = parse_type(ty_str, &mut b, &mut sym_names, None)?;
+                b.reshape(operands[0], out_dims)?
+            }
+            "d_reshape" => {
+                let (_, out_dims) = parse_type(ty_str, &mut b, &mut sym_names, None)?;
+                let rank = out_dims.len();
+                b.dreshape(operands[0], operands[1], rank)?
+            }
+            "concatenate" => {
+                let axis = attrs.get("axis").context("axis")?.parse::<usize>()?;
+                b.concat(&operands, axis)?
+            }
+            "slice" => {
+                let starts = parse_attr_list(attrs.get("starts").context("starts")?);
+                let limits = parse_attr_list(attrs.get("limits").context("limits")?);
+                let strides = parse_attr_list(attrs.get("strides").context("strides")?);
+                b.slice(operands[0], starts, limits, strides)?
+            }
+            "d_slice" => b.dslice(operands[0], operands[1], operands[2], operands[3])?,
+            "pad" => {
+                let low = parse_attr_list(attrs.get("low").context("low")?);
+                let high = parse_attr_list(attrs.get("high").context("high")?);
+                b.pad(operands[0], operands[1], low, high)?
+            }
+            "d_pad" => b.dpad(operands[0], operands[1], operands[2], operands[3])?,
+            s if s.starts_with("reduce.") => {
+                let kind = match &s[7..] {
+                    "sum" => ReduceKind::Sum,
+                    "max" => ReduceKind::Max,
+                    "min" => ReduceKind::Min,
+                    "mean" => ReduceKind::Mean,
+                    o => bail!("reduce kind {o}"),
+                };
+                let axes: Vec<usize> = parse_attr_list(attrs.get("axes").context("axes")?)
+                    .into_iter()
+                    .map(|x| x as usize)
+                    .collect();
+                b.reduce(kind, operands[0], axes)?
+            }
+            "dot" => b.dot(operands[0], operands[1])?,
+            "gather" => {
+                let axis = attrs.get("axis").context("axis")?.parse::<usize>()?;
+                b.gather(operands[0], operands[1], axis)?
+            }
+            "iota" => {
+                let axis = attrs.get("axis").context("axis")?.parse::<usize>()?;
+                let (dt, dims) = parse_type(ty_str, &mut b, &mut sym_names, None)?;
+                b.iota(dt, dims, axis)?
+            }
+            "unique" => b.unique(operands[0])?,
+            "get_dimension_size" => {
+                let axis = attrs.get("axis").context("axis")?.parse::<usize>()?;
+                b.get_dim_size(operands[0], axis)?
+            }
+            other => bail!("unknown op '{other}'"),
+        };
+        ensure!(made == id, "instruction id mismatch: printed %{id}, rebuilt %{made}");
+        // Register the result type's symbolic dims under their printed
+        // names so later references resolve to the same symbols.
+        let printed = ty_str.split("  //").next().unwrap_or(ty_str);
+        if let Some(open) = printed.find('[') {
+            let inner = printed[open + 1..].trim_end_matches(']');
+            for (axis, part) in inner.split(',').enumerate() {
+                let part = part.trim();
+                if part.starts_with('s') && part[1..].chars().all(|c| c.is_ascii_digit()) {
+                    let actual = b.m.ty(made).dims.get(axis).copied();
+                    if let Some(d) = actual {
+                        sym_names.entry(part.to_string()).or_insert(d);
+                        // Printed alias and rebuilt dim must unify.
+                        if let (Some(Dim::Sym(a)), Dim::Sym(bb)) =
+                            (sym_names.get(part).copied(), d)
+                        {
+                            b.m.syms.unify(a, bb);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let m = b.finish(outputs);
+    super::verify::verify(&m)?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::print::print_module;
+
+    fn roundtrip(m: &Module) -> Module {
+        let text = print_module(m);
+        parse_module(&text).unwrap_or_else(|e| panic!("parse failed: {e:#}\n{text}"))
+    }
+
+    #[test]
+    fn roundtrip_elementwise_chain() {
+        let mut b = Builder::new("rt");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let t = b.unary(UnKind::Tanh, x);
+        let y = b.add(x, t).unwrap();
+        let m = b.finish(vec![y]);
+        let m2 = roundtrip(&m);
+        assert_eq!(m.instrs.len(), m2.instrs.len());
+        for (a, bb) in m.instrs.iter().zip(&m2.instrs) {
+            assert_eq!(a.op.name(), bb.op.name());
+            assert_eq!(a.operands, bb.operands);
+        }
+        assert_eq!(m.outputs, m2.outputs);
+    }
+
+    #[test]
+    fn roundtrip_softmax_and_reduce() {
+        let mut b = Builder::new("rt2");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let sm = b.softmax_last(x).unwrap();
+        let r = b.reduce(ReduceKind::Mean, sm, vec![1]).unwrap();
+        let m = b.finish(vec![sm, r]);
+        let m2 = roundtrip(&m);
+        assert_eq!(m.instrs.len(), m2.instrs.len());
+        // Numerics agree (structure-preserving parse).
+        let input = crate::runtime::tensor::Tensor::f32(&[3, 8], (0..24).map(|i| i as f32 * 0.1).collect());
+        let a = crate::runtime::reference::eval_module(&m, &[input.clone()]).unwrap();
+        let c = crate::runtime::reference::eval_module(&m2, &[input]).unwrap();
+        assert!(a.outputs[0].allclose(&c.outputs[0], 1e-6, 1e-6).unwrap());
+    }
+
+    #[test]
+    fn roundtrip_dynamic_twins() {
+        let mut b = Builder::new("rt3");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let st = b.i64_vec(&[1]);
+        let li = b.i64_vec(&[3]);
+        let sr = b.i64_vec(&[1]);
+        let sl = b.dslice(x, st, li, sr).unwrap();
+        let m = b.finish(vec![sl]);
+        let m2 = roundtrip(&m);
+        assert!(m2.instrs.iter().any(|i| matches!(i.op, Op::DSlice)));
+    }
+
+    #[test]
+    fn roundtrip_workload_modules() {
+        // Structural round-trip over the real workload graphs (constants
+        // are re-materialized as zeros; structure and ops must survive).
+        for w in crate::workloads::all() {
+            let m = crate::bridge::lower(&w.graph).unwrap();
+            let text = print_module(&m);
+            let m2 = parse_module(&text)
+                .unwrap_or_else(|e| panic!("{}: parse failed: {e:#}", w.name));
+            assert_eq!(m.instrs.len(), m2.instrs.len(), "{}", w.name);
+            assert_eq!(m.outputs, m2.outputs, "{}", w.name);
+            for (a, bb) in m.instrs.iter().zip(&m2.instrs) {
+                assert_eq!(a.op.name(), bb.op.name(), "{}", w.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_module("garbage").is_err());
+        assert!(parse_module("module @x () -> (%0) {\n  %0 = nope() : f32[]\n}").is_err());
+    }
+}

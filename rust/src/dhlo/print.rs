@@ -1,0 +1,85 @@
+//! Textual form of DHLO modules (for logs, `disc inspect`, and golden tests).
+
+use super::module::Module;
+use super::op::Op;
+use std::fmt::Write as _;
+
+/// Render a module in an HLO-flavoured textual form:
+///
+/// ```text
+/// module @name (arg0: f32[s0,768], arg1: f32[768]) -> (%5) {
+///   %0 = param0 : f32[s0,768]
+///   %1 = add(%0, %0) : f32[s0,768]
+///   ...
+/// }
+/// ```
+pub fn print_module(m: &Module) -> String {
+    let mut out = String::new();
+    let params: Vec<String> =
+        m.params.iter().enumerate().map(|(i, t)| format!("arg{i}: {t}")).collect();
+    let outs: Vec<String> = m.outputs.iter().map(|o| format!("%{o}")).collect();
+    let _ = writeln!(out, "module @{} ({}) -> ({}) {{", m.name, params.join(", "), outs.join(", "));
+    for (id, ins) in m.instrs.iter().enumerate() {
+        let operands: Vec<String> = ins.operands.iter().map(|o| format!("%{o}")).collect();
+        let attrs = attr_string(&ins.op);
+        let name = ins.name.as_deref().map(|n| format!("  // {n}")).unwrap_or_default();
+        let _ = writeln!(
+            out,
+            "  %{id} = {}({}){} : {}{name}",
+            ins.op.name(),
+            operands.join(", "),
+            attrs,
+            ins.ty
+        );
+    }
+    out.push_str("}\n");
+    if !m.syms.is_empty() {
+        out.push_str("// shape symbols:\n");
+        for line in m.syms.dump().lines() {
+            let _ = writeln!(out, "//   {line}");
+        }
+    }
+    out
+}
+
+fn attr_string(op: &Op) -> String {
+    match op {
+        Op::Broadcast { dims } | Op::DBroadcast { dims } => format!(" dims={dims:?}"),
+        Op::Transpose { perm } => format!(" perm={perm:?}"),
+        Op::Concat { axis } => format!(" axis={axis}"),
+        Op::Slice { starts, limits, strides } => {
+            format!(" starts={starts:?} limits={limits:?} strides={strides:?}")
+        }
+        Op::Pad { low, high } => format!(" low={low:?} high={high:?}"),
+        Op::Reduce { axes, .. } => format!(" axes={axes:?}"),
+        Op::Gather { axis } => format!(" axis={axis}"),
+        Op::Iota { axis } => format!(" axis={axis}"),
+        Op::GetDimSize { axis } => format!(" axis={axis}"),
+        Op::Const { dims, .. } => format!(" dims={dims:?}"),
+        _ => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType};
+    use crate::shape::Dim;
+
+    #[test]
+    fn prints_readable_module() {
+        let mut b = Builder::new("demo");
+        let s = b.dyn_dim("seq", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let y = b.unary(crate::dhlo::UnKind::Tanh, x);
+        b.set_name(y, "activation");
+        let z = b.add(x, y).unwrap();
+        let m = b.finish(vec![z]);
+        let text = print_module(&m);
+        assert!(text.contains("module @demo"));
+        assert!(text.contains("tanh(%0) : f32[s0,4]  // activation"));
+        assert!(text.contains("add(%0, %1)"));
+        assert!(text.contains("-> (%2)"));
+        assert!(text.contains("shape symbols"));
+    }
+}

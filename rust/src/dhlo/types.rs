@@ -1,0 +1,218 @@
+//! Tensor element types, tensor types with symbolic dims, and literals.
+
+use crate::shape::{Dim, SymbolTable};
+use std::fmt;
+
+/// Element types supported by the pipeline end-to-end (IR → HLO text → PJRT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I64,
+    I32,
+    /// Boolean / predicate (HLO `pred`).
+    Pred,
+}
+
+impl DType {
+    /// The HLO-text name of this element type.
+    pub fn hlo_name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I64 => "s64",
+            DType::I32 => "s32",
+            DType::Pred => "pred",
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+            DType::Pred => 1,
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, DType::F32)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.hlo_name())
+    }
+}
+
+/// A tensor type: element type plus a (possibly symbolic) dim vector.
+/// DISC targets dynamic *shapes* with static *rank* (§2), so the rank is
+/// always known here.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub dtype: DType,
+    pub dims: Vec<Dim>,
+}
+
+impl TensorType {
+    pub fn new(dtype: DType, dims: Vec<Dim>) -> Self {
+        TensorType { dtype, dims }
+    }
+
+    /// Fully-static tensor type.
+    pub fn fixed(dtype: DType, dims: &[usize]) -> Self {
+        TensorType { dtype, dims: dims.iter().map(|&d| Dim::Fixed(d)).collect() }
+    }
+
+    pub fn scalar(dtype: DType) -> Self {
+        TensorType { dtype, dims: vec![] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn is_static(&self) -> bool {
+        self.dims.iter().all(|d| !d.is_dynamic())
+    }
+
+    /// Element count if fully static (`Some(1)` for scalars, `None` if any
+    /// dim is symbolic).
+    pub fn static_elems(&self) -> Option<usize> {
+        self.dims.iter().map(|d| d.fixed()).product::<Option<usize>>()
+    }
+
+    /// Canonicalize all dims through the symbol table (used when comparing
+    /// shapes for fusion decisions).
+    pub fn canon(&self, syms: &SymbolTable) -> TensorType {
+        TensorType {
+            dtype: self.dtype,
+            dims: self.dims.iter().map(|&d| syms.canon_dim(d)).collect(),
+        }
+    }
+}
+
+impl fmt::Display for TensorType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[", self.dtype)?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// A constant tensor value (always fully static).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32(Vec<f32>),
+    I64(Vec<i64>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Literal {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Literal::F32(_) => DType::F32,
+            Literal::I64(_) => DType::I64,
+            Literal::I32(_) => DType::I32,
+            Literal::Pred(_) => DType::Pred,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Literal::F32(v) => v.len(),
+            Literal::I64(v) => v.len(),
+            Literal::I32(v) => v.len(),
+            Literal::Pred(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal::F32(vec![v])
+    }
+
+    pub fn scalar_i64(v: i64) -> Literal {
+        Literal::I64(vec![v])
+    }
+
+    /// Render elements in HLO-text constant syntax (flat list; the caller
+    /// adds the braces appropriate to the rank).
+    pub fn hlo_elems(&self) -> Vec<String> {
+        match self {
+            Literal::F32(v) => v.iter().map(|x| format_f32_hlo(*x)).collect(),
+            Literal::I64(v) => v.iter().map(|x| x.to_string()).collect(),
+            Literal::I32(v) => v.iter().map(|x| x.to_string()).collect(),
+            Literal::Pred(v) => v.iter().map(|x| if *x { "true".into() } else { "false".into() }).collect(),
+        }
+    }
+}
+
+/// HLO text floats must round-trip exactly; `{:?}` gives shortest-precise
+/// formatting for f32 and HLO's parser accepts it (inf/nan spelled out).
+pub fn format_f32_hlo(x: f32) -> String {
+    if x.is_infinite() {
+        return if x > 0.0 { "inf".into() } else { "-inf".into() };
+    }
+    if x.is_nan() {
+        return "nan".into();
+    }
+    let s = format!("{x:?}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shape::{ShapeExpr, SymbolTable};
+
+    #[test]
+    fn display_forms() {
+        let t = TensorType::fixed(DType::F32, &[2, 3]);
+        assert_eq!(t.to_string(), "f32[2,3]");
+        let mut syms = SymbolTable::new();
+        let s = syms.fresh("seq", ShapeExpr::InputDim { param: 0, axis: 0 });
+        let d = TensorType::new(DType::F32, vec![Dim::Sym(s), Dim::Fixed(768)]);
+        assert_eq!(d.to_string(), "f32[s0,768]");
+        assert!(!d.is_static());
+        assert!(t.is_static());
+    }
+
+    #[test]
+    fn static_elems() {
+        assert_eq!(TensorType::fixed(DType::F32, &[2, 3]).static_elems(), Some(6));
+        assert_eq!(TensorType::scalar(DType::I64).static_elems(), Some(1));
+        let mut syms = SymbolTable::new();
+        let s = syms.fresh("n", ShapeExpr::InputDim { param: 0, axis: 0 });
+        let d = TensorType::new(DType::F32, vec![Dim::Sym(s)]);
+        assert_eq!(d.static_elems(), None);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(format_f32_hlo(1.0), "1.0");
+        assert_eq!(format_f32_hlo(-0.5), "-0.5");
+        assert_eq!(format_f32_hlo(f32::INFINITY), "inf");
+        assert_eq!(format_f32_hlo(f32::NEG_INFINITY), "-inf");
+        // Round-trips through parse.
+        let v = 0.1234567f32;
+        assert_eq!(format_f32_hlo(v).parse::<f32>().unwrap(), v);
+    }
+
+    #[test]
+    fn literal_basics() {
+        let l = Literal::F32(vec![1.0, 2.5]);
+        assert_eq!(l.dtype(), DType::F32);
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.hlo_elems(), vec!["1.0", "2.5"]);
+        let b = Literal::Pred(vec![true, false]);
+        assert_eq!(b.hlo_elems(), vec!["true", "false"]);
+    }
+}

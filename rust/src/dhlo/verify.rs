@@ -1,0 +1,214 @@
+//! Structural verifier for DHLO modules.
+//!
+//! The builder already enforces per-op typing; the verifier re-checks global
+//! invariants that passes could break: SSA dominance (operands precede
+//! users), output validity, parameter indexing, shape-operand typing of the
+//! dynamic twins, and rank agreement between an instruction's recorded type
+//! and its op's expectations.
+
+use super::module::Module;
+use super::op::Op;
+use super::types::DType;
+use anyhow::{bail, ensure, Result};
+
+/// Verify a module, returning the first violated invariant as an error.
+pub fn verify(m: &Module) -> Result<()> {
+    let n = m.instrs.len();
+    let mut param_seen = vec![false; m.params.len()];
+
+    for (id, ins) in m.instrs.iter().enumerate() {
+        // SSA: operands must be defined earlier (topological order).
+        for &o in &ins.operands {
+            ensure!(o < id, "instr %{id}: operand %{o} does not dominate it");
+        }
+
+        match &ins.op {
+            Op::Param { index } => {
+                ensure!(*index < m.params.len(), "%{id}: parameter index {index} out of range");
+                ensure!(!param_seen[*index], "%{id}: duplicate parameter {index}");
+                ensure!(
+                    m.params[*index] == ins.ty,
+                    "%{id}: parameter type {} disagrees with signature {}",
+                    ins.ty,
+                    m.params[*index]
+                );
+                param_seen[*index] = true;
+                ensure!(ins.operands.is_empty(), "%{id}: parameter takes no operands");
+            }
+            Op::Const { lit, dims } => {
+                let want: usize = dims.iter().product::<usize>().max(1);
+                ensure!(lit.len() == want, "%{id}: constant literal length mismatch");
+                ensure!(ins.ty.is_static(), "%{id}: constants must be static");
+            }
+            Op::Un(_) => ensure!(ins.operands.len() == 1, "%{id}: unary arity"),
+            Op::Bin(_) | Op::Cmp(_) => {
+                ensure!(ins.operands.len() == 2, "%{id}: binary arity");
+                let (a, b) = (ins.operands[0], ins.operands[1]);
+                ensure!(
+                    m.ty(a).rank() == m.ty(b).rank() && m.ty(a).rank() == ins.ty.rank(),
+                    "%{id}: elementwise rank mismatch"
+                );
+                if matches!(ins.op, Op::Cmp(_)) {
+                    ensure!(ins.ty.dtype == DType::Pred, "%{id}: compare must produce pred");
+                }
+            }
+            Op::Select => {
+                ensure!(ins.operands.len() == 3, "%{id}: select arity");
+                ensure!(
+                    m.ty(ins.operands[0]).dtype == DType::Pred,
+                    "%{id}: select predicate must be pred"
+                );
+            }
+            Op::Convert(t) => {
+                ensure!(ins.operands.len() == 1, "%{id}: convert arity");
+                ensure!(ins.ty.dtype == *t, "%{id}: convert type mismatch");
+            }
+            Op::Broadcast { dims } => {
+                ensure!(ins.operands.len() == 1, "%{id}: broadcast arity");
+                let xin = m.ty(ins.operands[0]);
+                ensure!(dims.len() == xin.rank(), "%{id}: broadcast mapping rank");
+                for &d in dims {
+                    ensure!(d < ins.ty.rank(), "%{id}: broadcast mapping out of range");
+                }
+            }
+            Op::DBroadcast { .. } | Op::DReshape => {
+                ensure!(ins.operands.len() == 2, "%{id}: dynamic-twin arity");
+                ensure!(
+                    m.ty(ins.operands[1]).dtype == DType::I64,
+                    "%{id}: shape operand must be s64"
+                );
+            }
+            Op::Transpose { perm } => {
+                ensure!(ins.operands.len() == 1, "%{id}: transpose arity");
+                ensure!(
+                    perm.len() == m.ty(ins.operands[0]).rank(),
+                    "%{id}: transpose perm rank"
+                );
+            }
+            Op::Reshape => ensure!(ins.operands.len() == 1, "%{id}: reshape arity"),
+            Op::Concat { axis } => {
+                ensure!(!ins.operands.is_empty(), "%{id}: concat needs operands");
+                ensure!(*axis < ins.ty.rank(), "%{id}: concat axis");
+            }
+            Op::Slice { starts, limits, strides } => {
+                let r = m.ty(ins.operands[0]).rank();
+                ensure!(
+                    starts.len() == r && limits.len() == r && strides.len() == r,
+                    "%{id}: slice attr rank"
+                );
+            }
+            Op::DSlice => {
+                ensure!(ins.operands.len() == 4, "%{id}: dslice arity");
+                for &slot in &[1usize, 2, 3] {
+                    ensure!(
+                        m.ty(ins.operands[slot]).dtype == DType::I64,
+                        "%{id}: dslice index operand {slot} must be s64"
+                    );
+                }
+            }
+            Op::Pad { low, high } => {
+                ensure!(ins.operands.len() == 2, "%{id}: pad arity");
+                let r = m.ty(ins.operands[0]).rank();
+                ensure!(low.len() == r && high.len() == r, "%{id}: pad widths rank");
+            }
+            Op::DPad => {
+                ensure!(ins.operands.len() == 4, "%{id}: dpad arity");
+                ensure!(
+                    m.ty(ins.operands[2]).dtype == DType::I64
+                        && m.ty(ins.operands[3]).dtype == DType::I64,
+                    "%{id}: dpad widths must be s64"
+                );
+            }
+            Op::Reduce { axes, .. } => {
+                let r = m.ty(ins.operands[0]).rank();
+                for &a in axes {
+                    ensure!(a < r, "%{id}: reduce axis out of range");
+                }
+                ensure!(ins.ty.rank() == r - axes.len(), "%{id}: reduce output rank");
+            }
+            Op::Dot => {
+                ensure!(ins.operands.len() == 2, "%{id}: dot arity");
+                let (ra, rb) = (m.ty(ins.operands[0]).rank(), m.ty(ins.operands[1]).rank());
+                ensure!(
+                    (ra == 2 && rb == 2) || (ra == 3 && rb == 3),
+                    "%{id}: dot rank {ra}x{rb}"
+                );
+            }
+            Op::Gather { axis } => {
+                ensure!(ins.operands.len() == 2, "%{id}: gather arity");
+                ensure!(*axis < m.ty(ins.operands[0]).rank(), "%{id}: gather axis");
+                ensure!(
+                    m.ty(ins.operands[1]).dtype == DType::I64,
+                    "%{id}: gather indices must be s64"
+                );
+            }
+            Op::Iota { axis } => {
+                ensure!(*axis < ins.ty.rank().max(1), "%{id}: iota axis");
+            }
+            Op::Unique => {
+                ensure!(ins.operands.len() == 1, "%{id}: unique arity");
+                ensure!(
+                    m.ty(ins.operands[0]).dtype == DType::I64,
+                    "%{id}: unique wants s64 input"
+                );
+            }
+            Op::GetDimSize { axis } => {
+                ensure!(*axis < m.ty(ins.operands[0]).rank(), "%{id}: get_dim_size axis");
+                ensure!(ins.ty.rank() == 0, "%{id}: get_dim_size must be scalar");
+            }
+        }
+    }
+
+    for &o in &m.outputs {
+        if o >= n {
+            bail!("output %{o} out of range");
+        }
+    }
+    ensure!(!m.outputs.is_empty(), "module has no outputs");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::shape::Dim;
+
+    #[test]
+    fn accepts_wellformed() {
+        let mut b = Builder::new("ok");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let y = b.unary(UnKind::Exp, x);
+        let m = b.finish(vec![y]);
+        verify(&m).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_output() {
+        let mut b = Builder::new("bad");
+        let x = b.param(DType::F32, vec![Dim::Fixed(2)]);
+        let mut m = b.finish(vec![x]);
+        m.outputs = vec![99];
+        assert!(verify(&m).is_err());
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let mut b = Builder::new("bad");
+        let x = b.param(DType::F32, vec![Dim::Fixed(2)]);
+        let y = b.unary(UnKind::Exp, x);
+        let mut m = b.finish(vec![y]);
+        // Corrupt: make the unary reference a later id.
+        m.instrs[1].operands[0] = 1;
+        assert!(verify(&m).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_outputs() {
+        let mut b = Builder::new("bad");
+        let _ = b.param(DType::F32, vec![Dim::Fixed(2)]);
+        let m = b.finish(vec![]);
+        assert!(verify(&m).is_err());
+    }
+}

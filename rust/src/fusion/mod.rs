@@ -1,0 +1,422 @@
+//! Kernel fusion planning without full shape information (§4.3).
+//!
+//! The planner clusters memory-intensive ops into fusion groups using two
+//! *shape hints*, mirroring the paper:
+//!
+//! 1. **Shape propagation** — structural equality of symbolic dim vectors
+//!    between producers and consumers (the per-op propagation table lives in
+//!    [`crate::dhlo::op::Op::prop_class`]).
+//! 2. **Shape constraints** — the dimension-equality (union-find closure)
+//!    and tensor-size-equality classes collected at lowering time (§4.2.1).
+//!    These widen the fusion scope beyond what pure propagation can prove;
+//!    [`FusionOptions::use_constraints`] toggles them for the ablation bench.
+//!
+//! Two templates are used, as in the paper: classic **loop fusion** with an
+//! elementwise root, and **input fusion** with a reduce root. Compute
+//! intensive ops (`Dot`) never fuse — they go through the library (§4.5).
+
+pub mod signature;
+
+use crate::dhlo::{Module, Op, ValueId};
+use std::collections::HashMap;
+
+/// Fusion template kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupKind {
+    /// Elementwise root; every member shares the root's iteration domain.
+    Loop,
+    /// Reduce root; producers share the reduce *input* domain.
+    Input,
+}
+
+/// One fusion group: a connected set of instructions compiled into a single
+/// kernel whose only escaping value is `root`.
+#[derive(Debug, Clone)]
+pub struct FusionGroup {
+    pub id: usize,
+    pub kind: GroupKind,
+    /// Members in topological (ascending id) order; the root is last.
+    pub members: Vec<ValueId>,
+    pub root: ValueId,
+}
+
+impl FusionGroup {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+    pub fn contains(&self, v: ValueId) -> bool {
+        self.members.contains(&v)
+    }
+}
+
+/// Planner options (ablation knobs).
+#[derive(Debug, Clone)]
+pub struct FusionOptions {
+    /// Use collected shape constraints (union-find closure + size classes)
+    /// in addition to structural propagation. Paper default: on.
+    pub use_constraints: bool,
+    /// Allow reduce-rooted input fusion. Paper default: on.
+    pub enable_input_fusion: bool,
+    /// Upper bound on members per group (guards pathological graphs).
+    pub max_group_size: usize,
+    /// Disable fusion entirely (framework-eager comparison).
+    pub enabled: bool,
+}
+
+impl Default for FusionOptions {
+    fn default() -> Self {
+        FusionOptions {
+            use_constraints: true,
+            enable_input_fusion: true,
+            max_group_size: 64,
+            enabled: true,
+        }
+    }
+}
+
+/// The fusion plan over a module.
+#[derive(Debug, Clone)]
+pub struct FusionPlan {
+    pub groups: Vec<FusionGroup>,
+    /// instr id → group index (None for non-fused ops: params, constants,
+    /// compute-intensive ops, host shape ops, …).
+    pub membership: Vec<Option<usize>>,
+}
+
+impl FusionPlan {
+    /// Device-kernel launch count implied by the plan: one per group plus
+    /// one per unfused memory-intensive tensor op.
+    pub fn kernel_count(&self, m: &Module) -> usize {
+        let fused: usize = self.groups.len();
+        let unfused = m
+            .instrs
+            .iter()
+            .enumerate()
+            .filter(|(id, ins)| {
+                self.membership[*id].is_none()
+                    && !matches!(ins.op, Op::Param { .. } | Op::Const { .. })
+                    && !ins.op.is_compute_intensive()
+            })
+            .count();
+        fused + unfused
+    }
+
+    pub fn group_of(&self, v: ValueId) -> Option<&FusionGroup> {
+        self.membership[v].map(|g| &self.groups[g])
+    }
+}
+
+/// Shape-compatibility between a candidate and a group's iteration domain.
+fn compatible(m: &Module, cand: ValueId, domain: ValueId, opts: &FusionOptions) -> bool {
+    let (tc, td) = (m.ty(cand), m.ty(domain));
+    if tc.dims.len() == td.dims.len() && tc.dims == td.dims {
+        // Structural (propagation) equality — identical symbols/extents.
+        return true;
+    }
+    if opts.use_constraints {
+        // Constraint closure: canonicalized dim equality, or recorded
+        // tensor-size equality (e.g. across Reshape/Transpose).
+        if m.syms.shapes_equal(&tc.dims, &td.dims) {
+            return true;
+        }
+        if m.same_size(cand, domain) {
+            return true;
+        }
+    } else {
+        // Propagation-only fallback for static shapes.
+        if let (Some(a), Some(b)) = (tc.static_elems(), td.static_elems()) {
+            if a == b && tc.rank() == td.rank() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// The iteration domain a joining producer must match: the reduce *input*
+/// for input-fusion groups, the root output for loop groups.
+fn group_domain(m: &Module, g: &FusionGroup) -> ValueId {
+    match g.kind {
+        GroupKind::Input => m.instrs[g.root].operands[0],
+        GroupKind::Loop => g.root,
+    }
+}
+
+/// Values whose contents feed shape-operand slots anywhere in the module
+/// (these are host-side shape calculations and must not fuse into device
+/// kernels), transitively closed over producers.
+pub fn host_shape_values(m: &Module) -> Vec<bool> {
+    let mut host = vec![false; m.instrs.len()];
+    let mut stack = Vec::new();
+    for ins in &m.instrs {
+        for &slot in ins.op.shape_operand_slots() {
+            stack.push(ins.operands[slot]);
+        }
+    }
+    // GetDimSize results are host values by construction.
+    for (id, ins) in m.instrs.iter().enumerate() {
+        if matches!(ins.op, Op::GetDimSize { .. }) {
+            stack.push(id);
+        }
+    }
+    while let Some(v) = stack.pop() {
+        if host[v] {
+            continue;
+        }
+        host[v] = true;
+        for &o in &m.instrs[v].operands {
+            stack.push(o);
+        }
+    }
+    host
+}
+
+/// Plan fusion groups for a module.
+pub fn plan(m: &Module, opts: &FusionOptions) -> FusionPlan {
+    let n = m.instrs.len();
+    let mut membership: Vec<Option<usize>> = vec![None; n];
+    let mut groups: Vec<FusionGroup> = Vec::new();
+    if !opts.enabled {
+        return FusionPlan { groups, membership };
+    }
+
+    let users = m.users();
+    let host = host_shape_values(m);
+    let is_output: Vec<bool> = {
+        let mut v = vec![false; n];
+        for &o in &m.outputs {
+            v[o] = true;
+        }
+        v
+    };
+
+    // Reverse topological sweep: try to merge each instruction into the
+    // (unique) group of its consumers; otherwise root a new group.
+    for id in (0..n).rev() {
+        let ins = &m.instrs[id];
+        if host[id]
+            || !ins.op.is_fusable()
+            || matches!(ins.op, Op::Param { .. } | Op::Const { .. })
+        {
+            continue;
+        }
+        let is_reduce = matches!(ins.op, Op::Reduce { .. });
+        if is_reduce && !opts.enable_input_fusion {
+            continue;
+        }
+
+        // Collect consumer groups. An escaping use (module output, unfused
+        // user, user in no group yet) forces this instr to be a root.
+        let mut consumer_groups: Vec<usize> = Vec::new();
+        let mut escapes = is_output[id];
+        for &u in &users[id] {
+            match membership[u] {
+                Some(g) => consumer_groups.push(g),
+                None => escapes = true,
+            }
+        }
+        consumer_groups.sort_unstable();
+        consumer_groups.dedup();
+
+        let joinable = !escapes
+            && consumer_groups.len() == 1
+            && !is_reduce  // reduce may only root an input fusion
+            && {
+                let g = &groups[consumer_groups[0]];
+                g.len() < opts.max_group_size
+                    && compatible(m, id, group_domain(m, g), opts)
+            };
+
+        if joinable {
+            let gid = consumer_groups[0];
+            groups[gid].members.push(id);
+            membership[id] = Some(gid);
+        } else if (!users[id].is_empty() || is_output[id])
+            // pred never crosses the kernel boundary (no pred literal I/O),
+            // and reshapes are free bitcasts handled by the executor.
+            && ins.ty.dtype != crate::dhlo::DType::Pred
+            && !matches!(ins.op, Op::Reshape | Op::DReshape)
+        {
+            let kind = if is_reduce { GroupKind::Input } else { GroupKind::Loop };
+            let gid = groups.len();
+            groups.push(FusionGroup { id: gid, kind, members: vec![id], root: id });
+            membership[id] = Some(gid);
+        }
+    }
+
+    // Members were pushed in reverse order; normalize to ascending (topo).
+    for g in &mut groups {
+        g.members.sort_unstable();
+    }
+    FusionPlan { groups, membership }
+}
+
+/// Per-plan statistics for metrics and the bench reports.
+#[derive(Debug, Clone, Default)]
+pub struct FusionStats {
+    pub groups: usize,
+    pub fused_ops: usize,
+    pub singleton_groups: usize,
+    pub largest_group: usize,
+    pub input_fusions: usize,
+}
+
+pub fn stats(plan: &FusionPlan) -> FusionStats {
+    let mut s = FusionStats { groups: plan.groups.len(), ..Default::default() };
+    let mut sizes: HashMap<usize, usize> = HashMap::new();
+    for g in &plan.groups {
+        sizes.insert(g.id, g.len());
+        s.fused_ops += g.len();
+        if g.len() == 1 {
+            s.singleton_groups += 1;
+        }
+        s.largest_group = s.largest_group.max(g.len());
+        if g.kind == GroupKind::Input {
+            s.input_fusions += 1;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::shape::Dim;
+
+    fn softmax_module() -> Module {
+        let mut b = Builder::new("softmax");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let y = b.softmax_last(x).unwrap();
+        b.finish(vec![y])
+    }
+
+    #[test]
+    fn elementwise_chain_fuses_into_one_group() {
+        let mut b = Builder::new("chain");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let a = b.unary(UnKind::Tanh, x);
+        let c = b.unary(UnKind::Exp, a);
+        let d = b.add(a, c).unwrap();
+        let m = b.finish(vec![d]);
+        let p = plan(&m, &FusionOptions::default());
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].len(), 3);
+        assert_eq!(p.groups[0].root, d);
+        assert_eq!(p.kernel_count(&m), 1);
+    }
+
+    #[test]
+    fn softmax_splits_at_reduces() {
+        let m = softmax_module();
+        let p = plan(&m, &FusionOptions::default());
+        // Softmax = max-reduce, sub/exp chain, sum-reduce, div chain:
+        // reduces root their own input-fusion groups.
+        let input_fusions = p.groups.iter().filter(|g| g.kind == GroupKind::Input).count();
+        assert_eq!(input_fusions, 2, "max and sum reduces each root a group");
+        // Far fewer kernels than ops.
+        let total_ops = m.memory_intensive_count();
+        assert!(p.kernel_count(&m) < total_ops);
+    }
+
+    #[test]
+    fn input_fusion_pulls_producers_into_reduce() {
+        let mut b = Builder::new("redroot");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let e = b.unary(UnKind::Exp, x);
+        let t = b.unary(UnKind::Tanh, e);
+        let r = b.reduce(crate::dhlo::ReduceKind::Sum, t, vec![1]).unwrap();
+        let m = b.finish(vec![r]);
+        let p = plan(&m, &FusionOptions::default());
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].kind, GroupKind::Input);
+        assert_eq!(p.groups[0].len(), 3);
+    }
+
+    #[test]
+    fn no_input_fusion_when_disabled() {
+        let mut b = Builder::new("redroot");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let e = b.unary(UnKind::Exp, x);
+        let r = b.reduce(crate::dhlo::ReduceKind::Sum, e, vec![1]).unwrap();
+        let m = b.finish(vec![r]);
+        let opts = FusionOptions { enable_input_fusion: false, ..Default::default() };
+        let p = plan(&m, &opts);
+        // The reduce stays unfused; exp roots its own group.
+        assert!(p.membership[r].is_none());
+        assert_eq!(p.groups.len(), 1);
+    }
+
+    #[test]
+    fn constraints_widen_fusion_scope() {
+        // tanh(x)[s,4] --transpose--> [4,s] --exp--> root.
+        // The tanh output's dim vector ([s,4]) differs structurally from
+        // the group domain ([4,s]), so joining it needs the recorded
+        // tensor-size equality (transpose size propagation). Without
+        // constraints the tanh stays out of the group.
+        let mut b = Builder::new("c");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let t = b.unary(UnKind::Tanh, x);
+        let tr = b.transpose(t, vec![1, 0]).unwrap();
+        let e = b.unary(UnKind::Exp, tr);
+        let m = b.finish(vec![e]);
+
+        let with = plan(&m, &FusionOptions::default());
+        let without =
+            plan(&m, &FusionOptions { use_constraints: false, ..Default::default() });
+        let t_with = with.membership[t].is_some() && with.membership[t] == with.membership[e];
+        let t_without =
+            without.membership[t].is_some() && without.membership[t] == without.membership[e];
+        assert!(t_with, "constraints should fuse tanh across the transpose");
+        assert!(!t_without, "without constraints the tanh cannot join");
+    }
+
+    #[test]
+    fn fusion_disabled_yields_empty_plan() {
+        let m = softmax_module();
+        let p = plan(&m, &FusionOptions { enabled: false, ..Default::default() });
+        assert!(p.groups.is_empty());
+        assert_eq!(p.kernel_count(&m), m.memory_intensive_count());
+    }
+
+    #[test]
+    fn dot_never_fuses() {
+        let mut b = Builder::new("d");
+        let s = b.dyn_dim("m", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let w = b.param(DType::F32, vec![Dim::Fixed(8), Dim::Fixed(8)]);
+        let d = b.dot(x, w).unwrap();
+        let y = b.unary(UnKind::Relu, d);
+        let m = b.finish(vec![y]);
+        let p = plan(&m, &FusionOptions::default());
+        assert!(p.membership[d].is_none());
+        assert!(p.membership[y].is_some());
+    }
+
+    #[test]
+    fn host_shape_values_not_fused() {
+        let mut b = Builder::new("h");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let st = b.i64_vec(&[0]);
+        let li = b.i64_vec(&[2]);
+        let sr = b.i64_vec(&[1]);
+        // An i64 computation feeding the slice bounds: host-side.
+        let li2 = b.add(li, sr).unwrap();
+        let sl = b.dslice(x, st, li2, sr).unwrap();
+        let m = b.finish(vec![sl]);
+        let host = host_shape_values(&m);
+        assert!(host[li2] && host[li] && host[sr] && host[st]);
+        assert!(!host[sl] && !host[x]);
+        let p = plan(&m, &FusionOptions::default());
+        assert!(p.membership[li2].is_none(), "host shape math must not fuse");
+    }
+}

@@ -1,0 +1,207 @@
+//! Shape-agnostic fusion-pattern signatures — the cache key that lets DISC
+//! compile a fusion *once* and reuse it for every shape (§2: "we do not need
+//! to consider shape information to check whether two fusion patterns are
+//! the same for code generation").
+//!
+//! The signature canonicalizes a fusion group: members are relabelled in
+//! topological order, external inputs become numbered slots typed only by
+//! `(dtype, rank, dynamic-axis bitmask)`, and op attributes that are *not*
+//! shape values (permutations, reduce axes, broadcast mappings) are kept.
+//! Concrete extents never appear, so `f32[17,768]` and `f32[512,768]`
+//! produce the same signature.
+
+use crate::dhlo::{Module, Op, ValueId};
+use crate::fusion::FusionGroup;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// External input to a fusion group: a value produced outside the group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExternalInput {
+    pub value: ValueId,
+    /// Which axes of this input are dynamic (per canonical symbol identity
+    /// *within the group*, so shared dims keep their sharing).
+    pub dyn_axes: Vec<bool>,
+}
+
+/// Enumerate the group's external inputs in first-use order.
+pub fn external_inputs(m: &Module, g: &FusionGroup) -> Vec<ExternalInput> {
+    let mut seen = HashMap::new();
+    let mut out = Vec::new();
+    for &v in &g.members {
+        for &o in &m.instrs[v].operands {
+            if !g.contains(o) && !seen.contains_key(&o) {
+                seen.insert(o, out.len());
+                let dyn_axes = m
+                    .ty(o)
+                    .dims
+                    .iter()
+                    .map(|&d| m.syms.canon_dim(d).is_dynamic())
+                    .collect();
+                out.push(ExternalInput { value: o, dyn_axes });
+            }
+        }
+    }
+    out
+}
+
+/// Compute the shape-agnostic signature string for a fusion group.
+///
+/// Two groups with the same signature generate identical kernel code modulo
+/// the bucketed extents, so they share a compiled-executable cache entry per
+/// bucket (the paper's "no recompilation for new shapes" property).
+pub fn signature(m: &Module, g: &FusionGroup) -> String {
+    let externals = external_inputs(m, g);
+    let ext_index: HashMap<ValueId, usize> =
+        externals.iter().enumerate().map(|(i, e)| (e.value, i)).collect();
+    let member_index: HashMap<ValueId, usize> =
+        g.members.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+
+    // Local symbol numbering: canonical symbols in first-appearance order
+    // across external inputs and member types. This keeps *sharing*
+    // information (same dynamic extent reused) without leaking values.
+    let mut sym_ids: HashMap<crate::shape::SymId, usize> = HashMap::new();
+    let mut dim_str = |m: &Module, d: crate::shape::Dim| -> String {
+        match m.syms.canon_dim(d) {
+            crate::shape::Dim::Fixed(n) => n.to_string(),
+            crate::shape::Dim::Sym(s) => {
+                let next = sym_ids.len();
+                let k = *sym_ids.entry(s).or_insert(next);
+                format!("d{k}")
+            }
+        }
+    };
+
+    let mut out = String::new();
+    let _ = write!(out, "kind={:?};", g.kind);
+    for (i, e) in externals.iter().enumerate() {
+        let t = m.ty(e.value);
+        let dims: Vec<String> = t.dims.iter().map(|&d| dim_str(m, d)).collect();
+        let _ = write!(out, "e{i}:{}[{}];", t.dtype, dims.join(","));
+    }
+    for &v in &g.members {
+        let ins = &m.instrs[v];
+        let ops: Vec<String> = ins
+            .operands
+            .iter()
+            .map(|o| {
+                if let Some(&k) = member_index.get(o) {
+                    format!("m{k}")
+                } else {
+                    format!("e{}", ext_index[o])
+                }
+            })
+            .collect();
+        let dims: Vec<String> = ins.ty.dims.iter().map(|&d| dim_str(m, d)).collect();
+        let _ = write!(
+            out,
+            "m{}={}({})[{}]{};",
+            member_index[&v],
+            ins.op.name(),
+            ops.join(","),
+            dims.join(","),
+            attr_sig(&ins.op)
+        );
+    }
+    let _ = write!(out, "root=m{}", member_index[&g.root]);
+    out
+}
+
+fn attr_sig(op: &Op) -> String {
+    match op {
+        Op::Broadcast { dims } | Op::DBroadcast { dims } => format!("{{bd={dims:?}}}"),
+        Op::Transpose { perm } => format!("{{p={perm:?}}}"),
+        Op::Concat { axis } => format!("{{a={axis}}}"),
+        Op::Reduce { axes, .. } => format!("{{ax={axes:?}}}"),
+        Op::Gather { axis } => format!("{{a={axis}}}"),
+        Op::Iota { axis } => format!("{{a={axis}}}"),
+        // Static slice/pad attrs ARE shape values; including them would make
+        // the signature shape-dependent. Static-shaped ops only reach fused
+        // codegen through the static pipeline, which keys by shape anyway.
+        Op::Slice { starts, limits, strides } => format!("{{s={starts:?},{limits:?},{strides:?}}}"),
+        Op::Pad { low, high } => format!("{{p={low:?},{high:?}}}"),
+        _ => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType, Module, UnKind};
+    use crate::fusion::{plan, FusionOptions};
+    use crate::shape::Dim;
+
+    /// Build the same pattern twice with different static hints to verify
+    /// shape-agnosticism over *dynamic* dims.
+    fn chain_module(hidden: usize) -> Module {
+        let mut b = Builder::new("sig");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(hidden)]);
+        let t = b.unary(UnKind::Tanh, x);
+        let y = b.add(x, t).unwrap();
+        b.finish(vec![y])
+    }
+
+    #[test]
+    fn same_pattern_same_signature() {
+        let m1 = chain_module(64);
+        let m2 = chain_module(64);
+        let p1 = plan(&m1, &FusionOptions::default());
+        let p2 = plan(&m2, &FusionOptions::default());
+        assert_eq!(signature(&m1, &p1.groups[0]), signature(&m2, &p2.groups[0]));
+    }
+
+    #[test]
+    fn different_static_dim_different_signature() {
+        // The static hidden size is part of codegen, so it differs.
+        let m1 = chain_module(64);
+        let m2 = chain_module(128);
+        let p1 = plan(&m1, &FusionOptions::default());
+        let p2 = plan(&m2, &FusionOptions::default());
+        assert_ne!(signature(&m1, &p1.groups[0]), signature(&m2, &p2.groups[0]));
+    }
+
+    #[test]
+    fn dynamic_dims_are_anonymous() {
+        let m = chain_module(64);
+        let p = plan(&m, &FusionOptions::default());
+        let sig = signature(&m, &p.groups[0]);
+        assert!(sig.contains("d0"), "dynamic dims appear as local ids: {sig}");
+        assert!(!sig.contains("s0"), "raw symbol names must not leak: {sig}");
+    }
+
+    #[test]
+    fn different_ops_different_signature() {
+        let mut b = Builder::new("a");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let t = b.unary(UnKind::Tanh, x);
+        let m1 = b.finish(vec![t]);
+
+        let mut b2 = Builder::new("b");
+        let s2 = b2.dyn_dim("n", 0, 0);
+        let x2 = b2.param(DType::F32, vec![s2]);
+        let t2 = b2.unary(UnKind::Exp, x2);
+        let m2 = b2.finish(vec![t2]);
+
+        let p1 = plan(&m1, &FusionOptions::default());
+        let p2 = plan(&m2, &FusionOptions::default());
+        assert_ne!(signature(&m1, &p1.groups[0]), signature(&m2, &p2.groups[0]));
+    }
+
+    #[test]
+    fn external_inputs_in_first_use_order() {
+        let mut b = Builder::new("x");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let y = b.param(DType::F32, vec![Dim::Fixed(1)]);
+        let ybc = b.broadcast(y, vec![s], vec![0]).unwrap();
+        let z = b.add(x, ybc).unwrap();
+        let m = b.finish(vec![z]);
+        let p = plan(&m, &FusionOptions::default());
+        let g = p.groups.iter().find(|g| g.contains(z)).unwrap();
+        let ext = external_inputs(&m, g);
+        assert_eq!(ext.len(), 2);
+        assert!(ext[0].dyn_axes[0] || ext[1].dyn_axes[0]);
+    }
+}

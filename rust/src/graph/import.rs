@@ -1,0 +1,445 @@
+//! JSON graph import/export — the multi-framework frontend surface (§4.4).
+//!
+//! Graphs arrive as JSON in either a TensorFlow-flavoured or a
+//! PyTorch-flavoured op vocabulary; both alias onto the same [`GOp`] set,
+//! with DHLO as the hub IR underneath — "this intermediate layer simplifies
+//! the adaptation". Edges are `"node"` or `"node:port"` strings.
+
+use crate::dhlo::{BinKind, CmpDir, DType, Literal, ReduceKind, UnKind};
+use crate::graph::{Edge, GOp, Graph, Node};
+use crate::util::json::{self, Value};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    Ok(match s {
+        "f32" | "float32" | "float" | "torch.float32" => DType::F32,
+        "i64" | "s64" | "int64" | "torch.int64" | "torch.long" => DType::I64,
+        "i32" | "s32" | "int32" | "torch.int32" => DType::I32,
+        "bool" | "pred" | "torch.bool" => DType::Pred,
+        other => bail!("unknown dtype '{other}'"),
+    })
+}
+
+/// Op-name aliases: TF names, PyTorch names, and the native names all map
+/// onto the same framework op. (Attribute spellings are shared.)
+fn parse_op(kind: &str, v: &Value) -> Result<GOp> {
+    let axis = || v.get("axis").as_usize().unwrap_or(0);
+    let axes = || -> Vec<usize> {
+        v.get("axes")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default()
+    };
+    let i64s = |key: &str| -> Vec<i64> {
+        v.get(key)
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_i64()).collect())
+            .unwrap_or_default()
+    };
+    let usizes = |key: &str| -> Vec<usize> {
+        v.get(key)
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default()
+    };
+
+    Ok(match kind {
+        "Placeholder" | "torch.placeholder" | "input" => GOp::Placeholder {
+            dtype: parse_dtype(v.get("dtype").as_str().unwrap_or("f32"))?,
+            dims: i64s("dims"),
+        },
+        "Const" | "torch.tensor" => {
+            let dims = usizes("dims");
+            let dtype = parse_dtype(v.get("dtype").as_str().unwrap_or("f32"))?;
+            let vals = v.get("values").as_arr().context("Const needs values")?;
+            let lit = match dtype {
+                DType::F32 => Literal::F32(
+                    vals.iter().map(|x| x.as_f64().unwrap_or(0.0) as f32).collect(),
+                ),
+                DType::I64 => {
+                    Literal::I64(vals.iter().map(|x| x.as_i64().unwrap_or(0)).collect())
+                }
+                DType::I32 => {
+                    Literal::I32(vals.iter().map(|x| x.as_i64().unwrap_or(0) as i32).collect())
+                }
+                DType::Pred => {
+                    Literal::Pred(vals.iter().map(|x| x.as_bool().unwrap_or(false)).collect())
+                }
+            };
+            GOp::Const { lit, dims }
+        }
+        // Elementwise unary.
+        "Tanh" | "torch.tanh" => GOp::Unary(UnKind::Tanh),
+        "Exp" | "torch.exp" => GOp::Unary(UnKind::Exp),
+        "Log" | "torch.log" => GOp::Unary(UnKind::Log),
+        "Abs" | "torch.abs" => GOp::Unary(UnKind::Abs),
+        "Neg" | "torch.neg" => GOp::Unary(UnKind::Neg),
+        "Sqrt" | "torch.sqrt" => GOp::Unary(UnKind::Sqrt),
+        "Rsqrt" | "torch.rsqrt" => GOp::Unary(UnKind::Rsqrt),
+        "Relu" | "torch.relu" | "torch.nn.functional.relu" => GOp::Unary(UnKind::Relu),
+        "Gelu" | "torch.nn.functional.gelu" => GOp::Unary(UnKind::Gelu),
+        "Sigmoid" | "torch.sigmoid" => GOp::Unary(UnKind::Sigmoid),
+        "Erf" | "torch.erf" => GOp::Unary(UnKind::Erf),
+        "Floor" | "torch.floor" => GOp::Unary(UnKind::Floor),
+        "Sign" | "torch.sign" => GOp::Unary(UnKind::Sign),
+        // Elementwise binary.
+        "Add" | "AddV2" | "torch.add" => GOp::Binary(BinKind::Add),
+        "Sub" | "torch.sub" => GOp::Binary(BinKind::Sub),
+        "Mul" | "torch.mul" => GOp::Binary(BinKind::Mul),
+        "Div" | "RealDiv" | "torch.div" => GOp::Binary(BinKind::Div),
+        "Maximum" | "torch.maximum" => GOp::Binary(BinKind::Max),
+        "Minimum" | "torch.minimum" => GOp::Binary(BinKind::Min),
+        "Pow" | "torch.pow" => GOp::Binary(BinKind::Pow),
+        // Compare / select.
+        "Greater" | "torch.gt" => GOp::Compare(CmpDir::Gt),
+        "Less" | "torch.lt" => GOp::Compare(CmpDir::Lt),
+        "Equal" | "torch.eq" => GOp::Compare(CmpDir::Eq),
+        "Select" | "SelectV2" | "torch.where" => GOp::Select,
+        "Cast" | "torch.to" => {
+            GOp::Cast { to: parse_dtype(v.get("to").as_str().context("Cast needs 'to'")?)? }
+        }
+        "Scale" => GOp::Scale { c: v.get("c").as_f64().unwrap_or(1.0) as f32 },
+        // Contractions & composites.
+        "MatMul" | "BatchMatMul" | "BatchMatMulV2" | "torch.matmul" | "torch.bmm" => GOp::MatMul,
+        "Softmax" | "torch.softmax" | "torch.nn.functional.softmax" => GOp::Softmax,
+        "LayerNorm" | "torch.nn.functional.layer_norm" => {
+            GOp::LayerNorm { eps: v.get("eps").as_f64().unwrap_or(1e-5) as f32 }
+        }
+        "BiasAdd" => GOp::BiasAdd,
+        // Layout / shape.
+        "Split" | "SplitV" | "torch.chunk" => GOp::Split {
+            axis: axis(),
+            num: v.get("num").as_usize().context("Split needs 'num'")?,
+        },
+        "Concat" | "ConcatV2" | "torch.cat" => GOp::Concat { axis: axis() },
+        "Transpose" | "torch.permute" => GOp::Transpose { perm: usizes("perm") },
+        "Reshape" | "torch.reshape" | "torch.view" => GOp::Reshape { dims: i64s("dims") },
+        "Slice" | "torch.narrow" => GOp::Slice { begin: i64s("begin"), size: i64s("size") },
+        "Pad" | "PadV2" | "torch.nn.functional.pad" => GOp::Pad {
+            low: i64s("low"),
+            high: i64s("high"),
+            value: v.get("value").as_f64().unwrap_or(0.0) as f32,
+        },
+        // Reductions.
+        "Sum" | "ReduceSum" | "torch.sum" => GOp::Reduce { kind: ReduceKind::Sum, axes: axes() },
+        "Max" | "ReduceMax" | "torch.amax" => GOp::Reduce { kind: ReduceKind::Max, axes: axes() },
+        "Mean" | "ReduceMean" | "torch.mean" => {
+            GOp::Reduce { kind: ReduceKind::Mean, axes: axes() }
+        }
+        // Sparse / lookup.
+        "GatherV2" | "Gather" | "torch.index_select" | "embedding_lookup" => {
+            GOp::Gather { axis: axis() }
+        }
+        "Unique" | "torch.unique" => GOp::Unique,
+        other => bail!("unknown op kind '{other}'"),
+    })
+}
+
+fn parse_edge(s: &str, names: &HashMap<String, usize>) -> Result<Edge> {
+    let (name, port) = match s.rsplit_once(':') {
+        Some((n, p)) if !p.is_empty() && p.chars().all(|c| c.is_ascii_digit()) => {
+            (n, p.parse::<usize>().unwrap())
+        }
+        _ => (s, 0),
+    };
+    let node = *names.get(name).with_context(|| format!("unknown node '{name}'"))?;
+    Ok(Edge { node, port })
+}
+
+/// Parse a JSON graph document.
+pub fn from_json(text: &str) -> Result<Graph> {
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let name = doc.get("name").as_str().unwrap_or("graph").to_string();
+    let nodes_json = doc.get("nodes").as_arr().context("graph needs 'nodes'")?;
+    let mut names: HashMap<String, usize> = HashMap::new();
+    let mut nodes = Vec::with_capacity(nodes_json.len());
+
+    for (i, nv) in nodes_json.iter().enumerate() {
+        let nname = nv
+            .get("name")
+            .as_str()
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("n{i}"));
+        let kind = nv.get("op").as_str().context("node needs 'op'")?;
+        let op = parse_op(kind, nv).with_context(|| format!("node '{nname}'"))?;
+        let inputs: Vec<Edge> = match nv.get("inputs").as_arr() {
+            Some(arr) => arr
+                .iter()
+                .map(|e| parse_edge(e.as_str().context("input must be string")?, &names))
+                .collect::<Result<_>>()?,
+            None => vec![],
+        };
+        ensure!(!names.contains_key(&nname), "duplicate node name '{nname}'");
+        names.insert(nname.clone(), i);
+        nodes.push(Node { name: nname, op, inputs });
+    }
+
+    let outputs: Vec<Edge> = doc
+        .get("outputs")
+        .as_arr()
+        .context("graph needs 'outputs'")?
+        .iter()
+        .map(|e| parse_edge(e.as_str().context("output must be string")?, &names))
+        .collect::<Result<_>>()?;
+
+    Ok(Graph { name, nodes, outputs })
+}
+
+/// Serialize a graph back to JSON (round-trip tested; used by `disc dump`).
+pub fn to_json(g: &Graph) -> Value {
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("name".into(), Value::Str(g.name.clone()));
+    let nodes: Vec<Value> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Value::Str(n.name.clone()));
+            let inputs: Vec<Value> = n
+                .inputs
+                .iter()
+                .map(|e| {
+                    let nm = &g.nodes[e.node].name;
+                    Value::Str(if e.port == 0 {
+                        nm.clone()
+                    } else {
+                        format!("{nm}:{}", e.port)
+                    })
+                })
+                .collect();
+            if !inputs.is_empty() {
+                o.insert("inputs".into(), Value::Arr(inputs));
+            }
+            encode_op(&n.op, &mut o);
+            Value::Obj(o)
+        })
+        .collect();
+    root.insert("nodes".into(), Value::Arr(nodes));
+    let outputs: Vec<Value> = g
+        .outputs
+        .iter()
+        .map(|e| {
+            let nm = &g.nodes[e.node].name;
+            Value::Str(if e.port == 0 { nm.clone() } else { format!("{nm}:{}", e.port) })
+        })
+        .collect();
+    root.insert("outputs".into(), Value::Arr(outputs));
+    Value::Obj(root)
+}
+
+fn encode_op(op: &GOp, o: &mut std::collections::BTreeMap<String, Value>) {
+    let put = |o: &mut std::collections::BTreeMap<String, Value>, k: &str, v: Value| {
+        o.insert(k.to_string(), v);
+    };
+    match op {
+        GOp::Placeholder { dtype, dims } => {
+            put(o, "op", Value::Str("Placeholder".into()));
+            put(o, "dtype", Value::Str(dtype.hlo_name().into()));
+            put(o, "dims", Value::Arr(dims.iter().map(|&d| Value::Num(d as f64)).collect()));
+        }
+        GOp::Const { lit, dims } => {
+            put(o, "op", Value::Str("Const".into()));
+            put(o, "dtype", Value::Str(lit.dtype().hlo_name().into()));
+            put(o, "dims", Value::from_usizes(dims));
+            let vals: Vec<Value> = match lit {
+                Literal::F32(v) => v.iter().map(|&x| Value::Num(x as f64)).collect(),
+                Literal::I64(v) => v.iter().map(|&x| Value::Num(x as f64)).collect(),
+                Literal::I32(v) => v.iter().map(|&x| Value::Num(x as f64)).collect(),
+                Literal::Pred(v) => v.iter().map(|&x| Value::Bool(x)).collect(),
+            };
+            put(o, "values", Value::Arr(vals));
+        }
+        GOp::Unary(k) => put(
+            o,
+            "op",
+            Value::Str(
+                match k {
+                    UnKind::Tanh => "Tanh",
+                    UnKind::Exp => "Exp",
+                    UnKind::Log => "Log",
+                    UnKind::Abs => "Abs",
+                    UnKind::Neg => "Neg",
+                    UnKind::Sqrt => "Sqrt",
+                    UnKind::Rsqrt => "Rsqrt",
+                    UnKind::Relu => "Relu",
+                    UnKind::Gelu => "Gelu",
+                    UnKind::Sigmoid => "Sigmoid",
+                    UnKind::Erf => "Erf",
+                    UnKind::Floor => "Floor",
+                    UnKind::Sign => "Sign",
+                }
+                .into(),
+            ),
+        ),
+        GOp::Binary(k) => put(
+            o,
+            "op",
+            Value::Str(
+                match k {
+                    BinKind::Add => "Add",
+                    BinKind::Sub => "Sub",
+                    BinKind::Mul => "Mul",
+                    BinKind::Div => "Div",
+                    BinKind::Max => "Maximum",
+                    BinKind::Min => "Minimum",
+                    BinKind::Pow => "Pow",
+                }
+                .into(),
+            ),
+        ),
+        GOp::Compare(d) => put(
+            o,
+            "op",
+            Value::Str(
+                match d {
+                    CmpDir::Gt => "Greater",
+                    CmpDir::Lt => "Less",
+                    _ => "Equal",
+                }
+                .into(),
+            ),
+        ),
+        GOp::Select => put(o, "op", Value::Str("Select".into())),
+        GOp::Cast { to } => {
+            put(o, "op", Value::Str("Cast".into()));
+            put(o, "to", Value::Str(to.hlo_name().into()));
+        }
+        GOp::Scale { c } => {
+            put(o, "op", Value::Str("Scale".into()));
+            put(o, "c", Value::Num(*c as f64));
+        }
+        GOp::MatMul => put(o, "op", Value::Str("MatMul".into())),
+        GOp::Softmax => put(o, "op", Value::Str("Softmax".into())),
+        GOp::LayerNorm { eps } => {
+            put(o, "op", Value::Str("LayerNorm".into()));
+            put(o, "eps", Value::Num(*eps as f64));
+        }
+        GOp::BiasAdd => put(o, "op", Value::Str("BiasAdd".into())),
+        GOp::Split { axis, num } => {
+            put(o, "op", Value::Str("Split".into()));
+            put(o, "axis", Value::Num(*axis as f64));
+            put(o, "num", Value::Num(*num as f64));
+        }
+        GOp::Concat { axis } => {
+            put(o, "op", Value::Str("Concat".into()));
+            put(o, "axis", Value::Num(*axis as f64));
+        }
+        GOp::Transpose { perm } => {
+            put(o, "op", Value::Str("Transpose".into()));
+            put(o, "perm", Value::from_usizes(perm));
+        }
+        GOp::Reshape { dims } => {
+            put(o, "op", Value::Str("Reshape".into()));
+            put(o, "dims", Value::Arr(dims.iter().map(|&d| Value::Num(d as f64)).collect()));
+        }
+        GOp::Reduce { kind, axes } => {
+            put(
+                o,
+                "op",
+                Value::Str(
+                    match kind {
+                        ReduceKind::Sum => "ReduceSum",
+                        ReduceKind::Max => "ReduceMax",
+                        ReduceKind::Min => "ReduceMax",
+                        ReduceKind::Mean => "ReduceMean",
+                    }
+                    .into(),
+                ),
+            );
+            put(o, "axes", Value::from_usizes(axes));
+        }
+        GOp::Slice { begin, size } => {
+            put(o, "op", Value::Str("Slice".into()));
+            put(o, "begin", Value::Arr(begin.iter().map(|&d| Value::Num(d as f64)).collect()));
+            put(o, "size", Value::Arr(size.iter().map(|&d| Value::Num(d as f64)).collect()));
+        }
+        GOp::Pad { low, high, value } => {
+            put(o, "op", Value::Str("Pad".into()));
+            put(o, "low", Value::Arr(low.iter().map(|&d| Value::Num(d as f64)).collect()));
+            put(o, "high", Value::Arr(high.iter().map(|&d| Value::Num(d as f64)).collect()));
+            put(o, "value", Value::Num(*value as f64));
+        }
+        GOp::Gather { axis } => {
+            put(o, "op", Value::Str("Gather".into()));
+            put(o, "axis", Value::Num(*axis as f64));
+        }
+        GOp::Unique => put(o, "op", Value::Str("Unique".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TF_GRAPH: &str = r#"{
+        "name": "tf_demo",
+        "nodes": [
+            {"name": "x", "op": "Placeholder", "dtype": "f32", "dims": [-1, 8]},
+            {"name": "w", "op": "Const", "dtype": "f32", "dims": [8],
+             "values": [0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1]},
+            {"name": "h", "op": "BiasAdd", "inputs": ["x", "w"]},
+            {"name": "sp", "op": "Split", "axis": 1, "num": 2, "inputs": ["h"]},
+            {"name": "y", "op": "AddV2", "inputs": ["sp:0", "sp:1"]},
+            {"name": "act", "op": "Relu", "inputs": ["y"]}
+        ],
+        "outputs": ["act"]
+    }"#;
+
+    const PT_GRAPH: &str = r#"{
+        "name": "pt_demo",
+        "nodes": [
+            {"name": "x", "op": "input", "dtype": "torch.float32", "dims": [-1, 8]},
+            {"name": "t", "op": "torch.tanh", "inputs": ["x"]},
+            {"name": "y", "op": "torch.add", "inputs": ["x", "t"]},
+            {"name": "s", "op": "torch.softmax", "inputs": ["y"]}
+        ],
+        "outputs": ["s"]
+    }"#;
+
+    #[test]
+    fn imports_tf_flavoured_graph() {
+        let g = from_json(TF_GRAPH).unwrap();
+        assert_eq!(g.nodes.len(), 6);
+        assert!(matches!(g.nodes[3].op, GOp::Split { axis: 1, num: 2 }));
+        let m = crate::bridge::lower(&g).unwrap();
+        let input = crate::runtime::tensor::Tensor::f32(&[3, 8], vec![0.5; 24]);
+        let r = crate::runtime::reference::eval_module(&m, &[input]).unwrap();
+        assert_eq!(r.outputs[0].dims, vec![3, 4]);
+    }
+
+    #[test]
+    fn imports_pytorch_flavoured_graph() {
+        let g = from_json(PT_GRAPH).unwrap();
+        let m = crate::bridge::lower(&g).unwrap();
+        let input = crate::runtime::tensor::Tensor::f32(&[2, 8], vec![0.25; 16]);
+        let r = crate::runtime::reference::eval_module(&m, &[input]).unwrap();
+        assert_eq!(r.outputs[0].dims, vec![2, 8]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = from_json(TF_GRAPH).unwrap();
+        let text = crate::util::json::to_string_pretty(&to_json(&g));
+        let g2 = from_json(&text).unwrap();
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+        }
+        assert_eq!(g.outputs, g2.outputs);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json(r#"{"nodes": [], "outputs": []}"#).is_ok());
+        assert!(from_json(r#"{"nodes": [{"name":"a","op":"Nope"}], "outputs": []}"#).is_err());
+        assert!(from_json(
+            r#"{"nodes": [{"name":"a","op":"Tanh","inputs":["missing"]}], "outputs": ["a"]}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Framework-level computation graphs — the frontend DISC bridges from.
+//!
+//! This is the abstraction the paper's "computation graph bridging" layer
+//! consumes: a coarse-grained op graph in the vocabulary of TensorFlow /
+//! PyTorch (Softmax, LayerNorm, Split, BiasAdd, …), with named nodes,
+//! multi-output ops, and `-1` dynamic dims on placeholders. The bridge
+//! (`crate::bridge`) lowers it to DHLO, injecting the shape constraints
+//! that high-level op semantics imply but lowering would otherwise lose
+//! (§4.2.1 second source).
+
+pub mod import;
+
+use crate::dhlo::{BinKind, CmpDir, DType, Literal, ReduceKind, UnKind};
+
+/// Reference to one output port of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub node: usize,
+    pub port: usize,
+}
+
+/// Framework-level ops. Dynamic dims on placeholders are `-1`, TF-style.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GOp {
+    Placeholder { dtype: DType, dims: Vec<i64> },
+    Const { lit: Literal, dims: Vec<usize> },
+    Unary(UnKind),
+    /// Numpy-style binary: the bridge inserts explicit broadcasts for
+    /// scalar and trailing-axis (`[h]` vs `[..., h]`) operand shapes.
+    Binary(BinKind),
+    Compare(CmpDir),
+    Select,
+    Cast { to: DType },
+    /// Multiply by a scalar constant (e.g. attention scaling).
+    Scale { c: f32 },
+    MatMul,
+    /// Softmax over the last axis (composite; the bridge expands it).
+    Softmax,
+    /// Layer normalization over the last axis; inputs `(x, gamma, beta)`.
+    LayerNorm { eps: f32 },
+    /// `x + bias` with `bias: [h]` broadcast over leading axes.
+    BiasAdd,
+    /// Split into `num` equal parts along `axis` — the paper's running
+    /// example of constraint injection. Multi-output.
+    Split { axis: usize, num: usize },
+    Concat { axis: usize },
+    Transpose { perm: Vec<usize> },
+    /// TF-style reshape; one dim may be `-1` (inferred).
+    Reshape { dims: Vec<i64> },
+    Reduce { kind: ReduceKind, axes: Vec<usize> },
+    /// TF slice: `begin` + `size` (size `-1` = to end).
+    Slice { begin: Vec<i64>, size: Vec<i64> },
+    Pad { low: Vec<i64>, high: Vec<i64>, value: f32 },
+    /// Embedding-style lookup along `axis`; inputs `(table, indices)`.
+    Gather { axis: usize },
+    Unique,
+}
+
+impl GOp {
+    /// Number of output ports.
+    pub fn num_outputs(&self) -> usize {
+        match self {
+            GOp::Split { num, .. } => *num,
+            _ => 1,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            GOp::Placeholder { .. } => "Placeholder".into(),
+            GOp::Const { .. } => "Const".into(),
+            GOp::Unary(k) => format!("Unary.{}", k.name()),
+            GOp::Binary(k) => format!("Binary.{}", k.name()),
+            GOp::Compare(_) => "Compare".into(),
+            GOp::Select => "Select".into(),
+            GOp::Cast { .. } => "Cast".into(),
+            GOp::Scale { .. } => "Scale".into(),
+            GOp::MatMul => "MatMul".into(),
+            GOp::Softmax => "Softmax".into(),
+            GOp::LayerNorm { .. } => "LayerNorm".into(),
+            GOp::BiasAdd => "BiasAdd".into(),
+            GOp::Split { .. } => "Split".into(),
+            GOp::Concat { .. } => "Concat".into(),
+            GOp::Transpose { .. } => "Transpose".into(),
+            GOp::Reshape { .. } => "Reshape".into(),
+            GOp::Reduce { kind, .. } => format!("Reduce.{}", kind.name()),
+            GOp::Slice { .. } => "Slice".into(),
+            GOp::Pad { .. } => "Pad".into(),
+            GOp::Gather { .. } => "Gather".into(),
+            GOp::Unique => "Unique".into(),
+        }
+    }
+}
+
+/// One node: a named op application.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: GOp,
+    pub inputs: Vec<Edge>,
+}
+
+/// A framework graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn node_by_name(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+}
+
+/// Ergonomic builder used by the workload definitions.
+pub struct GraphBuilder {
+    pub g: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphBuilder { g: Graph { name: name.into(), ..Default::default() } }
+    }
+
+    pub fn finish(mut self, outputs: &[Edge]) -> Graph {
+        self.g.outputs = outputs.to_vec();
+        self.g
+    }
+
+    pub fn add(&mut self, name: impl Into<String>, op: GOp, inputs: &[Edge]) -> Edge {
+        self.g.nodes.push(Node { name: name.into(), op, inputs: inputs.to_vec() });
+        Edge { node: self.g.nodes.len() - 1, port: 0 }
+    }
+
+    /// Port accessor for multi-output nodes.
+    pub fn port(&self, e: Edge, port: usize) -> Edge {
+        Edge { node: e.node, port }
+    }
+
+    // Conveniences used heavily by workloads.
+    pub fn placeholder(&mut self, name: &str, dtype: DType, dims: &[i64]) -> Edge {
+        self.add(name, GOp::Placeholder { dtype, dims: dims.to_vec() }, &[])
+    }
+    pub fn weight(&mut self, name: &str, dims: &[usize], seed: u64) -> Edge {
+        // Deterministic pseudo-random weights (workloads embed them as
+        // constants so requests carry only activations).
+        let n: usize = dims.iter().product();
+        let mut rng = crate::util::prng::Prng::new(seed);
+        let data = rng.fill_f32(n, 0.25);
+        self.add(name, GOp::Const { lit: Literal::F32(data), dims: dims.to_vec() }, &[])
+    }
+    pub fn unary(&mut self, name: &str, k: UnKind, x: Edge) -> Edge {
+        self.add(name, GOp::Unary(k), &[x])
+    }
+    pub fn binary(&mut self, name: &str, k: BinKind, a: Edge, b: Edge) -> Edge {
+        self.add(name, GOp::Binary(k), &[a, b])
+    }
+    pub fn matmul(&mut self, name: &str, a: Edge, b: Edge) -> Edge {
+        self.add(name, GOp::MatMul, &[a, b])
+    }
+    pub fn softmax(&mut self, name: &str, x: Edge) -> Edge {
+        self.add(name, GOp::Softmax, &[x])
+    }
+    pub fn layernorm(&mut self, name: &str, x: Edge, gamma: Edge, beta: Edge) -> Edge {
+        self.add(name, GOp::LayerNorm { eps: 1e-5 }, &[x, gamma, beta])
+    }
+    pub fn bias_add(&mut self, name: &str, x: Edge, b: Edge) -> Edge {
+        self.add(name, GOp::BiasAdd, &[x, b])
+    }
+    pub fn scale(&mut self, name: &str, x: Edge, c: f32) -> Edge {
+        self.add(name, GOp::Scale { c }, &[x])
+    }
+    pub fn transpose(&mut self, name: &str, x: Edge, perm: &[usize]) -> Edge {
+        self.add(name, GOp::Transpose { perm: perm.to_vec() }, &[x])
+    }
+    pub fn reshape(&mut self, name: &str, x: Edge, dims: &[i64]) -> Edge {
+        self.add(name, GOp::Reshape { dims: dims.to_vec() }, &[x])
+    }
+    pub fn concat(&mut self, name: &str, xs: &[Edge], axis: usize) -> Edge {
+        self.add(name, GOp::Concat { axis }, xs)
+    }
+    pub fn split(&mut self, name: &str, x: Edge, axis: usize, num: usize) -> Vec<Edge> {
+        let e = self.add(name, GOp::Split { axis, num }, &[x]);
+        (0..num).map(|p| Edge { node: e.node, port: p }).collect()
+    }
+    pub fn gather(&mut self, name: &str, table: Edge, idx: Edge, axis: usize) -> Edge {
+        self.add(name, GOp::Gather { axis }, &[table, idx])
+    }
+    pub fn unique(&mut self, name: &str, x: Edge) -> Edge {
+        self.add(name, GOp::Unique, &[x])
+    }
+    pub fn reduce(&mut self, name: &str, kind: ReduceKind, x: Edge, axes: &[usize]) -> Edge {
+        self.add(name, GOp::Reduce { kind, axes: axes.to_vec() }, &[x])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_ports() {
+        let mut b = GraphBuilder::new("g");
+        let x = b.placeholder("x", DType::F32, &[-1, 8]);
+        let parts = b.split("sp", x, 1, 2);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].port, 1);
+        let y = b.binary("add", BinKind::Add, parts[0], parts[1]);
+        let g = b.finish(&[y]);
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[1].op.num_outputs(), 2);
+        assert_eq!(g.node_by_name("sp"), Some(1));
+    }
+}

@@ -1,0 +1,23 @@
+//! DISC: a dynamic shape compiler for machine learning workloads.
+//!
+//! Reproduction of Zhu et al., EuroMLSys '21, as a Rust compiler + runtime
+//! over PJRT, with build-time JAX/Pallas artifacts. See DESIGN.md.
+
+pub mod bench;
+pub mod bridge;
+pub mod cli;
+pub mod codegen;
+pub mod compiler;
+pub mod coordinator;
+pub mod dhlo;
+pub mod fusion;
+pub mod graph;
+pub mod library;
+pub mod passes;
+pub mod program;
+pub mod runtime;
+pub mod shape;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+pub mod vm;

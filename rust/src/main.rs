@@ -1,0 +1,156 @@
+//! `disc` — the CLI entrypoint: run workloads under any execution mode,
+//! inspect lowered DHLO + collected constraints, import JSON graphs.
+
+use anyhow::{bail, Context, Result};
+use disc::cli::{parse_mode, Args, USAGE};
+use disc::compiler::{CompileOptions, DiscCompiler};
+use disc::coordinator;
+use disc::sim::GpuModel;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "inspect" => cmd_inspect(&args),
+        "import" => cmd_import(&args),
+        "list" => {
+            for name in disc::workloads::NAMES {
+                let w = disc::workloads::by_name(name).unwrap();
+                println!("{name:14} {:<12} batch={}", w.framework, w.batch);
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn load_workload(args: &Args) -> Result<disc::workloads::Workload> {
+    let name = args.get("workload").context("--workload required")?;
+    disc::workloads::by_name(name)
+        .with_context(|| format!("unknown workload '{name}' (try: disc list)"))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let w = load_workload(args)?;
+    let mode = parse_mode(args.get("mode").unwrap_or("disc"))?;
+    let requests = args.get_usize("requests", 50)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+
+    let module = disc::bridge::lower(&w.graph)?;
+    let compiler = DiscCompiler::new()?;
+    let mut model = compiler.compile(module, &CompileOptions::mode(mode))?;
+    println!(
+        "compiled {} [{}] pipeline={} groups={} kernels-planned={} ({} instrs)",
+        w.name,
+        w.framework,
+        model.report.pipeline,
+        model.report.fusion_groups,
+        model.report.planned_kernels,
+        model.report.instrs_after,
+    );
+
+    let stream = w.request_stream(requests, seed);
+    let report = match args.get("open-rate") {
+        Some(r) => {
+            let rate: f64 = r.parse().context("--open-rate wants a float")?;
+            coordinator::serve_open_loop(&mut model, stream, rate)?
+        }
+        None => coordinator::serve_closed_loop(&mut model, stream)?,
+    };
+
+    let sim = GpuModel::default().breakdown(&report.metrics);
+    println!(
+        "served {} requests in {:.2?}  ({:.1} req/s)",
+        report.completed, report.wall, report.throughput_rps
+    );
+    println!(
+        "latency p50={:.2?} p95={:.2?} p99={:.2?} mean={:.2?}",
+        report.p50, report.p95, report.p99, report.mean
+    );
+    let m = &report.metrics;
+    println!(
+        "kernels: mem={} lib={} host_ops={} compile_events={} (compile {:.2?})",
+        m.mem_kernels, m.lib_calls, m.host_ops, m.compile_events, m.compile_time
+    );
+    println!(
+        "time split: kernel={:.2?} lib={:.2?} cpu={:.2?} total={:.2?} (pad_copies={} allocs={} pool_hits={})",
+        m.kernel_time, m.lib_time, m.cpu_time(), m.total_time, m.pad_copies, m.allocs, m.pool_hits
+    );
+    println!(
+        "bytes: mem={} lib={}  flops={}",
+        disc::util::fmt_bytes(m.mem_bytes as usize),
+        disc::util::fmt_bytes(m.lib_bytes as usize),
+        m.flops
+    );
+    println!(
+        "T4-model breakdown: comp={:.2}ms mem={:.2}ms cpu={:.2}ms e2e={:.2}ms",
+        sim.comp_bound_ms, sim.mem_bound_ms, sim.cpu_ms, sim.e2e_ms
+    );
+    if let Some(cs) = model.cache_stats() {
+        println!(
+            "kernel cache: entries={} hits={} misses={} compile={:.2?}",
+            cs.entries, cs.hits, cs.misses, cs.compile_time
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let module = if let Some(file) = args.get("file") {
+        let text = std::fs::read_to_string(file)?;
+        let g = disc::graph::import::from_json(&text)?;
+        disc::bridge::lower(&g)?
+    } else {
+        let w = load_workload(args)?;
+        disc::bridge::lower(&w.graph)?
+    };
+    let opt = disc::passes::optimize(&module)?;
+    print!("{}", disc::dhlo::print::print_module(&opt));
+    let plan = disc::fusion::plan(&opt, &disc::fusion::FusionOptions::default());
+    let stats = disc::fusion::stats(&plan);
+    println!(
+        "// fusion: {} groups ({} input-fusions, largest {}), {} kernels planned",
+        stats.groups,
+        stats.input_fusions,
+        stats.largest_group,
+        plan.kernel_count(&opt)
+    );
+    let rep = disc::passes::static_detect::analyze(&opt);
+    println!(
+        "// pipeline: {:?} ({}/{} instrs dynamic)",
+        rep.choice, rep.dynamic_instrs, rep.total_instrs
+    );
+    Ok(())
+}
+
+fn cmd_import(args: &Args) -> Result<()> {
+    let file = args.get("file").context("--file required")?;
+    let text = std::fs::read_to_string(file)?;
+    let g = disc::graph::import::from_json(&text)?;
+    println!("imported graph '{}' with {} nodes", g.name, g.nodes.len());
+    let module = disc::bridge::lower(&g)?;
+    let mode = parse_mode(args.get("mode").unwrap_or("disc"))?;
+    let compiler = DiscCompiler::new()?;
+    let model = compiler.compile(module, &CompileOptions::mode(mode))?;
+    println!(
+        "compiled: pipeline={} groups={} planned-kernels={}",
+        model.report.pipeline, model.report.fusion_groups, model.report.planned_kernels
+    );
+    Ok(())
+}

@@ -1,0 +1,259 @@
+//! IR optimization passes run between bridging and fusion planning.
+//!
+//! DISC reuses the classic pipeline (the paper reuses XLA's building blocks
+//! through MLIR-HLO): dead-code elimination, common-subexpression
+//! elimination, and constant folding. Passes preserve the symbol table by
+//! remapping the value ids embedded in shape expressions and size classes.
+
+pub mod static_detect;
+
+use crate::dhlo::{Instr, Module, Op};
+use crate::runtime::reference::eval_op;
+use crate::runtime::tensor::{Data, Tensor};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Rebuild a module keeping only instructions where `keep[id]`, remapping
+/// operands, outputs, and symbol-table value references.
+fn rebuild(m: &Module, keep: &[bool]) -> Module {
+    let mut map: Vec<Option<usize>> = vec![None; m.instrs.len()];
+    let mut instrs = Vec::new();
+    for (id, ins) in m.instrs.iter().enumerate() {
+        if keep[id] {
+            map[id] = Some(instrs.len());
+            let mut ni = ins.clone();
+            ni.operands = ni.operands.iter().map(|&o| map[o].expect("operand kept")).collect();
+            instrs.push(ni);
+        }
+    }
+    let mut syms = m.syms.clone();
+    syms.remap_values(&map);
+    Module {
+        name: m.name.clone(),
+        instrs,
+        params: m.params.clone(),
+        outputs: m.outputs.iter().map(|&o| map[o].expect("output kept")).collect(),
+        syms,
+    }
+}
+
+/// Values referenced by symbol definitions of dims appearing anywhere in
+/// the module (they must survive DCE: the shape program reads them).
+fn shape_roots(m: &Module) -> Vec<usize> {
+    let mut out = Vec::new();
+    for i in 0..m.syms.len() {
+        let mut deps = Vec::new();
+        m.syms.def(crate::shape::SymId(i as u32)).value_deps(&mut deps);
+        out.extend(deps);
+    }
+    out
+}
+
+/// Dead-code elimination: drop instructions unreachable from the outputs
+/// (and from shape-expression roots of live symbols).
+pub fn dce(m: &Module) -> Module {
+    let mut live = vec![false; m.instrs.len()];
+    let mut stack: Vec<usize> = m.outputs.clone();
+    // Keep parameters: they define the external ABI.
+    for (id, ins) in m.instrs.iter().enumerate() {
+        if matches!(ins.op, Op::Param { .. }) {
+            stack.push(id);
+        }
+    }
+    // Symbols used by live values' types may read other values; over-
+    // approximate by keeping all shape roots.
+    stack.extend(shape_roots(m));
+    while let Some(v) = stack.pop() {
+        if v < live.len() && !live[v] {
+            live[v] = true;
+            stack.extend(m.instrs[v].operands.iter().copied());
+        }
+    }
+    rebuild(m, &live)
+}
+
+fn cse_key(ins: &Instr) -> String {
+    format!("{:?}|{:?}", ins.op, ins.operands)
+}
+
+/// Ops excluded from CSE/folding (side effects on the shape env, or
+/// dynamic-twin identity that the signature machinery keys on).
+fn is_pure(op: &Op) -> bool {
+    !matches!(op, Op::Param { .. } | Op::Unique)
+}
+
+/// Common-subexpression elimination over pure ops.
+pub fn cse(m: &Module) -> Module {
+    let mut seen: HashMap<String, usize> = HashMap::new();
+    let mut alias: Vec<usize> = (0..m.instrs.len()).collect();
+    let mut keep = vec![true; m.instrs.len()];
+    let mut rewritten = m.clone();
+    for id in 0..rewritten.instrs.len() {
+        // Rewrite operands through aliases first.
+        let ops: Vec<usize> =
+            rewritten.instrs[id].operands.iter().map(|&o| alias[o]).collect();
+        rewritten.instrs[id].operands = ops;
+        if !is_pure(&rewritten.instrs[id].op) {
+            continue;
+        }
+        let key = cse_key(&rewritten.instrs[id]);
+        match seen.get(&key) {
+            Some(&prev) => {
+                alias[id] = prev;
+                keep[id] = false;
+            }
+            None => {
+                seen.insert(key, id);
+            }
+        }
+    }
+    rewritten.outputs = rewritten.outputs.iter().map(|&o| alias[o]).collect();
+    // Shape expressions may reference values replaced by an alias (e.g.
+    // deduplicated index constants feeding a DSlice).
+    let alias_map: Vec<Option<usize>> = alias.iter().map(|&a| Some(a)).collect();
+    rewritten.syms.remap_values(&alias_map);
+    rebuild(&rewritten, &keep)
+}
+
+/// Constant folding: pure ops whose operands are all constants and whose
+/// output type is fully static are evaluated at compile time.
+pub fn fold_constants(m: &Module) -> Result<Module> {
+    let mut out = m.clone();
+    for id in 0..out.instrs.len() {
+        let ins = out.instrs[id].clone();
+        if matches!(ins.op, Op::Param { .. } | Op::Const { .. } | Op::Unique) {
+            continue;
+        }
+        let ty = ins.ty.canon(&out.syms);
+        if !ty.is_static() {
+            continue;
+        }
+        let consts: Option<Vec<Tensor>> = ins
+            .operands
+            .iter()
+            .map(|&o| match &out.instrs[o].op {
+                Op::Const { lit, dims } => Some(Tensor::from_literal(lit, dims)),
+                _ => None,
+            })
+            .collect();
+        let Some(operand_tensors) = consts else { continue };
+        let dims: Vec<usize> = ty.dims.iter().map(|d| d.fixed().unwrap()).collect();
+        let refs: Vec<&Tensor> = operand_tensors.iter().collect();
+        let Ok(folded) = eval_op(&ins.op, &refs, &dims, ty.dtype) else { continue };
+        let lit = match folded.data {
+            Data::F32(v) => crate::dhlo::Literal::F32(v),
+            Data::I64(v) => crate::dhlo::Literal::I64(v),
+            Data::I32(v) => crate::dhlo::Literal::I32(v),
+            Data::Pred(v) => crate::dhlo::Literal::Pred(v),
+        };
+        out.instrs[id] = Instr {
+            op: Op::Const { lit, dims: dims.clone() },
+            operands: vec![],
+            ty,
+            name: ins.name,
+        };
+    }
+    // Folding may have orphaned the old constant operands.
+    Ok(dce(&out))
+}
+
+/// The standard pipeline: fold → cse → dce, verified at each step.
+pub fn optimize(m: &Module) -> Result<Module> {
+    let m = fold_constants(m)?;
+    crate::dhlo::verify::verify(&m)?;
+    let m = cse(&m);
+    crate::dhlo::verify::verify(&m)?;
+    let m = dce(&m);
+    crate::dhlo::verify::verify(&m)?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::runtime::reference::eval_module;
+    use crate::shape::Dim;
+
+    #[test]
+    fn dce_removes_dead_chain() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let live = b.unary(UnKind::Tanh, x);
+        let dead = b.unary(UnKind::Exp, x);
+        let _dead2 = b.unary(UnKind::Abs, dead);
+        let m = b.finish(vec![live]);
+        let opt = dce(&m);
+        assert_eq!(opt.instrs.len(), 2, "param + tanh survive");
+        crate::dhlo::verify::verify(&opt).unwrap();
+    }
+
+    #[test]
+    fn cse_merges_duplicates() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let a = b.unary(UnKind::Tanh, x);
+        let c = b.unary(UnKind::Tanh, x);
+        let y = b.add(a, c).unwrap();
+        let m = b.finish(vec![y]);
+        let opt = cse(&m);
+        assert_eq!(opt.instrs.len(), 3, "one tanh eliminated");
+        // Numerics preserved.
+        let input = Tensor::f32(&[3], vec![0.1, 0.2, 0.3]);
+        let r1 = eval_module(&m, &[input.clone()]).unwrap();
+        let r2 = eval_module(&opt, &[input]).unwrap();
+        assert!(r1.outputs[0].allclose(&r2.outputs[0], 1e-7, 1e-7).unwrap());
+    }
+
+    #[test]
+    fn folding_collapses_constant_subgraph() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let c1 = b.scalar_f32(2.0);
+        let c2 = b.scalar_f32(3.0);
+        let c3 = b.mul(c1, c2).unwrap(); // foldable -> 6
+        let c3b = b.broadcast_scalar_like(c3, x).unwrap(); // dynamic: not foldable
+        let y = b.add(x, c3b).unwrap();
+        let m = b.finish(vec![y]);
+        let opt = optimize(&m).unwrap();
+        // The mul is gone; a constant 6 remains.
+        assert!(opt.instrs.iter().all(|i| !matches!(i.op, Op::Bin(crate::dhlo::BinKind::Mul))));
+        let input = Tensor::f32(&[2], vec![1.0, 2.0]);
+        let r = eval_module(&opt, &[input]).unwrap();
+        assert_eq!(r.outputs[0].as_f32().unwrap(), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn pipeline_preserves_dynamic_shape_machinery() {
+        // dslice's index tensors are shape roots and must survive DCE.
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let st = b.i64_vec(&[1]);
+        let li = b.i64_vec(&[3]);
+        let sr = b.i64_vec(&[1]);
+        let sl = b.dslice(x, st, li, sr).unwrap();
+        let m = b.finish(vec![sl]);
+        let opt = optimize(&m).unwrap();
+        let input = Tensor::f32(&[5], vec![0., 1., 2., 3., 4.]);
+        let r = eval_module(&opt, &[input]).unwrap();
+        assert_eq!(r.outputs[0].as_f32().unwrap(), &[1., 2.]);
+    }
+
+    #[test]
+    fn cse_respects_impure_ops() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::I64, vec![s]);
+        let u1 = b.unique(x).unwrap();
+        let u2 = b.unique(x).unwrap();
+        let m = b.finish(vec![u1, u2]);
+        let opt = cse(&m);
+        let uniques =
+            opt.instrs.iter().filter(|i| matches!(i.op, Op::Unique)).count();
+        assert_eq!(uniques, 2, "unique has a distinct data-dep symbol; never merged");
+    }
+}

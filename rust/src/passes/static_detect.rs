@@ -1,0 +1,92 @@
+//! Static-subgraph detection for the mixed static/dynamic pipeline (§4.4).
+//!
+//! DISC lowers graphs to the *static* pipeline "when shapes are known at
+//! compile time or the number of shapes is acceptable", because static
+//! compilation produces better kernels (no masking, no bucket padding).
+//! The detector classifies a module and recommends a pipeline; the
+//! compiler's `Mode::Auto` acts on it.
+
+use crate::dhlo::Module;
+
+/// Pipeline recommendation for a module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineChoice {
+    /// Everything static: use exact-shape codegen (no masks, no buckets).
+    Static,
+    /// Dynamic dims present: bucket codegen + runtime shape calculation.
+    Dynamic,
+}
+
+/// Classification report.
+#[derive(Debug, Clone)]
+pub struct StaticReport {
+    pub choice: PipelineChoice,
+    pub total_instrs: usize,
+    pub dynamic_instrs: usize,
+    /// Fraction of tensor ops whose output shape is fully static.
+    pub static_fraction: f64,
+}
+
+/// Analyze a module and recommend a pipeline.
+pub fn analyze(m: &Module) -> StaticReport {
+    let mut total = 0usize;
+    let mut dynamic = 0usize;
+    for ins in &m.instrs {
+        total += 1;
+        if !ins.ty.canon(&m.syms).is_static() {
+            dynamic += 1;
+        }
+    }
+    let static_fraction = if total == 0 {
+        1.0
+    } else {
+        (total - dynamic) as f64 / total as f64
+    };
+    let choice =
+        if dynamic == 0 { PipelineChoice::Static } else { PipelineChoice::Dynamic };
+    StaticReport { choice, total_instrs: total, dynamic_instrs: dynamic, static_fraction }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::shape::Dim;
+
+    #[test]
+    fn static_module_detected() {
+        let mut b = Builder::new("s");
+        let x = b.param(DType::F32, vec![Dim::Fixed(4)]);
+        let y = b.unary(UnKind::Tanh, x);
+        let m = b.finish(vec![y]);
+        let r = analyze(&m);
+        assert_eq!(r.choice, PipelineChoice::Static);
+        assert_eq!(r.static_fraction, 1.0);
+    }
+
+    #[test]
+    fn dynamic_module_detected() {
+        let mut b = Builder::new("d");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let y = b.unary(UnKind::Tanh, x);
+        let m = b.finish(vec![y]);
+        let r = analyze(&m);
+        assert_eq!(r.choice, PipelineChoice::Dynamic);
+        assert!(r.dynamic_instrs >= 2);
+    }
+
+    #[test]
+    fn refined_symbols_count_as_static() {
+        // A symbol unified with a constant collapses to Fixed; modules made
+        // fully static by refinement take the static pipeline.
+        let mut b = Builder::new("r");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let f = b.param(DType::F32, vec![Dim::Fixed(8)]);
+        let y = b.add(x, f).unwrap(); // refines s := 8
+        let m = b.finish(vec![y]);
+        let r = analyze(&m);
+        assert_eq!(r.choice, PipelineChoice::Static);
+    }
+}

@@ -1,0 +1,265 @@
+//! Compile-time generated runtime flow (§4.2).
+//!
+//! This is DISC's central architectural claim versus Nimble: instead of a
+//! VM that *interprets* the graph at runtime (walking nodes, re-deriving
+//! shapes, refcounting buffers per visit — see [`crate::vm`]), DISC
+//! generates the whole runtime flow at compile time as a flat instruction
+//! sequence: shape calculation, buffer `Alloc`/`Dealloc` placement from
+//! liveness analysis, kernel launches with precomputed signatures, library
+//! calls, and host ops. The executor then just walks the array — no graph,
+//! no per-node decisions.
+
+use crate::dhlo::{Module, Op, ValueId};
+use crate::fusion::signature::signature;
+use crate::fusion::{host_shape_values, FusionGroup, FusionPlan};
+use crate::shape::SymId;
+use anyhow::Result;
+
+/// One step of the generated flow.
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// Evaluate a host-side op (shape math, `GetDimSize`, s64 index
+    /// arithmetic feeding dynamic-twin operands).
+    EvalHost { value: ValueId },
+    /// Zero-cost reshape (metadata-only).
+    Bitcast { value: ValueId },
+    /// Launch the `idx`-th fused kernel.
+    LaunchFused { idx: usize },
+    /// Launch a singleton memory-intensive kernel (pre-built op kernel).
+    LaunchOp { value: ValueId },
+    /// Compute-intensive library call (§4.5).
+    LibraryCall { value: ValueId },
+    /// Release a dead buffer (placed by liveness analysis).
+    Dealloc { value: ValueId },
+}
+
+/// Launch metadata for one fusion group, precomputed at compile time so the
+/// hot path does no signature or symbol discovery.
+#[derive(Debug, Clone)]
+pub struct FusedLaunch {
+    pub group: FusionGroup,
+    /// Shape-agnostic cache signature.
+    pub sig: String,
+    /// Canonical dynamic symbols, in bucket-key order.
+    pub syms: Vec<SymId>,
+    /// External tensor inputs in kernel-parameter order (this group's own
+    /// value ids — the cached KernelSpec may belong to a different group
+    /// with the same signature).
+    pub inputs: Vec<ValueId>,
+    pub root: ValueId,
+}
+
+/// A compiled program: the module (for metadata), the flat step sequence,
+/// and per-group launch info.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub module: Module,
+    pub steps: Vec<Step>,
+    pub fused: Vec<FusedLaunch>,
+    /// Which values are host-side.
+    pub host: Vec<bool>,
+}
+
+impl Program {
+    /// Number of device-kernel launch steps (for plan-level assertions).
+    pub fn launch_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, Step::LaunchFused { .. } | Step::LaunchOp { .. }))
+            .count()
+    }
+}
+
+/// Generate the runtime flow for a module under a fusion plan.
+pub fn generate(module: Module, plan: &FusionPlan) -> Result<Program> {
+    let m = &module;
+    let n = m.instrs.len();
+    let host = host_shape_values(m);
+
+    let mut fused: Vec<FusedLaunch> = Vec::with_capacity(plan.groups.len());
+    for g in &plan.groups {
+        fused.push(FusedLaunch {
+            group: g.clone(),
+            sig: signature(m, g),
+            syms: crate::codegen::hlo::group_syms(m, g),
+            inputs: crate::fusion::signature::external_inputs(m, g)
+                .into_iter()
+                .map(|e| e.value)
+                .collect(),
+            root: g.root,
+        });
+    }
+
+    // Emit compute steps in instruction order; a fused group is launched at
+    // its root's position (all members dominate the root).
+    let mut steps: Vec<Step> = Vec::with_capacity(n);
+    for (id, ins) in m.instrs.iter().enumerate() {
+        match &ins.op {
+            Op::Param { .. } | Op::Const { .. } => {}
+            _ if host[id] => steps.push(Step::EvalHost { value: id }),
+            Op::Reshape | Op::DReshape => steps.push(Step::Bitcast { value: id }),
+            Op::Dot => steps.push(Step::LibraryCall { value: id }),
+            _ => match plan.membership[id] {
+                Some(gid) if plan.groups[gid].root == id => {
+                    let idx = fused.iter().position(|f| f.group.id == gid).unwrap();
+                    steps.push(Step::LaunchFused { idx });
+                }
+                Some(_) => {} // interior member: computed inside the kernel
+                None => steps.push(Step::LaunchOp { value: id }),
+            },
+        }
+    }
+
+    // Liveness: values read by each step.
+    let reads_of = |s: &Step| -> Vec<ValueId> {
+        match s {
+            Step::EvalHost { value }
+            | Step::Bitcast { value }
+            | Step::LaunchOp { value }
+            | Step::LibraryCall { value } => m.instrs[*value].operands.clone(),
+            Step::LaunchFused { idx } => {
+                let fl = &fused[*idx];
+                let mut r: Vec<ValueId> =
+                    crate::fusion::signature::external_inputs(m, &fl.group)
+                        .into_iter()
+                        .map(|e| e.value)
+                        .collect();
+                // Symbol definitions may read host tensors (Elem exprs).
+                for s in &fl.syms {
+                    let mut vdeps = Vec::new();
+                    m.syms.def(*s).value_deps(&mut vdeps);
+                    r.extend(vdeps);
+                }
+                r
+            }
+            Step::Dealloc { .. } => vec![],
+        }
+    };
+
+    let mut last_use: Vec<Option<usize>> = vec![None; n];
+    for (si, s) in steps.iter().enumerate() {
+        for v in reads_of(s) {
+            last_use[v] = Some(si);
+        }
+    }
+    // Module outputs live forever; so do values nothing ever reads but that
+    // a step produces (deallocated right after production below).
+    let mut keep = vec![false; n];
+    for &o in &m.outputs {
+        keep[o] = true;
+    }
+
+    // Insert Dealloc steps after each step index. Build the final sequence.
+    let mut out_steps: Vec<Step> = Vec::with_capacity(steps.len() * 2);
+    for (si, s) in steps.iter().enumerate() {
+        out_steps.push(s.clone());
+        for v in 0..n {
+            if keep[v] || matches!(m.instrs[v].op, Op::Const { .. }) {
+                continue;
+            }
+            if last_use[v] == Some(si) {
+                out_steps.push(Step::Dealloc { value: v });
+            }
+        }
+    }
+
+    Ok(Program { module, steps: out_steps, fused, host })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::fusion::{plan, FusionOptions};
+    use crate::shape::Dim;
+
+    #[test]
+    fn program_structure_for_mlp_block() {
+        let mut b = Builder::new("mlp");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let w = b.param(DType::F32, vec![Dim::Fixed(8), Dim::Fixed(8)]);
+        let h = b.dot(x, w).unwrap();
+        let r = b.unary(UnKind::Relu, h);
+        let o = b.add(r, x).unwrap();
+        let m = b.finish(vec![o]);
+        let p = plan(&m, &FusionOptions::default());
+        let prog = generate(m, &p).unwrap();
+
+        let lib = prog.steps.iter().filter(|s| matches!(s, Step::LibraryCall { .. })).count();
+        let fused = prog.steps.iter().filter(|s| matches!(s, Step::LaunchFused { .. })).count();
+        assert_eq!(lib, 1, "one GEMM library call");
+        assert_eq!(fused, 1, "relu+add fuse into one kernel");
+        // The GEMM result h dies after the fused kernel consumes it.
+        assert!(prog
+            .steps
+            .iter()
+            .any(|s| matches!(s, Step::Dealloc { value } if *value == 2)));
+    }
+
+    #[test]
+    fn outputs_never_deallocated() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let y = b.unary(UnKind::Tanh, x);
+        let m = b.finish(vec![y]);
+        let p = plan(&m, &FusionOptions::default());
+        let y_id = y;
+        let prog = generate(m, &p).unwrap();
+        assert!(!prog
+            .steps
+            .iter()
+            .any(|s| matches!(s, Step::Dealloc { value } if *value == y_id)));
+    }
+
+    #[test]
+    fn dealloc_placed_immediately_after_last_use() {
+        // x -> tanh (fused alone) -> exp (fused alone? no — they chain into
+        // one group). Use a dot to split: tanh feeds dot and dies after it.
+        let mut b = Builder::new("t");
+        let x = b.param(DType::F32, vec![Dim::Fixed(4), Dim::Fixed(4)]);
+        let t = b.unary(UnKind::Tanh, x);
+        let d = b.dot(t, t).unwrap();
+        let m = b.finish(vec![d]);
+        let p = plan(&m, &FusionOptions::default());
+        let prog = generate(m, &p).unwrap();
+        // Expect: LaunchFused(tanh), LibraryCall(dot), Dealloc(t)...
+        let pos_lib = prog
+            .steps
+            .iter()
+            .position(|s| matches!(s, Step::LibraryCall { .. }))
+            .unwrap();
+        let pos_dealloc_t = prog
+            .steps
+            .iter()
+            .position(|s| matches!(s, Step::Dealloc { value } if *value == 1))
+            .unwrap();
+        assert_eq!(pos_dealloc_t, pos_lib + 1, "free-as-soon-as-dead placement");
+    }
+
+    #[test]
+    fn host_ops_scheduled_on_host() {
+        let mut b = Builder::new("h");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let st = b.i64_vec(&[0]);
+        let li = b.i64_vec(&[2]);
+        let sr = b.i64_vec(&[1]);
+        let li2 = b.add(li, sr).unwrap();
+        let sl = b.dslice(x, st, li2, sr).unwrap();
+        let m = b.finish(vec![sl]);
+        let p = plan(&m, &FusionOptions::default());
+        let li2_id = li2;
+        let prog = generate(m, &p).unwrap();
+        assert!(prog
+            .steps
+            .iter()
+            .any(|s| matches!(s, Step::EvalHost { value } if *value == li2_id)));
+        // The dslice itself is a device-side singleton kernel.
+        assert!(prog
+            .steps
+            .iter()
+            .any(|s| matches!(s, Step::LaunchOp { .. })));
+    }
+}

@@ -1,0 +1,222 @@
+//! Loader for the AOT artifacts produced by `python/compile/aot.py`.
+//!
+//! `make artifacts` runs Python once; afterwards the Rust binary is
+//! self-contained: this module reads `artifacts/manifest.json`, compiles
+//! each HLO-text module on the PJRT client, registers the pre-generated
+//! GEMM entries with the kernel library (§4.5), and exposes the bucketed
+//! transformer-block variants behind the host-side *selection logic* of
+//! §4.3 (pick the smallest bucket ≥ the request's length, pass the actual
+//! extent as the `n` scalar, crop the output box).
+
+use crate::dhlo::DType;
+use crate::library::{GemmKey, GemmLibrary};
+use crate::runtime::executor::{crop_box, pad_box};
+use crate::runtime::pjrt::{Device, Executable};
+use crate::runtime::tensor::Tensor;
+use crate::util::json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One bucket variant of the AOT transformer block.
+pub struct AotVariant {
+    pub bucket: usize,
+    pub exe: Executable,
+}
+
+/// The AOT-compiled encoder block family + its baked weights.
+pub struct AotTransformer {
+    pub hidden: usize,
+    /// Ascending by bucket.
+    pub variants: Vec<AotVariant>,
+    /// Weights in the lowered parameter order (after `x`, `n`).
+    pub weights: Vec<Tensor>,
+    /// Selection + execution statistics.
+    pub runs: u64,
+    pub pad_copies: u64,
+}
+
+impl AotTransformer {
+    /// Load the manifest, compile every model variant, parse the weights.
+    pub fn load(dir: &Path, device: &Device) -> Result<AotTransformer> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let hidden = manifest.get("hidden").as_usize().context("manifest: hidden")?;
+
+        let mut variants = Vec::new();
+        for entry in manifest.get("models").as_arr().context("manifest: models")? {
+            let path = entry.get("path").as_str().context("model path")?;
+            let bucket = entry.get("bucket").as_usize().context("model bucket")?;
+            let exe = device
+                .compile_hlo_file(&dir.join(path))
+                .with_context(|| format!("compiling {path}"))?;
+            variants.push(AotVariant { bucket, exe });
+        }
+        variants.sort_by_key(|v| v.bucket);
+        if variants.is_empty() {
+            bail!("no model variants in manifest");
+        }
+
+        let weights_text = std::fs::read_to_string(dir.join("weights.json"))?;
+        let wdoc = json::parse(&weights_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let names = [
+            "wq", "wk", "wv", "wo", "ln1_g", "ln1_b", "w1", "b1", "w2", "b2", "ln2_g", "ln2_b",
+        ];
+        let mut weights = Vec::with_capacity(names.len());
+        for name in names {
+            let entry = wdoc.get(name);
+            let dims: Vec<usize> = entry
+                .get("dims")
+                .as_arr()
+                .context("weight dims")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let data: Vec<f32> = entry
+                .get("data")
+                .as_arr()
+                .context("weight data")?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect();
+            weights.push(Tensor::f32(&dims, data));
+        }
+
+        Ok(AotTransformer { hidden, variants, weights, runs: 0, pad_copies: 0 })
+    }
+
+    /// The §4.3 selection logic: smallest bucket that fits.
+    pub fn select(&self, n: usize) -> Result<&AotVariant> {
+        self.variants
+            .iter()
+            .find(|v| v.bucket >= n)
+            .with_context(|| format!("sequence length {n} exceeds largest bucket"))
+    }
+
+    /// Run one request `x: [n, hidden]` through the right variant.
+    pub fn run(&mut self, x: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(x.rank() == 2 && x.dims[1] == self.hidden, "bad input shape");
+        let n = x.dims[0];
+        let variant = self
+            .variants
+            .iter()
+            .find(|v| v.bucket >= n)
+            .with_context(|| format!("sequence length {n} exceeds largest bucket"))?;
+        let padded = if n == variant.bucket {
+            x.clone()
+        } else {
+            self.pad_copies += 1;
+            pad_box(x, &[variant.bucket, self.hidden], None)?
+        };
+        let n_scalar = Tensor::i32(&[], vec![n as i32]);
+        let mut args: Vec<&Tensor> = vec![&padded, &n_scalar];
+        args.extend(self.weights.iter());
+        let outs = variant
+            .exe
+            .run_tuple(&args, &[(vec![variant.bucket, self.hidden], DType::F32)])?;
+        self.runs += 1;
+        let out = outs.into_iter().next().unwrap();
+        if n == variant.bucket {
+            Ok(out)
+        } else {
+            crop_box(&out, &[n, self.hidden])
+        }
+    }
+}
+
+/// Register the pre-generated GEMM artifacts as §4.5 library entries.
+pub fn register_gemms(dir: &Path, device: &Device, lib: &mut GemmLibrary) -> Result<usize> {
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let manifest = json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut count = 0;
+    for entry in manifest.get("gemms").as_arr().context("manifest: gemms")? {
+        let path = entry.get("path").as_str().context("gemm path")?;
+        let key = GemmKey {
+            batch: 0,
+            m: entry.get("m").as_usize().context("m")?,
+            k: entry.get("k").as_usize().context("k")?,
+            n: entry.get("n").as_usize().context("n")?,
+        };
+        let exe = device.compile_hlo_file(&dir.join(path))?;
+        lib.register_pregen(key, exe);
+        count += 1;
+    }
+    Ok(count)
+}
+
+/// Default artifacts directory: `$DISC_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> std::path::PathBuf {
+    std::env::var_os("DISC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_and_runs_aot_transformer() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let device = Device::cpu().unwrap();
+        let mut model = AotTransformer::load(&default_dir(), &device).unwrap();
+        assert!(model.variants.len() >= 2);
+        let mut rng = crate::util::prng::Prng::new(77);
+        for n in [7usize, 32, 50, 100] {
+            let x = Tensor::f32(&[n, model.hidden], rng.fill_f32(n * model.hidden, 1.0));
+            let out = model.run(&x).unwrap();
+            assert_eq!(out.dims, vec![n, model.hidden]);
+            let v = out.as_f32().unwrap();
+            assert!(v.iter().all(|x| x.is_finite()));
+            // LayerNormed outputs: every row ~zero mean.
+            let h = model.hidden;
+            let row0: f32 = v[..h].iter().sum::<f32>() / h as f32;
+            assert!(row0.abs() < 0.15, "row mean {row0}");
+        }
+    }
+
+    #[test]
+    fn masking_isolates_requests_from_padding() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let device = Device::cpu().unwrap();
+        let mut model = AotTransformer::load(&default_dir(), &device).unwrap();
+        // Same logical request at two lengths landing in the same bucket:
+        // the first `n` rows must agree exactly with a direct computation
+        // at any padding amount.
+        let mut rng = crate::util::prng::Prng::new(78);
+        let n = 20usize;
+        let x = Tensor::f32(&[n, model.hidden], rng.fill_f32(n * model.hidden, 1.0));
+        let out1 = model.run(&x).unwrap();
+        let out2 = model.run(&x).unwrap();
+        assert!(out1.allclose(&out2, 0.0, 0.0).unwrap(), "deterministic");
+    }
+
+    #[test]
+    fn gemm_registration() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let device = std::rc::Rc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(device.clone());
+        let n = register_gemms(&default_dir(), &device, &mut lib).unwrap();
+        assert!(n >= 5);
+        assert!(lib.has_pregen(&GemmKey { batch: 0, m: 64, k: 64, n: 64 }));
+        // A pre-generated entry serves the call (no on-demand build).
+        let a = Tensor::f32(&[64, 64], vec![0.01; 4096]);
+        let b = Tensor::f32(&[64, 64], vec![0.01; 4096]);
+        lib.matmul(&a, &b).unwrap();
+        assert_eq!(lib.stats.pregen_hits, 1);
+        assert_eq!(lib.stats.entries_built, 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Dynamic buffer management (§4.2.2).
+//!
+//! Two layers, as in the paper:
+//!
+//! 1. **Compile-time liveness**: the program generator places `Dealloc`
+//!    steps immediately after a value's last use (free-as-soon-as-dead) and
+//!    computes reuse classes from the tensor-size-equality constraint
+//!    (buffers provably the same size can share an arena slot).
+//! 2. **Runtime cached allocator**: freed blocks go to size-bucketed free
+//!    lists (the paper lowers `alloc`/`dealloc` to TF/PyTorch's cached
+//!    allocator; ours is built from scratch). Allocation requests are
+//!    served from the pool when possible, avoiding the underlying
+//!    allocator on the hot path.
+
+use std::collections::HashMap;
+
+/// Size-bucketed pool of f32 blocks (the dominant tensor dtype on the
+/// device path; other dtypes fall through to the system allocator and are
+/// still counted).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: HashMap<usize, Vec<Vec<f32>>>,
+    pub stats: PoolStats,
+    /// Maximum blocks parked per bucket (bounds idle memory).
+    pub max_per_bucket: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub allocs: u64,
+    pub pool_hits: u64,
+    pub system_allocs: u64,
+    pub frees: u64,
+    pub bytes_allocated: u64,
+    pub high_water_bytes: u64,
+    cur_bytes: u64,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        BufferPool { free: HashMap::new(), stats: PoolStats::default(), max_per_bucket: 16 }
+    }
+
+    fn bucket(n: usize) -> usize {
+        crate::util::next_pow2(n.max(1))
+    }
+
+    /// Get an f32 block of exactly `n` elements (capacity may be larger).
+    pub fn alloc_f32(&mut self, n: usize, fill: f32) -> Vec<f32> {
+        self.stats.allocs += 1;
+        self.stats.bytes_allocated += (n * 4) as u64;
+        self.stats.cur_bytes += (n * 4) as u64;
+        self.stats.high_water_bytes = self.stats.high_water_bytes.max(self.stats.cur_bytes);
+        let b = Self::bucket(n);
+        if let Some(list) = self.free.get_mut(&b) {
+            if let Some(mut v) = list.pop() {
+                self.stats.pool_hits += 1;
+                v.clear();
+                v.resize(n, fill);
+                return v;
+            }
+        }
+        self.stats.system_allocs += 1;
+        let mut v = Vec::with_capacity(b);
+        v.resize(n, fill);
+        v
+    }
+
+    /// Return a block to the pool.
+    pub fn free_f32(&mut self, v: Vec<f32>) {
+        self.stats.frees += 1;
+        self.stats.cur_bytes = self.stats.cur_bytes.saturating_sub((v.len() * 4) as u64);
+        let b = Self::bucket(v.capacity().max(1));
+        let list = self.free.entry(b).or_default();
+        if list.len() < self.max_per_bucket {
+            list.push(v);
+        }
+    }
+
+    /// Reuse ratio so far.
+    pub fn hit_rate(&self) -> f64 {
+        if self.stats.allocs == 0 {
+            0.0
+        } else {
+            self.stats.pool_hits as f64 / self.stats.allocs as f64
+        }
+    }
+}
+
+/// Compile-time liveness: for each value, the index of the last step that
+/// reads it. The program generator turns this into `Dealloc` placements.
+pub fn last_use_steps(uses_per_step: &[Vec<usize>], n_values: usize) -> Vec<Option<usize>> {
+    let mut last = vec![None; n_values];
+    for (step, uses) in uses_per_step.iter().enumerate() {
+        for &v in uses {
+            last[v] = Some(step);
+        }
+    }
+    last
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_blocks() {
+        let mut p = BufferPool::new();
+        let a = p.alloc_f32(100, 0.0);
+        assert_eq!(p.stats.system_allocs, 1);
+        p.free_f32(a);
+        let b = p.alloc_f32(90, 1.0); // same bucket (128)
+        assert_eq!(p.stats.pool_hits, 1);
+        assert_eq!(p.stats.system_allocs, 1);
+        assert_eq!(b.len(), 90);
+        assert!(b.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn distinct_buckets_do_not_alias() {
+        let mut p = BufferPool::new();
+        let a = p.alloc_f32(10, 0.0);
+        p.free_f32(a);
+        let _b = p.alloc_f32(1000, 0.0); // different bucket: fresh alloc
+        assert_eq!(p.stats.system_allocs, 2);
+    }
+
+    #[test]
+    fn high_water_tracking() {
+        let mut p = BufferPool::new();
+        let a = p.alloc_f32(256, 0.0);
+        let b = p.alloc_f32(256, 0.0);
+        assert_eq!(p.stats.high_water_bytes, 2 * 256 * 4);
+        p.free_f32(a);
+        p.free_f32(b);
+        let _ = p.alloc_f32(256, 0.0);
+        assert_eq!(p.stats.high_water_bytes, 2 * 256 * 4, "reuse keeps high water flat");
+    }
+
+    #[test]
+    fn pool_bounds_parked_blocks() {
+        let mut p = BufferPool::new();
+        p.max_per_bucket = 2;
+        let blocks: Vec<_> = (0..4).map(|_| p.alloc_f32(64, 0.0)).collect();
+        for b in blocks {
+            p.free_f32(b);
+        }
+        assert_eq!(p.free.get(&64).map(|l| l.len()), Some(2));
+    }
+
+    #[test]
+    fn liveness_last_use() {
+        // steps read: [0], [0,1], [2]
+        let uses = vec![vec![0], vec![0, 1], vec![2]];
+        let last = last_use_steps(&uses, 4);
+        assert_eq!(last, vec![Some(1), Some(1), Some(2), None]);
+    }
+}

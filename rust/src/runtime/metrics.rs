@@ -1,0 +1,106 @@
+//! Execution metrics: the quantities behind every table and figure in the
+//! paper's evaluation (kernel launches, off-chip bytes, compile events,
+//! CPU-vs-device time breakdown).
+
+use std::ops::AddAssign;
+use std::time::Duration;
+
+/// Metrics accumulated over one `run` (or a stream of runs, via `+=`).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Memory-intensive device kernel launches (fused + singleton).
+    pub mem_kernels: u64,
+    /// Compute-intensive library calls (GEMM).
+    pub lib_calls: u64,
+    /// Host-side ops (shape calculation, index math).
+    pub host_ops: u64,
+    /// Bitcasts (free reshapes).
+    pub bitcasts: u64,
+    /// Modeled off-chip bytes moved by memory-intensive kernels
+    /// (actual-extent inputs + outputs, once per kernel — fusion saves the
+    /// intermediate round-trips).
+    pub mem_bytes: u64,
+    /// Bytes moved by library calls.
+    pub lib_bytes: u64,
+    /// FLOPs executed by library calls.
+    pub flops: u64,
+    /// Kernel-cache misses (compilations triggered by this run).
+    pub compile_events: u64,
+    /// Time spent compiling kernels during this run.
+    pub compile_time: Duration,
+    /// Device time inside fused/singleton kernel execution.
+    pub kernel_time: Duration,
+    /// Device time inside library calls.
+    pub lib_time: Duration,
+    /// End-to-end wall time of the run.
+    pub total_time: Duration,
+    /// Pad/crop marshalling copies performed (bucket overhead).
+    pub pad_copies: u64,
+    /// Buffer-manager events.
+    pub allocs: u64,
+    pub pool_hits: u64,
+}
+
+impl RunMetrics {
+    /// Host-side (CPU) time: everything that is not device kernel/library
+    /// execution or compilation — the runtime-flow overhead the paper's
+    /// Table 2 "CPU" column measures.
+    pub fn cpu_time(&self) -> Duration {
+        self.total_time
+            .saturating_sub(self.kernel_time)
+            .saturating_sub(self.lib_time)
+            .saturating_sub(self.compile_time)
+    }
+
+    pub fn total_kernels(&self) -> u64 {
+        self.mem_kernels + self.lib_calls
+    }
+}
+
+impl AddAssign<&RunMetrics> for RunMetrics {
+    fn add_assign(&mut self, o: &RunMetrics) {
+        self.mem_kernels += o.mem_kernels;
+        self.lib_calls += o.lib_calls;
+        self.host_ops += o.host_ops;
+        self.bitcasts += o.bitcasts;
+        self.mem_bytes += o.mem_bytes;
+        self.lib_bytes += o.lib_bytes;
+        self.flops += o.flops;
+        self.compile_events += o.compile_events;
+        self.compile_time += o.compile_time;
+        self.kernel_time += o.kernel_time;
+        self.lib_time += o.lib_time;
+        self.total_time += o.total_time;
+        self.pad_copies += o.pad_copies;
+        self.allocs += o.allocs;
+        self.pool_hits += o.pool_hits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_time_subtracts_device_time() {
+        let m = RunMetrics {
+            total_time: Duration::from_millis(100),
+            kernel_time: Duration::from_millis(30),
+            lib_time: Duration::from_millis(20),
+            compile_time: Duration::from_millis(10),
+            ..Default::default()
+        };
+        assert_eq!(m.cpu_time(), Duration::from_millis(40));
+    }
+
+    #[test]
+    fn accumulation() {
+        let mut a = RunMetrics { mem_kernels: 3, flops: 10, ..Default::default() };
+        let b = RunMetrics { mem_kernels: 4, lib_calls: 2, flops: 5, ..Default::default() };
+        a += &b;
+        assert_eq!(a.mem_kernels, 7);
+        assert_eq!(a.lib_calls, 2);
+        assert_eq!(a.total_kernels(), 9);
+        assert_eq!(a.flops, 15);
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime substrate: host tensors, symbol resolution, the reference
+//! interpreter (numerics oracle + eager baseline), buffer management, the
+//! PJRT device wrapper, and the compiled-program executor.
+
+pub mod artifacts;
+pub mod buffers;
+pub mod eager;
+pub mod executor;
+pub mod metrics;
+pub mod pjrt;
+pub mod reference;
+pub mod shape_env;
+pub mod tensor;
+
+pub use shape_env::SymEnv;
+pub use tensor::Tensor;

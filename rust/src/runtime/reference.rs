@@ -1,0 +1,639 @@
+//! Reference interpreter: per-op concrete evaluation over host tensors.
+//!
+//! Three consumers:
+//! 1. the **numerics oracle** integration tests compare every backend
+//!    against;
+//! 2. the **framework-eager baseline** (`Mode::Eager`): one pre-built kernel
+//!    per op, launched one-by-one — exactly how TF/PyTorch execute the
+//!    memory-intensive portion of a graph;
+//! 3. **constant folding** inside the pass pipeline.
+
+use crate::dhlo::{BinKind, CmpDir, DType, Module, Op, ReduceKind, UnKind};
+use crate::runtime::shape_env::SymEnv;
+use crate::runtime::tensor::{ravel, strides_of, unravel, Data, Tensor};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Abramowitz–Stegun 7.1.26 rational approximation of erf (|err| < 1.5e-7),
+/// matching XLA's f32 erf to well within test tolerances.
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x / std::f32::consts::SQRT_2))
+}
+
+/// Evaluate a unary elementwise op.
+pub fn eval_unary(k: UnKind, x: &Tensor) -> Result<Tensor> {
+    match &x.data {
+        Data::F32(v) => {
+            let f: fn(f32) -> f32 = match k {
+                UnKind::Abs => f32::abs,
+                UnKind::Neg => |a| -a,
+                UnKind::Exp => f32::exp,
+                UnKind::Log => f32::ln,
+                UnKind::Tanh => f32::tanh,
+                UnKind::Sqrt => f32::sqrt,
+                UnKind::Rsqrt => |a| 1.0 / a.sqrt(),
+                UnKind::Sigmoid => |a| 1.0 / (1.0 + (-a).exp()),
+                UnKind::Relu => |a| a.max(0.0),
+                UnKind::Gelu => gelu,
+                UnKind::Erf => erf,
+                UnKind::Floor => f32::floor,
+                UnKind::Sign => |a| {
+                    if a > 0.0 {
+                        1.0
+                    } else if a < 0.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    }
+                },
+            };
+            Ok(Tensor::f32(&x.dims, v.iter().map(|&a| f(a)).collect()))
+        }
+        Data::I64(v) => {
+            let f: fn(i64) -> i64 = match k {
+                UnKind::Abs => i64::abs,
+                UnKind::Neg => |a| -a,
+                UnKind::Sign => i64::signum,
+                _ => bail!("unary {k:?} unsupported for i64"),
+            };
+            Ok(Tensor::i64(&x.dims, v.iter().map(|&a| f(a)).collect()))
+        }
+        _ => bail!("unary {k:?} unsupported for {:?}", x.dtype),
+    }
+}
+
+/// Evaluate a binary elementwise op (shapes must match exactly; DHLO makes
+/// broadcasts explicit).
+pub fn eval_binary(k: BinKind, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(a.dims == b.dims, "binary {k:?}: shape mismatch {:?} vs {:?}", a.dims, b.dims);
+    match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => {
+            let f: fn(f32, f32) -> f32 = match k {
+                BinKind::Add => |p, q| p + q,
+                BinKind::Sub => |p, q| p - q,
+                BinKind::Mul => |p, q| p * q,
+                BinKind::Div => |p, q| p / q,
+                BinKind::Max => f32::max,
+                BinKind::Min => f32::min,
+                BinKind::Pow => f32::powf,
+            };
+            Ok(Tensor::f32(&a.dims, x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect()))
+        }
+        (Data::I64(x), Data::I64(y)) => {
+            let f: fn(i64, i64) -> i64 = match k {
+                BinKind::Add => |p, q| p + q,
+                BinKind::Sub => |p, q| p - q,
+                BinKind::Mul => |p, q| p * q,
+                BinKind::Div => |p, q| p / q,
+                BinKind::Max => i64::max,
+                BinKind::Min => i64::min,
+                BinKind::Pow => bail!("pow unsupported for i64"),
+            };
+            Ok(Tensor::i64(&a.dims, x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect()))
+        }
+        _ => bail!("binary {k:?}: dtype mismatch"),
+    }
+}
+
+fn eval_compare(dir: CmpDir, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(a.dims == b.dims, "compare: shape mismatch");
+    let cmp = |o: std::cmp::Ordering| match dir {
+        CmpDir::Eq => o == std::cmp::Ordering::Equal,
+        CmpDir::Ne => o != std::cmp::Ordering::Equal,
+        CmpDir::Lt => o == std::cmp::Ordering::Less,
+        CmpDir::Le => o != std::cmp::Ordering::Greater,
+        CmpDir::Gt => o == std::cmp::Ordering::Greater,
+        CmpDir::Ge => o != std::cmp::Ordering::Less,
+    };
+    let out: Vec<bool> = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => x
+            .iter()
+            .zip(y)
+            .map(|(p, q)| cmp(p.partial_cmp(q).unwrap_or(std::cmp::Ordering::Greater)))
+            .collect(),
+        (Data::I64(x), Data::I64(y)) => x.iter().zip(y).map(|(p, q)| cmp(p.cmp(q))).collect(),
+        _ => bail!("compare: dtype mismatch"),
+    };
+    Ok(Tensor::pred(&a.dims, out))
+}
+
+fn eval_select(p: &Tensor, t: &Tensor, f: &Tensor) -> Result<Tensor> {
+    ensure!(p.dims == t.dims && t.dims == f.dims, "select: shape mismatch");
+    let pv = p.as_pred()?;
+    match (&t.data, &f.data) {
+        (Data::F32(x), Data::F32(y)) => Ok(Tensor::f32(
+            &t.dims,
+            pv.iter().zip(x.iter().zip(y)).map(|(&c, (&a, &b))| if c { a } else { b }).collect(),
+        )),
+        (Data::I64(x), Data::I64(y)) => Ok(Tensor::i64(
+            &t.dims,
+            pv.iter().zip(x.iter().zip(y)).map(|(&c, (&a, &b))| if c { a } else { b }).collect(),
+        )),
+        _ => bail!("select: dtype mismatch"),
+    }
+}
+
+fn eval_convert(x: &Tensor, to: DType) -> Result<Tensor> {
+    let n = x.elems();
+    Ok(match (to, &x.data) {
+        (DType::F32, Data::I64(v)) => Tensor::f32(&x.dims, v.iter().map(|&a| a as f32).collect()),
+        (DType::F32, Data::I32(v)) => Tensor::f32(&x.dims, v.iter().map(|&a| a as f32).collect()),
+        (DType::F32, Data::Pred(v)) => {
+            Tensor::f32(&x.dims, v.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect())
+        }
+        (DType::I64, Data::F32(v)) => Tensor::i64(&x.dims, v.iter().map(|&a| a as i64).collect()),
+        (DType::I64, Data::I32(v)) => Tensor::i64(&x.dims, v.iter().map(|&a| a as i64).collect()),
+        (DType::I32, Data::I64(v)) => Tensor::i32(&x.dims, v.iter().map(|&a| a as i32).collect()),
+        (DType::I32, Data::F32(v)) => Tensor::i32(&x.dims, v.iter().map(|&a| a as i32).collect()),
+        (t, _) if t == x.dtype => x.clone(),
+        _ => bail!("convert {:?} -> {to:?} unsupported ({n} elems)", x.dtype),
+    })
+}
+
+fn eval_broadcast(x: &Tensor, mapping: &[usize], out_dims: &[usize]) -> Result<Tensor> {
+    let in_strides = x.strides();
+    let total: usize = out_dims.iter().product();
+    let fetch = |out_lin: usize| -> usize {
+        let coord = unravel(out_lin, out_dims);
+        let mut in_idx = 0usize;
+        for (i, &m) in mapping.iter().enumerate() {
+            let c = if x.dims[i] == 1 { 0 } else { coord[m] };
+            in_idx += c * in_strides[i];
+        }
+        in_idx
+    };
+    Ok(match &x.data {
+        Data::F32(v) => Tensor::f32(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::I64(v) => Tensor::i64(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::I32(v) => Tensor::i32(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::Pred(v) => Tensor::pred(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+    })
+}
+
+fn eval_transpose(x: &Tensor, perm: &[usize]) -> Result<Tensor> {
+    let out_dims: Vec<usize> = perm.iter().map(|&p| x.dims[p]).collect();
+    let in_strides = x.strides();
+    let total = x.elems();
+    let fetch = |out_lin: usize| -> usize {
+        let coord = unravel(out_lin, &out_dims);
+        let mut idx = 0;
+        for (o, &p) in perm.iter().enumerate() {
+            idx += coord[o] * in_strides[p];
+        }
+        idx
+    };
+    Ok(match &x.data {
+        Data::F32(v) => Tensor::f32(&out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::I64(v) => Tensor::i64(&out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::I32(v) => Tensor::i32(&out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::Pred(v) => Tensor::pred(&out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+    })
+}
+
+fn eval_concat(xs: &[&Tensor], axis: usize, out_dims: &[usize]) -> Result<Tensor> {
+    let mut out = Tensor::zeros(xs[0].dtype, out_dims);
+    let out_strides = strides_of(out_dims);
+    let mut offset = 0usize;
+    for x in xs {
+        let total = x.elems();
+        for lin in 0..total {
+            let mut coord = unravel(lin, &x.dims);
+            coord[axis] += offset;
+            let out_lin = ravel(&coord, &out_strides);
+            copy_elem(x, lin, &mut out, out_lin)?;
+        }
+        offset += x.dims[axis];
+    }
+    Ok(out)
+}
+
+fn copy_elem(src: &Tensor, si: usize, dst: &mut Tensor, di: usize) -> Result<()> {
+    match (&src.data, &mut dst.data) {
+        (Data::F32(s), Data::F32(d)) => d[di] = s[si],
+        (Data::I64(s), Data::I64(d)) => d[di] = s[si],
+        (Data::I32(s), Data::I32(d)) => d[di] = s[si],
+        (Data::Pred(s), Data::Pred(d)) => d[di] = s[si],
+        _ => bail!("copy_elem dtype mismatch"),
+    }
+    Ok(())
+}
+
+fn eval_slice(x: &Tensor, starts: &[i64], strides: &[i64], out_dims: &[usize]) -> Result<Tensor> {
+    let in_strides = x.strides();
+    let total: usize = out_dims.iter().product();
+    let fetch = |out_lin: usize| -> usize {
+        let coord = unravel(out_lin, out_dims);
+        coord
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (starts[i] as usize + c * strides[i] as usize) * in_strides[i])
+            .sum()
+    };
+    Ok(match &x.data {
+        Data::F32(v) => Tensor::f32(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::I64(v) => Tensor::i64(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::I32(v) => Tensor::i32(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+        Data::Pred(v) => Tensor::pred(out_dims, (0..total).map(|i| v[fetch(i)]).collect()),
+    })
+}
+
+fn eval_pad(x: &Tensor, value: &Tensor, low: &[i64], out_dims: &[usize]) -> Result<Tensor> {
+    let mut out = match &value.data {
+        Data::F32(v) => Tensor::f32(out_dims, vec![v[0]; out_dims.iter().product()]),
+        Data::I64(v) => Tensor::i64(out_dims, vec![v[0]; out_dims.iter().product()]),
+        Data::I32(v) => Tensor::i32(out_dims, vec![v[0]; out_dims.iter().product()]),
+        Data::Pred(v) => Tensor::pred(out_dims, vec![v[0]; out_dims.iter().product()]),
+    };
+    let out_strides = strides_of(out_dims);
+    for lin in 0..x.elems() {
+        let coord = unravel(lin, &x.dims);
+        let out_lin: usize = coord
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c + low[i] as usize) * out_strides[i])
+            .sum();
+        copy_elem(x, lin, &mut out, out_lin)?;
+    }
+    Ok(out)
+}
+
+fn eval_reduce(kind: ReduceKind, x: &Tensor, axes: &[usize], out_dims: &[usize]) -> Result<Tensor> {
+    let v = x.as_f32().context("reduce: f32 only")?;
+    let out_strides = strides_of(out_dims);
+    let init = kind.neutral();
+    let mut acc = vec![init; out_dims.iter().product::<usize>().max(1)];
+    for lin in 0..x.elems() {
+        let coord = unravel(lin, &x.dims);
+        let out_coord: Vec<usize> = coord
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !axes.contains(i))
+            .map(|(_, &c)| c)
+            .collect();
+        let oi = ravel(&out_coord, &out_strides);
+        acc[oi] = match kind {
+            ReduceKind::Sum | ReduceKind::Mean => acc[oi] + v[lin],
+            ReduceKind::Max => acc[oi].max(v[lin]),
+            ReduceKind::Min => acc[oi].min(v[lin]),
+        };
+    }
+    if kind == ReduceKind::Mean {
+        let denom: usize = axes.iter().map(|&a| x.dims[a]).product();
+        for a in acc.iter_mut() {
+            *a /= denom as f32;
+        }
+    }
+    Ok(Tensor::f32(out_dims, acc))
+}
+
+fn eval_dot(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (av, bv) = (a.as_f32()?, b.as_f32()?);
+    match (a.rank(), b.rank()) {
+        (2, 2) => {
+            let (m, k) = (a.dims[0], a.dims[1]);
+            let n = b.dims[1];
+            ensure!(b.dims[0] == k, "dot: contracting mismatch");
+            let mut out = vec![0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let x = av[i * k + kk];
+                    if x == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        out[i * n + j] += x * bv[kk * n + j];
+                    }
+                }
+            }
+            Ok(Tensor::f32(&[m, n], out))
+        }
+        (3, 3) => {
+            let (bsz, m, k) = (a.dims[0], a.dims[1], a.dims[2]);
+            let n = b.dims[2];
+            ensure!(b.dims[0] == bsz && b.dims[1] == k, "batched dot: shape mismatch");
+            let mut out = vec![0f32; bsz * m * n];
+            for bb in 0..bsz {
+                let (ao, bo, oo) = (bb * m * k, bb * k * n, bb * m * n);
+                for i in 0..m {
+                    for kk in 0..k {
+                        let x = av[ao + i * k + kk];
+                        if x == 0.0 {
+                            continue;
+                        }
+                        for j in 0..n {
+                            out[oo + i * n + j] += x * bv[bo + kk * n + j];
+                        }
+                    }
+                }
+            }
+            Ok(Tensor::f32(&[bsz, m, n], out))
+        }
+        _ => bail!("dot: unsupported ranks"),
+    }
+}
+
+fn eval_gather(x: &Tensor, idx: &Tensor, axis: usize, out_dims: &[usize]) -> Result<Tensor> {
+    let iv = idx.as_i64()?;
+    let in_strides = x.strides();
+    let total: usize = out_dims.iter().product();
+    let fetch = |out_lin: usize| -> Result<usize> {
+        let coord = unravel(out_lin, out_dims);
+        let mut idx_sum = 0usize;
+        for (i, &c) in coord.iter().enumerate() {
+            let c_in = if i == axis {
+                let j = iv[c];
+                ensure!(j >= 0 && (j as usize) < x.dims[axis], "gather index {j} out of range");
+                j as usize
+            } else {
+                c
+            };
+            idx_sum += c_in * in_strides[i];
+        }
+        Ok(idx_sum)
+    };
+    let mut out = Tensor::zeros(x.dtype, out_dims);
+    for lin in 0..total {
+        let src = fetch(lin)?;
+        copy_elem(x, src, &mut out, lin)?;
+    }
+    Ok(out)
+}
+
+fn eval_iota(dtype: DType, out_dims: &[usize], axis: usize) -> Result<Tensor> {
+    let total: usize = out_dims.iter().product();
+    let vals: Vec<usize> = (0..total).map(|lin| unravel(lin, out_dims)[axis]).collect();
+    Ok(match dtype {
+        DType::F32 => Tensor::f32(out_dims, vals.iter().map(|&v| v as f32).collect()),
+        DType::I64 => Tensor::i64(out_dims, vals.iter().map(|&v| v as i64).collect()),
+        DType::I32 => Tensor::i32(out_dims, vals.iter().map(|&v| v as i32).collect()),
+        DType::Pred => bail!("iota: pred unsupported"),
+    })
+}
+
+fn eval_unique(x: &Tensor) -> Result<Tensor> {
+    let v = x.as_i64()?;
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for &e in v {
+        if seen.insert(e) {
+            out.push(e);
+        }
+    }
+    let n = out.len();
+    Ok(Tensor::i64(&[n], out))
+}
+
+/// Evaluate one non-Param/Const op over concrete operand tensors.
+/// `out_dims` must be the already-resolved concrete output dims and
+/// `out_dtype` the instruction's element type.
+pub fn eval_op(op: &Op, operands: &[&Tensor], out_dims: &[usize], out_dtype: DType) -> Result<Tensor> {
+    match op {
+        Op::Param { .. } | Op::Const { .. } => bail!("handled by caller"),
+        Op::Un(k) => eval_unary(*k, operands[0]),
+        Op::Bin(k) => eval_binary(*k, operands[0], operands[1]),
+        Op::Cmp(d) => eval_compare(*d, operands[0], operands[1]),
+        Op::Select => eval_select(operands[0], operands[1], operands[2]),
+        Op::Convert(t) => eval_convert(operands[0], *t),
+        Op::Broadcast { dims } | Op::DBroadcast { dims } => {
+            eval_broadcast(operands[0], dims, out_dims)
+        }
+        Op::Transpose { perm } => eval_transpose(operands[0], perm),
+        Op::Reshape | Op::DReshape => operands[0].clone().with_dims(out_dims),
+        Op::Concat { axis } => eval_concat(operands, *axis, out_dims),
+        Op::Slice { starts, strides, .. } => eval_slice(operands[0], starts, strides, out_dims),
+        Op::DSlice => {
+            let starts = operands[1].as_i64()?.to_vec();
+            let strides = operands[3].as_i64()?.to_vec();
+            eval_slice(operands[0], &starts, &strides, out_dims)
+        }
+        Op::Pad { low, .. } => eval_pad(operands[0], operands[1], low, out_dims),
+        Op::DPad => {
+            let low = operands[2].as_i64()?.to_vec();
+            eval_pad(operands[0], operands[1], &low, out_dims)
+        }
+        Op::Reduce { kind, axes } => eval_reduce(*kind, operands[0], axes, out_dims),
+        Op::Dot => eval_dot(operands[0], operands[1]),
+        Op::Gather { axis } => eval_gather(operands[0], operands[1], *axis, out_dims),
+        Op::Iota { axis } => eval_iota(out_dtype, out_dims, *axis),
+        Op::Unique => eval_unique(operands[0]),
+        Op::GetDimSize { axis } => Ok(Tensor::scalar_i64(operands[0].dims[*axis] as i64)),
+    }
+}
+
+/// Full-module reference evaluation. Also returns the number of "kernel
+/// launches" (one per non-Param/Const instruction), which is what the eager
+/// baseline's launch counter reports.
+pub struct EvalResult {
+    pub outputs: Vec<Tensor>,
+    pub launches: usize,
+    /// Total bytes read+written by memory-intensive ops (off-chip traffic
+    /// model for the eager baseline).
+    pub bytes_moved: usize,
+}
+
+pub fn eval_module(m: &Module, inputs: &[Tensor]) -> Result<EvalResult> {
+    let mut env = SymEnv::new();
+    env.bind_params(m, inputs)?;
+    let mut vals: Vec<Option<Tensor>> = vec![None; m.instrs.len()];
+    let mut launches = 0usize;
+    let mut bytes_moved = 0usize;
+
+    for (id, ins) in m.instrs.iter().enumerate() {
+        let t = match &ins.op {
+            Op::Param { index } => inputs[*index].clone(),
+            Op::Const { lit, dims } => Tensor::from_literal(lit, dims),
+            Op::Unique => {
+                let x = vals[ins.operands[0]].as_ref().unwrap();
+                let u = eval_unique(x)?;
+                env.set_datadep(m, id, u.dims[0] as i64);
+                launches += 1;
+                bytes_moved += x.byte_size() + u.byte_size();
+                u
+            }
+            op => {
+                let out_dims = env
+                    .resolve_dims(m, &ins.ty.dims, &vals[..])
+                    .with_context(|| format!("resolving output dims of %{id} ({})", op.name()))?;
+                let operands: Vec<&Tensor> =
+                    ins.operands.iter().map(|&o| vals[o].as_ref().unwrap()).collect();
+                launches += 1;
+                for o in &operands {
+                    bytes_moved += o.byte_size();
+                }
+                let t = eval_op(op, &operands, &out_dims, ins.ty.dtype)?;
+                bytes_moved += t.byte_size();
+                t
+            }
+        };
+        vals[id] = Some(t);
+    }
+
+    let outputs = m.outputs.iter().map(|&o| vals[o].clone().unwrap()).collect();
+    Ok(EvalResult { outputs, launches, bytes_moved })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::Builder;
+    use crate::shape::Dim;
+
+    #[test]
+    fn elementwise_chain() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let e = b.unary(UnKind::Exp, x);
+        let y = b.add(x, e).unwrap();
+        let m = b.finish(vec![y]);
+        let r = eval_module(&m, &[Tensor::f32(&[3], vec![0.0, 1.0, -1.0])]).unwrap();
+        let out = r.outputs[0].as_f32().unwrap();
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!((out[1] - (1.0 + 1f32.exp())).abs() < 1e-6);
+        assert_eq!(r.launches, 2);
+    }
+
+    #[test]
+    fn softmax_matches_manual() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(3)]);
+        let y = b.softmax_last(x).unwrap();
+        let m = b.finish(vec![y]);
+        let input = Tensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let r = eval_module(&m, &[input]).unwrap();
+        let out = r.outputs[0].as_f32().unwrap();
+        // Row sums are 1.
+        assert!((out[0] + out[1] + out[2] - 1.0).abs() < 1e-6);
+        assert!((out[3] - 1.0 / 3.0).abs() < 1e-6);
+        // Monotone in logits.
+        assert!(out[2] > out[1] && out[1] > out[0]);
+    }
+
+    #[test]
+    fn dot_2d_and_batched() {
+        let a = Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::f32(&[2, 2], vec![1., 1., 1., 1.]);
+        let r = eval_dot(&a, &b).unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[3., 3., 7., 7.]);
+        let a3 = Tensor::f32(&[1, 2, 2], vec![1., 2., 3., 4.]);
+        let b3 = Tensor::f32(&[1, 2, 2], vec![1., 0., 0., 1.]);
+        let r3 = eval_dot(&a3, &b3).unwrap();
+        assert_eq!(r3.as_f32().unwrap(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn dynamic_slice_via_tensors() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let st = b.i64_vec(&[1]);
+        let li = b.i64_vec(&[4]);
+        let sr = b.i64_vec(&[1]);
+        let sl = b.dslice(x, st, li, sr).unwrap();
+        let m = b.finish(vec![sl]);
+        let r = eval_module(&m, &[Tensor::f32(&[6], vec![0., 1., 2., 3., 4., 5.])]).unwrap();
+        assert_eq!(r.outputs[0].as_f32().unwrap(), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn unique_data_dependent_shape() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::I64, vec![s]);
+        let u = b.unique(x).unwrap();
+        // Consumer that depends on the data-dependent shape.
+        let g = b.unary(UnKind::Neg, u);
+        let m = b.finish(vec![g]);
+        let r = eval_module(&m, &[Tensor::i64(&[6], vec![3, 1, 3, 2, 1, 3])]).unwrap();
+        assert_eq!(r.outputs[0].as_i64().unwrap(), &[-3, -1, -2]);
+    }
+
+    #[test]
+    fn pad_and_concat() {
+        let mut b = Builder::new("t");
+        let x = b.param(DType::F32, vec![Dim::Fixed(2)]);
+        let z = b.scalar_f32(9.0);
+        let p = b.pad(x, z, vec![1], vec![2]).unwrap();
+        let c = b.concat(&[p, x], 0).unwrap();
+        let m = b.finish(vec![c]);
+        let r = eval_module(&m, &[Tensor::f32(&[2], vec![1., 2.])]).unwrap();
+        assert_eq!(r.outputs[0].as_f32().unwrap(), &[9., 1., 2., 9., 9., 1., 2.]);
+    }
+
+    #[test]
+    fn reduce_kinds() {
+        let x = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let sum = eval_reduce(ReduceKind::Sum, &x, &[1], &[2]).unwrap();
+        assert_eq!(sum.as_f32().unwrap(), &[6., 15.]);
+        let mx = eval_reduce(ReduceKind::Max, &x, &[0], &[3]).unwrap();
+        assert_eq!(mx.as_f32().unwrap(), &[4., 5., 6.]);
+        let mean = eval_reduce(ReduceKind::Mean, &x, &[0, 1], &[]).unwrap();
+        assert!((mean.as_f32().unwrap()[0] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let mut b = Builder::new("t");
+        let table = b.param(DType::F32, vec![Dim::Fixed(4), Dim::Fixed(2)]);
+        let n = b.dyn_dim("n", 1, 0);
+        let idx = b.param(DType::I64, vec![n]);
+        let g = b.gather(table, idx, 0).unwrap();
+        let m = b.finish(vec![g]);
+        let r = eval_module(
+            &m,
+            &[
+                Tensor::f32(&[4, 2], vec![0., 0., 1., 1., 2., 2., 3., 3.]),
+                Tensor::i64(&[3], vec![2, 0, 3]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(r.outputs[0].as_f32().unwrap(), &[2., 2., 0., 0., 3., 3.]);
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // Known values.
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427008).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427008).abs() < 1e-5);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-5);
+    }
+
+    #[test]
+    fn transpose_layernorm_pipeline() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let g = b.param(DType::F32, vec![Dim::Fixed(4)]);
+        let be = b.param(DType::F32, vec![Dim::Fixed(4)]);
+        let ln = b.layernorm_last(x, g, be, 1e-5).unwrap();
+        let m = b.finish(vec![ln]);
+        let r = eval_module(
+            &m,
+            &[
+                Tensor::f32(&[2, 4], vec![1., 2., 3., 4., -1., -2., -3., -4.]),
+                Tensor::f32(&[4], vec![1.; 4]),
+                Tensor::f32(&[4], vec![0.; 4]),
+            ],
+        )
+        .unwrap();
+        let out = r.outputs[0].as_f32().unwrap();
+        // Each row should be mean ~0, var ~1.
+        let row0: f32 = out[..4].iter().sum();
+        assert!(row0.abs() < 1e-4);
+        let var0: f32 = out[..4].iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var0 - 1.0).abs() < 1e-2);
+    }
+}

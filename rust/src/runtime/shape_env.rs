@@ -1,0 +1,291 @@
+//! Runtime symbol resolution — the executable half of §4.2.1.
+//!
+//! At compile time every symbolic dimension got a [`ShapeExpr`] definition.
+//! At runtime, a [`SymEnv`] binds the entry parameters' concrete extents and
+//! evaluates derived symbols on demand (concat sums, dynamic-slice
+//! `ceildiv`s, pad widths read out of host shape tensors, …). Data-dependent
+//! extents (`Unique`) are pushed in by the kernel that produces them.
+//!
+//! Binding also *checks* the collected constraints: if two unified dims
+//! arrive with different extents the request is rejected — the compile-time
+//! constraint was a contract with the frontend.
+
+use crate::dhlo::Module;
+use crate::runtime::tensor::Tensor;
+use crate::shape::{Dim, ShapeExpr, SymId};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+/// Read access to already-evaluated IR values, abstracted so both the
+/// reference interpreter (`Vec<Option<Tensor>>`) and the executor
+/// (`Vec<Option<Rc<Tensor>>>`) can drive shape resolution.
+pub trait Vals {
+    fn tensor(&self, v: usize) -> Option<&Tensor>;
+}
+
+impl Vals for [Option<Tensor>] {
+    fn tensor(&self, v: usize) -> Option<&Tensor> {
+        self.get(v).and_then(|o| o.as_ref())
+    }
+}
+
+impl Vals for [Option<std::rc::Rc<Tensor>>] {
+    fn tensor(&self, v: usize) -> Option<&Tensor> {
+        self.get(v).and_then(|o| o.as_deref())
+    }
+}
+
+/// Empty value store (for resolving shapes that depend only on inputs).
+pub struct NoVals;
+
+impl Vals for NoVals {
+    fn tensor(&self, _v: usize) -> Option<&Tensor> {
+        None
+    }
+}
+
+/// Concrete values for symbolic dims, keyed by canonical symbol.
+#[derive(Debug, Clone, Default)]
+pub struct SymEnv {
+    vals: HashMap<SymId, i64>,
+    /// Concrete dims of each entry parameter (bound once per request).
+    param_dims: Vec<Vec<usize>>,
+}
+
+impl SymEnv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind the entry parameters' runtime shapes, checking them against the
+    /// declared types and the collected dimension-equality constraints.
+    pub fn bind_params(&mut self, m: &Module, inputs: &[Tensor]) -> Result<()> {
+        ensure!(
+            inputs.len() == m.params.len(),
+            "expected {} inputs, got {}",
+            m.params.len(),
+            inputs.len()
+        );
+        self.param_dims = inputs.iter().map(|t| t.dims.clone()).collect();
+        for (p, (ty, t)) in m.params.iter().zip(inputs).enumerate() {
+            ensure!(
+                ty.dtype == t.dtype,
+                "param {p}: dtype mismatch (declared {}, got {:?})",
+                ty.dtype,
+                t.dtype
+            );
+            ensure!(
+                ty.rank() == t.rank(),
+                "param {p}: rank mismatch (declared {}, got {})",
+                ty.rank(),
+                t.rank()
+            );
+            for (axis, &d) in ty.dims.iter().enumerate() {
+                let actual = t.dims[axis] as i64;
+                match m.syms.canon_dim(d) {
+                    Dim::Fixed(n) => ensure!(
+                        n as i64 == actual,
+                        "param {p} axis {axis}: expected {n}, got {actual}"
+                    ),
+                    Dim::Sym(s) => {
+                        if let Some(&prev) = self.vals.get(&s) {
+                            ensure!(
+                                prev == actual,
+                                "constraint violation: param {p} axis {axis} = {actual} \
+                                 but a unified dim was already bound to {prev}"
+                            );
+                        } else {
+                            self.vals.insert(s, actual);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Seed a known symbol value (used by the VM baseline, whose runtime
+    /// tensor objects carry concrete shapes across per-op shape functions).
+    pub fn seed(&mut self, s: SymId, v: i64) {
+        self.vals.insert(s, v);
+    }
+
+    /// Read access to every resolved symbol binding.
+    pub fn resolved(&self) -> &HashMap<SymId, i64> {
+        &self.vals
+    }
+
+    /// Record a data-dependent extent produced by a kernel (Unique).
+    pub fn set_datadep(&mut self, m: &Module, value: usize, n: i64) {
+        // Find the symbol whose definition is DataDep{value} and bind its
+        // canonical representative.
+        for i in 0..m.syms.len() {
+            let s = SymId(i as u32);
+            if matches!(m.syms.def(s), ShapeExpr::DataDep { value: v } if *v == value) {
+                self.vals.insert(m.syms.canon(s), n);
+            }
+        }
+    }
+
+    /// Resolve a dim to its concrete extent. `tensors[v]` must hold the
+    /// evaluated tensor for any value the definition reads elements from.
+    pub fn resolve_dim(
+        &mut self,
+        m: &Module,
+        d: Dim,
+        tensors: &(impl Vals + ?Sized),
+    ) -> Result<usize> {
+        match m.syms.canon_dim(d) {
+            Dim::Fixed(n) => Ok(n),
+            Dim::Sym(s) => {
+                if let Some(&v) = self.vals.get(&s) {
+                    return Ok(v as usize);
+                }
+                let def = m.syms.def(s).clone();
+                let v = self
+                    .eval_expr(m, &def, tensors)
+                    .with_context(|| format!("resolving {} := {}", s, def))?;
+                ensure!(v >= 0, "negative extent {v} for {s}");
+                self.vals.insert(s, v);
+                Ok(v as usize)
+            }
+        }
+    }
+
+    /// Resolve a full dim vector.
+    pub fn resolve_dims(
+        &mut self,
+        m: &Module,
+        dims: &[Dim],
+        tensors: &(impl Vals + ?Sized),
+    ) -> Result<Vec<usize>> {
+        dims.iter().map(|&d| self.resolve_dim(m, d, tensors)).collect()
+    }
+
+    /// Evaluate a shape expression against the current bindings.
+    pub fn eval_expr(
+        &mut self,
+        m: &Module,
+        e: &ShapeExpr,
+        tensors: &(impl Vals + ?Sized),
+    ) -> Result<i64> {
+        Ok(match e {
+            ShapeExpr::Const(c) => *c,
+            ShapeExpr::InputDim { param, axis } => {
+                let dims = self
+                    .param_dims
+                    .get(*param)
+                    .with_context(|| format!("input dim of unbound param {param}"))?;
+                ensure!(*axis < dims.len(), "input-dim axis out of range");
+                dims[*axis] as i64
+            }
+            ShapeExpr::Dim(d) => self.resolve_dim(m, *d, tensors)? as i64,
+            ShapeExpr::Elem { value, index } => {
+                let t = tensors
+                    .tensor(*value)
+                    .with_context(|| format!("shape tensor %{value} not evaluated yet"))?;
+                let v = t.as_i64()?;
+                ensure!(*index < v.len(), "shape tensor index out of range");
+                v[*index]
+            }
+            ShapeExpr::DataDep { value } => {
+                bail!("data-dependent extent of %{value} not yet produced")
+            }
+            ShapeExpr::Add(a, b) => self.eval_expr(m, a, tensors)? + self.eval_expr(m, b, tensors)?,
+            ShapeExpr::Sub(a, b) => self.eval_expr(m, a, tensors)? - self.eval_expr(m, b, tensors)?,
+            ShapeExpr::Mul(a, b) => self.eval_expr(m, a, tensors)? * self.eval_expr(m, b, tensors)?,
+            ShapeExpr::CeilDiv(a, b) => {
+                let (x, y) = (self.eval_expr(m, a, tensors)?, self.eval_expr(m, b, tensors)?);
+                ensure!(y > 0, "ceildiv by non-positive {y}");
+                (x + y - 1) / y
+            }
+            ShapeExpr::Max(a, b) => {
+                self.eval_expr(m, a, tensors)?.max(self.eval_expr(m, b, tensors)?)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::{Builder, DType};
+    use crate::shape::Dim;
+
+    #[test]
+    fn binds_and_checks_params() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let _ = x;
+        let m = b.finish(vec![x]);
+        let mut env = SymEnv::new();
+        env.bind_params(&m, &[Tensor::f32(&[3, 4], vec![0.0; 12])]).unwrap();
+        let mut env2 = SymEnv::new();
+        // Wrong fixed dim rejected.
+        assert!(env2.bind_params(&m, &[Tensor::f32(&[3, 5], vec![0.0; 15])]).is_err());
+    }
+
+    #[test]
+    fn unified_dims_must_agree_at_runtime() {
+        let mut b = Builder::new("t");
+        let s1 = b.dyn_dim("a", 0, 0);
+        let x = b.param(DType::F32, vec![s1]);
+        let s2 = b.dyn_dim("b", 1, 0);
+        let y = b.param(DType::F32, vec![s2]);
+        let z = b.add(x, y).unwrap(); // unifies s1, s2
+        let m = b.finish(vec![z]);
+        let mut env = SymEnv::new();
+        let ok = env.bind_params(
+            &m,
+            &[Tensor::f32(&[3], vec![0.; 3]), Tensor::f32(&[3], vec![0.; 3])],
+        );
+        assert!(ok.is_ok());
+        let mut env2 = SymEnv::new();
+        let bad = env2.bind_params(
+            &m,
+            &[Tensor::f32(&[3], vec![0.; 3]), Tensor::f32(&[4], vec![0.; 4])],
+        );
+        assert!(bad.is_err(), "constraint violation must be rejected");
+    }
+
+    #[test]
+    fn derived_symbol_evaluation() {
+        let mut b = Builder::new("t");
+        let s1 = b.dyn_dim("a", 0, 0);
+        let x = b.param(DType::F32, vec![s1, Dim::Fixed(2)]);
+        let s2 = b.dyn_dim("b", 1, 0);
+        let y = b.param(DType::F32, vec![s2, Dim::Fixed(2)]);
+        let c = b.concat(&[x, y], 0).unwrap();
+        let m = b.finish(vec![c]);
+        let mut env = SymEnv::new();
+        env.bind_params(
+            &m,
+            &[Tensor::f32(&[3, 2], vec![0.; 6]), Tensor::f32(&[5, 2], vec![0.; 10])],
+        )
+        .unwrap();
+        let dims = env.resolve_dims(&m, &m.ty(c).dims.clone(), &NoVals).unwrap();
+        assert_eq!(dims, vec![8, 2]);
+    }
+
+    #[test]
+    fn elem_reads_host_tensor() {
+        let mut b = Builder::new("t");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let st = b.i64_vec(&[1]);
+        let li = b.i64_vec(&[5]);
+        let sr = b.i64_vec(&[2]);
+        let sl = b.dslice(x, st, li, sr).unwrap();
+        let m = b.finish(vec![sl]);
+        let mut env = SymEnv::new();
+        env.bind_params(&m, &[Tensor::f32(&[8], vec![0.; 8])]).unwrap();
+        // Provide the evaluated index tensors at their value slots.
+        let mut tensors: Vec<Option<Tensor>> = vec![None; m.instrs.len()];
+        tensors[st] = Some(Tensor::i64(&[1], vec![1]));
+        tensors[li] = Some(Tensor::i64(&[1], vec![5]));
+        tensors[sr] = Some(Tensor::i64(&[1], vec![2]));
+        let dims = env.resolve_dims(&m, &m.ty(sl).dims.clone(), &tensors[..]).unwrap();
+        assert_eq!(dims, vec![2]); // ceil((5-1)/2) = 2
+    }
+}

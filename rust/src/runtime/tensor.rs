@@ -1,0 +1,237 @@
+//! Host tensors: the runtime data representation flowing between kernels.
+//!
+//! Row-major dense tensors over the DHLO element types. These back (a) the
+//! reference interpreter / eager baseline, (b) the host side of PJRT literal
+//! marshalling, and (c) the host-resident shape tensors of the dynamic twins.
+
+use crate::dhlo::{DType, Literal};
+use anyhow::{bail, ensure, Result};
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I64(Vec<i64>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Tensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor { dtype: DType::F32, dims: dims.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn i64(dims: &[usize], data: Vec<i64>) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor { dtype: DType::I64, dims: dims.to_vec(), data: Data::I64(data) }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor { dtype: DType::I32, dims: dims.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn pred(dims: &[usize], data: Vec<bool>) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor { dtype: DType::Pred, dims: dims.to_vec(), data: Data::Pred(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(&[], vec![v])
+    }
+
+    pub fn scalar_i64(v: i64) -> Tensor {
+        Tensor::i64(&[], vec![v])
+    }
+
+    pub fn zeros(dtype: DType, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        match dtype {
+            DType::F32 => Tensor::f32(dims, vec![0.0; n]),
+            DType::I64 => Tensor::i64(dims, vec![0; n]),
+            DType::I32 => Tensor::i32(dims, vec![0; n]),
+            DType::Pred => Tensor::pred(dims, vec![false; n]),
+        }
+    }
+
+    pub fn filled_f32(dims: &[usize], v: f32) -> Tensor {
+        Tensor::f32(dims, vec![v; dims.iter().product()])
+    }
+
+    pub fn from_literal(lit: &Literal, dims: &[usize]) -> Tensor {
+        match lit {
+            Literal::F32(v) => Tensor::f32(dims, v.clone()),
+            Literal::I64(v) => Tensor::i64(dims, v.clone()),
+            Literal::I32(v) => Tensor::i32(dims, v.clone()),
+            Literal::Pred(v) => Tensor::pred(dims, v.clone()),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.elems() * self.dtype.byte_size()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.dims)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected f32", self.dtype),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match &self.data {
+            Data::I64(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected i64", self.dtype),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected i32", self.dtype),
+        }
+    }
+
+    pub fn as_pred(&self) -> Result<&[bool]> {
+        match &self.data {
+            Data::Pred(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected pred", self.dtype),
+        }
+    }
+
+    /// Scalar i64 view (rank 0 or single element), for shape calculation.
+    pub fn scalar_i64_value(&self) -> Result<i64> {
+        ensure!(self.elems() == 1, "expected single-element tensor");
+        match &self.data {
+            Data::I64(v) => Ok(v[0]),
+            Data::I32(v) => Ok(v[0] as i64),
+            _ => bail!("expected integer tensor"),
+        }
+    }
+
+    /// Reshape without moving data (element counts must match).
+    pub fn with_dims(mut self, dims: &[usize]) -> Result<Tensor> {
+        ensure!(
+            dims.iter().product::<usize>() == self.elems(),
+            "reshape element count mismatch: {:?} -> {:?}",
+            self.dims,
+            dims
+        );
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    /// Maximum absolute difference against another f32 tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        ensure!(self.dims == other.dims, "shape mismatch {:?} vs {:?}", self.dims, other.dims);
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+
+    /// Relative-tolerance comparison used across the test suite.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> Result<bool> {
+        ensure!(self.dims == other.dims, "shape mismatch {:?} vs {:?}", self.dims, other.dims);
+        match (&self.data, &other.data) {
+            (Data::F32(a), Data::F32(b)) => Ok(a
+                .iter()
+                .zip(b)
+                .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs().max(x.abs()))),
+            (Data::I64(a), Data::I64(b)) => Ok(a == b),
+            (Data::I32(a), Data::I32(b)) => Ok(a == b),
+            (Data::Pred(a), Data::Pred(b)) => Ok(a == b),
+            _ => bail!("dtype mismatch in allclose"),
+        }
+    }
+}
+
+/// Row-major strides for a dim vector.
+pub fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Convert a linear index into multi-dim coordinates.
+pub fn unravel(mut idx: usize, dims: &[usize]) -> Vec<usize> {
+    let mut coord = vec![0usize; dims.len()];
+    for i in (0..dims.len()).rev() {
+        coord[i] = idx % dims[i];
+        idx /= dims[i];
+    }
+    coord
+}
+
+/// Convert multi-dim coordinates into a linear index.
+pub fn ravel(coord: &[usize], strides: &[usize]) -> usize {
+    coord.iter().zip(strides).map(|(c, s)| c * s).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.byte_size(), 24);
+        assert_eq!(t.strides(), vec![3, 1]);
+        assert!(t.as_i64().is_err());
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+    }
+
+    #[test]
+    fn ravel_roundtrip() {
+        let dims = [2usize, 3, 4];
+        let strides = strides_of(&dims);
+        for i in 0..24 {
+            let c = unravel(i, &dims);
+            assert_eq!(ravel(&c, &strides), i);
+        }
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::f32(&[2], vec![1.0, 2.0]);
+        let b = Tensor::f32(&[2], vec![1.0 + 1e-7, 2.0 - 1e-7]);
+        assert!(a.allclose(&b, 1e-5, 1e-5).unwrap());
+        let c = Tensor::f32(&[2], vec![1.1, 2.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5).unwrap());
+    }
+
+    #[test]
+    fn scalar_access() {
+        assert_eq!(Tensor::scalar_i64(7).scalar_i64_value().unwrap(), 7);
+        assert!(Tensor::scalar_f32(1.0).scalar_i64_value().is_err());
+    }
+
+    #[test]
+    fn with_dims_checks_count() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert!(t.clone().with_dims(&[3, 2]).is_ok());
+        assert!(t.with_dims(&[4, 2]).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Symbolic shape machinery — the paper's §4.2.1 "adaptive shape inference".
+//!
+//! Two stages, exactly as DISC describes:
+//!
+//! 1. **Compile time**: dynamic dimensions are *symbols* ([`SymId`]) carried
+//!    in tensor types. A union-find over symbols records *dimension-size
+//!    equality* constraints, and a second union-find over IR values records
+//!    *tensor-size equality* constraints. Constraints come from op semantics
+//!    (`Transpose` preserves element count, `Add` preserves shape, …) and
+//!    from hints injected by the framework bridge (e.g. `tf.Split` outputs
+//!    share a shape — information that is otherwise lost after lowering).
+//!
+//! 2. **Runtime**: every symbol has a [`ShapeExpr`] definition; the compiler
+//!    emits a host-side *shape calculation program* (see `program::shapegen`)
+//!    that evaluates the expressions against the actual input shapes of each
+//!    request. Data-dependent dims (`Unique`) are filled in by the kernel
+//!    that produces them.
+
+pub mod sym;
+
+pub use sym::{Dim, ShapeExpr, SymId, SymbolTable};

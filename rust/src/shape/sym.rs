@@ -1,0 +1,416 @@
+//! Symbolic dimensions, shape expressions and the constraint store.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Identifier of a symbolic dimension. Symbols are allocated by the
+/// [`SymbolTable`] owned by a `dhlo::Module`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SymId(pub u32);
+
+impl fmt::Display for SymId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// One dimension of a tensor type: statically known or symbolic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    Fixed(usize),
+    Sym(SymId),
+}
+
+impl Dim {
+    pub fn fixed(&self) -> Option<usize> {
+        match self {
+            Dim::Fixed(n) => Some(*n),
+            Dim::Sym(_) => None,
+        }
+    }
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, Dim::Sym(_))
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::Fixed(n) => write!(f, "{n}"),
+            Dim::Sym(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// How a symbolic dimension's concrete value is obtained at runtime.
+///
+/// These expressions are what the compile-time-generated *shape calculation*
+/// code evaluates on the host per incoming request (§4.2.1 "shape
+/// calculation"). They form a small arithmetic language over input dims,
+/// other symbols, and elements of (host-resident) shape tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShapeExpr {
+    /// Constant (used when a symbol gets refined to a known value).
+    Const(i64),
+    /// The extent of axis `axis` of entry-parameter `param`.
+    InputDim { param: usize, axis: usize },
+    /// The value of another dimension (fixed or symbolic).
+    Dim(Dim),
+    /// The `index`-th element of the i64 tensor produced by IR value
+    /// `value` (e.g. the `start_indices` operand of a `DSlice`). The
+    /// executor evaluates such tensors on the host.
+    Elem { value: usize, index: usize },
+    /// Data-dependent extent produced by the kernel computing IR value
+    /// `value` (e.g. the output length of `Unique`). Filled in after that
+    /// kernel runs.
+    DataDep { value: usize },
+    Add(Box<ShapeExpr>, Box<ShapeExpr>),
+    Sub(Box<ShapeExpr>, Box<ShapeExpr>),
+    Mul(Box<ShapeExpr>, Box<ShapeExpr>),
+    /// Ceil-division, for strided slices.
+    CeilDiv(Box<ShapeExpr>, Box<ShapeExpr>),
+    Max(Box<ShapeExpr>, Box<ShapeExpr>),
+}
+
+impl ShapeExpr {
+    pub fn add(a: ShapeExpr, b: ShapeExpr) -> ShapeExpr {
+        ShapeExpr::Add(Box::new(a), Box::new(b))
+    }
+    pub fn sub(a: ShapeExpr, b: ShapeExpr) -> ShapeExpr {
+        ShapeExpr::Sub(Box::new(a), Box::new(b))
+    }
+    pub fn mul(a: ShapeExpr, b: ShapeExpr) -> ShapeExpr {
+        ShapeExpr::Mul(Box::new(a), Box::new(b))
+    }
+    pub fn ceil_div(a: ShapeExpr, b: ShapeExpr) -> ShapeExpr {
+        ShapeExpr::CeilDiv(Box::new(a), Box::new(b))
+    }
+    pub fn max(a: ShapeExpr, b: ShapeExpr) -> ShapeExpr {
+        ShapeExpr::Max(Box::new(a), Box::new(b))
+    }
+
+    /// Symbols this expression reads (for topological ordering of the shape
+    /// calculation program).
+    pub fn deps(&self, out: &mut Vec<SymId>) {
+        match self {
+            ShapeExpr::Dim(Dim::Sym(s)) => out.push(*s),
+            ShapeExpr::Add(a, b)
+            | ShapeExpr::Sub(a, b)
+            | ShapeExpr::Mul(a, b)
+            | ShapeExpr::CeilDiv(a, b)
+            | ShapeExpr::Max(a, b) => {
+                a.deps(out);
+                b.deps(out);
+            }
+            _ => {}
+        }
+    }
+
+    /// IR values whose *contents* this expression reads.
+    pub fn value_deps(&self, out: &mut Vec<usize>) {
+        match self {
+            ShapeExpr::Elem { value, .. } | ShapeExpr::DataDep { value } => out.push(*value),
+            ShapeExpr::Add(a, b)
+            | ShapeExpr::Sub(a, b)
+            | ShapeExpr::Mul(a, b)
+            | ShapeExpr::CeilDiv(a, b)
+            | ShapeExpr::Max(a, b) => {
+                a.value_deps(out);
+                b.value_deps(out);
+            }
+            _ => {}
+        }
+    }
+}
+
+impl fmt::Display for ShapeExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShapeExpr::Const(c) => write!(f, "{c}"),
+            ShapeExpr::InputDim { param, axis } => write!(f, "arg{param}.dim{axis}"),
+            ShapeExpr::Dim(d) => write!(f, "{d}"),
+            ShapeExpr::Elem { value, index } => write!(f, "%{value}[{index}]"),
+            ShapeExpr::DataDep { value } => write!(f, "datadep(%{value})"),
+            ShapeExpr::Add(a, b) => write!(f, "({a} + {b})"),
+            ShapeExpr::Sub(a, b) => write!(f, "({a} - {b})"),
+            ShapeExpr::Mul(a, b) => write!(f, "({a} * {b})"),
+            ShapeExpr::CeilDiv(a, b) => write!(f, "ceildiv({a}, {b})"),
+            ShapeExpr::Max(a, b) => write!(f, "max({a}, {b})"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SymInfo {
+    def: ShapeExpr,
+    name: String,
+}
+
+/// Symbol store + the two constraint families of §4.2.1.
+///
+/// *Dimension-size equality* is a union-find over [`SymId`]: `unify(a, b)`
+/// records that two symbolic dims always carry the same runtime extent;
+/// `canon` returns the representative used by fusion and codegen when they
+/// compare shapes without knowing values.
+///
+/// *Tensor-size equality* is a union-find over IR value ids: two tensors in
+/// the same class are guaranteed to hold the same number of elements even
+/// when their dim vectors differ (e.g. across `Reshape`).
+#[derive(Debug, Clone, Default)]
+pub struct SymbolTable {
+    syms: Vec<SymInfo>,
+    parent: Vec<u32>,
+    /// value-id → size-class parent (lazily sized).
+    size_parent: HashMap<usize, usize>,
+}
+
+impl SymbolTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.syms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.syms.is_empty()
+    }
+
+    /// Allocate a fresh symbol with a definition and a debug name.
+    pub fn fresh(&mut self, name: impl Into<String>, def: ShapeExpr) -> SymId {
+        let id = SymId(self.syms.len() as u32);
+        self.syms.push(SymInfo { def, name: name.into() });
+        self.parent.push(id.0);
+        id
+    }
+
+    pub fn def(&self, s: SymId) -> &ShapeExpr {
+        &self.syms[s.0 as usize].def
+    }
+
+    pub fn name(&self, s: SymId) -> &str {
+        &self.syms[s.0 as usize].name
+    }
+
+    /// Representative of the dimension-equality class of `s`.
+    pub fn canon(&self, s: SymId) -> SymId {
+        let mut cur = s.0;
+        while self.parent[cur as usize] != cur {
+            cur = self.parent[cur as usize];
+        }
+        SymId(cur)
+    }
+
+    /// Record a dimension-size equality constraint.
+    pub fn unify(&mut self, a: SymId, b: SymId) {
+        let (ra, rb) = (self.canon(a), self.canon(b));
+        if ra != rb {
+            // A constant-defined root wins (so refined symbols collapse to
+            // `Fixed` in `canon_dim`); otherwise union by smaller id so
+            // representatives are stable across runs.
+            let a_const = matches!(self.def(ra), ShapeExpr::Const(_));
+            let b_const = matches!(self.def(rb), ShapeExpr::Const(_));
+            let (winner, loser) = match (a_const, b_const) {
+                (true, false) => (ra, rb),
+                (false, true) => (rb, ra),
+                _ => {
+                    if ra.0 < rb.0 {
+                        (ra, rb)
+                    } else {
+                        (rb, ra)
+                    }
+                }
+            };
+            self.parent[loser.0 as usize] = winner.0;
+        }
+    }
+
+    /// Canonical form of a dim: symbolic dims are replaced by their class
+    /// representative; if the representative's definition is a constant the
+    /// dim collapses to `Fixed`.
+    pub fn canon_dim(&self, d: Dim) -> Dim {
+        match d {
+            Dim::Fixed(n) => Dim::Fixed(n),
+            Dim::Sym(s) => {
+                let r = self.canon(s);
+                if let ShapeExpr::Const(c) = self.def(r) {
+                    Dim::Fixed(*c as usize)
+                } else {
+                    Dim::Sym(r)
+                }
+            }
+        }
+    }
+
+    /// True iff the two dims are provably equal under collected constraints.
+    pub fn dims_equal(&self, a: Dim, b: Dim) -> bool {
+        self.canon_dim(a) == self.canon_dim(b)
+    }
+
+    /// True iff the two dim vectors are provably element-wise equal.
+    pub fn shapes_equal(&self, a: &[Dim], b: &[Dim]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| self.dims_equal(x, y))
+    }
+
+    // ---- tensor-size equality over IR values ------------------------------
+
+    fn size_canon(&self, v: usize) -> usize {
+        let mut cur = v;
+        while let Some(&p) = self.size_parent.get(&cur) {
+            if p == cur {
+                break;
+            }
+            cur = p;
+        }
+        cur
+    }
+
+    /// Record that IR values `a` and `b` hold tensors with the same number
+    /// of elements.
+    pub fn record_size_equal(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.size_canon(a), self.size_canon(b));
+        if ra != rb {
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.size_parent.insert(hi, lo);
+        }
+    }
+
+    /// True iff the two values were recorded (transitively) size-equal.
+    pub fn size_equal(&self, a: usize, b: usize) -> bool {
+        self.size_canon(a) == self.size_canon(b)
+    }
+
+    /// Remap IR value ids embedded in symbol definitions and size classes
+    /// after a pass rewrites the instruction list. `map[old] = Some(new)`
+    /// for surviving values, `None` for removed ones (whose symbols become
+    /// unreferenced and are left dangling harmlessly).
+    pub fn remap_values(&mut self, map: &[Option<usize>]) {
+        fn remap_expr(e: &mut ShapeExpr, map: &[Option<usize>]) {
+            match e {
+                ShapeExpr::Elem { value, .. } | ShapeExpr::DataDep { value } => {
+                    if let Some(Some(nv)) = map.get(*value) {
+                        *value = *nv;
+                    }
+                }
+                ShapeExpr::Add(a, b)
+                | ShapeExpr::Sub(a, b)
+                | ShapeExpr::Mul(a, b)
+                | ShapeExpr::CeilDiv(a, b)
+                | ShapeExpr::Max(a, b) => {
+                    remap_expr(a, map);
+                    remap_expr(b, map);
+                }
+                _ => {}
+            }
+        }
+        for info in &mut self.syms {
+            remap_expr(&mut info.def, map);
+        }
+        let old = std::mem::take(&mut self.size_parent);
+        for (k, v) in old {
+            if let (Some(Some(nk)), Some(Some(nv))) = (map.get(k), map.get(v)) {
+                self.size_parent.insert(*nk, *nv);
+            }
+        }
+    }
+
+    /// Debug dump of all constraint classes (used by `disc inspect`).
+    pub fn dump(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut classes: HashMap<SymId, Vec<SymId>> = HashMap::new();
+        for i in 0..self.syms.len() {
+            let s = SymId(i as u32);
+            classes.entry(self.canon(s)).or_default().push(s);
+        }
+        let mut keys: Vec<_> = classes.keys().copied().collect();
+        keys.sort();
+        for k in keys {
+            let members = &classes[&k];
+            let names: Vec<_> = members.iter().map(|s| self.name(*s).to_string()).collect();
+            let _ = writeln!(out, "{k} := {} [{}]", self.def(k), names.join(", "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input_dim(p: usize, a: usize) -> ShapeExpr {
+        ShapeExpr::InputDim { param: p, axis: a }
+    }
+
+    #[test]
+    fn unify_transitive() {
+        let mut t = SymbolTable::new();
+        let a = t.fresh("a", input_dim(0, 0));
+        let b = t.fresh("b", input_dim(1, 0));
+        let c = t.fresh("c", input_dim(2, 0));
+        assert!(!t.dims_equal(Dim::Sym(a), Dim::Sym(c)));
+        t.unify(a, b);
+        t.unify(b, c);
+        assert!(t.dims_equal(Dim::Sym(a), Dim::Sym(c)));
+        assert_eq!(t.canon(c), t.canon(a));
+    }
+
+    #[test]
+    fn canon_is_smallest_id() {
+        let mut t = SymbolTable::new();
+        let a = t.fresh("a", input_dim(0, 0));
+        let b = t.fresh("b", input_dim(1, 0));
+        t.unify(b, a);
+        assert_eq!(t.canon(b), a);
+    }
+
+    #[test]
+    fn const_def_collapses_to_fixed() {
+        let mut t = SymbolTable::new();
+        let a = t.fresh("a", ShapeExpr::Const(64));
+        assert_eq!(t.canon_dim(Dim::Sym(a)), Dim::Fixed(64));
+        assert!(t.dims_equal(Dim::Sym(a), Dim::Fixed(64)));
+    }
+
+    #[test]
+    fn shape_equality_mixed() {
+        let mut t = SymbolTable::new();
+        let s = t.fresh("seq", input_dim(0, 1));
+        let s2 = t.fresh("seq2", input_dim(1, 1));
+        let a = [Dim::Fixed(8), Dim::Sym(s), Dim::Fixed(768)];
+        let b = [Dim::Fixed(8), Dim::Sym(s2), Dim::Fixed(768)];
+        assert!(!t.shapes_equal(&a, &b));
+        t.unify(s, s2);
+        assert!(t.shapes_equal(&a, &b));
+        assert!(!t.shapes_equal(&a[..2], &b));
+    }
+
+    #[test]
+    fn size_classes() {
+        let mut t = SymbolTable::new();
+        t.record_size_equal(3, 9);
+        t.record_size_equal(9, 12);
+        assert!(t.size_equal(3, 12));
+        assert!(!t.size_equal(3, 4));
+        t.record_size_equal(4, 3);
+        assert!(t.size_equal(4, 12));
+    }
+
+    #[test]
+    fn expr_deps() {
+        let mut t = SymbolTable::new();
+        let a = t.fresh("a", input_dim(0, 0));
+        let e = ShapeExpr::add(ShapeExpr::Dim(Dim::Sym(a)), ShapeExpr::Const(1));
+        let mut deps = Vec::new();
+        e.deps(&mut deps);
+        assert_eq!(deps, vec![a]);
+        let e2 = ShapeExpr::mul(
+            ShapeExpr::Elem { value: 7, index: 0 },
+            ShapeExpr::DataDep { value: 9 },
+        );
+        let mut vdeps = Vec::new();
+        e2.value_deps(&mut vdeps);
+        assert_eq!(vdeps, vec![7, 9]);
+    }
+}

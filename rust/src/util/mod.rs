@@ -1,0 +1,65 @@
+//! Small self-contained utilities built in-repo because the build is fully
+//! offline (vendored crates only): a minimal JSON parser/serializer, a
+//! deterministic PRNG, and an id-arena newtype helper.
+
+pub mod json;
+pub mod prng;
+
+/// Round `n` up to the next power of two (min 1). Used by the bucketing
+/// scheme in codegen: dynamic dimensions are rounded up so that a small
+/// family of compiled kernel variants covers every runtime shape.
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// Round `n` up to a multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Human-readable byte count, used in logs and bench reports.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", b, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_rounding() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1000), 1024);
+        assert_eq!(next_pow2(1024), 1024);
+    }
+
+    #[test]
+    fn round_up_multiples() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,128 @@
+//! Deterministic PRNG (SplitMix64 + xoshiro-style mixing) used by workload
+//! generators, property tests and synthetic data. No external crates: the
+//! vendored registry has no `rand`, and determinism across runs matters more
+//! than statistical strength here.
+
+/// SplitMix64 generator. Deterministic for a given seed; passes basic
+/// equidistribution sanity checks (see tests).
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        Prng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in `[-s, s)`.
+    pub fn f32_sym(&mut self, s: f32) -> f32 {
+        (self.f32() * 2.0 - 1.0) * s
+    }
+
+    /// Approximately normal(0, 1) via the sum of 4 uniforms (Irwin–Hall).
+    /// Good enough for synthetic activations/weights.
+    pub fn normal(&mut self) -> f32 {
+        let s: f32 = (0..4).map(|_| self.f32()).sum();
+        (s - 2.0) * (12.0f32 / 4.0).sqrt()
+    }
+
+    /// Fill a tensor-sized buffer with small-magnitude values; scale keeps
+    /// deep fused chains (exp, tanh) inside well-conditioned ranges so that
+    /// reference-vs-compiled comparisons stay within tight tolerances.
+    pub fn fill_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_sym(scale)).collect()
+    }
+
+    pub fn fill_i64(&mut self, n: usize, lo: i64, hi: i64) -> Vec<i64> {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        (0..n).map(|_| lo + (self.next_u64() % span) as i64).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len())]
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.next_u64() as f64 / u64::MAX as f64) < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(7);
+        let mut b = Prng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut p = Prng::new(3);
+        for _ in 0..1000 {
+            assert!(p.below(7) < 7);
+            let r = p.range(10, 20);
+            assert!((10..=20).contains(&r));
+        }
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut p = Prng::new(9);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let v = p.f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean} far from 0.5");
+    }
+
+    #[test]
+    fn chance_rates() {
+        let mut p = Prng::new(11);
+        let hits = (0..10_000).filter(|_| p.chance(0.25)).count();
+        assert!((2000..3000).contains(&hits), "hits={hits}");
+    }
+}

@@ -1,0 +1,429 @@
+//! Nimble-like VM baseline (§2, §5.2 comparator).
+//!
+//! Nimble executes dynamic-shape graphs by *interpreting* a pre-built VM:
+//! runtime control flow walks the graph, re-derives shapes per node visit,
+//! dispatches ops through an opcode table, and manages buffers by
+//! refcounting. DISC's claim (paper Table 2) is that compile-time-generated
+//! runtime flow removes this interpretation overhead — the CPU-time row.
+//!
+//! This module deliberately implements that interpreted architecture over
+//! the *same* kernels, library, and bucket cache as the DISC executor, so
+//! every difference in the measured CPU column comes from the control-flow
+//! architecture, not from kernel quality:
+//!
+//! * per-node dynamic dispatch through a boxed-handler opcode table;
+//! * per-visit shape resolution and group-metadata recomputation (external
+//!   inputs, symbol lists are *not* precomputed);
+//! * refcount-based deallocation with per-operand hash updates;
+//! * per-run setup of the instruction/registers maps.
+//!
+//! Nimble's fusion is driven by shape propagation without DISC's collected
+//! constraints, so callers pass a `FusionOptions { use_constraints: false }`
+//! plan (see `compiler::Mode::VmNimble`); with fewer/lazier fusions it also
+//! reproduces the kernel-count gap of Table 3.
+
+use crate::codegen::KernelCache;
+use crate::dhlo::{Module, Op, ValueId};
+use crate::fusion::signature::{external_inputs, signature};
+use crate::fusion::FusionPlan;
+use crate::library::GemmLibrary;
+use crate::runtime::executor::{crop_box, pad_box};
+use crate::runtime::metrics::RunMetrics;
+use crate::runtime::reference::eval_op;
+use crate::runtime::shape_env::SymEnv;
+use crate::shape::SymId;
+use crate::runtime::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Opcode classes the VM dispatches on (a small interpreted ISA, like
+/// Nimble's VM instructions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum OpCode {
+    Nop,
+    HostEval,
+    Bitcast,
+    DeviceKernel,
+    FusedKernel,
+    Library,
+}
+
+type Handler = Box<dyn Fn(&mut VmState, &Module, ValueId) -> Result<()>>;
+
+struct VmState {
+    regs: HashMap<ValueId, Rc<Tensor>>,
+    refcounts: HashMap<ValueId, usize>,
+    env: SymEnv,
+    /// The VM re-executes shape functions per node visit (TVM's VM runs a
+    /// shape function before each dynamic op; there is no cross-op
+    /// symbolic sharing). Stashing the inputs lets each visit rebuild its
+    /// environment the way the interpreted runtime does.
+    inputs_snapshot: Vec<Tensor>,
+    /// Concrete shapes the runtime tensor objects carry (each visit's
+    /// shape function is seeded from these, then its results recorded).
+    shape_cache: HashMap<SymId, i64>,
+    metrics: RunMetrics,
+}
+
+impl VmState {
+    fn reg(&self, v: ValueId) -> Result<&Tensor> {
+        self.regs
+            .get(&v)
+            .map(|t| t.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("register %{v} empty"))
+    }
+
+    /// Shape resolution needs random access by value id; adapt the register
+    /// map to the `Vals` view the env expects.
+    fn vals_snapshot(&self, n: usize) -> Vec<Option<Rc<Tensor>>> {
+        let mut v = vec![None; n];
+        for (&k, t) in &self.regs {
+            v[k] = Some(t.clone());
+        }
+        v
+    }
+
+    /// Per-visit shape-function execution: fresh environment, re-bound
+    /// from the inputs and seeded with the concrete shapes carried on the
+    /// runtime tensor objects, resolving this node's dims.
+    fn run_shape_function(&mut self, m: &Module, id: ValueId) -> Result<Vec<usize>> {
+        let mut env = SymEnv::new();
+        env.bind_params(m, &self.inputs_snapshot)?;
+        for (&k, &v) in &self.shape_cache {
+            env.seed(k, v);
+        }
+        self.env = env;
+        let snapshot = self.vals_snapshot(m.instrs.len());
+        let dims = self.env.resolve_dims(m, &m.instrs[id].ty.dims, &snapshot[..]);
+        self.shape_cache = self.env.resolved().clone();
+        dims
+    }
+
+    fn release_operands(&mut self, m: &Module, id: ValueId, outputs: &[ValueId]) {
+        for &o in &m.instrs[id].operands.clone() {
+            if let Some(c) = self.refcounts.get_mut(&o) {
+                *c = c.saturating_sub(1);
+                if *c == 0 && !outputs.contains(&o) {
+                    self.regs.remove(&o);
+                }
+            }
+        }
+    }
+}
+
+/// The VM: owns the same caches as the executor, interprets the graph.
+pub struct Vm {
+    pub cache: KernelCache,
+    pub library: GemmLibrary,
+}
+
+impl Vm {
+    pub fn new(
+        device: Rc<crate::runtime::pjrt::Device>,
+        policy: crate::codegen::BucketPolicy,
+    ) -> Self {
+        Vm { cache: KernelCache::new(device.clone(), policy), library: GemmLibrary::new(device) }
+    }
+
+    /// Interpret a module under a fusion plan.
+    pub fn run(
+        &mut self,
+        m: &Module,
+        plan: &FusionPlan,
+        inputs: &[Tensor],
+    ) -> Result<crate::runtime::executor::ExecOutput> {
+        let t_start = Instant::now();
+        let n = m.instrs.len();
+
+        // --- per-run interpretation setup (Nimble builds its frame per
+        // invocation: register file, refcounts, opcode decode) -------------
+        let host = crate::fusion::host_shape_values(m);
+        let mut opcodes: Vec<OpCode> = Vec::with_capacity(n);
+        for (id, ins) in m.instrs.iter().enumerate() {
+            opcodes.push(match &ins.op {
+                Op::Param { .. } | Op::Const { .. } => OpCode::Nop,
+                _ if host[id] => OpCode::HostEval,
+                Op::Reshape | Op::DReshape => OpCode::Bitcast,
+                Op::Dot => OpCode::Library,
+                _ => match plan.membership[id] {
+                    Some(g) if plan.groups[g].root == id => OpCode::FusedKernel,
+                    Some(_) => OpCode::Nop,
+                    None => OpCode::DeviceKernel,
+                },
+            });
+        }
+        let users = m.users();
+        let mut state = VmState {
+            regs: HashMap::new(),
+            refcounts: users.iter().enumerate().map(|(i, u)| (i, u.len())).collect(),
+            env: SymEnv::new(),
+            inputs_snapshot: inputs.to_vec(),
+            shape_cache: HashMap::new(),
+            metrics: RunMetrics::default(),
+        };
+        state.env.bind_params(m, inputs)?;
+        for (id, ins) in m.instrs.iter().enumerate() {
+            match &ins.op {
+                Op::Param { index } => {
+                    state.regs.insert(id, Rc::new(inputs[*index].clone()));
+                }
+                Op::Const { lit, dims } => {
+                    state.regs.insert(id, Rc::new(Tensor::from_literal(lit, dims)));
+                }
+                _ => {}
+            }
+        }
+
+        let lib_flops0 = self.library.stats.flops;
+        let cache0 = (self.cache.stats.misses, self.cache.stats.compile_time);
+
+        // --- opcode handler table (dynamic dispatch per node visit) -------
+        let handlers: HashMap<OpCode, Handler> = [
+            (OpCode::Nop, Box::new(|_: &mut VmState, _: &Module, _: ValueId| Ok(())) as Handler),
+            (
+                OpCode::HostEval,
+                Box::new(|st: &mut VmState, m: &Module, id: ValueId| {
+                    let out_dims = st.run_shape_function(m, id)?;
+                    let ins = &m.instrs[id];
+                    let operands: Vec<&Tensor> =
+                        ins.operands.iter().map(|&o| st.reg(o)).collect::<Result<_>>()?;
+                    let t = eval_op(&ins.op, &operands, &out_dims, ins.ty.dtype)?;
+                    st.metrics.host_ops += 1;
+                    st.regs.insert(id, Rc::new(t));
+                    Ok(())
+                }) as Handler,
+            ),
+            (
+                OpCode::Bitcast,
+                Box::new(|st: &mut VmState, m: &Module, id: ValueId| {
+                    let out_dims = st.run_shape_function(m, id)?;
+                    let ins = &m.instrs[id];
+                    let src = st.reg(ins.operands[0])?.clone();
+                    st.metrics.bitcasts += 1;
+                    st.regs.insert(id, Rc::new(src.with_dims(&out_dims)?));
+                    Ok(())
+                }) as Handler,
+            ),
+            (
+                OpCode::DeviceKernel,
+                Box::new(|st: &mut VmState, m: &Module, id: ValueId| {
+                    let out_dims = if matches!(m.instrs[id].op, Op::Unique) {
+                        vec![]
+                    } else {
+                        st.run_shape_function(m, id)?
+                    };
+                    let ins = &m.instrs[id];
+                    let in_bytes: u64 = ins
+                        .operands
+                        .iter()
+                        .map(|&o| st.reg(o).map(|t| t.byte_size() as u64))
+                        .sum::<Result<u64>>()?;
+                    st.metrics.mem_bytes += in_bytes;
+                    let operands: Vec<&Tensor> =
+                        ins.operands.iter().map(|&o| st.reg(o)).collect::<Result<_>>()?;
+                    let tk = Instant::now();
+                    let t = eval_op(&ins.op, &operands, &out_dims, ins.ty.dtype)?;
+                    st.metrics.kernel_time += tk.elapsed();
+                    st.metrics.mem_kernels += 1;
+                    st.metrics.mem_bytes += t.byte_size() as u64;
+                    if matches!(ins.op, Op::Unique) {
+                        st.env.set_datadep(m, id, t.dims[0] as i64);
+                        st.shape_cache = st.env.resolved().clone();
+                    }
+                    st.regs.insert(id, Rc::new(t));
+                    Ok(())
+                }) as Handler,
+            ),
+        ]
+        .into_iter()
+        .collect();
+
+        // --- interpret: walk the graph node by node ------------------------
+        for id in 0..n {
+            match opcodes[id] {
+                OpCode::Library => {
+                    let ins = &m.instrs[id];
+                    let a = state.reg(ins.operands[0])?.clone();
+                    let b = state.reg(ins.operands[1])?.clone();
+                    state.metrics.lib_bytes += (a.byte_size() + b.byte_size()) as u64;
+                    let build0 = self.library.stats.build_time;
+                    let exec0 = self.library.stats.exec_time;
+                    let t = self.library.matmul(&a, &b)?;
+                    state.metrics.lib_time += self.library.stats.exec_time - exec0;
+                    state.metrics.compile_time += self.library.stats.build_time - build0;
+                    state.metrics.lib_calls += 1;
+                    state.metrics.lib_bytes += t.byte_size() as u64;
+                    state.regs.insert(id, Rc::new(t));
+                }
+                OpCode::FusedKernel => {
+                    // Per-visit recomputation of group metadata — the VM
+                    // has no precompiled launch descriptors.
+                    let gid = plan.membership[id].unwrap();
+                    let g = &plan.groups[gid];
+                    let sig = signature(m, g);
+                    let syms = crate::codegen::hlo::group_syms(m, g);
+                    // Per-visit shape function for the fused region.
+                    let mut env = SymEnv::new();
+                    env.bind_params(m, &state.inputs_snapshot)?;
+                    for (&kk, &vv) in &state.shape_cache {
+                        env.seed(kk, vv);
+                    }
+                    state.env = env;
+                    let snapshot = state.vals_snapshot(n);
+                    let mut actual = HashMap::with_capacity(syms.len());
+                    for &s in &syms {
+                        let v =
+                            state.env.resolve_dim(m, crate::shape::Dim::Sym(s), &snapshot[..])?;
+                        actual.insert(s, v);
+                    }
+                    state.shape_cache = state.env.resolved().clone();
+                    let (kernel, _) = self.cache.get_or_compile(m, g, &sig, &actual)?;
+                    let spec = &kernel.spec;
+                    let externals = external_inputs(m, g);
+                    // The VM clones per visit (interpreted register file).
+                    let mut args_owned: Vec<Tensor> = Vec::new();
+                    for (i, e) in externals.iter().enumerate() {
+                        let src = state.reg(e.value)?.clone();
+                        if src.dims == spec.input_dims[i] {
+                            args_owned.push(src);
+                        } else {
+                            state.metrics.pad_copies += 1;
+                            args_owned.push(pad_box(&src, &spec.input_dims[i], None)?);
+                        }
+                        // Bucket-shaped reads are real traffic (Nimble's
+                        // fixed-shape-tuned kernels pay this on every
+                        // off-tune shape, §4.5).
+                        state.metrics.mem_bytes += args_owned.last().unwrap().byte_size() as u64;
+                    }
+                    for &li in &spec.extent_locals {
+                        args_owned.push(Tensor::i32(&[], vec![actual[&syms[li]] as i32]));
+                    }
+                    let args: Vec<&Tensor> = args_owned.iter().collect();
+                    let tk = Instant::now();
+                    let out = kernel
+                        .exe
+                        .run(&args, &spec.out_dims, spec.out_dtype)
+                        .with_context(|| format!("vm fused kernel {}", spec.name))?;
+                    state.metrics.kernel_time += tk.elapsed();
+                    state.metrics.mem_kernels += 1;
+                    state.metrics.mem_bytes += out.byte_size() as u64;
+                    let actual_out =
+                        state.env.resolve_dims(m, &m.ty(g.root).dims, &snapshot[..])?;
+                    let out =
+                        if out.dims == actual_out { out } else { crop_box(&out, &actual_out)? };
+                    state.regs.insert(id, Rc::new(out));
+                }
+                code => {
+                    let h = handlers.get(&code).expect("handler registered");
+                    h(&mut state, m, id)?;
+                }
+            }
+            // Refcount-driven release per visit. Interior members of a
+            // fused group consume their operands at the *root's* launch,
+            // not at their own (skipped) visit.
+            match plan.membership.get(id).copied().flatten() {
+                Some(g) if plan.groups[g].root != id => {}
+                Some(g) => {
+                    for &member in &plan.groups[g].members {
+                        state.release_operands(m, member, &m.outputs);
+                    }
+                }
+                None => state.release_operands(m, id, &m.outputs),
+            }
+        }
+
+        let outputs: Vec<Tensor> = m
+            .outputs
+            .iter()
+            .map(|&o| {
+                state
+                    .regs
+                    .get(&o)
+                    .map(|t| t.as_ref().clone())
+                    .ok_or_else(|| anyhow::anyhow!("output %{o} missing"))
+            })
+            .collect::<Result<_>>()?;
+
+        let mut metrics = state.metrics;
+        metrics.flops = self.library.stats.flops - lib_flops0;
+        metrics.compile_events = self.cache.stats.misses - cache0.0;
+        metrics.compile_time = self.cache.stats.compile_time - cache0.1;
+        metrics.total_time = t_start.elapsed();
+        Ok(crate::runtime::executor::ExecOutput { outputs, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::BucketPolicy;
+    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::fusion::{plan, FusionOptions};
+    use crate::runtime::pjrt::Device;
+    use crate::runtime::reference::eval_module;
+    use crate::shape::Dim;
+    use crate::util::prng::Prng;
+
+    fn nimble_plan(m: &Module) -> FusionPlan {
+        plan(m, &FusionOptions { use_constraints: false, ..Default::default() })
+    }
+
+    #[test]
+    fn vm_matches_reference_numerics() {
+        let mut b = Builder::new("vmtest");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(4)]);
+        let sm = b.softmax_last(x).unwrap();
+        let t = b.unary(UnKind::Tanh, sm);
+        let m = b.finish(vec![t]);
+        let p = nimble_plan(&m);
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut vm = Vm::new(dev, BucketPolicy::NextPow2);
+        let mut rng = Prng::new(3);
+        for rows in [2usize, 5, 9] {
+            let input = Tensor::f32(&[rows, 4], rng.fill_f32(rows * 4, 1.5));
+            let got = vm.run(&m, &p, &[input.clone()]).unwrap();
+            let want = eval_module(&m, &[input]).unwrap();
+            assert!(got.outputs[0].allclose(&want.outputs[0], 1e-5, 1e-5).unwrap());
+        }
+    }
+
+    #[test]
+    fn vm_and_mlp_library_path() {
+        let mut b = Builder::new("vmlib");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let w = b.param(DType::F32, vec![Dim::Fixed(8), Dim::Fixed(8)]);
+        let h = b.dot(x, w).unwrap();
+        let r = b.unary(UnKind::Relu, h);
+        let m = b.finish(vec![r]);
+        let p = nimble_plan(&m);
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut vm = Vm::new(dev, BucketPolicy::NextPow2);
+        let x_t = Tensor::f32(&[3, 8], vec![0.25; 24]);
+        let w_t = Tensor::f32(&[8, 8], vec![0.125; 64]);
+        let got = vm.run(&m, &p, &[x_t.clone(), w_t.clone()]).unwrap();
+        let want = eval_module(&m, &[x_t, w_t]).unwrap();
+        assert!(got.outputs[0].allclose(&want.outputs[0], 1e-5, 1e-5).unwrap());
+        assert_eq!(got.metrics.lib_calls, 1);
+    }
+
+    #[test]
+    fn vm_buffers_released_by_refcount() {
+        let mut b = Builder::new("rc");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s]);
+        let t = b.unary(UnKind::Tanh, x);
+        let e = b.unary(UnKind::Exp, t);
+        let m = b.finish(vec![e]);
+        // Disable fusion so intermediates materialize.
+        let p = plan(&m, &FusionOptions { enabled: false, ..Default::default() });
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut vm = Vm::new(dev, BucketPolicy::NextPow2);
+        let got = vm.run(&m, &p, &[Tensor::f32(&[4], vec![0.1; 4])]).unwrap();
+        assert_eq!(got.outputs[0].dims, vec![4]);
+        assert_eq!(got.metrics.mem_kernels, 2, "two singleton kernels without fusion");
+    }
+}

@@ -1,0 +1,104 @@
+//! Ad-ranking workload (TensorFlow flavour, batch 512) — the sparse
+//! recommendation model of Table 1, driving the `tf.Unique` dynamic-shape
+//! path the paper calls out ("sparse workloads with Unique ops generating
+//! output tensors with varying shapes").
+//!
+//! A variable-length id list goes through `Unique` (data-dependent output
+//! length!) → embedding gather → mean pooling, is joined with dense
+//! features, and feeds a 3-layer ReLU ranking tower with a sigmoid score.
+
+use super::Workload;
+use crate::dhlo::{BinKind, DType, Literal, ReduceKind, UnKind};
+use crate::graph::{GOp, Graph, GraphBuilder};
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+pub const BATCH: usize = 512;
+pub const DENSE: usize = 16;
+pub const EMB: usize = 16;
+pub const VOCAB: usize = 1024;
+pub const TOWER: usize = 64;
+
+pub fn graph() -> Graph {
+    let mut gb = GraphBuilder::new("ad_ranking");
+    let dense = gb.placeholder("dense_features", DType::F32, &[BATCH as i64, DENSE as i64]);
+    // Variable-length sparse id list shared by the batch (e.g. page ids).
+    let ids = gb.placeholder("sparse_ids", DType::I64, &[-1]);
+
+    // Sparse branch: unique → gather → mean pool.
+    let uniq = gb.unique("uniq", ids);
+    let table = gb.weight("id_embedding", &[VOCAB, EMB], 3000);
+    let emb = gb.gather("emb", table, uniq, 0); // [U, E] with data-dep U
+    let pooled = gb.reduce("pooled", ReduceKind::Mean, emb, &[0]); // [E]
+
+    // Broadcast pooled embedding over the batch and join with dense.
+    let zeros = gb.add(
+        "zeros",
+        GOp::Const { lit: Literal::F32(vec![0.0; BATCH * EMB]), dims: vec![BATCH, EMB] },
+        &[],
+    );
+    let pooled_b = gb.binary("pooled_b", BinKind::Add, zeros, pooled); // [B, E]
+    let joined = gb.concat("joined", &[dense, pooled_b], 1); // [B, D+E]
+
+    // Ranking tower.
+    let mut h = joined;
+    let mut in_dim = DENSE + EMB;
+    for (i, out_dim) in [TOWER, TOWER, 1].iter().enumerate() {
+        let w = gb.weight(&format!("tower_w{i}"), &[in_dim, *out_dim], 3010 + i as u64);
+        let b = gb.weight(&format!("tower_b{i}"), &[*out_dim], 3020 + i as u64);
+        let t = gb.matmul(&format!("tower_h{i}"), h, w);
+        let tb = gb.bias_add(&format!("tower_hb{i}"), t, b);
+        h = if i < 2 {
+            gb.unary(&format!("tower_a{i}"), UnKind::Relu, tb)
+        } else {
+            gb.unary("score", UnKind::Sigmoid, tb)
+        };
+        in_dim = *out_dim;
+    }
+    gb.finish(&[h])
+}
+
+/// `seq` here is the sparse id-list length (the dynamism axis).
+pub fn gen_inputs(seq: usize, rng: &mut Prng) -> Vec<Tensor> {
+    vec![
+        Tensor::f32(&[BATCH, DENSE], rng.fill_f32(BATCH * DENSE, 0.5)),
+        Tensor::i64(&[seq], rng.fill_i64(seq, 0, VOCAB as i64 - 1)),
+    ]
+}
+
+pub fn workload() -> Workload {
+    Workload {
+        name: "ad_ranking",
+        framework: "TensorFlow",
+        batch: BATCH,
+        graph: graph(),
+        seq_range: (32, 256),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+    use crate::runtime::reference::eval_module;
+
+    #[test]
+    fn unique_drives_data_dependent_shapes_through_compiled_path() {
+        let w = workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        assert!(m.instrs.iter().any(|i| matches!(i.op, crate::dhlo::Op::Unique)));
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(12);
+        for seq in [32usize, 100] {
+            let inputs = gen_inputs(seq, &mut rng);
+            let got = model.run(&inputs).unwrap();
+            let want = eval_module(model.module(), &inputs).unwrap();
+            assert_eq!(got.outputs[0].dims, vec![BATCH, 1]);
+            assert!(got.outputs[0].allclose(&want.outputs[0], 5e-4, 5e-4).unwrap());
+            // Scores are probabilities.
+            assert!(got.outputs[0].as_f32().unwrap().iter().all(|&s| (0.0..=1.0).contains(&s)));
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! ASR workload (both TensorFlow and PyTorch rows of Table 1, batch 1).
+//!
+//! A listen-attend style acoustic model over a dynamic-length feature
+//! sequence `[T, FEAT]`: a dense pre-net, two gated (GLU-ish) blocks whose
+//! TF variant produces both halves with one matmul + `Split` (exercising
+//! the bridge's constraint injection) while the PyTorch variant uses two
+//! separate projections (`torch.chunk`-free), then attention pooling over
+//! the dynamic time axis and a classifier head.
+
+use super::Workload;
+use crate::dhlo::{BinKind, DType, ReduceKind, UnKind};
+use crate::graph::{Edge, Graph, GraphBuilder};
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+pub const FEAT: usize = 40;
+pub const HIDDEN: usize = 64;
+pub const CLASSES: usize = 32;
+
+fn prenet(gb: &mut GraphBuilder, x: Edge, seed: u64) -> Edge {
+    let w = gb.weight("pre_w", &[FEAT, HIDDEN], seed);
+    let b = gb.weight("pre_b", &[HIDDEN], seed + 1);
+    let h = gb.matmul("pre_h", x, w);
+    let hb = gb.bias_add("pre_hb", h, b);
+    gb.unary("pre_act", UnKind::Relu, hb)
+}
+
+/// Gated block, TF style: one `[H, 2H]` matmul then `Split` into the value
+/// and gate halves (the paper's constraint-injection example in the wild).
+fn gated_block_tf(gb: &mut GraphBuilder, x: Edge, idx: usize, seed: u64) -> Edge {
+    let p = |s: &str| format!("g{idx}_{s}");
+    let w = gb.weight(&p("w"), &[HIDDEN, 2 * HIDDEN], seed);
+    let b = gb.weight(&p("b"), &[2 * HIDDEN], seed + 1);
+    let h = gb.matmul(&p("h"), x, w);
+    let hb = gb.bias_add(&p("hb"), h, b);
+    let halves = gb.split(&p("split"), hb, 1, 2);
+    let val = gb.unary(&p("val"), UnKind::Tanh, halves[0]);
+    let gate = gb.unary(&p("gate"), UnKind::Sigmoid, halves[1]);
+    let gated = gb.binary(&p("gated"), BinKind::Mul, val, gate);
+    gb.binary(&p("res"), BinKind::Add, x, gated)
+}
+
+/// Gated block, PyTorch style: two separate projections.
+fn gated_block_pt(gb: &mut GraphBuilder, x: Edge, idx: usize, seed: u64) -> Edge {
+    let p = |s: &str| format!("g{idx}_{s}");
+    let wv = gb.weight(&p("wv"), &[HIDDEN, HIDDEN], seed);
+    let wg = gb.weight(&p("wg"), &[HIDDEN, HIDDEN], seed + 1);
+    let hv = gb.matmul(&p("hv"), x, wv);
+    let hg = gb.matmul(&p("hg"), x, wg);
+    let val = gb.unary(&p("val"), UnKind::Tanh, hv);
+    let gate = gb.unary(&p("gate"), UnKind::Sigmoid, hg);
+    let gated = gb.binary(&p("gated"), BinKind::Mul, val, gate);
+    gb.binary(&p("res"), BinKind::Add, x, gated)
+}
+
+/// Attention pooling over the dynamic time axis + classifier.
+fn head(gb: &mut GraphBuilder, h: Edge, seed: u64) -> Edge {
+    let wa = gb.weight("attn_w", &[HIDDEN, 1], seed);
+    let scores = gb.matmul("attn_scores", h, wa); // [T, 1]
+    let scores_t = gb.transpose("attn_scores_t", scores, &[1, 0]); // [1, T]
+    let attn = gb.softmax("attn_softmax", scores_t); // softmax over dynamic T
+    let pooled = gb.matmul("attn_pooled", attn, h); // [1, H]
+    let wc = gb.weight("cls_w", &[HIDDEN, CLASSES], seed + 1);
+    let bc = gb.weight("cls_b", &[CLASSES], seed + 2);
+    let logits = gb.matmul("logits", pooled, wc);
+    let logits_b = gb.bias_add("logits_b", logits, bc);
+    gb.softmax("probs", logits_b)
+}
+
+fn build(tf: bool) -> Graph {
+    let mut gb = GraphBuilder::new(if tf { "asr_tf" } else { "asr_pt" });
+    let x = gb.placeholder("features", DType::F32, &[-1, FEAT as i64]);
+    let mut h = prenet(&mut gb, x, 600);
+    for i in 0..2 {
+        h = if tf {
+            gated_block_tf(&mut gb, h, i, 700 + 20 * i as u64)
+        } else {
+            gated_block_pt(&mut gb, h, i, 700 + 20 * i as u64)
+        };
+        let g = gb.weight(&format!("ln{i}_g"), &[HIDDEN], 800 + i as u64);
+        let b = gb.weight(&format!("ln{i}_b"), &[HIDDEN], 810 + i as u64);
+        h = gb.layernorm(&format!("ln{i}"), h, g, b);
+    }
+    let out = head(&mut gb, h, 900);
+    // Reduce over time axis too (frame-level aux output), keeping the
+    // dynamic reduction in the mix.
+    let frame_mean = gb.reduce("frame_mean", ReduceKind::Mean, h, &[0]);
+    gb.finish(&[out, frame_mean])
+}
+
+pub fn gen_inputs(seq: usize, rng: &mut Prng) -> Vec<Tensor> {
+    vec![Tensor::f32(&[seq, FEAT], rng.fill_f32(seq * FEAT, 0.5))]
+}
+
+pub fn workload_tf() -> Workload {
+    Workload {
+        name: "asr_tf",
+        framework: "TensorFlow",
+        batch: 1,
+        graph: build(true),
+        seq_range: (20, 120),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+pub fn workload_pt() -> Workload {
+    Workload {
+        name: "asr_pt",
+        framework: "PyTorch",
+        batch: 1,
+        graph: build(false),
+        seq_range: (20, 120),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+    use crate::runtime::reference::eval_module;
+
+    #[test]
+    fn asr_tf_split_lowering_runs_compiled() {
+        let w = workload_tf();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        // The TF variant must contain dynamic slices from Split lowering.
+        assert!(m.instrs.iter().any(|i| matches!(i.op, crate::dhlo::Op::DSlice)));
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(6);
+        let inputs = gen_inputs(33, &mut rng);
+        let got = model.run(&inputs).unwrap();
+        let want = eval_module(model.module(), &inputs).unwrap();
+        assert!(got.outputs[0].allclose(&want.outputs[0], 5e-4, 5e-4).unwrap());
+        assert!(got.outputs[1].allclose(&want.outputs[1], 5e-4, 5e-4).unwrap());
+    }
+
+    #[test]
+    fn asr_variants_structurally_differ() {
+        let tf = crate::bridge::lower(&workload_tf().graph).unwrap();
+        let pt = crate::bridge::lower(&workload_pt().graph).unwrap();
+        let tf_has_dslice = tf.instrs.iter().any(|i| matches!(i.op, crate::dhlo::Op::DSlice));
+        let pt_has_dslice = pt.instrs.iter().any(|i| matches!(i.op, crate::dhlo::Op::DSlice));
+        assert!(tf_has_dslice && !pt_has_dslice);
+    }
+}

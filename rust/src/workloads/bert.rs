@@ -1,0 +1,98 @@
+//! BERT workload (PyTorch flavour, batch 1) — the §5.1 case study model
+//! (vs PyTorch and vs TensorRT).
+//!
+//! Same encoder backbone as the Transformer workload, plus BERT's
+//! distinctive pieces: token + segment + position embedding sum with an
+//! embedding layernorm in front, and a tanh pooler head over the first
+//! token at the end.
+
+use super::transformer::{encoder_layer, HIDDEN, VOCAB};
+use super::Workload;
+use crate::dhlo::{BinKind, DType, UnKind};
+use crate::graph::{GOp, Graph, GraphBuilder};
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+pub const LAYERS: usize = 2;
+pub const SEGMENTS: usize = 2;
+
+pub fn graph() -> Graph {
+    let mut gb = GraphBuilder::new("bert");
+    let ids = gb.placeholder("input_ids", DType::I64, &[-1]);
+    let seg_ids = gb.placeholder("segment_ids", DType::I64, &[-1]);
+    let pos = gb.placeholder("position_enc", DType::F32, &[-1, HIDDEN as i64]);
+
+    let tok_table = gb.weight("tok_embeddings", &[VOCAB, HIDDEN], 300);
+    let seg_table = gb.weight("seg_embeddings", &[SEGMENTS, HIDDEN], 301);
+    let tok = gb.gather("tok", tok_table, ids, 0);
+    let seg = gb.gather("seg", seg_table, seg_ids, 0);
+    let sum1 = gb.binary("tok_seg", BinKind::Add, tok, seg);
+    let summed = gb.binary("emb_sum", BinKind::Add, sum1, pos);
+    let g0 = gb.weight("emb_ln_g", &[HIDDEN], 302);
+    let b0 = gb.weight("emb_ln_b", &[HIDDEN], 303);
+    let mut x = gb.layernorm("emb_ln", summed, g0, b0);
+
+    for layer in 0..LAYERS {
+        x = encoder_layer(&mut gb, x, layer, 400 + 50 * layer as u64);
+    }
+
+    // Pooler: first token -> dense -> tanh.
+    let first = gb.add(
+        "first_token",
+        GOp::Slice { begin: vec![0, 0], size: vec![1, HIDDEN as i64] },
+        &[x],
+    );
+    let wp = gb.weight("pooler_w", &[HIDDEN, HIDDEN], 500);
+    let bp = gb.weight("pooler_b", &[HIDDEN], 501);
+    let pooled = gb.matmul("pooled", first, wp);
+    let pooled_b = gb.bias_add("pooled_b", pooled, bp);
+    let out = gb.unary("pooler_tanh", UnKind::Tanh, pooled_b);
+    gb.finish(&[x, out])
+}
+
+pub fn gen_inputs(seq: usize, rng: &mut Prng) -> Vec<Tensor> {
+    vec![
+        Tensor::i64(&[seq], rng.fill_i64(seq, 0, VOCAB as i64 - 1)),
+        Tensor::i64(&[seq], rng.fill_i64(seq, 0, SEGMENTS as i64 - 1)),
+        Tensor::f32(&[seq, HIDDEN], rng.fill_f32(seq * HIDDEN, 0.1)),
+    ]
+}
+
+pub fn workload() -> Workload {
+    Workload {
+        name: "bert",
+        framework: "PyTorch",
+        batch: 1,
+        graph: graph(),
+        seq_range: (32, 160),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+    use crate::runtime::reference::eval_module;
+
+    #[test]
+    fn bert_all_modes_agree() {
+        let compiler = DiscCompiler::new().unwrap();
+        let mut rng = Prng::new(4);
+        let inputs = gen_inputs(21, &mut rng);
+        let reference = {
+            let m = crate::bridge::lower(&graph()).unwrap();
+            eval_module(&m, &inputs).unwrap()
+        };
+        for mode in [Mode::Eager, Mode::VmNimble, Mode::Disc] {
+            let m = crate::bridge::lower(&graph()).unwrap();
+            let mut model = compiler.compile(m, &CompileOptions::mode(mode)).unwrap();
+            let got = model.run(&inputs).unwrap();
+            assert_eq!(got.outputs[1].dims, vec![1, HIDDEN]);
+            assert!(
+                got.outputs[0].allclose(&reference.outputs[0], 5e-4, 5e-4).unwrap(),
+                "{mode:?} disagrees"
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! The evaluation workloads (paper Table 1).
+//!
+//! | Model       | Framework  | Batch |
+//! |-------------|------------|-------|
+//! | ASR         | TensorFlow | 1     |
+//! | ASR         | PyTorch    | 1     |
+//! | Seq2seq     | PyTorch    | 64    |
+//! | TTS         | TensorFlow | 1     |
+//! | BERT        | PyTorch    | 1     |
+//! | Ad Ranking  | TensorFlow | 512   |
+//! | Transformer | TensorFlow | 1     |
+//!
+//! The paper's models are proprietary; these are structurally
+//! representative stand-ins (see DESIGN.md §3): the op mixes (attention
+//! blocks, layernorm/softmax expansions, gated RNN cells, embedding +
+//! Unique sparse lookups, MLP towers) and the dynamism axes (sequence
+//! length, id-list length) match what the paper exercises, at hidden sizes
+//! sized for a CPU testbed. Weights are embedded as deterministic constants
+//! so a request carries only activations.
+
+pub mod ad_ranking;
+pub mod asr;
+pub mod bert;
+pub mod seq2seq;
+pub mod transformer;
+pub mod tts;
+
+use crate::graph::Graph;
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// A runnable workload: its graph plus a request generator.
+pub struct Workload {
+    pub name: &'static str,
+    pub framework: &'static str,
+    pub batch: usize,
+    pub graph: Graph,
+    /// Dynamic-extent range a request stream samples from (the "sequence
+    /// length" axis of the workload).
+    pub seq_range: (usize, usize),
+    /// Generate request inputs for a given dynamic extent.
+    pub gen: Box<dyn Fn(usize, &mut Prng) -> Vec<Tensor>>,
+}
+
+impl Workload {
+    /// Sample a request stream of `n` requests (deterministic per seed).
+    pub fn request_stream(&self, n: usize, seed: u64) -> Vec<Vec<Tensor>> {
+        let mut rng = Prng::new(seed);
+        (0..n)
+            .map(|_| {
+                let seq = rng.range(self.seq_range.0, self.seq_range.1);
+                (self.gen)(seq, &mut rng)
+            })
+            .collect()
+    }
+}
+
+/// All Table 1 rows, in the paper's order.
+pub fn all() -> Vec<Workload> {
+    vec![
+        asr::workload_tf(),
+        asr::workload_pt(),
+        seq2seq::workload(),
+        tts::workload(),
+        bert::workload(),
+        ad_ranking::workload(),
+        transformer::workload(),
+    ]
+}
+
+/// Look up a workload by CLI name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    match name {
+        "asr_tf" | "asr" => Some(asr::workload_tf()),
+        "asr_pt" => Some(asr::workload_pt()),
+        "seq2seq" => Some(seq2seq::workload()),
+        "tts" => Some(tts::workload()),
+        "bert" => Some(bert::workload()),
+        "ad_ranking" | "ads" => Some(ad_ranking::workload()),
+        "transformer" => Some(transformer::workload()),
+        _ => None,
+    }
+}
+
+pub const NAMES: [&str; 7] =
+    ["asr_tf", "asr_pt", "seq2seq", "tts", "bert", "ad_ranking", "transformer"];
+
+/// Freeze a workload graph's dynamic placeholder dims to `fixed` (consumed
+/// in placeholder order). Used by the Fig. 4 bench to build the
+/// static-compiler comparison graph for a given input size.
+pub fn make_static(g: &Graph, fixed_extent: usize) -> Graph {
+    let mut out = g.clone();
+    for node in &mut out.nodes {
+        if let crate::graph::GOp::Placeholder { dims, .. } = &mut node.op {
+            for d in dims.iter_mut() {
+                if *d < 0 {
+                    *d = fixed_extent as i64;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::eval_module;
+
+    /// Every workload lowers, verifies, and evaluates on a couple of
+    /// dynamic extents — the broad structural smoke test.
+    #[test]
+    fn all_workloads_lower_and_evaluate() {
+        for w in all() {
+            let m = crate::bridge::lower(&w.graph)
+                .unwrap_or_else(|e| panic!("{}: lowering failed: {e:#}", w.name));
+            let mut rng = Prng::new(1);
+            for seq in [w.seq_range.0, (w.seq_range.0 + w.seq_range.1) / 2] {
+                let inputs = (w.gen)(seq, &mut rng);
+                let r = eval_module(&m, &inputs)
+                    .unwrap_or_else(|e| panic!("{}: eval at {seq} failed: {e:#}", w.name));
+                assert!(!r.outputs.is_empty(), "{}", w.name);
+                assert!(r.launches > 3, "{} should be non-trivial", w.name);
+            }
+        }
+    }
+
+    #[test]
+    fn workloads_have_dynamic_shapes() {
+        for w in all() {
+            let m = crate::bridge::lower(&w.graph).unwrap();
+            assert!(
+                !m.is_fully_static(),
+                "{} must exercise dynamic shapes (that is the paper's point)",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn request_streams_are_deterministic() {
+        let w = transformer::workload();
+        let a = w.request_stream(3, 9);
+        let b = w.request_stream(3, 9);
+        for (x, y) in a.iter().zip(&b) {
+            for (tx, ty) in x.iter().zip(y) {
+                assert_eq!(tx, ty);
+            }
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Seq2seq workload (PyTorch flavour, batch 64).
+//!
+//! Encoder over a dynamic-length batched token tensor `[B, S]` (embedding
+//! via flattened gather, dense + tanh, masked-free mean pooling over the
+//! dynamic time axis) and a single decoder step (gated cell + vocabulary
+//! softmax). The batch axis is static (64, per Table 1); the sequence axis
+//! is the dynamism driver.
+
+use super::Workload;
+use crate::dhlo::{BinKind, DType, ReduceKind, UnKind};
+use crate::graph::{Graph, GraphBuilder};
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+pub const BATCH: usize = 64;
+pub const EMB: usize = 32;
+pub const HIDDEN: usize = 64;
+pub const VOCAB: usize = 256;
+
+pub fn graph() -> Graph {
+    let mut gb = GraphBuilder::new("seq2seq");
+    // [B*S] flattened ids (PyTorch-style view) with dynamic S.
+    let ids = gb.placeholder("src_ids", DType::I64, &[-1]);
+    let prev = gb.placeholder("prev_emb", DType::F32, &[BATCH as i64, EMB as i64]);
+
+    let table = gb.weight("src_embedding", &[VOCAB, EMB], 2000);
+    let flat = gb.gather("emb_flat", table, ids, 0); // [B*S, E]
+    // View as [B, S, E]: batch static, S inferred.
+    let emb = gb.reshape("emb", flat, &[BATCH as i64, -1, EMB as i64]);
+
+    // Encoder dense+tanh applied over the flattened time dim.
+    let flat2 = gb.reshape("enc_in", emb, &[-1, EMB as i64]);
+    let we = gb.weight("enc_w", &[EMB, HIDDEN], 2001);
+    let be = gb.weight("enc_b", &[HIDDEN], 2002);
+    let eh = gb.matmul("enc_h", flat2, we);
+    let ehb = gb.bias_add("enc_hb", eh, be);
+    let ea = gb.unary("enc_act", UnKind::Tanh, ehb);
+    let enc = gb.reshape("enc", ea, &[BATCH as i64, -1, HIDDEN as i64]); // [B, S, H]
+
+    // Mean-pool over the dynamic time axis → context [B, H].
+    let ctx = gb.reduce("ctx", ReduceKind::Mean, enc, &[1]);
+
+    // Decoder step: gated cell over (prev token embedding, context).
+    let wi = gb.weight("dec_wi", &[EMB, HIDDEN], 2010);
+    let wc = gb.weight("dec_wc", &[HIDDEN, HIDDEN], 2011);
+    let xi = gb.matmul("dec_xi", prev, wi); // [B, H]
+    let xc = gb.matmul("dec_xc", ctx, wc); // [B, H]
+    let pre = gb.binary("dec_pre", BinKind::Add, xi, xc);
+    let z = gb.unary("dec_z", UnKind::Sigmoid, pre);
+    let cand = gb.unary("dec_cand", UnKind::Tanh, pre);
+    let gated = gb.binary("dec_gated", BinKind::Mul, z, cand);
+    let state = gb.binary("dec_state", BinKind::Add, gated, xc); // [B, H]
+
+    // Vocabulary head.
+    let wo = gb.weight("dec_wo", &[HIDDEN, VOCAB], 2012);
+    let bo = gb.weight("dec_bo", &[VOCAB], 2013);
+    let logits = gb.matmul("logits", state, wo);
+    let logits_b = gb.bias_add("logits_b", logits, bo);
+    let probs = gb.softmax("probs", logits_b); // [B, V]
+    gb.finish(&[probs, ctx])
+}
+
+pub fn gen_inputs(seq: usize, rng: &mut Prng) -> Vec<Tensor> {
+    vec![
+        Tensor::i64(&[BATCH * seq], rng.fill_i64(BATCH * seq, 0, VOCAB as i64 - 1)),
+        Tensor::f32(&[BATCH, EMB], rng.fill_f32(BATCH * EMB, 0.5)),
+    ]
+}
+
+pub fn workload() -> Workload {
+    Workload {
+        name: "seq2seq",
+        framework: "PyTorch",
+        batch: BATCH,
+        graph: graph(),
+        seq_range: (8, 48),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+    use crate::runtime::reference::eval_module;
+
+    #[test]
+    fn seq2seq_batched_dynamic_time() {
+        let w = workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(10);
+        for seq in [9usize, 16] {
+            let inputs = gen_inputs(seq, &mut rng);
+            let got = model.run(&inputs).unwrap();
+            let want = eval_module(model.module(), &inputs).unwrap();
+            assert_eq!(got.outputs[0].dims, vec![BATCH, VOCAB]);
+            assert!(got.outputs[0].allclose(&want.outputs[0], 5e-4, 5e-4).unwrap());
+            // Probabilities sum to ~1 per row.
+            let row: f32 = got.outputs[0].as_f32().unwrap()[..VOCAB].iter().sum();
+            assert!((row - 1.0).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Transformer encoder workload (TensorFlow flavour, batch 1) — the model
+//! the paper uses for its §5.2 Nimble comparison and Table 2/3 breakdowns.
+//!
+//! Token ids (dynamic sequence length) → embedding → N encoder layers of
+//! multi-head attention + FFN, each with residual + layernorm. Multi-head
+//! reshaping goes through `Reshape`/`Transpose`, attention through batched
+//! matmuls, scores through scaled softmax over the *dynamic* time axis —
+//! exactly the memory-intensive op mix whose fusion the paper measures.
+
+use super::Workload;
+use crate::dhlo::{BinKind, DType, UnKind};
+use crate::graph::{Edge, Graph, GraphBuilder};
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+pub const HIDDEN: usize = 128;
+pub const HEADS: usize = 4;
+pub const HEAD_DIM: usize = HIDDEN / HEADS;
+pub const FFN: usize = 256;
+pub const VOCAB: usize = 512;
+pub const LAYERS: usize = 2;
+
+/// One encoder layer; returns the layer output `[S, HIDDEN]`.
+pub fn encoder_layer(gb: &mut GraphBuilder, x: Edge, layer: usize, seed: u64) -> Edge {
+    let p = |s: &str| format!("l{layer}_{s}");
+    let wq = gb.weight(&p("wq"), &[HIDDEN, HIDDEN], seed + 1);
+    let wk = gb.weight(&p("wk"), &[HIDDEN, HIDDEN], seed + 2);
+    let wv = gb.weight(&p("wv"), &[HIDDEN, HIDDEN], seed + 3);
+    let wo = gb.weight(&p("wo"), &[HIDDEN, HIDDEN], seed + 4);
+
+    // Projections [S, H].
+    let q = gb.matmul(&p("q"), x, wq);
+    let k = gb.matmul(&p("k"), x, wk);
+    let v = gb.matmul(&p("v"), x, wv);
+
+    // Split heads: [S, H] -> [S, heads, hd] -> [heads, S, hd].
+    let split = |gb: &mut GraphBuilder, t: Edge, nm: &str| -> Edge {
+        let r = gb.reshape(&format!("{nm}_r"), t, &[-1, HEADS as i64, HEAD_DIM as i64]);
+        gb.transpose(&format!("{nm}_t"), r, &[1, 0, 2])
+    };
+    let qh = split(gb, q, &p("qh"));
+    let kh = split(gb, k, &p("kh"));
+    let vh = split(gb, v, &p("vh"));
+
+    // Scores [heads, S, S], scaled softmax over the dynamic axis.
+    let kt = gb.transpose(&p("kt"), kh, &[0, 2, 1]);
+    let scores = gb.matmul(&p("scores"), qh, kt);
+    let scaled = gb.scale(&p("scaled"), scores, 1.0 / (HEAD_DIM as f32).sqrt());
+    let attn = gb.softmax(&p("attn"), scaled);
+
+    // Context [heads, S, hd] -> [S, H].
+    let ctx = gb.matmul(&p("ctx"), attn, vh);
+    let ctx_t = gb.transpose(&p("ctx_t"), ctx, &[1, 0, 2]);
+    let merged = gb.reshape(&p("merged"), ctx_t, &[-1, HIDDEN as i64]);
+    let proj = gb.matmul(&p("proj"), merged, wo);
+
+    // Residual + LN.
+    let res1 = gb.binary(&p("res1"), BinKind::Add, x, proj);
+    let g1 = gb.weight(&p("g1"), &[HIDDEN], seed + 5);
+    let b1 = gb.weight(&p("b1"), &[HIDDEN], seed + 6);
+    let ln1 = gb.layernorm(&p("ln1"), res1, g1, b1);
+
+    // FFN with gelu.
+    let w1 = gb.weight(&p("w1"), &[HIDDEN, FFN], seed + 7);
+    let w2 = gb.weight(&p("w2"), &[FFN, HIDDEN], seed + 8);
+    let bias1 = gb.weight(&p("bias1"), &[FFN], seed + 9);
+    let bias2 = gb.weight(&p("bias2"), &[HIDDEN], seed + 10);
+    let h1 = gb.matmul(&p("h1"), ln1, w1);
+    let h1b = gb.bias_add(&p("h1b"), h1, bias1);
+    let act = gb.unary(&p("act"), UnKind::Gelu, h1b);
+    let h2 = gb.matmul(&p("h2"), act, w2);
+    let h2b = gb.bias_add(&p("h2b"), h2, bias2);
+    let res2 = gb.binary(&p("res2"), BinKind::Add, ln1, h2b);
+    let g2 = gb.weight(&p("g2"), &[HIDDEN], seed + 11);
+    let b2 = gb.weight(&p("b2"), &[HIDDEN], seed + 12);
+    gb.layernorm(&p("ln2"), res2, g2, b2)
+}
+
+pub fn graph() -> Graph {
+    let mut gb = GraphBuilder::new("transformer");
+    // Token ids with dynamic sequence length (batch 1, TF-style flat ids).
+    let ids = gb.placeholder("ids", DType::I64, &[-1]);
+    let table = gb.weight("embedding", &[VOCAB, HIDDEN], 100);
+    let pos = gb.placeholder("pos_enc", DType::F32, &[-1, HIDDEN as i64]);
+    let emb = gb.gather("emb", table, ids, 0);
+    let mut x = gb.binary("emb_pos", BinKind::Add, emb, pos);
+    for layer in 0..LAYERS {
+        x = encoder_layer(&mut gb, x, layer, 200 + 50 * layer as u64);
+    }
+    gb.finish(&[x])
+}
+
+pub fn gen_inputs(seq: usize, rng: &mut Prng) -> Vec<Tensor> {
+    let ids = Tensor::i64(&[seq], rng.fill_i64(seq, 0, VOCAB as i64 - 1));
+    let pos = Tensor::f32(&[seq, HIDDEN], rng.fill_f32(seq * HIDDEN, 0.1));
+    vec![ids, pos]
+}
+
+pub fn workload() -> Workload {
+    Workload {
+        name: "transformer",
+        framework: "TensorFlow",
+        batch: 1,
+        graph: graph(),
+        seq_range: (32, 160),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+    use crate::runtime::reference::eval_module;
+
+    #[test]
+    fn transformer_runs_through_disc_with_dynamic_lengths() {
+        let w = workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(2);
+        for seq in [17usize, 31] {
+            let inputs = gen_inputs(seq, &mut rng);
+            let got = model.run(&inputs).unwrap();
+            let want = eval_module(model.module(), &inputs).unwrap();
+            assert_eq!(got.outputs[0].dims, vec![seq, HIDDEN]);
+            assert!(
+                got.outputs[0].allclose(&want.outputs[0], 5e-4, 5e-4).unwrap(),
+                "seq {seq}: max diff {}",
+                got.outputs[0].max_abs_diff(&want.outputs[0]).unwrap()
+            );
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! TTS workload (TensorFlow flavour, batch 1): a Tacotron-style decoder
+//! step conditioned on a dynamic-length encoder memory.
+//!
+//! Inputs: encoder memory `[S, H]` (dynamic S) and the previous mel frame.
+//! Pre-net (dense + relu ×2) → additive attention over the memory →
+//! GRU-flavoured gated update → post-net (dense + tanh ×3) emitting the
+//! next mel frame. Heavy on small elementwise/broadcast/reduce ops — the
+//! shape of workload where the paper's fusion shines.
+
+use super::Workload;
+use crate::dhlo::{BinKind, DType, UnKind};
+use crate::graph::{Graph, GraphBuilder};
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+pub const HIDDEN: usize = 64;
+pub const MEL: usize = 20;
+
+pub fn graph() -> Graph {
+    let mut gb = GraphBuilder::new("tts");
+    let memory = gb.placeholder("memory", DType::F32, &[-1, HIDDEN as i64]);
+    let prev = gb.placeholder("prev_frame", DType::F32, &[1, MEL as i64]);
+
+    // Pre-net.
+    let w1 = gb.weight("pre_w1", &[MEL, HIDDEN], 1000);
+    let b1 = gb.weight("pre_b1", &[HIDDEN], 1001);
+    let h1 = gb.matmul("pre_h1", prev, w1);
+    let h1b = gb.bias_add("pre_h1b", h1, b1);
+    let a1 = gb.unary("pre_a1", UnKind::Relu, h1b);
+    let w2 = gb.weight("pre_w2", &[HIDDEN, HIDDEN], 1002);
+    let b2 = gb.weight("pre_b2", &[HIDDEN], 1003);
+    let h2 = gb.matmul("pre_h2", a1, w2);
+    let h2b = gb.bias_add("pre_h2b", h2, b2);
+    let query = gb.unary("pre_a2", UnKind::Relu, h2b); // [1, H]
+
+    // Additive attention: tanh(mem W + query W') v over dynamic S.
+    let wm = gb.weight("attn_wm", &[HIDDEN, HIDDEN], 1010);
+    let wq = gb.weight("attn_wq", &[HIDDEN, HIDDEN], 1011);
+    let keys = gb.matmul("attn_keys", memory, wm); // [S, H]
+    let qproj = gb.matmul("attn_q", query, wq); // [1, H]
+    // Broadcast the query row over the sequence: keys + q.
+    let qrow = gb.reshape("attn_q_row", qproj, &[HIDDEN as i64]); // [H]
+    let added = gb.binary("attn_added", BinKind::Add, keys, qrow);
+    let energy_in = gb.unary("attn_tanh", UnKind::Tanh, added);
+    let v = gb.weight("attn_v", &[HIDDEN, 1], 1012);
+    let scores = gb.matmul("attn_scores", energy_in, v); // [S, 1]
+    let scores_t = gb.transpose("attn_scores_t", scores, &[1, 0]); // [1, S]
+    let weights = gb.softmax("attn_weights", scores_t);
+    let context = gb.matmul("attn_ctx", weights, memory); // [1, H]
+
+    // Gated update (GRU-ish).
+    let wz = gb.weight("gate_wz", &[HIDDEN, HIDDEN], 1020);
+    let wh = gb.weight("gate_wh", &[HIDDEN, HIDDEN], 1021);
+    let zi = gb.matmul("gate_zi", context, wz);
+    let zq = gb.matmul("gate_zq", query, wh);
+    let zsum = gb.binary("gate_zsum", BinKind::Add, zi, zq);
+    let z = gb.unary("gate_z", UnKind::Sigmoid, zsum);
+    let cand_in = gb.binary("gate_cand_in", BinKind::Add, context, query);
+    let cand = gb.unary("gate_cand", UnKind::Tanh, cand_in);
+    let one = gb.weight("one", &[HIDDEN], 1022);
+    let zneg = gb.unary("gate_zneg", UnKind::Neg, z);
+    let one_minus = gb.binary("gate_one_minus", BinKind::Add, zneg, one);
+    let keep = gb.binary("gate_keep", BinKind::Mul, z, query);
+    let update = gb.binary("gate_update", BinKind::Mul, one_minus, cand);
+    let state = gb.binary("gate_state", BinKind::Add, keep, update); // [1, H]
+
+    // Post-net.
+    let mut h = state;
+    for i in 0..3 {
+        let wo = gb.weight(
+            &format!("post_w{i}"),
+            &[HIDDEN, if i == 2 { MEL } else { HIDDEN }],
+            1030 + i as u64,
+        );
+        let t = gb.matmul(&format!("post_h{i}"), h, wo);
+        h = gb.unary(&format!("post_t{i}"), UnKind::Tanh, t);
+    }
+    gb.finish(&[h, weights])
+}
+
+pub fn gen_inputs(seq: usize, rng: &mut Prng) -> Vec<Tensor> {
+    vec![
+        Tensor::f32(&[seq, HIDDEN], rng.fill_f32(seq * HIDDEN, 0.5)),
+        Tensor::f32(&[1, MEL], rng.fill_f32(MEL, 0.5)),
+    ]
+}
+
+pub fn workload() -> Workload {
+    Workload {
+        name: "tts",
+        framework: "TensorFlow",
+        batch: 1,
+        graph: graph(),
+        seq_range: (24, 160),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+    use crate::runtime::reference::eval_module;
+
+    #[test]
+    fn tts_decoder_step_compiles_and_matches() {
+        let w = workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(8);
+        for seq in [24usize, 57] {
+            let inputs = gen_inputs(seq, &mut rng);
+            let got = model.run(&inputs).unwrap();
+            let want = eval_module(model.module(), &inputs).unwrap();
+            assert_eq!(got.outputs[0].dims, vec![1, MEL]);
+            assert_eq!(got.outputs[1].dims, vec![1, seq]);
+            assert!(got.outputs[0].allclose(&want.outputs[0], 5e-4, 5e-4).unwrap());
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Cross-module integration + property tests.
+//!
+//! A seeded random-graph generator produces arbitrary well-typed frontend
+//! graphs with dynamic shapes; every graph is pushed through the full
+//! pipeline under all execution modes and checked against the reference
+//! interpreter. This is the repo's mini-proptest (the vendored registry
+//! has no proptest crate): failures print the generating seed, which is
+//! sufficient to reproduce deterministically.
+
+use disc::compiler::{CompileOptions, DiscCompiler, Mode};
+use disc::dhlo::{BinKind, DType, ReduceKind, UnKind};
+use disc::graph::{Edge, GOp, Graph, GraphBuilder};
+use disc::runtime::reference::eval_module;
+use disc::runtime::tensor::Tensor;
+use disc::util::prng::Prng;
+
+/// Generate a random well-typed graph over a `[?, width]` dataflow.
+/// Returns the graph; inputs are a single dynamic-rows placeholder.
+fn random_graph(seed: u64, width: usize) -> Graph {
+    let mut rng = Prng::new(seed);
+    let mut gb = GraphBuilder::new(format!("rand{seed}"));
+    let x = gb.placeholder("x", DType::F32, &[-1, width as i64]);
+    // Pool of values with shape [?, width].
+    let mut pool: Vec<Edge> = vec![x];
+    let n_ops = rng.range(3, 14);
+    for i in 0..n_ops {
+        let pick = *rng.choose(&pool);
+        let choice = rng.below(10);
+        let v = match choice {
+            0 => gb.unary(&format!("t{i}"), UnKind::Tanh, pick),
+            1 => gb.unary(&format!("g{i}"), UnKind::Gelu, pick),
+            2 => gb.unary(&format!("r{i}"), UnKind::Relu, pick),
+            3 => gb.unary(&format!("s{i}"), UnKind::Sigmoid, pick),
+            4 => {
+                let other = *rng.choose(&pool);
+                gb.binary(&format!("a{i}"), BinKind::Add, pick, other)
+            }
+            5 => {
+                let other = *rng.choose(&pool);
+                gb.binary(&format!("m{i}"), BinKind::Mul, pick, other)
+            }
+            6 => gb.softmax(&format!("sm{i}"), pick),
+            7 => {
+                let gamma = gb.weight(&format!("ga{i}"), &[width], seed + i as u64);
+                let beta = gb.weight(&format!("be{i}"), &[width], seed + 100 + i as u64);
+                gb.layernorm(&format!("ln{i}"), pick, gamma, beta)
+            }
+            8 => {
+                let w = gb.weight(&format!("w{i}"), &[width, width], seed + 200 + i as u64);
+                gb.matmul(&format!("mm{i}"), pick, w)
+            }
+            _ => {
+                let b = gb.weight(&format!("bw{i}"), &[width], seed + 300 + i as u64);
+                gb.bias_add(&format!("ba{i}"), pick, b)
+            }
+        };
+        pool.push(v);
+    }
+    // A reduction tail keeps outputs small and exercises input fusion.
+    let last = *pool.last().unwrap();
+    let red = gb.add("final_red", GOp::Reduce { kind: ReduceKind::Mean, axes: vec![1] }, &[last]);
+    gb.finish(&[last, red])
+}
+
+fn run_all_modes_agree(seed: u64) {
+    let width = 8 + 4 * (seed % 3) as usize;
+    let g = random_graph(seed, width);
+    let module = disc::bridge::lower(&g)
+        .unwrap_or_else(|e| panic!("seed {seed}: lowering failed: {e:#}"));
+    let compiler = DiscCompiler::new().unwrap();
+    let mut rng = Prng::new(seed ^ 0xABCD);
+
+    let mut models: Vec<(Mode, _)> = [Mode::Eager, Mode::VmNimble, Mode::Disc, Mode::Static]
+        .into_iter()
+        .map(|mode| {
+            let m = disc::bridge::lower(&g).unwrap();
+            (mode, compiler.compile(m, &CompileOptions::mode(mode)).unwrap())
+        })
+        .collect();
+
+    for rows in [rng.range(2, 9), rng.range(10, 33)] {
+        let input = Tensor::f32(&[rows, width], rng.fill_f32(rows * width, 1.0));
+        let want = eval_module(&module, &[input.clone()])
+            .unwrap_or_else(|e| panic!("seed {seed}: reference failed: {e:#}"));
+        for (mode, model) in models.iter_mut() {
+            let got = model
+                .run(std::slice::from_ref(&input))
+                .unwrap_or_else(|e| panic!("seed {seed} mode {mode:?}: run failed: {e:#}"));
+            for (o, (g_t, w_t)) in got.outputs.iter().zip(&want.outputs).enumerate() {
+                assert!(
+                    g_t.allclose(w_t, 1e-3, 1e-3).unwrap(),
+                    "seed {seed} mode {mode:?} rows {rows} output {o}: max diff {}",
+                    g_t.max_abs_diff(w_t).unwrap_or(f32::NAN)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_all_modes_agree_on_random_graphs() {
+    for seed in 0..12u64 {
+        run_all_modes_agree(seed);
+    }
+}
+
+#[test]
+fn property_fusion_never_increases_kernel_count() {
+    // The fusion plan's kernel count is never worse than unfused, for any
+    // random graph.
+    for seed in 100..130u64 {
+        let g = random_graph(seed, 8);
+        let m = disc::bridge::lower(&g).unwrap();
+        let fused = disc::fusion::plan(&m, &disc::fusion::FusionOptions::default());
+        let unfused_count = m.memory_intensive_count();
+        assert!(
+            fused.kernel_count(&m) <= unfused_count,
+            "seed {seed}: fusion increased kernels"
+        );
+    }
+}
+
+#[test]
+fn property_constraints_never_shrink_fusion_groups() {
+    // Adding constraint knowledge can only merge more, never less.
+    for seed in 200..230u64 {
+        let g = random_graph(seed, 8);
+        let m = disc::bridge::lower(&g).unwrap();
+        let with = disc::fusion::plan(&m, &disc::fusion::FusionOptions::default());
+        let without = disc::fusion::plan(
+            &m,
+            &disc::fusion::FusionOptions { use_constraints: false, ..Default::default() },
+        );
+        assert!(
+            with.kernel_count(&m) <= without.kernel_count(&m),
+            "seed {seed}: constraints hurt fusion"
+        );
+    }
+}
+
+#[test]
+fn property_optimize_preserves_numerics() {
+    for seed in 300..320u64 {
+        let g = random_graph(seed, 8);
+        let m = disc::bridge::lower(&g).unwrap();
+        let opt = disc::passes::optimize(&m).unwrap();
+        assert!(opt.instrs.len() <= m.instrs.len(), "seed {seed}: passes grew the module");
+        let mut rng = Prng::new(seed);
+        let rows = rng.range(2, 17);
+        let input = Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0));
+        let a = eval_module(&m, &[input.clone()]).unwrap();
+        let b = eval_module(&opt, &[input]).unwrap();
+        for (x, y) in a.outputs.iter().zip(&b.outputs) {
+            assert!(
+                x.allclose(y, 1e-6, 1e-6).unwrap(),
+                "seed {seed}: optimization changed numerics"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_cache_never_recompiles_repeated_shapes() {
+    // Serving the same shape stream twice must not trigger new compiles —
+    // the core DISC claim, over random graphs.
+    let compiler = DiscCompiler::new().unwrap();
+    for seed in 400..406u64 {
+        let g = random_graph(seed, 8);
+        let m = disc::bridge::lower(&g).unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(seed);
+        let shapes: Vec<usize> = (0..4).map(|_| rng.range(2, 40)).collect();
+        for &rows in &shapes {
+            let input = Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0));
+            model.run(&[input]).unwrap();
+        }
+        let misses = model.cache_stats().unwrap().misses;
+        for &rows in &shapes {
+            let input = Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0));
+            model.run(&[input]).unwrap();
+        }
+        assert_eq!(
+            model.cache_stats().unwrap().misses,
+            misses,
+            "seed {seed}: repeated shapes recompiled"
+        );
+    }
+}
+
+#[test]
+fn property_buffer_liveness_is_sound() {
+    // Programs with aggressive dealloc placement still produce outputs for
+    // random graphs at random shapes (no use-after-free of value slots).
+    let compiler = DiscCompiler::new().unwrap();
+    for seed in 500..510u64 {
+        let g = random_graph(seed, 12);
+        let m = disc::bridge::lower(&g).unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(seed);
+        for _ in 0..3 {
+            let rows = rng.range(1, 50);
+            let input = Tensor::f32(&[rows, 12], rng.fill_f32(rows * 12, 1.0));
+            let out = model.run(&[input]).unwrap();
+            assert!(!out.outputs.is_empty());
+        }
+    }
+}
+
+#[test]
+fn serving_stream_matches_reference_for_every_workload() {
+    // End-to-end: all seven Table-1 workloads, DISC vs reference, over a
+    // short dynamic request stream.
+    let compiler = DiscCompiler::new().unwrap();
+    for w in disc::workloads::all() {
+        let module = disc::bridge::lower(&w.graph).unwrap();
+        let mut model =
+            compiler.compile(module, &CompileOptions::mode(Mode::Disc)).unwrap();
+        for inputs in w.request_stream(3, 7) {
+            let got = model.run(&inputs).unwrap();
+            let want = eval_module(model.module(), &inputs).unwrap();
+            for (g_t, w_t) in got.outputs.iter().zip(&want.outputs) {
+                assert!(
+                    g_t.allclose(w_t, 1e-3, 1e-3).unwrap(),
+                    "{}: compiled path diverged from reference",
+                    w.name
+                );
+            }
+        }
+    }
+}
