@@ -4,7 +4,9 @@
 //!  2. input fusion (reduce-rooted) on/off (§4.3 templates);
 //!  3. bucket policy: pow2 vs multiple-of-16 vs exact (§4.3 adaptive
 //!     configuration vs per-shape compilation);
-//!  4. pooled (cached) allocator on/off (§4.2.2).
+//!  4. pooled (cached) allocator on/off (§4.2.2);
+//!  5. launch-plan cache + device-resident replay on/off (the per-request
+//!     host-overhead tier; see docs/runtime.md).
 
 use disc::bench::Table;
 use disc::codegen::BucketPolicy;
@@ -59,6 +61,14 @@ fn main() {
         Case {
             name: "no buffer pooling",
             opts: CompileOptions { pooled_buffers: false, ..base.clone() },
+        },
+        Case {
+            name: "no launch-plan cache",
+            opts: CompileOptions { plan_cache: false, device_resident: false, ..base.clone() },
+        },
+        Case {
+            name: "plans, host-resident",
+            opts: CompileOptions { device_resident: false, ..base.clone() },
         },
     ];
 

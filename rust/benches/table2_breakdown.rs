@@ -60,6 +60,15 @@ fn main() {
          runtime flow vs VM interpretation gap, measured on real host time.",
         100.0 * disc_cpu / nimble_cpu
     );
+    let dm = &rows[1].2;
+    println!(
+        "DISC launch plans: {} hits / {} misses over the measured stream; \
+         host<->device traffic h2d={} d2h={} (device-resident replay).",
+        dm.plan_hits,
+        dm.plan_misses,
+        disc::util::fmt_bytes(dm.h2d_bytes as usize),
+        disc::util::fmt_bytes(dm.d2h_bytes as usize)
+    );
     println!(
         "mem-bound: DISC = {:.2}x faster (paper: 2.61x) — constraint-driven \
          fusion scope.",

@@ -78,7 +78,7 @@ impl KernelCache {
         self.stats.misses += 1;
         let name = format!("fusion_{}", self.map.len());
         let spec = emit_group(m, g, &bucketed, &name)?;
-        let exe = self.device.compile_hlo_text(&spec.hlo)?;
+        let exe = self.device.compile_hlo_text_named(&name, &spec.hlo)?;
         self.stats.compile_time += exe.compile_time;
         let k = Rc::new(CompiledKernel { spec, exe });
         self.map.insert(key, k.clone());

@@ -48,11 +48,24 @@ pub struct CompileOptions {
     /// Run the optimization pass pipeline (fold/cse/dce) before planning.
     pub optimize: bool,
     pub pooled_buffers: bool,
+    /// Cache + replay resolved launch plans per symbol binding (tier 3 of
+    /// the runtime pipeline; see docs/runtime.md).
+    pub plan_cache: bool,
+    /// Keep fused/GEMM results device-resident during plan replays.
+    pub device_resident: bool,
 }
 
 impl CompileOptions {
     pub fn mode(mode: Mode) -> Self {
-        CompileOptions { mode, fusion: None, policy: None, optimize: true, pooled_buffers: true }
+        CompileOptions {
+            mode,
+            fusion: None,
+            policy: None,
+            optimize: true,
+            pooled_buffers: true,
+            plan_cache: true,
+            device_resident: true,
+        }
     }
 }
 
@@ -106,6 +119,14 @@ impl CompiledModel {
             Backend::Eager { .. } => None,
             Backend::Vm { vm, .. } => Some(vm.cache.stats.clone()),
             Backend::Program { exec, .. } => Some(exec.cache.stats.clone()),
+        }
+    }
+
+    /// Launch-plan cache stats (program backends only).
+    pub fn plan_stats(&self) -> Option<crate::runtime::plan::PlanStats> {
+        match &self.backend {
+            Backend::Program { exec, .. } => Some(exec.plan_stats.clone()),
+            _ => None,
         }
     }
 }
@@ -184,7 +205,12 @@ impl DiscCompiler {
                 let prog = generate(module, &plan)?;
                 let exec = Executor::new(
                     self.device.clone(),
-                    ExecOptions { policy, pooled_buffers: opts.pooled_buffers },
+                    ExecOptions {
+                        policy,
+                        pooled_buffers: opts.pooled_buffers,
+                        plan_cache: opts.plan_cache,
+                        device_resident: opts.device_resident,
+                    },
                 );
                 Backend::Program { exec, prog }
             }

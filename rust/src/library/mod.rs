@@ -15,7 +15,7 @@ use crate::codegen::BucketPolicy;
 use crate::dhlo::DType;
 use crate::runtime::buffers::BufferPool;
 use crate::runtime::executor::{crop_box, pad_box};
-use crate::runtime::pjrt::{Device, Executable};
+use crate::runtime::pjrt::{Device, DeviceTensor, Executable};
 use crate::runtime::tensor::Tensor;
 use anyhow::{ensure, Result};
 use std::collections::HashMap;
@@ -119,7 +119,8 @@ impl GemmLibrary {
             return Ok(e.clone());
         }
         let hlo = Self::dot_hlo(&key);
-        let exe = self.device.compile_hlo_text(&hlo)?;
+        let name = format!("gemm_{}x{}x{}x{}", key.batch, key.m, key.k, key.n);
+        let exe = self.device.compile_hlo_text_named(&name, &hlo)?;
         self.stats.entries_built += 1;
         self.stats.build_time += exe.compile_time;
         let e = Rc::new(exe);
@@ -127,27 +128,28 @@ impl GemmLibrary {
         Ok(e)
     }
 
-    /// Execute `a · b` through the library. Every dynamic problem dim is
-    /// bucketed (vendor-library style: a fixed kernel set serves any
-    /// shape): padded `m` rows and `n` columns are cropped from the result,
-    /// and a zero-padded contracting `k` is mathematically exact (the extra
-    /// products are zero).
-    pub fn matmul(&mut self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
-        let (actual, batch) = match (a.rank(), b.rank()) {
+    /// The concrete `(m, k, n)` problem plus batch count of `a · b`.
+    fn problem_of(a: &Tensor, b: &Tensor) -> Result<((usize, usize, usize), usize)> {
+        match (a.rank(), b.rank()) {
             (2, 2) => {
                 ensure!(a.dims[1] == b.dims[0], "gemm: contracting mismatch");
-                ((a.dims[0], a.dims[1], b.dims[1]), 0usize)
+                Ok(((a.dims[0], a.dims[1], b.dims[1]), 0usize))
             }
             (3, 3) => {
                 ensure!(a.dims[0] == b.dims[0] && a.dims[2] == b.dims[1], "bgemm mismatch");
-                ((a.dims[1], a.dims[2], b.dims[2]), a.dims[0])
+                Ok(((a.dims[1], a.dims[2], b.dims[2]), a.dims[0]))
             }
             (ra, rb) => anyhow::bail!("library matmul: ranks {ra}x{rb}"),
-        };
-        let (m, k, n) = actual;
-        // Exact pregen entries win over bucketing (hand-tuned set, §4.5).
+        }
+    }
+
+    /// Resolve the library entry key for a problem: exact pre-generated
+    /// entries win over bucketing (the hand-tuned set, §4.5). Launch plans
+    /// record this key so replays skip the derivation entirely.
+    pub fn key_for(&self, a: &Tensor, b: &Tensor) -> Result<GemmKey> {
+        let ((m, k, n), batch) = Self::problem_of(a, b)?;
         let exact_key = GemmKey { batch, m, k, n };
-        let key = if self.pregen.contains_key(&exact_key) {
+        Ok(if self.pregen.contains_key(&exact_key) {
             exact_key
         } else {
             GemmKey {
@@ -156,12 +158,30 @@ impl GemmLibrary {
                 k: self.m_bucket.bucket(k),
                 n: self.m_bucket.bucket(n),
             }
-        };
-        let exe = self.entry_for(key)?;
-        let t_call = std::time::Instant::now();
-        let pool = &mut self.pool;
-        // Pad only when needed; aligned operands are passed by reference
-        // (zero copies before literal marshalling).
+        })
+    }
+
+    /// Execute `a · b` through the library. Every dynamic problem dim is
+    /// bucketed (vendor-library style: a fixed kernel set serves any
+    /// shape): padded `m` rows and `n` columns are cropped from the result,
+    /// and a zero-padded contracting `k` is mathematically exact (the extra
+    /// products are zero).
+    pub fn matmul(&mut self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let key = self.key_for(a, b)?;
+        self.matmul_with_key(a, b, key)
+    }
+
+    /// Pad both operands up to the entry's bucket extents (pool-backed
+    /// scratch; `None` = aligned, passed by reference) and compute the
+    /// bucket-shaped output dims. Shared by the host and device execution
+    /// paths so their marshalling can never diverge.
+    fn pad_for_entry(
+        pool: &mut BufferPool,
+        a: &Tensor,
+        b: &Tensor,
+        key: GemmKey,
+        batch: usize,
+    ) -> Result<(Option<Tensor>, Option<Tensor>, Vec<usize>)> {
         let mut pad2 = |t: &Tensor, d0: usize, d1: usize| -> Result<Option<Tensor>> {
             if t.rank() == 2 {
                 if t.dims == [d0, d1] {
@@ -182,10 +202,12 @@ impl GemmLibrary {
         } else {
             vec![batch, key.m, key.n]
         };
-        let args = [a_pad.as_ref().unwrap_or(a), b_pad.as_ref().unwrap_or(b)];
-        let out = exe.run(&args, &out_dims, DType::F32)?;
-        // Return pad scratch to the pool.
-        for t in [a_pad, b_pad].into_iter().flatten() {
+        Ok((a_pad, b_pad, out_dims))
+    }
+
+    /// Return pooled pad scratch and bump the per-call stats.
+    fn finish_call(&mut self, pads: [Option<Tensor>; 2], batch: usize, flops_mkn: usize) {
+        for t in pads.into_iter().flatten() {
             if let crate::runtime::tensor::Data::F32(v) = t.data {
                 if v.capacity() > 0 {
                     self.pool.free_f32(v);
@@ -193,7 +215,19 @@ impl GemmLibrary {
             }
         }
         self.stats.calls += 1;
-        self.stats.flops += (2 * batch.max(1) * m * k * n) as u64;
+        self.stats.flops += (2 * batch.max(1) * flops_mkn) as u64;
+    }
+
+    /// Execute with a pre-resolved entry key (the launch-plan replay path:
+    /// no shape derivation, no pregen probe, no bucket math).
+    pub fn matmul_with_key(&mut self, a: &Tensor, b: &Tensor, key: GemmKey) -> Result<Tensor> {
+        let ((m, k, n), batch) = Self::problem_of(a, b)?;
+        let exe = self.entry_for(key)?;
+        let t_call = std::time::Instant::now();
+        let (a_pad, b_pad, out_dims) = Self::pad_for_entry(&mut self.pool, a, b, key, batch)?;
+        let args = [a_pad.as_ref().unwrap_or(a), b_pad.as_ref().unwrap_or(b)];
+        let out = exe.run(&args, &out_dims, DType::F32)?;
+        self.finish_call([a_pad, b_pad], batch, m * k * n);
         let result = if (key.m, key.n) == (m, n) {
             Ok(out)
         } else if batch == 0 {
@@ -203,6 +237,34 @@ impl GemmLibrary {
         };
         self.stats.exec_time += t_call.elapsed();
         result
+    }
+
+    /// Execute with a pre-resolved key, leaving the (bucket-shaped) result
+    /// on device. Returns the device tensor plus the *actual* output dims.
+    ///
+    /// The pad region of the result is exact zeros (zero-padded operands:
+    /// every padded row/column of the product is a sum of zero products),
+    /// so downstream consumers may read the buffer directly when their
+    /// bucket shape matches — including other GEMMs contracting over the
+    /// padded axis.
+    pub fn matmul_to_device(
+        &mut self,
+        a: &Tensor,
+        b: &Tensor,
+        key: GemmKey,
+        device: &Device,
+    ) -> Result<(DeviceTensor, Vec<usize>)> {
+        let ((m, k, n), batch) = Self::problem_of(a, b)?;
+        let exe = self.entry_for(key)?;
+        let t_call = std::time::Instant::now();
+        let (a_pad, b_pad, out_dims) = Self::pad_for_entry(&mut self.pool, a, b, key, batch)?;
+        let da = device.h2d(a_pad.as_ref().unwrap_or(a))?;
+        let db = device.h2d(b_pad.as_ref().unwrap_or(b))?;
+        let out = exe.run_on_device(&[&da, &db], &out_dims, DType::F32)?;
+        self.finish_call([a_pad, b_pad], batch, m * k * n);
+        self.stats.exec_time += t_call.elapsed();
+        let actual = if batch == 0 { vec![m, n] } else { vec![batch, m, n] };
+        Ok((out, actual))
     }
 }
 

@@ -99,6 +99,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         m.flops
     );
     println!(
+        "plans: hits={} misses={} guard_misses={}  transfers: h2d={} d2h={}  resident-peak={}",
+        m.plan_hits,
+        m.plan_misses,
+        m.plan_guard_misses,
+        disc::util::fmt_bytes(m.h2d_bytes as usize),
+        disc::util::fmt_bytes(m.d2h_bytes as usize),
+        disc::util::fmt_bytes(m.device_resident_bytes as usize)
+    );
+    println!(
         "T4-model breakdown: comp={:.2}ms mem={:.2}ms cpu={:.2}ms e2e={:.2}ms",
         sim.comp_bound_ms, sim.mem_bound_ms, sim.cpu_ms, sim.e2e_ms
     );
@@ -106,6 +115,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "kernel cache: entries={} hits={} misses={} compile={:.2?}",
             cs.entries, cs.hits, cs.misses, cs.compile_time
+        );
+    }
+    if let Some(ps) = model.plan_stats() {
+        println!(
+            "plan cache: entries={} hits={} misses={} guard_misses={}",
+            ps.entries, ps.hits, ps.misses, ps.guard_misses
         );
     }
     Ok(())

@@ -53,6 +53,10 @@ pub struct FusedLaunch {
 /// and per-group launch info.
 #[derive(Debug, Clone)]
 pub struct Program {
+    /// Process-unique identity, assigned at generation time. Launch-plan
+    /// caches key on `(id, symbol bindings)`; clones share the id (and may
+    /// therefore share plans — the steps are identical).
+    pub id: u64,
     pub module: Module,
     pub steps: Vec<Step>,
     pub fused: Vec<FusedLaunch>,
@@ -163,7 +167,9 @@ pub fn generate(module: Module, plan: &FusionPlan) -> Result<Program> {
         }
     }
 
-    Ok(Program { module, steps: out_steps, fused, host })
+    static PROGRAM_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let id = PROGRAM_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    Ok(Program { id, module, steps: out_steps, fused, host })
 }
 
 #[cfg(test)]

@@ -23,6 +23,43 @@ pub struct BufferPool {
     pub stats: PoolStats,
     /// Maximum blocks parked per bucket (bounds idle memory).
     pub max_per_bucket: usize,
+    /// Device-side arena accounting for the launch-plan pipeline.
+    pub device: DeviceArena,
+}
+
+/// Accounting for device-resident buffers held between kernel launches.
+///
+/// Capacity is *reserved* up front from each installed launch plan's
+/// liveness (the peak over its `Dealloc`-delimited live set — computed at
+/// plan-record time from the compile-time dealloc placement), so a serving
+/// process knows its device footprint before the stream arrives; the
+/// resident counters then track what the replayed flows actually hold.
+#[derive(Debug, Default)]
+pub struct DeviceArena {
+    /// Capacity reserved from installed plans (max over plans).
+    pub reserved_bytes: u64,
+    /// Currently live device-resident bytes.
+    pub resident_bytes: u64,
+    /// Peak residency observed.
+    pub high_water_bytes: u64,
+}
+
+impl DeviceArena {
+    /// Reserve capacity for a newly installed plan.
+    pub fn reserve(&mut self, plan_peak_bytes: u64) {
+        self.reserved_bytes = self.reserved_bytes.max(plan_peak_bytes);
+    }
+
+    /// A device buffer of `bytes` became live.
+    pub fn acquire(&mut self, bytes: u64) {
+        self.resident_bytes += bytes;
+        self.high_water_bytes = self.high_water_bytes.max(self.resident_bytes);
+    }
+
+    /// A device buffer of `bytes` was released.
+    pub fn release(&mut self, bytes: u64) {
+        self.resident_bytes = self.resident_bytes.saturating_sub(bytes);
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -38,7 +75,12 @@ pub struct PoolStats {
 
 impl BufferPool {
     pub fn new() -> Self {
-        BufferPool { free: HashMap::new(), stats: PoolStats::default(), max_per_bucket: 16 }
+        BufferPool {
+            free: HashMap::new(),
+            stats: PoolStats::default(),
+            max_per_bucket: 16,
+            device: DeviceArena::default(),
+        }
     }
 
     fn bucket(n: usize) -> usize {

@@ -6,6 +6,18 @@
 //! where liveness placed them. No graph interpretation happens here; this
 //! is the "generated runtime flow works more efficiently" half of the
 //! paper's Table 2 CPU-time comparison (the other half is `crate::vm`).
+//!
+//! Three execution tiers (see docs/runtime.md):
+//!
+//! 1. **Interpret** — resolve symbolic dims per step, hash cache keys,
+//!    decide pad/crop, marshal host tensors per launch. Always correct;
+//!    used for the first request of a binding vector and as the fallback.
+//! 2. **Record** — tier 1 plus a [`PlanRecorder`]: the resolved flow is
+//!    captured as a [`LaunchPlan`] keyed by the binding vector.
+//! 3. **Replay** — repeat bindings skip resolution, hashing, and
+//!    branching entirely, and chain fused-kernel/GEMM results through
+//!    persistent device buffers: only program outputs and host-op operands
+//!    are copied back to the host.
 
 use crate::codegen::{BucketPolicy, KernelCache};
 use crate::dhlo::Op;
@@ -13,7 +25,10 @@ use crate::library::GemmLibrary;
 use crate::program::{Program, Step};
 use crate::runtime::buffers::BufferPool;
 use crate::runtime::metrics::RunMetrics;
-use crate::runtime::pjrt::Device;
+use crate::runtime::pjrt::{Device, DeviceTensor};
+use crate::runtime::plan::{
+    binding_vector, host_guards_hold, LaunchPlan, PlanKey, PlanRecorder, PlanStats, PlannedStep,
+};
 use crate::runtime::reference::eval_op;
 use crate::runtime::shape_env::SymEnv;
 use crate::runtime::tensor::{strides_of, Data, Tensor};
@@ -28,21 +43,49 @@ pub struct ExecOptions {
     pub policy: BucketPolicy,
     /// Use the pooled (cached) allocator for marshalling buffers.
     pub pooled_buffers: bool,
+    /// Cache resolved launch plans per symbol-binding vector and replay
+    /// them on repeat shapes.
+    pub plan_cache: bool,
+    /// During replays, keep fused-kernel and GEMM results device-resident
+    /// between launches instead of round-tripping through host tensors.
+    pub device_resident: bool,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { policy: BucketPolicy::NextPow2, pooled_buffers: true }
+        ExecOptions {
+            policy: BucketPolicy::NextPow2,
+            pooled_buffers: true,
+            plan_cache: true,
+            device_resident: true,
+        }
     }
 }
 
-/// Stateful executor: owns the kernel cache, library, and buffer pool, so
-/// the caches persist across requests (that is the whole point).
+/// A device-resident intermediate: the bucket-shaped buffer plus the
+/// actual extents a host consumer would crop to.
+struct DevSlot {
+    dt: DeviceTensor,
+    actual: Vec<usize>,
+}
+
+/// Stateful executor: owns the kernel cache, library, buffer pool, and the
+/// launch-plan cache, so all of them persist across requests (that is the
+/// whole point).
 pub struct Executor {
     pub cache: KernelCache,
     pub library: GemmLibrary,
     pub pool: BufferPool,
     pub opts: ExecOptions,
+    pub device: Rc<Device>,
+    plans: HashMap<PlanKey, Rc<LaunchPlan>>,
+    /// Insertion order of `plans`, for FIFO eviction at `max_plans`.
+    plan_order: std::collections::VecDeque<PlanKey>,
+    /// Bound on cached plans: binding vectors are exact (not bucketed), so
+    /// a long-lived server over adversarial shape streams would otherwise
+    /// grow host+device pinning without limit.
+    pub max_plans: usize,
+    pub plan_stats: PlanStats,
 }
 
 pub struct ExecOutput {
@@ -54,9 +97,14 @@ impl Executor {
     pub fn new(device: Rc<Device>, opts: ExecOptions) -> Self {
         Executor {
             cache: KernelCache::new(device.clone(), opts.policy),
-            library: GemmLibrary::new(device),
+            library: GemmLibrary::new(device.clone()),
             pool: BufferPool::new(),
             opts,
+            device,
+            plans: HashMap::new(),
+            plan_order: std::collections::VecDeque::new(),
+            max_plans: 512,
+            plan_stats: PlanStats::default(),
         }
     }
 
@@ -68,6 +116,89 @@ impl Executor {
         let mut env = SymEnv::new();
         env.bind_params(m, inputs)?;
 
+        let lib_before = self.library.stats.clone();
+        let cache_before = (self.cache.stats.misses, self.cache.stats.compile_time);
+        let pool_before = self.pool.stats.clone();
+
+        let mut outputs: Option<Vec<Tensor>> = None;
+        let mut record_key: Option<PlanKey> = None;
+        if self.opts.plan_cache {
+            let key = PlanKey { program: prog.id, bindings: binding_vector(&env) };
+            match self.plans.get(&key).cloned() {
+                Some(plan) => {
+                    if plan.param_guards_hold(inputs) {
+                        if let Some(outs) =
+                            self.replay(prog, inputs, &plan, &mut env, &mut metrics)?
+                        {
+                            self.plan_stats.hits += 1;
+                            metrics.plan_hits += 1;
+                            outputs = Some(outs);
+                        }
+                    }
+                    if outputs.is_none() {
+                        // Stale host-shape assumption: this request is
+                        // interpreted; the cached plan stays (the common
+                        // shape keeps replaying).
+                        self.plan_stats.guard_misses += 1;
+                        metrics.plan_guard_misses += 1;
+                    }
+                }
+                None => record_key = Some(key),
+            }
+        }
+
+        let outputs = match outputs {
+            Some(o) => o,
+            None => {
+                let mut rec = record_key.as_ref().map(|_| PlanRecorder::new());
+                if rec.is_some() {
+                    self.plan_stats.misses += 1;
+                    metrics.plan_misses += 1;
+                    env.elem_log = Some(Vec::new());
+                }
+                let outs = self.interpret(prog, inputs, &mut env, &mut metrics, rec.as_mut())?;
+                if let (Some(key), Some(rec)) = (record_key, rec) {
+                    let log = env.elem_log.take().unwrap_or_default();
+                    if let Some(plan) = rec.finish(m, prog, &log) {
+                        self.pool.device.reserve(plan.device_peak_bytes);
+                        while self.plans.len() >= self.max_plans.max(1) {
+                            match self.plan_order.pop_front() {
+                                Some(old) => {
+                                    self.plans.remove(&old);
+                                }
+                                None => break,
+                            }
+                        }
+                        self.plans.insert(key.clone(), Rc::new(plan));
+                        self.plan_order.push_back(key);
+                        self.plan_stats.entries = self.plans.len();
+                    }
+                }
+                outs
+            }
+        };
+
+        // Fold in component-level stats for this run.
+        metrics.flops = self.library.stats.flops - lib_before.flops;
+        metrics.compile_events = self.cache.stats.misses - cache_before.0;
+        metrics.compile_time += self.cache.stats.compile_time - cache_before.1;
+        metrics.allocs = self.pool.stats.allocs - pool_before.allocs;
+        metrics.pool_hits = self.pool.stats.pool_hits - pool_before.pool_hits;
+        metrics.total_time = t_start.elapsed();
+        Ok(ExecOutput { outputs, metrics })
+    }
+
+    /// Tier 1/2: interpret the whole step sequence (optionally recording a
+    /// launch plan).
+    fn interpret(
+        &mut self,
+        prog: &Program,
+        inputs: &[Tensor],
+        env: &mut SymEnv,
+        metrics: &mut RunMetrics,
+        rec: Option<&mut PlanRecorder>,
+    ) -> Result<Vec<Tensor>> {
+        let m = &prog.module;
         let mut vals: Vec<Option<Rc<Tensor>>> = vec![None; m.instrs.len()];
         // Materialize params and constants.
         for (id, ins) in m.instrs.iter().enumerate() {
@@ -79,12 +210,31 @@ impl Executor {
                 _ => {}
             }
         }
+        self.interpret_range(prog, 0, env, &mut vals, metrics, rec)?;
+        m.outputs
+            .iter()
+            .map(|&o| {
+                vals[o]
+                    .as_deref()
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("output %{o} was deallocated"))
+            })
+            .collect()
+    }
 
-        let lib_before = self.library.stats.clone();
-        let cache_before = (self.cache.stats.misses, self.cache.stats.compile_time);
-        let pool_before = self.pool.stats.clone();
-
-        for step in &prog.steps {
+    /// Interpret steps `from..` against an already-seeded value store. Also
+    /// the replay fallback for data-dependent suffixes.
+    fn interpret_range(
+        &mut self,
+        prog: &Program,
+        from: usize,
+        env: &mut SymEnv,
+        vals: &mut [Option<Rc<Tensor>>],
+        metrics: &mut RunMetrics,
+        mut rec: Option<&mut PlanRecorder>,
+    ) -> Result<()> {
+        let m = &prog.module;
+        for (si, step) in prog.steps.iter().enumerate().skip(from) {
             match step {
                 Step::EvalHost { value } => {
                     let ins = &m.instrs[*value];
@@ -94,6 +244,9 @@ impl Executor {
                     let t = eval_op(&ins.op, &operands, &out_dims, ins.ty.dtype)
                         .with_context(|| format!("host op %{value}"))?;
                     metrics.host_ops += 1;
+                    if let Some(r) = rec.as_deref_mut() {
+                        r.push(PlannedStep::EvalHost { value: *value, out_dims });
+                    }
                     vals[*value] = Some(Rc::new(t));
                 }
                 Step::Bitcast { value } => {
@@ -101,6 +254,9 @@ impl Executor {
                     let out_dims = env.resolve_dims(m, &ins.ty.dims, &vals[..])?;
                     let src = vals[ins.operands[0]].as_deref().unwrap().clone();
                     metrics.bitcasts += 1;
+                    if let Some(r) = rec.as_deref_mut() {
+                        r.push(PlannedStep::Bitcast { value: *value, out_dims: out_dims.clone() });
+                    }
                     vals[*value] = Some(Rc::new(src.with_dims(&out_dims)?));
                 }
                 Step::LaunchOp { value } => {
@@ -108,6 +264,15 @@ impl Executor {
                     // Data-dependent outputs (Unique) resolve their own
                     // extent; everything else resolves from the shape env.
                     let out_dims = if matches!(ins.op, Op::Unique) {
+                        // No plan can predict this extent: the flow from
+                        // here on stays interpreted. Freeze the shape-read
+                        // log too — suffix reads must not become guards.
+                        if let Some(r) = rec.as_deref_mut() {
+                            r.mark_suffix(si);
+                            if let Some(log) = env.elem_log.take() {
+                                r.stash_elem_log(log);
+                            }
+                        }
                         vec![]
                     } else {
                         env.resolve_dims(m, &ins.ty.dims, &vals[..])?
@@ -125,6 +290,8 @@ impl Executor {
                     metrics.mem_bytes += t.byte_size() as u64;
                     if matches!(ins.op, Op::Unique) {
                         env.set_datadep(m, *value, t.dims[0] as i64);
+                    } else if let Some(r) = rec.as_deref_mut() {
+                        r.push(PlannedStep::LaunchOp { value: *value, out_dims });
                     }
                     vals[*value] = Some(Rc::new(t));
                 }
@@ -133,15 +300,28 @@ impl Executor {
                     let a = vals[ins.operands[0]].as_deref().unwrap();
                     let b = vals[ins.operands[1]].as_deref().unwrap();
                     metrics.lib_bytes += (a.byte_size() + b.byte_size()) as u64;
+                    metrics.h2d_bytes += (a.byte_size() + b.byte_size()) as u64;
                     let build0 = self.library.stats.build_time;
                     let exec0 = self.library.stats.exec_time;
-                    let t = self.library.matmul(a, b)?;
+                    let key = self.library.key_for(a, b)?;
+                    let t = self.library.matmul_with_key(a, b, key)?;
                     metrics.lib_time += self.library.stats.exec_time - exec0;
                     // On-demand library builds are one-time compile cost
                     // (vendor libraries ship pre-built).
                     metrics.compile_time += self.library.stats.build_time - build0;
                     metrics.lib_calls += 1;
                     metrics.lib_bytes += t.byte_size() as u64;
+                    metrics.d2h_bytes += t.byte_size() as u64;
+                    if let Some(r) = rec.as_deref_mut() {
+                        if self.opts.device_resident {
+                            // Residency modeling only applies when replays
+                            // actually hold device buffers.
+                            let out_bytes =
+                                (key.batch.max(1) * key.m * key.n * 4) as u64;
+                            r.note_device_out(*value, out_bytes);
+                        }
+                        r.push(PlannedStep::LibraryCall { value: *value, key });
+                    }
                     vals[*value] = Some(Rc::new(t));
                 }
                 Step::LaunchFused { idx } => {
@@ -187,8 +367,11 @@ impl Executor {
                             owned.push(padded);
                         }
                     }
+                    let mut extent_vals: Vec<i32> =
+                        Vec::with_capacity(spec.extent_locals.len());
                     for &li in &spec.extent_locals {
                         let v = actual[&fl.syms[li]];
+                        extent_vals.push(v as i32);
                         arg_ix.push(owned.len() as isize);
                         owned.push(Tensor::i32(&[], vec![v as i32]));
                     }
@@ -202,6 +385,9 @@ impl Executor {
                             }
                         })
                         .collect();
+                    for a in &args {
+                        metrics.h2d_bytes += a.byte_size() as u64;
+                    }
                     // 4. Launch.
                     let tk = Instant::now();
                     let out =
@@ -223,6 +409,7 @@ impl Executor {
                     }
                     // The kernel writes the bucket-shaped output.
                     metrics.mem_bytes += out.byte_size() as u64;
+                    metrics.d2h_bytes += out.byte_size() as u64;
                     // 5. Crop to actual extents.
                     let actual_out =
                         env.resolve_dims(m, &m.ty(fl.root).dims, &vals[..])?;
@@ -232,34 +419,403 @@ impl Executor {
                         metrics.pad_copies += 1;
                         crop_box(&out, &actual_out)?
                     };
+                    if let Some(r) = rec.as_deref_mut() {
+                        if r.active() {
+                            let extents_host: Vec<Tensor> = extent_vals
+                                .iter()
+                                .map(|&v| Tensor::i32(&[], vec![v]))
+                                .collect();
+                            let extents_dev = if self.opts.device_resident {
+                                extents_host
+                                    .iter()
+                                    .map(|t| self.device.h2d(t).map(Rc::new))
+                                    .collect::<Result<Vec<_>>>()?
+                            } else {
+                                Vec::new()
+                            };
+                            if self.opts.device_resident {
+                                let out_bytes = (spec.out_dims.iter().product::<usize>()
+                                    * spec.out_dtype.byte_size())
+                                    as u64;
+                                r.note_device_out(fl.root, out_bytes);
+                            }
+                            r.push(PlannedStep::LaunchFused {
+                                idx: *idx,
+                                kernel: kernel.clone(),
+                                extents_host,
+                                extents_dev,
+                                out_actual: out.dims.clone(),
+                            });
+                        }
+                    }
                     vals[fl.root] = Some(Rc::new(out));
                 }
                 Step::Dealloc { value } => {
                     // Liveness-placed release; Rc drop returns memory.
+                    if let Some(r) = rec.as_deref_mut() {
+                        r.note_dealloc(*value);
+                        r.push(PlannedStep::Dealloc { value: *value });
+                    }
                     vals[*value] = None;
                 }
             }
         }
+        Ok(())
+    }
 
-        let outputs: Vec<Tensor> = m
-            .outputs
-            .iter()
-            .map(|&o| {
-                vals[o]
-                    .as_deref()
-                    .cloned()
-                    .ok_or_else(|| anyhow::anyhow!("output %{o} was deallocated"))
-            })
-            .collect::<Result<_>>()?;
+    /// Materialize a host view of a value: either the host slot, or a
+    /// readback (+ crop to actual extents) of the device-resident buffer,
+    /// memoized into the host slot.
+    fn host_value(
+        device: &Device,
+        metrics: &mut RunMetrics,
+        host: &mut [Option<Rc<Tensor>>],
+        dev: &[Option<DevSlot>],
+        v: usize,
+    ) -> Result<Rc<Tensor>> {
+        if let Some(t) = &host[v] {
+            return Ok(t.clone());
+        }
+        let d = dev[v]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("value %{v} has no live buffer"))?;
+        let full = device.d2h(&d.dt)?;
+        metrics.d2h_bytes += full.byte_size() as u64;
+        let t = if full.dims == d.actual {
+            full
+        } else {
+            metrics.pad_copies += 1;
+            crop_box(&full, &d.actual)?
+        };
+        let rc = Rc::new(t);
+        host[v] = Some(rc.clone());
+        Ok(rc)
+    }
 
-        // Fold in component-level stats for this run.
-        metrics.flops = self.library.stats.flops - lib_before.flops;
-        metrics.compile_events = self.cache.stats.misses - cache_before.0;
-        metrics.compile_time = self.cache.stats.compile_time - cache_before.1;
-        metrics.allocs = self.pool.stats.allocs - pool_before.allocs;
-        metrics.pool_hits = self.pool.stats.pool_hits - pool_before.pool_hits;
-        metrics.total_time = t_start.elapsed();
-        Ok(ExecOutput { outputs, metrics })
+    /// Tier 3: replay a recorded plan. Returns `Ok(None)` when a host-shape
+    /// guard fails (caller falls back to interpretation).
+    fn replay(
+        &mut self,
+        prog: &Program,
+        inputs: &[Tensor],
+        plan: &LaunchPlan,
+        env: &mut SymEnv,
+        out_metrics: &mut RunMetrics,
+    ) -> Result<Option<Vec<Tensor>>> {
+        // Work against scratch metrics: a guard miss mid-replay discards
+        // the partial prefix's counters (the request is then fully
+        // re-interpreted), so nothing is double-counted.
+        let mut scratch = RunMetrics::default();
+        let metrics = &mut scratch;
+        let m = &prog.module;
+        let device = self.device.clone();
+        let n = m.instrs.len();
+        let mut host: Vec<Option<Rc<Tensor>>> = vec![None; n];
+        let mut dev: Vec<Option<DevSlot>> = vec![None; n];
+        for (id, ins) in m.instrs.iter().enumerate() {
+            match &ins.op {
+                Op::Param { index } => host[id] = Some(Rc::new(inputs[*index].clone())),
+                Op::Const { lit, dims } => {
+                    host[id] = Some(Rc::new(Tensor::from_literal(lit, dims)))
+                }
+                _ => {}
+            }
+        }
+        let mut resident: u64 = 0;
+        let mut resident_peak: u64 = 0;
+
+        for step in &plan.steps {
+            match step {
+                PlannedStep::EvalHost { value, out_dims } => {
+                    let ins = &m.instrs[*value];
+                    let operands: Vec<&Tensor> =
+                        ins.operands.iter().map(|&o| host[o].as_deref().unwrap()).collect();
+                    let t = eval_op(&ins.op, &operands, out_dims, ins.ty.dtype)
+                        .with_context(|| format!("host op %{value} (replay)"))?;
+                    metrics.host_ops += 1;
+                    drop(operands);
+                    let t = Rc::new(t);
+                    if let Some(gs) = plan.host_guards.get(value) {
+                        if !host_guards_hold(gs, &t) {
+                            // Stale host-shape assumption: undo the arena
+                            // accounting for the executed prefix; scratch
+                            // metrics are discarded with this return.
+                            for d in dev.iter_mut() {
+                                if let Some(s) = d.take() {
+                                    self.pool.device.release(s.dt.byte_size() as u64);
+                                }
+                            }
+                            return Ok(None);
+                        }
+                    }
+                    host[*value] = Some(t);
+                }
+                PlannedStep::Bitcast { value, out_dims } => {
+                    let src = Self::host_value(
+                        &device,
+                        metrics,
+                        &mut host,
+                        &dev,
+                        m.instrs[*value].operands[0],
+                    )?;
+                    metrics.bitcasts += 1;
+                    host[*value] = Some(Rc::new((*src).clone().with_dims(out_dims)?));
+                }
+                PlannedStep::LaunchOp { value, out_dims } => {
+                    let ins = &m.instrs[*value];
+                    let mut ops: Vec<Rc<Tensor>> = Vec::with_capacity(ins.operands.len());
+                    for &o in &ins.operands {
+                        ops.push(Self::host_value(&device, metrics, &mut host, &dev, o)?);
+                    }
+                    let operands: Vec<&Tensor> = ops.iter().map(|t| t.as_ref()).collect();
+                    for o in &operands {
+                        metrics.mem_bytes += o.byte_size() as u64;
+                    }
+                    let tk = Instant::now();
+                    let t = eval_op(&ins.op, &operands, out_dims, ins.ty.dtype)
+                        .with_context(|| format!("singleton kernel %{value} (replay)"))?;
+                    metrics.kernel_time += tk.elapsed();
+                    metrics.mem_kernels += 1;
+                    metrics.mem_bytes += t.byte_size() as u64;
+                    host[*value] = Some(Rc::new(t));
+                }
+                PlannedStep::LibraryCall { value, key } => {
+                    let ins = &m.instrs[*value];
+                    let a = Self::host_value(&device, metrics, &mut host, &dev, ins.operands[0])?;
+                    let b = Self::host_value(&device, metrics, &mut host, &dev, ins.operands[1])?;
+                    metrics.lib_bytes += (a.byte_size() + b.byte_size()) as u64;
+                    metrics.h2d_bytes += (a.byte_size() + b.byte_size()) as u64;
+                    let build0 = self.library.stats.build_time;
+                    let exec0 = self.library.stats.exec_time;
+                    if self.opts.device_resident {
+                        let (dt, actual) =
+                            self.library.matmul_to_device(&a, &b, *key, &device)?;
+                        metrics.lib_bytes +=
+                            (actual.iter().product::<usize>() * 4) as u64;
+                        let bytes = dt.byte_size() as u64;
+                        resident += bytes;
+                        resident_peak = resident_peak.max(resident);
+                        self.pool.device.acquire(bytes);
+                        dev[*value] = Some(DevSlot { dt, actual });
+                    } else {
+                        let t = self.library.matmul_with_key(&a, &b, *key)?;
+                        metrics.lib_bytes += t.byte_size() as u64;
+                        metrics.d2h_bytes += t.byte_size() as u64;
+                        host[*value] = Some(Rc::new(t));
+                    }
+                    metrics.lib_time += self.library.stats.exec_time - exec0;
+                    metrics.compile_time += self.library.stats.build_time - build0;
+                    metrics.lib_calls += 1;
+                }
+                PlannedStep::LaunchFused {
+                    idx,
+                    kernel,
+                    extents_host,
+                    extents_dev,
+                    out_actual,
+                } => {
+                    let fl = &prog.fused[*idx];
+                    let spec = &kernel.spec;
+                    // The recorded kernel replaces signature hashing and
+                    // the bucket-cache lookup; account it as a hit so the
+                    // cache's reuse stats stay meaningful.
+                    self.cache.stats.hits += 1;
+                    if self.opts.device_resident {
+                        enum Src {
+                            Owned(usize),
+                            Slot(usize),
+                            Ext(usize),
+                        }
+                        let mut owned: Vec<DeviceTensor> = Vec::new();
+                        let mut srcs: Vec<Src> =
+                            Vec::with_capacity(fl.inputs.len() + extents_dev.len());
+                        for (i, &v) in fl.inputs.iter().enumerate() {
+                            let expected = &spec.input_dims[i];
+                            if let Some(d) = dev[v].as_ref() {
+                                if &d.dt.dims == expected {
+                                    // Device-resident chaining: the
+                                    // producer's bucket-shaped buffer is
+                                    // consumed in place. Valid output
+                                    // lanes of every fusable op depend
+                                    // only on valid input lanes (dynamic
+                                    // reduce axes are masked in-kernel),
+                                    // so pad-lane garbage never reaches
+                                    // the cropped result.
+                                    metrics.mem_bytes += d.dt.byte_size() as u64;
+                                    srcs.push(Src::Slot(v));
+                                    continue;
+                                }
+                            }
+                            let t =
+                                Self::host_value(&device, metrics, &mut host, &dev, v)?;
+                            let up = if t.dims == *expected {
+                                device.h2d(&t)?
+                            } else {
+                                metrics.pad_copies += 1;
+                                let padded = pad_box(
+                                    &t,
+                                    expected,
+                                    if self.opts.pooled_buffers {
+                                        Some(&mut self.pool)
+                                    } else {
+                                        None
+                                    },
+                                )?;
+                                let dt = device.h2d(&padded)?;
+                                if self.opts.pooled_buffers {
+                                    if let Data::F32(v) = padded.data {
+                                        if v.capacity() > 0 {
+                                            self.pool.free_f32(v);
+                                        }
+                                    }
+                                }
+                                dt
+                            };
+                            metrics.mem_bytes += up.byte_size() as u64;
+                            metrics.h2d_bytes += up.byte_size() as u64;
+                            srcs.push(Src::Owned(owned.len()));
+                            owned.push(up);
+                        }
+                        for i in 0..extents_dev.len() {
+                            srcs.push(Src::Ext(i));
+                        }
+                        let args: Vec<&DeviceTensor> = srcs
+                            .iter()
+                            .map(|s| match s {
+                                Src::Owned(i) => &owned[*i],
+                                Src::Slot(v) => &dev[*v].as_ref().unwrap().dt,
+                                Src::Ext(i) => extents_dev[*i].as_ref(),
+                            })
+                            .collect();
+                        let tk = Instant::now();
+                        let out = kernel
+                            .exe
+                            .run_on_device(&args, &spec.out_dims, spec.out_dtype)
+                            .with_context(|| {
+                                format!("replaying fused kernel {}", spec.name)
+                            })?;
+                        metrics.kernel_time += tk.elapsed();
+                        metrics.mem_kernels += 1;
+                        metrics.mem_bytes += out.byte_size() as u64;
+                        drop(args);
+                        let bytes = out.byte_size() as u64;
+                        resident += bytes;
+                        resident_peak = resident_peak.max(resident);
+                        self.pool.device.acquire(bytes);
+                        dev[fl.root] = Some(DevSlot { dt: out, actual: out_actual.clone() });
+                    } else {
+                        // Host-path replay: recorded marshalling decisions,
+                        // no resolution or cache hashing.
+                        let mut owned: Vec<Tensor> = Vec::new();
+                        let mut arg_ix: Vec<isize> =
+                            Vec::with_capacity(fl.inputs.len() + extents_host.len());
+                        for (i, &v) in fl.inputs.iter().enumerate() {
+                            let src = host[v].as_deref().unwrap();
+                            if src.dims == spec.input_dims[i] {
+                                arg_ix.push(-(v as isize) - 1);
+                                metrics.mem_bytes += src.byte_size() as u64;
+                            } else {
+                                metrics.pad_copies += 1;
+                                let padded = pad_box(
+                                    src,
+                                    &spec.input_dims[i],
+                                    if self.opts.pooled_buffers {
+                                        Some(&mut self.pool)
+                                    } else {
+                                        None
+                                    },
+                                )?;
+                                metrics.mem_bytes += padded.byte_size() as u64;
+                                arg_ix.push(owned.len() as isize);
+                                owned.push(padded);
+                            }
+                        }
+                        let args: Vec<&Tensor> = arg_ix
+                            .iter()
+                            .map(|&ix| {
+                                if ix >= 0 {
+                                    &owned[ix as usize]
+                                } else {
+                                    host[(-ix - 1) as usize].as_deref().unwrap()
+                                }
+                            })
+                            .chain(extents_host.iter())
+                            .collect();
+                        for a in &args {
+                            metrics.h2d_bytes += a.byte_size() as u64;
+                        }
+                        let tk = Instant::now();
+                        let out = kernel
+                            .exe
+                            .run(&args, &spec.out_dims, spec.out_dtype)
+                            .with_context(|| {
+                                format!("replaying fused kernel {}", spec.name)
+                            })?;
+                        metrics.kernel_time += tk.elapsed();
+                        metrics.mem_kernels += 1;
+                        drop(args);
+                        if self.opts.pooled_buffers {
+                            for a in owned {
+                                if let Data::F32(v) = a.data {
+                                    if v.capacity() > 0 {
+                                        self.pool.free_f32(v);
+                                    }
+                                }
+                            }
+                        }
+                        metrics.mem_bytes += out.byte_size() as u64;
+                        metrics.d2h_bytes += out.byte_size() as u64;
+                        let out = if &out.dims == out_actual {
+                            out
+                        } else {
+                            metrics.pad_copies += 1;
+                            crop_box(&out, out_actual)?
+                        };
+                        host[fl.root] = Some(Rc::new(out));
+                    }
+                }
+                PlannedStep::Dealloc { value } => {
+                    if let Some(d) = dev[*value].take() {
+                        let bytes = d.dt.byte_size() as u64;
+                        resident = resident.saturating_sub(bytes);
+                        self.pool.device.release(bytes);
+                    }
+                    host[*value] = None;
+                }
+            }
+        }
+
+        // Data-dependent suffix: hand the live values to the interpreter.
+        if plan.suffix_start < prog.steps.len() {
+            for v in 0..n {
+                if dev[v].is_some() && host[v].is_none() {
+                    Self::host_value(&device, metrics, &mut host, &dev, v)?;
+                }
+            }
+            for d in dev.iter_mut() {
+                if let Some(s) = d.take() {
+                    let bytes = s.dt.byte_size() as u64;
+                    resident = resident.saturating_sub(bytes);
+                    self.pool.device.release(bytes);
+                }
+            }
+            self.interpret_range(prog, plan.suffix_start, env, &mut host, metrics, None)?;
+        }
+
+        let mut outputs = Vec::with_capacity(m.outputs.len());
+        for &o in &m.outputs {
+            let t = Self::host_value(&device, metrics, &mut host, &dev, o)
+                .with_context(|| format!("output %{o} was deallocated"))?;
+            outputs.push((*t).clone());
+        }
+        for d in dev.iter_mut() {
+            if let Some(s) = d.take() {
+                self.pool.device.release(s.dt.byte_size() as u64);
+            }
+        }
+        metrics.device_resident_bytes = resident_peak;
+        *out_metrics += &scratch;
+        Ok(Some(outputs))
     }
 }
 
@@ -380,6 +936,25 @@ mod tests {
         Executor::new(dev, ExecOptions::default())
     }
 
+    fn executor_no_plans() -> Executor {
+        let dev = Rc::new(Device::cpu().unwrap());
+        Executor::new(
+            dev,
+            ExecOptions { plan_cache: false, device_resident: false, ..Default::default() },
+        )
+    }
+
+    fn softmax_prog() -> Program {
+        let mut b = Builder::new("softmax");
+        let s = b.dyn_dim("rows", 0, 0);
+        let c = b.dyn_dim("cols", 0, 1);
+        let x = b.param(DType::F32, vec![s, c]);
+        let y = b.softmax_last(x).unwrap();
+        let m = b.finish(vec![y]);
+        let p = plan(&m, &FusionOptions::default());
+        generate(m, &p).unwrap()
+    }
+
     #[test]
     fn pad_and_crop_roundtrip() {
         let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
@@ -394,15 +969,7 @@ mod tests {
 
     #[test]
     fn executes_softmax_against_reference_over_shape_stream() {
-        let mut b = Builder::new("softmax");
-        let s = b.dyn_dim("rows", 0, 0);
-        let c = b.dyn_dim("cols", 0, 1);
-        let x = b.param(DType::F32, vec![s, c]);
-        let y = b.softmax_last(x).unwrap();
-        let m = b.finish(vec![y]);
-        let p = plan(&m, &FusionOptions::default());
-        let prog = generate(m, &p).unwrap();
-
+        let prog = softmax_prog();
         let mut exec = executor();
         let mut rng = Prng::new(42);
         for (rows, cols) in [(2usize, 3usize), (5, 7), (1, 16), (3, 3), (4, 9)] {
@@ -416,14 +983,80 @@ mod tests {
             );
         }
         // Re-running the same shape stream triggers zero new compiles:
-        // every (pattern, bucket) is already cached.
+        // every (pattern, bucket) is already cached — and with the plan
+        // cache warm, every request replays its recorded flow.
         let misses_after_first_pass = exec.cache.stats.misses;
         for (rows, cols) in [(2usize, 3usize), (5, 7), (1, 16), (3, 3), (4, 9)] {
             let input = Tensor::f32(&[rows, cols], rng.fill_f32(rows * cols, 2.0));
-            exec.run(&prog, &[input]).unwrap();
+            let out = exec.run(&prog, &[input]).unwrap();
+            assert_eq!(out.metrics.plan_hits, 1, "warm binding must replay");
         }
         assert_eq!(exec.cache.stats.misses, misses_after_first_pass);
         assert!(exec.cache.stats.hits > 0, "bucket reuse must kick in");
+        assert_eq!(exec.plan_stats.misses, 5);
+        assert_eq!(exec.plan_stats.hits, 5);
+        assert_eq!(exec.plan_stats.entries, 5, "one plan per distinct binding vector");
+    }
+
+    #[test]
+    fn plan_replay_bit_matches_interpreter() {
+        // The replayed (device-resident) flow must produce bit-identical
+        // outputs to the uncached interpreter path.
+        let prog = softmax_prog();
+        let mut cached = executor();
+        let mut plain = executor_no_plans();
+        let mut rng = Prng::new(9);
+        for (rows, cols) in [(3usize, 5usize), (3, 5), (3, 5), (6, 2), (3, 5)] {
+            let input = Tensor::f32(&[rows, cols], rng.fill_f32(rows * cols, 1.5));
+            let a = cached.run(&prog, &[input.clone()]).unwrap();
+            let b = plain.run(&prog, &[input]).unwrap();
+            assert_eq!(a.outputs, b.outputs, "replay diverged at {rows}x{cols}");
+        }
+        assert!(cached.plan_stats.hits >= 3);
+        assert_eq!(plain.plan_stats.hits, 0);
+    }
+
+    #[test]
+    fn replay_cuts_host_device_traffic() {
+        // Device-resident chaining: the replayed softmax pipeline moves
+        // strictly fewer host<->device bytes than the interpreted one.
+        let prog = softmax_prog();
+        let mut exec = executor();
+        let input = Tensor::f32(&[4, 8], vec![0.25; 32]);
+        let first = exec.run(&prog, &[input.clone()]).unwrap();
+        let second = exec.run(&prog, &[input]).unwrap();
+        assert_eq!(second.metrics.plan_hits, 1);
+        assert!(
+            second.metrics.h2d_bytes < first.metrics.h2d_bytes,
+            "replay h2d {} must be below interpret h2d {}",
+            second.metrics.h2d_bytes,
+            first.metrics.h2d_bytes
+        );
+        assert!(
+            second.metrics.d2h_bytes < first.metrics.d2h_bytes,
+            "replay d2h {} must be below interpret d2h {}",
+            second.metrics.d2h_bytes,
+            first.metrics.d2h_bytes
+        );
+        assert!(second.metrics.device_resident_bytes > 0);
+    }
+
+    #[test]
+    fn distinct_bindings_get_distinct_plans() {
+        let prog = softmax_prog();
+        let mut exec = executor();
+        let a = Tensor::f32(&[2, 3], vec![0.1; 6]);
+        let b = Tensor::f32(&[5, 7], vec![0.1; 35]);
+        exec.run(&prog, &[a.clone()]).unwrap();
+        exec.run(&prog, &[b.clone()]).unwrap();
+        assert_eq!(exec.plan_stats.entries, 2, "two binding vectors, two plans");
+        // Each replays independently.
+        let ra = exec.run(&prog, &[a]).unwrap();
+        let rb = exec.run(&prog, &[b]).unwrap();
+        assert_eq!(ra.metrics.plan_hits, 1);
+        assert_eq!(rb.metrics.plan_hits, 1);
+        assert_eq!(ra.outputs[0].dims, vec![2, 3]);
+        assert_eq!(rb.outputs[0].dims, vec![5, 7]);
     }
 
     #[test]
@@ -456,6 +1089,37 @@ mod tests {
     }
 
     #[test]
+    fn mlp_replay_with_gemm_bit_matches() {
+        // GEMM -> fused-kernel chaining through device-resident buffers
+        // (zero-padded GEMM output consumed in place when buckets align).
+        let mut b = Builder::new("mlp");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let w = b.param(DType::F32, vec![Dim::Fixed(8), Dim::Fixed(4)]);
+        let bias = b.param(DType::F32, vec![Dim::Fixed(4)]);
+        let h = b.dot(x, w).unwrap();
+        let bb = b.broadcast_row_like(bias, h).unwrap();
+        let a = b.add(h, bb).unwrap();
+        let r = b.unary(UnKind::Gelu, a);
+        let m = b.finish(vec![r]);
+        let p = plan(&m, &FusionOptions::default());
+        let prog = generate(m, &p).unwrap();
+
+        let mut cached = executor();
+        let mut plain = executor_no_plans();
+        let mut rng = Prng::new(3);
+        let w = Tensor::f32(&[8, 4], rng.fill_f32(32, 0.5));
+        let bias = Tensor::f32(&[4], rng.fill_f32(4, 0.5));
+        for n in [5usize, 5, 5, 9, 5] {
+            let x = Tensor::f32(&[n, 8], rng.fill_f32(n * 8, 1.0));
+            let a = cached.run(&prog, &[x.clone(), w.clone(), bias.clone()]).unwrap();
+            let b2 = plain.run(&prog, &[x, w.clone(), bias.clone()]).unwrap();
+            assert_eq!(a.outputs, b2.outputs, "GEMM replay diverged at n={n}");
+        }
+        assert!(cached.plan_stats.hits >= 3);
+    }
+
+    #[test]
     fn dynamic_slice_and_unique_pipeline() {
         // Sparse-workload shape: unique produces a data-dependent length
         // consumed by a gather.
@@ -481,6 +1145,79 @@ mod tests {
         let want = eval_module(&prog.module, &[ids_t, table_t]).unwrap();
         assert!(got.outputs[0].allclose(&want.outputs[0], 1e-5, 1e-5).unwrap());
         assert_eq!(got.outputs[0].dims, vec![4, 4], "4 unique ids");
+    }
+
+    #[test]
+    fn unique_suffix_never_served_stale() {
+        // Two requests with identical shapes but different id *contents*:
+        // the data-dependent suffix must be re-interpreted per request, so
+        // the second run cannot inherit the first run's unique count.
+        let mut b = Builder::new("sparse");
+        let n = b.dyn_dim("n", 0, 0);
+        let ids = b.param(DType::I64, vec![n]);
+        let table = b.param(DType::F32, vec![Dim::Fixed(16), Dim::Fixed(4)]);
+        let u = b.unique(ids).unwrap();
+        let g = b.gather(table, u, 0).unwrap();
+        let t = b.unary(UnKind::Tanh, g);
+        let m = b.finish(vec![t]);
+        let p = plan(&m, &FusionOptions::default());
+        let prog = generate(m, &p).unwrap();
+
+        let mut exec = executor();
+        let table_t = Tensor::f32(&[16, 4], (0..64).map(|i| i as f32 * 0.01).collect());
+        // 4 unique ids.
+        let first = Tensor::i64(&[7], vec![3, 1, 3, 2, 1, 3, 9]);
+        // Same shape, 2 unique ids.
+        let second = Tensor::i64(&[7], vec![5, 5, 5, 5, 5, 8, 8]);
+        let got1 = exec.run(&prog, &[first.clone(), table_t.clone()]).unwrap();
+        let got2 = exec.run(&prog, &[second.clone(), table_t.clone()]).unwrap();
+        assert_eq!(got1.outputs[0].dims, vec![4, 4]);
+        assert_eq!(got2.outputs[0].dims, vec![2, 4], "stale plan suffix served");
+        let want2 = eval_module(&prog.module, &[second, table_t]).unwrap();
+        assert!(got2.outputs[0].allclose(&want2.outputs[0], 1e-6, 1e-6).unwrap());
+    }
+
+    #[test]
+    fn host_shape_guard_falls_back_to_interpreter() {
+        // DSlice bounds arriving as *parameter contents*: two requests with
+        // identical shapes but different bounds must not share a plan.
+        let mut b = Builder::new("guard");
+        let n = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![n]);
+        let st = b.param(DType::I64, vec![Dim::Fixed(1)]);
+        let li = b.param(DType::I64, vec![Dim::Fixed(1)]);
+        let sr = b.param(DType::I64, vec![Dim::Fixed(1)]);
+        let sl = b.dslice(x, st, li, sr).unwrap();
+        let t = b.unary(UnKind::Tanh, sl);
+        let m = b.finish(vec![t]);
+        let p = plan(&m, &FusionOptions::default());
+        let prog = generate(m, &p).unwrap();
+
+        let mut exec = executor();
+        let x = Tensor::f32(&[8], (0..8).map(|i| i as f32).collect());
+        let run = |exec: &mut Executor, lo: i64, hi: i64| {
+            exec.run(
+                &prog,
+                &[
+                    x.clone(),
+                    Tensor::i64(&[1], vec![lo]),
+                    Tensor::i64(&[1], vec![hi]),
+                    Tensor::i64(&[1], vec![1]),
+                ],
+            )
+            .unwrap()
+        };
+        let a = run(&mut exec, 0, 4);
+        assert_eq!(a.outputs[0].dims, vec![4]);
+        // Same binding vector, different slice bounds: the parameter guard
+        // must reject the cached plan and interpret.
+        let b2 = run(&mut exec, 2, 8);
+        assert_eq!(b2.outputs[0].dims, vec![6], "guard failed to catch stale bounds");
+        assert!(exec.plan_stats.guard_misses >= 1);
+        // And the matching request replays fine.
+        let c = run(&mut exec, 0, 4);
+        assert_eq!(c.outputs[0].dims, vec![4]);
+        assert_eq!(c.outputs[0], a.outputs[0]);
     }
 
     #[test]
@@ -522,7 +1259,12 @@ mod tests {
             ExecOptions { policy: BucketPolicy::Exact, ..Default::default() },
         );
         let x = Tensor::f32(&[10], vec![0.5; 10]);
-        let out = exec.run(&prog, &[x]).unwrap();
+        let out = exec.run(&prog, &[x.clone()]).unwrap();
         assert_eq!(out.metrics.pad_copies, 0, "exact policy needs no pad/crop");
+        // A fully static program replays from the second request on.
+        let out2 = exec.run(&prog, &[x]).unwrap();
+        assert_eq!(out2.metrics.plan_hits, 1);
+        assert_eq!(out2.metrics.pad_copies, 0);
+        assert_eq!(out.outputs, out2.outputs);
     }
 }

@@ -39,6 +39,19 @@ pub struct RunMetrics {
     /// Buffer-manager events.
     pub allocs: u64,
     pub pool_hits: u64,
+    /// Launch-plan cache events: a hit replays the recorded flow (no shape
+    /// resolution, no cache hashing); a miss records a new plan; a guard
+    /// miss found a stale host-shape assumption and fell back to the
+    /// interpreter for that request.
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_guard_misses: u64,
+    /// Peak bytes held in device-resident buffers during the run.
+    pub device_resident_bytes: u64,
+    /// Host→device / device→host transfer payloads. The device-resident
+    /// pipeline exists to shrink these on repeat-shape streams.
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
 }
 
 impl RunMetrics {
@@ -74,6 +87,13 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.pad_copies += o.pad_copies;
         self.allocs += o.allocs;
         self.pool_hits += o.pool_hits;
+        self.plan_hits += o.plan_hits;
+        self.plan_misses += o.plan_misses;
+        self.plan_guard_misses += o.plan_guard_misses;
+        // Residency is a peak, not a flow.
+        self.device_resident_bytes = self.device_resident_bytes.max(o.device_resident_bytes);
+        self.h2d_bytes += o.h2d_bytes;
+        self.d2h_bytes += o.d2h_bytes;
     }
 }
 
@@ -102,5 +122,31 @@ mod tests {
         assert_eq!(a.lib_calls, 2);
         assert_eq!(a.total_kernels(), 9);
         assert_eq!(a.flops, 15);
+    }
+
+    #[test]
+    fn plan_and_transfer_accumulation() {
+        let mut a = RunMetrics {
+            plan_hits: 1,
+            h2d_bytes: 100,
+            device_resident_bytes: 400,
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            plan_hits: 2,
+            plan_misses: 1,
+            plan_guard_misses: 1,
+            h2d_bytes: 50,
+            d2h_bytes: 25,
+            device_resident_bytes: 300,
+            ..Default::default()
+        };
+        a += &b;
+        assert_eq!(a.plan_hits, 3);
+        assert_eq!(a.plan_misses, 1);
+        assert_eq!(a.plan_guard_misses, 1);
+        assert_eq!(a.h2d_bytes, 150);
+        assert_eq!(a.d2h_bytes, 25);
+        assert_eq!(a.device_resident_bytes, 400, "residency accumulates as a peak");
     }
 }

@@ -8,6 +8,7 @@ pub mod eager;
 pub mod executor;
 pub mod metrics;
 pub mod pjrt;
+pub mod plan;
 pub mod reference;
 pub mod shape_env;
 pub mod tensor;

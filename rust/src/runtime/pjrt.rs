@@ -1,39 +1,99 @@
-//! PJRT device wrapper: compile HLO text, execute with host tensors.
+//! PJRT device wrapper: compile HLO text, execute with host tensors or
+//! device-resident buffers.
 //!
 //! This is the "device side" of the reproduction. Fused kernels emitted by
 //! `codegen` (HLO text, exactly the interchange format the AOT pipeline
-//! uses — see /opt/xla-example/README.md for why text, not serialized
-//! protos) are compiled once per (pattern, bucket) and then executed from
-//! the hot path with zero Python involvement.
+//! uses) are compiled once per (pattern, bucket) and then executed from the
+//! hot path with zero Python involvement.
+//!
+//! Two execution paths exist:
+//!
+//! * [`Executable::run`] — the host path: marshal host tensors into
+//!   literals, execute, synchronously read the result back. One H2D copy
+//!   per operand and one D2H per launch.
+//! * [`Executable::run_on_device`] — the device-resident path used by
+//!   cached launch plans: operands are [`DeviceTensor`]s (PJRT buffers),
+//!   the result *stays on device*, and only plan boundaries (program
+//!   outputs, host-op operands) pay a readback.
 
 use crate::dhlo::DType;
 use crate::runtime::tensor::{Data, Tensor};
 use anyhow::{anyhow, bail, Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+/// Distinguishes temp workspaces of multiple devices within one process.
+static WORKSPACE_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A per-device scratch directory for HLO temp files. The bundled XLA
+/// exposes only a file parser, so `compile_hlo_text` must round-trip
+/// through disk; keeping every file in one per-process subdirectory (with
+/// the kernel name in the filename for debuggability) and removing the
+/// whole directory on `Drop` fixes the unbounded `/tmp` churn the previous
+/// flat-file scheme produced.
+struct TempWorkspace {
+    dir: PathBuf,
+    counter: AtomicU64,
+}
+
+impl TempWorkspace {
+    fn new() -> Result<TempWorkspace> {
+        let seq = WORKSPACE_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("disc_hlo_{}_{seq}", std::process::id()));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating HLO temp dir {}", dir.display()))?;
+        Ok(TempWorkspace { dir, counter: AtomicU64::new(0) })
+    }
+
+    /// Unique path for one HLO module, carrying a sanitized kernel name.
+    fn file_for(&self, name: &str) -> PathBuf {
+        let clean: String = name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
+            .take(48)
+            .collect();
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        self.dir.join(format!("{n:05}_{clean}.hlo.txt"))
+    }
+}
+
+impl Drop for TempWorkspace {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
 
 /// A PJRT device (CPU in this testbed; the same wrapper would target GPU).
 pub struct Device {
     client: xla::PjRtClient,
+    temp: TempWorkspace,
+    pub stats: std::cell::RefCell<DeviceStats>,
 }
 
-/// Compilation + execution statistics a device accumulates (feeds the
+/// Compilation + transfer statistics a device accumulates (feeds the
 /// compile-overhead bench and the CPU-time breakdown).
 #[derive(Debug, Default, Clone)]
 pub struct DeviceStats {
     pub compilations: u64,
     pub compile_time: std::time::Duration,
-    pub executions: u64,
-    pub execute_time: std::time::Duration,
+    /// Host→device transfers (count and payload bytes).
+    pub h2d_transfers: u64,
+    pub h2d_bytes: u64,
+    /// Device→host readbacks.
+    pub d2h_transfers: u64,
+    pub d2h_bytes: u64,
 }
 
 impl Device {
     pub fn cpu() -> Result<Device> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        Ok(Device { client })
+        Ok(Device {
+            client,
+            temp: TempWorkspace::new()?,
+            stats: std::cell::RefCell::new(DeviceStats::default()),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -44,26 +104,85 @@ impl Device {
     /// through a temp file because the bundled XLA exposes only a file
     /// parser (`HloModuleProto::from_text_file`).
     pub fn compile_hlo_text(&self, text: &str) -> Result<Executable> {
-        let path = temp_path();
+        self.compile_hlo_text_named("kernel", text)
+    }
+
+    /// Like [`Device::compile_hlo_text`], with the kernel name embedded in
+    /// the temp filename so crash dumps and leftover files are attributable.
+    pub fn compile_hlo_text_named(&self, name: &str, text: &str) -> Result<Executable> {
+        let path = self.temp.file_for(name);
         std::fs::write(&path, text).context("writing HLO temp file")?;
         let result = self.compile_hlo_file(&path);
         let _ = std::fs::remove_file(&path);
         result
     }
 
-    pub fn compile_hlo_file(&self, path: &std::path::Path) -> Result<Executable> {
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
         let start = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(path)
             .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling HLO: {e}"))?;
-        Ok(Executable { exe, compile_time: start.elapsed() })
+        let elapsed = start.elapsed();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compilations += 1;
+            s.compile_time += elapsed;
+        }
+        Ok(Executable { exe, compile_time: elapsed })
+    }
+
+    /// Host→device transfer: upload a host tensor as a device-resident
+    /// buffer.
+    pub fn h2d(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let lit = tensor_to_literal(t)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(&lit)
+            .map_err(|e| anyhow!("h2d transfer: {e}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.h2d_transfers += 1;
+            s.h2d_bytes += t.byte_size() as u64;
+        }
+        Ok(DeviceTensor { buf, dims: t.dims.clone(), dtype: t.dtype })
+    }
+
+    /// Device→host readback of a device-resident tensor.
+    pub fn d2h(&self, dt: &DeviceTensor) -> Result<Tensor> {
+        let t = dt.to_host()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.d2h_transfers += 1;
+            s.d2h_bytes += t.byte_size() as u64;
+        }
+        Ok(t)
     }
 }
 
-fn temp_path() -> PathBuf {
-    let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
-    std::env::temp_dir().join(format!("disc_kernel_{}_{n}.hlo.txt", std::process::id()))
+/// A device-resident tensor: a PJRT buffer plus the host-side metadata the
+/// runtime needs to reason about it without a readback.
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl DeviceTensor {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.elems() * self.dtype.byte_size()
+    }
+
+    /// Synchronous readback (no stats; prefer [`Device::d2h`] on hot paths
+    /// so transfers are accounted).
+    pub fn to_host(&self) -> Result<Tensor> {
+        let lit = self.buf.to_literal_sync().map_err(|e| anyhow!("readback: {e}"))?;
+        literal_to_tensor(&lit, &self.dims, self.dtype)
+    }
 }
 
 /// A compiled kernel.
@@ -85,6 +204,27 @@ impl Executable {
             .map_err(|e| anyhow!("kernel execution: {e}"))?;
         let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("readback: {e}"))?;
         literal_to_tensor(&lit, out_dims, out_dtype)
+    }
+
+    /// Execute with device-resident operands; the result stays on device.
+    /// This is the launch-plan hot path: no literal marshalling, no
+    /// synchronous readback.
+    pub fn run_on_device(
+        &self,
+        inputs: &[&DeviceTensor],
+        out_dims: &[usize],
+        out_dtype: DType,
+    ) -> Result<DeviceTensor> {
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|d| &d.buf).collect();
+        let mut result = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("kernel execution (device): {e}"))?;
+        let buf = result
+            .get_mut(0)
+            .and_then(|r| (!r.is_empty()).then(|| r.remove(0)))
+            .ok_or_else(|| anyhow!("device execution produced no output"))?;
+        Ok(DeviceTensor { buf, dims: out_dims.to_vec(), dtype: out_dtype })
     }
 
     /// Execute returning a tuple of outputs (used by multi-output library
@@ -244,5 +384,45 @@ ENTRY main {
     fn rejects_garbage_hlo() {
         let dev = Device::cpu().unwrap();
         assert!(dev.compile_hlo_text("not hlo at all").is_err());
+    }
+
+    /// Device-resident round trip: run → feed the buffer straight into the
+    /// next launch → read back once. Bit-identical to the host path.
+    #[test]
+    fn device_resident_chain_matches_host_path() {
+        let hlo = r#"HloModule neg, entry_computation_layout={(f32[4]{0})->f32[4]{0}}
+
+ENTRY main {
+  p0 = f32[4]{0} parameter(0)
+  ROOT t = f32[4]{0} tanh(p0)
+}
+"#;
+        let dev = Device::cpu().unwrap();
+        let exe = dev.compile_hlo_text(hlo).unwrap();
+        let x = Tensor::f32(&[4], vec![0.1, -0.2, 0.3, -0.4]);
+        // Host path, twice.
+        let h1 = exe.run(&[&x], &[4], DType::F32).unwrap();
+        let h2 = exe.run(&[&h1], &[4], DType::F32).unwrap();
+        // Device path: one upload, one readback.
+        let d0 = dev.h2d(&x).unwrap();
+        let d1 = exe.run_on_device(&[&d0], &[4], DType::F32).unwrap();
+        let d2 = exe.run_on_device(&[&d1], &[4], DType::F32).unwrap();
+        let back = dev.d2h(&d2).unwrap();
+        assert_eq!(back, h2, "device-resident chain must be bit-exact");
+        let stats = dev.stats.borrow();
+        assert_eq!(stats.h2d_transfers, 1);
+        assert_eq!(stats.d2h_transfers, 1);
+    }
+
+    /// The temp workspace keeps HLO files in one per-process directory and
+    /// removes it when the device is dropped.
+    #[test]
+    fn temp_workspace_cleans_up_on_drop() {
+        let dir = {
+            let dev = Device::cpu().unwrap();
+            let _ = dev.compile_hlo_text_named("probe", "HloModule p, x={}\n\nENTRY main {\n  ROOT c = f32[] constant(1)\n}\n");
+            dev.temp.dir.clone()
+        };
+        assert!(!dir.exists(), "temp dir should be removed on Drop");
     }
 }

@@ -1,0 +1,294 @@
+//! Launch plans: the fully resolved runtime flow for one symbol binding.
+//!
+//! The generated program (`crate::program`) already removed graph
+//! interpretation from the hot path, but each request still re-resolved
+//! every symbolic dim, re-hashed kernel-cache keys, and re-decided pad/crop
+//! marshalling. A [`LaunchPlan`] records the outcome of all of that work
+//! the first time a binding vector (the concrete extents of the module's
+//! dynamic dims) is seen: concrete dims per step, the compiled kernel and
+//! extent-scalar arguments per fused launch, the GEMM library entry per
+//! dot. Repeat requests with the same bindings *replay* the plan — no
+//! `resolve_dims`, no signature hashing, no per-launch branching — and run
+//! device-resident (see `executor::Executor::replay`).
+//!
+//! Two safety mechanisms keep replays exact:
+//!
+//! * **Guards** — shapes that were resolved from host shape-tensor
+//!   *contents* (`ShapeExpr::Elem` reads, e.g. `DSlice` bounds) are not
+//!   captured by the binding vector. Every such read is logged during
+//!   recording; replays re-check the observed values (against the request's
+//!   inputs for parameter tensors, or right after the producing host op
+//!   runs) and fall back to interpretation on any mismatch.
+//! * **Data-dependent suffix** — an `Op::Unique` produces an extent no
+//!   plan can predict, so recording stops there: the plan covers the step
+//!   prefix and replays hand off to the interpreter from `suffix_start`.
+
+use crate::codegen::cache::CompiledKernel;
+use crate::dhlo::{Module, Op, ValueId};
+use crate::library::GemmKey;
+use crate::program::Program;
+use crate::runtime::pjrt::DeviceTensor;
+use crate::runtime::shape_env::SymEnv;
+use crate::runtime::tensor::Tensor;
+use crate::shape::SymId;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Cache key: which program, under which concrete extents of its dynamic
+/// dims (canonical symbols, sorted for determinism).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub program: u64,
+    pub bindings: Vec<(SymId, i64)>,
+}
+
+/// The binding vector of a freshly bound environment (call right after
+/// `SymEnv::bind_params`, before any derived symbol is resolved).
+pub fn binding_vector(env: &SymEnv) -> Vec<(SymId, i64)> {
+    let mut v: Vec<(SymId, i64)> = env.resolved().iter().map(|(&s, &x)| (s, x)).collect();
+    v.sort_unstable_by_key(|&(s, _)| s);
+    v
+}
+
+/// A recorded host-shape-tensor read: element `index` of the tensor at
+/// `value` (or of entry parameter `param`) evaluated to `expect`.
+#[derive(Debug, Clone)]
+pub struct ElemGuard {
+    pub index: usize,
+    pub expect: i64,
+}
+
+/// One resolved step of the flow. Mirrors `program::Step`, with everything
+/// the hot path would otherwise recompute baked in.
+pub enum PlannedStep {
+    EvalHost { value: ValueId, out_dims: Vec<usize> },
+    Bitcast { value: ValueId, out_dims: Vec<usize> },
+    LaunchOp { value: ValueId, out_dims: Vec<usize> },
+    LibraryCall { value: ValueId, key: GemmKey },
+    LaunchFused {
+        idx: usize,
+        /// The compiled kernel — replays skip signature hashing and the
+        /// bucket-cache lookup entirely.
+        kernel: Rc<CompiledKernel>,
+        /// Actual extents of the kernel's trailing s32 scalar parameters,
+        /// as host tensors (host-path replay)…
+        extents_host: Vec<Tensor>,
+        /// …and pre-uploaded device buffers (device-resident replay).
+        extents_dev: Vec<Rc<DeviceTensor>>,
+        /// Actual (cropped) output dims.
+        out_actual: Vec<usize>,
+    },
+    Dealloc { value: ValueId },
+}
+
+/// A cached, fully resolved runtime flow for one `PlanKey`.
+pub struct LaunchPlan {
+    pub steps: Vec<PlannedStep>,
+    /// Index into `Program::steps` where replay falls back to the
+    /// interpreter (`== steps len of the program` when fully covered).
+    pub suffix_start: usize,
+    /// Guards over entry-parameter shape tensors, checked before replay.
+    pub param_guards: HashMap<usize, Vec<ElemGuard>>,
+    /// Guards over host-op products, checked as the producing op replays.
+    pub host_guards: HashMap<ValueId, Vec<ElemGuard>>,
+    /// Peak bytes of device-resident values implied by the plan's
+    /// compile-time `Dealloc` placement; reserved in the buffer arena when
+    /// the plan is installed.
+    pub device_peak_bytes: u64,
+}
+
+impl LaunchPlan {
+    /// Check the parameter guards against a request's inputs. `true` means
+    /// the recorded flow is valid for this request.
+    pub fn param_guards_hold(&self, inputs: &[Tensor]) -> bool {
+        self.param_guards.iter().all(|(&param, guards)| {
+            let Some(t) = inputs.get(param) else { return false };
+            let Ok(v) = t.as_i64() else { return false };
+            guards.iter().all(|g| v.get(g.index) == Some(&g.expect))
+        })
+    }
+}
+
+/// Check one host value against its recorded guards.
+pub fn host_guards_hold(guards: &[ElemGuard], t: &Tensor) -> bool {
+    let Ok(v) = t.as_i64() else { return false };
+    guards.iter().all(|g| v.get(g.index) == Some(&g.expect))
+}
+
+/// Plan-cache statistics (executor-lifetime).
+#[derive(Debug, Clone, Default)]
+pub struct PlanStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub guard_misses: u64,
+    pub entries: usize,
+}
+
+/// Accumulates a [`LaunchPlan`] while the interpreter executes a request.
+pub struct PlanRecorder {
+    steps: Vec<PlannedStep>,
+    suffix_start: Option<usize>,
+    /// Elem-read log snapshotted at the suffix cut: reads that happen in
+    /// the interpreted suffix must NOT become guards (the suffix
+    /// re-resolves from scratch on every replay, so guarding on its reads
+    /// would spuriously kill replay for e.g. `Unique` + `DSlice` programs).
+    elem_log: Option<Vec<(usize, usize, i64)>>,
+    /// Device-residency model: bytes each device-producing step would hold
+    /// during replay, released at the recorded `Dealloc` points.
+    dev_live: HashMap<ValueId, u64>,
+    dev_resident: u64,
+    dev_peak: u64,
+}
+
+impl PlanRecorder {
+    pub fn new() -> PlanRecorder {
+        PlanRecorder {
+            steps: Vec::new(),
+            suffix_start: None,
+            elem_log: None,
+            dev_live: HashMap::new(),
+            dev_resident: 0,
+            dev_peak: 0,
+        }
+    }
+
+    /// Freeze the shape-read log at the suffix cut: only reads up to here
+    /// produce guards.
+    pub fn stash_elem_log(&mut self, log: Vec<(usize, usize, i64)>) {
+        if self.elem_log.is_none() {
+            self.elem_log = Some(log);
+        }
+    }
+
+    /// Still recording? (False once a data-dependent step was hit.)
+    pub fn active(&self) -> bool {
+        self.suffix_start.is_none()
+    }
+
+    pub fn push(&mut self, step: PlannedStep) {
+        if self.active() {
+            self.steps.push(step);
+        }
+    }
+
+    /// A data-dependent step at program-step index `si`: the plan covers
+    /// only the prefix before it.
+    pub fn mark_suffix(&mut self, si: usize) {
+        if self.active() {
+            self.suffix_start = Some(si);
+        }
+    }
+
+    /// A step whose replay output is device-resident (`bytes` at bucket
+    /// extents).
+    pub fn note_device_out(&mut self, value: ValueId, bytes: u64) {
+        if !self.active() {
+            return;
+        }
+        self.dev_live.insert(value, bytes);
+        self.dev_resident += bytes;
+        self.dev_peak = self.dev_peak.max(self.dev_resident);
+    }
+
+    pub fn note_dealloc(&mut self, value: ValueId) {
+        if !self.active() {
+            return;
+        }
+        if let Some(bytes) = self.dev_live.remove(&value) {
+            self.dev_resident -= bytes;
+        }
+    }
+
+    /// Finalize against the recorded environment's shape reads (the
+    /// stashed prefix log wins over `elem_log` when a suffix was cut).
+    /// Returns `None` when the plan would cover nothing (data-dependent
+    /// first step).
+    pub fn finish(
+        self,
+        m: &Module,
+        prog: &Program,
+        elem_log: &[(usize, usize, i64)],
+    ) -> Option<LaunchPlan> {
+        let suffix_start = self.suffix_start.unwrap_or(prog.steps.len());
+        if suffix_start == 0 {
+            return None;
+        }
+        let stashed = self.elem_log.clone();
+        let elem_log: &[(usize, usize, i64)] = stashed.as_deref().unwrap_or(elem_log);
+        let mut param_guards: HashMap<usize, Vec<ElemGuard>> = HashMap::new();
+        let mut host_guards: HashMap<ValueId, Vec<ElemGuard>> = HashMap::new();
+        let mut seen: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+        for &(value, index, expect) in elem_log {
+            if !seen.insert((value, index)) {
+                continue;
+            }
+            match &m.instrs[value].op {
+                // Constants never change between requests: nothing to guard.
+                Op::Const { .. } => {}
+                // Parameter contents vary per request even at fixed shapes:
+                // check against the inputs before replaying.
+                Op::Param { index: p } => {
+                    param_guards.entry(*p).or_default().push(ElemGuard { index, expect });
+                }
+                // Host-op product: re-checked right after that op replays.
+                // (Reads that only happen in the interpreted suffix leave a
+                // guard that is never consulted — harmless, the suffix
+                // re-resolves from scratch.)
+                _ => {
+                    host_guards.entry(value).or_default().push(ElemGuard { index, expect });
+                }
+            }
+        }
+        Some(LaunchPlan {
+            steps: self.steps,
+            suffix_start,
+            param_guards,
+            host_guards,
+            device_peak_bytes: self.dev_peak,
+        })
+    }
+}
+
+impl Default for PlanRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_tracks_device_peak_through_deallocs() {
+        let mut r = PlanRecorder::new();
+        r.note_device_out(0, 100);
+        r.note_device_out(1, 50);
+        r.note_dealloc(0);
+        r.note_device_out(2, 60);
+        assert_eq!(r.dev_peak, 150, "peak before first dealloc");
+        assert_eq!(r.dev_resident, 110);
+    }
+
+    #[test]
+    fn suffix_marking_stops_recording() {
+        let mut r = PlanRecorder::new();
+        r.push(PlannedStep::Dealloc { value: 0 });
+        r.mark_suffix(1);
+        r.push(PlannedStep::Dealloc { value: 1 });
+        r.note_device_out(5, 1000);
+        assert_eq!(r.steps.len(), 1, "steps after the suffix mark are not recorded");
+        assert_eq!(r.dev_peak, 0);
+    }
+
+    #[test]
+    fn guards_hold_checks_values() {
+        let guards = vec![ElemGuard { index: 0, expect: 3 }, ElemGuard { index: 2, expect: 7 }];
+        let good = Tensor::i64(&[3], vec![3, 9, 7]);
+        let bad = Tensor::i64(&[3], vec![3, 9, 8]);
+        let short = Tensor::i64(&[1], vec![3]);
+        assert!(host_guards_hold(&guards, &good));
+        assert!(!host_guards_hold(&guards, &bad));
+        assert!(!host_guards_hold(&guards, &short));
+    }
+}

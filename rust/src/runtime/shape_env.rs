@@ -50,6 +50,11 @@ pub struct SymEnv {
     vals: HashMap<SymId, i64>,
     /// Concrete dims of each entry parameter (bound once per request).
     param_dims: Vec<Vec<usize>>,
+    /// When recording a launch plan, every `Elem` shape read (value id,
+    /// element index, observed value) is logged here so the plan can guard
+    /// against serving a stale flow when host shape-tensor *contents* (not
+    /// just parameter extents) change between requests.
+    pub elem_log: Option<Vec<(usize, usize, i64)>>,
 }
 
 impl SymEnv {
@@ -186,7 +191,11 @@ impl SymEnv {
                     .with_context(|| format!("shape tensor %{value} not evaluated yet"))?;
                 let v = t.as_i64()?;
                 ensure!(*index < v.len(), "shape tensor index out of range");
-                v[*index]
+                let read = v[*index];
+                if let Some(log) = self.elem_log.as_mut() {
+                    log.push((*value, *index, read));
+                }
+                read
             }
             ShapeExpr::DataDep { value } => {
                 bail!("data-dependent extent of %{value} not yet produced")

@@ -207,6 +207,47 @@ fn property_buffer_liveness_is_sound() {
 }
 
 #[test]
+fn plan_cache_bit_matches_interpreter_on_workloads() {
+    // The launch-plan + device-resident replay tier must be bit-exact
+    // against the uncached interpreter executor on real workloads, over a
+    // stream that repeats every shape (so the second half replays plans).
+    let compiler = DiscCompiler::new().unwrap();
+    for name in ["bert", "seq2seq"] {
+        let w = disc::workloads::by_name(name).unwrap();
+        let module = disc::bridge::lower(&w.graph).unwrap();
+        let mut cached =
+            compiler.compile(module, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let m2 = disc::bridge::lower(&w.graph).unwrap();
+        let mut plain = compiler
+            .compile(
+                m2,
+                &CompileOptions {
+                    plan_cache: false,
+                    device_resident: false,
+                    ..CompileOptions::mode(Mode::Disc)
+                },
+            )
+            .unwrap();
+        let stream: Vec<_> = w
+            .request_stream(4, 21)
+            .into_iter()
+            .chain(w.request_stream(4, 21))
+            .collect();
+        for inputs in stream {
+            let a = cached.run(&inputs).unwrap();
+            let b = plain.run(&inputs).unwrap();
+            assert_eq!(
+                a.outputs, b.outputs,
+                "{name}: plan-cached outputs diverged from the interpreter path"
+            );
+        }
+        let ps = cached.plan_stats().unwrap();
+        assert!(ps.hits >= 4, "{name}: repeated shapes must replay plans (hits={})", ps.hits);
+        assert_eq!(plain.plan_stats().unwrap().hits, 0);
+    }
+}
+
+#[test]
 fn serving_stream_matches_reference_for_every_workload() {
     // End-to-end: all seven Table-1 workloads, DISC vs reference, over a
     // short dynamic request stream.

@@ -1,0 +1,212 @@
+//! Minimal offline reimplementation of the `anyhow` API surface this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension trait,
+//! and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Errors are a chain of messages: wrapping with `context` pushes a new
+//! frame. `{e}` displays the outermost message; `{e:#}` displays the whole
+//! chain separated by `": "` (matching the upstream alternate formatting
+//! the CLI and tests rely on).
+
+use std::fmt;
+
+/// A chainable, message-based error.
+pub struct Error {
+    /// Outermost message first; the root cause is last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what keeps the blanket `From` impl below
+// coherent with the reflexive `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(c))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("writing file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "writing file: disk on fire");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing key").unwrap_err()), "missing key");
+        let r: Result<u32, Error> = Ok(7);
+        assert_eq!(r.context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", f(200).unwrap_err()), "too big");
+        let e: Error = anyhow!("code {}", 42);
+        assert_eq!(e.root_cause(), "code 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "disk on fire");
+    }
+}

@@ -1,0 +1,1374 @@
+//! Pure-Rust stand-in for the `xla` PJRT bindings used by this workspace.
+//!
+//! The real deployment links XLA's PJRT C API; offline containers have no
+//! such toolchain, so this vendored crate implements the same *interface*
+//! over a small HLO-text parser and interpreter. It understands exactly the
+//! instruction set the workspace's emitters produce (`codegen/hlo.rs`, the
+//! GEMM library, and the AOT artifact modules): parameter, constant,
+//! elementwise arithmetic, compare/select/convert, broadcast_in_dim,
+//! transpose, iota, masked reduce with `to_apply` regions, dot (plain and
+//! batched), copy, tuple and get-tuple-element.
+//!
+//! Semantics notes:
+//! - layouts (`{1,0}` suffixes) are parsed and ignored: all data is
+//!   row-major dense, which is what every caller assumes;
+//! - `PjRtBuffer` is a "device"-resident value: executing with buffers
+//!   (`execute_b`) moves no host memory, mirroring how the real PJRT keeps
+//!   results on device until `to_literal_sync`.
+
+use std::borrow::Borrow;
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Crate-level error: a message string (the real bindings surface status
+/// strings the same way).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+/// Element types the pipeline uses end-to-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    S64,
+    S32,
+    Pred,
+}
+
+impl ElementType {
+    fn name(self) -> &'static str {
+        match self {
+            ElementType::F32 => "f32",
+            ElementType::S64 => "s64",
+            ElementType::S32 => "s32",
+            ElementType::Pred => "pred",
+        }
+    }
+
+    fn from_name(s: &str) -> Result<ElementType> {
+        Ok(match s {
+            "f32" => ElementType::F32,
+            "s64" => ElementType::S64,
+            "s32" => ElementType::S32,
+            "pred" => ElementType::Pred,
+            other => return err(format!("unsupported element type '{other}'")),
+        })
+    }
+}
+
+/// Dense storage for one literal. Public only because [`NativeType`]'s
+/// methods mention it; treat as an implementation detail.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I64(Vec<i64>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-resident tensor value (XLA literal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Data,
+}
+
+/// Native Rust types that map onto [`ElementType`]s.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+    fn from_ne(bytes: &[u8]) -> Self;
+    const WIDTH: usize;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn from_ne(b: &[u8]) -> f32 {
+        f32::from_ne_bytes([b[0], b[1], b[2], b[3]])
+    }
+    const WIDTH: usize = 4;
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+    fn wrap(v: Vec<i64>) -> Data {
+        Data::I64(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[i64]> {
+        match d {
+            Data::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn from_ne(b: &[u8]) -> i64 {
+        i64::from_ne_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+    const WIDTH: usize = 8;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn from_ne(b: &[u8]) -> i32 {
+        i32::from_ne_bytes([b[0], b[1], b[2], b[3]])
+    }
+    const WIDTH: usize = 4;
+}
+
+impl Literal {
+    /// Rank-0 literal from a native scalar.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { ty: T::TY, dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    /// Build a literal by reinterpreting raw host bytes (the fast
+    /// marshalling path the runtime uses).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        fn decode<T: NativeType>(dims: &[usize], data: &[u8], n: usize) -> Result<Literal> {
+            if data.len() != n * T::WIDTH {
+                return err(format!(
+                    "untyped data length {} != {} elements × {} bytes",
+                    data.len(),
+                    n,
+                    T::WIDTH
+                ));
+            }
+            let v: Vec<T> = data.chunks_exact(T::WIDTH).map(T::from_ne).collect();
+            Ok(Literal { ty: T::TY, dims: dims.to_vec(), data: T::wrap(v) })
+        }
+        match ty {
+            ElementType::F32 => decode::<f32>(dims, data, n),
+            ElementType::S64 => decode::<i64>(dims, data, n),
+            ElementType::S32 => decode::<i32>(dims, data, n),
+            ElementType::Pred => err("pred literals cannot be built from untyped data"),
+        }
+    }
+
+    /// Copy the elements out as a native vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match T::unwrap(&self.data) {
+            Some(v) => Ok(v.to_vec()),
+            None => err(format!(
+                "literal is {}, asked for {}",
+                self.ty.name(),
+                T::TY.name()
+            )),
+        }
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.data, Data::Tuple(vec![])) {
+            Data::Tuple(parts) => Ok(parts),
+            other => {
+                self.data = other;
+                err("literal is not a tuple")
+            }
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Approximate host byte size of the payload.
+    pub fn size_bytes(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len() * 4,
+            Data::I64(v) => v.len() * 8,
+            Data::I32(v) => v.len() * 4,
+            Data::Pred(v) => v.len(),
+            Data::Tuple(ps) => ps.iter().map(|p| p.size_bytes()).sum(),
+        }
+    }
+}
+
+/// A "device"-resident value. In this vendored backend the device is host
+/// memory, but the type boundary is preserved: buffers flow between
+/// executions without literal round-trips, exactly like real PJRT buffers.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Synchronous device→host readback.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.literal.dims()
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.literal.element_type()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.literal.size_bytes()
+    }
+}
+
+/// The PJRT client (CPU platform).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-interp".to_string()
+    }
+
+    /// Host→device transfer.
+    pub fn buffer_from_host_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: lit.clone() })
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { module: Arc::new(comp.module.clone()) })
+    }
+}
+
+/// Parsed HLO module "proto" (text-format backed).
+pub struct HloModuleProto {
+    module: HloModule,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (the only parser the bundled XLA exposes).
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { module: parse_module(&text)? })
+    }
+}
+
+/// A computation handle (mirrors the real binding's two-step build).
+pub struct XlaComputation {
+    module: HloModule,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.module.clone() }
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    module: Arc<HloModule>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals: transfers in, runs, leaves the result on
+    /// "device". Shaped `result[replica][output]` like the real API.
+    pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let out = interpret(&self.module, &lits)?;
+        Ok(vec![vec![PjRtBuffer { literal: out }]])
+    }
+
+    /// Execute with device-resident buffers (no host transfer).
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> = args.iter().map(|a| &a.borrow().literal).collect();
+        let out = interpret(&self.module, &lits)?;
+        Ok(vec![vec![PjRtBuffer { literal: out }]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO text parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct HloModule {
+    computations: HashMap<String, Computation>,
+    entry: String,
+}
+
+#[derive(Debug, Clone)]
+struct Computation {
+    instrs: Vec<Instr>,
+    /// Index of the ROOT instruction.
+    root: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Instr {
+    name: String,
+    ty: ParsedType,
+    op: String,
+    /// Operand names (empty for constant/parameter/iota).
+    operands: Vec<String>,
+    /// Raw text inside the parens for `constant`, raw index for `parameter`.
+    raw: String,
+    attrs: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+struct ParsedType {
+    ty: ElementType,
+    dims: Vec<usize>,
+    /// Set for tuple-typed instructions; `ty`/`dims` are then unused.
+    tuple: Option<Vec<ParsedType>>,
+}
+
+fn parse_module(text: &str) -> Result<HloModule> {
+    let mut lines = text.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) if l.trim().is_empty() => continue,
+            Some(l) => break l.trim().to_string(),
+            None => return err("empty module text"),
+        }
+    };
+    if !header.starts_with("HloModule") {
+        return err(format!("expected 'HloModule' header, got '{header}'"));
+    }
+
+    let mut computations = HashMap::new();
+    let mut entry = String::new();
+    let mut current: Option<(String, Vec<Instr>, Option<usize>, bool)> = None;
+    for line in lines {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with("//") {
+            continue;
+        }
+        if t == "}" {
+            let (name, instrs, root, is_entry) =
+                current.take().ok_or_else(|| Error("unmatched '}'".into()))?;
+            if instrs.is_empty() {
+                return err(format!("computation '{name}' has no instructions"));
+            }
+            let root = root.unwrap_or(instrs.len() - 1);
+            if is_entry {
+                entry = name.clone();
+            }
+            computations.insert(name, Computation { instrs, root });
+            continue;
+        }
+        if let Some(head) = t.strip_suffix('{') {
+            // `name {` or `ENTRY name {`
+            let head = head.trim();
+            let (name, is_entry) = match head.strip_prefix("ENTRY ") {
+                Some(rest) => (rest.trim().to_string(), true),
+                None => (head.to_string(), false),
+            };
+            if current.is_some() {
+                return err("nested computation block");
+            }
+            if name.is_empty() || name.contains(' ') {
+                return err(format!("bad computation header '{t}'"));
+            }
+            current = Some((name, Vec::new(), None, is_entry));
+            continue;
+        }
+        match current.as_mut() {
+            Some((_, instrs, root, _)) => {
+                let (ins, is_root) = parse_instr(t)?;
+                if is_root {
+                    *root = Some(instrs.len());
+                }
+                instrs.push(ins);
+            }
+            None => return err(format!("instruction outside computation: '{t}'")),
+        }
+    }
+    if current.is_some() {
+        return err("unterminated computation block");
+    }
+    if entry.is_empty() {
+        return err("module has no ENTRY computation");
+    }
+    Ok(HloModule { computations, entry })
+}
+
+fn parse_instr(line: &str) -> Result<(Instr, bool)> {
+    let (is_root, rest) = match line.strip_prefix("ROOT ") {
+        Some(r) => (true, r),
+        None => (false, line),
+    };
+    let eq = rest
+        .find(" = ")
+        .ok_or_else(|| Error(format!("instruction missing '=': '{line}'")))?;
+    let name = rest[..eq].trim().to_string();
+    let rhs = rest[eq + 3..].trim();
+    let (ty, rhs) = parse_type(rhs)?;
+    let rhs = rhs.trim_start();
+    let open = rhs
+        .find('(')
+        .ok_or_else(|| Error(format!("missing '(' in '{line}'")))?;
+    let op = rhs[..open].trim().to_string();
+    let close = find_matching_paren(rhs, open)
+        .ok_or_else(|| Error(format!("missing ')' in '{line}'")))?;
+    let inside = rhs[open + 1..close].trim().to_string();
+    let mut attrs = HashMap::new();
+    let tail = rhs[close + 1..].trim();
+    if !tail.is_empty() {
+        let tail = tail.strip_prefix(',').unwrap_or(tail);
+        for part in split_top_level(tail) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                Some((k, v)) => {
+                    attrs.insert(k.trim().to_string(), v.trim().to_string());
+                }
+                None => return err(format!("bad attribute '{part}' in '{line}'")),
+            }
+        }
+    }
+    let (operands, raw) = if op == "constant" || op == "parameter" {
+        (vec![], inside)
+    } else {
+        let ops: Vec<String> = split_top_level(&inside)
+            .into_iter()
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        (ops, String::new())
+    };
+    Ok((Instr { name, ty, op, operands, raw, attrs }, is_root))
+}
+
+/// Parse a leading type out of `s`; returns the type and the remainder.
+fn parse_type(s: &str) -> Result<(ParsedType, &str)> {
+    let s = s.trim_start();
+    if let Some(rest) = s.strip_prefix('(') {
+        // Tuple type: `(f32[2]{0}, s32[])`.
+        let mut parts = Vec::new();
+        let mut rem = rest;
+        loop {
+            let (t, r) = parse_type(rem)?;
+            parts.push(t);
+            let r = r.trim_start();
+            if let Some(r2) = r.strip_prefix(',') {
+                rem = r2;
+            } else if let Some(r2) = r.strip_prefix(')') {
+                return Ok((
+                    ParsedType { ty: ElementType::F32, dims: vec![], tuple: Some(parts) },
+                    r2,
+                ));
+            } else {
+                return err(format!("bad tuple type near '{r}'"));
+            }
+        }
+    }
+    let bracket = s
+        .find('[')
+        .ok_or_else(|| Error(format!("type missing '[': '{s}'")))?;
+    let ty = ElementType::from_name(&s[..bracket])?;
+    let end = s[bracket..]
+        .find(']')
+        .ok_or_else(|| Error(format!("type missing ']': '{s}'")))?
+        + bracket;
+    let dims_str = &s[bracket + 1..end];
+    let mut dims = Vec::new();
+    if !dims_str.trim().is_empty() {
+        for d in dims_str.split(',') {
+            dims.push(
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error(format!("bad dim '{d}' in '{s}'")))?,
+            );
+        }
+    }
+    let mut rest = &s[end + 1..];
+    // Optional layout suffix `{...}` — parsed and ignored.
+    if let Some(r) = rest.strip_prefix('{') {
+        let close = r
+            .find('}')
+            .ok_or_else(|| Error(format!("unterminated layout in '{s}'")))?;
+        rest = &r[close + 1..];
+    }
+    Ok((ParsedType { ty, dims, tuple: None }, rest))
+}
+
+fn find_matching_paren(s: &str, open: usize) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Split on top-level commas (outside `{}`/`()` nesting).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '{' | '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            '}' | ')' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn parse_int_list(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    if inner.trim().is_empty() {
+        return Ok(out);
+    }
+    for p in inner.split(',') {
+        out.push(
+            p.trim()
+                .parse::<usize>()
+                .map_err(|_| Error(format!("bad int list '{s}'")))?,
+        );
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Interpretation
+// ---------------------------------------------------------------------------
+
+fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+fn interpret(module: &HloModule, args: &[&Literal]) -> Result<Literal> {
+    let entry = module
+        .computations
+        .get(&module.entry)
+        .ok_or_else(|| Error("entry computation missing".into()))?;
+    let mut env: HashMap<&str, Literal> = HashMap::with_capacity(entry.instrs.len());
+    for ins in &entry.instrs {
+        let v = eval_instr(module, ins, args, &env)?;
+        env.insert(ins.name.as_str(), v);
+    }
+    let root = &entry.instrs[entry.root];
+    env.remove(root.name.as_str())
+        .ok_or_else(|| Error("root value missing".into()))
+}
+
+fn get<'a>(env: &'a HashMap<&str, Literal>, name: &str) -> Result<&'a Literal> {
+    env.get(name)
+        .ok_or_else(|| Error(format!("operand '{name}' not yet computed")))
+}
+
+fn want_f32(l: &Literal) -> Result<&[f32]> {
+    match &l.data {
+        Data::F32(v) => Ok(v),
+        _ => err(format!("expected f32 operand, got {}", l.ty.name())),
+    }
+}
+
+fn want_pred(l: &Literal) -> Result<&[bool]> {
+    match &l.data {
+        Data::Pred(v) => Ok(v),
+        _ => err(format!("expected pred operand, got {}", l.ty.name())),
+    }
+}
+
+fn lit(ty: ElementType, dims: Vec<usize>, data: Data) -> Literal {
+    Literal { ty, dims, data }
+}
+
+/// Numeric scalar view used by compare (total order comparisons on f64
+/// are fine for the finite values that flow through the mask paths).
+fn nth_as_f64(l: &Literal, i: usize) -> Result<f64> {
+    Ok(match &l.data {
+        Data::F32(v) => v[i] as f64,
+        Data::I64(v) => v[i] as f64,
+        Data::I32(v) => v[i] as f64,
+        Data::Pred(v) => v[i] as u8 as f64,
+        Data::Tuple(_) => return err("compare on tuple"),
+    })
+}
+
+fn eval_instr(
+    module: &HloModule,
+    ins: &Instr,
+    args: &[&Literal],
+    env: &HashMap<&str, Literal>,
+) -> Result<Literal> {
+    let out_ty = ins.ty.ty;
+    let out_dims = ins.ty.dims.clone();
+    let n_out: usize = out_dims.iter().product();
+    match ins.op.as_str() {
+        "parameter" => {
+            let idx: usize = ins
+                .raw
+                .trim()
+                .parse()
+                .map_err(|_| Error(format!("bad parameter index '{}'", ins.raw)))?;
+            let a = args
+                .get(idx)
+                .ok_or_else(|| Error(format!("missing argument {idx}")))?;
+            if a.dims != out_dims {
+                return err(format!(
+                    "argument {idx} shape {:?} != declared {:?}",
+                    a.dims, out_dims
+                ));
+            }
+            if a.ty != out_ty {
+                return err(format!(
+                    "argument {idx} type {} != declared {}",
+                    a.ty.name(),
+                    out_ty.name()
+                ));
+            }
+            Ok((*a).clone())
+        }
+        "constant" => parse_constant(&ins.raw, out_ty, &out_dims),
+        "copy" => Ok(get(env, &ins.operands[0])?.clone()),
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power" => {
+            let a = get(env, &ins.operands[0])?;
+            let b = get(env, &ins.operands[1])?;
+            eval_binary(&ins.op, a, b, out_ty, out_dims)
+        }
+        "and" | "or" => {
+            let a = want_pred(get(env, &ins.operands[0])?)?;
+            let b = want_pred(get(env, &ins.operands[1])?)?;
+            let v: Vec<bool> = a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| if ins.op == "and" { x && y } else { x || y })
+                .collect();
+            Ok(lit(ElementType::Pred, out_dims, Data::Pred(v)))
+        }
+        "negate" | "abs" | "exponential" | "log" | "tanh" | "sqrt" | "rsqrt" | "floor"
+        | "sign" => {
+            let x = get(env, &ins.operands[0])?;
+            eval_unary(&ins.op, x, out_dims)
+        }
+        "compare" => {
+            let a = get(env, &ins.operands[0])?;
+            let b = get(env, &ins.operands[1])?;
+            let dir = ins
+                .attrs
+                .get("direction")
+                .ok_or_else(|| Error("compare missing direction".into()))?;
+            let n = a.element_count();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let (x, y) = (nth_as_f64(a, i)?, nth_as_f64(b, i)?);
+                v.push(match dir.as_str() {
+                    "LT" => x < y,
+                    "LE" => x <= y,
+                    "GT" => x > y,
+                    "GE" => x >= y,
+                    "EQ" => x == y,
+                    "NE" => x != y,
+                    other => return err(format!("compare direction '{other}'")),
+                });
+            }
+            Ok(lit(ElementType::Pred, out_dims, Data::Pred(v)))
+        }
+        "select" => {
+            let p = want_pred(get(env, &ins.operands[0])?)?.to_vec();
+            let t = get(env, &ins.operands[1])?;
+            let f = get(env, &ins.operands[2])?;
+            let data = match (&t.data, &f.data) {
+                (Data::F32(a), Data::F32(b)) => Data::F32(
+                    p.iter().enumerate().map(|(i, &c)| if c { a[i] } else { b[i] }).collect(),
+                ),
+                (Data::I64(a), Data::I64(b)) => Data::I64(
+                    p.iter().enumerate().map(|(i, &c)| if c { a[i] } else { b[i] }).collect(),
+                ),
+                (Data::I32(a), Data::I32(b)) => Data::I32(
+                    p.iter().enumerate().map(|(i, &c)| if c { a[i] } else { b[i] }).collect(),
+                ),
+                _ => return err("select branch dtype mismatch"),
+            };
+            Ok(lit(out_ty, out_dims, data))
+        }
+        "convert" => {
+            let x = get(env, &ins.operands[0])?;
+            eval_convert(x, out_ty, out_dims)
+        }
+        "broadcast" => {
+            let x = get(env, &ins.operands[0])?;
+            let mapping = parse_int_list(
+                ins.attrs
+                    .get("dimensions")
+                    .ok_or_else(|| Error("broadcast missing dimensions".into()))?,
+            )?;
+            eval_broadcast(x, &mapping, out_ty, out_dims)
+        }
+        "transpose" => {
+            let x = get(env, &ins.operands[0])?;
+            let perm = parse_int_list(
+                ins.attrs
+                    .get("dimensions")
+                    .ok_or_else(|| Error("transpose missing dimensions".into()))?,
+            )?;
+            eval_transpose(x, &perm, out_ty, out_dims)
+        }
+        "reshape" => {
+            let x = get(env, &ins.operands[0])?;
+            if x.element_count() != n_out {
+                return err("reshape element count mismatch");
+            }
+            Ok(lit(out_ty, out_dims, x.data.clone()))
+        }
+        "iota" => {
+            let axis: usize = ins
+                .attrs
+                .get("iota_dimension")
+                .ok_or_else(|| Error("iota missing iota_dimension".into()))?
+                .parse()
+                .map_err(|_| Error("bad iota_dimension".into()))?;
+            eval_iota(out_ty, out_dims, axis)
+        }
+        "reduce" => {
+            let x = get(env, &ins.operands[0])?;
+            let init = get(env, &ins.operands[1])?;
+            let axes = parse_int_list(
+                ins.attrs
+                    .get("dimensions")
+                    .ok_or_else(|| Error("reduce missing dimensions".into()))?,
+            )?;
+            let region = ins
+                .attrs
+                .get("to_apply")
+                .ok_or_else(|| Error("reduce missing to_apply".into()))?;
+            let fold = region_fold(module, region)?;
+            eval_reduce(x, init, &axes, fold, out_ty, out_dims)
+        }
+        "dot" => {
+            let a = get(env, &ins.operands[0])?;
+            let b = get(env, &ins.operands[1])?;
+            eval_dot(ins, a, b, out_dims)
+        }
+        "tuple" => {
+            let parts: Vec<Literal> = ins
+                .operands
+                .iter()
+                .map(|o| get(env, o).cloned())
+                .collect::<Result<_>>()?;
+            Ok(Literal { ty: ElementType::F32, dims: vec![], data: Data::Tuple(parts) })
+        }
+        "get-tuple-element" => {
+            let x = get(env, &ins.operands[0])?;
+            let idx: usize = ins
+                .attrs
+                .get("index")
+                .ok_or_else(|| Error("get-tuple-element missing index".into()))?
+                .parse()
+                .map_err(|_| Error("bad tuple index".into()))?;
+            match &x.data {
+                Data::Tuple(parts) => parts
+                    .get(idx)
+                    .cloned()
+                    .ok_or_else(|| Error("tuple index out of range".into())),
+                _ => err("get-tuple-element on non-tuple"),
+            }
+        }
+        other => err(format!("unsupported HLO opcode '{other}'")),
+    }
+}
+
+fn parse_constant(raw: &str, ty: ElementType, dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    let flat: Vec<&str> = raw
+        .split(|c| c == ',' || c == '{' || c == '}')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if flat.len() != n {
+        return err(format!("constant has {} elements, type wants {n}", flat.len()));
+    }
+    let data = match ty {
+        ElementType::F32 => {
+            let mut v = Vec::with_capacity(n);
+            for s in flat {
+                v.push(match s {
+                    "inf" => f32::INFINITY,
+                    "-inf" => f32::NEG_INFINITY,
+                    "nan" => f32::NAN,
+                    _ => s.parse::<f32>().map_err(|_| Error(format!("bad f32 '{s}'")))?,
+                });
+            }
+            Data::F32(v)
+        }
+        ElementType::S64 => Data::I64(
+            flat.iter()
+                .map(|s| s.parse::<i64>().map_err(|_| Error(format!("bad s64 '{s}'"))))
+                .collect::<Result<_>>()?,
+        ),
+        ElementType::S32 => Data::I32(
+            flat.iter()
+                .map(|s| s.parse::<i32>().map_err(|_| Error(format!("bad s32 '{s}'"))))
+                .collect::<Result<_>>()?,
+        ),
+        ElementType::Pred => Data::Pred(
+            flat.iter()
+                .map(|s| match *s {
+                    "true" => Ok(true),
+                    "false" => Ok(false),
+                    _ => err(format!("bad pred '{s}'")),
+                })
+                .collect::<Result<_>>()?,
+        ),
+    };
+    Ok(lit(ty, dims.to_vec(), data))
+}
+
+fn eval_binary(
+    op: &str,
+    a: &Literal,
+    b: &Literal,
+    out_ty: ElementType,
+    out_dims: Vec<usize>,
+) -> Result<Literal> {
+    if a.dims != b.dims {
+        return err(format!("binary {op}: shape mismatch {:?} vs {:?}", a.dims, b.dims));
+    }
+    let data = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => {
+            let f = |i: usize| -> f32 {
+                let (p, q) = (x[i], y[i]);
+                match op {
+                    "add" => p + q,
+                    "subtract" => p - q,
+                    "multiply" => p * q,
+                    "divide" => p / q,
+                    "maximum" => p.max(q),
+                    "minimum" => p.min(q),
+                    _ => p.powf(q), // "power"
+                }
+            };
+            Data::F32((0..x.len()).map(f).collect())
+        }
+        (Data::I64(x), Data::I64(y)) => {
+            let f = |i: usize| -> Result<i64> {
+                let (p, q) = (x[i], y[i]);
+                Ok(match op {
+                    "add" => p.wrapping_add(q),
+                    "subtract" => p.wrapping_sub(q),
+                    "multiply" => p.wrapping_mul(q),
+                    "divide" => {
+                        if q == 0 {
+                            return err("integer division by zero");
+                        }
+                        p / q
+                    }
+                    "maximum" => p.max(q),
+                    "minimum" => p.min(q),
+                    other => return err(format!("binary {other} unsupported for s64")),
+                })
+            };
+            Data::I64((0..x.len()).map(f).collect::<Result<_>>()?)
+        }
+        (Data::I32(x), Data::I32(y)) => {
+            let f = |i: usize| -> Result<i32> {
+                let (p, q) = (x[i], y[i]);
+                Ok(match op {
+                    "add" => p.wrapping_add(q),
+                    "subtract" => p.wrapping_sub(q),
+                    "multiply" => p.wrapping_mul(q),
+                    "divide" => {
+                        if q == 0 {
+                            return err("integer division by zero");
+                        }
+                        p / q
+                    }
+                    "maximum" => p.max(q),
+                    "minimum" => p.min(q),
+                    other => return err(format!("binary {other} unsupported for s32")),
+                })
+            };
+            Data::I32((0..x.len()).map(f).collect::<Result<_>>()?)
+        }
+        _ => return err(format!("binary {op}: dtype mismatch")),
+    };
+    Ok(lit(out_ty, out_dims, data))
+}
+
+fn eval_unary(op: &str, x: &Literal, out_dims: Vec<usize>) -> Result<Literal> {
+    match &x.data {
+        Data::F32(v) => {
+            let f = |p: f32| -> f32 {
+                match op {
+                    "negate" => -p,
+                    "abs" => p.abs(),
+                    "exponential" => p.exp(),
+                    "log" => p.ln(),
+                    "tanh" => p.tanh(),
+                    "sqrt" => p.sqrt(),
+                    "rsqrt" => 1.0 / p.sqrt(),
+                    "floor" => p.floor(),
+                    // HLO sign: sign(±0) = ±0, sign(nan) = nan.
+                    _ => {
+                        if p > 0.0 {
+                            1.0
+                        } else if p < 0.0 {
+                            -1.0
+                        } else {
+                            p
+                        }
+                    }
+                }
+            };
+            Ok(lit(ElementType::F32, out_dims, Data::F32(v.iter().map(|&p| f(p)).collect())))
+        }
+        Data::I64(v) if op == "negate" => Ok(lit(
+            ElementType::S64,
+            out_dims,
+            Data::I64(v.iter().map(|&p| -p).collect()),
+        )),
+        Data::I64(v) if op == "abs" => Ok(lit(
+            ElementType::S64,
+            out_dims,
+            Data::I64(v.iter().map(|&p| p.abs()).collect()),
+        )),
+        Data::I32(v) if op == "negate" => Ok(lit(
+            ElementType::S32,
+            out_dims,
+            Data::I32(v.iter().map(|&p| -p).collect()),
+        )),
+        _ => err(format!("unary {op}: unsupported dtype {}", x.ty.name())),
+    }
+}
+
+fn eval_convert(x: &Literal, to: ElementType, out_dims: Vec<usize>) -> Result<Literal> {
+    let n = x.element_count();
+    let data = match to {
+        ElementType::F32 => {
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(match &x.data {
+                    Data::F32(d) => d[i],
+                    Data::I64(d) => d[i] as f32,
+                    Data::I32(d) => d[i] as f32,
+                    Data::Pred(d) => d[i] as u8 as f32,
+                    Data::Tuple(_) => return err("convert on tuple"),
+                });
+            }
+            Data::F32(v)
+        }
+        ElementType::S64 => {
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(match &x.data {
+                    Data::F32(d) => d[i] as i64,
+                    Data::I64(d) => d[i],
+                    Data::I32(d) => d[i] as i64,
+                    Data::Pred(d) => d[i] as i64,
+                    Data::Tuple(_) => return err("convert on tuple"),
+                });
+            }
+            Data::I64(v)
+        }
+        ElementType::S32 => {
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(match &x.data {
+                    Data::F32(d) => d[i] as i32,
+                    Data::I64(d) => d[i] as i32,
+                    Data::I32(d) => d[i],
+                    Data::Pred(d) => d[i] as i32,
+                    Data::Tuple(_) => return err("convert on tuple"),
+                });
+            }
+            Data::I32(v)
+        }
+        ElementType::Pred => {
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(nth_as_f64(x, i)? != 0.0);
+            }
+            Data::Pred(v)
+        }
+    };
+    Ok(lit(to, out_dims, data))
+}
+
+/// `broadcast_in_dim`: `mapping[i]` is the output axis operand axis `i`
+/// occupies; unmapped output axes replicate.
+fn eval_broadcast(
+    x: &Literal,
+    mapping: &[usize],
+    out_ty: ElementType,
+    out_dims: Vec<usize>,
+) -> Result<Literal> {
+    if mapping.len() != x.dims.len() {
+        return err("broadcast mapping rank mismatch");
+    }
+    let n: usize = out_dims.iter().product();
+    let in_strides = strides_of(&x.dims);
+    let out_strides = strides_of(&out_dims);
+    let mut src_index = vec![0usize; n];
+    for (oi, s) in src_index.iter_mut().enumerate() {
+        let mut acc = 0usize;
+        for (i, &m) in mapping.iter().enumerate() {
+            let coord = (oi / out_strides[m]) % out_dims[m];
+            acc += coord * in_strides[i];
+        }
+        *s = acc;
+    }
+    let data = match &x.data {
+        Data::F32(v) => Data::F32(src_index.iter().map(|&i| v[i]).collect()),
+        Data::I64(v) => Data::I64(src_index.iter().map(|&i| v[i]).collect()),
+        Data::I32(v) => Data::I32(src_index.iter().map(|&i| v[i]).collect()),
+        Data::Pred(v) => Data::Pred(src_index.iter().map(|&i| v[i]).collect()),
+        Data::Tuple(_) => return err("broadcast on tuple"),
+    };
+    Ok(lit(out_ty, out_dims, data))
+}
+
+/// `transpose`: output axis `i` draws from input axis `perm[i]`.
+fn eval_transpose(
+    x: &Literal,
+    perm: &[usize],
+    out_ty: ElementType,
+    out_dims: Vec<usize>,
+) -> Result<Literal> {
+    if perm.len() != x.dims.len() {
+        return err("transpose perm rank mismatch");
+    }
+    let n = x.element_count();
+    let in_strides = strides_of(&x.dims);
+    let out_strides = strides_of(&out_dims);
+    let mut src_index = vec![0usize; n];
+    for (oi, s) in src_index.iter_mut().enumerate() {
+        let mut acc = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            let coord = (oi / out_strides[i]) % out_dims[i];
+            acc += coord * in_strides[p];
+        }
+        *s = acc;
+    }
+    let data = match &x.data {
+        Data::F32(v) => Data::F32(src_index.iter().map(|&i| v[i]).collect()),
+        Data::I64(v) => Data::I64(src_index.iter().map(|&i| v[i]).collect()),
+        Data::I32(v) => Data::I32(src_index.iter().map(|&i| v[i]).collect()),
+        Data::Pred(v) => Data::Pred(src_index.iter().map(|&i| v[i]).collect()),
+        Data::Tuple(_) => return err("transpose on tuple"),
+    };
+    Ok(lit(out_ty, out_dims, data))
+}
+
+fn eval_iota(ty: ElementType, out_dims: Vec<usize>, axis: usize) -> Result<Literal> {
+    let n: usize = out_dims.iter().product();
+    if axis >= out_dims.len() && n > 1 {
+        return err("iota axis out of range");
+    }
+    let strides = strides_of(&out_dims);
+    let coord = |i: usize| -> usize {
+        if out_dims.is_empty() {
+            0
+        } else {
+            (i / strides[axis]) % out_dims[axis]
+        }
+    };
+    let data = match ty {
+        ElementType::S32 => Data::I32((0..n).map(|i| coord(i) as i32).collect()),
+        ElementType::S64 => Data::I64((0..n).map(|i| coord(i) as i64).collect()),
+        ElementType::F32 => Data::F32((0..n).map(|i| coord(i) as f32).collect()),
+        ElementType::Pred => return err("pred iota unsupported"),
+    };
+    Ok(lit(ty, out_dims, data))
+}
+
+/// Resolve a reduce region to its scalar fold function by its ROOT opcode.
+fn region_fold(module: &HloModule, name: &str) -> Result<fn(f32, f32) -> f32> {
+    let comp = module
+        .computations
+        .get(name)
+        .ok_or_else(|| Error(format!("region '{name}' not found")))?;
+    let root = &comp.instrs[comp.root];
+    Ok(match root.op.as_str() {
+        "add" => |a, b| a + b,
+        "multiply" => |a, b| a * b,
+        "maximum" => |a: f32, b: f32| a.max(b),
+        "minimum" => |a: f32, b: f32| a.min(b),
+        other => return err(format!("unsupported reduce region root '{other}'")),
+    })
+}
+
+fn eval_reduce(
+    x: &Literal,
+    init: &Literal,
+    axes: &[usize],
+    fold: fn(f32, f32) -> f32,
+    out_ty: ElementType,
+    out_dims: Vec<usize>,
+) -> Result<Literal> {
+    let v = want_f32(x)?;
+    let init = want_f32(init)?[0];
+    let n_out: usize = out_dims.iter().product();
+    let kept: Vec<usize> = (0..x.dims.len()).filter(|a| !axes.contains(a)).collect();
+    let in_strides = strides_of(&x.dims);
+    let out_strides = strides_of(&out_dims);
+    let mut out = vec![init; n_out];
+    // Row-major scan over the input keeps the accumulation order
+    // deterministic (and matches the reference interpreter's order).
+    for (ii, &val) in v.iter().enumerate() {
+        let mut oi = 0usize;
+        for (k, &a) in kept.iter().enumerate() {
+            let coord = (ii / in_strides[a]) % x.dims[a];
+            oi += coord * out_strides[k];
+        }
+        out[oi] = fold(out[oi], val);
+    }
+    Ok(lit(out_ty, out_dims, Data::F32(out)))
+}
+
+fn eval_dot(ins: &Instr, a: &Literal, b: &Literal, out_dims: Vec<usize>) -> Result<Literal> {
+    let av = want_f32(a)?;
+    let bv = want_f32(b)?;
+    let lc = parse_int_list(ins.attrs.get("lhs_contracting_dims").map(String::as_str).unwrap_or("{}"))?;
+    let rc = parse_int_list(ins.attrs.get("rhs_contracting_dims").map(String::as_str).unwrap_or("{}"))?;
+    let lb = parse_int_list(ins.attrs.get("lhs_batch_dims").map(String::as_str).unwrap_or("{}"))?;
+    let rb = parse_int_list(ins.attrs.get("rhs_batch_dims").map(String::as_str).unwrap_or("{}"))?;
+    if lc.len() != 1 || rc.len() != 1 || lb.len() > 1 || rb.len() != lb.len() {
+        return err("dot: only single contracting (and at most one batch) dim supported");
+    }
+    match (a.dims.len(), b.dims.len(), lb.len()) {
+        (2, 2, 0) => {
+            // [m,k]·[k,n] with configurable contracted axes.
+            let (lc, rc) = (lc[0], rc[0]);
+            let (m_ax, n_ax) = (1 - lc, 1 - rc);
+            let m = a.dims[m_ax];
+            let k = a.dims[lc];
+            let n = b.dims[n_ax];
+            if b.dims[rc] != k {
+                return err("dot: contracting extent mismatch");
+            }
+            let (sa, sb) = (strides_of(&a.dims), strides_of(&b.dims));
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for p in 0..k {
+                        acc += av[i * sa[m_ax] + p * sa[lc]] * bv[p * sb[rc] + j * sb[n_ax]];
+                    }
+                    out[i * n + j] = acc;
+                }
+            }
+            Ok(lit(ElementType::F32, out_dims, Data::F32(out)))
+        }
+        (3, 3, 1) => {
+            if lb[0] != 0 || rb[0] != 0 || lc[0] != 2 || rc[0] != 1 {
+                return err("dot: unsupported batched layout");
+            }
+            let (bs, m, k) = (a.dims[0], a.dims[1], a.dims[2]);
+            let n = b.dims[2];
+            if b.dims[0] != bs || b.dims[1] != k {
+                return err("dot: batched extent mismatch");
+            }
+            let mut out = vec![0.0f32; bs * m * n];
+            for t in 0..bs {
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0.0f32;
+                        for p in 0..k {
+                            acc += av[(t * m + i) * k + p] * bv[(t * k + p) * n + j];
+                        }
+                        out[(t * m + i) * n + j] = acc;
+                    }
+                }
+            }
+            Ok(lit(ElementType::F32, out_dims, Data::F32(out)))
+        }
+        _ => err("dot: unsupported rank combination"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compile(text: &str) -> PjRtLoadedExecutable {
+        let dir = std::env::temp_dir().join(format!("xla_stub_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!(
+            "m{}.hlo.txt",
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::write(&path, text).unwrap();
+        let proto = HloModuleProto::from_text_file(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let comp = XlaComputation::from_proto(&proto);
+        PjRtClient::cpu().unwrap().compile(&comp).unwrap()
+    }
+
+    fn f32_lit(dims: &[usize], v: Vec<f32>) -> Literal {
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_ne_bytes()).collect();
+        Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, &bytes).unwrap()
+    }
+
+    #[test]
+    fn elementwise_chain() {
+        let exe = compile(
+            "HloModule t, entry_computation_layout={(f32[4]{0})->f32[4]{0}}\n\n\
+             ENTRY main {\n  p0 = f32[4]{0} parameter(0)\n  t = f32[4]{0} tanh(p0)\n  ROOT a = f32[4]{0} add(p0, t)\n}\n",
+        );
+        let x = f32_lit(&[4], vec![0.0, 0.5, -1.0, 2.0]);
+        let out = exe.execute(&[x.clone()]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        for (o, i) in v.iter().zip(x.to_vec::<f32>().unwrap()) {
+            assert!((o - (i + i.tanh())).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn masked_reduce_matches_hand_computation() {
+        let exe = compile(
+            "HloModule m, entry_computation_layout={(f32[2,4]{1,0}, s32[])->f32[2]{0}}\n\n\
+             region_add {\n  ra = f32[] parameter(0)\n  rb = f32[] parameter(1)\n  ROOT rr = f32[] add(ra, rb)\n}\n\n\
+             ENTRY main {\n  p0 = f32[2,4]{1,0} parameter(0)\n  n = s32[] parameter(1)\n  i = s32[2,4]{1,0} iota(), iota_dimension=1\n  nb = s32[2,4]{1,0} broadcast(n), dimensions={}\n  mask = pred[2,4]{1,0} compare(i, nb), direction=LT\n  zero = f32[] constant(0)\n  zb = f32[2,4]{1,0} broadcast(zero), dimensions={}\n  masked = f32[2,4]{1,0} select(mask, p0, zb)\n  init = f32[] constant(0)\n  ROOT r = f32[2]{0} reduce(masked, init), dimensions={1}, to_apply=region_add\n}\n",
+        );
+        let x = f32_lit(&[2, 4], vec![1., 2., 3., 999., 4., 5., 6., 999.]);
+        let n = Literal::scalar(3i32);
+        let out = exe.execute(&[x, n]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn dot_and_batched_dot() {
+        let exe = compile(
+            "HloModule g, entry_computation_layout={(f32[2,3]{1,0}, f32[3,2]{1,0})->f32[2,2]{1,0}}\n\n\
+             ENTRY main {\n  a = f32[2,3]{1,0} parameter(0)\n  b = f32[3,2]{1,0} parameter(1)\n  ROOT d = f32[2,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n",
+        );
+        let a = f32_lit(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = f32_lit(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let out = exe.execute(&[a, b]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![58., 64., 139., 154.]);
+
+        let bexe = compile(
+            "HloModule bg, entry_computation_layout={(f32[2,1,2]{2,1,0}, f32[2,2,1]{2,1,0})->f32[2,1,1]{2,1,0}}\n\n\
+             ENTRY main {\n  a = f32[2,1,2]{2,1,0} parameter(0)\n  b = f32[2,2,1]{2,1,0} parameter(1)\n  ROOT d = f32[2,1,1]{2,1,0} dot(a, b), lhs_batch_dims={0}, rhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_contracting_dims={1}\n}\n",
+        );
+        let a = f32_lit(&[2, 1, 2], vec![1., 2., 3., 4.]);
+        let b = f32_lit(&[2, 2, 1], vec![1., 1., 2., 2.]);
+        let out = bexe.execute(&[a, b]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![3., 14.]);
+    }
+
+    #[test]
+    fn execute_b_keeps_values_on_device() {
+        let exe = compile(
+            "HloModule t, entry_computation_layout={(f32[2]{0})->f32[2]{0}}\n\n\
+             ENTRY main {\n  p0 = f32[2]{0} parameter(0)\n  ROOT n = f32[2]{0} negate(p0)\n}\n",
+        );
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client.buffer_from_host_literal(&f32_lit(&[2], vec![1.0, -2.0])).unwrap();
+        let once = exe.execute_b(&[&buf]).unwrap();
+        let twice = exe.execute_b(&[&once[0][0]]).unwrap();
+        let v = twice[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("xla_stub_garbage_{}.txt", std::process::id()));
+        std::fs::write(&path, "not hlo at all").unwrap();
+        assert!(HloModuleProto::from_text_file(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn transpose_and_broadcast() {
+        let exe = compile(
+            "HloModule tb, entry_computation_layout={(f32[2,3]{1,0})->f32[3,2]{1,0}}\n\n\
+             ENTRY main {\n  p0 = f32[2,3]{1,0} parameter(0)\n  ROOT t = f32[3,2]{1,0} transpose(p0), dimensions={1,0}\n}\n",
+        );
+        let a = f32_lit(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let out = exe.execute(&[a]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1., 4., 2., 5., 3., 6.]);
+
+        let bexe = compile(
+            "HloModule b, entry_computation_layout={(f32[3]{0})->f32[2,3]{1,0}}\n\n\
+             ENTRY main {\n  p0 = f32[3]{0} parameter(0)\n  ROOT b = f32[2,3]{1,0} broadcast(p0), dimensions={1}\n}\n",
+        );
+        let a = f32_lit(&[3], vec![1., 2., 3.]);
+        let out = bexe.execute(&[a]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1., 2., 3., 1., 2., 3.]);
+    }
+}
