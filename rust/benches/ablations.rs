@@ -6,7 +6,9 @@
 //!     configuration vs per-shape compilation);
 //!  4. pooled (cached) allocator on/off (§4.2.2);
 //!  5. launch-plan cache + device-resident replay on/off (the per-request
-//!     host-overhead tier; see docs/runtime.md).
+//!     host-overhead tier; see docs/runtime.md);
+//!  6. persistent device-weight cache on/off (GEMM weights upload once per
+//!     program vs per call — the h2d column isolates the saved traffic).
 
 use disc::bench::Table;
 use disc::codegen::BucketPolicy;
@@ -64,17 +66,25 @@ fn main() {
         },
         Case {
             name: "no launch-plan cache",
-            opts: CompileOptions { plan_cache: false, device_resident: false, ..base.clone() },
+            opts: CompileOptions {
+                plan_cache: false,
+                device_resident: false,
+                ..base.clone()
+            },
         },
         Case {
             name: "plans, host-resident",
             opts: CompileOptions { device_resident: false, ..base.clone() },
         },
+        Case {
+            name: "no device weight cache",
+            opts: CompileOptions { weight_cache: false, ..base.clone() },
+        },
     ];
 
     println!("=== Ablations: transformer, {REQUESTS} dynamic-length requests ===\n");
     let mut t = Table::new(&[
-        "variant", "groups", "mem-kernels", "compiles", "pad-copies", "pool-hit%", "wall",
+        "variant", "groups", "mem-kernels", "compiles", "pad-copies", "pool-hit%", "h2d", "wall",
     ]);
     for case in cases {
         let module = disc::bridge::lower(&w.graph).expect("lower");
@@ -97,6 +107,7 @@ fn main() {
             m.compile_events.to_string(),
             m.pad_copies.to_string(),
             hit,
+            disc::util::fmt_bytes(m.h2d_bytes as usize),
             format!("{:.2?}", report.wall),
         ]);
     }
@@ -104,6 +115,7 @@ fn main() {
     println!(
         "\nReading guide: constraints widen fusion (fewer mem-kernels); \
          exact buckets recompile per shape (compile column); pooling trades \
-         allocator traffic for reuse."
+         allocator traffic for reuse; the weight-cache row re-uploads GEMM \
+         weights every call (h2d column)."
     );
 }

@@ -8,6 +8,12 @@
 //! that all outputs share a shape would be lost, so the bridge injects
 //! dimension-equality constraints across the outputs and against the
 //! unsplit input axes. The fusion planner then sees through them.
+//!
+//! Lowering is the *only* producer of DHLO in the serving path (workload
+//! graphs and `disc import`ed JSON both come through here), which is what
+//! makes the collected constraint set trustworthy downstream: `SymEnv`
+//! re-checks it per request at binding time. Module map:
+//! `docs/architecture.md`.
 
 use crate::dhlo::{Builder, Literal, Module, ValueId};
 use crate::graph::{GOp, Graph};

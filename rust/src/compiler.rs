@@ -53,6 +53,9 @@ pub struct CompileOptions {
     pub plan_cache: bool,
     /// Keep fused/GEMM results device-resident during plan replays.
     pub device_resident: bool,
+    /// Serve static GEMM weights from the library's persistent device-side
+    /// weight cache (upload once per program; see docs/runtime.md).
+    pub weight_cache: bool,
 }
 
 impl CompileOptions {
@@ -65,6 +68,7 @@ impl CompileOptions {
             pooled_buffers: true,
             plan_cache: true,
             device_resident: true,
+            weight_cache: true,
         }
     }
 }
@@ -210,6 +214,7 @@ impl DiscCompiler {
                         pooled_buffers: opts.pooled_buffers,
                         plan_cache: opts.plan_cache,
                         device_resident: opts.device_resident,
+                        weight_cache: opts.weight_cache,
                     },
                 );
                 Backend::Program { exec, prog }

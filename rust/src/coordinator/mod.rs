@@ -7,6 +7,15 @@
 //! PJRT client and kernel caches are deliberately not shared across
 //! threads, as in the paper's per-stream deployment), and reports latency
 //! percentiles, throughput, and the accumulated metric counters.
+//!
+//! Two drive modes: `serve_closed_loop` (next request issues when the
+//! previous completes — the benches' steady-state measurement) and
+//! `serve_open_loop` (requests arrive at a fixed rate regardless of
+//! completion, exposing queueing under load). Both aggregate `RunMetrics`
+//! with its `+=` semantics, so plan-cache, weight-cache, and transfer
+//! counters read as stream totals. See `docs/architecture.md` for where
+//! the coordinator sits in the pipeline and `docs/runtime.md` for the
+//! executor tiers underneath it.
 
 use crate::compiler::CompiledModel;
 use crate::runtime::metrics::RunMetrics;

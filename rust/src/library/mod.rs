@@ -10,15 +10,37 @@
 //! separately in the stats). Pre-generated AOT artifacts (from
 //! `python/compile/aot.py`) can be registered on top and win selection,
 //! mirroring the paper's hand-tuned per-shape entries.
+//!
+//! The library is a first-class device-resident citizen (see
+//! `docs/runtime.md`):
+//!
+//! * [`GemmLibrary::matmul_device`] accepts any mix of host tensors,
+//!   device-resident buffers ([`GemmSrc::Dev`], chained straight from a
+//!   fused kernel or an earlier GEMM), and cached weights, and leaves the
+//!   result on device. Bucket adaptation of device operands happens *on
+//!   device* through a compiled pad+mask "prepare" kernel — no host
+//!   round-trip.
+//! * A persistent **weight cache** ([`GemmLibrary::weight_device`]) keeps
+//!   static RHS operands (graph constants, entry parameters) resident on
+//!   device across calls, requests, and plan replays: each weight is
+//!   padded and uploaded once per program, then served by reference.
+//!   Installed launch plans *pin* the weights they reference; unpinned
+//!   entries are evicted in LRU order whenever residency exceeds
+//!   [`GemmLibrary::max_weight_bytes`].
+//!
+//! All host↔device payloads the library moves are accounted in
+//! [`LibraryStats`] (`h2d_bytes`/`d2h_bytes`), which the executor folds
+//! into `RunMetrics` — the bench tables and the metrics therefore agree on
+//! library transfer traffic.
 
 use crate::codegen::BucketPolicy;
-use crate::dhlo::DType;
+use crate::dhlo::{DType, ValueId};
 use crate::runtime::buffers::BufferPool;
 use crate::runtime::executor::{crop_box, pad_box};
 use crate::runtime::pjrt::{Device, DeviceTensor, Executable};
-use crate::runtime::tensor::Tensor;
+use crate::runtime::tensor::{Data, Tensor};
 use anyhow::{ensure, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::time::Duration;
 
@@ -31,14 +53,82 @@ pub struct GemmKey {
     pub n: usize,
 }
 
+impl GemmKey {
+    /// Entry extents of the left operand.
+    pub fn lhs_dims(&self) -> Vec<usize> {
+        if self.batch == 0 {
+            vec![self.m, self.k]
+        } else {
+            vec![self.batch, self.m, self.k]
+        }
+    }
+
+    /// Entry extents of the right operand (the shape a cached weight is
+    /// padded to).
+    pub fn rhs_dims(&self) -> Vec<usize> {
+        if self.batch == 0 {
+            vec![self.k, self.n]
+        } else {
+            vec![self.batch, self.k, self.n]
+        }
+    }
+
+    /// Entry extents of the result.
+    pub fn out_dims(&self) -> Vec<usize> {
+        if self.batch == 0 {
+            vec![self.m, self.n]
+        } else {
+            vec![self.batch, self.m, self.n]
+        }
+    }
+}
+
+/// Identity of a cacheable weight: which program, which value slot. The
+/// executor derives it from the generated flow; the library only needs it
+/// to be stable across requests of the same compiled program.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct WeightKey {
+    pub program: u64,
+    pub value: ValueId,
+}
+
+/// One resident weight: the padded device buffer plus the validation
+/// metadata that keeps Param-backed weights honest.
+struct WeightEntry {
+    dev: Rc<DeviceTensor>,
+    /// Fingerprint of the *source* tensor (dims + raw bits); checked per
+    /// call for Param weights, whose contents could change between
+    /// requests even at a fixed shape.
+    fingerprint: u64,
+    /// Source (unpadded) dims, for a cheap shape-change reject.
+    src_dims: Vec<usize>,
+    /// Number of installed launch plans referencing this entry. Pinned
+    /// entries are never evicted by the byte budget.
+    pins: usize,
+    bytes: u64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct LibraryStats {
     pub calls: u64,
     pub entries_built: u64,
+    /// Device-side bucket-adapter ("prepare") kernels compiled.
+    pub prep_built: u64,
     pub build_time: Duration,
     pub exec_time: Duration,
     pub flops: u64,
     pub pregen_hits: u64,
+    /// Host↔device payload the library moved (uploads of operands and
+    /// weights, readbacks of results — including the implicit marshalling
+    /// of the host execution path, which transfers every operand in and
+    /// the result out on real PJRT).
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    /// Weight-cache behavior: a hit serves the device-resident buffer by
+    /// reference (zero transfer); a miss pads + uploads.
+    pub weight_hits: u64,
+    pub weight_misses: u64,
+    pub weight_evictions: u64,
 }
 
 /// The kernel library.
@@ -56,7 +146,78 @@ pub struct GemmLibrary {
     pub m_bucket: BucketPolicy,
     /// Pool for padded-operand scratch (the cached allocator of §4.2.2).
     pool: BufferPool,
+    /// Persistent device-resident weights (see module docs).
+    weights: HashMap<WeightKey, WeightEntry>,
+    /// Insertion/use order of `weights`, for LRU eviction of unpinned
+    /// entries under the byte budget.
+    weight_lru: VecDeque<WeightKey>,
+    /// Byte budget for resident weights. Pinned entries (referenced by an
+    /// installed launch plan) never count against evictability; the
+    /// default is effectively unbounded — serving processes size it from
+    /// device memory.
+    pub max_weight_bytes: u64,
+    /// Device-side bucket adapters: mask actual lanes + pad/crop to the
+    /// entry extents, keyed by `(src_dims, dst_dims)`.
+    prep: HashMap<(Vec<usize>, Vec<usize>), Rc<Executable>>,
+    /// Pre-uploaded s32 extent scalars fed to prepare kernels (uploaded
+    /// once per distinct extent value, ~4 bytes each).
+    scalars: HashMap<i32, Rc<DeviceTensor>>,
     pub stats: LibraryStats,
+}
+
+/// One GEMM operand, wherever it currently lives.
+pub enum GemmSrc<'a> {
+    /// Host tensor at actual extents: padded host-side if needed, then
+    /// uploaded (the classic path).
+    Host(&'a Tensor),
+    /// Device-resident buffer at bucket extents with `actual` valid lanes.
+    /// `zero_padded` asserts the pad lanes are exact zeros (true for GEMM
+    /// results, false for fused-kernel outputs, whose pad lanes are
+    /// garbage); non-zero-padded or bucket-mismatched operands are adapted
+    /// on device by a prepare kernel.
+    Dev { dt: &'a DeviceTensor, actual: &'a [usize], zero_padded: bool },
+    /// A cached weight, already padded to the entry extents and exactly
+    /// zero-padded (from [`GemmLibrary::weight_device`]).
+    Weight { dt: Rc<DeviceTensor>, actual: &'a [usize] },
+}
+
+impl GemmSrc<'_> {
+    fn actual_dims(&self) -> &[usize] {
+        match self {
+            GemmSrc::Host(t) => &t.dims,
+            GemmSrc::Dev { actual, .. } => actual,
+            GemmSrc::Weight { actual, .. } => actual,
+        }
+    }
+
+    /// Bytes of the operand at its actual extents (f32 device payloads;
+    /// used for the executor's `lib_bytes` modeling).
+    pub fn actual_byte_size(&self) -> u64 {
+        match self {
+            GemmSrc::Host(t) => t.byte_size() as u64,
+            GemmSrc::Dev { actual, .. } | GemmSrc::Weight { actual, .. } => {
+                (actual.iter().product::<usize>() * 4) as u64
+            }
+        }
+    }
+}
+
+/// A marshalled device operand: borrowed when it can be consumed in place,
+/// owned/shared when marshalling produced a fresh buffer.
+enum Marshalled<'a> {
+    Owned(DeviceTensor),
+    Shared(Rc<DeviceTensor>),
+    Borrowed(&'a DeviceTensor),
+}
+
+impl Marshalled<'_> {
+    fn get(&self) -> &DeviceTensor {
+        match self {
+            Marshalled::Owned(d) => d,
+            Marshalled::Shared(d) => d,
+            Marshalled::Borrowed(d) => d,
+        }
+    }
 }
 
 impl GemmLibrary {
@@ -67,6 +228,11 @@ impl GemmLibrary {
             pregen: HashMap::new(),
             m_bucket: BucketPolicy::MultipleOf(16),
             pool: BufferPool::new(),
+            weights: HashMap::new(),
+            weight_lru: VecDeque::new(),
+            max_weight_bytes: u64::MAX,
+            prep: HashMap::new(),
+            scalars: HashMap::new(),
             stats: LibraryStats::default(),
         }
     }
@@ -128,19 +294,24 @@ impl GemmLibrary {
         Ok(e)
     }
 
-    /// The concrete `(m, k, n)` problem plus batch count of `a · b`.
-    fn problem_of(a: &Tensor, b: &Tensor) -> Result<((usize, usize, usize), usize)> {
-        match (a.rank(), b.rank()) {
+    /// The concrete `(m, k, n)` problem plus batch count of `a · b`, from
+    /// actual operand dims.
+    fn problem_of_dims(a: &[usize], b: &[usize]) -> Result<((usize, usize, usize), usize)> {
+        match (a.len(), b.len()) {
             (2, 2) => {
-                ensure!(a.dims[1] == b.dims[0], "gemm: contracting mismatch");
-                Ok(((a.dims[0], a.dims[1], b.dims[1]), 0usize))
+                ensure!(a[1] == b[0], "gemm: contracting mismatch");
+                Ok(((a[0], a[1], b[1]), 0usize))
             }
             (3, 3) => {
-                ensure!(a.dims[0] == b.dims[0] && a.dims[2] == b.dims[1], "bgemm mismatch");
-                Ok(((a.dims[1], a.dims[2], b.dims[2]), a.dims[0]))
+                ensure!(a[0] == b[0] && a[2] == b[1], "bgemm mismatch");
+                Ok(((a[1], a[2], b[2]), a[0]))
             }
             (ra, rb) => anyhow::bail!("library matmul: ranks {ra}x{rb}"),
         }
+    }
+
+    fn problem_of(a: &Tensor, b: &Tensor) -> Result<((usize, usize, usize), usize)> {
+        Self::problem_of_dims(&a.dims, &b.dims)
     }
 
     /// Resolve the library entry key for a problem: exact pre-generated
@@ -208,7 +379,7 @@ impl GemmLibrary {
     /// Return pooled pad scratch and bump the per-call stats.
     fn finish_call(&mut self, pads: [Option<Tensor>; 2], batch: usize, flops_mkn: usize) {
         for t in pads.into_iter().flatten() {
-            if let crate::runtime::tensor::Data::F32(v) = t.data {
+            if let Data::F32(v) = t.data {
                 if v.capacity() > 0 {
                     self.pool.free_f32(v);
                 }
@@ -219,14 +390,20 @@ impl GemmLibrary {
     }
 
     /// Execute with a pre-resolved entry key (the launch-plan replay path:
-    /// no shape derivation, no pregen probe, no bucket math).
+    /// no shape derivation, no pregen probe, no bucket math). Host in, host
+    /// out; the implicit operand/result marshalling is accounted as
+    /// transfer traffic (it is, on real PJRT).
     pub fn matmul_with_key(&mut self, a: &Tensor, b: &Tensor, key: GemmKey) -> Result<Tensor> {
         let ((m, k, n), batch) = Self::problem_of(a, b)?;
         let exe = self.entry_for(key)?;
         let t_call = std::time::Instant::now();
         let (a_pad, b_pad, out_dims) = Self::pad_for_entry(&mut self.pool, a, b, key, batch)?;
         let args = [a_pad.as_ref().unwrap_or(a), b_pad.as_ref().unwrap_or(b)];
+        for t in &args {
+            self.stats.h2d_bytes += t.byte_size() as u64;
+        }
         let out = exe.run(&args, &out_dims, DType::F32)?;
+        self.stats.d2h_bytes += out.byte_size() as u64;
         self.finish_call([a_pad, b_pad], batch, m * k * n);
         let result = if (key.m, key.n) == (m, n) {
             Ok(out)
@@ -239,32 +416,310 @@ impl GemmLibrary {
         result
     }
 
-    /// Execute with a pre-resolved key, leaving the (bucket-shaped) result
-    /// on device. Returns the device tensor plus the *actual* output dims.
+    /// Execute with a pre-resolved key over operands wherever they live,
+    /// leaving the (bucket-shaped) result on device. Returns the device
+    /// tensor plus the *actual* output dims.
     ///
-    /// The pad region of the result is exact zeros (zero-padded operands:
-    /// every padded row/column of the product is a sum of zero products),
-    /// so downstream consumers may read the buffer directly when their
-    /// bucket shape matches — including other GEMMs contracting over the
-    /// padded axis.
-    pub fn matmul_to_device(
+    /// The pad region of the result is exact zeros (all marshalled
+    /// operands are zero-padded: host pads, prepare-kernel outputs, and
+    /// cached weights alike), so downstream consumers may read the buffer
+    /// directly when their bucket shape matches — including other GEMMs
+    /// contracting over the padded axis.
+    pub fn matmul_device(
         &mut self,
-        a: &Tensor,
-        b: &Tensor,
+        a: GemmSrc<'_>,
+        b: GemmSrc<'_>,
         key: GemmKey,
-        device: &Device,
     ) -> Result<(DeviceTensor, Vec<usize>)> {
-        let ((m, k, n), batch) = Self::problem_of(a, b)?;
+        let ((m, k, n), batch) = Self::problem_of_dims(a.actual_dims(), b.actual_dims())?;
         let exe = self.entry_for(key)?;
         let t_call = std::time::Instant::now();
-        let (a_pad, b_pad, out_dims) = Self::pad_for_entry(&mut self.pool, a, b, key, batch)?;
-        let da = device.h2d(a_pad.as_ref().unwrap_or(a))?;
-        let db = device.h2d(b_pad.as_ref().unwrap_or(b))?;
-        let out = exe.run_on_device(&[&da, &db], &out_dims, DType::F32)?;
-        self.finish_call([a_pad, b_pad], batch, m * k * n);
-        self.stats.exec_time += t_call.elapsed();
+        let build0 = self.stats.build_time;
+        let da = self.marshal(a, &key.lhs_dims())?;
+        let db = self.marshal(b, &key.rhs_dims())?;
+        let out = exe.run_on_device(&[da.get(), db.get()], &key.out_dims(), DType::F32)?;
+        drop((da, db));
+        self.stats.calls += 1;
+        self.stats.flops += (2 * batch.max(1) * m * k * n) as u64;
+        // Marshalling may compile a prepare kernel; that is one-time build
+        // cost (already in build_time), not execution time.
+        self.stats.exec_time +=
+            t_call.elapsed().saturating_sub(self.stats.build_time - build0);
         let actual = if batch == 0 { vec![m, n] } else { vec![batch, m, n] };
         Ok((out, actual))
+    }
+
+    /// Pad a host tensor to `want` (pool-backed scratch) and upload it,
+    /// with the transfer accounted. The single implementation behind both
+    /// host-operand marshalling and weight uploads.
+    fn pad_upload(&mut self, t: &Tensor, want: &[usize]) -> Result<DeviceTensor> {
+        ensure!(t.rank() == want.len(), "gemm operand rank mismatch");
+        let padded =
+            if t.dims == want { None } else { Some(pad_box(t, want, Some(&mut self.pool))?) };
+        let up = padded.as_ref().unwrap_or(t);
+        let dt = self.device.h2d(up)?;
+        self.stats.h2d_bytes += up.byte_size() as u64;
+        if let Some(p) = padded {
+            if let Data::F32(v) = p.data {
+                if v.capacity() > 0 {
+                    self.pool.free_f32(v);
+                }
+            }
+        }
+        Ok(dt)
+    }
+
+    /// Bring one operand to the entry extents on device.
+    fn marshal<'a>(&mut self, src: GemmSrc<'a>, want: &[usize]) -> Result<Marshalled<'a>> {
+        match src {
+            GemmSrc::Host(t) => self.pad_upload(t, want).map(Marshalled::Owned),
+            GemmSrc::Dev { dt, actual, zero_padded } => {
+                if dt.dims == want && zero_padded {
+                    Ok(Marshalled::Borrowed(dt))
+                } else {
+                    self.prepare_on_device(dt, actual, want).map(Marshalled::Owned)
+                }
+            }
+            GemmSrc::Weight { dt, .. } => {
+                ensure!(dt.dims == want, "cached weight extents diverged from entry");
+                Ok(Marshalled::Shared(dt))
+            }
+        }
+    }
+
+    /// Device-side bucket adaptation: zero every lane outside the `actual`
+    /// box (fused-kernel pad lanes are garbage) and grow/shrink to the
+    /// entry extents — one compiled kernel per `(src, dst)` bucket pair,
+    /// extent scalars passed as pre-uploaded device buffers. No host
+    /// round-trip, no payload transfer.
+    fn prepare_on_device(
+        &mut self,
+        dt: &DeviceTensor,
+        actual: &[usize],
+        want: &[usize],
+    ) -> Result<DeviceTensor> {
+        ensure!(
+            dt.dims.len() == want.len() && actual.len() == want.len(),
+            "gemm prepare rank mismatch"
+        );
+        let exe = self.prep_entry(&dt.dims, want)?;
+        let mut scalars: Vec<Rc<DeviceTensor>> = Vec::with_capacity(actual.len());
+        for &e in actual {
+            scalars.push(self.scalar_i32(e as i32)?);
+        }
+        let mut args: Vec<&DeviceTensor> = Vec::with_capacity(1 + scalars.len());
+        args.push(dt);
+        for s in &scalars {
+            args.push(s);
+        }
+        exe.run_on_device(&args, want, DType::F32)
+    }
+
+    /// HLO for a prepare kernel: `pad` to the destination bucket, then mask
+    /// lanes `>= actual` to zero via iota/compare/select.
+    fn prep_hlo(src: &[usize], dst: &[usize]) -> String {
+        use std::fmt::Write as _;
+        let rank = src.len();
+        let dims = |d: &[usize]| {
+            d.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        };
+        let layout = (0..rank).rev().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+        let sty = format!("f32[{}]{{{layout}}}", dims(src));
+        let dty = format!("f32[{}]{{{layout}}}", dims(dst));
+        let ity = format!("s32[{}]{{{layout}}}", dims(dst));
+        let pty = format!("pred[{}]{{{layout}}}", dims(dst));
+        let mut s = String::new();
+        let scalar_params =
+            (0..rank).map(|_| "s32[]".to_string()).collect::<Vec<_>>().join(", ");
+        let _ = write!(
+            s,
+            "HloModule gemm_prep, entry_computation_layout={{({sty}, {scalar_params})->{dty}}}\n\n\
+             ENTRY main {{\n  x = {sty} parameter(0)\n"
+        );
+        for ax in 0..rank {
+            let _ = write!(s, "  e{ax} = s32[] parameter({})\n", ax + 1);
+        }
+        let _ = write!(s, "  zero = f32[] constant(0)\n");
+        let source = if src == dst {
+            "x".to_string()
+        } else {
+            let padding = (0..rank)
+                .map(|ax| format!("0_{}", dst[ax] as i64 - src[ax] as i64))
+                .collect::<Vec<_>>()
+                .join("x");
+            let _ = write!(s, "  xp = {dty} pad(x, zero), padding={padding}\n");
+            "xp".to_string()
+        };
+        for ax in 0..rank {
+            let _ = write!(s, "  i{ax} = {ity} iota(), iota_dimension={ax}\n");
+            let _ = write!(s, "  b{ax} = {ity} broadcast(e{ax}), dimensions={{}}\n");
+            let _ = write!(s, "  m{ax} = {pty} compare(i{ax}, b{ax}), direction=LT\n");
+        }
+        let mut mask = "m0".to_string();
+        for ax in 1..rank {
+            let next = format!("ma{ax}");
+            let _ = write!(s, "  {next} = {pty} and({mask}, m{ax})\n");
+            mask = next;
+        }
+        let _ = write!(s, "  zb = {dty} broadcast(zero), dimensions={{}}\n");
+        let _ = write!(s, "  ROOT out = {dty} select({mask}, {source}, zb)\n}}\n");
+        s
+    }
+
+    fn prep_entry(&mut self, src: &[usize], dst: &[usize]) -> Result<Rc<Executable>> {
+        let key = (src.to_vec(), dst.to_vec());
+        if let Some(e) = self.prep.get(&key) {
+            return Ok(e.clone());
+        }
+        let hlo = Self::prep_hlo(src, dst);
+        let name = format!(
+            "gemm_prep_{}_to_{}",
+            src.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x"),
+            dst.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x")
+        );
+        let exe = self.device.compile_hlo_text_named(&name, &hlo)?;
+        self.stats.prep_built += 1;
+        self.stats.build_time += exe.compile_time;
+        let e = Rc::new(exe);
+        self.prep.insert(key, e.clone());
+        Ok(e)
+    }
+
+    fn scalar_i32(&mut self, v: i32) -> Result<Rc<DeviceTensor>> {
+        if let Some(s) = self.scalars.get(&v) {
+            return Ok(s.clone());
+        }
+        let t = Tensor::i32(&[], vec![v]);
+        let dt = Rc::new(self.device.h2d(&t)?);
+        self.stats.h2d_bytes += t.byte_size() as u64;
+        self.scalars.insert(v, dt.clone());
+        Ok(dt)
+    }
+
+    /// Read a device-resident library result back to the host, cropped to
+    /// its actual extents (transfer accounted here, not at the caller).
+    pub fn readback(&mut self, dt: &DeviceTensor, actual: &[usize]) -> Result<Tensor> {
+        let full = self.device.d2h(dt)?;
+        self.stats.d2h_bytes += full.byte_size() as u64;
+        if full.dims == actual {
+            Ok(full)
+        } else {
+            crop_box(&full, actual)
+        }
+    }
+
+    // --- persistent weight cache ---------------------------------------
+
+    /// Fetch (or upload) the device-resident copy of a weight, padded to
+    /// `pad_dims`. `validate` re-fingerprints the source per call (Param
+    /// weights: same shape, possibly new contents); constants skip it.
+    ///
+    /// The Param tradeoff is deliberate: serving weights are routinely
+    /// passed as parameters with stable contents, so the per-call O(bytes)
+    /// host hash replaces a per-call O(bytes) *transfer*. A Param RHS that
+    /// genuinely changes every request (an activation·activation dot)
+    /// degrades to hash+upload per call — no worse than the upload-only
+    /// path it replaced — and its single stale entry stays bounded by the
+    /// pin/budget machinery like any other.
+    pub fn weight_device(
+        &mut self,
+        key: WeightKey,
+        src: &Tensor,
+        pad_dims: &[usize],
+        validate: bool,
+    ) -> Result<Rc<DeviceTensor>> {
+        let fp = if validate { Some(Self::fingerprint(src)) } else { None };
+        if let Some(e) = self.weights.get(&key) {
+            if e.dev.dims == pad_dims
+                && e.src_dims == src.dims
+                && fp.map_or(true, |f| f == e.fingerprint)
+            {
+                self.stats.weight_hits += 1;
+                let dev = e.dev.clone();
+                // Refresh recency so the budget evicts cold entries first.
+                self.weight_lru.retain(|k| k != &key);
+                self.weight_lru.push_back(key);
+                return Ok(dev);
+            }
+        }
+        self.stats.weight_misses += 1;
+        let dev = Rc::new(self.pad_upload(src, pad_dims)?);
+        let bytes = dev.byte_size() as u64;
+        let fp = fp.unwrap_or_else(|| Self::fingerprint(src));
+        let pins = self.weights.remove(&key).map(|e| e.pins).unwrap_or(0);
+        self.weights.insert(
+            key.clone(),
+            WeightEntry { dev: dev.clone(), fingerprint: fp, src_dims: src.dims.clone(), pins, bytes },
+        );
+        self.weight_lru.retain(|k| k != &key);
+        self.weight_lru.push_back(key);
+        self.enforce_weight_budget();
+        Ok(dev)
+    }
+
+    /// A launch plan referencing this weight was installed: protect the
+    /// entry from budget eviction while the plan is cached. Returns
+    /// whether a pin was actually taken — a missing entry (already
+    /// budget-evicted) is fine, the next `weight_device` call re-uploads,
+    /// but the caller must then *not* issue a matching unpin (it would
+    /// steal a pin owned by another live plan).
+    #[must_use]
+    pub fn pin_weight(&mut self, key: &WeightKey) -> bool {
+        match self.weights.get_mut(key) {
+            Some(e) => {
+                e.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The plan cache dropped a plan referencing this weight; entries left
+    /// unpinned become evictable when residency exceeds the budget.
+    pub fn unpin_weight(&mut self, key: &WeightKey) {
+        if let Some(e) = self.weights.get_mut(key) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+        self.enforce_weight_budget();
+    }
+
+    /// Bytes of weights currently resident on device.
+    pub fn weight_resident_bytes(&self) -> u64 {
+        self.weights.values().map(|e| e.bytes).sum()
+    }
+
+    fn enforce_weight_budget(&mut self) {
+        while self.weight_resident_bytes() > self.max_weight_bytes {
+            let evictable = self
+                .weight_lru
+                .iter()
+                .position(|k| self.weights.get(k).map_or(true, |e| e.pins == 0));
+            let Some(pos) = evictable else { break };
+            let k = self.weight_lru.remove(pos).unwrap();
+            if self.weights.remove(&k).is_some() {
+                self.stats.weight_evictions += 1;
+            }
+        }
+    }
+
+    /// FNV-1a style fingerprint over dims + raw element bits.
+    fn fingerprint(t: &Tensor) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u64| {
+            h ^= b;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        eat(t.dims.len() as u64);
+        for &d in &t.dims {
+            eat(d as u64);
+        }
+        match &t.data {
+            Data::F32(v) => v.iter().for_each(|x| eat(x.to_bits() as u64)),
+            Data::I64(v) => v.iter().for_each(|&x| eat(x as u64)),
+            Data::I32(v) => v.iter().for_each(|&x| eat(x as u32 as u64)),
+            Data::Pred(v) => v.iter().for_each(|&x| eat(x as u64)),
+        }
+        h
     }
 }
 
@@ -282,6 +737,8 @@ mod tests {
         assert_eq!(out.as_f32().unwrap(), &[58., 64., 139., 154.]);
         assert_eq!(lib.stats.calls, 1);
         assert_eq!(lib.stats.flops, 2 * 2 * 3 * 2);
+        assert!(lib.stats.h2d_bytes > 0, "host path transfers are accounted");
+        assert!(lib.stats.d2h_bytes > 0);
     }
 
     #[test]
@@ -305,5 +762,163 @@ mod tests {
         lib.matmul(&a, &b).unwrap();
         assert_eq!(lib.stats.entries_built, 1);
         assert_eq!(lib.stats.calls, 2);
+    }
+
+    #[test]
+    fn device_path_with_cached_weight_bit_matches_host_path() {
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(dev.clone());
+        let a = Tensor::f32(&[3, 5], (0..15).map(|i| 0.1 * i as f32).collect());
+        let w = Tensor::f32(&[5, 4], (0..20).map(|i| 0.05 * i as f32 - 0.3).collect());
+        let key = lib.key_for(&a, &w).unwrap();
+        let host = lib.matmul_with_key(&a, &w, key).unwrap();
+
+        let wk = WeightKey { program: 1, value: 7 };
+        let wdev = lib.weight_device(wk.clone(), &w, &key.rhs_dims(), false).unwrap();
+        let (out, actual) = lib
+            .matmul_device(
+                GemmSrc::Host(&a),
+                GemmSrc::Weight { dt: wdev, actual: &w.dims },
+                key,
+            )
+            .unwrap();
+        let back = lib.readback(&out, &actual).unwrap();
+        assert_eq!(back, host, "device path must be bit-exact vs host path");
+    }
+
+    #[test]
+    fn weights_upload_once_and_validate_on_content_change() {
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(dev);
+        let w = Tensor::f32(&[4, 4], vec![0.5; 16]);
+        let wk = WeightKey { program: 9, value: 3 };
+        let pad = vec![16usize, 16];
+        let h2d0 = lib.stats.h2d_bytes;
+        lib.weight_device(wk.clone(), &w, &pad, true).unwrap();
+        assert_eq!(lib.stats.weight_misses, 1);
+        let h2d_after_first = lib.stats.h2d_bytes;
+        assert!(h2d_after_first > h2d0);
+        // Same contents: served by reference, zero transfer.
+        lib.weight_device(wk.clone(), &w, &pad, true).unwrap();
+        lib.weight_device(wk.clone(), &w, &pad, true).unwrap();
+        assert_eq!(lib.stats.weight_hits, 2);
+        assert_eq!(lib.stats.h2d_bytes, h2d_after_first);
+        // Changed contents at the same shape: fingerprint rejects, re-upload.
+        let w2 = Tensor::f32(&[4, 4], vec![0.25; 16]);
+        lib.weight_device(wk, &w2, &pad, true).unwrap();
+        assert_eq!(lib.stats.weight_misses, 2);
+        assert!(lib.stats.h2d_bytes > h2d_after_first);
+    }
+
+    #[test]
+    fn weight_budget_evicts_unpinned_lru_only() {
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(dev);
+        let w = Tensor::f32(&[2, 2], vec![1.; 4]);
+        let ka = WeightKey { program: 1, value: 1 };
+        let kb = WeightKey { program: 1, value: 2 };
+        lib.weight_device(ka.clone(), &w, &[2, 2], false).unwrap();
+        assert!(lib.pin_weight(&ka), "resident entry must accept the pin");
+        assert_eq!(lib.weight_resident_bytes(), 16);
+        // Tighten the budget to zero: ka is pinned and must survive every
+        // later enforcement point.
+        lib.max_weight_bytes = 0;
+        lib.weight_device(kb.clone(), &w, &[2, 2], false).unwrap();
+        // kb is unpinned and over budget: evicted at insert; ka stays.
+        assert_eq!(lib.stats.weight_evictions, 1);
+        assert_eq!(lib.weight_resident_bytes(), 16);
+        // Unpinning ka makes it evictable.
+        lib.unpin_weight(&ka);
+        assert_eq!(lib.weight_resident_bytes(), 0);
+        assert_eq!(lib.stats.weight_evictions, 2);
+        // A pin attempt on an evicted entry takes no pin (the caller must
+        // not later issue a matching unpin).
+        assert!(!lib.pin_weight(&kb));
+    }
+
+    #[test]
+    fn weight_hits_refresh_lru_recency() {
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(dev);
+        let w = Tensor::f32(&[2, 2], vec![1.; 4]);
+        let ka = WeightKey { program: 1, value: 1 };
+        let kb = WeightKey { program: 1, value: 2 };
+        lib.weight_device(ka.clone(), &w, &[2, 2], false).unwrap();
+        lib.weight_device(kb.clone(), &w, &[2, 2], false).unwrap();
+        // Hit ka: it becomes the most recently used entry.
+        lib.weight_device(ka.clone(), &w, &[2, 2], false).unwrap();
+        // Budget holds one entry; the next enforcement point must evict
+        // the cold kb, not the hot ka.
+        lib.max_weight_bytes = 16;
+        lib.unpin_weight(&kb); // no pin held — just an enforcement point
+        assert_eq!(lib.weight_resident_bytes(), 16);
+        let misses = lib.stats.weight_misses;
+        lib.weight_device(ka, &w, &[2, 2], false).unwrap();
+        assert_eq!(lib.stats.weight_misses, misses, "hot entry survived");
+    }
+
+    #[test]
+    fn prepare_kernel_masks_garbage_and_adapts_buckets() {
+        // A "fused kernel output": bucket [4,4] whose valid box is [2,3],
+        // pad lanes filled with garbage. Chained into a GEMM entry that
+        // wants [16,16] operands, the prepare kernel must zero the garbage
+        // and grow the bucket on device — bit-identical to the host path
+        // (crop + re-pad) over the same values.
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(dev.clone());
+        let mut buf = vec![999.0f32; 16];
+        let valid = [1.0f32, 2., 3., 4., 5., 6.];
+        for r in 0..2 {
+            for c in 0..3 {
+                buf[r * 4 + c] = valid[r * 3 + c];
+            }
+        }
+        let bucketed = Tensor::f32(&[4, 4], buf);
+        let da = dev.h2d(&bucketed).unwrap();
+        let a_actual = vec![2usize, 3];
+        let w = Tensor::f32(&[3, 4], (0..12).map(|i| 0.1 * i as f32).collect());
+        let a_host = crop_box(&bucketed, &a_actual).unwrap();
+        let key = lib.key_for(&a_host, &w).unwrap();
+        let host = lib.matmul_with_key(&a_host, &w, key).unwrap();
+        let (out, actual) = lib
+            .matmul_device(
+                GemmSrc::Dev { dt: &da, actual: &a_actual, zero_padded: false },
+                GemmSrc::Host(&w),
+                key,
+            )
+            .unwrap();
+        assert!(lib.stats.prep_built >= 1, "device-side adaptation compiled");
+        let back = lib.readback(&out, &actual).unwrap();
+        assert_eq!(back, host, "dev->dev chain must be bit-exact vs host path");
+    }
+
+    #[test]
+    fn zero_padded_device_operand_is_consumed_in_place() {
+        // A GEMM result (exact zero pad) chained into a second GEMM with
+        // matching entry extents moves zero h2d bytes for that operand.
+        let dev = Rc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(dev.clone());
+        let a = Tensor::f32(&[3, 3], (0..9).map(|i| i as f32 * 0.2).collect());
+        let b = Tensor::f32(&[3, 3], (0..9).map(|i| 0.5 - i as f32 * 0.1).collect());
+        let key = lib.key_for(&a, &b).unwrap();
+        let (first, actual1) =
+            lib.matmul_device(GemmSrc::Host(&a), GemmSrc::Host(&b), key).unwrap();
+        let h2d_before = lib.stats.h2d_bytes;
+        let prep_before = lib.stats.prep_built;
+        // Chain: first · b, lhs consumed in place.
+        let (second, actual2) = lib
+            .matmul_device(
+                GemmSrc::Dev { dt: &first, actual: &actual1, zero_padded: true },
+                GemmSrc::Host(&b),
+                key,
+            )
+            .unwrap();
+        assert_eq!(lib.stats.prep_built, prep_before, "no adapter needed");
+        // Only b was uploaded for the second call.
+        assert_eq!(lib.stats.h2d_bytes - h2d_before, (16 * 16 * 4) as u64);
+        let back = lib.readback(&second, &actual2).unwrap();
+        let host1 = lib.matmul_with_key(&a, &b, key).unwrap();
+        let host2 = lib.matmul_with_key(&host1, &b, key).unwrap();
+        assert_eq!(back, host2);
     }
 }

@@ -108,6 +108,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         disc::util::fmt_bytes(m.device_resident_bytes as usize)
     );
     println!(
+        "weight cache: hits={} misses={} resident={}",
+        m.weight_cache_hits,
+        m.weight_cache_misses,
+        disc::util::fmt_bytes(m.weight_resident_bytes as usize)
+    );
+    println!(
         "T4-model breakdown: comp={:.2}ms mem={:.2}ms cpu={:.2}ms e2e={:.2}ms",
         sim.comp_bound_ms, sim.mem_bound_ms, sim.cpu_ms, sim.e2e_ms
     );

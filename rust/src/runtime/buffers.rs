@@ -34,6 +34,13 @@ pub struct BufferPool {
 /// plan-record time from the compile-time dealloc placement), so a serving
 /// process knows its device footprint before the stream arrives; the
 /// resident counters then track what the replayed flows actually hold.
+///
+/// The arena covers *intermediates* (values that die at a `Dealloc`).
+/// Persistently resident GEMM weights are a different lifetime class —
+/// they outlive every plan that pins them — and are accounted separately
+/// by the library (`GemmLibrary::weight_resident_bytes`, surfaced as
+/// `RunMetrics::weight_resident_bytes`); a deployment sizes device memory
+/// as arena reservation + weight residency.
 #[derive(Debug, Default)]
 pub struct DeviceArena {
     /// Capacity reserved from installed plans (max over plans).

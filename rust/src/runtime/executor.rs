@@ -16,18 +16,22 @@
 //!    captured as a [`LaunchPlan`] keyed by the binding vector.
 //! 3. **Replay** — repeat bindings skip resolution, hashing, and
 //!    branching entirely, and chain fused-kernel/GEMM results through
-//!    persistent device buffers: only program outputs and host-op operands
-//!    are copied back to the host.
+//!    persistent device buffers: GEMMs consume device-resident operands
+//!    dev→dev (bucket adaptation happens on device), static GEMM weights
+//!    are served from the library's persistent weight cache (uploaded once
+//!    per program, pinned by installed plans), and only program outputs
+//!    and host-op operands are copied back to the host.
 
 use crate::codegen::{BucketPolicy, KernelCache};
-use crate::dhlo::Op;
-use crate::library::GemmLibrary;
+use crate::dhlo::{DType, Module, Op, ValueId};
+use crate::library::{GemmLibrary, GemmSrc, WeightKey};
 use crate::program::{Program, Step};
 use crate::runtime::buffers::BufferPool;
 use crate::runtime::metrics::RunMetrics;
 use crate::runtime::pjrt::{Device, DeviceTensor};
 use crate::runtime::plan::{
-    binding_vector, host_guards_hold, LaunchPlan, PlanKey, PlanRecorder, PlanStats, PlannedStep,
+    binding_vector, host_guards_hold, LaunchPlan, PlanKey, PlanRecorder, PlanStats, PlanWeight,
+    PlannedStep,
 };
 use crate::runtime::reference::eval_op;
 use crate::runtime::shape_env::SymEnv;
@@ -49,6 +53,11 @@ pub struct ExecOptions {
     /// During replays, keep fused-kernel and GEMM results device-resident
     /// between launches instead of round-tripping through host tensors.
     pub device_resident: bool,
+    /// Serve static GEMM RHS operands (graph constants, entry parameters)
+    /// from the library's persistent device-side weight cache: each weight
+    /// uploads once per program and is reused across calls and plan
+    /// replays. Requires `device_resident`.
+    pub weight_cache: bool,
 }
 
 impl Default for ExecOptions {
@@ -58,15 +67,32 @@ impl Default for ExecOptions {
             pooled_buffers: true,
             plan_cache: true,
             device_resident: true,
+            weight_cache: true,
         }
     }
 }
 
 /// A device-resident intermediate: the bucket-shaped buffer plus the
-/// actual extents a host consumer would crop to.
+/// actual extents a host consumer would crop to. `zero_padded` records
+/// whether the pad lanes are exact zeros (GEMM results) or garbage
+/// (fused-kernel outputs) — the library's device-side GEMM path consumes
+/// zero-padded buffers in place and routes the rest through its on-device
+/// bucket adapter.
 struct DevSlot {
     dt: DeviceTensor,
     actual: Vec<usize>,
+    zero_padded: bool,
+}
+
+/// Is this value a cacheable GEMM weight? Graph constants never change for
+/// a given program; entry parameters can carry new contents at a fixed
+/// shape, so their cache entries are fingerprint-validated per call.
+fn weight_ref_of(m: &Module, value: ValueId) -> Option<PlanWeight> {
+    match &m.instrs[value].op {
+        Op::Const { .. } => Some(PlanWeight { value, validate: false }),
+        Op::Param { .. } => Some(PlanWeight { value, validate: true }),
+        _ => None,
+    }
 }
 
 /// Stateful executor: owns the kernel cache, library, buffer pool, and the
@@ -81,6 +107,10 @@ pub struct Executor {
     plans: HashMap<PlanKey, Rc<LaunchPlan>>,
     /// Insertion order of `plans`, for FIFO eviction at `max_plans`.
     plan_order: std::collections::VecDeque<PlanKey>,
+    /// Weight pins each installed plan actually took (a pin attempt on an
+    /// already-evicted entry takes none); eviction releases exactly these,
+    /// so a failed pin can never steal another plan's.
+    plan_pins: HashMap<PlanKey, Vec<WeightKey>>,
     /// Bound on cached plans: binding vectors are exact (not bucketed), so
     /// a long-lived server over adversarial shape streams would otherwise
     /// grow host+device pinning without limit.
@@ -103,6 +133,7 @@ impl Executor {
             device,
             plans: HashMap::new(),
             plan_order: std::collections::VecDeque::new(),
+            plan_pins: HashMap::new(),
             max_plans: 512,
             plan_stats: PlanStats::default(),
         }
@@ -164,11 +195,19 @@ impl Executor {
                         while self.plans.len() >= self.max_plans.max(1) {
                             match self.plan_order.pop_front() {
                                 Some(old) => {
+                                    // FIFO drop: release exactly the weight
+                                    // pins this plan took so the library may
+                                    // evict entries no live plan references.
                                     self.plans.remove(&old);
+                                    for wk in self.plan_pins.remove(&old).unwrap_or_default() {
+                                        self.library.unpin_weight(&wk);
+                                    }
                                 }
                                 None => break,
                             }
                         }
+                        let pinned = self.pin_plan_weights(key.program, &plan);
+                        self.plan_pins.insert(key.clone(), pinned);
                         self.plans.insert(key.clone(), Rc::new(plan));
                         self.plan_order.push_back(key);
                         self.plan_stats.entries = self.plans.len();
@@ -184,8 +223,34 @@ impl Executor {
         metrics.compile_time += self.cache.stats.compile_time - cache_before.1;
         metrics.allocs = self.pool.stats.allocs - pool_before.allocs;
         metrics.pool_hits = self.pool.stats.pool_hits - pool_before.pool_hits;
+        // Library transfer traffic is accounted where it happens
+        // (LibraryStats) and folded in per run, so benches and RunMetrics
+        // agree; the weight cache shows up as hit/miss counts plus the
+        // resident-bytes gauge.
+        metrics.h2d_bytes += self.library.stats.h2d_bytes - lib_before.h2d_bytes;
+        metrics.d2h_bytes += self.library.stats.d2h_bytes - lib_before.d2h_bytes;
+        metrics.weight_cache_hits = self.library.stats.weight_hits - lib_before.weight_hits;
+        metrics.weight_cache_misses =
+            self.library.stats.weight_misses - lib_before.weight_misses;
+        metrics.weight_resident_bytes = self.library.weight_resident_bytes();
         metrics.total_time = t_start.elapsed();
         Ok(ExecOutput { outputs, metrics })
+    }
+
+    /// Pin every cached-weight reference in a freshly installed plan;
+    /// returns the keys whose pin actually took (eviction releases exactly
+    /// these — see `plan_pins`).
+    fn pin_plan_weights(&mut self, program: u64, plan: &LaunchPlan) -> Vec<WeightKey> {
+        let mut pinned = Vec::new();
+        for step in &plan.steps {
+            if let PlannedStep::LibraryCall { weight: Some(w), .. } = step {
+                let key = WeightKey { program, value: w.value };
+                if self.library.pin_weight(&key) {
+                    pinned.push(key);
+                }
+            }
+        }
+        pinned
     }
 
     /// Tier 1/2: interpret the whole step sequence (optionally recording a
@@ -300,18 +365,40 @@ impl Executor {
                     let a = vals[ins.operands[0]].as_deref().unwrap();
                     let b = vals[ins.operands[1]].as_deref().unwrap();
                     metrics.lib_bytes += (a.byte_size() + b.byte_size()) as u64;
-                    metrics.h2d_bytes += (a.byte_size() + b.byte_size()) as u64;
                     let build0 = self.library.stats.build_time;
                     let exec0 = self.library.stats.exec_time;
                     let key = self.library.key_for(a, b)?;
-                    let t = self.library.matmul_with_key(a, b, key)?;
+                    // Static RHS operands are served from the persistent
+                    // device-side weight cache: upload once per program,
+                    // then by reference (transfer deltas fold in at run
+                    // level from LibraryStats).
+                    let weight = if self.opts.device_resident && self.opts.weight_cache {
+                        weight_ref_of(m, ins.operands[1]).filter(|_| b.dtype == DType::F32)
+                    } else {
+                        None
+                    };
+                    let t = if let Some(w) = &weight {
+                        let wdev = self.library.weight_device(
+                            WeightKey { program: prog.id, value: w.value },
+                            b,
+                            &key.rhs_dims(),
+                            w.validate,
+                        )?;
+                        let (dt, actual) = self.library.matmul_device(
+                            GemmSrc::Host(a),
+                            GemmSrc::Weight { dt: wdev, actual: &b.dims },
+                            key,
+                        )?;
+                        self.library.readback(&dt, &actual)?
+                    } else {
+                        self.library.matmul_with_key(a, b, key)?
+                    };
                     metrics.lib_time += self.library.stats.exec_time - exec0;
                     // On-demand library builds are one-time compile cost
                     // (vendor libraries ship pre-built).
                     metrics.compile_time += self.library.stats.build_time - build0;
                     metrics.lib_calls += 1;
                     metrics.lib_bytes += t.byte_size() as u64;
-                    metrics.d2h_bytes += t.byte_size() as u64;
                     if let Some(r) = rec.as_deref_mut() {
                         if self.opts.device_resident {
                             // Residency modeling only applies when replays
@@ -320,7 +407,7 @@ impl Executor {
                                 (key.batch.max(1) * key.m * key.n * 4) as u64;
                             r.note_device_out(*value, out_bytes);
                         }
-                        r.push(PlannedStep::LibraryCall { value: *value, key });
+                        r.push(PlannedStep::LibraryCall { value: *value, key, weight });
                     }
                     vals[*value] = Some(Rc::new(t));
                 }
@@ -579,28 +666,81 @@ impl Executor {
                     metrics.mem_bytes += t.byte_size() as u64;
                     host[*value] = Some(Rc::new(t));
                 }
-                PlannedStep::LibraryCall { value, key } => {
+                PlannedStep::LibraryCall { value, key, weight } => {
                     let ins = &m.instrs[*value];
-                    let a = Self::host_value(&device, metrics, &mut host, &dev, ins.operands[0])?;
-                    let b = Self::host_value(&device, metrics, &mut host, &dev, ins.operands[1])?;
-                    metrics.lib_bytes += (a.byte_size() + b.byte_size()) as u64;
-                    metrics.h2d_bytes += (a.byte_size() + b.byte_size()) as u64;
+                    let (a_id, b_id) = (ins.operands[0], ins.operands[1]);
                     let build0 = self.library.stats.build_time;
                     let exec0 = self.library.stats.exec_time;
                     if self.opts.device_resident {
-                        let (dt, actual) =
-                            self.library.matmul_to_device(&a, &b, *key, &device)?;
-                        metrics.lib_bytes +=
-                            (actual.iter().product::<usize>() * 4) as u64;
+                        // Chain dev→dev wherever a device-resident operand
+                        // exists; the library adapts buckets and masks
+                        // garbage pad lanes on device. Host materialization
+                        // happens only for operands with no live buffer.
+                        let a_host = if dev[a_id].is_none() {
+                            Some(Self::host_value(&device, metrics, &mut host, &dev, a_id)?)
+                        } else {
+                            None
+                        };
+                        let w_dev = if let Some(w) = weight {
+                            // Const/Param operands are host-materialized at
+                            // replay start; serve the device copy from the
+                            // persistent weight cache (upload-once).
+                            let bt = host[b_id]
+                                .clone()
+                                .expect("weight operand must be host-materialized");
+                            let dt = self.library.weight_device(
+                                WeightKey { program: prog.id, value: w.value },
+                                &bt,
+                                &key.rhs_dims(),
+                                w.validate,
+                            )?;
+                            let dims = bt.dims.clone();
+                            Some((dt, dims))
+                        } else {
+                            None
+                        };
+                        let b_host = if w_dev.is_none() && dev[b_id].is_none() {
+                            Some(Self::host_value(&device, metrics, &mut host, &dev, b_id)?)
+                        } else {
+                            None
+                        };
+                        let src_a = match (&a_host, dev[a_id].as_ref()) {
+                            (Some(t), _) => GemmSrc::Host(t),
+                            (None, Some(s)) => GemmSrc::Dev {
+                                dt: &s.dt,
+                                actual: &s.actual,
+                                zero_padded: s.zero_padded,
+                            },
+                            _ => unreachable!("lhs has neither host nor device value"),
+                        };
+                        let src_b = match (&w_dev, &b_host, dev[b_id].as_ref()) {
+                            (Some((dt, dims)), _, _) => {
+                                GemmSrc::Weight { dt: dt.clone(), actual: dims }
+                            }
+                            (None, Some(t), _) => GemmSrc::Host(t),
+                            (None, None, Some(s)) => GemmSrc::Dev {
+                                dt: &s.dt,
+                                actual: &s.actual,
+                                zero_padded: s.zero_padded,
+                            },
+                            _ => unreachable!("rhs has neither host nor device value"),
+                        };
+                        let a_bytes = src_a.actual_byte_size();
+                        let b_bytes = src_b.actual_byte_size();
+                        let (dt, actual) = self.library.matmul_device(src_a, src_b, *key)?;
+                        metrics.lib_bytes += a_bytes + b_bytes;
+                        metrics.lib_bytes += (actual.iter().product::<usize>() * 4) as u64;
                         let bytes = dt.byte_size() as u64;
                         resident += bytes;
                         resident_peak = resident_peak.max(resident);
                         self.pool.device.acquire(bytes);
-                        dev[*value] = Some(DevSlot { dt, actual });
+                        dev[*value] = Some(DevSlot { dt, actual, zero_padded: true });
                     } else {
+                        let a = Self::host_value(&device, metrics, &mut host, &dev, a_id)?;
+                        let b = Self::host_value(&device, metrics, &mut host, &dev, b_id)?;
+                        metrics.lib_bytes += (a.byte_size() + b.byte_size()) as u64;
                         let t = self.library.matmul_with_key(&a, &b, *key)?;
                         metrics.lib_bytes += t.byte_size() as u64;
-                        metrics.d2h_bytes += t.byte_size() as u64;
                         host[*value] = Some(Rc::new(t));
                     }
                     metrics.lib_time += self.library.stats.exec_time - exec0;
@@ -702,7 +842,8 @@ impl Executor {
                         resident += bytes;
                         resident_peak = resident_peak.max(resident);
                         self.pool.device.acquire(bytes);
-                        dev[fl.root] = Some(DevSlot { dt: out, actual: out_actual.clone() });
+                        dev[fl.root] =
+                            Some(DevSlot { dt: out, actual: out_actual.clone(), zero_padded: false });
                     } else {
                         // Host-path replay: recorded marshalling decisions,
                         // no resolution or cache hashing.
@@ -924,7 +1065,7 @@ fn copy_box_rev<T: Copy>(src: &[T], src_dims: &[usize], dst: &mut [T], dst_dims:
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dhlo::{Builder, DType, UnKind};
+    use crate::dhlo::{Builder, Literal, UnKind};
     use crate::fusion::{plan, FusionOptions};
     use crate::program::generate;
     use crate::runtime::reference::eval_module;
@@ -1266,5 +1407,146 @@ mod tests {
         assert_eq!(out2.metrics.plan_hits, 1);
         assert_eq!(out2.metrics.pad_copies, 0);
         assert_eq!(out.outputs, out2.outputs);
+    }
+
+    /// `x·W` (constant weight) followed by a fused activation.
+    fn const_weight_prog() -> Program {
+        let mut b = Builder::new("wmlp");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let w = b.constant(
+            Literal::F32((0..32).map(|i| 0.05 * i as f32 - 0.6).collect()),
+            &[8, 4],
+        );
+        let h = b.dot(x, w).unwrap();
+        let r = b.unary(UnKind::Gelu, h);
+        let m = b.finish(vec![r]);
+        let p = plan(&m, &FusionOptions::default());
+        generate(m, &p).unwrap()
+    }
+
+    #[test]
+    fn gemm_weights_upload_once_across_calls_and_replays() {
+        let prog = const_weight_prog();
+        let mut exec = executor();
+        let mut plain = executor_no_plans();
+        let mut rng = Prng::new(17);
+        let x = Tensor::f32(&[5, 8], rng.fill_f32(40, 1.0));
+
+        let r1 = exec.run(&prog, &[x.clone()]).unwrap();
+        assert_eq!(r1.metrics.weight_cache_misses, 1, "first call uploads the weight");
+        assert_eq!(r1.metrics.weight_cache_hits, 0);
+        assert!(r1.metrics.weight_resident_bytes > 0);
+
+        let r2 = exec.run(&prog, &[x.clone()]).unwrap();
+        assert_eq!(r2.metrics.plan_hits, 1);
+        assert_eq!(r2.metrics.weight_cache_hits, 1, "replay serves the resident weight");
+        assert_eq!(r2.metrics.weight_cache_misses, 0);
+        assert!(
+            r2.metrics.h2d_bytes < r1.metrics.h2d_bytes,
+            "replay h2d {} must drop below first-call h2d {} (weight not re-uploaded)",
+            r2.metrics.h2d_bytes,
+            r1.metrics.h2d_bytes
+        );
+
+        // Bit-exact against the host-path interpreter.
+        let p = plain.run(&prog, &[x]).unwrap();
+        assert_eq!(r1.outputs, p.outputs);
+        assert_eq!(r2.outputs, p.outputs);
+
+        // A different binding records a new plan but reuses the weight.
+        let y = Tensor::f32(&[9, 8], rng.fill_f32(72, 1.0));
+        let r3 = exec.run(&prog, &[y]).unwrap();
+        assert_eq!(r3.metrics.plan_misses, 1);
+        assert_eq!(r3.metrics.weight_cache_misses, 0, "weight shared across bindings");
+        assert_eq!(r3.metrics.weight_cache_hits, 1);
+    }
+
+    #[test]
+    fn dev_chained_gemm_replay_bit_matches_host_path() {
+        // GEMM -> fused tanh -> GEMM: on replay the second GEMM consumes
+        // the fused kernel's device-resident (garbage-padded) output
+        // through the library's on-device bucket adapter, with both
+        // weights served from the cache.
+        let mut b = Builder::new("chain");
+        let s = b.dyn_dim("n", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let w1 = b.constant(
+            Literal::F32((0..64).map(|i| 0.03 * i as f32 - 0.9).collect()),
+            &[8, 8],
+        );
+        let w2 = b.constant(
+            Literal::F32((0..32).map(|i| 0.4 - 0.02 * i as f32).collect()),
+            &[8, 4],
+        );
+        let h = b.dot(x, w1).unwrap();
+        let t = b.unary(UnKind::Tanh, h);
+        let z = b.dot(t, w2).unwrap();
+        let m = b.finish(vec![z]);
+        let p = plan(&m, &FusionOptions::default());
+        let prog = generate(m, &p).unwrap();
+
+        let mut cached = executor();
+        let mut plain = executor_no_plans();
+        let mut rng = Prng::new(23);
+        for n in [5usize, 5, 5, 11, 5] {
+            let x = Tensor::f32(&[n, 8], rng.fill_f32(n * 8, 1.0));
+            let a = cached.run(&prog, &[x.clone()]).unwrap();
+            let b2 = plain.run(&prog, &[x]).unwrap();
+            assert_eq!(a.outputs, b2.outputs, "dev-chained GEMM diverged at n={n}");
+        }
+        assert!(cached.plan_stats.hits >= 3);
+        assert!(cached.library.stats.weight_hits > 0);
+    }
+
+    #[test]
+    fn weight_cache_follows_plan_cache_eviction() {
+        // Zero weight budget: entries live exactly as long as some
+        // installed plan pins them.
+        let prog_w = const_weight_prog();
+        let prog_plain = softmax_prog();
+        let mut exec = executor();
+        exec.max_plans = 1;
+        let x = Tensor::f32(&[4, 8], vec![0.3; 32]);
+
+        let r1 = exec.run(&prog_w, &[x.clone()]).unwrap();
+        assert_eq!(r1.metrics.weight_cache_misses, 1);
+        // Tighten the budget only once the entry is pinned by the
+        // installed plan: pinned entries survive every enforcement point.
+        exec.library.max_weight_bytes = 0;
+        assert!(
+            exec.library.weight_resident_bytes() > 0,
+            "pinned weight survives a zero budget"
+        );
+
+        // Another program's plan displaces the FIFO entry; the unpinned
+        // weight is evicted immediately under the zero budget.
+        exec.run(&prog_plain, &[Tensor::f32(&[2, 3], vec![0.1; 6])]).unwrap();
+        assert_eq!(exec.library.weight_resident_bytes(), 0, "unpinned weight evicted");
+        assert_eq!(exec.library.stats.weight_evictions, 1);
+
+        // Re-running re-records, re-uploads, and stays correct.
+        let r2 = exec.run(&prog_w, &[x]).unwrap();
+        assert_eq!(r2.metrics.weight_cache_misses, 1);
+        assert_eq!(r1.outputs, r2.outputs);
+    }
+
+    #[test]
+    fn weight_cache_retains_entries_within_budget_across_plan_eviction() {
+        // Default (unbounded) budget: dropping the plan keeps the weight
+        // resident, and the re-recorded plan hits the cache.
+        let prog_w = const_weight_prog();
+        let prog_plain = softmax_prog();
+        let mut exec = executor();
+        exec.max_plans = 1;
+        let x = Tensor::f32(&[4, 8], vec![0.3; 32]);
+
+        exec.run(&prog_w, &[x.clone()]).unwrap();
+        exec.run(&prog_plain, &[Tensor::f32(&[2, 3], vec![0.1; 6])]).unwrap();
+        assert!(exec.library.weight_resident_bytes() > 0, "weight retained");
+
+        let r = exec.run(&prog_w, &[x]).unwrap();
+        assert_eq!(r.metrics.weight_cache_misses, 0, "retained weight served");
+        assert_eq!(r.metrics.weight_cache_hits, 1);
     }
 }

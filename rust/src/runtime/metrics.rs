@@ -52,6 +52,14 @@ pub struct RunMetrics {
     /// pipeline exists to shrink these on repeat-shape streams.
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
+    /// Persistent device-weight cache events: a hit serves a static GEMM
+    /// RHS from its resident buffer (zero transfer); a miss pads and
+    /// uploads it (once per program in steady state).
+    pub weight_cache_hits: u64,
+    pub weight_cache_misses: u64,
+    /// Bytes of GEMM weights resident on device after the run (a gauge,
+    /// not a flow — accumulates as a max).
+    pub weight_resident_bytes: u64,
 }
 
 impl RunMetrics {
@@ -94,6 +102,9 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.device_resident_bytes = self.device_resident_bytes.max(o.device_resident_bytes);
         self.h2d_bytes += o.h2d_bytes;
         self.d2h_bytes += o.d2h_bytes;
+        self.weight_cache_hits += o.weight_cache_hits;
+        self.weight_cache_misses += o.weight_cache_misses;
+        self.weight_resident_bytes = self.weight_resident_bytes.max(o.weight_resident_bytes);
     }
 }
 
@@ -130,6 +141,8 @@ mod tests {
             plan_hits: 1,
             h2d_bytes: 100,
             device_resident_bytes: 400,
+            weight_cache_hits: 2,
+            weight_resident_bytes: 1000,
             ..Default::default()
         };
         let b = RunMetrics {
@@ -139,6 +152,9 @@ mod tests {
             h2d_bytes: 50,
             d2h_bytes: 25,
             device_resident_bytes: 300,
+            weight_cache_hits: 3,
+            weight_cache_misses: 1,
+            weight_resident_bytes: 800,
             ..Default::default()
         };
         a += &b;
@@ -148,5 +164,8 @@ mod tests {
         assert_eq!(a.h2d_bytes, 150);
         assert_eq!(a.d2h_bytes, 25);
         assert_eq!(a.device_resident_bytes, 400, "residency accumulates as a peak");
+        assert_eq!(a.weight_cache_hits, 5);
+        assert_eq!(a.weight_cache_misses, 1);
+        assert_eq!(a.weight_resident_bytes, 1000, "weight residency is a gauge");
     }
 }

@@ -12,9 +12,12 @@
 //!   literals, execute, synchronously read the result back. One H2D copy
 //!   per operand and one D2H per launch.
 //! * [`Executable::run_on_device`] — the device-resident path used by
-//!   cached launch plans: operands are [`DeviceTensor`]s (PJRT buffers),
-//!   the result *stays on device*, and only plan boundaries (program
-//!   outputs, host-op operands) pay a readback.
+//!   cached launch plans and the GEMM library's buffer-resident entry
+//!   points: operands are [`DeviceTensor`]s (PJRT buffers), the result
+//!   *stays on device*, and only plan boundaries (program outputs, host-op
+//!   operands) pay a readback. The library's cached weights and its
+//!   on-device bucket adapters run entirely through this path, so a
+//!   steady-state GEMM moves zero host↔device payload.
 
 use crate::dhlo::DType;
 use crate::runtime::tensor::{Data, Tensor};

@@ -6,8 +6,9 @@
 //! marshalling. A [`LaunchPlan`] records the outcome of all of that work
 //! the first time a binding vector (the concrete extents of the module's
 //! dynamic dims) is seen: concrete dims per step, the compiled kernel and
-//! extent-scalar arguments per fused launch, the GEMM library entry per
-//! dot. Repeat requests with the same bindings *replay* the plan — no
+//! extent-scalar arguments per fused launch, the GEMM library entry — and
+//! cached device-weight slot ([`PlanWeight`]) — per dot. Repeat requests
+//! with the same bindings *replay* the plan — no
 //! `resolve_dims`, no signature hashing, no per-launch branching — and run
 //! device-resident (see `executor::Executor::replay`).
 //!
@@ -58,13 +59,24 @@ pub struct ElemGuard {
     pub expect: i64,
 }
 
+/// A cacheable GEMM weight reference recorded in a plan: the RHS operand's
+/// value slot plus whether replays must re-validate its contents (Param
+/// weights — same shape, possibly new data) or may trust it outright
+/// (graph constants). Replays resolve the slot through the library's
+/// persistent device-side weight cache instead of re-uploading.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanWeight {
+    pub value: ValueId,
+    pub validate: bool,
+}
+
 /// One resolved step of the flow. Mirrors `program::Step`, with everything
 /// the hot path would otherwise recompute baked in.
 pub enum PlannedStep {
     EvalHost { value: ValueId, out_dims: Vec<usize> },
     Bitcast { value: ValueId, out_dims: Vec<usize> },
     LaunchOp { value: ValueId, out_dims: Vec<usize> },
-    LibraryCall { value: ValueId, key: GemmKey },
+    LibraryCall { value: ValueId, key: GemmKey, weight: Option<PlanWeight> },
     LaunchFused {
         idx: usize,
         /// The compiled kernel — replays skip signature hashing and the

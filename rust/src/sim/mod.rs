@@ -8,6 +8,11 @@
 //! mem-bound / CPU / E2E). Host time is *measured*, not modeled — the
 //! interpretation-overhead comparison is real; only device kernel time is
 //! translated from counts.
+//!
+//! The transfer counters (`h2d_bytes`/`d2h_bytes`, fed by the executor and
+//! the library's `LibraryStats`) are deliberately *not* folded into the
+//! modeled device time: they quantify the PCIe traffic the device-resident
+//! tiers remove, and the benches report them as their own column.
 
 use crate::runtime::metrics::RunMetrics;
 

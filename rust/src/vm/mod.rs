@@ -21,6 +21,10 @@
 //! constraints, so callers pass a `FusionOptions { use_constraints: false }`
 //! plan (see `compiler::Mode::VmNimble`); with fewer/lazier fusions it also
 //! reproduces the kernel-count gap of Table 3.
+//!
+//! The VM deliberately has *no* launch-plan cache, no device-resident
+//! chaining, and no weight cache — those are the DISC executor's tiers
+//! (`docs/runtime.md`); giving them to the baseline would measure nothing.
 
 use crate::codegen::KernelCache;
 use crate::dhlo::{Module, Op, ValueId};

@@ -212,7 +212,7 @@ fn plan_cache_bit_matches_interpreter_on_workloads() {
     // against the uncached interpreter executor on real workloads, over a
     // stream that repeats every shape (so the second half replays plans).
     let compiler = DiscCompiler::new().unwrap();
-    for name in ["bert", "seq2seq"] {
+    for name in ["bert", "seq2seq", "transformer"] {
         let w = disc::workloads::by_name(name).unwrap();
         let module = disc::bridge::lower(&w.graph).unwrap();
         let mut cached =
@@ -244,6 +244,79 @@ fn plan_cache_bit_matches_interpreter_on_workloads() {
         let ps = cached.plan_stats().unwrap();
         assert!(ps.hits >= 4, "{name}: repeated shapes must replay plans (hits={})", ps.hits);
         assert_eq!(plain.plan_stats().unwrap().hits, 0);
+    }
+}
+
+#[test]
+fn weight_cache_uploads_gemm_weights_once_on_repeat_bindings() {
+    // The tentpole claim: on a repeat-binding stream, GEMM weights are
+    // uploaded exactly once per program — replays serve every weight from
+    // the resident cache (weight_cache_hits > 0, zero misses) and move
+    // strictly fewer h2d bytes than the recording run, while staying
+    // bit-identical to the host-path interpreter.
+    let compiler = DiscCompiler::new().unwrap();
+    for name in ["transformer", "bert"] {
+        let w = disc::workloads::by_name(name).unwrap();
+        let module = disc::bridge::lower(&w.graph).unwrap();
+        let mut cached = compiler.compile(module, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let m2 = disc::bridge::lower(&w.graph).unwrap();
+        let mut plain = compiler
+            .compile(
+                m2,
+                &CompileOptions {
+                    plan_cache: false,
+                    device_resident: false,
+                    ..CompileOptions::mode(Mode::Disc)
+                },
+            )
+            .unwrap();
+
+        let mut rng = Prng::new(13);
+        let inputs = (w.gen)(w.seq_range.0, &mut rng);
+
+        let first = cached.run(&inputs).unwrap();
+        assert!(
+            first.metrics.weight_cache_misses > 0,
+            "{name}: first request must upload weights"
+        );
+        assert!(first.metrics.weight_resident_bytes > 0, "{name}: weights resident");
+
+        let second = cached.run(&inputs).unwrap();
+        assert_eq!(second.metrics.plan_hits, 1, "{name}: repeat binding must replay");
+        assert!(
+            second.metrics.weight_cache_hits > 0,
+            "{name}: replay must serve resident weights"
+        );
+        assert_eq!(
+            second.metrics.weight_cache_misses, 0,
+            "{name}: weights are uploaded exactly once"
+        );
+        assert!(
+            second.metrics.h2d_bytes < first.metrics.h2d_bytes,
+            "{name}: replay h2d {} must be strictly below recording h2d {}",
+            second.metrics.h2d_bytes,
+            first.metrics.h2d_bytes
+        );
+
+        // Dev→dev GEMM results are bit-identical to the host-path
+        // interpreter — on the interpret/record tier and on replay.
+        let reference = plain.run(&inputs).unwrap();
+        assert_eq!(
+            first.outputs, reference.outputs,
+            "{name}: weight-cached interpret diverged from host path"
+        );
+        assert_eq!(
+            second.outputs, reference.outputs,
+            "{name}: device-chained replay diverged from host path"
+        );
+
+        // A different binding records a new plan but re-uses every weight.
+        let other = (w.gen)(w.seq_range.0 + 3, &mut rng);
+        let third = cached.run(&other).unwrap();
+        assert_eq!(
+            third.metrics.weight_cache_misses, 0,
+            "{name}: weights are shared across bindings"
+        );
     }
 }
 

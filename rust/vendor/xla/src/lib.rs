@@ -7,7 +7,8 @@
 //! GEMM library, and the AOT artifact modules): parameter, constant,
 //! elementwise arithmetic, compare/select/convert, broadcast_in_dim,
 //! transpose, iota, masked reduce with `to_apply` regions, dot (plain and
-//! batched), copy, tuple and get-tuple-element.
+//! batched), pad (edge padding, negative amounts crop — the GEMM library's
+//! device-side bucket adapter), copy, tuple and get-tuple-element.
 //!
 //! Semantics notes:
 //! - layouts (`{1,0}` suffixes) are parsed and ignored: all data is
@@ -815,6 +816,15 @@ fn eval_instr(
             let b = get(env, &ins.operands[1])?;
             eval_dot(ins, a, b, out_dims)
         }
+        "pad" => {
+            let x = get(env, &ins.operands[0])?;
+            let pv = get(env, &ins.operands[1])?;
+            let cfg = ins
+                .attrs
+                .get("padding")
+                .ok_or_else(|| Error("pad missing padding config".into()))?;
+            eval_pad(x, pv, cfg, out_ty, out_dims)
+        }
         "tuple" => {
             let parts: Vec<Literal> = ins
                 .operands
@@ -1251,6 +1261,85 @@ fn eval_dot(ins: &Instr, a: &Literal, b: &Literal, out_dims: Vec<usize>) -> Resu
     }
 }
 
+/// Edge padding (`padding=lo_hi[_int]x...`, one `x`-separated group per
+/// axis). Negative lo/hi amounts crop, exactly like real HLO `pad`;
+/// interior padding is not emitted by this workspace and is rejected.
+fn eval_pad(
+    x: &Literal,
+    pv: &Literal,
+    cfg: &str,
+    out_ty: ElementType,
+    out_dims: Vec<usize>,
+) -> Result<Literal> {
+    if pv.element_count() != 1 {
+        return err("pad value must be a scalar");
+    }
+    let mut low: Vec<i64> = Vec::new();
+    for (ax, group) in cfg.split('x').enumerate() {
+        let parts: Vec<&str> = group.split('_').collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            return err(format!("bad padding group '{group}'"));
+        }
+        let lo: i64 = parts[0].trim().parse().map_err(|_| Error(format!("bad pad low '{group}'")))?;
+        let hi: i64 = parts[1].trim().parse().map_err(|_| Error(format!("bad pad high '{group}'")))?;
+        if parts.len() == 3 && parts[2].trim() != "0" {
+            return err("interior padding unsupported");
+        }
+        let src = *x
+            .dims
+            .get(ax)
+            .ok_or_else(|| Error("padding config rank exceeds operand rank".into()))? as i64;
+        let want = *out_dims
+            .get(ax)
+            .ok_or_else(|| Error("padding config rank exceeds output rank".into()))?
+            as i64;
+        if src + lo + hi != want {
+            return err(format!(
+                "pad axis {ax}: {src} + {lo} + {hi} != declared {want}"
+            ));
+        }
+        low.push(lo);
+    }
+    if low.len() != x.dims.len() {
+        return err("padding config rank mismatch");
+    }
+
+    fn fill<T: Copy>(
+        src: &[T],
+        src_dims: &[usize],
+        init: T,
+        low: &[i64],
+        out_dims: &[usize],
+    ) -> Vec<T> {
+        let n_out: usize = out_dims.iter().product();
+        let mut out = vec![init; n_out];
+        let sstr = strides_of(src_dims);
+        let ostr = strides_of(out_dims);
+        'el: for (si, &v) in src.iter().enumerate() {
+            let mut off = 0usize;
+            for ax in 0..src_dims.len() {
+                let c = (si / sstr[ax]) % src_dims[ax];
+                let oc = c as i64 + low[ax];
+                if oc < 0 || oc >= out_dims[ax] as i64 {
+                    continue 'el;
+                }
+                off += oc as usize * ostr[ax];
+            }
+            out[off] = v;
+        }
+        out
+    }
+
+    let data = match (&x.data, &pv.data) {
+        (Data::F32(v), Data::F32(p)) => Data::F32(fill(v, &x.dims, p[0], &low, &out_dims)),
+        (Data::I64(v), Data::I64(p)) => Data::I64(fill(v, &x.dims, p[0], &low, &out_dims)),
+        (Data::I32(v), Data::I32(p)) => Data::I32(fill(v, &x.dims, p[0], &low, &out_dims)),
+        (Data::Pred(v), Data::Pred(p)) => Data::Pred(fill(v, &x.dims, p[0], &low, &out_dims)),
+        _ => return err("pad: operand/value dtype mismatch"),
+    };
+    Ok(lit(out_ty, out_dims, data))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1340,6 +1429,32 @@ mod tests {
         let twice = exe.execute_b(&[&once[0][0]]).unwrap();
         let v = twice[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
         assert_eq!(v, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn pad_grows_with_value_and_negative_amounts_crop() {
+        // Grow [2,3] -> [4,4] with zeros.
+        let exe = compile(
+            "HloModule p, entry_computation_layout={(f32[2,3]{1,0})->f32[4,4]{1,0}}\n\n\
+             ENTRY main {\n  p0 = f32[2,3]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT o = f32[4,4]{1,0} pad(p0, z), padding=0_2x0_1\n}\n",
+        );
+        let a = f32_lit(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let out = exe.execute(&[a]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(
+            v,
+            vec![1., 2., 3., 0., 4., 5., 6., 0., 0., 0., 0., 0., 0., 0., 0., 0.]
+        );
+
+        // Negative high amount crops [2,3] -> [2,2].
+        let exe = compile(
+            "HloModule c, entry_computation_layout={(f32[2,3]{1,0})->f32[2,2]{1,0}}\n\n\
+             ENTRY main {\n  p0 = f32[2,3]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT o = f32[2,2]{1,0} pad(p0, z), padding=0_0x0_-1\n}\n",
+        );
+        let a = f32_lit(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let out = exe.execute(&[a]).unwrap();
+        let v = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1., 2., 4., 5.]);
     }
 
     #[test]
