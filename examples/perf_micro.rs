@@ -1,7 +1,7 @@
 // Microbench: PJRT launch and GEMM library cost decomposition.
 use std::time::Instant;
 fn main() -> anyhow::Result<()> {
-    let dev = std::rc::Rc::new(disc::runtime::pjrt::Device::cpu()?);
+    let dev = std::sync::Arc::new(disc::runtime::pjrt::Device::cpu()?);
     let mut lib = disc::library::GemmLibrary::new(dev.clone());
     let a = disc::runtime::tensor::Tensor::f32(&[176,128], vec![0.5; 176*128]);
     let b = disc::runtime::tensor::Tensor::f32(&[128,128], vec![0.5; 128*128]);

@@ -74,7 +74,7 @@ fn main() -> Result<()> {
     );
 
     // The §4.5 library entries from the same artifact bundle.
-    let dev_rc = std::rc::Rc::new(Device::cpu()?);
+    let dev_rc = std::sync::Arc::new(Device::cpu()?);
     let mut lib = disc::library::GemmLibrary::new(dev_rc.clone());
     let n = register_gemms(&dir, &dev_rc, &mut lib)?;
     println!("   registered {n} pre-generated GEMM library entries (§4.5)");

@@ -1,0 +1,144 @@
+//! Multi-worker serving scaling: throughput vs worker count under uniform
+//! and bursty open-loop arrivals, with the shared-kernel-store counters
+//! that prove the compile-once / stall-free claims:
+//!
+//! * throughput increases with workers on the saturated open-loop stream;
+//! * kernel-store misses (actual compiles) stay FLAT across worker counts
+//!   — each pattern×bucket compiles once per process no matter how many
+//!   workers race it (single-flight dedup);
+//! * on the steady-state replay pass, `compile_stall` is ~0: no request
+//!   waits on the compiler once the store is warm;
+//! * speculative neighbor-bucket warming moves first-touch compiles of a
+//!   *growing* shape stream off the request path.
+//!
+//! `DISC_BENCH_SMOKE=1` shrinks the sweep for CI.
+
+use disc::bench::Table;
+use disc::compiler::{CompileOptions, DiscCompiler, Mode};
+use disc::coordinator::{serve_open_loop, Arrival, ServeOptions};
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::var("DISC_BENCH_SMOKE").is_ok();
+    let requests: usize = if smoke { 10 } else { 60 };
+    let rate = 10_000.0; // saturating: exposes worker scaling, not arrival pacing
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let seed = 91;
+
+    let w = disc::workloads::transformer::workload();
+
+    println!("=== Serving scaling: transformer, {requests}-request open-loop stream ===\n");
+    let mut t = Table::new(&[
+        "workers", "arrival", "throughput(r/s)", "p50", "p99", "queue-p99", "store-compiles",
+        "dedup", "stall(ms)",
+    ]);
+
+    let mut uniform_compiles: Vec<u64> = Vec::new();
+    for &workers in worker_counts {
+        for (arrival, label) in [(Arrival::Uniform, "uniform"), (Arrival::Bursty { burst: 8 }, "burst=8")]
+        {
+            // Fresh compiler per config: the kernel store starts cold, so
+            // the compiles column is directly comparable across rows.
+            let compiler = DiscCompiler::new().expect("pjrt device");
+            let module = disc::bridge::lower(&w.graph).expect("lower");
+            let mut model =
+                compiler.compile(module, &CompileOptions::mode(Mode::Disc)).expect("compile");
+            let mut opts = ServeOptions::rate(rate).workers(workers);
+            opts.arrival = arrival;
+            let report =
+                serve_open_loop(&mut model, w.request_stream(requests, seed), &opts)
+                    .expect("serve");
+            let snap = compiler.kernel_store().snapshot();
+            if matches!(arrival, Arrival::Uniform) {
+                uniform_compiles.push(snap.misses);
+            }
+            t.row(&[
+                workers.to_string(),
+                label.to_string(),
+                format!("{:.0}", report.throughput_rps),
+                format!("{:.2?}", report.p50),
+                format!("{:.2?}", report.p99),
+                format!("{:.2?}", report.queue_p99),
+                snap.misses.to_string(),
+                snap.dedup_hits.to_string(),
+                format!("{:.2}", report.metrics.compile_stall.as_secs_f64() * 1e3),
+            ]);
+        }
+    }
+    t.print();
+    let flat = uniform_compiles.windows(2).all(|p| p[0] == p[1]);
+    println!(
+        "\nkernel-store compiles across worker counts: {:?} — {}",
+        uniform_compiles,
+        if flat { "FLAT (compile-once across workers holds)" } else { "NOT FLAT (regression!)" }
+    );
+    // This is deterministic (single-flight), so the CI smoke run gates on
+    // it: more workers must never mean more compiles.
+    assert!(flat, "kernel-store compiles grew with workers: {uniform_compiles:?}");
+
+    // --- steady-state replay: zero compile stall ---------------------------
+    // Workers=1 keeps the model's own executor (and its plan cache) across
+    // the two passes; multi-worker serve calls fork fresh workers per call,
+    // which is the sweep above, not a steady-state measurement.
+    let compiler = DiscCompiler::new().expect("pjrt device");
+    let module = disc::bridge::lower(&w.graph).expect("lower");
+    let mut model =
+        compiler.compile(module, &CompileOptions::mode(Mode::Disc)).expect("compile");
+    let warm_opts = ServeOptions::rate(rate);
+    let stream = w.request_stream(requests, seed);
+    serve_open_loop(&mut model, stream.clone(), &warm_opts).expect("warm pass");
+    let replay = serve_open_loop(&mut model, stream, &warm_opts).expect("replay pass");
+    println!(
+        "\nsteady-state replay: plan hits={} compile events={} stall={:.3}ms {}",
+        replay.metrics.plan_hits,
+        replay.metrics.compile_events,
+        replay.metrics.compile_stall.as_secs_f64() * 1e3,
+        if replay.metrics.compile_stall <= Duration::from_millis(1) {
+            "— replay never waits on the compiler"
+        } else {
+            "(unexpected stall!)"
+        }
+    );
+    // Deterministic: the warm pass resolved every key, so the replay pass
+    // never touches the compile service. Gate on it in CI.
+    assert_eq!(replay.metrics.compile_events, 0, "steady-state replay must not compile");
+    assert_eq!(
+        replay.metrics.compile_stall,
+        Duration::ZERO,
+        "steady-state replay must never wait on the compiler"
+    );
+
+    // --- speculative neighbor-bucket warming -------------------------------
+    // A stream of ascending lengths that keeps crossing pow2/multiple-of-16
+    // bucket boundaries: with warming on, the background pool compiles the
+    // next bucket while the current one serves, so first-touch stall drops.
+    let ascending: Vec<Vec<disc::runtime::tensor::Tensor>> = {
+        let mut rng = disc::util::prng::Prng::new(7);
+        let hi = if smoke { 40 } else { 96 };
+        (w.seq_range.0..hi).step_by(3).map(|s| (w.gen)(s, &mut rng)).collect()
+    };
+    let mut stalls = Vec::new();
+    for warm in [false, true] {
+        let compiler = DiscCompiler::new().expect("pjrt device");
+        let module = disc::bridge::lower(&w.graph).expect("lower");
+        let mut copts = CompileOptions::mode(Mode::Disc);
+        copts.speculative_warm = warm;
+        let mut model = compiler.compile(module, &copts).expect("compile");
+        // Modest rate: leaves wall-clock room between requests for the
+        // background pool to finish the speculative compiles.
+        let opts = ServeOptions::rate(if smoke { 2_000.0 } else { 300.0 });
+        let report =
+            serve_open_loop(&mut model, ascending.clone(), &opts).expect("serve ascending");
+        let snap = compiler.kernel_store().snapshot();
+        println!(
+            "ascending-length stream, warm={warm}: stall={:.2}ms demand-compiles={} prefetched={}",
+            report.metrics.compile_stall.as_secs_f64() * 1e3,
+            snap.misses,
+            snap.prefetches,
+        );
+        stalls.push(report.metrics.compile_stall);
+    }
+    if stalls[1] < stalls[0] {
+        println!("speculative warming cut compile stall {:.2?} -> {:.2?}", stalls[0], stalls[1]);
+    }
+}

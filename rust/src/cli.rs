@@ -68,7 +68,12 @@ pub const USAGE: &str = "\
 disc — dynamic shape compiler (DISC reproduction)
 
 USAGE:
-  disc run      --workload <name> [--mode disc] [--requests 50] [--seed 1] [--open-rate <rps>]
+  disc run      --workload <name> [--mode disc] [--requests 50] [--seed 1]
+                [--open-rate <rps>] [--workers N] [--burst B] [--warm]
+                (--workers >1 serves the open-loop stream from N executor
+                 threads sharing one kernel/weight store; --burst switches
+                 to on/off arrivals; --warm precompiles neighbor buckets in
+                 the background)
   disc inspect  --workload <name> | --file <graph.json>
   disc import   --file <graph.json> [--mode disc] [--requests N]
   disc list     (show available workloads)

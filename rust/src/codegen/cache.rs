@@ -1,12 +1,24 @@
-//! The compiled-kernel cache.
+//! The per-worker kernel-cache handle over the shared [`KernelStore`].
 //!
 //! DISC's cache is keyed by *shape-agnostic pattern signature* plus bucket
 //! extents; the XLA-like static pipeline uses the same cache with
 //! [`crate::codegen::BucketPolicy::Exact`], which degenerates the key to
 //! one entry per concrete shape — reproducing the §2 compilation-overhead
 //! pathology that the `compile_overhead` bench measures.
+//!
+//! Since the multi-worker refactor the compiled executables live in the
+//! process-wide, shard-locked [`KernelStore`] (shared across executor
+//! workers and across models compiled by one `DiscCompiler`); a
+//! `KernelCache` is one worker's *handle*: it memoizes the kernels it has
+//! already fetched — hot-path lookups touch no lock at all — and keeps
+//! per-worker [`CacheStats`] so `RunMetrics` deltas stay attributable to
+//! the run that caused them. Each pattern×bucket therefore compiles
+//! exactly once per process, whichever worker touches it first; everyone
+//! else gets a `shared_hit` (already resident) or a `dedup_hit` (joined
+//! the in-flight compile).
 
 use crate::codegen::hlo::{emit_group, group_syms, KernelSpec};
+use crate::codegen::store::KernelStore;
 use crate::codegen::BucketPolicy;
 use crate::dhlo::Module;
 use crate::fusion::{signature::signature, FusionGroup};
@@ -14,39 +26,93 @@ use crate::runtime::pjrt::{Device, Executable};
 use crate::shape::SymId;
 use anyhow::Result;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Duration;
 
-/// A compiled fusion kernel plus its launch metadata.
+/// Namespace prefix for fused-kernel keys in the shared store (the GEMM
+/// library uses `lib:`-prefixed signatures in the same store).
+const FUSED_NS: &str = "fused:";
+
+/// A compiled fusion kernel plus its launch metadata. The executable is
+/// process-shared; the spec (input dims, extent locals, output shape) is
+/// re-derived per handle — it is cheap, deterministic string/metadata
+/// emission, and keeping it per-handle lets launch plans hold plain
+/// `Arc<CompiledKernel>` without locking.
 pub struct CompiledKernel {
     pub spec: KernelSpec,
-    pub exe: Executable,
+    pub exe: Arc<Executable>,
 }
 
-/// Cache statistics (compilation overhead accounting).
+/// Per-handle cache statistics (compilation-overhead accounting for one
+/// worker). `misses` counts compiles *this handle initiated* — the counter
+/// behind `RunMetrics::compile_events`; kernels another worker compiled
+/// show up as `shared_hits`/`dedup_hits` instead.
 #[derive(Debug, Clone, Default)]
 pub struct CacheStats {
+    /// Served from this handle's local memo (no store lookup at all).
+    /// Store-resident serves count as `shared_hits` instead.
     pub hits: u64,
+    /// This handle initiated the compile.
     pub misses: u64,
+    /// Resident in the shared store (another handle compiled it earlier).
+    pub shared_hits: u64,
+    /// Joined another worker's in-flight compile (single-flight).
+    pub dedup_hits: u64,
+    /// Time this handle spent blocked on the compile service.
+    pub stall: Duration,
     pub compile_time: Duration,
     pub entries: usize,
 }
 
-/// Kernel cache over one device.
+/// One worker's kernel-cache handle.
 pub struct KernelCache {
-    device: Rc<Device>,
+    store: Arc<KernelStore>,
     policy: BucketPolicy,
-    map: HashMap<(String, Vec<usize>), Rc<CompiledKernel>>,
+    /// Local memo: keys this handle has resolved, with their spec. Lock-free
+    /// on repeat lookups.
+    map: HashMap<(String, Vec<usize>), Arc<CompiledKernel>>,
     pub stats: CacheStats,
 }
 
 impl KernelCache {
-    pub fn new(device: Rc<Device>, policy: BucketPolicy) -> Self {
-        KernelCache { device, policy, map: HashMap::new(), stats: CacheStats::default() }
+    /// Standalone cache over a private store (single-worker uses, tests,
+    /// the VM baseline). Multi-worker serving shares one store via
+    /// [`KernelCache::with_store`].
+    pub fn new(device: Arc<Device>, policy: BucketPolicy) -> Self {
+        Self::with_store(Arc::new(KernelStore::new(device)), policy)
+    }
+
+    /// A handle over a shared (process-wide) store.
+    pub fn with_store(store: Arc<KernelStore>, policy: BucketPolicy) -> Self {
+        KernelCache { store, policy, map: HashMap::new(), stats: CacheStats::default() }
     }
 
     pub fn policy(&self) -> BucketPolicy {
         self.policy
+    }
+
+    pub fn store(&self) -> &Arc<KernelStore> {
+        &self.store
+    }
+
+    /// Resolve the bucketed extents of `g`'s symbols under this cache's
+    /// policy.
+    fn bucketed_extents(
+        &self,
+        syms: &[SymId],
+        actual: &HashMap<SymId, usize>,
+    ) -> Result<(HashMap<SymId, usize>, Vec<usize>)> {
+        let mut bucketed: HashMap<SymId, usize> = HashMap::with_capacity(syms.len());
+        let mut key_dims = Vec::with_capacity(syms.len());
+        for s in syms {
+            let a = *actual
+                .get(s)
+                .ok_or_else(|| anyhow::anyhow!("missing actual extent for {s}"))?;
+            let bk = self.policy.bucket(a);
+            bucketed.insert(*s, bk);
+            key_dims.push(bk);
+        }
+        Ok((bucketed, key_dims))
     }
 
     /// Look up (or compile) the kernel for `group` given the *actual*
@@ -57,33 +123,76 @@ impl KernelCache {
         m: &Module,
         g: &FusionGroup,
         sig: &str,
-        actual: &HashMap<crate::shape::SymId, usize>,
-    ) -> Result<(Rc<CompiledKernel>, HashMap<SymId, usize>)> {
+        actual: &HashMap<SymId, usize>,
+    ) -> Result<(Arc<CompiledKernel>, HashMap<SymId, usize>)> {
         let syms = group_syms(m, g);
-        let mut bucketed: HashMap<crate::shape::SymId, usize> = HashMap::with_capacity(syms.len());
-        let mut key_dims = Vec::with_capacity(syms.len());
-        for s in &syms {
-            let a = *actual
-                .get(s)
-                .ok_or_else(|| anyhow::anyhow!("missing actual extent for {s}"))?;
-            let bk = self.policy.bucket(a);
-            bucketed.insert(*s, bk);
-            key_dims.push(bk);
-        }
+        let (bucketed, key_dims) = self.bucketed_extents(&syms, actual)?;
         let key = (sig.to_string(), key_dims);
         if let Some(k) = self.map.get(&key) {
             self.stats.hits += 1;
             return Ok((k.clone(), bucketed));
         }
-        self.stats.misses += 1;
-        let name = format!("fusion_{}", self.map.len());
+        // The spec is deterministic for (pattern, buckets): emit it locally,
+        // fetch/compile the executable through the shared store.
+        let name = kernel_name(sig, &key.1);
         let spec = emit_group(m, g, &bucketed, &name)?;
-        let exe = self.device.compile_hlo_text_named(&name, &spec.hlo)?;
-        self.stats.compile_time += exe.compile_time;
-        let k = Rc::new(CompiledKernel { spec, exe });
+        let store_sig = format!("{FUSED_NS}{sig}");
+        let hlo = spec.hlo.clone();
+        let (exe, fetch) = self
+            .store
+            .get_or_compile(&store_sig, &key.1, move || Ok((name, hlo)))?;
+        if fetch.compiled {
+            self.stats.misses += 1;
+            self.stats.compile_time += exe.compile_time;
+        } else if fetch.deduped {
+            self.stats.dedup_hits += 1;
+        } else {
+            self.stats.shared_hits += 1;
+        }
+        self.stats.stall += fetch.stall;
+        let k = Arc::new(CompiledKernel { spec, exe });
         self.map.insert(key, k.clone());
         self.stats.entries = self.map.len();
         Ok((k, bucketed))
+    }
+
+    /// Speculatively warm the *next* bucket of each dynamic symbol of
+    /// `group`, one symbol at a time (the other symbols stay at their
+    /// current bucket): growing traffic moves one axis per step — a
+    /// sequence length creeping up, a batch dimension widening — so the
+    /// reachable neighbor keys are the single-axis advances, not the joint
+    /// advance of every axis at once. Emits each spec and enqueues the
+    /// compile on the background pool. Never blocks; no-ops for fully
+    /// static groups or keys already resident/in flight.
+    pub fn prefetch_neighbor(
+        &self,
+        m: &Module,
+        g: &FusionGroup,
+        sig: &str,
+        actual: &HashMap<SymId, usize>,
+    ) -> Result<()> {
+        let syms = group_syms(m, g);
+        if syms.is_empty() {
+            return Ok(());
+        }
+        let (bucketed, key_dims) = self.bucketed_extents(&syms, actual)?;
+        let store_sig = format!("{FUSED_NS}{sig}");
+        for (i, s) in syms.iter().enumerate() {
+            let nb = self.policy.bucket(key_dims[i] + 1);
+            if nb == key_dims[i] {
+                continue;
+            }
+            let mut neighbor = bucketed.clone();
+            neighbor.insert(*s, nb);
+            let mut neighbor_dims = key_dims.clone();
+            neighbor_dims[i] = nb;
+            let name = format!("warm_{}", kernel_name(sig, &neighbor_dims));
+            self.store.prefetch(&store_sig, &neighbor_dims, move || {
+                let spec = emit_group(m, g, &neighbor, &name)?;
+                Ok((name, spec.hlo))
+            });
+        }
+        Ok(())
     }
 
     /// Convenience: signature + lookup in one call (used by tests; the
@@ -92,11 +201,22 @@ impl KernelCache {
         &mut self,
         m: &Module,
         g: &FusionGroup,
-        actual: &HashMap<crate::shape::SymId, usize>,
-    ) -> Result<(Rc<CompiledKernel>, HashMap<SymId, usize>)> {
+        actual: &HashMap<SymId, usize>,
+    ) -> Result<(Arc<CompiledKernel>, HashMap<SymId, usize>)> {
         let sig = signature(m, g);
         self.get_or_compile(m, g, &sig, actual)
     }
+}
+
+/// Debuggable kernel name: signature prefix + bucket extents.
+fn kernel_name(sig: &str, dims: &[usize]) -> String {
+    let clean: String = sig
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .take(24)
+        .collect();
+    let d = dims.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x");
+    format!("fusion_{clean}_{d}")
 }
 
 #[cfg(test)]
@@ -119,7 +239,7 @@ mod tests {
         let m = chain();
         let p = plan(&m, &FusionOptions::default());
         let g = &p.groups[0];
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut cache = KernelCache::new(dev, BucketPolicy::NextPow2);
         let syms = group_syms(&m, g);
         // Shapes 5, 6, 7, 8 all land in bucket 8: one compile, three hits.
@@ -140,7 +260,7 @@ mod tests {
         let m = chain();
         let p = plan(&m, &FusionOptions::default());
         let g = &p.groups[0];
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut cache = KernelCache::new(dev, BucketPolicy::Exact);
         let syms = group_syms(&m, g);
         for n in [5usize, 6, 7, 8] {
@@ -159,7 +279,7 @@ mod tests {
         let m2 = chain();
         let p1 = plan(&m1, &FusionOptions::default());
         let p2 = plan(&m2, &FusionOptions::default());
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut cache = KernelCache::new(dev, BucketPolicy::NextPow2);
         let syms1 = group_syms(&m1, &p1.groups[0]);
         let actual1: HashMap<SymId, usize> = syms1.iter().map(|&s| (s, 7)).collect();
@@ -169,5 +289,51 @@ mod tests {
         cache.get_for(&m2, &p2.groups[0], &actual2).unwrap();
         assert_eq!(cache.stats.misses, 1);
         assert_eq!(cache.stats.hits, 1);
+    }
+
+    #[test]
+    fn handles_share_the_store_compile_once() {
+        // Two worker handles over one store: the second worker's first
+        // touch of the pattern is a shared hit, not a compile.
+        let m = chain();
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let dev = Arc::new(Device::cpu().unwrap());
+        let store = Arc::new(KernelStore::new(dev));
+        let mut w1 = KernelCache::with_store(store.clone(), BucketPolicy::NextPow2);
+        let mut w2 = KernelCache::with_store(store.clone(), BucketPolicy::NextPow2);
+        let syms = group_syms(&m, g);
+        let actual: HashMap<SymId, usize> = syms.iter().map(|&s| (s, 6)).collect();
+        w1.get_for(&m, g, &actual).unwrap();
+        w2.get_for(&m, g, &actual).unwrap();
+        assert_eq!(w1.stats.misses, 1);
+        assert_eq!(w2.stats.misses, 0, "second worker must not recompile");
+        assert_eq!(w2.stats.shared_hits, 1);
+        let snap = store.snapshot();
+        assert_eq!(snap.misses, 1, "one compile process-wide");
+    }
+
+    #[test]
+    fn neighbor_prefetch_warms_next_bucket() {
+        let m = chain();
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let dev = Arc::new(Device::cpu().unwrap());
+        let mut cache = KernelCache::new(dev, BucketPolicy::NextPow2);
+        let syms = group_syms(&m, g);
+        let actual: HashMap<SymId, usize> = syms.iter().map(|&s| (s, 6)).collect();
+        cache.get_for(&m, g, &actual).unwrap();
+        let sig = signature(&m, g);
+        cache.prefetch_neighbor(&m, g, &sig, &actual).unwrap();
+        cache.store().quiesce();
+        // Bucket 8 was demand-compiled; its pow2 neighbor 16 is now warm.
+        let store_sig = format!("fused:{sig}");
+        assert!(cache.store().is_ready(&store_sig, &[16]));
+        // Traffic arriving at the neighbor stalls zero and compiles nothing.
+        let misses = cache.stats.misses;
+        let actual16: HashMap<SymId, usize> = syms.iter().map(|&s| (s, 13)).collect();
+        cache.get_for(&m, g, &actual16).unwrap();
+        assert_eq!(cache.stats.misses, misses, "warmed bucket must not compile");
+        assert_eq!(cache.stats.shared_hits, 1);
     }
 }

@@ -15,9 +15,11 @@
 
 pub mod cache;
 pub mod hlo;
+pub mod store;
 
 pub use cache::{CacheStats, KernelCache};
 pub use hlo::{emit_group, KernelSpec};
+pub use store::{Fetch, KernelStore, StoreSnapshot};
 
 /// How dynamic extents map to compiled-kernel extents.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

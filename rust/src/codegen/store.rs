@@ -1,0 +1,495 @@
+//! The process-wide, shard-locked compiled-kernel store plus the
+//! asynchronous compile service behind it.
+//!
+//! DISC's §2 pathology is compilation overhead leaking into serving
+//! latency. PR 1–2 removed *recurring* compilation from the hot path (one
+//! compile per pattern×bucket); this module removes the remaining two
+//! leaks a multi-worker serving process would still pay:
+//!
+//! 1. **Duplicate compiles across workers.** M executor workers used to
+//!    own M private kernel caches, so each worker compiled every
+//!    pattern×bucket it touched. The [`KernelStore`] is shared by every
+//!    [`crate::codegen::KernelCache`] handle (and by the GEMM library's
+//!    entry/prepare-kernel caches) in the process: each (signature,
+//!    bucketed-extents) key compiles **exactly once**, whichever worker
+//!    gets there first. Lookups are sharded (`SHARDS` independent mutexes
+//!    keyed by key hash) so concurrent hot-path hits do not serialize on
+//!    one lock.
+//! 2. **Inline compilation on the request thread.** A miss *enqueues* the
+//!    compile on the background [`CompilePool`] instead of running it on
+//!    the serving thread. First-touch requests still block — correctness
+//!    requires the kernel — but the wait is observable
+//!    (`StoreStats::stall`, surfaced as `RunMetrics::compile_stall`), and
+//!    *speculative* warms ([`KernelStore::prefetch`], driven by the
+//!    executor's neighbor-bucket heuristic) overlap compilation with
+//!    serving entirely: by the time traffic reaches the next bucket, the
+//!    kernel is resident and the stall is zero.
+//!
+//! Single-flight: a concurrent miss on a key that is already compiling
+//! waits on the first caller's in-flight slot rather than compiling again
+//! (`StoreStats::dedup_hits` counts these joins).
+
+use crate::runtime::pjrt::{Device, Executable};
+use anyhow::{anyhow, Result};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Store key: a shape-agnostic kernel identity (pattern signature,
+/// namespaced by producer — `fused:`, `lib:gemm`, `lib:prep`) plus the
+/// bucketed extents the kernel was specialized to.
+pub type StoreKey = (String, Vec<usize>);
+
+/// Number of independently locked shards. Small and fixed: the store holds
+/// at most a few hundred entries; the point is that M workers hitting
+/// *different* keys never contend.
+const SHARDS: usize = 8;
+
+/// Background compile threads. Two is enough to overlap a speculative warm
+/// with a first-touch compile without oversubscribing the test machines.
+const COMPILE_THREADS: usize = 2;
+
+/// One in-flight compilation; waiters block on the condvar until `state`
+/// leaves `Pending`. Errors are broadcast to every waiter as strings (the
+/// pool thread cannot hand the same `anyhow::Error` to N callers).
+struct Flight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+enum FlightState {
+    Pending,
+    Done(std::result::Result<Arc<Executable>, String>),
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { state: Mutex::new(FlightState::Pending), cv: Condvar::new() }
+    }
+
+    fn finish(&self, r: std::result::Result<Arc<Executable>, String>) {
+        *self.state.lock().expect("flight lock") = FlightState::Done(r);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<Arc<Executable>> {
+        let mut st = self.state.lock().expect("flight lock");
+        while matches!(*st, FlightState::Pending) {
+            st = self.cv.wait(st).expect("flight wait");
+        }
+        match &*st {
+            FlightState::Done(Ok(e)) => Ok(e.clone()),
+            FlightState::Done(Err(msg)) => Err(anyhow!("kernel compile failed: {msg}")),
+            FlightState::Pending => unreachable!(),
+        }
+    }
+}
+
+enum Slot {
+    Ready(Arc<Executable>),
+    InFlight(Arc<Flight>),
+}
+
+type Shard = Mutex<HashMap<StoreKey, Slot>>;
+
+/// Store-level counters (process totals, atomics — the per-worker view
+/// lives in `CacheStats` / `LibraryStats`).
+#[derive(Default)]
+pub struct StoreStats {
+    /// Lookup found a ready executable.
+    hits: AtomicU64,
+    /// Lookup initiated a compile (the only counter that costs a compile
+    /// on the demand path — "misses flat across workers" is the
+    /// compile-once claim).
+    misses: AtomicU64,
+    /// Lookup joined another caller's in-flight compile (single-flight).
+    dedup_hits: AtomicU64,
+    /// Background warms enqueued by `prefetch` (not counted as misses:
+    /// they are off the request path by construction).
+    prefetches: AtomicU64,
+    /// Nanoseconds callers spent blocked waiting on the compile service.
+    stall_ns: AtomicU64,
+    /// Nanoseconds of actual device compilation performed by the pool.
+    compile_ns: AtomicU64,
+}
+
+/// Plain snapshot of [`StoreStats`] for reporting.
+#[derive(Debug, Clone, Default)]
+pub struct StoreSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub dedup_hits: u64,
+    pub prefetches: u64,
+    pub stall: Duration,
+    pub compile_time: Duration,
+    pub entries: usize,
+}
+
+/// How one `get_or_compile` call was served — the caller folds this into
+/// its per-handle stats (`CacheStats`, `LibraryStats`) and `RunMetrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fetch {
+    /// This call initiated the compile (first touch of the key).
+    pub compiled: bool,
+    /// This call joined an in-flight compile started by another caller.
+    pub deduped: bool,
+    /// Wall time this call spent blocked on the compile service (zero on
+    /// a ready hit — the steady-state guarantee).
+    pub stall: Duration,
+}
+
+struct Job {
+    key: StoreKey,
+    name: String,
+    hlo: String,
+    flight: Arc<Flight>,
+}
+
+/// The background compile service: a bounded set of threads draining one
+/// job queue, compiling HLO on the shared device and publishing results
+/// into the store's shards.
+struct CompilePool {
+    tx: Option<Sender<Job>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl CompilePool {
+    fn spawn(device: Arc<Device>, shards: Arc<Vec<Shard>>, stats: Arc<StoreStats>) -> CompilePool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let threads = (0..COMPILE_THREADS)
+            .map(|i| {
+                let rx = rx.clone();
+                let device = device.clone();
+                let shards = shards.clone();
+                let stats = stats.clone();
+                std::thread::Builder::new()
+                    .name(format!("disc-compile-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("compile queue lock");
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { return };
+                        let result = device.compile_hlo_text_named(&job.name, &job.hlo);
+                        let shard = &shards[shard_of(&job.key)];
+                        match result {
+                            Ok(exe) => {
+                                stats
+                                    .compile_ns
+                                    .fetch_add(exe.compile_time.as_nanos() as u64, Ordering::Relaxed);
+                                let exe = Arc::new(exe);
+                                shard
+                                    .lock()
+                                    .expect("kernel shard lock")
+                                    .insert(job.key.clone(), Slot::Ready(exe.clone()));
+                                job.flight.finish(Ok(exe));
+                            }
+                            Err(e) => {
+                                // Drop the in-flight slot so a later lookup
+                                // may retry; every current waiter sees the
+                                // error.
+                                shard.lock().expect("kernel shard lock").remove(&job.key);
+                                job.flight.finish(Err(format!("{e:#}")));
+                            }
+                        }
+                    })
+                    .expect("spawning compile thread")
+            })
+            .collect();
+        CompilePool { tx: Some(tx), threads }
+    }
+}
+
+impl Drop for CompilePool {
+    fn drop(&mut self) {
+        // Closing the channel stops the workers after the queue drains.
+        self.tx.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn shard_of(key: &StoreKey) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % SHARDS
+}
+
+/// The shared kernel store. One per process in a serving deployment
+/// (`DiscCompiler` owns it and threads it through every model/worker it
+/// builds); tests may build private ones.
+pub struct KernelStore {
+    device: Arc<Device>,
+    shards: Arc<Vec<Shard>>,
+    stats: Arc<StoreStats>,
+    /// Lazily spawned: plenty of tests touch a store once or never, and
+    /// should not pay two thread spawns for it.
+    pool: Mutex<Option<CompilePool>>,
+}
+
+impl KernelStore {
+    pub fn new(device: Arc<Device>) -> KernelStore {
+        let shards = Arc::new((0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect::<Vec<_>>());
+        KernelStore {
+            device,
+            shards,
+            stats: Arc::new(StoreStats::default()),
+            pool: Mutex::new(None),
+        }
+    }
+
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
+    }
+
+    /// Enqueue a job on the compile pool, spawning it on first use.
+    fn submit(&self, job: Job) {
+        let mut pool = self.pool.lock().expect("compile pool lock");
+        let pool = pool.get_or_insert_with(|| {
+            CompilePool::spawn(self.device.clone(), self.shards.clone(), self.stats.clone())
+        });
+        // Send can only fail if the workers died; surface that to waiters
+        // rather than deadlocking them.
+        if let Some(tx) = &pool.tx {
+            if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
+                self.fail_inflight(&job.key, &job.flight, "compile pool is down".into());
+            }
+        }
+    }
+
+    /// Resolve an in-flight slot with an error and remove it so later
+    /// lookups can retry.
+    fn fail_inflight(&self, key: &StoreKey, flight: &Arc<Flight>, msg: String) {
+        self.shards[shard_of(key)].lock().expect("kernel shard lock").remove(key);
+        flight.finish(Err(msg));
+    }
+
+    /// Look up the executable for `(sig, extents)`, compiling it through
+    /// the background pool on a miss. `emit` produces `(kernel_name,
+    /// hlo_text)` and runs only when this call actually owns the compile.
+    ///
+    /// Single-flight: concurrent misses on the same key block on one
+    /// compile. The returned [`Fetch`] says how the call was served.
+    pub fn get_or_compile<F>(
+        &self,
+        sig: &str,
+        extents: &[usize],
+        emit: F,
+    ) -> Result<(Arc<Executable>, Fetch)>
+    where
+        F: FnOnce() -> Result<(String, String)>,
+    {
+        let key: StoreKey = (sig.to_string(), extents.to_vec());
+        let flight;
+        let joined;
+        {
+            let mut map = self.shards[shard_of(&key)].lock().expect("kernel shard lock");
+            match map.get(&key) {
+                Some(Slot::Ready(e)) => {
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((e.clone(), Fetch::default()));
+                }
+                Some(Slot::InFlight(f)) => {
+                    flight = f.clone();
+                    joined = true;
+                }
+                None => {
+                    let f = Arc::new(Flight::new());
+                    map.insert(key.clone(), Slot::InFlight(f.clone()));
+                    flight = f;
+                    joined = false;
+                }
+            }
+        }
+
+        let t0 = Instant::now();
+        if joined {
+            self.stats.dedup_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            match emit() {
+                Ok((name, hlo)) => self.submit(Job { key, name, hlo, flight: flight.clone() }),
+                Err(e) => self.fail_inflight(&key, &flight, format!("{e:#}")),
+            }
+        }
+        let exe = flight.wait();
+        let stall = t0.elapsed();
+        self.stats.stall_ns.fetch_add(stall.as_nanos() as u64, Ordering::Relaxed);
+        exe.map(|e| (e, Fetch { compiled: !joined, deduped: joined, stall }))
+    }
+
+    /// Speculatively warm `(sig, extents)`: if the key is neither resident
+    /// nor in flight, enqueue its compile and return immediately. `emit`
+    /// runs (on the calling thread — it is cheap string emission) only
+    /// when a warm is actually enqueued. Never blocks on compilation.
+    pub fn prefetch<F>(&self, sig: &str, extents: &[usize], emit: F)
+    where
+        F: FnOnce() -> Result<(String, String)>,
+    {
+        let key: StoreKey = (sig.to_string(), extents.to_vec());
+        let flight = {
+            let mut map = self.shards[shard_of(&key)].lock().expect("kernel shard lock");
+            if map.contains_key(&key) {
+                return;
+            }
+            let f = Arc::new(Flight::new());
+            map.insert(key.clone(), Slot::InFlight(f.clone()));
+            f
+        };
+        self.stats.prefetches.fetch_add(1, Ordering::Relaxed);
+        match emit() {
+            Ok((name, hlo)) => self.submit(Job { key, name, hlo, flight }),
+            Err(e) => self.fail_inflight(&key, &flight, format!("{e:#}")),
+        }
+    }
+
+    /// Is the key resident (compiled and ready)? Used by tests and by the
+    /// serving bench to verify warms landed.
+    pub fn is_ready(&self, sig: &str, extents: &[usize]) -> bool {
+        let key: StoreKey = (sig.to_string(), extents.to_vec());
+        matches!(
+            self.shards[shard_of(&key)].lock().expect("kernel shard lock").get(&key),
+            Some(Slot::Ready(_))
+        )
+    }
+
+    /// Block until no lookup would stall: every in-flight compile (demand
+    /// or prefetch) has resolved. Test/bench helper.
+    pub fn quiesce(&self) {
+        let flights: Vec<Arc<Flight>> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                s.lock()
+                    .expect("kernel shard lock")
+                    .values()
+                    .filter_map(|slot| match slot {
+                        Slot::InFlight(f) => Some(f.clone()),
+                        Slot::Ready(_) => None,
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        for f in flights {
+            let _ = f.wait();
+        }
+    }
+
+    pub fn snapshot(&self) -> StoreSnapshot {
+        let entries = self
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("kernel shard lock").len())
+            .sum();
+        StoreSnapshot {
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            dedup_hits: self.stats.dedup_hits.load(Ordering::Relaxed),
+            prefetches: self.stats.prefetches.load(Ordering::Relaxed),
+            stall: Duration::from_nanos(self.stats.stall_ns.load(Ordering::Relaxed)),
+            compile_time: Duration::from_nanos(self.stats.compile_ns.load(Ordering::Relaxed)),
+            entries,
+        }
+    }
+}
+
+const _: fn() = || {
+    fn ok<T: Send + Sync>() {}
+    ok::<KernelStore>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Barrier;
+
+    const HLO: &str = "HloModule t, entry_computation_layout={(f32[4]{0})->f32[4]{0}}\n\n\
+         ENTRY main {\n  p0 = f32[4]{0} parameter(0)\n  ROOT t = f32[4]{0} tanh(p0)\n}\n";
+
+    fn store() -> Arc<KernelStore> {
+        Arc::new(KernelStore::new(Arc::new(Device::cpu().unwrap())))
+    }
+
+    #[test]
+    fn compiles_once_and_hits_after() {
+        let s = store();
+        let (e1, f1) = s
+            .get_or_compile("t:test", &[4], || Ok(("k".into(), HLO.into())))
+            .unwrap();
+        assert!(f1.compiled);
+        let (e2, f2) = s
+            .get_or_compile("t:test", &[4], || panic!("must not re-emit"))
+            .unwrap();
+        assert!(!f2.compiled && !f2.deduped);
+        assert_eq!(f2.stall, Duration::ZERO, "ready hit never stalls");
+        assert!(Arc::ptr_eq(&e1, &e2));
+        let snap = s.snapshot();
+        assert_eq!((snap.misses, snap.hits, snap.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_misses_single_flight() {
+        // M threads race one key: exactly one compile, M-1 joins/hits.
+        const M: usize = 4;
+        let s = store();
+        let barrier = Arc::new(Barrier::new(M));
+        let handles: Vec<_> = (0..M)
+            .map(|_| {
+                let s = s.clone();
+                let b = barrier.clone();
+                std::thread::spawn(move || {
+                    b.wait();
+                    let (_, f) = s
+                        .get_or_compile("t:race", &[8], || Ok(("k".into(), HLO.into())))
+                        .unwrap();
+                    f
+                })
+            })
+            .collect();
+        let fetches: Vec<Fetch> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(fetches.iter().filter(|f| f.compiled).count(), 1, "exactly one compile");
+        let snap = s.snapshot();
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.dedup_hits + snap.hits, (M - 1) as u64);
+        assert_eq!(snap.entries, 1);
+    }
+
+    #[test]
+    fn prefetch_overlaps_and_demand_hits() {
+        let s = store();
+        s.prefetch("t:warm", &[16], || Ok(("warm".into(), HLO.into())));
+        s.quiesce();
+        assert!(s.is_ready("t:warm", &[16]));
+        let (_, f) = s
+            .get_or_compile("t:warm", &[16], || panic!("prefetched key must not re-emit"))
+            .unwrap();
+        assert!(!f.compiled);
+        assert_eq!(f.stall, Duration::ZERO, "warmed key is stall-free");
+        let snap = s.snapshot();
+        assert_eq!(snap.prefetches, 1);
+        assert_eq!(snap.misses, 0, "prefetch is not a demand miss");
+        // A second prefetch of a resident key is a no-op.
+        s.prefetch("t:warm", &[16], || panic!("resident key must not re-emit"));
+        assert_eq!(s.snapshot().prefetches, 1);
+    }
+
+    #[test]
+    fn compile_errors_propagate_and_allow_retry() {
+        let s = store();
+        let err = s.get_or_compile("t:bad", &[4], || Ok(("bad".into(), "not hlo".into())));
+        assert!(err.is_err());
+        // The failed slot was dropped: a corrected emit succeeds.
+        let ok = s.get_or_compile("t:bad", &[4], || Ok(("good".into(), HLO.into())));
+        assert!(ok.is_ok());
+        // Emit failure resolves waiters too.
+        let err2 = s.get_or_compile("t:bad2", &[4], || anyhow::bail!("no emitter"));
+        assert!(err2.is_err());
+    }
+}

@@ -2,9 +2,10 @@
 //! → generated runtime flow → executable model, under one of the execution
 //! modes the paper evaluates against.
 
-use crate::codegen::BucketPolicy;
+use crate::codegen::{BucketPolicy, KernelStore};
 use crate::dhlo::Module;
 use crate::fusion::{self, FusionOptions, FusionPlan};
+use crate::library::WeightStore;
 use crate::passes;
 use crate::passes::static_detect::{analyze, PipelineChoice};
 use crate::program::{generate, Program};
@@ -14,7 +15,7 @@ use crate::runtime::pjrt::Device;
 use crate::runtime::tensor::Tensor;
 use crate::vm::Vm;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Execution modes (the systems compared in the paper's evaluation).
@@ -56,6 +57,10 @@ pub struct CompileOptions {
     /// Serve static GEMM weights from the library's persistent device-side
     /// weight cache (upload once per program; see docs/runtime.md).
     pub weight_cache: bool,
+    /// Speculative neighbor-bucket warming: recording a plan also enqueues
+    /// background compiles for the next bucket of every dynamic symbol
+    /// (see `ExecOptions::speculative_warm`).
+    pub speculative_warm: bool,
 }
 
 impl CompileOptions {
@@ -69,6 +74,7 @@ impl CompileOptions {
             plan_cache: true,
             device_resident: true,
             weight_cache: true,
+            speculative_warm: false,
         }
     }
 }
@@ -90,7 +96,7 @@ pub struct CompileReport {
 enum Backend {
     Eager { eager: Eager, module: Module },
     Vm { vm: Vm, module: Module, plan: FusionPlan },
-    Program { exec: Executor, prog: Program },
+    Program { exec: Executor, prog: Arc<Program> },
 }
 
 /// A compiled model: run requests against it; caches persist across runs.
@@ -133,20 +139,56 @@ impl CompiledModel {
             _ => None,
         }
     }
+
+    /// Fork `n` sibling executor workers for multi-worker serving: each
+    /// shares the process-wide kernel store, weight store, and device with
+    /// this model (compile-once / upload-once across all of them) while
+    /// owning its own plan cache and buffer pools. Program backends only —
+    /// the eager/VM baselines model the paper's single-stream deployment.
+    pub fn fork_workers(&self, n: usize) -> Result<(Arc<Program>, Vec<Executor>)> {
+        match &self.backend {
+            Backend::Program { exec, prog } => {
+                Ok((prog.clone(), (0..n).map(|_| exec.fork()).collect()))
+            }
+            _ => anyhow::bail!(
+                "multi-worker serving requires a program backend (disc/static/auto mode)"
+            ),
+        }
+    }
 }
 
-/// The compiler itself: owns the device handle shared by compiled models.
+/// The compiler itself: owns the device handle **and the process-wide
+/// stores** shared by every model (and every forked worker) it compiles —
+/// the shard-locked [`KernelStore`] (each pattern×bucket compiles exactly
+/// once per process, with misses served by the background compile pool)
+/// and the [`WeightStore`] (each static GEMM weight uploads exactly once
+/// per program). A serving process builds one `DiscCompiler` and threads
+/// it everywhere.
 pub struct DiscCompiler {
-    pub device: Rc<Device>,
+    pub device: Arc<Device>,
+    store: Arc<KernelStore>,
+    weights: Arc<WeightStore>,
 }
 
 impl DiscCompiler {
     pub fn new() -> Result<Self> {
-        Ok(DiscCompiler { device: Rc::new(Device::cpu()?) })
+        Ok(Self::with_device(Arc::new(Device::cpu()?)))
     }
 
-    pub fn with_device(device: Rc<Device>) -> Self {
-        DiscCompiler { device }
+    pub fn with_device(device: Arc<Device>) -> Self {
+        let store = Arc::new(KernelStore::new(device.clone()));
+        DiscCompiler { device, store, weights: Arc::new(WeightStore::new()) }
+    }
+
+    /// The process-wide kernel store (benches/tests inspect its snapshot
+    /// for the compile-once-across-workers claim).
+    pub fn kernel_store(&self) -> &Arc<KernelStore> {
+        &self.store
+    }
+
+    /// The process-wide weight store.
+    pub fn weight_store(&self) -> &Arc<WeightStore> {
+        &self.weights
     }
 
     /// Compile a DHLO module under the given options.
@@ -207,7 +249,7 @@ impl DiscCompiler {
             }
             _ => {
                 let prog = generate(module, &plan)?;
-                let exec = Executor::new(
+                let exec = Executor::with_shared(
                     self.device.clone(),
                     ExecOptions {
                         policy,
@@ -215,9 +257,12 @@ impl DiscCompiler {
                         plan_cache: opts.plan_cache,
                         device_resident: opts.device_resident,
                         weight_cache: opts.weight_cache,
+                        speculative_warm: opts.speculative_warm,
                     },
+                    self.store.clone(),
+                    self.weights.clone(),
                 );
-                Backend::Program { exec, prog }
+                Backend::Program { exec, prog: Arc::new(prog) }
             }
         };
 

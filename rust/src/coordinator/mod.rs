@@ -1,27 +1,38 @@
-//! Serving coordinator: the request loop wrapped around compiled models.
+//! Serving coordinator: the multi-worker request loop wrapped around
+//! compiled models.
 //!
 //! DISC's artifact is a compiler, but it is deployed inside serving
 //! systems; this coordinator is the harness the end-to-end example and the
-//! benches drive. It owns a request queue fed by a generator thread,
-//! executes requests against a `CompiledModel` (single executor loop — the
-//! PJRT client and kernel caches are deliberately not shared across
-//! threads, as in the paper's per-stream deployment), and reports latency
-//! percentiles, throughput, and the accumulated metric counters.
+//! benches drive. Since the multi-worker refactor it scales past the
+//! paper's per-stream deployment: [`serve_open_loop`] runs `workers`
+//! executor threads draining **one bounded queue**, every worker sharing
+//! the process-wide kernel store, weight store, and background compile
+//! pool (each pattern×bucket compiles once, each weight uploads once —
+//! whichever worker gets there first) while keeping its own launch-plan
+//! cache and buffer arena. See docs/runtime.md §Concurrency model for the
+//! per-worker vs process-shared split.
 //!
-//! Two drive modes: `serve_closed_loop` (next request issues when the
-//! previous completes — the benches' steady-state measurement) and
-//! `serve_open_loop` (requests arrive at a fixed rate regardless of
-//! completion, exposing queueing under load). Both aggregate `RunMetrics`
-//! with its `+=` semantics, so plan-cache, weight-cache, and transfer
-//! counters read as stream totals. See `docs/architecture.md` for where
-//! the coordinator sits in the pipeline and `docs/runtime.md` for the
-//! executor tiers underneath it.
+//! Drive modes:
+//!
+//! * [`serve_closed_loop`] — next request issues when the previous
+//!   completes (the benches' steady-state measurement, single worker).
+//! * [`serve_open_loop`] — requests arrive on a producer thread at a fixed
+//!   offered rate regardless of completion, exposing queueing under load.
+//!   The producer schedules against **absolute deadlines** (`next += gap`),
+//!   so send overhead never drifts the offered rate, and supports an
+//!   on/off **bursty** arrival mode ([`Arrival::Bursty`]) for the
+//!   multi-tenant study.
+//!
+//! Reports aggregate `RunMetrics` with its `+=` semantics (stream totals),
+//! carry nearest-rank latency and queue-delay percentiles, and — under
+//! multiple workers — a per-worker breakdown.
 
 use crate::compiler::CompiledModel;
 use crate::runtime::metrics::RunMetrics;
 use crate::runtime::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One inference request.
@@ -39,6 +50,82 @@ pub struct Completion {
     pub queue_delay: Duration,
 }
 
+/// Arrival process of the open-loop producer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Evenly spaced arrivals at the offered rate.
+    Uniform,
+    /// On/off bursts: `burst` requests sent back-to-back, then an idle gap
+    /// sized so the *average* offered rate still matches `rate_rps`. This
+    /// is the bursty multi-tenant shape the ROADMAP's open item asks for:
+    /// queue delay concentrates at burst heads and melts with workers.
+    Bursty { burst: usize },
+}
+
+/// Open-loop serving knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Offered request rate (requests/second, averaged over the stream).
+    pub rate_rps: f64,
+    /// Executor worker threads draining the queue. `1` keeps everything on
+    /// the calling thread (any backend); `>1` forks sibling executors from
+    /// the model (program backends only).
+    pub workers: usize,
+    pub arrival: Arrival,
+    /// Bound of the request queue; the producer blocks when it is full
+    /// (backpressure instead of unbounded memory under overload).
+    pub queue_cap: usize,
+}
+
+impl ServeOptions {
+    /// Uniform single-worker open loop at `rate_rps` (the pre-multi-worker
+    /// behavior).
+    pub fn rate(rate_rps: f64) -> ServeOptions {
+        ServeOptions { rate_rps, workers: 1, arrival: Arrival::Uniform, queue_cap: 1024 }
+    }
+
+    pub fn workers(mut self, n: usize) -> ServeOptions {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn bursty(mut self, burst: usize) -> ServeOptions {
+        self.arrival = Arrival::Bursty { burst: burst.max(1) };
+        self
+    }
+}
+
+/// One worker's slice of an open-loop run.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub completed: usize,
+    pub mean: Duration,
+    pub p99: Duration,
+    pub metrics: RunMetrics,
+}
+
+impl WorkerReport {
+    /// Summarize one worker's completions (single source for the mean /
+    /// nearest-rank math, used by both serve paths).
+    fn summarize(worker: usize, completions: &[Completion], metrics: RunMetrics) -> WorkerReport {
+        let mut lats: Vec<Duration> = completions.iter().map(|c| c.latency).collect();
+        lats.sort_unstable();
+        let mean = if lats.is_empty() {
+            Duration::ZERO
+        } else {
+            lats.iter().sum::<Duration>() / lats.len() as u32
+        };
+        WorkerReport {
+            worker,
+            completed: completions.len(),
+            mean,
+            p99: nearest_rank(&lats, 0.99),
+            metrics,
+        }
+    }
+}
+
 /// Aggregate serving report.
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
@@ -48,31 +135,58 @@ pub struct ServeReport {
     pub p95: Duration,
     pub p99: Duration,
     pub mean: Duration,
+    /// Nearest-rank percentiles of queue delay (time between arrival and a
+    /// worker picking the request up) — the congestion signal the worker
+    /// sweep is about.
+    pub queue_p50: Duration,
+    pub queue_p99: Duration,
     pub throughput_rps: f64,
     pub metrics: RunMetrics,
+    /// Per-worker breakdown (one entry per worker on multi-worker runs;
+    /// single entry otherwise).
+    pub per_worker: Vec<WorkerReport>,
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample: the smallest
+/// value with at least `q·n` samples at or below it (`sorted[⌈q·n⌉ − 1]`).
+/// The previous `((n−1)·q) as usize` pick *floored*, which collapsed p99
+/// onto p95 for small streams and systematically understated tails.
+fn nearest_rank(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 impl ServeReport {
     fn from_completions(
-        mut lat: Vec<Completion>,
+        lat: Vec<Completion>,
         wall: Duration,
         metrics: RunMetrics,
+        per_worker: Vec<WorkerReport>,
     ) -> ServeReport {
         if lat.is_empty() {
-            return ServeReport { wall, metrics, ..Default::default() };
+            return ServeReport { wall, metrics, per_worker, ..Default::default() };
         }
-        lat.sort_by_key(|c| c.latency);
-        let pick = |q: f64| lat[((lat.len() - 1) as f64 * q) as usize].latency;
-        let mean = lat.iter().map(|c| c.latency).sum::<Duration>() / lat.len() as u32;
+        let mut latencies: Vec<Duration> = lat.iter().map(|c| c.latency).collect();
+        latencies.sort_unstable();
+        let mut queue: Vec<Duration> = lat.iter().map(|c| c.queue_delay).collect();
+        queue.sort_unstable();
+        let mean = latencies.iter().sum::<Duration>() / latencies.len() as u32;
         ServeReport {
             completed: lat.len(),
             wall,
-            p50: pick(0.50),
-            p95: pick(0.95),
-            p99: pick(0.99),
+            p50: nearest_rank(&latencies, 0.50),
+            p95: nearest_rank(&latencies, 0.95),
+            p99: nearest_rank(&latencies, 0.99),
             mean,
+            queue_p50: nearest_rank(&queue, 0.50),
+            queue_p99: nearest_rank(&queue, 0.99),
             throughput_rps: lat.len() as f64 / wall.as_secs_f64().max(1e-9),
             metrics,
+            per_worker,
         }
     }
 }
@@ -96,44 +210,153 @@ pub fn serve_closed_loop(
             queue_delay: Duration::ZERO,
         });
     }
-    Ok(ServeReport::from_completions(completions, start.elapsed(), metrics))
+    Ok(ServeReport::from_completions(completions, start.elapsed(), metrics, Vec::new()))
 }
 
-/// Open-loop serving: a producer thread feeds the queue at a fixed rate
-/// while this thread (owning the model — PJRT state is not `Send`) drains
-/// it. Queue delay shows up in latency, as in a real deployment.
+/// Spawn the open-loop producer: absolute-deadline scheduling (the gap is
+/// added to the *previous deadline*, never to "now", so per-send overhead
+/// cannot accumulate into the offered rate) with optional on/off bursts.
+fn spawn_producer(
+    tx: mpsc::SyncSender<Request>,
+    stream: Vec<Vec<Tensor>>,
+    rate_rps: f64,
+    arrival: Arrival,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let gap = Duration::from_secs_f64(1.0 / rate_rps.max(1e-3));
+        let burst = match arrival {
+            Arrival::Uniform => 1,
+            Arrival::Bursty { burst } => burst.max(1),
+        };
+        let mut next_deadline = Instant::now();
+        for (i, inputs) in stream.into_iter().enumerate() {
+            // Burst heads wait for their deadline; the rest of the burst
+            // goes back-to-back. Advancing the deadline by `gap` per
+            // request keeps the average offered rate exact in both modes.
+            if i % burst == 0 {
+                let now = Instant::now();
+                if next_deadline > now {
+                    std::thread::sleep(next_deadline - now);
+                }
+            }
+            next_deadline += gap;
+            if tx.send(Request { id: i as u64, inputs, arrived: Instant::now() }).is_err() {
+                return; // consumers died (error path): stop offering
+            }
+        }
+    })
+}
+
+/// Open-loop serving: a producer thread feeds one bounded queue at the
+/// offered rate while `opts.workers` executor threads drain it. Queue
+/// delay shows up in latency, as in a real deployment.
+///
+/// With `workers == 1` the calling thread drains the queue against the
+/// model directly (any backend). With more, sibling executors are forked
+/// from the model (see [`CompiledModel::fork_workers`]): per-worker plan
+/// caches, shared kernel/weight stores — the compile-once, upload-once
+/// serving engine.
 pub fn serve_open_loop(
     model: &mut CompiledModel,
     stream: Vec<Vec<Tensor>>,
-    rate_rps: f64,
+    opts: &ServeOptions,
 ) -> Result<ServeReport> {
-    let (tx, rx) = mpsc::channel::<Request>();
     let n = stream.len();
-    let producer = std::thread::spawn(move || {
-        let gap = Duration::from_secs_f64(1.0 / rate_rps.max(1e-3));
-        for (i, inputs) in stream.into_iter().enumerate() {
-            let _ = tx.send(Request { id: i as u64, inputs, arrived: Instant::now() });
-            std::thread::sleep(gap);
+    if opts.workers <= 1 {
+        let (tx, rx) = mpsc::sync_channel::<Request>(opts.queue_cap.max(1));
+        let producer = spawn_producer(tx, stream, opts.rate_rps, opts.arrival);
+        let start = Instant::now();
+        let mut completions = Vec::with_capacity(n);
+        let mut metrics = RunMetrics::default();
+        while completions.len() < n {
+            let req = rx.recv().context("open-loop producer hung up early")?;
+            let queue_delay = req.arrived.elapsed();
+            let t0 = Instant::now();
+            let out = model.run(&req.inputs)?;
+            metrics += &out.metrics;
+            completions.push(Completion {
+                id: req.id,
+                latency: queue_delay + t0.elapsed(),
+                queue_delay,
+            });
         }
-    });
-
-    let start = Instant::now();
-    let mut completions = Vec::with_capacity(n);
-    let mut metrics = RunMetrics::default();
-    while completions.len() < n {
-        let req = rx.recv()?;
-        let queue_delay = req.arrived.elapsed();
-        let t0 = Instant::now();
-        let out = model.run(&req.inputs)?;
-        metrics += &out.metrics;
-        completions.push(Completion {
-            id: req.id,
-            latency: queue_delay + t0.elapsed(),
-            queue_delay,
-        });
+        producer.join().ok();
+        let wall = start.elapsed();
+        let per_worker = vec![WorkerReport::summarize(0, &completions, metrics.clone())];
+        return Ok(ServeReport::from_completions(completions, wall, metrics, per_worker));
     }
+
+    // Multi-worker: fork sibling executors and drain the shared queue.
+    let (prog, workers) = model.fork_workers(opts.workers)?;
+    let (tx, rx) = mpsc::sync_channel::<Request>(opts.queue_cap.max(1));
+    let rx = Arc::new(Mutex::new(rx));
+    let producer = spawn_producer(tx, stream, opts.rate_rps, opts.arrival);
+    let start = Instant::now();
+
+    let handles: Vec<_> = workers
+        .into_iter()
+        .enumerate()
+        .map(|(wi, mut exec)| {
+            let rx = rx.clone();
+            let prog = prog.clone();
+            std::thread::Builder::new()
+                .name(format!("disc-worker-{wi}"))
+                .spawn(move || -> Result<(usize, Vec<Completion>, RunMetrics)> {
+                    let mut completions = Vec::new();
+                    let mut metrics = RunMetrics::default();
+                    loop {
+                        // Hold the receiver lock only for the dequeue; the
+                        // (long) model run happens outside it.
+                        let req = {
+                            let guard = rx.lock().expect("request queue lock");
+                            guard.recv()
+                        };
+                        let Ok(req) = req else { break };
+                        let queue_delay = req.arrived.elapsed();
+                        let t0 = Instant::now();
+                        let out = exec
+                            .run(&prog, &req.inputs)
+                            .with_context(|| format!("worker {wi}, request {}", req.id))?;
+                        metrics += &out.metrics;
+                        completions.push(Completion {
+                            id: req.id,
+                            latency: queue_delay + t0.elapsed(),
+                            queue_delay,
+                        });
+                    }
+                    Ok((wi, completions, metrics))
+                })
+                .expect("spawning worker thread")
+        })
+        .collect();
+
+    let mut completions: Vec<Completion> = Vec::with_capacity(n);
+    let mut metrics = RunMetrics::default();
+    let mut per_worker: Vec<WorkerReport> = Vec::with_capacity(handles.len());
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join().expect("worker thread panicked") {
+            Ok((wi, comps, m)) => {
+                per_worker.push(WorkerReport::summarize(wi, &comps, m.clone()));
+                metrics += &m;
+                completions.extend(comps);
+            }
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    // Workers have exited (normally when the producer closed the queue, or
+    // on error). Dropping our receiver handle disconnects a producer that
+    // is still blocked on a full queue after an all-workers failure, so the
+    // join below cannot deadlock.
+    drop(rx);
     producer.join().ok();
-    Ok(ServeReport::from_completions(completions, start.elapsed(), metrics))
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    anyhow::ensure!(completions.len() == n, "lost requests: {} of {n} completed", completions.len());
+    let wall = start.elapsed();
+    per_worker.sort_by_key(|w| w.worker);
+    Ok(ServeReport::from_completions(completions, wall, metrics, per_worker))
 }
 
 #[cfg(test)]
@@ -165,8 +388,96 @@ mod tests {
         let mut model = small_model();
         let w = crate::workloads::tts::workload();
         let stream = w.request_stream(5, 43);
-        let report = serve_open_loop(&mut model, stream, 200.0).unwrap();
+        let report = serve_open_loop(&mut model, stream, &ServeOptions::rate(200.0)).unwrap();
         assert_eq!(report.completed, 5);
         assert!(report.mean > Duration::ZERO);
+        assert_eq!(report.per_worker.len(), 1);
+    }
+
+    #[test]
+    fn multi_worker_open_loop_completes_and_aggregates() {
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(12, 44);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(5_000.0).workers(3),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.per_worker.len(), 3);
+        assert_eq!(report.per_worker.iter().map(|wr| wr.completed).sum::<usize>(), 12);
+        assert!(report.metrics.mem_kernels > 0, "metrics aggregate across workers");
+    }
+
+    #[test]
+    fn multi_worker_requires_program_backend() {
+        let w = crate::workloads::tts::workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Eager)).unwrap();
+        let err = serve_open_loop(
+            &mut model,
+            w.request_stream(2, 45),
+            &ServeOptions::rate(100.0).workers(2),
+        );
+        assert!(err.is_err(), "eager backend cannot fork workers");
+    }
+
+    #[test]
+    fn bursty_arrival_completes_the_stream() {
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(9, 46);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(3_000.0).workers(2).bursty(4),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 9);
+        assert!(report.queue_p99 >= report.queue_p50);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_do_not_collapse_tails() {
+        // 100 distinct latencies 1..=100 ms.
+        let mk = |ms: u64| Duration::from_millis(ms);
+        let sorted: Vec<Duration> = (1..=100).map(mk).collect();
+        assert_eq!(nearest_rank(&sorted, 0.50), mk(50));
+        assert_eq!(nearest_rank(&sorted, 0.95), mk(95));
+        assert_eq!(nearest_rank(&sorted, 0.99), mk(99));
+        assert_eq!(nearest_rank(&sorted, 1.0), mk(100));
+        // Small stream: p99 is the max (the floored pick used to report
+        // the 9th of 10 samples for BOTH p95 and p99, understating the
+        // tail; the old formula gave index 8 = 9ms here).
+        let small: Vec<Duration> = (1..=10).map(mk).collect();
+        assert_eq!(nearest_rank(&small, 0.99), mk(10));
+        assert_eq!(nearest_rank(&small, 0.50), mk(5));
+        // Degenerate cases.
+        assert_eq!(nearest_rank(&[], 0.99), Duration::ZERO);
+        assert_eq!(nearest_rank(&[mk(7)], 0.01), mk(7));
+    }
+
+    #[test]
+    fn producer_deadline_scheduling_holds_offered_rate() {
+        // 30 requests at 1 kHz must take ~30ms of producer time, not
+        // 30×(gap + per-send overhead). Generous upper bound for CI noise;
+        // the old sleep-after-send producer also always passed the lower
+        // bound, so the assertion that catches the drift bug is the upper.
+        let (tx, rx) = mpsc::sync_channel::<Request>(64);
+        let stream: Vec<Vec<Tensor>> = (0..30).map(|_| Vec::new()).collect();
+        let t0 = Instant::now();
+        let h = spawn_producer(tx, stream, 1_000.0, Arrival::Uniform);
+        let mut got = 0;
+        while rx.recv().is_ok() {
+            got += 1;
+        }
+        h.join().unwrap();
+        let took = t0.elapsed();
+        assert_eq!(got, 30);
+        assert!(took >= Duration::from_millis(25), "offered faster than the rate: {took:?}");
+        assert!(took <= Duration::from_millis(250), "producer drifted: {took:?}");
     }
 }

@@ -25,14 +25,24 @@
 //!   device across calls, requests, and plan replays: each weight is
 //!   padded and uploaded once per program, then served by reference.
 //!   Installed launch plans *pin* the weights they reference; unpinned
-//!   entries are evicted in LRU order whenever residency exceeds
-//!   [`GemmLibrary::max_weight_bytes`].
+//!   entries are evicted in LRU order whenever residency exceeds the
+//!   store's byte budget ([`GemmLibrary::set_max_weight_bytes`]).
+//!
+//! Concurrency model (see docs/runtime.md §Concurrency): a `GemmLibrary`
+//! is **per worker** — its entry/prep memo maps, buffer pool, and
+//! [`LibraryStats`] are single-threaded hot-path state — but it backs onto
+//! two **process-shared** stores: the [`crate::codegen::KernelStore`] (so
+//! M workers build each GEMM/prepare executable exactly once) and the
+//! [`WeightStore`] (so each weight uploads exactly once per program,
+//! whichever worker touches it first, with pins accumulated across all
+//! workers' plans).
 //!
 //! All host↔device payloads the library moves are accounted in
 //! [`LibraryStats`] (`h2d_bytes`/`d2h_bytes`), which the executor folds
 //! into `RunMetrics` — the bench tables and the metrics therefore agree on
 //! library transfer traffic.
 
+use crate::codegen::store::KernelStore;
 use crate::codegen::BucketPolicy;
 use crate::dhlo::{DType, ValueId};
 use crate::runtime::buffers::BufferPool;
@@ -41,7 +51,7 @@ use crate::runtime::pjrt::{Device, DeviceTensor, Executable};
 use crate::runtime::tensor::{Data, Tensor};
 use anyhow::{ensure, Result};
 use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// GEMM problem key: `[b?, m, k] · [b?, k, n]`.
@@ -95,17 +105,193 @@ pub struct WeightKey {
 /// One resident weight: the padded device buffer plus the validation
 /// metadata that keeps Param-backed weights honest.
 struct WeightEntry {
-    dev: Rc<DeviceTensor>,
+    dev: Arc<DeviceTensor>,
     /// Fingerprint of the *source* tensor (dims + raw bits); checked per
     /// call for Param weights, whose contents could change between
     /// requests even at a fixed shape.
     fingerprint: u64,
     /// Source (unpadded) dims, for a cheap shape-change reject.
     src_dims: Vec<usize>,
-    /// Number of installed launch plans referencing this entry. Pinned
-    /// entries are never evicted by the byte budget.
+    /// Number of installed launch plans referencing this entry (summed
+    /// across every worker's plan cache). Pinned entries are never evicted
+    /// by the byte budget.
     pins: usize,
     bytes: u64,
+}
+
+/// The process-shared persistent weight cache. One mutex over the whole
+/// table: weight traffic is one lookup per static GEMM operand per call —
+/// orders of magnitude rarer than kernel-store lookups — and holding the
+/// lock across the upload makes *upload-once* hold even when M workers
+/// race the same cold weight.
+pub struct WeightStore {
+    inner: Mutex<WeightStoreInner>,
+}
+
+struct WeightStoreInner {
+    weights: HashMap<WeightKey, WeightEntry>,
+    /// Insertion/use order, for LRU eviction of unpinned entries.
+    lru: VecDeque<WeightKey>,
+    /// Byte budget for resident weights; pinned entries never count
+    /// against evictability. Default effectively unbounded.
+    max_bytes: u64,
+    evictions: u64,
+}
+
+impl Default for WeightStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WeightStore {
+    pub fn new() -> WeightStore {
+        WeightStore {
+            inner: Mutex::new(WeightStoreInner {
+                weights: HashMap::new(),
+                lru: VecDeque::new(),
+                max_bytes: u64::MAX,
+                evictions: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, WeightStoreInner> {
+        self.inner.lock().expect("weight store lock")
+    }
+
+    /// Set the residency budget and enforce it immediately.
+    pub fn set_max_bytes(&self, bytes: u64) {
+        let mut inner = self.lock();
+        inner.max_bytes = bytes;
+        inner.enforce();
+    }
+
+    /// Bytes of weights currently resident on device.
+    pub fn resident_bytes(&self) -> u64 {
+        self.lock().weights.values().map(|e| e.bytes).sum()
+    }
+
+    /// Budget evictions performed so far.
+    pub fn evictions(&self) -> u64 {
+        self.lock().evictions
+    }
+
+    /// A launch plan referencing this weight was installed: protect the
+    /// entry from budget eviction while the plan is cached. Returns
+    /// whether a pin was actually taken — a missing entry (already
+    /// budget-evicted) is fine, the next fetch re-uploads, but the caller
+    /// must then *not* issue a matching unpin (it would steal a pin owned
+    /// by another live plan).
+    #[must_use]
+    pub fn pin(&self, key: &WeightKey) -> bool {
+        match self.lock().weights.get_mut(key) {
+            Some(e) => {
+                e.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// A plan cache dropped a plan referencing this weight; entries left
+    /// unpinned become evictable when residency exceeds the budget.
+    pub fn unpin(&self, key: &WeightKey) {
+        let mut inner = self.lock();
+        if let Some(e) = inner.weights.get_mut(key) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+        inner.enforce();
+    }
+
+    /// Fetch the resident copy of a weight, or insert it via `upload`.
+    /// Returns `(buffer, hit)`. `validate` re-fingerprints the source
+    /// (Param weights: same shape, possibly new contents); constants skip
+    /// it. The upload runs under the store lock — see the type docs.
+    pub fn get_or_upload<F>(
+        &self,
+        key: WeightKey,
+        src: &Tensor,
+        pad_dims: &[usize],
+        validate: bool,
+        upload: F,
+    ) -> Result<(Arc<DeviceTensor>, bool)>
+    where
+        F: FnOnce() -> Result<DeviceTensor>,
+    {
+        let fp = if validate { Some(fingerprint(src)) } else { None };
+        let mut inner = self.lock();
+        if let Some(e) = inner.weights.get(&key) {
+            if e.dev.dims == pad_dims
+                && e.src_dims == src.dims
+                && fp.unwrap_or(e.fingerprint) == e.fingerprint
+            {
+                let dev = e.dev.clone();
+                // Refresh recency so the budget evicts cold entries first.
+                inner.lru.retain(|k| k != &key);
+                inner.lru.push_back(key);
+                return Ok((dev, true));
+            }
+        }
+        let dev = Arc::new(upload()?);
+        let bytes = dev.byte_size() as u64;
+        let fp = fp.unwrap_or_else(|| fingerprint(src));
+        let pins = inner.weights.remove(&key).map(|e| e.pins).unwrap_or(0);
+        inner.weights.insert(
+            key.clone(),
+            WeightEntry {
+                dev: dev.clone(),
+                fingerprint: fp,
+                src_dims: src.dims.clone(),
+                pins,
+                bytes,
+            },
+        );
+        inner.lru.retain(|k| k != &key);
+        inner.lru.push_back(key);
+        inner.enforce();
+        Ok((dev, false))
+    }
+}
+
+impl WeightStoreInner {
+    fn resident(&self) -> u64 {
+        self.weights.values().map(|e| e.bytes).sum()
+    }
+
+    fn enforce(&mut self) {
+        while self.resident() > self.max_bytes {
+            let evictable = self
+                .lru
+                .iter()
+                .position(|k| self.weights.get(k).map(|e| e.pins).unwrap_or(0) == 0);
+            let Some(pos) = evictable else { break };
+            let k = self.lru.remove(pos).unwrap();
+            if self.weights.remove(&k).is_some() {
+                self.evictions += 1;
+            }
+        }
+    }
+}
+
+/// FNV-1a style fingerprint over dims + raw element bits.
+fn fingerprint(t: &Tensor) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u64| {
+        h ^= b;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    eat(t.dims.len() as u64);
+    for &d in &t.dims {
+        eat(d as u64);
+    }
+    match &t.data {
+        Data::F32(v) => v.iter().for_each(|x| eat(x.to_bits() as u64)),
+        Data::I64(v) => v.iter().for_each(|&x| eat(x as u64)),
+        Data::I32(v) => v.iter().for_each(|&x| eat(x as u32 as u64)),
+        Data::Pred(v) => v.iter().for_each(|&x| eat(x as u64)),
+    }
+    h
 }
 
 #[derive(Debug, Clone, Default)]
@@ -115,6 +301,13 @@ pub struct LibraryStats {
     /// Device-side bucket-adapter ("prepare") kernels compiled.
     pub prep_built: u64,
     pub build_time: Duration,
+    /// Time this handle spent blocked on the shared compile service for
+    /// GEMM/prepare builds (own compiles and single-flight joins alike) —
+    /// folded into `RunMetrics::compile_stall` next to the fused-kernel
+    /// stall.
+    pub build_stall: Duration,
+    /// GEMM/prepare fetches that joined another worker's in-flight compile.
+    pub build_dedup_hits: u64,
     pub exec_time: Duration,
     pub flops: u64,
     pub pregen_hits: u64,
@@ -124,20 +317,23 @@ pub struct LibraryStats {
     /// the result out on real PJRT).
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
-    /// Weight-cache behavior: a hit serves the device-resident buffer by
-    /// reference (zero transfer); a miss pads + uploads.
+    /// Weight-cache behavior observed by *this* handle: a hit serves the
+    /// device-resident buffer by reference (zero transfer); a miss pads +
+    /// uploads. Evictions are a store-level count
+    /// ([`GemmLibrary::weight_evictions`]).
     pub weight_hits: u64,
     pub weight_misses: u64,
-    pub weight_evictions: u64,
 }
 
-/// The kernel library.
+/// The kernel library (one per executor worker; shared stores behind it —
+/// see the module docs).
 pub struct GemmLibrary {
-    device: Rc<Device>,
-    entries: HashMap<GemmKey, Rc<Executable>>,
+    device: Arc<Device>,
+    /// Local memo of store-fetched GEMM executables (lock-free hot path).
+    entries: HashMap<GemmKey, Arc<Executable>>,
     /// Pre-generated (AOT) entries registered from artifacts; these take
     /// priority over on-demand built ones, like the paper's hand-tuned set.
-    pregen: HashMap<GemmKey, Rc<Executable>>,
+    pregen: HashMap<GemmKey, Arc<Executable>>,
     /// Vendor libraries serve *any* shape from a fixed kernel set; we model
     /// that by bucketing the dynamic `m`/batch row dimension (k and n come
     /// from static weights). Without this, a dynamic workload would force
@@ -146,22 +342,17 @@ pub struct GemmLibrary {
     pub m_bucket: BucketPolicy,
     /// Pool for padded-operand scratch (the cached allocator of §4.2.2).
     pool: BufferPool,
-    /// Persistent device-resident weights (see module docs).
-    weights: HashMap<WeightKey, WeightEntry>,
-    /// Insertion/use order of `weights`, for LRU eviction of unpinned
-    /// entries under the byte budget.
-    weight_lru: VecDeque<WeightKey>,
-    /// Byte budget for resident weights. Pinned entries (referenced by an
-    /// installed launch plan) never count against evictability; the
-    /// default is effectively unbounded — serving processes size it from
-    /// device memory.
-    pub max_weight_bytes: u64,
-    /// Device-side bucket adapters: mask actual lanes + pad/crop to the
-    /// entry extents, keyed by `(src_dims, dst_dims)`.
-    prep: HashMap<(Vec<usize>, Vec<usize>), Rc<Executable>>,
+    /// Process-shared compiled-kernel store backing GEMM entry and
+    /// prepare-kernel builds (compile-once across workers).
+    store: Arc<KernelStore>,
+    /// Process-shared persistent device-resident weights (see module docs).
+    weights: Arc<WeightStore>,
+    /// Local memo of device-side bucket adapters: mask actual lanes +
+    /// pad/crop to the entry extents, keyed by `(src_dims, dst_dims)`.
+    prep: HashMap<(Vec<usize>, Vec<usize>), Arc<Executable>>,
     /// Pre-uploaded s32 extent scalars fed to prepare kernels (uploaded
     /// once per distinct extent value, ~4 bytes each).
-    scalars: HashMap<i32, Rc<DeviceTensor>>,
+    scalars: HashMap<i32, Arc<DeviceTensor>>,
     pub stats: LibraryStats,
 }
 
@@ -178,7 +369,7 @@ pub enum GemmSrc<'a> {
     Dev { dt: &'a DeviceTensor, actual: &'a [usize], zero_padded: bool },
     /// A cached weight, already padded to the entry extents and exactly
     /// zero-padded (from [`GemmLibrary::weight_device`]).
-    Weight { dt: Rc<DeviceTensor>, actual: &'a [usize] },
+    Weight { dt: Arc<DeviceTensor>, actual: &'a [usize] },
 }
 
 impl GemmSrc<'_> {
@@ -206,7 +397,7 @@ impl GemmSrc<'_> {
 /// owned/shared when marshalling produced a fresh buffer.
 enum Marshalled<'a> {
     Owned(DeviceTensor),
-    Shared(Rc<DeviceTensor>),
+    Shared(Arc<DeviceTensor>),
     Borrowed(&'a DeviceTensor),
 }
 
@@ -221,26 +412,43 @@ impl Marshalled<'_> {
 }
 
 impl GemmLibrary {
-    pub fn new(device: Rc<Device>) -> Self {
+    /// Standalone library over private stores (single-worker uses, the
+    /// eager/VM baselines, tests).
+    pub fn new(device: Arc<Device>) -> Self {
+        let store = Arc::new(KernelStore::new(device.clone()));
+        Self::with_shared(device, store, Arc::new(WeightStore::new()))
+    }
+
+    /// A per-worker library handle over process-shared kernel and weight
+    /// stores.
+    pub fn with_shared(
+        device: Arc<Device>,
+        store: Arc<KernelStore>,
+        weights: Arc<WeightStore>,
+    ) -> Self {
         GemmLibrary {
             device,
             entries: HashMap::new(),
             pregen: HashMap::new(),
             m_bucket: BucketPolicy::MultipleOf(16),
             pool: BufferPool::new(),
-            weights: HashMap::new(),
-            weight_lru: VecDeque::new(),
-            max_weight_bytes: u64::MAX,
+            store,
+            weights,
             prep: HashMap::new(),
             scalars: HashMap::new(),
             stats: LibraryStats::default(),
         }
     }
 
+    /// The shared weight store behind this handle.
+    pub fn weight_store(&self) -> &Arc<WeightStore> {
+        &self.weights
+    }
+
     /// Register a pre-generated executable (from an AOT artifact) for a
     /// specific problem shape.
     pub fn register_pregen(&mut self, key: GemmKey, exe: Executable) {
-        self.pregen.insert(key, Rc::new(exe));
+        self.pregen.insert(key, Arc::new(exe));
     }
 
     pub fn has_pregen(&self, key: &GemmKey) -> bool {
@@ -276,7 +484,7 @@ impl GemmLibrary {
         s
     }
 
-    fn entry_for(&mut self, key: GemmKey) -> Result<Rc<Executable>> {
+    fn entry_for(&mut self, key: GemmKey) -> Result<Arc<Executable>> {
         if let Some(e) = self.pregen.get(&key) {
             self.stats.pregen_hits += 1;
             return Ok(e.clone());
@@ -284,12 +492,22 @@ impl GemmLibrary {
         if let Some(e) = self.entries.get(&key) {
             return Ok(e.clone());
         }
-        let hlo = Self::dot_hlo(&key);
+        // Miss in the local memo: fetch through the shared store so M
+        // workers build each entry once. Build accounting stays on the
+        // handle that actually compiled (RunMetrics attribution).
         let name = format!("gemm_{}x{}x{}x{}", key.batch, key.m, key.k, key.n);
-        let exe = self.device.compile_hlo_text_named(&name, &hlo)?;
-        self.stats.entries_built += 1;
-        self.stats.build_time += exe.compile_time;
-        let e = Rc::new(exe);
+        let (e, fetch) = self
+            .store
+            .get_or_compile("lib:gemm", &[key.batch, key.m, key.k, key.n], move || {
+                Ok((name, Self::dot_hlo(&key)))
+            })?;
+        if fetch.compiled {
+            self.stats.entries_built += 1;
+            self.stats.build_time += e.compile_time;
+        } else if fetch.deduped {
+            self.stats.build_dedup_hits += 1;
+        }
+        self.stats.build_stall += fetch.stall;
         self.entries.insert(key, e.clone());
         Ok(e)
     }
@@ -503,7 +721,7 @@ impl GemmLibrary {
             "gemm prepare rank mismatch"
         );
         let exe = self.prep_entry(&dt.dims, want)?;
-        let mut scalars: Vec<Rc<DeviceTensor>> = Vec::with_capacity(actual.len());
+        let mut scalars: Vec<Arc<DeviceTensor>> = Vec::with_capacity(actual.len());
         for &e in actual {
             scalars.push(self.scalar_i32(e as i32)?);
         }
@@ -566,31 +784,39 @@ impl GemmLibrary {
         s
     }
 
-    fn prep_entry(&mut self, src: &[usize], dst: &[usize]) -> Result<Rc<Executable>> {
+    fn prep_entry(&mut self, src: &[usize], dst: &[usize]) -> Result<Arc<Executable>> {
         let key = (src.to_vec(), dst.to_vec());
         if let Some(e) = self.prep.get(&key) {
             return Ok(e.clone());
         }
-        let hlo = Self::prep_hlo(src, dst);
+        // Store key: src extents ++ dst extents (equal ranks, so the split
+        // point is implied by the length).
+        let store_dims: Vec<usize> = src.iter().chain(dst.iter()).copied().collect();
         let name = format!(
             "gemm_prep_{}_to_{}",
             src.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x"),
             dst.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x")
         );
-        let exe = self.device.compile_hlo_text_named(&name, &hlo)?;
-        self.stats.prep_built += 1;
-        self.stats.build_time += exe.compile_time;
-        let e = Rc::new(exe);
+        let (e, fetch) = self
+            .store
+            .get_or_compile("lib:prep", &store_dims, || Ok((name, Self::prep_hlo(src, dst))))?;
+        if fetch.compiled {
+            self.stats.prep_built += 1;
+            self.stats.build_time += e.compile_time;
+        } else if fetch.deduped {
+            self.stats.build_dedup_hits += 1;
+        }
+        self.stats.build_stall += fetch.stall;
         self.prep.insert(key, e.clone());
         Ok(e)
     }
 
-    fn scalar_i32(&mut self, v: i32) -> Result<Rc<DeviceTensor>> {
+    fn scalar_i32(&mut self, v: i32) -> Result<Arc<DeviceTensor>> {
         if let Some(s) = self.scalars.get(&v) {
             return Ok(s.clone());
         }
         let t = Tensor::i32(&[], vec![v]);
-        let dt = Rc::new(self.device.h2d(&t)?);
+        let dt = Arc::new(self.device.h2d(&t)?);
         self.stats.h2d_bytes += t.byte_size() as u64;
         self.scalars.insert(v, dt.clone());
         Ok(dt)
@@ -627,99 +853,43 @@ impl GemmLibrary {
         src: &Tensor,
         pad_dims: &[usize],
         validate: bool,
-    ) -> Result<Rc<DeviceTensor>> {
-        let fp = if validate { Some(Self::fingerprint(src)) } else { None };
-        if let Some(e) = self.weights.get(&key) {
-            if e.dev.dims == pad_dims
-                && e.src_dims == src.dims
-                && fp.map_or(true, |f| f == e.fingerprint)
-            {
-                self.stats.weight_hits += 1;
-                let dev = e.dev.clone();
-                // Refresh recency so the budget evicts cold entries first.
-                self.weight_lru.retain(|k| k != &key);
-                self.weight_lru.push_back(key);
-                return Ok(dev);
-            }
+    ) -> Result<Arc<DeviceTensor>> {
+        let store = self.weights.clone();
+        let (dev, hit) =
+            store.get_or_upload(key, src, pad_dims, validate, || self.pad_upload(src, pad_dims))?;
+        if hit {
+            self.stats.weight_hits += 1;
+        } else {
+            self.stats.weight_misses += 1;
         }
-        self.stats.weight_misses += 1;
-        let dev = Rc::new(self.pad_upload(src, pad_dims)?);
-        let bytes = dev.byte_size() as u64;
-        let fp = fp.unwrap_or_else(|| Self::fingerprint(src));
-        let pins = self.weights.remove(&key).map(|e| e.pins).unwrap_or(0);
-        self.weights.insert(
-            key.clone(),
-            WeightEntry { dev: dev.clone(), fingerprint: fp, src_dims: src.dims.clone(), pins, bytes },
-        );
-        self.weight_lru.retain(|k| k != &key);
-        self.weight_lru.push_back(key);
-        self.enforce_weight_budget();
         Ok(dev)
     }
 
-    /// A launch plan referencing this weight was installed: protect the
-    /// entry from budget eviction while the plan is cached. Returns
-    /// whether a pin was actually taken — a missing entry (already
-    /// budget-evicted) is fine, the next `weight_device` call re-uploads,
-    /// but the caller must then *not* issue a matching unpin (it would
-    /// steal a pin owned by another live plan).
+    /// Pin a weight on behalf of an installed launch plan (forwards to the
+    /// shared [`WeightStore`]; see [`WeightStore::pin`] for the contract).
     #[must_use]
     pub fn pin_weight(&mut self, key: &WeightKey) -> bool {
-        match self.weights.get_mut(key) {
-            Some(e) => {
-                e.pins += 1;
-                true
-            }
-            None => false,
-        }
+        self.weights.pin(key)
     }
 
-    /// The plan cache dropped a plan referencing this weight; entries left
-    /// unpinned become evictable when residency exceeds the budget.
+    /// Release one plan's pin (forwards to the shared store).
     pub fn unpin_weight(&mut self, key: &WeightKey) {
-        if let Some(e) = self.weights.get_mut(key) {
-            e.pins = e.pins.saturating_sub(1);
-        }
-        self.enforce_weight_budget();
+        self.weights.unpin(key)
     }
 
-    /// Bytes of weights currently resident on device.
+    /// Bytes of weights currently resident on device (process-wide gauge).
     pub fn weight_resident_bytes(&self) -> u64 {
-        self.weights.values().map(|e| e.bytes).sum()
+        self.weights.resident_bytes()
     }
 
-    fn enforce_weight_budget(&mut self) {
-        while self.weight_resident_bytes() > self.max_weight_bytes {
-            let evictable = self
-                .weight_lru
-                .iter()
-                .position(|k| self.weights.get(k).map_or(true, |e| e.pins == 0));
-            let Some(pos) = evictable else { break };
-            let k = self.weight_lru.remove(pos).unwrap();
-            if self.weights.remove(&k).is_some() {
-                self.stats.weight_evictions += 1;
-            }
-        }
+    /// Budget evictions performed by the shared weight store.
+    pub fn weight_evictions(&self) -> u64 {
+        self.weights.evictions()
     }
 
-    /// FNV-1a style fingerprint over dims + raw element bits.
-    fn fingerprint(t: &Tensor) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        let mut eat = |b: u64| {
-            h ^= b;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        };
-        eat(t.dims.len() as u64);
-        for &d in &t.dims {
-            eat(d as u64);
-        }
-        match &t.data {
-            Data::F32(v) => v.iter().for_each(|x| eat(x.to_bits() as u64)),
-            Data::I64(v) => v.iter().for_each(|&x| eat(x as u64)),
-            Data::I32(v) => v.iter().for_each(|&x| eat(x as u32 as u64)),
-            Data::Pred(v) => v.iter().for_each(|&x| eat(x as u64)),
-        }
-        h
+    /// Set the process-wide weight residency budget (and enforce it).
+    pub fn set_max_weight_bytes(&mut self, bytes: u64) {
+        self.weights.set_max_bytes(bytes);
     }
 }
 
@@ -729,7 +899,7 @@ mod tests {
 
     #[test]
     fn gemm_matches_reference() {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev);
         let a = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let b = Tensor::f32(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
@@ -743,7 +913,7 @@ mod tests {
 
     #[test]
     fn batched_gemm() {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev);
         let a = Tensor::f32(&[2, 1, 2], vec![1., 2., 3., 4.]);
         let b = Tensor::f32(&[2, 2, 1], vec![1., 1., 2., 2.]);
@@ -754,7 +924,7 @@ mod tests {
 
     #[test]
     fn entries_are_reused() {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev);
         let a = Tensor::f32(&[2, 2], vec![1.; 4]);
         let b = Tensor::f32(&[2, 2], vec![1.; 4]);
@@ -766,7 +936,7 @@ mod tests {
 
     #[test]
     fn device_path_with_cached_weight_bit_matches_host_path() {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev.clone());
         let a = Tensor::f32(&[3, 5], (0..15).map(|i| 0.1 * i as f32).collect());
         let w = Tensor::f32(&[5, 4], (0..20).map(|i| 0.05 * i as f32 - 0.3).collect());
@@ -788,7 +958,7 @@ mod tests {
 
     #[test]
     fn weights_upload_once_and_validate_on_content_change() {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev);
         let w = Tensor::f32(&[4, 4], vec![0.5; 16]);
         let wk = WeightKey { program: 9, value: 3 };
@@ -812,7 +982,7 @@ mod tests {
 
     #[test]
     fn weight_budget_evicts_unpinned_lru_only() {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev);
         let w = Tensor::f32(&[2, 2], vec![1.; 4]);
         let ka = WeightKey { program: 1, value: 1 };
@@ -822,15 +992,15 @@ mod tests {
         assert_eq!(lib.weight_resident_bytes(), 16);
         // Tighten the budget to zero: ka is pinned and must survive every
         // later enforcement point.
-        lib.max_weight_bytes = 0;
+        lib.set_max_weight_bytes(0);
         lib.weight_device(kb.clone(), &w, &[2, 2], false).unwrap();
         // kb is unpinned and over budget: evicted at insert; ka stays.
-        assert_eq!(lib.stats.weight_evictions, 1);
+        assert_eq!(lib.weight_evictions(), 1);
         assert_eq!(lib.weight_resident_bytes(), 16);
         // Unpinning ka makes it evictable.
         lib.unpin_weight(&ka);
         assert_eq!(lib.weight_resident_bytes(), 0);
-        assert_eq!(lib.stats.weight_evictions, 2);
+        assert_eq!(lib.weight_evictions(), 2);
         // A pin attempt on an evicted entry takes no pin (the caller must
         // not later issue a matching unpin).
         assert!(!lib.pin_weight(&kb));
@@ -838,7 +1008,7 @@ mod tests {
 
     #[test]
     fn weight_hits_refresh_lru_recency() {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev);
         let w = Tensor::f32(&[2, 2], vec![1.; 4]);
         let ka = WeightKey { program: 1, value: 1 };
@@ -849,7 +1019,7 @@ mod tests {
         lib.weight_device(ka.clone(), &w, &[2, 2], false).unwrap();
         // Budget holds one entry; the next enforcement point must evict
         // the cold kb, not the hot ka.
-        lib.max_weight_bytes = 16;
+        lib.set_max_weight_bytes(16);
         lib.unpin_weight(&kb); // no pin held — just an enforcement point
         assert_eq!(lib.weight_resident_bytes(), 16);
         let misses = lib.stats.weight_misses;
@@ -864,7 +1034,7 @@ mod tests {
         // wants [16,16] operands, the prepare kernel must zero the garbage
         // and grow the bucket on device — bit-identical to the host path
         // (crop + re-pad) over the same values.
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev.clone());
         let mut buf = vec![999.0f32; 16];
         let valid = [1.0f32, 2., 3., 4., 5., 6.];
@@ -896,7 +1066,7 @@ mod tests {
     fn zero_padded_device_operand_is_consumed_in_place() {
         // A GEMM result (exact zero pad) chained into a second GEMM with
         // matching entry extents moves zero h2d bytes for that operand.
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(dev.clone());
         let a = Tensor::f32(&[3, 3], (0..9).map(|i| i as f32 * 0.2).collect());
         let b = Tensor::f32(&[3, 3], (0..9).map(|i| 0.5 - i as f32 * 0.1).collect());

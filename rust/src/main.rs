@@ -51,10 +51,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mode = parse_mode(args.get("mode").unwrap_or("disc"))?;
     let requests = args.get_usize("requests", 50)?;
     let seed = args.get_usize("seed", 1)? as u64;
+    let workers = args.get_usize("workers", 1)?;
+    let burst = args.get_usize("burst", 0)?;
 
     let module = disc::bridge::lower(&w.graph)?;
     let compiler = DiscCompiler::new()?;
-    let mut model = compiler.compile(module, &CompileOptions::mode(mode))?;
+    let mut opts = CompileOptions::mode(mode);
+    // Serving with workers wants compilation off the hot path: warm the
+    // neighbor buckets speculatively while recording.
+    opts.speculative_warm = args.get_bool("warm");
+    let mut model = compiler.compile(module, &opts)?;
     println!(
         "compiled {} [{}] pipeline={} groups={} kernels-planned={} ({} instrs)",
         w.name,
@@ -69,7 +75,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = match args.get("open-rate") {
         Some(r) => {
             let rate: f64 = r.parse().context("--open-rate wants a float")?;
-            coordinator::serve_open_loop(&mut model, stream, rate)?
+            let mut sopts = coordinator::ServeOptions::rate(rate).workers(workers);
+            if burst > 0 {
+                sopts = sopts.bursty(burst);
+            }
+            coordinator::serve_open_loop(&mut model, stream, &sopts)?
         }
         None => coordinator::serve_closed_loop(&mut model, stream)?,
     };
@@ -85,8 +95,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     let m = &report.metrics;
     println!(
-        "kernels: mem={} lib={} host_ops={} compile_events={} (compile {:.2?})",
-        m.mem_kernels, m.lib_calls, m.host_ops, m.compile_events, m.compile_time
+        "kernels: mem={} lib={} host_ops={} compile_events={} (compile {:.2?}, stall {:.2?}, dedup_hits={})",
+        m.mem_kernels,
+        m.lib_calls,
+        m.host_ops,
+        m.compile_events,
+        m.compile_time,
+        m.compile_stall,
+        m.compile_dedup_hits
     );
     println!(
         "time split: kernel={:.2?} lib={:.2?} cpu={:.2?} total={:.2?} (pad_copies={} allocs={} pool_hits={})",
@@ -113,6 +129,31 @@ fn cmd_run(args: &Args) -> Result<()> {
         m.weight_cache_misses,
         disc::util::fmt_bytes(m.weight_resident_bytes as usize)
     );
+    if report.per_worker.len() > 1 {
+        println!(
+            "queue delay: p50={:.2?} p99={:.2?}  ({} workers)",
+            report.queue_p50,
+            report.queue_p99,
+            report.per_worker.len()
+        );
+        for wr in &report.per_worker {
+            println!(
+                "  worker {}: {} reqs  mean={:.2?} p99={:.2?}  plans h/m={}/{}  compiles={}",
+                wr.worker,
+                wr.completed,
+                wr.mean,
+                wr.p99,
+                wr.metrics.plan_hits,
+                wr.metrics.plan_misses,
+                wr.metrics.compile_events
+            );
+        }
+        let snap = compiler.kernel_store().snapshot();
+        println!(
+            "kernel store: entries={} compiles={} hits={} dedup={} prefetched={} (stall {:.2?})",
+            snap.entries, snap.misses, snap.hits, snap.dedup_hits, snap.prefetches, snap.stall
+        );
+    }
     println!(
         "T4-model breakdown: comp={:.2}ms mem={:.2}ms cpu={:.2}ms e2e={:.2}ms",
         sim.comp_bound_ms, sim.mem_bound_ms, sim.cpu_ms, sim.e2e_ms

@@ -207,7 +207,7 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return;
         }
-        let device = std::rc::Rc::new(Device::cpu().unwrap());
+        let device = std::sync::Arc::new(Device::cpu().unwrap());
         let mut lib = GemmLibrary::new(device.clone());
         let n = register_gemms(&default_dir(), &device, &mut lib).unwrap();
         assert!(n >= 5);

@@ -15,6 +15,7 @@ use crate::runtime::shape_env::SymEnv;
 use crate::runtime::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Eager evaluator with vendor-library GEMMs.
@@ -23,7 +24,7 @@ pub struct Eager {
 }
 
 impl Eager {
-    pub fn new(device: Rc<crate::runtime::pjrt::Device>) -> Self {
+    pub fn new(device: Arc<crate::runtime::pjrt::Device>) -> Self {
         Eager { library: GemmLibrary::new(device) }
     }
 
@@ -109,7 +110,7 @@ mod tests {
         let sm = b.softmax_last(x).unwrap();
         let t = b.unary(UnKind::Tanh, sm);
         let m = b.finish(vec![t]);
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut eager = Eager::new(dev);
         let input = Tensor::f32(&[3, 4], (0..12).map(|i| i as f32 * 0.1).collect());
         let got = eager.run(&m, &[input.clone()]).unwrap();
@@ -125,7 +126,7 @@ mod tests {
         let x = b.param(DType::F32, vec![Dim::Fixed(2), Dim::Fixed(2)]);
         let d = b.dot(x, x).unwrap();
         let m = b.finish(vec![d]);
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut eager = Eager::new(dev);
         let input = Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
         let got = eager.run(&m, &[input]).unwrap();

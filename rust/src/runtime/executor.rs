@@ -39,6 +39,7 @@ use crate::runtime::tensor::{strides_of, Data, Tensor};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Executor options.
@@ -58,6 +59,14 @@ pub struct ExecOptions {
     /// uploads once per program and is reused across calls and plan
     /// replays. Requires `device_resident`.
     pub weight_cache: bool,
+    /// Speculative neighbor-bucket warming: when a request *records* a new
+    /// plan, enqueue background compiles for the next bucket of every
+    /// dynamic symbol it touched (the bucket a growing sequence length
+    /// lands in next), so that traffic arriving there finds the kernel
+    /// resident and stalls zero. Off by default: it trades background
+    /// compile work for tail latency, which is a serving-process decision
+    /// (`CompileOptions::speculative_warm` / `disc run --warm` turn it on).
+    pub speculative_warm: bool,
 }
 
 impl Default for ExecOptions {
@@ -68,6 +77,7 @@ impl Default for ExecOptions {
             plan_cache: true,
             device_resident: true,
             weight_cache: true,
+            speculative_warm: false,
         }
     }
 }
@@ -103,8 +113,8 @@ pub struct Executor {
     pub library: GemmLibrary,
     pub pool: BufferPool,
     pub opts: ExecOptions,
-    pub device: Rc<Device>,
-    plans: HashMap<PlanKey, Rc<LaunchPlan>>,
+    pub device: Arc<Device>,
+    plans: HashMap<PlanKey, Arc<LaunchPlan>>,
     /// Insertion order of `plans`, for FIFO eviction at `max_plans`.
     plan_order: std::collections::VecDeque<PlanKey>,
     /// Weight pins each installed plan actually took (a pin attempt on an
@@ -123,11 +133,45 @@ pub struct ExecOutput {
     pub metrics: RunMetrics,
 }
 
+/// Compile-time proof that an executor can be moved into a worker thread
+/// (the multi-worker coordinator does exactly that): everything it holds
+/// across requests is owned or `Arc`-shared thread-safe state. Transient
+/// `Rc<Tensor>` value stores live only inside a single `run` call.
+const _: fn() = || {
+    fn ok<T: Send>() {}
+    ok::<Executor>();
+};
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // The executor's plans die with it; give their weight pins back to
+        // the shared store (see `release_all_pins`).
+        self.release_all_pins();
+    }
+}
+
 impl Executor {
-    pub fn new(device: Rc<Device>, opts: ExecOptions) -> Self {
+    /// Standalone executor over private stores (tests, single-model CLI
+    /// runs). Cache and library still share one kernel store, so fused
+    /// kernels and GEMM entries live in the same table.
+    pub fn new(device: Arc<Device>, opts: ExecOptions) -> Self {
+        let store = Arc::new(crate::codegen::KernelStore::new(device.clone()));
+        Self::with_shared(device, opts, store, Arc::new(crate::library::WeightStore::new()))
+    }
+
+    /// A worker executor over process-shared stores: the kernel store and
+    /// weight store are shared with every other worker (compile-once,
+    /// upload-once across the process); the plan cache, buffer pool, and
+    /// stats stay per-worker.
+    pub fn with_shared(
+        device: Arc<Device>,
+        opts: ExecOptions,
+        store: Arc<crate::codegen::KernelStore>,
+        weights: Arc<crate::library::WeightStore>,
+    ) -> Self {
         Executor {
-            cache: KernelCache::new(device.clone(), opts.policy),
-            library: GemmLibrary::new(device.clone()),
+            cache: KernelCache::with_store(store.clone(), opts.policy),
+            library: GemmLibrary::with_shared(device.clone(), store, weights),
             pool: BufferPool::new(),
             opts,
             device,
@@ -139,6 +183,34 @@ impl Executor {
         }
     }
 
+    /// Release every weight pin this executor's installed plans hold. The
+    /// weight store is process-shared and outlives forked workers, so pins
+    /// must die with the plans that took them — otherwise a long-running
+    /// server forking workers per serve call would accumulate unevictable
+    /// entries past any byte budget.
+    fn release_all_pins(&mut self) {
+        for (_, pins) in self.plan_pins.drain() {
+            for wk in pins {
+                self.library.unpin_weight(&wk);
+            }
+        }
+    }
+
+    /// Fork a sibling worker: same device, same shared kernel/weight
+    /// stores, same options and plan-cache bound — fresh plan cache,
+    /// pools, and stats. This is how the multi-worker coordinator builds
+    /// its workers.
+    pub fn fork(&self) -> Executor {
+        let mut e = Self::with_shared(
+            self.device.clone(),
+            self.opts.clone(),
+            self.cache.store().clone(),
+            self.library.weight_store().clone(),
+        );
+        e.max_plans = self.max_plans;
+        e
+    }
+
     /// Execute a program against concrete inputs.
     pub fn run(&mut self, prog: &Program, inputs: &[Tensor]) -> Result<ExecOutput> {
         let t_start = Instant::now();
@@ -148,7 +220,7 @@ impl Executor {
         env.bind_params(m, inputs)?;
 
         let lib_before = self.library.stats.clone();
-        let cache_before = (self.cache.stats.misses, self.cache.stats.compile_time);
+        let cache_before = self.cache.stats.clone();
         let pool_before = self.pool.stats.clone();
 
         let mut outputs: Option<Vec<Tensor>> = None;
@@ -208,7 +280,7 @@ impl Executor {
                         }
                         let pinned = self.pin_plan_weights(key.program, &plan);
                         self.plan_pins.insert(key.clone(), pinned);
-                        self.plans.insert(key.clone(), Rc::new(plan));
+                        self.plans.insert(key.clone(), Arc::new(plan));
                         self.plan_order.push_back(key);
                         self.plan_stats.entries = self.plans.len();
                     }
@@ -219,8 +291,16 @@ impl Executor {
 
         // Fold in component-level stats for this run.
         metrics.flops = self.library.stats.flops - lib_before.flops;
-        metrics.compile_events = self.cache.stats.misses - cache_before.0;
-        metrics.compile_time += self.cache.stats.compile_time - cache_before.1;
+        metrics.compile_events = self.cache.stats.misses - cache_before.misses;
+        metrics.compile_time += self.cache.stats.compile_time - cache_before.compile_time;
+        // Compile-service interaction: time this run blocked on the
+        // background compiler (fused kernels via the cache handle, GEMM and
+        // prepare builds via the library handle) and in-flight compiles it
+        // joined instead of duplicating (the store's single-flight dedup).
+        metrics.compile_stall += self.cache.stats.stall - cache_before.stall;
+        metrics.compile_stall += self.library.stats.build_stall - lib_before.build_stall;
+        metrics.compile_dedup_hits = (self.cache.stats.dedup_hits - cache_before.dedup_hits)
+            + (self.library.stats.build_dedup_hits - lib_before.build_dedup_hits);
         metrics.allocs = self.pool.stats.allocs - pool_before.allocs;
         metrics.pool_hits = self.pool.stats.pool_hits - pool_before.pool_hits;
         // Library transfer traffic is accounted where it happens
@@ -423,6 +503,16 @@ impl Executor {
                     // 2. Cache lookup / compile.
                     let (kernel, _buckets) =
                         self.cache.get_or_compile(m, &fl.group, &fl.sig, &actual)?;
+                    // Speculative neighbor-bucket warming: while this
+                    // request is being recorded (= a shape the process has
+                    // not served before), enqueue background compiles for
+                    // the next bucket of its dynamic symbols so growing
+                    // sequence lengths find their kernels resident. Replays
+                    // never reach this code; warm failures are ignored
+                    // (the demand path re-compiles and reports properly).
+                    if self.opts.speculative_warm && rec.is_some() {
+                        let _ = self.cache.prefetch_neighbor(m, &fl.group, &fl.sig, &actual);
+                    }
                     // 3. Marshal inputs: pad to bucket extents when
                     //    needed; aligned inputs are passed by reference
                     //    (no host copy before literal marshalling).
@@ -515,7 +605,7 @@ impl Executor {
                             let extents_dev = if self.opts.device_resident {
                                 extents_host
                                     .iter()
-                                    .map(|t| self.device.h2d(t).map(Rc::new))
+                                    .map(|t| self.device.h2d(t).map(Arc::new))
                                     .collect::<Result<Vec<_>>>()?
                             } else {
                                 Vec::new()
@@ -1073,12 +1163,12 @@ mod tests {
     use crate::util::prng::Prng;
 
     fn executor() -> Executor {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         Executor::new(dev, ExecOptions::default())
     }
 
     fn executor_no_plans() -> Executor {
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         Executor::new(
             dev,
             ExecOptions { plan_cache: false, device_resident: false, ..Default::default() },
@@ -1394,7 +1484,7 @@ mod tests {
         let m = b.finish(vec![y]);
         let p = plan(&m, &FusionOptions::default());
         let prog = generate(m, &p).unwrap();
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut exec = Executor::new(
             dev,
             ExecOptions { policy: BucketPolicy::Exact, ..Default::default() },
@@ -1513,7 +1603,7 @@ mod tests {
         assert_eq!(r1.metrics.weight_cache_misses, 1);
         // Tighten the budget only once the entry is pinned by the
         // installed plan: pinned entries survive every enforcement point.
-        exec.library.max_weight_bytes = 0;
+        exec.library.set_max_weight_bytes(0);
         assert!(
             exec.library.weight_resident_bytes() > 0,
             "pinned weight survives a zero budget"
@@ -1523,7 +1613,7 @@ mod tests {
         // weight is evicted immediately under the zero budget.
         exec.run(&prog_plain, &[Tensor::f32(&[2, 3], vec![0.1; 6])]).unwrap();
         assert_eq!(exec.library.weight_resident_bytes(), 0, "unpinned weight evicted");
-        assert_eq!(exec.library.stats.weight_evictions, 1);
+        assert_eq!(exec.library.weight_evictions(), 1);
 
         // Re-running re-records, re-uploads, and stays correct.
         let r2 = exec.run(&prog_w, &[x]).unwrap();

@@ -28,6 +28,14 @@ pub struct RunMetrics {
     pub compile_events: u64,
     /// Time spent compiling kernels during this run.
     pub compile_time: Duration,
+    /// Time this run spent *blocked* on the compile service — waiting for
+    /// a kernel it triggered itself or joined in flight. Steady-state
+    /// replay must keep this at zero: compilation is off the hot path.
+    pub compile_stall: Duration,
+    /// Single-flight joins: this run missed the shared kernel store while
+    /// another worker was already compiling the same (pattern, bucket) key
+    /// and waited on that compile instead of duplicating it.
+    pub compile_dedup_hits: u64,
     /// Device time inside fused/singleton kernel execution.
     pub kernel_time: Duration,
     /// Device time inside library calls.
@@ -89,6 +97,8 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.flops += o.flops;
         self.compile_events += o.compile_events;
         self.compile_time += o.compile_time;
+        self.compile_stall += o.compile_stall;
+        self.compile_dedup_hits += o.compile_dedup_hits;
         self.kernel_time += o.kernel_time;
         self.lib_time += o.lib_time;
         self.total_time += o.total_time;
@@ -159,6 +169,7 @@ mod tests {
         };
         a += &b;
         assert_eq!(a.plan_hits, 3);
+        assert_eq!(a.compile_dedup_hits, 0);
         assert_eq!(a.plan_misses, 1);
         assert_eq!(a.plan_guard_misses, 1);
         assert_eq!(a.h2d_bytes, 150);

@@ -69,11 +69,27 @@ impl Drop for TempWorkspace {
 }
 
 /// A PJRT device (CPU in this testbed; the same wrapper would target GPU).
+///
+/// The device is `Send + Sync`: one `Arc<Device>` is shared by every
+/// executor worker, the process-wide kernel store, and the background
+/// compile pool. Stats live behind a `Mutex` (they are tiny counters; the
+/// lock is held for a handful of adds).
 pub struct Device {
     client: xla::PjRtClient,
     temp: TempWorkspace,
-    pub stats: std::cell::RefCell<DeviceStats>,
+    stats: std::sync::Mutex<DeviceStats>,
 }
+
+/// Compile-time proof that the runtime types may cross threads: the
+/// multi-worker coordinator moves executors (holding `Arc<Device>`,
+/// `Arc<Executable>`, device tensors) into worker threads, and the
+/// background compile pool compiles on its own threads.
+const _: fn() = || {
+    fn ok<T: Send + Sync>() {}
+    ok::<Device>();
+    ok::<Executable>();
+    ok::<DeviceTensor>();
+};
 
 /// Compilation + transfer statistics a device accumulates (feeds the
 /// compile-overhead bench and the CPU-time breakdown).
@@ -95,12 +111,17 @@ impl Device {
         Ok(Device {
             client,
             temp: TempWorkspace::new()?,
-            stats: std::cell::RefCell::new(DeviceStats::default()),
+            stats: std::sync::Mutex::new(DeviceStats::default()),
         })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Snapshot of the device's accumulated stats.
+    pub fn stats(&self) -> DeviceStats {
+        self.stats.lock().expect("device stats lock").clone()
     }
 
     /// Compile HLO text into an executable. The text is round-tripped
@@ -128,7 +149,7 @@ impl Device {
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling HLO: {e}"))?;
         let elapsed = start.elapsed();
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().expect("device stats lock");
             s.compilations += 1;
             s.compile_time += elapsed;
         }
@@ -144,7 +165,7 @@ impl Device {
             .buffer_from_host_literal(&lit)
             .map_err(|e| anyhow!("h2d transfer: {e}"))?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().expect("device stats lock");
             s.h2d_transfers += 1;
             s.h2d_bytes += t.byte_size() as u64;
         }
@@ -155,7 +176,7 @@ impl Device {
     pub fn d2h(&self, dt: &DeviceTensor) -> Result<Tensor> {
         let t = dt.to_host()?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().expect("device stats lock");
             s.d2h_transfers += 1;
             s.d2h_bytes += t.byte_size() as u64;
         }
@@ -412,7 +433,7 @@ ENTRY main {
         let d2 = exe.run_on_device(&[&d1], &[4], DType::F32).unwrap();
         let back = dev.d2h(&d2).unwrap();
         assert_eq!(back, h2, "device-resident chain must be bit-exact");
-        let stats = dev.stats.borrow();
+        let stats = dev.stats();
         assert_eq!(stats.h2d_transfers, 1);
         assert_eq!(stats.d2h_transfers, 1);
     }

@@ -33,7 +33,7 @@ use crate::runtime::shape_env::SymEnv;
 use crate::runtime::tensor::Tensor;
 use crate::shape::SymId;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Cache key: which program, under which concrete extents of its dynamic
 /// dims (canonical symbols, sorted for determinism).
@@ -81,12 +81,12 @@ pub enum PlannedStep {
         idx: usize,
         /// The compiled kernel — replays skip signature hashing and the
         /// bucket-cache lookup entirely.
-        kernel: Rc<CompiledKernel>,
+        kernel: Arc<CompiledKernel>,
         /// Actual extents of the kernel's trailing s32 scalar parameters,
         /// as host tensors (host-path replay)…
         extents_host: Vec<Tensor>,
         /// …and pre-uploaded device buffers (device-resident replay).
-        extents_dev: Vec<Rc<DeviceTensor>>,
+        extents_dev: Vec<Arc<DeviceTensor>>,
         /// Actual (cropped) output dims.
         out_actual: Vec<usize>,
     },

@@ -40,6 +40,7 @@ use crate::runtime::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Opcode classes the VM dispatches on (a small interpreted ISA, like
@@ -125,7 +126,7 @@ pub struct Vm {
 
 impl Vm {
     pub fn new(
-        device: Rc<crate::runtime::pjrt::Device>,
+        device: Arc<crate::runtime::pjrt::Device>,
         policy: crate::codegen::BucketPolicy,
     ) -> Self {
         Vm { cache: KernelCache::new(device.clone(), policy), library: GemmLibrary::new(device) }
@@ -383,7 +384,7 @@ mod tests {
         let t = b.unary(UnKind::Tanh, sm);
         let m = b.finish(vec![t]);
         let p = nimble_plan(&m);
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut vm = Vm::new(dev, BucketPolicy::NextPow2);
         let mut rng = Prng::new(3);
         for rows in [2usize, 5, 9] {
@@ -404,7 +405,7 @@ mod tests {
         let r = b.unary(UnKind::Relu, h);
         let m = b.finish(vec![r]);
         let p = nimble_plan(&m);
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut vm = Vm::new(dev, BucketPolicy::NextPow2);
         let x_t = Tensor::f32(&[3, 8], vec![0.25; 24]);
         let w_t = Tensor::f32(&[8, 8], vec![0.125; 64]);
@@ -424,7 +425,7 @@ mod tests {
         let m = b.finish(vec![e]);
         // Disable fusion so intermediates materialize.
         let p = plan(&m, &FusionOptions { enabled: false, ..Default::default() });
-        let dev = Rc::new(Device::cpu().unwrap());
+        let dev = Arc::new(Device::cpu().unwrap());
         let mut vm = Vm::new(dev, BucketPolicy::NextPow2);
         let got = vm.run(&m, &p, &[Tensor::f32(&[4], vec![0.1; 4])]).unwrap();
         assert_eq!(got.outputs[0].dims, vec![4]);

@@ -321,6 +321,204 @@ fn weight_cache_uploads_gemm_weights_once_on_repeat_bindings() {
 }
 
 #[test]
+fn kernel_store_shared_across_workers_compiles_once() {
+    // M workers race one pattern×bucket: exactly one compile process-wide;
+    // the other M-1 fetches are shared hits or single-flight dedup joins.
+    use std::sync::{Arc, Barrier};
+
+    const M: usize = 4;
+    // tanh→add chain: fuses into exactly one kernel (a lone elementwise op
+    // would be a singleton launch that never touches the kernel cache).
+    let mut gb = GraphBuilder::new("one_kernel".to_string());
+    let x = gb.placeholder("x", DType::F32, &[-1, 8]);
+    let t = gb.unary("t", UnKind::Tanh, x);
+    let a = gb.binary("a", BinKind::Add, t, x);
+    let g = gb.finish(&[a]);
+    let module = disc::bridge::lower(&g).unwrap();
+    let compiler = DiscCompiler::new().unwrap();
+    let model = compiler.compile(module, &CompileOptions::mode(Mode::Disc)).unwrap();
+    let (prog, workers) = model.fork_workers(M).unwrap();
+
+    let barrier = Arc::new(Barrier::new(M));
+    let input = Tensor::f32(&[5, 8], vec![0.25; 40]);
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|mut exec| {
+            let barrier = barrier.clone();
+            let prog = prog.clone();
+            let input = input.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                let out = exec.run(&prog, &[input]).unwrap();
+                (exec, out.outputs)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let total_misses: u64 = results.iter().map(|(e, _)| e.cache.stats.misses).sum();
+    let total_shared: u64 = results
+        .iter()
+        .map(|(e, _)| e.cache.stats.shared_hits + e.cache.stats.dedup_hits)
+        .sum();
+    assert_eq!(total_misses, 1, "one pattern must compile exactly once across {M} workers");
+    assert_eq!(total_shared, (M - 1) as u64, "every other worker shares the compile");
+    let snap = compiler.kernel_store().snapshot();
+    assert_eq!(snap.misses, 1);
+    assert_eq!(snap.hits + snap.dedup_hits, (M - 1) as u64);
+    // And all workers computed the same thing.
+    for (_, outs) in &results[1..] {
+        assert_eq!(outs, &results[0].1);
+    }
+}
+
+#[test]
+fn multi_worker_output_bit_matches_single_worker_interpreter() {
+    // Transformer + BERT: M workers sharing kernel/weight stores, each
+    // serving the same stream (twice, so the second half replays recorded
+    // plans against shared-store kernels and shared cached weights), must
+    // produce outputs bit-identical to the single-worker interpreter tier.
+    // The shared store must also compile exactly as much as a single
+    // worker would have.
+    const M: usize = 3;
+    for name in ["transformer", "bert"] {
+        let w = disc::workloads::by_name(name).unwrap();
+        let stream: Vec<_> = w
+            .request_stream(3, 31)
+            .into_iter()
+            .chain(w.request_stream(3, 31))
+            .collect();
+
+        // Single-worker baseline: how many compiles does this stream need?
+        let solo_compiler = DiscCompiler::new().unwrap();
+        let mut solo = solo_compiler
+            .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Disc))
+            .unwrap();
+        for inputs in &stream {
+            solo.run(inputs).unwrap();
+        }
+        let solo_compiles = solo_compiler.kernel_store().snapshot().misses;
+
+        // Reference: the plain interpreter path (no plans, host-resident).
+        let mut plain = solo_compiler
+            .compile(
+                disc::bridge::lower(&w.graph).unwrap(),
+                &CompileOptions {
+                    plan_cache: false,
+                    device_resident: false,
+                    ..CompileOptions::mode(Mode::Disc)
+                },
+            )
+            .unwrap();
+        let want: Vec<_> = stream.iter().map(|i| plain.run(i).unwrap().outputs).collect();
+
+        // M workers, each running the full stream concurrently.
+        let compiler = DiscCompiler::new().unwrap();
+        let model = compiler
+            .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Disc))
+            .unwrap();
+        let (prog, workers) = model.fork_workers(M).unwrap();
+        let stream = std::sync::Arc::new(stream);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|mut exec| {
+                let prog = prog.clone();
+                let stream = stream.clone();
+                std::thread::spawn(move || {
+                    let outs: Vec<_> =
+                        stream.iter().map(|i| exec.run(&prog, i).unwrap().outputs).collect();
+                    (exec, outs)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (exec, outs) = h.join().unwrap();
+            for (got, expect) in outs.iter().zip(&want) {
+                assert_eq!(got, expect, "{name}: multi-worker output diverged from interpreter");
+            }
+            assert!(exec.plan_stats.hits >= 3, "{name}: repeat bindings must replay per worker");
+        }
+        let snap = compiler.kernel_store().snapshot();
+        assert_eq!(
+            snap.misses, solo_compiles,
+            "{name}: {M} workers must compile exactly what one worker compiles"
+        );
+        assert!(
+            compiler.weight_store().resident_bytes() > 0,
+            "{name}: shared weights resident across workers"
+        );
+    }
+}
+
+#[test]
+fn burst_queue_delay_drops_with_workers() {
+    // A saturating burst (the whole stream offered effectively at once):
+    // p99 queue delay must drop when the worker pool grows, and total
+    // throughput must rise — the multi-tenant scaling claim.
+    use disc::coordinator::{serve_closed_loop, serve_open_loop, ServeOptions};
+
+    // Wall-clock scaling needs real cores; on a single-core runner 4
+    // workers buy nothing and the comparison below is meaningless.
+    if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) < 2 {
+        eprintln!("skipping burst scaling test: single-core machine");
+        return;
+    }
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let compiler = DiscCompiler::new().unwrap();
+    // Interpret-only tier: forked workers and the model's own executor do
+    // identical per-request work, so the only variable between the two
+    // configurations below is queueing.
+    let opts_interp = CompileOptions {
+        plan_cache: false,
+        device_resident: false,
+        ..CompileOptions::mode(Mode::Disc)
+    };
+    let mut model =
+        compiler.compile(disc::bridge::lower(&w.graph).unwrap(), &opts_interp).unwrap();
+    // Warm the shared kernel store so both configurations serve compile-free.
+    serve_closed_loop(&mut model, w.request_stream(32, 63)).unwrap();
+
+    let serve = |model: &mut _, workers: usize| {
+        let opts = ServeOptions::rate(50_000.0).workers(workers).bursty(8);
+        serve_open_loop(model, w.request_stream(32, 63), &opts).unwrap()
+    };
+    // Wall-clock comparison on a shared CI machine: retry a couple of
+    // times so one scheduling hiccup cannot fail the suite; the claim
+    // itself (less queueing, more throughput with 4 workers draining a
+    // saturating burst) holds by a ~4x margin in the expected case.
+    let mut last = None;
+    for attempt in 0..3 {
+        let one = serve(&mut model, 1);
+        let four = serve(&mut model, 4);
+        assert_eq!(one.completed, 32);
+        assert_eq!(four.completed, 32);
+        // Steady state: no run waits on the compiler once the store is warm.
+        assert_eq!(four.metrics.compile_events, 0, "warm store: no compiles under burst");
+        if four.queue_p99 < one.queue_p99 && four.throughput_rps > one.throughput_rps {
+            return;
+        }
+        eprintln!(
+            "attempt {attempt}: queue_p99 1w={:?} 4w={:?}, rps 1w={:.1} 4w={:.1}",
+            one.queue_p99, four.queue_p99, one.throughput_rps, four.throughput_rps
+        );
+        last = Some((one, four));
+    }
+    let (one, four) = last.unwrap();
+    assert!(
+        four.queue_p99 < one.queue_p99,
+        "queue p99 must drop with workers: 1w={:?} 4w={:?}",
+        one.queue_p99,
+        four.queue_p99
+    );
+    assert!(
+        four.throughput_rps > one.throughput_rps,
+        "throughput must rise with workers: 1w={:.1} 4w={:.1}",
+        one.throughput_rps,
+        four.throughput_rps
+    );
+}
+
+#[test]
 fn serving_stream_matches_reference_for_every_workload() {
     // End-to-end: all seven Table-1 workloads, DISC vs reference, over a
     // short dynamic request stream.

@@ -38,6 +38,22 @@ impl std::error::Error for Error {}
 
 pub type Result<T> = std::result::Result<T, Error>;
 
+/// Compile-time proof that the binding surface is `Send + Sync`: the real
+/// PJRT client, loaded executables, and buffers are all thread-safe, and
+/// the workspace's multi-worker runtime (shared kernel store, background
+/// compile pool) relies on this stub matching that contract. Everything
+/// here is plain owned data or `Arc`-shared immutable state, so the auto
+/// traits hold structurally — this assertion keeps it that way.
+const _: fn() = || {
+    fn ok<T: Send + Sync>() {}
+    ok::<PjRtClient>();
+    ok::<PjRtLoadedExecutable>();
+    ok::<PjRtBuffer>();
+    ok::<Literal>();
+    ok::<HloModuleProto>();
+    ok::<XlaComputation>();
+};
+
 fn err<T>(msg: impl Into<String>) -> Result<T> {
     Err(Error(msg.into()))
 }
