@@ -111,6 +111,30 @@ fn main() -> Result<()> {
     }
     table.print();
 
+    // ---------- C. Cross-request batching ---------------------------------
+    // A bursty open-loop flood, batching off vs on: same outputs, fewer
+    // dispatches (see docs/runtime.md §Cross-request batching).
+    println!("\nC. Cross-request batching under a bursty flood");
+    for max_batch in [1usize, 8] {
+        let module = disc::bridge::lower(&w.graph)?;
+        let mut model = compiler.compile(module, &CompileOptions::mode(Mode::Disc))?;
+        let opts = disc::coordinator::ServeOptions::rate(1_000_000.0)
+            .bursty(REQUESTS)
+            .batch(max_batch)
+            .batch_window_us(200);
+        let report =
+            disc::coordinator::serve_open_loop(&mut model, w.request_stream(REQUESTS, 99), &opts)?;
+        println!(
+            "   batch={max_batch}: {} requests / {} dispatches (occupancy {:.2}) \
+             kernels={} p99={:.2?}",
+            report.completed,
+            report.batch_launches,
+            report.batch_occupancy,
+            report.metrics.total_kernels(),
+            report.p99,
+        );
+    }
+
     println!(
         "\nAll layers composed: Pallas kernels (L1) → JAX block (L2) → AOT HLO → \
          Rust runtime + DISC compiler (L3), Python never on the request path."

@@ -1,0 +1,162 @@
+//! Cross-request batching: batch on/off × workers over a bursty open-loop
+//! stream (transformer), with the correctness and coalescing gates the CI
+//! smoke run (`DISC_BENCH_SMOKE=1`) enforces:
+//!
+//! * every served output is **bit-identical** to an unbatched
+//!   single-worker run of the same stream;
+//! * with batching on, a bursty flood coalesces: `batch_occupancy > 1`
+//!   and `batch_launches < requests`;
+//! * batching launches strictly fewer kernels than serving the same
+//!   stream solo.
+//!
+//! Writes `BENCH_batching.json` next to the manifest for the CI bench
+//! artifact (trend tracking across runs).
+
+use disc::bench::Table;
+use disc::compiler::{CompileOptions, CompiledModel, DiscCompiler, Mode};
+use disc::coordinator::{serve_open_loop, ServeOptions, ServeReport};
+use disc::runtime::tensor::Tensor;
+use disc::util::json::{to_string_pretty, Value};
+
+fn fresh_model() -> CompiledModel {
+    let w = disc::workloads::transformer::workload();
+    let compiler = DiscCompiler::new().expect("pjrt device");
+    let module = disc::bridge::lower(&w.graph).expect("lower");
+    compiler.compile(module, &CompileOptions::mode(Mode::Disc)).expect("compile")
+}
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::obj(fields)
+}
+
+/// Serve the stream under the given batching/worker config, bursty at a
+/// flooding rate so the queue fills while dispatches run.
+fn serve(stream: &[Vec<Tensor>], max_batch: usize, workers: usize) -> ServeReport {
+    let mut model = fresh_model();
+    let opts = ServeOptions::rate(1_000_000.0)
+        .workers(workers)
+        .bursty(stream.len())
+        .batch(max_batch)
+        .batch_window_us(if max_batch > 1 { 200 } else { 0 })
+        .keep_outputs();
+    serve_open_loop(&mut model, stream.to_vec(), &opts).expect("serve")
+}
+
+fn check_outputs(report: &ServeReport, reference: &[Vec<Tensor>], label: &str) {
+    assert_eq!(report.outputs.len(), reference.len(), "{label}: missing outputs");
+    for (id, got) in &report.outputs {
+        let want = &reference[*id as usize];
+        assert_eq!(
+            got, want,
+            "{label}: request {id} diverged from the unbatched single-worker run"
+        );
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("DISC_BENCH_SMOKE").is_ok();
+    let requests: usize = if smoke { 12 } else { 48 };
+    let seed = 77;
+    let w = disc::workloads::transformer::workload();
+    let stream = w.request_stream(requests, seed);
+
+    // Reference: unbatched direct runs on a fresh model (the interpreter /
+    // replay tiers, no coordinator, no batching).
+    let mut reference_model = fresh_model();
+    let reference: Vec<Vec<Tensor>> =
+        stream.iter().map(|r| reference_model.run(r).expect("reference run").outputs).collect();
+
+    println!("=== Cross-request batching: transformer, {requests}-request bursty flood ===\n");
+    let mut t = Table::new(&[
+        "batch", "workers", "throughput(r/s)", "dispatches", "occupancy", "kernels",
+        "pad-waste(KiB)", "p99",
+    ]);
+    let mut rows: Vec<Value> = Vec::new();
+
+    let configs: &[(usize, usize)] =
+        if smoke { &[(1, 1), (4, 1), (4, 2)] } else { &[(1, 1), (8, 1), (1, 2), (8, 2)] };
+    let mut solo_kernels: Option<u64> = None;
+    let mut batched_1w: Option<ServeReport> = None;
+    for &(max_batch, workers) in configs {
+        // Batch formation depends on queue depth at dispatch time; a flood
+        // makes coalescing overwhelmingly likely, but the gate below
+        // retries a couple of times before declaring a regression.
+        let mut report = serve(&stream, max_batch, workers);
+        if max_batch > 1 {
+            for _ in 0..2 {
+                if report.batch_occupancy > 1.0 {
+                    break;
+                }
+                report = serve(&stream, max_batch, workers);
+            }
+        }
+        check_outputs(&report, &reference, &format!("batch={max_batch} workers={workers}"));
+        t.row(&[
+            max_batch.to_string(),
+            workers.to_string(),
+            format!("{:.0}", report.throughput_rps),
+            report.batch_launches.to_string(),
+            format!("{:.2}", report.batch_occupancy),
+            report.metrics.total_kernels().to_string(),
+            format!("{:.1}", report.metrics.batch_padding_bytes as f64 / 1024.0),
+            format!("{:.2?}", report.p99),
+        ]);
+        rows.push(obj(vec![
+            ("batch", Value::Num(max_batch as f64)),
+            ("workers", Value::Num(workers as f64)),
+            ("requests", Value::Num(report.completed as f64)),
+            ("throughput_rps", Value::Num(report.throughput_rps)),
+            ("dispatches", Value::Num(report.batch_launches as f64)),
+            ("occupancy", Value::Num(report.batch_occupancy)),
+            ("batched_requests", Value::Num(report.batched_requests as f64)),
+            ("total_kernels", Value::Num(report.metrics.total_kernels() as f64)),
+            ("batch_padding_bytes", Value::Num(report.metrics.batch_padding_bytes as f64)),
+            ("p99_ms", Value::Num(report.p99.as_secs_f64() * 1e3)),
+        ]));
+        if max_batch == 1 && workers == 1 {
+            solo_kernels = Some(report.metrics.total_kernels());
+        }
+        if max_batch > 1 && workers == 1 && batched_1w.is_none() {
+            batched_1w = Some(report);
+        }
+    }
+    t.print();
+
+    // --- gates (deterministic given the flood + retries above) ------------
+    let batched = batched_1w.expect("sweep includes a single-worker batched config");
+    println!(
+        "\nbatching on (1 worker): {} requests in {} dispatches (occupancy {:.2}), \
+         kernels {} vs {} solo",
+        batched.completed,
+        batched.batch_launches,
+        batched.batch_occupancy,
+        batched.metrics.total_kernels(),
+        solo_kernels.unwrap(),
+    );
+    assert!(
+        batched.batch_occupancy > 1.0,
+        "bursty flood failed to coalesce: occupancy {:.2}",
+        batched.batch_occupancy
+    );
+    assert!(
+        batched.batch_launches < requests,
+        "batching must dispatch fewer times than the request count ({} vs {requests})",
+        batched.batch_launches
+    );
+    assert!(
+        batched.metrics.total_kernels() < solo_kernels.unwrap(),
+        "batching must launch fewer kernels ({} vs {} solo)",
+        batched.metrics.total_kernels(),
+        solo_kernels.unwrap()
+    );
+
+    let doc = obj(vec![
+        ("bench", Value::Str("batching".into())),
+        ("workload", Value::Str("transformer".into())),
+        ("requests", Value::Num(requests as f64)),
+        ("smoke", Value::Bool(smoke)),
+        ("rows", Value::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_batching.json", to_string_pretty(&doc)).expect("write bench artifact");
+    println!("\nwrote BENCH_batching.json");
+}

@@ -16,7 +16,12 @@
 use disc::bench::Table;
 use disc::compiler::{CompileOptions, DiscCompiler, Mode};
 use disc::coordinator::{serve_open_loop, Arrival, ServeOptions};
+use disc::util::json::{to_string_pretty, Value};
 use std::time::Duration;
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::obj(fields)
+}
 
 fn main() {
     let smoke = std::env::var("DISC_BENCH_SMOKE").is_ok();
@@ -34,8 +39,10 @@ fn main() {
     ]);
 
     let mut uniform_compiles: Vec<u64> = Vec::new();
+    let mut rows: Vec<Value> = Vec::new();
     for &workers in worker_counts {
-        for (arrival, label) in [(Arrival::Uniform, "uniform"), (Arrival::Bursty { burst: 8 }, "burst=8")]
+        for (arrival, label) in
+            [(Arrival::Uniform, "uniform"), (Arrival::Bursty { burst: 8 }, "burst=8")]
         {
             // Fresh compiler per config: the kernel store starts cold, so
             // the compiles column is directly comparable across rows.
@@ -63,9 +70,33 @@ fn main() {
                 snap.dedup_hits.to_string(),
                 format!("{:.2}", report.metrics.compile_stall.as_secs_f64() * 1e3),
             ]);
+            rows.push(obj(vec![
+                ("workers", Value::Num(workers as f64)),
+                ("arrival", Value::Str(label.to_string())),
+                ("throughput_rps", Value::Num(report.throughput_rps)),
+                ("p50_ms", Value::Num(report.p50.as_secs_f64() * 1e3)),
+                ("p99_ms", Value::Num(report.p99.as_secs_f64() * 1e3)),
+                ("queue_p99_ms", Value::Num(report.queue_p99.as_secs_f64() * 1e3)),
+                ("store_compiles", Value::Num(snap.misses as f64)),
+                ("dedup_hits", Value::Num(snap.dedup_hits as f64)),
+                (
+                    "compile_stall_ms",
+                    Value::Num(report.metrics.compile_stall.as_secs_f64() * 1e3),
+                ),
+            ]));
         }
     }
     t.print();
+    // Persist the sweep for the CI workflow artifact (trend tracking).
+    let doc = obj(vec![
+        ("bench", Value::Str("serving_scaling".into())),
+        ("workload", Value::Str("transformer".into())),
+        ("requests", Value::Num(requests as f64)),
+        ("smoke", Value::Bool(smoke)),
+        ("rows", Value::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serving.json", to_string_pretty(&doc)).expect("write bench artifact");
+    println!("\nwrote BENCH_serving.json");
     let flat = uniform_compiles.windows(2).all(|p| p[0] == p[1]);
     println!(
         "\nkernel-store compiles across worker counts: {:?} — {}",

@@ -86,7 +86,7 @@ fn broadcast_pair(b: &mut Builder, x: ValueId, y: ValueId) -> Result<(ValueId, V
     bail!("unsupported broadcast ranks {rx} vs {ry}")
 }
 
-/// Build an s64[rank] index tensor from per-axis scalar values, where each
+/// Build an `s64[rank]` index tensor from per-axis scalar values, where each
 /// scalar is either a constant or a host-computed value (GetDimSize math).
 fn pack_index_tensor(b: &mut Builder, parts: &[ValueId]) -> Result<ValueId> {
     // All-constant fast path.

@@ -70,10 +70,13 @@ disc — dynamic shape compiler (DISC reproduction)
 USAGE:
   disc run      --workload <name> [--mode disc] [--requests 50] [--seed 1]
                 [--open-rate <rps>] [--workers N] [--burst B] [--warm]
+                [--batch K] [--batch-window-us U]
                 (--workers >1 serves the open-loop stream from N executor
                  threads sharing one kernel/weight store; --burst switches
                  to on/off arrivals; --warm precompiles neighbor buckets in
-                 the background)
+                 the background; --batch >1 coalesces queued same-group
+                 requests into one stacked launch, waiting up to U us for
+                 stragglers once the queue runs dry)
   disc inspect  --workload <name> | --file <graph.json>
   disc import   --file <graph.json> [--mode disc] [--requests N]
   disc list     (show available workloads)

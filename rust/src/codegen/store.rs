@@ -180,9 +180,10 @@ impl CompilePool {
                         let shard = &shards[shard_of(&job.key)];
                         match result {
                             Ok(exe) => {
-                                stats
-                                    .compile_ns
-                                    .fetch_add(exe.compile_time.as_nanos() as u64, Ordering::Relaxed);
+                                stats.compile_ns.fetch_add(
+                                    exe.compile_time.as_nanos() as u64,
+                                    Ordering::Relaxed,
+                                );
                                 let exe = Arc::new(exe);
                                 shard
                                     .lock()

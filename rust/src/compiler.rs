@@ -9,6 +9,7 @@ use crate::library::WeightStore;
 use crate::passes;
 use crate::passes::static_detect::{analyze, PipelineChoice};
 use crate::program::{generate, Program};
+use crate::runtime::batching::{BatchAnalysis, BatchOutput};
 use crate::runtime::eager::Eager;
 use crate::runtime::executor::{ExecOptions, ExecOutput, Executor};
 use crate::runtime::pjrt::Device;
@@ -114,6 +115,34 @@ impl CompiledModel {
         }
     }
 
+    /// Execute several requests as one batched dispatch (program backends;
+    /// see `runtime::batching`). Outputs are per request, bit-identical to
+    /// solo runs. Baseline backends — and batches the program cannot
+    /// stack — fall back to sequential solo execution.
+    pub fn run_batch(&mut self, requests: &[Vec<Tensor>]) -> Result<BatchOutput> {
+        if let Backend::Program { exec, prog } = &mut self.backend {
+            return exec.run_batch(prog, requests);
+        }
+        let mut outputs = Vec::with_capacity(requests.len());
+        let mut metrics = crate::runtime::metrics::RunMetrics::default();
+        for r in requests {
+            let out = self.run(r)?;
+            metrics += &out.metrics;
+            outputs.push(out.outputs);
+        }
+        Ok(BatchOutput { outputs, metrics })
+    }
+
+    /// The program plus its (cached) batchability analysis, for batch
+    /// assembly in the serving coordinator. `None` for baseline backends,
+    /// which never batch.
+    pub fn batch_context(&mut self) -> Option<(Arc<Program>, Arc<BatchAnalysis>)> {
+        match &mut self.backend {
+            Backend::Program { exec, prog } => Some((prog.clone(), exec.batch_analysis(prog))),
+            _ => None,
+        }
+    }
+
     /// The module the backend executes (post-optimization).
     pub fn module(&self) -> &Module {
         match &self.backend {
@@ -201,7 +230,11 @@ impl DiscCompiler {
 
         // Resolve mode defaults.
         let (fusion_opts, policy, pipeline) = match opts.mode {
-            Mode::Eager => (FusionOptions { enabled: false, ..Default::default() }, BucketPolicy::NextPow2, "eager"),
+            Mode::Eager => (
+                FusionOptions { enabled: false, ..Default::default() },
+                BucketPolicy::NextPow2,
+                "eager",
+            ),
             // Nimble's TVM-based fusion: shape propagation only (no
             // constraint collection), no reduce-rooted input fusion, and a
             // TVM-like fuse-depth limit — "DISC pays more attention to

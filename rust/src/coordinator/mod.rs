@@ -12,6 +12,19 @@
 //! cache and buffer arena. See docs/runtime.md §Concurrency model for the
 //! per-worker vs process-shared split.
 //!
+//! **Cross-request batching** (`ServeOptions::max_batch > 1`): instead of
+//! launching every dequeued request alone, a worker greedily drains the
+//! queue, groups pending requests whose residual symbol bindings agree
+//! (see `runtime::batching`), and dispatches the whole group as one
+//! stacked walk of the generated flow — one kernel launch per leading-
+//! parallel step for the entire group, bit-identical outputs per member.
+//! Assembly is bounded by `max_batch` and by `batch_window` (how long a
+//! worker may wait for stragglers once the queue runs dry); singletons,
+//! ineligible programs, and binding mismatches fall back to solo
+//! execution. Reports carry `batch_launches` (total dispatches),
+//! `batch_occupancy` (requests per dispatch), and the batching counters
+//! inside `RunMetrics`.
+//!
 //! Drive modes:
 //!
 //! * [`serve_closed_loop`] — next request issues when the previous
@@ -25,12 +38,18 @@
 //!
 //! Reports aggregate `RunMetrics` with its `+=` semantics (stream totals),
 //! carry nearest-rank latency and queue-delay percentiles, and — under
-//! multiple workers — a per-worker breakdown.
+//! multiple workers — a per-worker breakdown. `ServeOptions::keep_outputs`
+//! additionally captures every request's outputs (by request id), which
+//! the batching correctness gates compare bit-for-bit against unbatched
+//! runs.
 
 use crate::compiler::CompiledModel;
+use crate::program::Program;
+use crate::runtime::batching::{group_key, BatchAnalysis, BatchKey};
 use crate::runtime::metrics::RunMetrics;
 use crate::runtime::tensor::Tensor;
 use anyhow::{Context, Result};
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -48,6 +67,9 @@ pub struct Completion {
     pub id: u64,
     pub latency: Duration,
     pub queue_delay: Duration,
+    /// The request's outputs, kept only under
+    /// `ServeOptions::capture_outputs` (correctness gates).
+    pub outputs: Option<Vec<Tensor>>,
 }
 
 /// Arrival process of the open-loop producer.
@@ -75,13 +97,32 @@ pub struct ServeOptions {
     /// Bound of the request queue; the producer blocks when it is full
     /// (backpressure instead of unbounded memory under overload).
     pub queue_cap: usize,
+    /// Cross-request batching bound: a worker coalesces up to this many
+    /// same-group queued requests into one stacked dispatch. `1` disables
+    /// batching (every request launches alone).
+    pub max_batch: usize,
+    /// How long a worker may wait for stragglers once the queue runs dry
+    /// while assembling a batch. Zero means greedy drain only: batch what
+    /// is already queued, never trade latency for occupancy.
+    pub batch_window: Duration,
+    /// Keep every request's outputs in the report (bit-exactness gates;
+    /// costs memory proportional to the stream).
+    pub capture_outputs: bool,
 }
 
 impl ServeOptions {
-    /// Uniform single-worker open loop at `rate_rps` (the pre-multi-worker
-    /// behavior).
+    /// Uniform single-worker open loop at `rate_rps`, batching off (the
+    /// pre-multi-worker behavior).
     pub fn rate(rate_rps: f64) -> ServeOptions {
-        ServeOptions { rate_rps, workers: 1, arrival: Arrival::Uniform, queue_cap: 1024 }
+        ServeOptions {
+            rate_rps,
+            workers: 1,
+            arrival: Arrival::Uniform,
+            queue_cap: 1024,
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            capture_outputs: false,
+        }
     }
 
     pub fn workers(mut self, n: usize) -> ServeOptions {
@@ -93,13 +134,38 @@ impl ServeOptions {
         self.arrival = Arrival::Bursty { burst: burst.max(1) };
         self
     }
+
+    /// Enable cross-request batching up to `max_batch` requests per
+    /// dispatch.
+    pub fn batch(mut self, max_batch: usize) -> ServeOptions {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Allow workers to wait up to `us` microseconds for batch stragglers
+    /// after the queue runs dry.
+    pub fn batch_window_us(mut self, us: u64) -> ServeOptions {
+        self.batch_window = Duration::from_micros(us);
+        self
+    }
+
+    /// Capture per-request outputs into the report.
+    pub fn keep_outputs(mut self) -> ServeOptions {
+        self.capture_outputs = true;
+        self
+    }
 }
 
 /// One worker's slice of an open-loop run.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerReport {
     pub worker: usize,
+    /// Requests this worker served (batch members count individually).
     pub completed: usize,
+    /// Dispatches this worker performed: a batch of k counts once, a solo
+    /// run counts once. Diverges from `completed` exactly when batching
+    /// coalesces requests.
+    pub launches: usize,
     pub mean: Duration,
     pub p99: Duration,
     pub metrics: RunMetrics,
@@ -108,7 +174,12 @@ pub struct WorkerReport {
 impl WorkerReport {
     /// Summarize one worker's completions (single source for the mean /
     /// nearest-rank math, used by both serve paths).
-    fn summarize(worker: usize, completions: &[Completion], metrics: RunMetrics) -> WorkerReport {
+    fn summarize(
+        worker: usize,
+        completions: &[Completion],
+        launches: usize,
+        metrics: RunMetrics,
+    ) -> WorkerReport {
         let mut lats: Vec<Duration> = completions.iter().map(|c| c.latency).collect();
         lats.sort_unstable();
         let mean = if lats.is_empty() {
@@ -119,6 +190,7 @@ impl WorkerReport {
         WorkerReport {
             worker,
             completed: completions.len(),
+            launches,
             mean,
             p99: nearest_rank(&lats, 0.99),
             metrics,
@@ -141,10 +213,23 @@ pub struct ServeReport {
     pub queue_p50: Duration,
     pub queue_p99: Duration,
     pub throughput_rps: f64,
+    /// Total dispatches across all workers (a batch of k counts once).
+    /// With batching off this equals `completed`; with batching on it is
+    /// strictly smaller whenever any batch formed.
+    pub batch_launches: usize,
+    /// Requests that rode a batched (>= 2 member) dispatch, from
+    /// `RunMetrics::batched_requests`.
+    pub batched_requests: u64,
+    /// Mean requests per dispatch (`completed / batch_launches`); 1.0 when
+    /// batching is off or never coalesced anything.
+    pub batch_occupancy: f64,
     pub metrics: RunMetrics,
     /// Per-worker breakdown (one entry per worker on multi-worker runs;
     /// single entry otherwise).
     pub per_worker: Vec<WorkerReport>,
+    /// Captured `(request id, outputs)` pairs, ascending by id; empty
+    /// unless `ServeOptions::capture_outputs` was set.
+    pub outputs: Vec<(u64, Vec<Tensor>)>,
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample: the smallest
@@ -162,13 +247,17 @@ fn nearest_rank(sorted: &[Duration], q: f64) -> Duration {
 
 impl ServeReport {
     fn from_completions(
-        lat: Vec<Completion>,
+        mut lat: Vec<Completion>,
         wall: Duration,
         metrics: RunMetrics,
         per_worker: Vec<WorkerReport>,
+        launches: usize,
     ) -> ServeReport {
+        let mut outputs: Vec<(u64, Vec<Tensor>)> =
+            lat.iter_mut().filter_map(|c| c.outputs.take().map(|o| (c.id, o))).collect();
+        outputs.sort_by_key(|&(id, _)| id);
         if lat.is_empty() {
-            return ServeReport { wall, metrics, per_worker, ..Default::default() };
+            return ServeReport { wall, metrics, per_worker, outputs, ..Default::default() };
         }
         let mut latencies: Vec<Duration> = lat.iter().map(|c| c.latency).collect();
         latencies.sort_unstable();
@@ -185,8 +274,12 @@ impl ServeReport {
             queue_p50: nearest_rank(&queue, 0.50),
             queue_p99: nearest_rank(&queue, 0.99),
             throughput_rps: lat.len() as f64 / wall.as_secs_f64().max(1e-9),
+            batch_launches: launches,
+            batched_requests: metrics.batched_requests,
+            batch_occupancy: lat.len() as f64 / launches.max(1) as f64,
             metrics,
             per_worker,
+            outputs,
         }
     }
 }
@@ -198,7 +291,8 @@ pub fn serve_closed_loop(
     stream: Vec<Vec<Tensor>>,
 ) -> Result<ServeReport> {
     let start = Instant::now();
-    let mut completions = Vec::with_capacity(stream.len());
+    let n = stream.len();
+    let mut completions = Vec::with_capacity(n);
     let mut metrics = RunMetrics::default();
     for (i, inputs) in stream.into_iter().enumerate() {
         let t0 = Instant::now();
@@ -208,9 +302,10 @@ pub fn serve_closed_loop(
             id: i as u64,
             latency: t0.elapsed(),
             queue_delay: Duration::ZERO,
+            outputs: None,
         });
     }
-    Ok(ServeReport::from_completions(completions, start.elapsed(), metrics, Vec::new()))
+    Ok(ServeReport::from_completions(completions, start.elapsed(), metrics, Vec::new(), n))
 }
 
 /// Spawn the open-loop producer: absolute-deadline scheduling (the gap is
@@ -247,6 +342,134 @@ fn spawn_producer(
     })
 }
 
+/// A request stashed during batch assembly, with its grouping key computed
+/// exactly once (keying binds a full symbol environment, so recomputing it
+/// per assembly pass would put redundant shape work on the hot path).
+struct Stashed {
+    req: Request,
+    key: Option<BatchKey>,
+}
+
+/// Assemble one dispatch group around `head`: matching requests stashed in
+/// `pending` first, then a greedy drain of the shared queue, then (window
+/// permitting) a bounded poll for stragglers. Non-matching requests land
+/// in `pending` for a later dispatch; the caller serves `pending` in FIFO
+/// order before blocking on the queue again, so nothing starves.
+///
+/// `next` must poll the queue WITHOUT blocking — the straggler window is
+/// waited out here with short sleeps between polls, so a worker never
+/// holds a shared receiver lock across the window (that would stall every
+/// sibling worker's dequeue for the whole wait). Requests without a key
+/// (batching off for them, or unbindable inputs) always dispatch solo.
+fn assemble_batch(
+    head: Request,
+    head_key: Option<BatchKey>,
+    pending: &mut VecDeque<Stashed>,
+    max_batch: usize,
+    window: Duration,
+    key_of: &mut dyn FnMut(&Request) -> Option<BatchKey>,
+    next: &mut dyn FnMut() -> Option<Request>,
+) -> Vec<Request> {
+    let key = match head_key {
+        Some(k) if max_batch > 1 => k,
+        _ => return vec![head],
+    };
+    let mut batch = vec![head];
+    let mut i = 0;
+    while batch.len() < max_batch && i < pending.len() {
+        if pending[i].key.as_ref() == Some(&key) {
+            if let Some(s) = pending.remove(i) {
+                batch.push(s.req);
+            }
+        } else {
+            i += 1;
+        }
+    }
+    // The straggler window starts when the queue first runs dry (the
+    // documented semantics) — greedy draining of an already-deep queue
+    // must not eat into it.
+    let mut deadline: Option<Instant> = None;
+    while batch.len() < max_batch {
+        match next() {
+            Some(r) => {
+                let rk = key_of(&r);
+                if rk.as_ref() == Some(&key) {
+                    batch.push(r);
+                } else {
+                    pending.push_back(Stashed { req: r, key: rk });
+                }
+            }
+            None => {
+                // Queue ran dry: poll out the batching window (if any),
+                // sleeping in short slices so nothing is held locked.
+                let now = Instant::now();
+                let dl = *deadline.get_or_insert(now + window);
+                if now >= dl {
+                    break;
+                }
+                std::thread::sleep((dl - now).min(Duration::from_micros(50)));
+            }
+        }
+    }
+    batch
+}
+
+/// The shared drain-assemble-dispatch loop body: serve every request the
+/// queue delivers (plus locally stashed ones), batching where `key_of`
+/// allows, until the queue disconnects and the stash is empty.
+fn drain_queue(
+    opts: &ServeOptions,
+    completions: &mut Vec<Completion>,
+    metrics: &mut RunMetrics,
+    launches: &mut usize,
+    key_of: &mut dyn FnMut(&Request) -> Option<BatchKey>,
+    next: &mut dyn FnMut() -> Option<Request>,
+    recv_blocking: &mut dyn FnMut() -> Option<Request>,
+    run: &mut dyn FnMut(&[Vec<Tensor>]) -> Result<crate::runtime::batching::BatchOutput>,
+) -> Result<()> {
+    let mut pending: VecDeque<Stashed> = VecDeque::new();
+    loop {
+        let (head, head_key) = match pending.pop_front() {
+            Some(s) => (s.req, s.key),
+            None => match recv_blocking() {
+                Some(r) => {
+                    let k = key_of(&r);
+                    (r, k)
+                }
+                None => break,
+            },
+        };
+        let batch = assemble_batch(
+            head,
+            head_key,
+            &mut pending,
+            opts.max_batch,
+            opts.batch_window,
+            key_of,
+            next,
+        );
+        let delays: Vec<Duration> = batch.iter().map(|r| r.arrived.elapsed()).collect();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        let inputs: Vec<Vec<Tensor>> = batch.into_iter().map(|r| r.inputs).collect();
+        let t0 = Instant::now();
+        let out = run(&inputs)?;
+        let dt = t0.elapsed();
+        *launches += 1;
+        *metrics += &out.metrics;
+        let mut outs = out.outputs.into_iter();
+        for (j, id) in ids.into_iter().enumerate() {
+            let produced = outs.next();
+            completions.push(Completion {
+                id,
+                latency: delays[j] + dt,
+                queue_delay: delays[j],
+                outputs: if opts.capture_outputs { produced } else { None },
+            });
+        }
+    }
+    Ok(())
+}
+
 /// Open-loop serving: a producer thread feeds one bounded queue at the
 /// offered rate while `opts.workers` executor threads drain it. Queue
 /// delay shows up in latency, as in a real deployment.
@@ -255,7 +478,8 @@ fn spawn_producer(
 /// model directly (any backend). With more, sibling executors are forked
 /// from the model (see [`CompiledModel::fork_workers`]): per-worker plan
 /// caches, shared kernel/weight stores — the compile-once, upload-once
-/// serving engine.
+/// serving engine. `max_batch > 1` turns on cross-request batching in
+/// either shape (program backends; other backends always dispatch solo).
 pub fn serve_open_loop(
     model: &mut CompiledModel,
     stream: Vec<Vec<Tensor>>,
@@ -268,22 +492,35 @@ pub fn serve_open_loop(
         let start = Instant::now();
         let mut completions = Vec::with_capacity(n);
         let mut metrics = RunMetrics::default();
-        while completions.len() < n {
-            let req = rx.recv().context("open-loop producer hung up early")?;
-            let queue_delay = req.arrived.elapsed();
-            let t0 = Instant::now();
-            let out = model.run(&req.inputs)?;
-            metrics += &out.metrics;
-            completions.push(Completion {
-                id: req.id,
-                latency: queue_delay + t0.elapsed(),
-                queue_delay,
-            });
-        }
+        let mut launches = 0usize;
+        let ctx: Option<(Arc<Program>, Arc<BatchAnalysis>)> =
+            if opts.max_batch > 1 { model.batch_context() } else { None };
+        let mut key_of = |req: &Request| {
+            ctx.as_ref().and_then(|(p, a)| group_key(&p.module, a, &req.inputs))
+        };
+        let mut next = || rx.try_recv().ok();
+        let mut recv_blocking = || rx.recv().ok();
+        let mut run = |inputs: &[Vec<Tensor>]| model.run_batch(inputs);
+        drain_queue(
+            opts,
+            &mut completions,
+            &mut metrics,
+            &mut launches,
+            &mut key_of,
+            &mut next,
+            &mut recv_blocking,
+            &mut run,
+        )?;
         producer.join().ok();
+        anyhow::ensure!(
+            completions.len() == n,
+            "lost requests: {} of {n} completed",
+            completions.len()
+        );
         let wall = start.elapsed();
-        let per_worker = vec![WorkerReport::summarize(0, &completions, metrics.clone())];
-        return Ok(ServeReport::from_completions(completions, wall, metrics, per_worker));
+        let per_worker =
+            vec![WorkerReport::summarize(0, &completions, launches, metrics.clone())];
+        return Ok(ServeReport::from_completions(completions, wall, metrics, per_worker, launches));
     }
 
     // Multi-worker: fork sibling executors and drain the shared queue.
@@ -293,38 +530,56 @@ pub fn serve_open_loop(
     let producer = spawn_producer(tx, stream, opts.rate_rps, opts.arrival);
     let start = Instant::now();
 
+    type WorkerResult = Result<(usize, Vec<Completion>, usize, RunMetrics)>;
     let handles: Vec<_> = workers
         .into_iter()
         .enumerate()
         .map(|(wi, mut exec)| {
             let rx = rx.clone();
             let prog = prog.clone();
+            let opts = opts.clone();
             std::thread::Builder::new()
                 .name(format!("disc-worker-{wi}"))
-                .spawn(move || -> Result<(usize, Vec<Completion>, RunMetrics)> {
+                .spawn(move || -> WorkerResult {
                     let mut completions = Vec::new();
                     let mut metrics = RunMetrics::default();
-                    loop {
-                        // Hold the receiver lock only for the dequeue; the
-                        // (long) model run happens outside it.
-                        let req = {
-                            let guard = rx.lock().expect("request queue lock");
-                            guard.recv()
-                        };
-                        let Ok(req) = req else { break };
-                        let queue_delay = req.arrived.elapsed();
-                        let t0 = Instant::now();
-                        let out = exec
-                            .run(&prog, &req.inputs)
-                            .with_context(|| format!("worker {wi}, request {}", req.id))?;
-                        metrics += &out.metrics;
-                        completions.push(Completion {
-                            id: req.id,
-                            latency: queue_delay + t0.elapsed(),
-                            queue_delay,
-                        });
-                    }
-                    Ok((wi, completions, metrics))
+                    let mut launches = 0usize;
+                    let analysis = if opts.max_batch > 1 {
+                        Some(exec.batch_analysis(&prog))
+                    } else {
+                        None
+                    };
+                    let mut key_of = |req: &Request| {
+                        analysis
+                            .as_ref()
+                            .and_then(|a| group_key(&prog.module, a, &req.inputs))
+                    };
+                    // Hold the receiver lock only for a non-blocking poll
+                    // or a dequeue; the (long) dispatch — and the batch
+                    // straggler window — happen outside it.
+                    let mut next = || {
+                        let guard = rx.lock().expect("request queue lock");
+                        guard.try_recv().ok()
+                    };
+                    let mut recv_blocking = || {
+                        let guard = rx.lock().expect("request queue lock");
+                        guard.recv().ok()
+                    };
+                    let mut run = |inputs: &[Vec<Tensor>]| {
+                        exec.run_batch(&prog, inputs)
+                            .with_context(|| format!("worker {wi}"))
+                    };
+                    drain_queue(
+                        &opts,
+                        &mut completions,
+                        &mut metrics,
+                        &mut launches,
+                        &mut key_of,
+                        &mut next,
+                        &mut recv_blocking,
+                        &mut run,
+                    )?;
+                    Ok((wi, completions, launches, metrics))
                 })
                 .expect("spawning worker thread")
         })
@@ -332,13 +587,15 @@ pub fn serve_open_loop(
 
     let mut completions: Vec<Completion> = Vec::with_capacity(n);
     let mut metrics = RunMetrics::default();
+    let mut launches = 0usize;
     let mut per_worker: Vec<WorkerReport> = Vec::with_capacity(handles.len());
     let mut first_err: Option<anyhow::Error> = None;
     for h in handles {
         match h.join().expect("worker thread panicked") {
-            Ok((wi, comps, m)) => {
-                per_worker.push(WorkerReport::summarize(wi, &comps, m.clone()));
+            Ok((wi, comps, wl, m)) => {
+                per_worker.push(WorkerReport::summarize(wi, &comps, wl, m.clone()));
                 metrics += &m;
+                launches += wl;
                 completions.extend(comps);
             }
             Err(e) => first_err = first_err.or(Some(e)),
@@ -353,10 +610,14 @@ pub fn serve_open_loop(
     if let Some(e) = first_err {
         return Err(e);
     }
-    anyhow::ensure!(completions.len() == n, "lost requests: {} of {n} completed", completions.len());
+    anyhow::ensure!(
+        completions.len() == n,
+        "lost requests: {} of {n} completed",
+        completions.len()
+    );
     let wall = start.elapsed();
     per_worker.sort_by_key(|w| w.worker);
-    Ok(ServeReport::from_completions(completions, wall, metrics, per_worker))
+    Ok(ServeReport::from_completions(completions, wall, metrics, per_worker, launches))
 }
 
 #[cfg(test)]
@@ -381,6 +642,8 @@ mod tests {
         assert!(report.throughput_rps > 0.0);
         assert!(report.p95 >= report.p50);
         assert!(report.metrics.mem_kernels > 0);
+        assert_eq!(report.batch_launches, 8, "closed loop dispatches solo");
+        assert_eq!(report.batch_occupancy, 1.0);
     }
 
     #[test]
@@ -392,6 +655,9 @@ mod tests {
         assert_eq!(report.completed, 5);
         assert!(report.mean > Duration::ZERO);
         assert_eq!(report.per_worker.len(), 1);
+        assert_eq!(report.batch_launches, 5, "batching off: one dispatch per request");
+        assert_eq!(report.per_worker[0].launches, 5);
+        assert!(report.outputs.is_empty(), "outputs kept only on request");
     }
 
     #[test]
@@ -408,6 +674,10 @@ mod tests {
         assert_eq!(report.completed, 12);
         assert_eq!(report.per_worker.len(), 3);
         assert_eq!(report.per_worker.iter().map(|wr| wr.completed).sum::<usize>(), 12);
+        assert_eq!(
+            report.per_worker.iter().map(|wr| wr.launches).sum::<usize>(),
+            report.batch_launches
+        );
         assert!(report.metrics.mem_kernels > 0, "metrics aggregate across workers");
     }
 
@@ -438,6 +708,62 @@ mod tests {
         .unwrap();
         assert_eq!(report.completed, 9);
         assert!(report.queue_p99 >= report.queue_p50);
+    }
+
+    #[test]
+    fn batching_options_compose() {
+        let o = ServeOptions::rate(10.0).workers(2).batch(8).batch_window_us(250).keep_outputs();
+        assert_eq!(o.max_batch, 8);
+        assert_eq!(o.batch_window, Duration::from_micros(250));
+        assert!(o.capture_outputs);
+        // Degenerate values clamp to "off".
+        assert_eq!(ServeOptions::rate(1.0).batch(0).max_batch, 1);
+    }
+
+    #[test]
+    fn batching_on_ineligible_program_serves_solo() {
+        // TTS has a static-leading parameter (`prev_frame: [1, MEL]`), so
+        // the analysis rejects it and every dispatch stays solo — the
+        // fallback path the coordinator must keep correct.
+        let mut model = small_model();
+        let ctx = model.batch_context();
+        assert!(ctx.is_some(), "program backend always yields a context");
+        let (_, analysis) = ctx.unwrap();
+        assert!(!analysis.eligible(), "tts must be batching-ineligible");
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(6, 47);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(50_000.0).batch(4).keep_outputs(),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.batch_launches, 6, "ineligible program never batches");
+        assert_eq!(report.batched_requests, 0);
+        assert_eq!(report.batch_occupancy, 1.0);
+        assert_eq!(report.outputs.len(), 6, "outputs captured per request");
+    }
+
+    #[test]
+    fn capture_outputs_match_direct_runs() {
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(4, 48);
+        let report = serve_open_loop(
+            &mut model,
+            stream.clone(),
+            &ServeOptions::rate(1_000.0).keep_outputs(),
+        )
+        .unwrap();
+        assert_eq!(report.outputs.len(), 4);
+        let mut fresh = small_model();
+        for (i, inputs) in stream.iter().enumerate() {
+            let want = fresh.run(inputs).unwrap().outputs;
+            let (id, got) = &report.outputs[i];
+            assert_eq!(*id, i as u64, "outputs sorted by request id");
+            assert_eq!(got, &want, "captured outputs diverged at request {i}");
+        }
     }
 
     #[test]
@@ -479,5 +805,68 @@ mod tests {
         assert_eq!(got, 30);
         assert!(took >= Duration::from_millis(25), "offered faster than the rate: {took:?}");
         assert!(took <= Duration::from_millis(250), "producer drifted: {took:?}");
+    }
+
+    #[test]
+    fn assemble_batch_groups_by_key_and_respects_the_cap() {
+        // Synthetic requests: key = number of input tensors (0 vs 1).
+        let mk = |id: u64, n_inputs: usize| Request {
+            id,
+            inputs: (0..n_inputs).map(|_| Tensor::scalar_f32(0.0)).collect(),
+            arrived: Instant::now(),
+        };
+        let key_for = |r: &Request| Some(BatchKey {
+            residual: vec![(crate::shape::SymId(0), r.inputs.len() as i64)],
+        });
+        let stash = |r: Request| {
+            let key = key_for(&r);
+            Stashed { req: r, key }
+        };
+        let mut pending: VecDeque<Stashed> = VecDeque::new();
+        pending.push_back(stash(mk(1, 1))); // other group: stays pending
+        pending.push_back(stash(mk(2, 0))); // same group: joins
+        let mut queued = VecDeque::from([mk(3, 0), mk(4, 1), mk(5, 0), mk(6, 0)]);
+        let mut key_of = |r: &Request| Some(BatchKey {
+            residual: vec![(crate::shape::SymId(0), r.inputs.len() as i64)],
+        });
+        let mut next = || queued.pop_front();
+        let head = mk(0, 0);
+        let head_key = key_for(&head);
+        let batch = assemble_batch(
+            head,
+            head_key,
+            &mut pending,
+            4,
+            Duration::ZERO,
+            &mut key_of,
+            &mut next,
+        );
+        // Head 0 + pending 2 + queued 3, 5 — capped at 4, id 4 stashed.
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 3, 5]);
+        let stashed: Vec<u64> = pending.iter().map(|s| s.req.id).collect();
+        assert_eq!(stashed, vec![1, 4]);
+        assert_eq!(queued.len(), 1, "assembly stopped at the cap");
+    }
+
+    #[test]
+    fn assemble_batch_without_key_dispatches_solo() {
+        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now() };
+        let mut pending: VecDeque<Stashed> = VecDeque::new();
+        let mut key_of = |_: &Request| None;
+        let mut next = || -> Option<Request> {
+            panic!("solo dispatch must not poll the queue")
+        };
+        let batch = assemble_batch(
+            mk(7),
+            None,
+            &mut pending,
+            8,
+            Duration::from_millis(50),
+            &mut key_of,
+            &mut next,
+        );
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 7);
     }
 }

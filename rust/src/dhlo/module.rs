@@ -269,7 +269,12 @@ impl Builder {
 
     /// `broadcast_in_dim` to an explicit output shape. `mapping[i]` gives
     /// the output axis that operand axis `i` occupies.
-    pub fn broadcast(&mut self, x: ValueId, out_dims: Vec<Dim>, mapping: Vec<usize>) -> Result<ValueId> {
+    pub fn broadcast(
+        &mut self,
+        x: ValueId,
+        out_dims: Vec<Dim>,
+        mapping: Vec<usize>,
+    ) -> Result<ValueId> {
         let tx = self.ty(x).clone();
         ensure!(mapping.len() == tx.rank(), "broadcast: mapping rank mismatch");
         for (i, &m) in mapping.iter().enumerate() {
@@ -291,7 +296,13 @@ impl Builder {
     }
 
     /// Dynamic broadcast: output extents read from `shape: s64[r]`.
-    pub fn dbroadcast(&mut self, x: ValueId, shape: ValueId, mapping: Vec<usize>, out_rank: usize) -> Result<ValueId> {
+    pub fn dbroadcast(
+        &mut self,
+        x: ValueId,
+        shape: ValueId,
+        mapping: Vec<usize>,
+        out_rank: usize,
+    ) -> Result<ValueId> {
         let tx = self.ty(x).clone();
         ensure!(self.ty(shape).dtype == DType::I64, "dbroadcast: shape tensor must be s64");
         let mut dims = Vec::with_capacity(out_rank);
@@ -302,7 +313,11 @@ impl Builder {
             );
             dims.push(Dim::Sym(s));
         }
-        Ok(self.push(Op::DBroadcast { dims: mapping }, vec![x, shape], TensorType::new(tx.dtype, dims)))
+        Ok(self.push(
+            Op::DBroadcast { dims: mapping },
+            vec![x, shape],
+            TensorType::new(tx.dtype, dims),
+        ))
     }
 
     pub fn transpose(&mut self, x: ValueId, perm: Vec<usize>) -> Result<ValueId> {
@@ -388,7 +403,13 @@ impl Builder {
     }
 
     /// Static slice: HLO semantics, constant bounding box.
-    pub fn slice(&mut self, x: ValueId, starts: Vec<i64>, limits: Vec<i64>, strides: Vec<i64>) -> Result<ValueId> {
+    pub fn slice(
+        &mut self,
+        x: ValueId,
+        starts: Vec<i64>,
+        limits: Vec<i64>,
+        strides: Vec<i64>,
+    ) -> Result<ValueId> {
         let tx = self.ty(x).clone();
         ensure!(
             starts.len() == tx.rank() && limits.len() == tx.rank() && strides.len() == tx.rank(),
@@ -413,7 +434,13 @@ impl Builder {
     /// Dynamic slice (figure 2): the bounding box arrives as s64 tensors.
     /// Result dims are fresh symbols defined as
     /// `ceildiv(limit[i] - start[i], stride[i])` over runtime tensor reads.
-    pub fn dslice(&mut self, x: ValueId, starts: ValueId, limits: ValueId, strides: ValueId) -> Result<ValueId> {
+    pub fn dslice(
+        &mut self,
+        x: ValueId,
+        starts: ValueId,
+        limits: ValueId,
+        strides: ValueId,
+    ) -> Result<ValueId> {
         let tx = self.ty(x).clone();
         for &idx in &[starts, limits, strides] {
             ensure!(self.ty(idx).dtype == DType::I64, "dslice: indices must be s64");
@@ -441,7 +468,13 @@ impl Builder {
     }
 
     /// Static pad: `(x, pad_value)` with constant low/high widths.
-    pub fn pad(&mut self, x: ValueId, value: ValueId, low: Vec<i64>, high: Vec<i64>) -> Result<ValueId> {
+    pub fn pad(
+        &mut self,
+        x: ValueId,
+        value: ValueId,
+        low: Vec<i64>,
+        high: Vec<i64>,
+    ) -> Result<ValueId> {
         let tx = self.ty(x).clone();
         ensure!(self.ty(value).rank() == 0, "pad: value must be scalar");
         ensure!(low.len() == tx.rank() && high.len() == tx.rank(), "pad: width rank mismatch");
@@ -465,7 +498,13 @@ impl Builder {
     }
 
     /// Dynamic pad: widths arrive as s64 tensors.
-    pub fn dpad(&mut self, x: ValueId, value: ValueId, low: ValueId, high: ValueId) -> Result<ValueId> {
+    pub fn dpad(
+        &mut self,
+        x: ValueId,
+        value: ValueId,
+        low: ValueId,
+        high: ValueId,
+    ) -> Result<ValueId> {
         let tx = self.ty(x).clone();
         ensure!(self.ty(value).rank() == 0, "dpad: value must be scalar");
         let mut dims = Vec::with_capacity(tx.rank());
@@ -573,7 +612,13 @@ impl Builder {
     }
 
     /// Layer norm over the last axis (mean/variance/normalize), expanded.
-    pub fn layernorm_last(&mut self, x: ValueId, gamma: ValueId, beta: ValueId, eps: f32) -> Result<ValueId> {
+    pub fn layernorm_last(
+        &mut self,
+        x: ValueId,
+        gamma: ValueId,
+        beta: ValueId,
+        eps: f32,
+    ) -> Result<ValueId> {
         let rank = self.ty(x).rank();
         let last = rank - 1;
         let mean = self.reduce(ReduceKind::Mean, x, vec![last])?;
@@ -596,7 +641,12 @@ impl Builder {
 
     /// Broadcast a reduced tensor back over the reduced axis `axis` of
     /// `like` (i.e. keepdims-style broadcast).
-    pub fn broadcast_like_insert(&mut self, reduced: ValueId, like: ValueId, axis: usize) -> Result<ValueId> {
+    pub fn broadcast_like_insert(
+        &mut self,
+        reduced: ValueId,
+        like: ValueId,
+        axis: usize,
+    ) -> Result<ValueId> {
         let out = self.ty(like).dims.clone();
         let mapping: Vec<usize> = (0..out.len()).filter(|&a| a != axis).collect();
         self.broadcast(reduced, out, mapping)

@@ -338,7 +338,10 @@ mod tests {
         let m2 = roundtrip(&m);
         assert_eq!(m.instrs.len(), m2.instrs.len());
         // Numerics agree (structure-preserving parse).
-        let input = crate::runtime::tensor::Tensor::f32(&[3, 8], (0..24).map(|i| i as f32 * 0.1).collect());
+        let input = crate::runtime::tensor::Tensor::f32(
+            &[3, 8],
+            (0..24).map(|i| i as f32 * 0.1).collect(),
+        );
         let a = crate::runtime::reference::eval_module(&m, &[input.clone()]).unwrap();
         let c = crate::runtime::reference::eval_module(&m2, &[input]).unwrap();
         assert!(a.outputs[0].allclose(&c.outputs[0], 1e-6, 1e-6).unwrap());

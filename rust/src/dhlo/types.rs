@@ -150,7 +150,9 @@ impl Literal {
             Literal::F32(v) => v.iter().map(|x| format_f32_hlo(*x)).collect(),
             Literal::I64(v) => v.iter().map(|x| x.to_string()).collect(),
             Literal::I32(v) => v.iter().map(|x| x.to_string()).collect(),
-            Literal::Pred(v) => v.iter().map(|x| if *x { "true".into() } else { "false".into() }).collect(),
+            Literal::Pred(v) => {
+                v.iter().map(|x| if *x { "true".into() } else { "false".into() }).collect()
+            }
         }
     }
 }

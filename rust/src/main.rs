@@ -53,6 +53,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 1)? as u64;
     let workers = args.get_usize("workers", 1)?;
     let burst = args.get_usize("burst", 0)?;
+    let max_batch = args.get_usize("batch", 1)?;
+    let batch_window_us = args.get_usize("batch-window-us", 0)? as u64;
 
     let module = disc::bridge::lower(&w.graph)?;
     let compiler = DiscCompiler::new()?;
@@ -75,7 +77,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = match args.get("open-rate") {
         Some(r) => {
             let rate: f64 = r.parse().context("--open-rate wants a float")?;
-            let mut sopts = coordinator::ServeOptions::rate(rate).workers(workers);
+            let mut sopts = coordinator::ServeOptions::rate(rate)
+                .workers(workers)
+                .batch(max_batch)
+                .batch_window_us(batch_window_us);
             if burst > 0 {
                 sopts = sopts.bursty(burst);
             }
@@ -129,6 +134,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         m.weight_cache_misses,
         disc::util::fmt_bytes(m.weight_resident_bytes as usize)
     );
+    println!(
+        "batching: dispatches={} occupancy={:.2} batched_requests={} batched_launches={} \
+         padding-waste={} stack-copies={}",
+        report.batch_launches,
+        report.batch_occupancy,
+        m.batched_requests,
+        m.batched_launches,
+        disc::util::fmt_bytes(m.batch_padding_bytes as usize),
+        disc::util::fmt_bytes(m.batch_stack_bytes as usize)
+    );
     if report.per_worker.len() > 1 {
         println!(
             "queue delay: p50={:.2?} p99={:.2?}  ({} workers)",
@@ -138,9 +153,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
         for wr in &report.per_worker {
             println!(
-                "  worker {}: {} reqs  mean={:.2?} p99={:.2?}  plans h/m={}/{}  compiles={}",
+                "  worker {}: {} reqs / {} dispatches  mean={:.2?} p99={:.2?}  \
+                 plans h/m={}/{}  compiles={}",
                 wr.worker,
                 wr.completed,
+                wr.launches,
                 wr.mean,
                 wr.p99,
                 wr.metrics.plan_hits,

@@ -39,7 +39,9 @@ impl AotTransformer {
     /// Load the manifest, compile every model variant, parse the weights.
     pub fn load(dir: &Path, device: &Device) -> Result<AotTransformer> {
         let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+            .with_context(|| {
+                format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+            })?;
         let manifest = json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let hidden = manifest.get("hidden").as_usize().context("manifest: hidden")?;
 

@@ -1,0 +1,1226 @@
+//! Cross-request batching: execute several queued requests as ONE walk of
+//! the generated flow, stacked along a shared leading dynamic symbol.
+//!
+//! Bucketed kernels make the leading dimension cheap: a kernel compiled
+//! for bucket extents serves any actual extent inside the bucket, so three
+//! queued requests of 2 rows each can ride one launch at 6 rows — landing
+//! in the same bucket family (often the very same kernel) that solo
+//! requests already populated. The serving coordinator groups queued
+//! requests whose *residual* symbol bindings (everything except the
+//! leading batch symbol) agree and hands them to
+//! [`Executor::run_batch`](crate::runtime::executor::Executor), which
+//! concatenates their inputs along the leading axis, executes the step
+//! sequence once, and slices per-request outputs back out.
+//!
+//! Batching must stay **bit-exact** against the single-request
+//! interpreter, and most interesting programs (transformer, BERT) are not
+//! uniformly row-parallel: attention mixes rows across the dynamic axis,
+//! so naively concatenating sequences would attend across requests. The
+//! static [`analyze`] pass therefore classifies every step of the
+//! generated flow:
+//!
+//! * [`BatchMode::Stacked`] — the step maps rows of the leading symbol
+//!   independently (elementwise chains, row-wise reduces such as
+//!   softmax/layernorm over trailing axes, `[rows, k] · [k, n]` GEMMs,
+//!   embedding gathers). Executed once over the concatenated values; row
+//!   `r` of the stacked result is bitwise the row the owning request
+//!   would have computed alone, because bucketed kernels compute each
+//!   row from that row's lanes only (trailing-axis masking is shared —
+//!   the residual bindings agree by construction).
+//! * [`BatchMode::Shared`] — derived from constants only; executed once
+//!   and shared by every member.
+//! * [`BatchMode::PerRequest`] — anything that couples rows across the
+//!   leading axis (attention scores/softmax over the dynamic axis,
+//!   axis-0 transposes/slices, extent reads). Executed once per member
+//!   request, exactly as solo execution would.
+//!
+//! Values cross between the groups by slicing (stacked → per-request
+//! rows) and concatenation (per-request → stacked), both contiguous
+//! row-range copies accounted in `RunMetrics::batch_stack_bytes`.
+//!
+//! Programs with data-dependent extents (`Unique`) or shape math that
+//! reads tensor contents (`ShapeExpr::Elem`) are ineligible and fall back
+//! to solo execution, as does any batch whose residual bindings disagree.
+//! See docs/runtime.md §Cross-request batching.
+
+use crate::dhlo::{DType, Module, Op, ValueId};
+use crate::library::{GemmSrc, WeightKey};
+use crate::program::{Program, Step};
+use crate::runtime::executor::{crop_box, pad_box, weight_ref_of, ExecOutput, Executor};
+use crate::runtime::metrics::RunMetrics;
+use crate::runtime::plan::binding_vector;
+use crate::runtime::reference::eval_op;
+use crate::runtime::shape_env::{NoVals, SymEnv};
+use crate::runtime::tensor::{Data, Tensor};
+use crate::shape::{Dim, ShapeExpr, SymId};
+use anyhow::{Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How one step of the generated flow executes inside a batched dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Executed once over values stacked along the leading batch symbol.
+    Stacked,
+    /// Derived from constants only: executed once, shared by all members.
+    Shared,
+    /// Executed once per member request (the solo semantics).
+    PerRequest,
+}
+
+/// Result of the static batchability analysis of one program.
+#[derive(Debug)]
+pub struct BatchAnalysis {
+    /// The canonical leading symbol requests stack along; `None` means the
+    /// program is ineligible (see `reason`) and batches run solo.
+    pub batch_sym: Option<SymId>,
+    /// Why the program is ineligible (diagnostic; `None` when eligible).
+    pub reason: Option<&'static str>,
+    /// Execution mode per `Program::steps` entry (empty when ineligible).
+    pub step_modes: Vec<BatchMode>,
+    /// Mode of each IR value's materialized form (indexed by `ValueId`).
+    pub value_modes: Vec<BatchMode>,
+    /// Number of launch-carrying steps that run stacked (the win).
+    pub stacked_steps: usize,
+}
+
+impl BatchAnalysis {
+    pub fn eligible(&self) -> bool {
+        self.batch_sym.is_some()
+    }
+
+    fn ineligible(reason: &'static str) -> BatchAnalysis {
+        BatchAnalysis {
+            batch_sym: None,
+            reason: Some(reason),
+            step_modes: Vec::new(),
+            value_modes: Vec::new(),
+            stacked_steps: 0,
+        }
+    }
+}
+
+/// Grouping key for batch assembly: the binding vector *minus* the leading
+/// batch symbol. Requests may differ in their leading extent (that is the
+/// axis batches stack along) but must agree on every other dynamic dim,
+/// because stacked launches share one set of trailing extent scalars.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchKey {
+    pub residual: Vec<(SymId, i64)>,
+}
+
+/// Compute the grouping key of a request, or `None` when the program is
+/// ineligible or the inputs do not bind (such requests serve solo and
+/// surface their errors through the normal run path).
+pub fn group_key(m: &Module, analysis: &BatchAnalysis, inputs: &[Tensor]) -> Option<BatchKey> {
+    let b = analysis.batch_sym?;
+    let mut env = SymEnv::new();
+    env.bind_params(m, inputs).ok()?;
+    let mut residual = binding_vector(&env);
+    let pos = residual.iter().position(|&(s, _)| s == b)?;
+    residual.remove(pos);
+    Some(BatchKey { residual })
+}
+
+/// Dims classification relative to the batch symbol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TyClass {
+    /// No batch-tied symbol anywhere: identical across requests at fixed
+    /// residual bindings.
+    Free,
+    /// Exactly the batch symbol, at axis 0 only: stackable by row concat.
+    Lead,
+    /// A batch-tied symbol somewhere else (or derived): never stackable.
+    Tangled,
+}
+
+fn classify_dims(m: &Module, dims: &[Dim], b: SymId, tied: &HashSet<SymId>) -> TyClass {
+    let mut lead = false;
+    for (i, d) in dims.iter().enumerate() {
+        if let Dim::Sym(s) = m.syms.canon_dim(*d) {
+            if tied.contains(&s) {
+                if i == 0 && s == b {
+                    lead = true;
+                } else {
+                    return TyClass::Tangled;
+                }
+            }
+        }
+    }
+    if lead {
+        TyClass::Lead
+    } else {
+        TyClass::Free
+    }
+}
+
+/// Does this shape expression read tensor contents (`Elem`) or
+/// data-dependent extents (`DataDep`)? Either makes batched shape
+/// resolution unsound (the stacked tensor's contents are not any single
+/// request's), so such programs are ineligible.
+fn expr_reads_values(e: &ShapeExpr) -> bool {
+    let mut deps = Vec::new();
+    e.value_deps(&mut deps);
+    !deps.is_empty()
+}
+
+/// Is this expression's value coupled to the leading extent? `InputDim`
+/// of axis 0 reads the (batched) leading extent directly; symbol
+/// references couple through the tied set.
+fn expr_tied(m: &Module, e: &ShapeExpr, tied: &HashSet<SymId>) -> bool {
+    match e {
+        ShapeExpr::InputDim { axis, .. } => *axis == 0,
+        ShapeExpr::Dim(Dim::Sym(s)) => tied.contains(&m.syms.canon(*s)),
+        ShapeExpr::Dim(Dim::Fixed(_)) | ShapeExpr::Const(_) => false,
+        ShapeExpr::Elem { .. } | ShapeExpr::DataDep { .. } => false,
+        ShapeExpr::Add(a, b2)
+        | ShapeExpr::Sub(a, b2)
+        | ShapeExpr::Mul(a, b2)
+        | ShapeExpr::CeilDiv(a, b2)
+        | ShapeExpr::Max(a, b2) => expr_tied(m, a, tied) || expr_tied(m, b2, tied),
+    }
+}
+
+/// Does the op map axis 0 independently, given its operand placement?
+/// `op_tys[i]` is the mode+class of operand `i` as materialized for the
+/// stacked launch. Only called once the output is `Lead` and operands are
+/// individually stackable.
+fn op_maps_rows(
+    m: &Module,
+    op: &Op,
+    operands: &[ValueId],
+    op_tys: &[(BatchMode, TyClass)],
+) -> bool {
+    match op {
+        Op::Un(_) | Op::Bin(_) | Op::Cmp(_) | Op::Select | Op::Convert(_) => true,
+        // Broadcast maps operand axis i to output axis dims[i]: a stacked
+        // operand must keep its rows on axis 0; a shared operand must not
+        // be spread along axis 0 (that would index values by row position,
+        // which differs between the stacked and solo layouts).
+        Op::Broadcast { dims } => match op_tys[0].1 {
+            TyClass::Lead => dims.first() == Some(&0),
+            TyClass::Free => !dims.contains(&0),
+            TyClass::Tangled => false,
+        },
+        Op::Transpose { perm } => perm.first() == Some(&0),
+        // Row-preserving metadata reshape: both sides carry the batch at
+        // axis 0, so per-row element counts match and rows stay intact.
+        Op::Reshape => true,
+        Op::Reduce { axes, .. } => !axes.contains(&0),
+        Op::Concat { axis } => *axis != 0,
+        // Embedding lookup: shared table, stacked indices — each output
+        // row depends on one index row only.
+        Op::Gather { .. } => {
+            op_tys[0].1 == TyClass::Free
+                && op_tys[0].0 == BatchMode::Shared
+                && op_tys[1].1 == TyClass::Lead
+        }
+        // `[rows, k] · [k, n]` with a shared RHS is row-parallel;
+        // `[b, m, k] · [b, k, n]` with both sides stacked along the batch
+        // axis is slice-parallel.
+        Op::Dot => {
+            let lhs_rank = m.instrs[operands[0]].ty.dims.len();
+            match op_tys[1].0 {
+                BatchMode::Shared => lhs_rank == 2 && op_tys[1].1 == TyClass::Free,
+                _ => lhs_rank == 3 && op_tys[1].1 == TyClass::Lead,
+            }
+        }
+        // Slices/pads/dynamic twins/iota/dim reads either address rows by
+        // absolute position or read extents: per-request only.
+        _ => false,
+    }
+}
+
+/// Classify one value-defining step outside fusion groups.
+fn classify_value_step(
+    m: &Module,
+    v: ValueId,
+    modes: &[BatchMode],
+    b: SymId,
+    tied: &HashSet<SymId>,
+) -> BatchMode {
+    let ins = &m.instrs[v];
+    let out = classify_dims(m, &ins.ty.dims, b, tied);
+    let op_tys: Vec<(BatchMode, TyClass)> = ins
+        .operands
+        .iter()
+        .map(|&o| (modes[o], classify_dims(m, &m.instrs[o].ty.dims, b, tied)))
+        .collect();
+    if out == TyClass::Free && op_tys.iter().all(|&(mo, _)| mo == BatchMode::Shared) {
+        return BatchMode::Shared;
+    }
+    // A stacked launch can consume shared (request-independent) values and
+    // anything with the batch cleanly at axis 0 — per-request values with a
+    // Lead type are concatenated on demand.
+    let operands_ok = op_tys.iter().all(|&(mo, tc)| match mo {
+        BatchMode::Shared => tc == TyClass::Free,
+        BatchMode::Stacked | BatchMode::PerRequest => tc == TyClass::Lead,
+    });
+    if out == TyClass::Lead && operands_ok && op_maps_rows(m, &ins.op, &ins.operands, &op_tys) {
+        BatchMode::Stacked
+    } else {
+        BatchMode::PerRequest
+    }
+}
+
+/// Classify a fused-kernel launch: every member must map rows
+/// independently for the group to run stacked.
+fn classify_group(
+    m: &Module,
+    fl: &crate::program::FusedLaunch,
+    modes: &[BatchMode],
+    b: SymId,
+    tied: &HashSet<SymId>,
+) -> BatchMode {
+    let root = classify_dims(m, &m.ty(fl.root).dims, b, tied);
+    let in_tys: Vec<(BatchMode, TyClass)> = fl
+        .inputs
+        .iter()
+        .map(|&v| (modes[v], classify_dims(m, &m.instrs[v].ty.dims, b, tied)))
+        .collect();
+    if root == TyClass::Free && in_tys.iter().all(|&(mo, _)| mo == BatchMode::Shared) {
+        return BatchMode::Shared;
+    }
+    let inputs_ok = in_tys.iter().all(|&(mo, tc)| match mo {
+        BatchMode::Shared => tc == TyClass::Free,
+        BatchMode::Stacked | BatchMode::PerRequest => tc == TyClass::Lead,
+    });
+    if root != TyClass::Lead || !inputs_ok {
+        return BatchMode::PerRequest;
+    }
+    // Interior members: type-driven (classes exist only for externals).
+    for &mv in &fl.group.members {
+        let ins = &m.instrs[mv];
+        let out_c = classify_dims(m, &ins.ty.dims, b, tied);
+        let op_cs: Vec<TyClass> = ins
+            .operands
+            .iter()
+            .map(|&o| classify_dims(m, &m.instrs[o].ty.dims, b, tied))
+            .collect();
+        if out_c == TyClass::Tangled || op_cs.contains(&TyClass::Tangled) {
+            return BatchMode::PerRequest;
+        }
+        if out_c == TyClass::Free {
+            if op_cs.contains(&TyClass::Lead) {
+                // Dropping the batch axis inside the kernel couples rows.
+                return BatchMode::PerRequest;
+            }
+            continue;
+        }
+        let ok = match &ins.op {
+            Op::Un(_) | Op::Bin(_) | Op::Cmp(_) | Op::Select | Op::Convert(_) => true,
+            Op::Broadcast { dims } => match op_cs[0] {
+                TyClass::Lead => dims.first() == Some(&0),
+                TyClass::Free => !dims.contains(&0),
+                TyClass::Tangled => false,
+            },
+            Op::Transpose { perm } => perm.first() == Some(&0),
+            Op::Reduce { axes, .. } => !axes.contains(&0),
+            // Externals (params) appearing as members keep their rows.
+            Op::Param { .. } => true,
+            _ => false,
+        };
+        if !ok {
+            return BatchMode::PerRequest;
+        }
+    }
+    BatchMode::Stacked
+}
+
+/// Statically analyze a program for cross-request batchability. Pure
+/// shape/dataflow reasoning — no inputs involved — so the result is
+/// computed once per program and cached by the executor.
+pub fn analyze(prog: &Program) -> BatchAnalysis {
+    let m = &prog.module;
+
+    // The leading batch symbol: every entry parameter must carry it at
+    // axis 0 (otherwise a parameter would have to be bit-identical across
+    // batch members, which the coordinator cannot know).
+    let b = match m.params.first().and_then(|ty| ty.dims.first()) {
+        Some(&d) => match m.syms.canon_dim(d) {
+            Dim::Sym(s) => s,
+            Dim::Fixed(_) => {
+                return BatchAnalysis::ineligible("first parameter has a static leading dim")
+            }
+        },
+        None => return BatchAnalysis::ineligible("program has no parameters to stack"),
+    };
+    for ty in &m.params {
+        match ty.dims.first().map(|&d| m.syms.canon_dim(d)) {
+            Some(Dim::Sym(s)) if s == b => {}
+            _ => {
+                return BatchAnalysis::ineligible(
+                    "parameters do not share one leading dynamic symbol",
+                )
+            }
+        }
+    }
+    if m.instrs.iter().any(|i| matches!(i.op, Op::Unique)) {
+        return BatchAnalysis::ineligible("data-dependent extents (unique)");
+    }
+
+    // Symbols actually used by instruction types, transitively through
+    // their definitions (only canonical representatives resolve at
+    // runtime). Reject content-dependent shape math outright.
+    let mut used: HashSet<SymId> = HashSet::new();
+    let mut stack: Vec<SymId> = Vec::new();
+    for ins in &m.instrs {
+        for &d in &ins.ty.dims {
+            if let Dim::Sym(s) = m.syms.canon_dim(d) {
+                stack.push(s);
+            }
+        }
+    }
+    while let Some(s) = stack.pop() {
+        if !used.insert(s) {
+            continue;
+        }
+        let mut deps = Vec::new();
+        m.syms.def(s).deps(&mut deps);
+        for d in deps {
+            stack.push(m.syms.canon(d));
+        }
+    }
+    for &s in &used {
+        if expr_reads_values(m.syms.def(s)) {
+            return BatchAnalysis::ineligible("shape math reads tensor contents");
+        }
+    }
+
+    // Symbols whose value is coupled to the leading extent (the batch
+    // symbol itself, anything derived from it, anything reading a
+    // parameter's axis-0 extent).
+    let mut tied: HashSet<SymId> = HashSet::new();
+    tied.insert(b);
+    loop {
+        let mut changed = false;
+        for &s in &used {
+            if !tied.contains(&s) && expr_tied(m, m.syms.def(s), &tied) {
+                tied.insert(s);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    for ty in &m.params {
+        if classify_dims(m, &ty.dims, b, &tied) != TyClass::Lead {
+            return BatchAnalysis::ineligible("parameter entangled beyond its leading dim");
+        }
+    }
+
+    // Dataflow pass over the step sequence.
+    let n = m.instrs.len();
+    let mut value_modes = vec![BatchMode::PerRequest; n];
+    for (id, ins) in m.instrs.iter().enumerate() {
+        match ins.op {
+            Op::Const { .. } => value_modes[id] = BatchMode::Shared,
+            Op::Param { .. } => value_modes[id] = BatchMode::Stacked,
+            _ => {}
+        }
+    }
+    let mut step_modes = Vec::with_capacity(prog.steps.len());
+    let mut stacked_steps = 0usize;
+    for step in &prog.steps {
+        let mode = match step {
+            Step::Dealloc { .. } => BatchMode::Shared,
+            Step::EvalHost { value }
+            | Step::Bitcast { value }
+            | Step::LaunchOp { value }
+            | Step::LibraryCall { value } => {
+                let mo = classify_value_step(m, *value, &value_modes, b, &tied);
+                value_modes[*value] = mo;
+                mo
+            }
+            Step::LaunchFused { idx } => {
+                let fl = &prog.fused[*idx];
+                let mo = classify_group(m, fl, &value_modes, b, &tied);
+                value_modes[fl.root] = mo;
+                mo
+            }
+        };
+        if mode == BatchMode::Stacked
+            && matches!(
+                step,
+                Step::LaunchFused { .. } | Step::LaunchOp { .. } | Step::LibraryCall { .. }
+            )
+        {
+            stacked_steps += 1;
+        }
+        step_modes.push(mode);
+    }
+    if stacked_steps == 0 {
+        return BatchAnalysis::ineligible("no leading-parallel launches to batch");
+    }
+
+    BatchAnalysis {
+        batch_sym: Some(b),
+        reason: None,
+        step_modes,
+        value_modes,
+        stacked_steps,
+    }
+}
+
+/// Per-request results of one batched dispatch.
+pub struct BatchOutput {
+    /// `outputs[i]` holds request `i`'s program outputs, bit-identical to
+    /// what a solo run of that request would produce.
+    pub outputs: Vec<Vec<Tensor>>,
+    /// Aggregate metrics of the whole dispatch (launch counts cover the
+    /// batch once, which is the point).
+    pub metrics: RunMetrics,
+}
+
+/// Materialize the stacked (or shared) form of a value: either already in
+/// the joint store, or assembled by concatenating the per-request parts.
+fn joint_value(
+    joint: &mut [Option<Rc<Tensor>>],
+    per: &[Option<Vec<Rc<Tensor>>>],
+    metrics: &mut RunMetrics,
+    v: ValueId,
+) -> Result<Rc<Tensor>> {
+    if let Some(t) = &joint[v] {
+        return Ok(t.clone());
+    }
+    let parts = per[v]
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("value %{v} has no live batched form"))?;
+    let refs: Vec<&Tensor> = parts.iter().map(|r| r.as_ref()).collect();
+    let t = Tensor::concat0(&refs).with_context(|| format!("stacking value %{v}"))?;
+    metrics.batch_stack_bytes += t.byte_size() as u64;
+    let rc = Rc::new(t);
+    joint[v] = Some(rc.clone());
+    Ok(rc)
+}
+
+/// Materialize request `i`'s view of a value: the per-request slot, the
+/// shared tensor, or a row slice of the stacked form.
+fn per_value(
+    joint: &[Option<Rc<Tensor>>],
+    per: &mut [Option<Vec<Rc<Tensor>>>],
+    analysis: &BatchAnalysis,
+    offsets: &[usize],
+    metrics: &mut RunMetrics,
+    v: ValueId,
+    i: usize,
+) -> Result<Rc<Tensor>> {
+    if let Some(parts) = &per[v] {
+        return Ok(parts[i].clone());
+    }
+    let t = joint[v]
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("value %{v} has no live batched form"))?;
+    if analysis.value_modes[v] == BatchMode::Shared {
+        return Ok(t.clone());
+    }
+    // Slice every member at once (contiguous leading-axis ranges).
+    let k = offsets.len() - 1;
+    let mut parts = Vec::with_capacity(k);
+    for j in 0..k {
+        let rows = offsets[j + 1] - offsets[j];
+        let s = t
+            .slice0(offsets[j], rows)
+            .with_context(|| format!("splitting value %{v} for request {j}"))?;
+        metrics.batch_stack_bytes += s.byte_size() as u64;
+        parts.push(Rc::new(s));
+    }
+    let out = parts[i].clone();
+    per[v] = Some(parts);
+    Ok(out)
+}
+
+impl Executor {
+    /// The (cached) batchability analysis of a program.
+    pub fn batch_analysis(&mut self, prog: &Program) -> Arc<BatchAnalysis> {
+        self.batch_info
+            .entry(prog.id)
+            .or_insert_with(|| Arc::new(analyze(prog)))
+            .clone()
+    }
+
+    /// Execute several requests as one batched dispatch (see the module
+    /// docs). Outputs are bit-identical to solo runs. Falls back to
+    /// sequential solo execution for singletons, ineligible programs, and
+    /// batches whose residual bindings disagree (requests that cannot even
+    /// bind fall back too, so their errors surface through the normal solo
+    /// run path).
+    pub fn run_batch(&mut self, prog: &Program, requests: &[Vec<Tensor>]) -> Result<BatchOutput> {
+        anyhow::ensure!(!requests.is_empty(), "empty batch");
+        let analysis = self.batch_analysis(prog);
+        if requests.len() > 1 && analysis.eligible() {
+            // The stacked walk validates residual-binding agreement from
+            // the member environments it binds anyway (no extra key
+            // derivation on the hot path) and declines mismatched groups.
+            if let Some(out) = self.run_stacked(prog, requests, &analysis)? {
+                return Ok(out);
+            }
+        }
+        let mut outputs = Vec::with_capacity(requests.len());
+        let mut metrics = RunMetrics::default();
+        for r in requests {
+            let ExecOutput { outputs: o, metrics: rm } = self.run(prog, r)?;
+            metrics += &rm;
+            outputs.push(o);
+        }
+        Ok(BatchOutput { outputs, metrics })
+    }
+
+    /// The batched walk proper. `analysis` is known-eligible; returns
+    /// `Ok(None)` when the group cannot stack after all (unbindable member
+    /// inputs, or residual bindings that disagree) — the caller then serves
+    /// the members solo.
+    fn run_stacked(
+        &mut self,
+        prog: &Program,
+        requests: &[Vec<Tensor>],
+        analysis: &BatchAnalysis,
+    ) -> Result<Option<BatchOutput>> {
+        let t_start = Instant::now();
+        let m = &prog.module;
+        let k = requests.len();
+        let b_sym = analysis.batch_sym.expect("caller checked eligibility");
+        let mut metrics = RunMetrics::default();
+        let before = self.stats_snapshot();
+
+        // Per-request environments and leading extents; the residual
+        // bindings (everything except the leading symbol) must agree
+        // across members, because stacked launches share one set of
+        // trailing extent scalars.
+        let mut envs = Vec::with_capacity(k);
+        let mut offsets = Vec::with_capacity(k + 1);
+        let mut residual0: Option<Vec<(SymId, i64)>> = None;
+        offsets.push(0usize);
+        for (i, r) in requests.iter().enumerate() {
+            let mut e = SymEnv::new();
+            if e.bind_params(m, r).is_err() {
+                return Ok(None);
+            }
+            let Some(&ext) = e.resolved().get(&b_sym) else {
+                return Ok(None);
+            };
+            let mut residual = binding_vector(&e);
+            residual.retain(|&(s, _)| s != b_sym);
+            match &residual0 {
+                None => residual0 = Some(residual),
+                Some(first) if first != &residual => return Ok(None),
+                Some(_) => {}
+            }
+            offsets.push(offsets[i] + ext as usize);
+            envs.push(e);
+        }
+
+        // Stack the entry parameters and bind the batched environment.
+        let mut stacked: Vec<Tensor> = Vec::with_capacity(m.params.len());
+        for p in 0..m.params.len() {
+            let parts: Vec<&Tensor> = requests.iter().map(|r| &r[p]).collect();
+            let t = Tensor::concat0(&parts).with_context(|| format!("stacking param {p}"))?;
+            metrics.batch_stack_bytes += t.byte_size() as u64;
+            stacked.push(t);
+        }
+        let mut env_b = SymEnv::new();
+        env_b.bind_params(m, &stacked)?;
+
+        // Value stores: stacked/shared forms plus per-request forms.
+        let n = m.instrs.len();
+        let mut joint: Vec<Option<Rc<Tensor>>> = vec![None; n];
+        let mut per: Vec<Option<Vec<Rc<Tensor>>>> = vec![None; n];
+        let mut stacked_slots: Vec<Option<Tensor>> = stacked.into_iter().map(Some).collect();
+        for (id, ins) in m.instrs.iter().enumerate() {
+            match &ins.op {
+                Op::Param { index } => {
+                    joint[id] = stacked_slots[*index].take().map(Rc::new);
+                }
+                Op::Const { lit, dims } => {
+                    joint[id] = Some(Rc::new(Tensor::from_literal(lit, dims)));
+                }
+                _ => {}
+            }
+        }
+
+        for (si, step) in prog.steps.iter().enumerate() {
+            let mode = analysis.step_modes[si];
+            match step {
+                Step::Dealloc { value } => {
+                    joint[*value] = None;
+                    per[*value] = None;
+                }
+                _ if mode != BatchMode::PerRequest => {
+                    self.stacked_step(
+                        prog,
+                        step,
+                        mode,
+                        &mut env_b,
+                        &mut joint,
+                        &per,
+                        &mut metrics,
+                    )?;
+                }
+                _ => {
+                    self.solo_step(
+                        prog,
+                        step,
+                        &mut envs,
+                        &joint,
+                        &mut per,
+                        offsets.as_slice(),
+                        analysis,
+                        &mut metrics,
+                    )?;
+                }
+            }
+        }
+
+        // Split per-request outputs back out.
+        let mut outputs: Vec<Vec<Tensor>> =
+            (0..k).map(|_| Vec::with_capacity(m.outputs.len())).collect();
+        for &o in &m.outputs {
+            for (i, out) in outputs.iter_mut().enumerate() {
+                let t = per_value(&joint, &mut per, analysis, &offsets, &mut metrics, o, i)
+                    .with_context(|| format!("output %{o} was deallocated"))?;
+                out.push((*t).clone());
+            }
+        }
+
+        self.fold_stats(&mut metrics, &before);
+        metrics.batched_requests += k as u64;
+        metrics.batched_launches += 1;
+        metrics.total_time = t_start.elapsed();
+        Ok(Some(BatchOutput { outputs, metrics }))
+    }
+
+    /// One GEMM library call on already-materialized operands, routing
+    /// constant weights through the persistent device-side cache — the
+    /// shared body of the stacked and per-member batched paths (the
+    /// recorder-integrated interpret tier keeps its own copy, which also
+    /// serves fingerprint-validated parameter weights).
+    fn batched_gemm(
+        &mut self,
+        prog: &Program,
+        value: ValueId,
+        a: &Tensor,
+        bt: &Tensor,
+        metrics: &mut RunMetrics,
+    ) -> Result<Tensor> {
+        let m = &prog.module;
+        let ins = &m.instrs[value];
+        metrics.lib_bytes += (a.byte_size() + bt.byte_size()) as u64;
+        let build0 = self.library.stats.build_time;
+        let exec0 = self.library.stats.exec_time;
+        let key = self.library.key_for(a, bt)?;
+        // Constant weights ride the persistent device-side cache — the
+        // same entries solo runs populate. Parameter weights can be
+        // stacked per batch, so they take the plain host path.
+        let weight = if self.opts.device_resident && self.opts.weight_cache {
+            weight_ref_of(m, ins.operands[1]).filter(|w| !w.validate && bt.dtype == DType::F32)
+        } else {
+            None
+        };
+        let t = if let Some(w) = &weight {
+            let wdev = self.library.weight_device(
+                WeightKey { program: prog.id, value: w.value },
+                bt,
+                &key.rhs_dims(),
+                w.validate,
+            )?;
+            let (dt, actual) = self.library.matmul_device(
+                GemmSrc::Host(a),
+                GemmSrc::Weight { dt: wdev, actual: &bt.dims },
+                key,
+            )?;
+            self.library.readback(&dt, &actual)?
+        } else {
+            self.library.matmul_with_key(a, bt, key)?
+        };
+        metrics.lib_time += self.library.stats.exec_time - exec0;
+        metrics.compile_time += self.library.stats.build_time - build0;
+        metrics.lib_calls += 1;
+        metrics.lib_bytes += t.byte_size() as u64;
+        Ok(t)
+    }
+
+    /// One fused-kernel launch on already-materialized inputs: resolve the
+    /// group's extents through `env`, fetch the bucket-keyed kernel, pad,
+    /// launch, crop — the shared body of the stacked and per-member
+    /// batched paths. Stacked launches are keyed by the *widened* leading
+    /// extent, so a batch rides the same (signature, bucket) family solo
+    /// traffic compiles; `count_padding` additionally accounts pad-lane
+    /// traffic into `batch_padding_bytes` for them.
+    fn batched_fused(
+        &mut self,
+        prog: &Program,
+        idx: usize,
+        env: &mut SymEnv,
+        inputs: &[Rc<Tensor>],
+        count_padding: bool,
+        metrics: &mut RunMetrics,
+    ) -> Result<Tensor> {
+        let m = &prog.module;
+        let fl = &prog.fused[idx];
+        let mut actual: HashMap<SymId, usize> = HashMap::with_capacity(fl.syms.len());
+        for &s in &fl.syms {
+            actual.insert(s, env.resolve_dim(m, Dim::Sym(s), &NoVals)?);
+        }
+        let (kernel, _buckets) = self.cache.get_or_compile(m, &fl.group, &fl.sig, &actual)?;
+        let spec = &kernel.spec;
+        enum Src {
+            In(usize),
+            Owned(usize),
+        }
+        let mut owned: Vec<Tensor> = Vec::new();
+        let mut srcs: Vec<Src> = Vec::with_capacity(inputs.len() + spec.extent_locals.len());
+        for (i, src) in inputs.iter().enumerate() {
+            if src.dims == spec.input_dims[i] {
+                srcs.push(Src::In(i));
+                metrics.mem_bytes += src.byte_size() as u64;
+            } else {
+                metrics.pad_copies += 1;
+                let padded = pad_box(
+                    src,
+                    &spec.input_dims[i],
+                    if self.opts.pooled_buffers { Some(&mut self.pool) } else { None },
+                )?;
+                metrics.mem_bytes += padded.byte_size() as u64;
+                if count_padding {
+                    metrics.batch_padding_bytes += (padded.byte_size() - src.byte_size()) as u64;
+                }
+                srcs.push(Src::Owned(owned.len()));
+                owned.push(padded);
+            }
+        }
+        for &li in &spec.extent_locals {
+            let v = actual[&fl.syms[li]];
+            srcs.push(Src::Owned(owned.len()));
+            owned.push(Tensor::i32(&[], vec![v as i32]));
+        }
+        let args: Vec<&Tensor> = srcs
+            .iter()
+            .map(|s| match s {
+                Src::In(i) => inputs[*i].as_ref(),
+                Src::Owned(i) => &owned[*i],
+            })
+            .collect();
+        for a in &args {
+            metrics.h2d_bytes += a.byte_size() as u64;
+        }
+        let tk = Instant::now();
+        let out = kernel
+            .exe
+            .run(&args, &spec.out_dims, spec.out_dtype)
+            .with_context(|| format!("launching fused kernel {} (batched)", spec.name))?;
+        metrics.kernel_time += tk.elapsed();
+        metrics.mem_kernels += 1;
+        drop(args);
+        if self.opts.pooled_buffers {
+            for a in owned {
+                if let Data::F32(v) = a.data {
+                    if v.capacity() > 0 {
+                        self.pool.free_f32(v);
+                    }
+                }
+            }
+        }
+        metrics.mem_bytes += out.byte_size() as u64;
+        metrics.d2h_bytes += out.byte_size() as u64;
+        let actual_out = env.resolve_dims(m, &m.ty(fl.root).dims, &NoVals)?;
+        if out.dims == actual_out {
+            Ok(out)
+        } else {
+            metrics.pad_copies += 1;
+            if count_padding {
+                metrics.batch_padding_bytes += (out.byte_size()
+                    - actual_out.iter().product::<usize>() * spec.out_dtype.byte_size())
+                    as u64;
+            }
+            crop_box(&out, &actual_out)
+        }
+    }
+
+    /// Execute one Stacked/Shared step over the joint value store.
+    #[allow(clippy::too_many_arguments)]
+    fn stacked_step(
+        &mut self,
+        prog: &Program,
+        step: &Step,
+        mode: BatchMode,
+        env_b: &mut SymEnv,
+        joint: &mut [Option<Rc<Tensor>>],
+        per: &[Option<Vec<Rc<Tensor>>>],
+        metrics: &mut RunMetrics,
+    ) -> Result<()> {
+        let m = &prog.module;
+        match step {
+            Step::EvalHost { value } => {
+                let ins = &m.instrs[*value];
+                let out_dims = env_b.resolve_dims(m, &ins.ty.dims, &NoVals)?;
+                let ops: Vec<Rc<Tensor>> = ins
+                    .operands
+                    .iter()
+                    .map(|&o| joint_value(joint, per, metrics, o))
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&Tensor> = ops.iter().map(|t| t.as_ref()).collect();
+                let t = eval_op(&ins.op, &refs, &out_dims, ins.ty.dtype)
+                    .with_context(|| format!("host op %{value} (batched)"))?;
+                metrics.host_ops += 1;
+                joint[*value] = Some(Rc::new(t));
+            }
+            Step::Bitcast { value } => {
+                let ins = &m.instrs[*value];
+                let out_dims = env_b.resolve_dims(m, &ins.ty.dims, &NoVals)?;
+                let src = joint_value(joint, per, metrics, ins.operands[0])?;
+                metrics.bitcasts += 1;
+                joint[*value] = Some(Rc::new((*src).clone().with_dims(&out_dims)?));
+            }
+            Step::LaunchOp { value } => {
+                let ins = &m.instrs[*value];
+                let out_dims = env_b.resolve_dims(m, &ins.ty.dims, &NoVals)?;
+                let ops: Vec<Rc<Tensor>> = ins
+                    .operands
+                    .iter()
+                    .map(|&o| joint_value(joint, per, metrics, o))
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&Tensor> = ops.iter().map(|t| t.as_ref()).collect();
+                for o in &refs {
+                    metrics.mem_bytes += o.byte_size() as u64;
+                }
+                let tk = Instant::now();
+                let t = eval_op(&ins.op, &refs, &out_dims, ins.ty.dtype)
+                    .with_context(|| format!("singleton kernel %{value} (batched)"))?;
+                metrics.kernel_time += tk.elapsed();
+                metrics.mem_kernels += 1;
+                metrics.mem_bytes += t.byte_size() as u64;
+                joint[*value] = Some(Rc::new(t));
+            }
+            Step::LibraryCall { value } => {
+                let ins = &m.instrs[*value];
+                let a = joint_value(joint, per, metrics, ins.operands[0])?;
+                let bt = joint_value(joint, per, metrics, ins.operands[1])?;
+                let t = self.batched_gemm(prog, *value, &a, &bt, metrics)?;
+                joint[*value] = Some(Rc::new(t));
+            }
+            Step::LaunchFused { idx } => {
+                let fl = &prog.fused[*idx];
+                let ins_rc: Vec<Rc<Tensor>> = fl
+                    .inputs
+                    .iter()
+                    .map(|&v| joint_value(joint, per, metrics, v))
+                    .collect::<Result<_>>()?;
+                let out = self.batched_fused(
+                    prog,
+                    *idx,
+                    env_b,
+                    &ins_rc,
+                    mode == BatchMode::Stacked,
+                    metrics,
+                )?;
+                joint[fl.root] = Some(Rc::new(out));
+            }
+            Step::Dealloc { .. } => unreachable!("handled by the caller"),
+        }
+        Ok(())
+    }
+
+    /// Execute one PerRequest step: once per batch member, with that
+    /// member's own environment — exactly the solo interpret semantics.
+    #[allow(clippy::too_many_arguments)]
+    fn solo_step(
+        &mut self,
+        prog: &Program,
+        step: &Step,
+        envs: &mut [SymEnv],
+        joint: &[Option<Rc<Tensor>>],
+        per: &mut [Option<Vec<Rc<Tensor>>>],
+        offsets: &[usize],
+        analysis: &BatchAnalysis,
+        metrics: &mut RunMetrics,
+    ) -> Result<()> {
+        let m = &prog.module;
+        let k = envs.len();
+        let value = match step {
+            Step::EvalHost { value }
+            | Step::Bitcast { value }
+            | Step::LaunchOp { value }
+            | Step::LibraryCall { value } => *value,
+            Step::LaunchFused { idx } => prog.fused[*idx].root,
+            Step::Dealloc { .. } => unreachable!("handled by the caller"),
+        };
+        let mut results: Vec<Rc<Tensor>> = Vec::with_capacity(k);
+        for i in 0..k {
+            let env = &mut envs[i];
+            let t = match step {
+                Step::EvalHost { value } | Step::LaunchOp { value } => {
+                    let ins = &m.instrs[*value];
+                    let out_dims = env.resolve_dims(m, &ins.ty.dims, &NoVals)?;
+                    let ops: Vec<Rc<Tensor>> = ins
+                        .operands
+                        .iter()
+                        .map(|&o| per_value(joint, per, analysis, offsets, metrics, o, i))
+                        .collect::<Result<_>>()?;
+                    let refs: Vec<&Tensor> = ops.iter().map(|t| t.as_ref()).collect();
+                    if matches!(step, Step::LaunchOp { .. }) {
+                        for o in &refs {
+                            metrics.mem_bytes += o.byte_size() as u64;
+                        }
+                        let tk = Instant::now();
+                        let t = eval_op(&ins.op, &refs, &out_dims, ins.ty.dtype)
+                            .with_context(|| format!("singleton kernel %{value} (member {i})"))?;
+                        metrics.kernel_time += tk.elapsed();
+                        metrics.mem_kernels += 1;
+                        metrics.mem_bytes += t.byte_size() as u64;
+                        t
+                    } else {
+                        metrics.host_ops += 1;
+                        eval_op(&ins.op, &refs, &out_dims, ins.ty.dtype)
+                            .with_context(|| format!("host op %{value} (member {i})"))?
+                    }
+                }
+                Step::Bitcast { value } => {
+                    let ins = &m.instrs[*value];
+                    let out_dims = env.resolve_dims(m, &ins.ty.dims, &NoVals)?;
+                    let src =
+                        per_value(joint, per, analysis, offsets, metrics, ins.operands[0], i)?;
+                    metrics.bitcasts += 1;
+                    (*src).clone().with_dims(&out_dims)?
+                }
+                Step::LibraryCall { value } => {
+                    let ins = &m.instrs[*value];
+                    let a = per_value(joint, per, analysis, offsets, metrics, ins.operands[0], i)?;
+                    let bt = per_value(joint, per, analysis, offsets, metrics, ins.operands[1], i)?;
+                    self.batched_gemm(prog, *value, &a, &bt, metrics)
+                        .with_context(|| format!("library call %{value} (member {i})"))?
+                }
+                Step::LaunchFused { idx } => {
+                    let fl = &prog.fused[*idx];
+                    let ins_rc: Vec<Rc<Tensor>> = fl
+                        .inputs
+                        .iter()
+                        .map(|&v| per_value(joint, per, analysis, offsets, metrics, v, i))
+                        .collect::<Result<_>>()?;
+                    self.batched_fused(prog, *idx, env, &ins_rc, false, metrics)
+                        .with_context(|| format!("fused launch {idx} (member {i})"))?
+                }
+                Step::Dealloc { .. } => unreachable!("handled by the caller"),
+            };
+            results.push(Rc::new(t));
+        }
+        per[value] = Some(results);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhlo::Builder;
+    use crate::fusion::{plan, FusionOptions};
+    use crate::program::generate;
+    use crate::runtime::executor::ExecOptions;
+    use crate::runtime::pjrt::Device;
+    use crate::util::prng::Prng;
+
+    fn executor() -> Executor {
+        Executor::new(Arc::new(Device::cpu().unwrap()), ExecOptions::default())
+    }
+
+    fn program_of(m: Module) -> Program {
+        let p = plan(&m, &FusionOptions::default());
+        generate(m, &p).unwrap()
+    }
+
+    /// `softmax(x)` over a fixed trailing axis: fully row-parallel.
+    fn row_softmax_prog() -> Program {
+        let mut b = Builder::new("rows");
+        let s = b.dyn_dim("rows", 0, 0);
+        let x = b.param(DType::F32, vec![s, Dim::Fixed(8)]);
+        let y = b.softmax_last(x).unwrap();
+        program_of(b.finish(vec![y]))
+    }
+
+    /// `softmax(x)` with rows *and* cols dynamic: the cols binding is the
+    /// residual grouping key.
+    fn two_sym_prog() -> Program {
+        let mut b = Builder::new("rc");
+        let s = b.dyn_dim("rows", 0, 0);
+        let c = b.dyn_dim("cols", 0, 1);
+        let x = b.param(DType::F32, vec![s, c]);
+        let y = b.softmax_last(x).unwrap();
+        program_of(b.finish(vec![y]))
+    }
+
+    fn transformer_prog() -> Program {
+        let w = crate::workloads::transformer::workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let m = crate::passes::optimize(&m).unwrap();
+        program_of(m)
+    }
+
+    #[test]
+    fn analysis_accepts_row_parallel_programs() {
+        let prog = row_softmax_prog();
+        let a = analyze(&prog);
+        assert!(a.eligible(), "row softmax must be batchable: {:?}", a.reason);
+        assert!(a.stacked_steps > 0);
+    }
+
+    #[test]
+    fn analysis_classifies_transformer_attention_per_request() {
+        let prog = transformer_prog();
+        let a = analyze(&prog);
+        assert!(a.eligible(), "transformer must be batchable: {:?}", a.reason);
+        assert!(a.stacked_steps > 0, "projections/FFN/layernorms must stack");
+        // Attention mixes rows across the dynamic axis, so some launches
+        // must stay per-request — if everything stacked, the analysis
+        // would be unsound for `[heads, s, s]` scores.
+        assert!(
+            a.step_modes.iter().any(|&mo| mo == BatchMode::PerRequest),
+            "attention core must run per request"
+        );
+    }
+
+    #[test]
+    fn analysis_rejects_static_leading_params_and_unique() {
+        // TTS carries a `[1, MEL]` parameter: no shared leading symbol.
+        let w = crate::workloads::tts::workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let a = analyze(&program_of(crate::passes::optimize(&m).unwrap()));
+        assert!(!a.eligible());
+        assert!(a.reason.is_some());
+
+        // Unique's data-dependent extent is never batchable.
+        let mut b = Builder::new("sparse");
+        let n = b.dyn_dim("n", 0, 0);
+        let ids = b.param(crate::dhlo::DType::I64, vec![n]);
+        let u = b.unique(ids).unwrap();
+        let a = analyze(&program_of(b.finish(vec![u])));
+        assert_eq!(a.reason, Some("data-dependent extents (unique)"));
+    }
+
+    #[test]
+    fn group_key_strips_the_batch_symbol() {
+        let prog = two_sym_prog();
+        let a = analyze(&prog);
+        assert!(a.eligible(), "{:?}", a.reason);
+        let m = &prog.module;
+        let t = |rows: usize, cols: usize| {
+            vec![Tensor::f32(&[rows, cols], vec![0.1; rows * cols])]
+        };
+        let k25 = group_key(m, &a, &t(2, 5)).unwrap();
+        let k35 = group_key(m, &a, &t(3, 5)).unwrap();
+        let k26 = group_key(m, &a, &t(2, 6)).unwrap();
+        assert_eq!(k25, k35, "leading extent must not split groups");
+        assert_ne!(k25, k26, "residual bindings must split groups");
+        // Unbindable inputs yield no key (the request serves solo).
+        assert!(group_key(m, &a, &[]).is_none());
+    }
+
+    #[test]
+    fn run_batch_bit_matches_solo_on_transformer() {
+        let prog = transformer_prog();
+        let mut batched = executor();
+        let mut solo = executor();
+        let mut rng = Prng::new(5);
+        let requests: Vec<Vec<Tensor>> = [6usize, 9, 12]
+            .iter()
+            .map(|&s| crate::workloads::transformer::gen_inputs(s, &mut rng))
+            .collect();
+
+        let want: Vec<(Vec<Tensor>, u64)> = requests
+            .iter()
+            .map(|r| {
+                let o = solo.run(&prog, r).unwrap();
+                (o.outputs, o.metrics.total_kernels())
+            })
+            .collect();
+        let solo_kernels: u64 = want.iter().map(|(_, k)| k).sum();
+
+        let out = batched.run_batch(&prog, &requests).unwrap();
+        assert_eq!(out.outputs.len(), 3);
+        for (got, (expect, _)) in out.outputs.iter().zip(&want) {
+            assert_eq!(got, expect, "batched outputs diverged from solo runs");
+        }
+        assert_eq!(out.metrics.batched_requests, 3);
+        assert_eq!(out.metrics.batched_launches, 1);
+        assert!(
+            out.metrics.total_kernels() < solo_kernels,
+            "batch must launch fewer kernels ({} vs {} solo)",
+            out.metrics.total_kernels(),
+            solo_kernels
+        );
+    }
+
+    #[test]
+    fn run_batch_falls_back_for_singletons_and_mismatched_bindings() {
+        let prog = two_sym_prog();
+        let mut exec = executor();
+        let mut rng = Prng::new(9);
+        let t = |rows: usize, cols: usize, rng: &mut Prng| {
+            vec![Tensor::f32(&[rows, cols], rng.fill_f32(rows * cols, 1.0))]
+        };
+
+        // Singleton: plain solo run.
+        let one = vec![t(3, 5, &mut rng)];
+        let out = exec.run_batch(&prog, &one).unwrap();
+        assert_eq!(out.metrics.batched_launches, 0);
+        assert_eq!(out.outputs.len(), 1);
+
+        // Residual mismatch (different cols): sequential solo fallback,
+        // still correct per request.
+        let reqs = vec![t(2, 5, &mut rng), t(2, 6, &mut rng)];
+        let out = exec.run_batch(&prog, &reqs).unwrap();
+        assert_eq!(out.metrics.batched_launches, 0, "mismatched bindings must not stack");
+        assert_eq!(out.outputs[0][0].dims, vec![2, 5]);
+        assert_eq!(out.outputs[1][0].dims, vec![2, 6]);
+        let mut solo = executor();
+        for (r, o) in reqs.iter().zip(&out.outputs) {
+            assert_eq!(&solo.run(&prog, r).unwrap().outputs, o);
+        }
+    }
+
+    #[test]
+    fn batch_rides_the_bucket_a_solo_request_compiled() {
+        // NextPow2: a solo request at 5 rows compiles the bucket-8 kernel;
+        // a batch of three requests totalling 5 rows lands in the SAME
+        // bucket — zero new compiles, shared key family (the batch-bucket
+        // key property).
+        let prog = row_softmax_prog();
+        let mut exec = executor();
+        let mut rng = Prng::new(11);
+        let t = |rows: usize, rng: &mut Prng| {
+            vec![Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0))]
+        };
+        exec.run(&prog, &t(5, &mut rng)).unwrap();
+        let misses = exec.cache.stats.misses;
+        assert!(misses > 0);
+
+        let reqs = vec![t(1, &mut rng), t(2, &mut rng), t(2, &mut rng)];
+        let out = exec.run_batch(&prog, &reqs).unwrap();
+        assert_eq!(out.metrics.batched_launches, 1);
+        assert_eq!(out.metrics.compile_events, 0, "batch must reuse the bucket-8 kernel");
+        assert_eq!(exec.cache.stats.misses, misses);
+        // And solo references stay bit-exact.
+        let mut solo = executor();
+        for (r, o) in reqs.iter().zip(&out.outputs) {
+            assert_eq!(&solo.run(&prog, r).unwrap().outputs, o);
+        }
+    }
+
+    #[test]
+    fn batched_outputs_split_at_request_boundaries() {
+        let prog = row_softmax_prog();
+        let mut exec = executor();
+        let mut rng = Prng::new(13);
+        let reqs: Vec<Vec<Tensor>> = [3usize, 1, 4]
+            .iter()
+            .map(|&r| vec![Tensor::f32(&[r, 8], rng.fill_f32(r * 8, 1.0))])
+            .collect();
+        let out = exec.run_batch(&prog, &reqs).unwrap();
+        for (req, outs) in reqs.iter().zip(&out.outputs) {
+            assert_eq!(outs[0].dims, req[0].dims, "per-request extents restored");
+        }
+        assert!(out.metrics.batch_stack_bytes > 0, "stacking traffic is accounted");
+    }
+}

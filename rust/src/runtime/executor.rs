@@ -97,7 +97,7 @@ struct DevSlot {
 /// Is this value a cacheable GEMM weight? Graph constants never change for
 /// a given program; entry parameters can carry new contents at a fixed
 /// shape, so their cache entries are fingerprint-validated per call.
-fn weight_ref_of(m: &Module, value: ValueId) -> Option<PlanWeight> {
+pub(crate) fn weight_ref_of(m: &Module, value: ValueId) -> Option<PlanWeight> {
     match &m.instrs[value].op {
         Op::Const { .. } => Some(PlanWeight { value, validate: false }),
         Op::Param { .. } => Some(PlanWeight { value, validate: true }),
@@ -126,11 +126,22 @@ pub struct Executor {
     /// grow host+device pinning without limit.
     pub max_plans: usize,
     pub plan_stats: PlanStats,
+    /// Cached cross-request batchability analyses, per program id (see
+    /// `runtime::batching`).
+    pub(crate) batch_info: HashMap<u64, Arc<crate::runtime::batching::BatchAnalysis>>,
 }
 
 pub struct ExecOutput {
     pub outputs: Vec<Tensor>,
     pub metrics: RunMetrics,
+}
+
+/// Point-in-time copy of the executor's component stats, taken at run
+/// start and folded into that run's `RunMetrics` deltas by `fold_stats`.
+pub(crate) struct StatSnapshot {
+    pub(crate) lib: crate::library::LibraryStats,
+    pub(crate) cache: crate::codegen::CacheStats,
+    pub(crate) pool: crate::runtime::buffers::PoolStats,
 }
 
 /// Compile-time proof that an executor can be moved into a worker thread
@@ -180,6 +191,7 @@ impl Executor {
             plan_pins: HashMap::new(),
             max_plans: 512,
             plan_stats: PlanStats::default(),
+            batch_info: HashMap::new(),
         }
     }
 
@@ -211,6 +223,44 @@ impl Executor {
         e
     }
 
+    /// Component-stat snapshot taken at the start of a run, so the
+    /// lifetime counters can be folded into per-run `RunMetrics` deltas.
+    pub(crate) fn stats_snapshot(&self) -> StatSnapshot {
+        StatSnapshot {
+            lib: self.library.stats.clone(),
+            cache: self.cache.stats.clone(),
+            pool: self.pool.stats.clone(),
+        }
+    }
+
+    /// Fold component-level stat deltas since `before` into `metrics`
+    /// (shared by `run` and the batched dispatch path).
+    pub(crate) fn fold_stats(&self, metrics: &mut RunMetrics, before: &StatSnapshot) {
+        metrics.flops = self.library.stats.flops - before.lib.flops;
+        metrics.compile_events = self.cache.stats.misses - before.cache.misses;
+        metrics.compile_time += self.cache.stats.compile_time - before.cache.compile_time;
+        // Compile-service interaction: time this run blocked on the
+        // background compiler (fused kernels via the cache handle, GEMM and
+        // prepare builds via the library handle) and in-flight compiles it
+        // joined instead of duplicating (the store's single-flight dedup).
+        metrics.compile_stall += self.cache.stats.stall - before.cache.stall;
+        metrics.compile_stall += self.library.stats.build_stall - before.lib.build_stall;
+        metrics.compile_dedup_hits = (self.cache.stats.dedup_hits - before.cache.dedup_hits)
+            + (self.library.stats.build_dedup_hits - before.lib.build_dedup_hits);
+        metrics.allocs = self.pool.stats.allocs - before.pool.allocs;
+        metrics.pool_hits = self.pool.stats.pool_hits - before.pool.pool_hits;
+        // Library transfer traffic is accounted where it happens
+        // (LibraryStats) and folded in per run, so benches and RunMetrics
+        // agree; the weight cache shows up as hit/miss counts plus the
+        // resident-bytes gauge.
+        metrics.h2d_bytes += self.library.stats.h2d_bytes - before.lib.h2d_bytes;
+        metrics.d2h_bytes += self.library.stats.d2h_bytes - before.lib.d2h_bytes;
+        metrics.weight_cache_hits = self.library.stats.weight_hits - before.lib.weight_hits;
+        metrics.weight_cache_misses =
+            self.library.stats.weight_misses - before.lib.weight_misses;
+        metrics.weight_resident_bytes = self.library.weight_resident_bytes();
+    }
+
     /// Execute a program against concrete inputs.
     pub fn run(&mut self, prog: &Program, inputs: &[Tensor]) -> Result<ExecOutput> {
         let t_start = Instant::now();
@@ -219,9 +269,7 @@ impl Executor {
         let mut env = SymEnv::new();
         env.bind_params(m, inputs)?;
 
-        let lib_before = self.library.stats.clone();
-        let cache_before = self.cache.stats.clone();
-        let pool_before = self.pool.stats.clone();
+        let before = self.stats_snapshot();
 
         let mut outputs: Option<Vec<Tensor>> = None;
         let mut record_key: Option<PlanKey> = None;
@@ -290,29 +338,7 @@ impl Executor {
         };
 
         // Fold in component-level stats for this run.
-        metrics.flops = self.library.stats.flops - lib_before.flops;
-        metrics.compile_events = self.cache.stats.misses - cache_before.misses;
-        metrics.compile_time += self.cache.stats.compile_time - cache_before.compile_time;
-        // Compile-service interaction: time this run blocked on the
-        // background compiler (fused kernels via the cache handle, GEMM and
-        // prepare builds via the library handle) and in-flight compiles it
-        // joined instead of duplicating (the store's single-flight dedup).
-        metrics.compile_stall += self.cache.stats.stall - cache_before.stall;
-        metrics.compile_stall += self.library.stats.build_stall - lib_before.build_stall;
-        metrics.compile_dedup_hits = (self.cache.stats.dedup_hits - cache_before.dedup_hits)
-            + (self.library.stats.build_dedup_hits - lib_before.build_dedup_hits);
-        metrics.allocs = self.pool.stats.allocs - pool_before.allocs;
-        metrics.pool_hits = self.pool.stats.pool_hits - pool_before.pool_hits;
-        // Library transfer traffic is accounted where it happens
-        // (LibraryStats) and folded in per run, so benches and RunMetrics
-        // agree; the weight cache shows up as hit/miss counts plus the
-        // resident-bytes gauge.
-        metrics.h2d_bytes += self.library.stats.h2d_bytes - lib_before.h2d_bytes;
-        metrics.d2h_bytes += self.library.stats.d2h_bytes - lib_before.d2h_bytes;
-        metrics.weight_cache_hits = self.library.stats.weight_hits - lib_before.weight_hits;
-        metrics.weight_cache_misses =
-            self.library.stats.weight_misses - lib_before.weight_misses;
-        metrics.weight_resident_bytes = self.library.weight_resident_bytes();
+        self.fold_stats(&mut metrics, &before);
         metrics.total_time = t_start.elapsed();
         Ok(ExecOutput { outputs, metrics })
     }
@@ -932,8 +958,11 @@ impl Executor {
                         resident += bytes;
                         resident_peak = resident_peak.max(resident);
                         self.pool.device.acquire(bytes);
-                        dev[fl.root] =
-                            Some(DevSlot { dt: out, actual: out_actual.clone(), zero_padded: false });
+                        dev[fl.root] = Some(DevSlot {
+                            dt: out,
+                            actual: out_actual.clone(),
+                            zero_padded: false,
+                        });
                     } else {
                         // Host-path replay: recorded marshalling decisions,
                         // no resolution or cache hashing.
@@ -1052,7 +1081,11 @@ impl Executor {
 
 /// Copy `src` into a fresh tensor of `bucket_dims` (each `>= src.dims[i]`),
 /// filling the tail with zeros. The valid data occupies the prefix box.
-pub fn pad_box(src: &Tensor, bucket_dims: &[usize], pool: Option<&mut BufferPool>) -> Result<Tensor> {
+pub fn pad_box(
+    src: &Tensor,
+    bucket_dims: &[usize],
+    pool: Option<&mut BufferPool>,
+) -> Result<Tensor> {
     anyhow::ensure!(src.rank() == bucket_dims.len(), "pad_box rank mismatch");
     let n: usize = bucket_dims.iter().product();
     match &src.data {

@@ -68,6 +68,18 @@ pub struct RunMetrics {
     /// Bytes of GEMM weights resident on device after the run (a gauge,
     /// not a flow — accumulates as a max).
     pub weight_resident_bytes: u64,
+    /// Cross-request batching: requests served through a batched dispatch
+    /// (each dispatch covers >= 2 of them)…
+    pub batched_requests: u64,
+    /// …and the number of such batched dispatches. Solo runs leave both
+    /// at zero; the coordinator reports total dispatches separately.
+    pub batched_launches: u64,
+    /// Pad-lane bytes moved by *batched* launches (the padding waste the
+    /// batch-assembly policy trades against launch count).
+    pub batch_padding_bytes: u64,
+    /// Bytes memcpy'd assembling stacked inputs and splitting per-request
+    /// views inside batched dispatches (concat + slice traffic).
+    pub batch_stack_bytes: u64,
 }
 
 impl RunMetrics {
@@ -115,6 +127,10 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.weight_cache_hits += o.weight_cache_hits;
         self.weight_cache_misses += o.weight_cache_misses;
         self.weight_resident_bytes = self.weight_resident_bytes.max(o.weight_resident_bytes);
+        self.batched_requests += o.batched_requests;
+        self.batched_launches += o.batched_launches;
+        self.batch_padding_bytes += o.batch_padding_bytes;
+        self.batch_stack_bytes += o.batch_stack_bytes;
     }
 }
 

@@ -3,6 +3,7 @@
 //! PJRT device wrapper, and the compiled-program executor.
 
 pub mod artifacts;
+pub mod batching;
 pub mod buffers;
 pub mod eager;
 pub mod executor;

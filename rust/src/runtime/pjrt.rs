@@ -444,7 +444,10 @@ ENTRY main {
     fn temp_workspace_cleans_up_on_drop() {
         let dir = {
             let dev = Device::cpu().unwrap();
-            let _ = dev.compile_hlo_text_named("probe", "HloModule p, x={}\n\nENTRY main {\n  ROOT c = f32[] constant(1)\n}\n");
+            let _ = dev.compile_hlo_text_named(
+                "probe",
+                "HloModule p, x={}\n\nENTRY main {\n  ROOT c = f32[] constant(1)\n}\n",
+            );
             dev.temp.dir.clone()
         };
         assert!(!dir.exists(), "temp dir should be removed on Drop");

@@ -397,7 +397,12 @@ fn eval_unique(x: &Tensor) -> Result<Tensor> {
 /// Evaluate one non-Param/Const op over concrete operand tensors.
 /// `out_dims` must be the already-resolved concrete output dims and
 /// `out_dtype` the instruction's element type.
-pub fn eval_op(op: &Op, operands: &[&Tensor], out_dims: &[usize], out_dtype: DType) -> Result<Tensor> {
+pub fn eval_op(
+    op: &Op,
+    operands: &[&Tensor],
+    out_dims: &[usize],
+    out_dtype: DType,
+) -> Result<Tensor> {
     match op {
         Op::Param { .. } | Op::Const { .. } => bail!("handled by caller"),
         Op::Un(k) => eval_unary(*k, operands[0]),

@@ -149,6 +149,84 @@ impl Tensor {
         Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
     }
 
+    /// Concatenate tensors along axis 0 (the row-major leading axis, so
+    /// this is a flat buffer concatenation). All parts must agree on dtype
+    /// and trailing dims. Used by cross-request batching to stack member
+    /// inputs.
+    pub fn concat0(parts: &[&Tensor]) -> Result<Tensor> {
+        ensure!(!parts.is_empty(), "concat0 of zero tensors");
+        let first = parts[0];
+        ensure!(first.rank() >= 1, "concat0 needs rank >= 1");
+        let trailing = &first.dims[1..];
+        let mut rows = 0usize;
+        for p in parts {
+            ensure!(p.dtype == first.dtype, "concat0 dtype mismatch");
+            ensure!(
+                p.rank() == first.rank() && &p.dims[1..] == trailing,
+                "concat0 trailing-dim mismatch: {:?} vs {:?}",
+                p.dims,
+                first.dims
+            );
+            rows += p.dims[0];
+        }
+        let mut dims = first.dims.clone();
+        dims[0] = rows;
+        let data = match &first.data {
+            Data::F32(_) => {
+                let mut out = Vec::with_capacity(rows * trailing.iter().product::<usize>());
+                for p in parts {
+                    out.extend_from_slice(p.as_f32()?);
+                }
+                Data::F32(out)
+            }
+            Data::I64(_) => {
+                let mut out = Vec::new();
+                for p in parts {
+                    out.extend_from_slice(p.as_i64()?);
+                }
+                Data::I64(out)
+            }
+            Data::I32(_) => {
+                let mut out = Vec::new();
+                for p in parts {
+                    out.extend_from_slice(p.as_i32()?);
+                }
+                Data::I32(out)
+            }
+            Data::Pred(_) => {
+                let mut out = Vec::new();
+                for p in parts {
+                    out.extend_from_slice(p.as_pred()?);
+                }
+                Data::Pred(out)
+            }
+        };
+        Ok(Tensor { dtype: first.dtype, dims, data })
+    }
+
+    /// Extract `rows` leading-axis rows starting at `start` (a contiguous
+    /// range of the flat buffer). The inverse of [`Tensor::concat0`].
+    pub fn slice0(&self, start: usize, rows: usize) -> Result<Tensor> {
+        ensure!(self.rank() >= 1, "slice0 needs rank >= 1");
+        ensure!(
+            start + rows <= self.dims[0],
+            "slice0 range {start}..{} out of {} rows",
+            start + rows,
+            self.dims[0]
+        );
+        let row: usize = self.dims[1..].iter().product();
+        let (lo, hi) = (start * row, (start + rows) * row);
+        let mut dims = self.dims.clone();
+        dims[0] = rows;
+        let data = match &self.data {
+            Data::F32(v) => Data::F32(v[lo..hi].to_vec()),
+            Data::I64(v) => Data::I64(v[lo..hi].to_vec()),
+            Data::I32(v) => Data::I32(v[lo..hi].to_vec()),
+            Data::Pred(v) => Data::Pred(v[lo..hi].to_vec()),
+        };
+        Ok(Tensor { dtype: self.dtype, dims, data })
+    }
+
     /// Relative-tolerance comparison used across the test suite.
     pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> Result<bool> {
         ensure!(self.dims == other.dims, "shape mismatch {:?} vs {:?}", self.dims, other.dims);
@@ -226,6 +304,23 @@ mod tests {
     fn scalar_access() {
         assert_eq!(Tensor::scalar_i64(7).scalar_i64_value().unwrap(), 7);
         assert!(Tensor::scalar_f32(1.0).scalar_i64_value().is_err());
+    }
+
+    #[test]
+    fn concat0_and_slice0_roundtrip() {
+        let a = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::f32(&[1, 3], vec![7., 8., 9.]);
+        let c = Tensor::concat0(&[&a, &b]).unwrap();
+        assert_eq!(c.dims, vec![3, 3]);
+        assert_eq!(c.as_f32().unwrap()[6..], [7., 8., 9.]);
+        assert_eq!(c.slice0(0, 2).unwrap(), a);
+        assert_eq!(c.slice0(2, 1).unwrap(), b);
+        // dtype and trailing-dim mismatches are rejected.
+        let d = Tensor::i64(&[1], vec![1]);
+        assert!(Tensor::concat0(&[&a, &d]).is_err());
+        let e = Tensor::f32(&[2, 4], vec![0.0; 8]);
+        assert!(Tensor::concat0(&[&a, &e]).is_err());
+        assert!(c.slice0(2, 2).is_err());
     }
 
     #[test]

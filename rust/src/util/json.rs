@@ -76,6 +76,11 @@ impl Value {
         Value::Arr(items.iter().map(|s| Value::Str(s.to_string())).collect())
     }
 
+    /// Build an object from `(key, value)` pairs (report/bench emission).
+    pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+        Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     pub fn from_usizes(items: &[usize]) -> Value {
         Value::Arr(items.iter().map(|&u| Value::Num(u as f64)).collect())
     }

@@ -540,3 +540,142 @@ fn serving_stream_matches_reference_for_every_workload() {
         }
     }
 }
+
+#[test]
+fn batched_serving_bit_matches_unbatched_on_transformer_and_bert() {
+    // The cross-request batching acceptance gate: a bursty stream with
+    // mixed sequence lengths, served by multiple workers with batching
+    // on, must (a) actually coalesce (occupancy > 1, fewer dispatches
+    // than requests) and (b) return outputs bit-identical to an
+    // unbatched single-worker run of the same stream.
+    use disc::coordinator::{serve_open_loop, ServeOptions};
+
+    for name in ["transformer", "bert"] {
+        let w = disc::workloads::by_name(name).unwrap();
+        let stream = w.request_stream(10, 53);
+
+        // Unbatched single-worker reference (direct runs, no coordinator).
+        let compiler = DiscCompiler::new().unwrap();
+        let mut reference = compiler
+            .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Disc))
+            .unwrap();
+        let want: Vec<Vec<Tensor>> =
+            stream.iter().map(|r| reference.run(r).unwrap().outputs).collect();
+
+        // Batched, bursty, multi-worker. A flooding rate keeps the queue
+        // deep while dispatches run; batch formation still depends on
+        // scheduling, so retry a couple of times before declaring the
+        // coalescing claim broken (outputs are checked on every attempt).
+        let mut coalesced = None;
+        for attempt in 0..3 {
+            let compiler = DiscCompiler::new().unwrap();
+            let mut model = compiler
+                .compile(
+                    disc::bridge::lower(&w.graph).unwrap(),
+                    &CompileOptions::mode(Mode::Disc),
+                )
+                .unwrap();
+            let opts = ServeOptions::rate(1_000_000.0)
+                .workers(2)
+                .bursty(stream.len())
+                .batch(4)
+                .batch_window_us(200)
+                .keep_outputs();
+            let report = serve_open_loop(&mut model, stream.clone(), &opts).unwrap();
+            assert_eq!(report.completed, 10, "{name}: lost requests");
+            assert_eq!(report.outputs.len(), 10, "{name}: missing captured outputs");
+            for (id, got) in &report.outputs {
+                assert_eq!(
+                    got, &want[*id as usize],
+                    "{name}: batched request {id} diverged from the unbatched run (attempt {attempt})"
+                );
+            }
+            assert_eq!(
+                report.per_worker.iter().map(|wr| wr.launches).sum::<usize>(),
+                report.batch_launches,
+                "{name}: per-worker launches must sum to the total"
+            );
+            assert_eq!(
+                report.per_worker.iter().map(|wr| wr.completed).sum::<usize>(),
+                10,
+                "{name}: per-worker requests must sum to the stream"
+            );
+            if report.batch_occupancy > 1.0 {
+                coalesced = Some(report);
+                break;
+            }
+        }
+        let report = coalesced
+            .unwrap_or_else(|| panic!("{name}: bursty flood never coalesced in 3 attempts"));
+        assert!(report.batch_launches < 10, "{name}: dispatches must undercut requests");
+        assert!(report.batched_requests >= 2, "{name}: batched dispatches cover >= 2 requests");
+        assert!(
+            report.metrics.batched_launches >= 1,
+            "{name}: executor must record batched dispatches"
+        );
+    }
+}
+
+#[test]
+fn batching_edge_cases_fall_back_to_solo() {
+    use disc::coordinator::{serve_open_loop, ServeOptions};
+
+    // max_batch == 1 is exactly the pre-batching behavior.
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let compiler = DiscCompiler::new().unwrap();
+    let mut model = compiler
+        .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Disc))
+        .unwrap();
+    let stream = w.request_stream(5, 59);
+    let report = serve_open_loop(
+        &mut model,
+        stream.clone(),
+        &ServeOptions::rate(100_000.0).batch(1).keep_outputs(),
+    )
+    .unwrap();
+    assert_eq!(report.completed, 5);
+    assert_eq!(report.batch_launches, 5);
+    assert_eq!(report.batched_requests, 0);
+    assert_eq!(report.batch_occupancy, 1.0);
+
+    // A trickle under a tiny window: every dispatch may end up solo, but
+    // the stream must complete with correct outputs either way.
+    let report2 = serve_open_loop(
+        &mut model,
+        stream.clone(),
+        &ServeOptions::rate(400.0).batch(4).batch_window_us(50).keep_outputs(),
+    )
+    .unwrap();
+    assert_eq!(report2.completed, 5);
+    assert!(report2.batch_launches <= 5);
+    assert!(report2.batch_occupancy >= 1.0);
+    for ((id, got), (_, want)) in report2.outputs.iter().zip(&report.outputs) {
+        assert_eq!(got, want, "request {id} diverged between batching configs");
+    }
+
+    // max_batch larger than the whole stream: bounded by what is queued.
+    let report3 = serve_open_loop(
+        &mut model,
+        stream,
+        &ServeOptions::rate(1_000_000.0).bursty(5).batch(64).keep_outputs(),
+    )
+    .unwrap();
+    assert_eq!(report3.completed, 5);
+    for ((id, got), (_, want)) in report3.outputs.iter().zip(&report.outputs) {
+        assert_eq!(got, want, "request {id} diverged under an oversized max_batch");
+    }
+
+    // Baseline backends never batch but still serve (single worker).
+    let mut eager = compiler
+        .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Eager))
+        .unwrap();
+    let report4 = serve_open_loop(
+        &mut eager,
+        w.request_stream(3, 61),
+        &ServeOptions::rate(50_000.0).batch(4),
+    )
+    .unwrap();
+    assert_eq!(report4.completed, 3);
+    assert_eq!(report4.batch_launches, 3, "eager backend dispatches solo");
+    assert_eq!(report4.batched_requests, 0);
+}

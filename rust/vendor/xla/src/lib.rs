@@ -1219,8 +1219,10 @@ fn eval_reduce(
 fn eval_dot(ins: &Instr, a: &Literal, b: &Literal, out_dims: Vec<usize>) -> Result<Literal> {
     let av = want_f32(a)?;
     let bv = want_f32(b)?;
-    let lc = parse_int_list(ins.attrs.get("lhs_contracting_dims").map(String::as_str).unwrap_or("{}"))?;
-    let rc = parse_int_list(ins.attrs.get("rhs_contracting_dims").map(String::as_str).unwrap_or("{}"))?;
+    let lc =
+        parse_int_list(ins.attrs.get("lhs_contracting_dims").map(String::as_str).unwrap_or("{}"))?;
+    let rc =
+        parse_int_list(ins.attrs.get("rhs_contracting_dims").map(String::as_str).unwrap_or("{}"))?;
     let lb = parse_int_list(ins.attrs.get("lhs_batch_dims").map(String::as_str).unwrap_or("{}"))?;
     let rb = parse_int_list(ins.attrs.get("rhs_batch_dims").map(String::as_str).unwrap_or("{}"))?;
     if lc.len() != 1 || rc.len() != 1 || lb.len() > 1 || rb.len() != lb.len() {
@@ -1297,7 +1299,8 @@ fn eval_pad(
             return err(format!("bad padding group '{group}'"));
         }
         let lo: i64 = parts[0].trim().parse().map_err(|_| Error(format!("bad pad low '{group}'")))?;
-        let hi: i64 = parts[1].trim().parse().map_err(|_| Error(format!("bad pad high '{group}'")))?;
+        let hi: i64 =
+            parts[1].trim().parse().map_err(|_| Error(format!("bad pad high '{group}'")))?;
         if parts.len() == 3 && parts[2].trim() != "0" {
             return err("interior padding unsupported");
         }
