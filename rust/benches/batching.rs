@@ -1,13 +1,18 @@
-//! Cross-request batching: batch on/off × workers over a bursty open-loop
-//! stream (transformer), with the correctness and coalescing gates the CI
-//! smoke run (`DISC_BENCH_SMOKE=1`) enforces:
+//! Cross-request batching: batch on/off × workers × batch-plan-cache
+//! on/off over a bursty open-loop stream (transformer), with the
+//! correctness and coalescing gates the CI smoke run
+//! (`DISC_BENCH_SMOKE=1`) enforces:
 //!
 //! * every served output is **bit-identical** to an unbatched
 //!   single-worker run of the same stream;
 //! * with batching on, a bursty flood coalesces: `batch_occupancy > 1`
 //!   and `batch_launches < requests`;
 //! * batching launches strictly fewer kernels than serving the same
-//!   stream solo.
+//!   stream solo;
+//! * repeat same-shape groups **replay** a recorded batch plan
+//!   (`batch_plan_hits > 0`) and spend less wall time per dispatch than
+//!   the plan-cache-off interpret tier (measured on a deterministic
+//!   repeat-group sweep, not the timing-sensitive open loop).
 //!
 //! Writes `BENCH_batching.json` next to the manifest for the CI bench
 //! artifact (trend tracking across runs).
@@ -17,22 +22,34 @@ use disc::compiler::{CompileOptions, CompiledModel, DiscCompiler, Mode};
 use disc::coordinator::{serve_open_loop, ServeOptions, ServeReport};
 use disc::runtime::tensor::Tensor;
 use disc::util::json::{to_string_pretty, Value};
+use std::time::{Duration, Instant};
 
-fn fresh_model() -> CompiledModel {
+fn fresh_model_opts(plan_cache: bool) -> CompiledModel {
     let w = disc::workloads::transformer::workload();
     let compiler = DiscCompiler::new().expect("pjrt device");
     let module = disc::bridge::lower(&w.graph).expect("lower");
-    compiler.compile(module, &CompileOptions::mode(Mode::Disc)).expect("compile")
+    let mut opts = CompileOptions::mode(Mode::Disc);
+    opts.plan_cache = plan_cache;
+    compiler.compile(module, &opts).expect("compile")
+}
+
+fn fresh_model() -> CompiledModel {
+    fresh_model_opts(true)
 }
 
 fn obj(fields: Vec<(&str, Value)>) -> Value {
     Value::obj(fields)
 }
 
-/// Serve the stream under the given batching/worker config, bursty at a
-/// flooding rate so the queue fills while dispatches run.
-fn serve(stream: &[Vec<Tensor>], max_batch: usize, workers: usize) -> ServeReport {
-    let mut model = fresh_model();
+/// Serve the stream under the given batching/worker/plan-cache config,
+/// bursty at a flooding rate so the queue fills while dispatches run.
+fn serve(
+    stream: &[Vec<Tensor>],
+    max_batch: usize,
+    workers: usize,
+    plan_cache: bool,
+) -> ServeReport {
+    let mut model = fresh_model_opts(plan_cache);
     let opts = ServeOptions::rate(1_000_000.0)
         .workers(workers)
         .bursty(stream.len())
@@ -40,6 +57,36 @@ fn serve(stream: &[Vec<Tensor>], max_batch: usize, workers: usize) -> ServeRepor
         .batch_window_us(if max_batch > 1 { 200 } else { 0 })
         .keep_outputs();
     serve_open_loop(&mut model, stream.to_vec(), &opts).expect("serve")
+}
+
+/// Dispatch the SAME group shape `rounds` times through `run_batch` and
+/// return the median per-dispatch wall time plus the final plan counters
+/// — the deterministic measurement behind the replay gate (open-loop
+/// group formation depends on queue depth; this does not).
+fn repeat_group_sweep(plan_cache: bool, rounds: usize) -> (Duration, u64, u64) {
+    let w = disc::workloads::transformer::workload();
+    let mut model = fresh_model_opts(plan_cache);
+    let mut rng = disc::util::prng::Prng::new(101);
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut times: Vec<Duration> = Vec::with_capacity(rounds);
+    for round in 0..rounds {
+        let group: Vec<Vec<Tensor>> =
+            [6usize, 9, 12].iter().map(|&s| (w.gen)(s, &mut rng)).collect();
+        let t0 = Instant::now();
+        let out = model.run_batch(&group).expect("batched dispatch");
+        let dt = t0.elapsed();
+        assert_eq!(out.metrics.batched_launches, 1, "group must stack");
+        hits += out.metrics.batch_plan_hits;
+        misses += out.metrics.batch_plan_misses;
+        // Skip the cold round: it pays kernel compilation either way (and
+        // plan recording on the cached config).
+        if round > 0 {
+            times.push(dt);
+        }
+    }
+    times.sort_unstable();
+    (times[times.len() / 2], hits, misses)
 }
 
 fn check_outputs(report: &ServeReport, reference: &[Vec<Tensor>], label: &str) {
@@ -68,55 +115,72 @@ fn main() {
 
     println!("=== Cross-request batching: transformer, {requests}-request bursty flood ===\n");
     let mut t = Table::new(&[
-        "batch", "workers", "throughput(r/s)", "dispatches", "occupancy", "kernels",
-        "pad-waste(KiB)", "p99",
+        "batch", "workers", "plans", "throughput(r/s)", "dispatches", "occupancy", "kernels",
+        "plan h/m", "pad-waste(KiB)", "p99",
     ]);
     let mut rows: Vec<Value> = Vec::new();
 
-    let configs: &[(usize, usize)] =
-        if smoke { &[(1, 1), (4, 1), (4, 2)] } else { &[(1, 1), (8, 1), (1, 2), (8, 2)] };
+    // (max_batch, workers, batch-plan cache)
+    let configs: &[(usize, usize, bool)] = if smoke {
+        &[(1, 1, true), (4, 1, false), (4, 1, true), (4, 2, true)]
+    } else {
+        &[(1, 1, true), (8, 1, false), (8, 1, true), (1, 2, true), (8, 2, true)]
+    };
     let mut solo_kernels: Option<u64> = None;
     let mut batched_1w: Option<ServeReport> = None;
-    for &(max_batch, workers) in configs {
+    for &(max_batch, workers, plan_cache) in configs {
         // Batch formation depends on queue depth at dispatch time; a flood
         // makes coalescing overwhelmingly likely, but the gate below
         // retries a couple of times before declaring a regression.
-        let mut report = serve(&stream, max_batch, workers);
+        let mut report = serve(&stream, max_batch, workers, plan_cache);
         if max_batch > 1 {
             for _ in 0..2 {
                 if report.batch_occupancy > 1.0 {
                     break;
                 }
-                report = serve(&stream, max_batch, workers);
+                report = serve(&stream, max_batch, workers, plan_cache);
             }
         }
-        check_outputs(&report, &reference, &format!("batch={max_batch} workers={workers}"));
+        check_outputs(
+            &report,
+            &reference,
+            &format!("batch={max_batch} workers={workers} plans={plan_cache}"),
+        );
         t.row(&[
             max_batch.to_string(),
             workers.to_string(),
+            if plan_cache { "on" } else { "off" }.to_string(),
             format!("{:.0}", report.throughput_rps),
             report.batch_launches.to_string(),
             format!("{:.2}", report.batch_occupancy),
             report.metrics.total_kernels().to_string(),
+            format!("{}/{}", report.metrics.batch_plan_hits, report.metrics.batch_plan_misses),
             format!("{:.1}", report.metrics.batch_padding_bytes as f64 / 1024.0),
             format!("{:.2?}", report.p99),
         ]);
         rows.push(obj(vec![
             ("batch", Value::Num(max_batch as f64)),
             ("workers", Value::Num(workers as f64)),
+            ("plan_cache", Value::Bool(plan_cache)),
             ("requests", Value::Num(report.completed as f64)),
             ("throughput_rps", Value::Num(report.throughput_rps)),
             ("dispatches", Value::Num(report.batch_launches as f64)),
             ("occupancy", Value::Num(report.batch_occupancy)),
             ("batched_requests", Value::Num(report.batched_requests as f64)),
             ("total_kernels", Value::Num(report.metrics.total_kernels() as f64)),
+            ("batch_plan_hits", Value::Num(report.metrics.batch_plan_hits as f64)),
+            ("batch_plan_misses", Value::Num(report.metrics.batch_plan_misses as f64)),
+            (
+                "batch_dev_resident_bytes",
+                Value::Num(report.metrics.batch_dev_resident_bytes as f64),
+            ),
             ("batch_padding_bytes", Value::Num(report.metrics.batch_padding_bytes as f64)),
             ("p99_ms", Value::Num(report.p99.as_secs_f64() * 1e3)),
         ]));
         if max_batch == 1 && workers == 1 {
             solo_kernels = Some(report.metrics.total_kernels());
         }
-        if max_batch > 1 && workers == 1 && batched_1w.is_none() {
+        if max_batch > 1 && workers == 1 && plan_cache && batched_1w.is_none() {
             batched_1w = Some(report);
         }
     }
@@ -150,12 +214,47 @@ fn main() {
         solo_kernels.unwrap()
     );
 
+    // --- batched plan replay: deterministic repeat-group sweep ------------
+    // The same [6, 9, 12] group dispatched `rounds` times, plan cache on
+    // vs off. The cached config must replay (hits = rounds - 1) and beat
+    // the interpret tier's median per-dispatch wall time; wall comparisons
+    // are noisy on shared CI runners, so the gate retries before failing.
+    let rounds = if smoke { 10 } else { 30 };
+    let mut replay_row = None;
+    for attempt in 0..3 {
+        let (t_off, hits_off, _) = repeat_group_sweep(false, rounds);
+        let (t_on, hits_on, misses_on) = repeat_group_sweep(true, rounds);
+        assert_eq!(hits_off, 0, "plan cache off must never replay");
+        assert_eq!(misses_on, 1, "one record on first sight of the group shape");
+        assert_eq!(hits_on as usize, rounds - 1, "every repeat must replay");
+        println!(
+            "\nrepeat-group sweep ({rounds} rounds): interpret {t_off:.2?}/dispatch vs \
+             replay {t_on:.2?}/dispatch (attempt {attempt})"
+        );
+        if t_on < t_off {
+            replay_row = Some((t_off, t_on, hits_on));
+            break;
+        }
+    }
+    let (t_off, t_on, replay_hits) =
+        replay_row.expect("batched replay failed to beat the interpret tier in 3 attempts");
+    assert!(replay_hits > 0, "replay gate requires batch_plan_hits > 0");
+
     let doc = obj(vec![
         ("bench", Value::Str("batching".into())),
         ("workload", Value::Str("transformer".into())),
         ("requests", Value::Num(requests as f64)),
         ("smoke", Value::Bool(smoke)),
         ("rows", Value::Arr(rows)),
+        (
+            "replay",
+            obj(vec![
+                ("rounds", Value::Num(rounds as f64)),
+                ("interpret_ms_per_dispatch", Value::Num(t_off.as_secs_f64() * 1e3)),
+                ("replay_ms_per_dispatch", Value::Num(t_on.as_secs_f64() * 1e3)),
+                ("batch_plan_hits", Value::Num(replay_hits as f64)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_batching.json", to_string_pretty(&doc)).expect("write bench artifact");
     println!("\nwrote BENCH_batching.json");

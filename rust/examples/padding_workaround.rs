@@ -28,8 +28,9 @@ fn main() -> Result<()> {
     // Request lengths: mostly short, occasionally near max — the regime
     // where the padding workaround wastes the most compute.
     let mut rng = Prng::new(21);
-    let lengths: Vec<usize> =
-        (0..REQUESTS).map(|_| if rng.chance(0.2) { rng.range(120, MAX_SEQ) } else { rng.range(32, 64) }).collect();
+    let lengths: Vec<usize> = (0..REQUESTS)
+        .map(|_| if rng.chance(0.2) { rng.range(120, MAX_SEQ) } else { rng.range(32, 64) })
+        .collect();
 
     // --- A: pad-to-max + static compile --------------------------------
     let frozen = disc::workloads::make_static(&w.graph, MAX_SEQ);

@@ -1,0 +1,46 @@
+//! Microbench: PJRT launch and GEMM library cost decomposition.
+//!
+//! Run with: `cargo run --release --example perf_micro`
+
+use disc::dhlo::{DType, Op};
+use disc::library::GemmLibrary;
+use disc::runtime::pjrt::Device;
+use disc::runtime::reference::eval_op;
+use disc::runtime::tensor::Tensor;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dev = std::sync::Arc::new(Device::cpu()?);
+    let mut lib = GemmLibrary::new(dev);
+    let a = Tensor::f32(&[176, 128], vec![0.5; 176 * 128]);
+    let b = Tensor::f32(&[128, 128], vec![0.5; 128 * 128]);
+    for _ in 0..5 {
+        lib.matmul(&a, &b)?;
+    }
+    let t = Instant::now();
+    let n = 100;
+    for _ in 0..n {
+        lib.matmul(&a, &b)?;
+    }
+    println!("lib 176x128x128 gemm: {:?}/call", t.elapsed() / n);
+
+    // Batched GEMM through the same library.
+    let a3 = Tensor::f32(&[4, 176, 44], vec![0.5; 4 * 176 * 44]);
+    let b3 = Tensor::f32(&[4, 44, 176], vec![0.5; 4 * 44 * 176]);
+    for _ in 0..5 {
+        lib.matmul(&a3, &b3)?;
+    }
+    let t = Instant::now();
+    for _ in 0..n {
+        lib.matmul(&a3, &b3)?;
+    }
+    println!("lib 4x176x44x176 bgemm: {:?}/call", t.elapsed() / n);
+
+    // Reference naive dot for comparison.
+    let t = Instant::now();
+    for _ in 0..20 {
+        eval_op(&Op::Dot, &[&a, &b], &[176, 128], DType::F32)?;
+    }
+    println!("naive rust dot: {:?}/call", t.elapsed() / 20);
+    Ok(())
+}

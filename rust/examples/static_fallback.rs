@@ -35,8 +35,7 @@ fn main() -> Result<()> {
 
     // Auto mode on a static graph → static pipeline.
     let static_module = disc::bridge::lower(&build(Some(ROWS)))?;
-    let mut static_model =
-        compiler.compile(static_module, &CompileOptions::mode(Mode::Auto))?;
+    let mut static_model = compiler.compile(static_module, &CompileOptions::mode(Mode::Auto))?;
     println!("static graph  → pipeline = {}", static_model.report.pipeline);
 
     // Auto mode on a dynamic graph → dynamic pipeline.

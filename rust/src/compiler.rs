@@ -169,6 +169,15 @@ impl CompiledModel {
         }
     }
 
+    /// Batch plan-cache stats (program backends only): the record/replay
+    /// behavior of whole batch groups (see `runtime::batching`).
+    pub fn batch_plan_stats(&self) -> Option<crate::runtime::plan::PlanStats> {
+        match &self.backend {
+            Backend::Program { exec, .. } => Some(exec.batch_plan_stats.clone()),
+            _ => None,
+        }
+    }
+
     /// Fork `n` sibling executor workers for multi-worker serving: each
     /// shares the process-wide kernel store, weight store, and device with
     /// this model (compile-once / upload-once across all of them) while
@@ -281,8 +290,8 @@ impl DiscCompiler {
                 Backend::Vm { vm: Vm::new(self.device.clone(), policy), module, plan }
             }
             _ => {
-                let prog = generate(module, &plan)?;
-                let exec = Executor::with_shared(
+                let prog = Arc::new(generate(module, &plan)?);
+                let mut exec = Executor::with_shared(
                     self.device.clone(),
                     ExecOptions {
                         policy,
@@ -295,7 +304,15 @@ impl DiscCompiler {
                     self.store.clone(),
                     self.weights.clone(),
                 );
-                Backend::Program { exec, prog: Arc::new(prog) }
+                // The batchability analysis is pure compile-time shape
+                // reasoning: compute it once here and store it with the
+                // model, so serving (this executor and every forked
+                // worker) never re-derives the classification.
+                exec.seed_batch_analysis(
+                    prog.id,
+                    Arc::new(crate::runtime::batching::analyze(&prog)),
+                );
+                Backend::Program { exec, prog }
             }
         };
 

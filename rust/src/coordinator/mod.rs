@@ -21,9 +21,15 @@
 //! Assembly is bounded by `max_batch` and by `batch_window` (how long a
 //! worker may wait for stragglers once the queue runs dry); singletons,
 //! ineligible programs, and binding mismatches fall back to solo
-//! execution. Reports carry `batch_launches` (total dispatches),
-//! `batch_occupancy` (requests per dispatch), and the batching counters
-//! inside `RunMetrics`.
+//! execution. Assembly is also **group-key-aware**: each worker
+//! remembers the extent multiset of every group it dispatched batched —
+//! exactly the shapes the executor recorded batch plans for — and steers
+//! later assemblies back to those shapes, so bursty repeat traffic
+//! replays recorded batch plans instead of accreting never-seen group
+//! shapes (see `runtime::batching` for the batch plan tiers). Reports
+//! carry `batch_launches` (total dispatches), `batch_occupancy`
+//! (requests per dispatch), and the batching counters inside
+//! `RunMetrics`.
 //!
 //! Drive modes:
 //!
@@ -45,11 +51,11 @@
 
 use crate::compiler::CompiledModel;
 use crate::program::Program;
-use crate::runtime::batching::{group_key, BatchAnalysis, BatchKey};
+use crate::runtime::batching::{group_key_extent, BatchAnalysis, BatchKey};
 use crate::runtime::metrics::RunMetrics;
 use crate::runtime::tensor::Tensor;
 use anyhow::{Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -342,12 +348,41 @@ fn spawn_producer(
     })
 }
 
-/// A request stashed during batch assembly, with its grouping key computed
-/// exactly once (keying binds a full symbol environment, so recomputing it
-/// per assembly pass would put redundant shape work on the hot path).
+/// A request stashed during batch assembly, with its grouping key and
+/// leading extent computed exactly once (keying binds a full symbol
+/// environment, so recomputing it per assembly pass would put redundant
+/// shape work on the hot path).
 struct Stashed {
     req: Request,
-    key: Option<BatchKey>,
+    tag: Option<(BatchKey, i64)>,
+}
+
+/// Would adding a member of extent `ext` keep the collected extents a
+/// sub-multiset of the target group shape? (`None` target: always.)
+fn fits_target(have: &[i64], ext: i64, target: Option<&[i64]>) -> bool {
+    match target {
+        None => true,
+        Some(t) => {
+            let need = t.iter().filter(|&&x| x == ext).count();
+            let got = have.iter().filter(|&&x| x == ext).count();
+            got < need
+        }
+    }
+}
+
+/// Do the collected extents reproduce the target group shape exactly?
+fn matches_target(have: &[i64], target: Option<&[i64]>) -> bool {
+    match target {
+        None => false,
+        Some(t) => {
+            if have.len() != t.len() {
+                return false;
+            }
+            let mut h = have.to_vec();
+            h.sort_unstable();
+            h == t
+        }
+    }
 }
 
 /// Assemble one dispatch group around `head`: matching requests stashed in
@@ -356,29 +391,49 @@ struct Stashed {
 /// in `pending` for a later dispatch; the caller serves `pending` in FIFO
 /// order before blocking on the queue again, so nothing starves.
 ///
+/// `target`, when set, is the **sorted extent multiset of a group shape
+/// this worker already dispatched** (and therefore recorded a batch plan
+/// for): assembly then prefers members that reproduce that shape and
+/// stops the moment it does — a replayable group beats a larger
+/// never-seen one — while members that would overflow the shape are
+/// stashed to head their own group later. Returns the batch plus the
+/// sorted extents it collected (empty for solo dispatches).
+///
 /// `next` must poll the queue WITHOUT blocking — the straggler window is
 /// waited out here with short sleeps between polls, so a worker never
 /// holds a shared receiver lock across the window (that would stall every
 /// sibling worker's dequeue for the whole wait). Requests without a key
 /// (batching off for them, or unbindable inputs) always dispatch solo.
+#[allow(clippy::too_many_arguments)]
 fn assemble_batch(
     head: Request,
-    head_key: Option<BatchKey>,
+    head_tag: Option<(BatchKey, i64)>,
     pending: &mut VecDeque<Stashed>,
     max_batch: usize,
     window: Duration,
-    key_of: &mut dyn FnMut(&Request) -> Option<BatchKey>,
+    target: Option<&[i64]>,
+    key_of: &mut dyn FnMut(&Request) -> Option<(BatchKey, i64)>,
     next: &mut dyn FnMut() -> Option<Request>,
-) -> Vec<Request> {
-    let key = match head_key {
-        Some(k) if max_batch > 1 => k,
-        _ => return vec![head],
+) -> (Vec<Request>, Vec<i64>) {
+    let (key, head_ext) = match head_tag {
+        Some(t) if max_batch > 1 => t,
+        _ => return (vec![head], Vec::new()),
     };
+    // A remembered shape the head itself cannot belong to is stale for
+    // this assembly (traffic moved on): ignore it rather than let it
+    // block every candidate from joining.
+    let target = target.filter(|t| t.iter().any(|&x| x == head_ext));
     let mut batch = vec![head];
+    let mut have = vec![head_ext];
     let mut i = 0;
-    while batch.len() < max_batch && i < pending.len() {
-        if pending[i].key.as_ref() == Some(&key) {
+    while batch.len() < max_batch && !matches_target(&have, target) && i < pending.len() {
+        let joins = match &pending[i].tag {
+            Some((k, e)) => *k == key && fits_target(&have, *e, target),
+            None => false,
+        };
+        if joins {
             if let Some(s) = pending.remove(i) {
+                have.push(s.tag.expect("matched on tag").1);
                 batch.push(s.req);
             }
         } else {
@@ -389,14 +444,16 @@ fn assemble_batch(
     // documented semantics) — greedy draining of an already-deep queue
     // must not eat into it.
     let mut deadline: Option<Instant> = None;
-    while batch.len() < max_batch {
+    while batch.len() < max_batch && !matches_target(&have, target) {
         match next() {
             Some(r) => {
-                let rk = key_of(&r);
-                if rk.as_ref() == Some(&key) {
-                    batch.push(r);
-                } else {
-                    pending.push_back(Stashed { req: r, key: rk });
+                let tag = key_of(&r);
+                match &tag {
+                    Some((k, e)) if *k == key && fits_target(&have, *e, target) => {
+                        have.push(*e);
+                        batch.push(r);
+                    }
+                    _ => pending.push_back(Stashed { req: r, tag }),
                 }
             }
             None => {
@@ -411,26 +468,52 @@ fn assemble_batch(
             }
         }
     }
-    batch
+    // The planned shape did not re-form (traffic shifted): fall back to a
+    // plain greedy fill from the same-key stash so the target can never
+    // pin this key to solo dispatches — the dispatched shape then
+    // OVERWRITES the remembered one, adapting the target to the traffic.
+    if target.is_some() && batch.len() < max_batch && !matches_target(&have, target) {
+        let mut i = 0;
+        while batch.len() < max_batch && i < pending.len() {
+            let joins = matches!(&pending[i].tag, Some((k, _)) if *k == key);
+            if joins {
+                if let Some(s) = pending.remove(i) {
+                    have.push(s.tag.expect("matched on tag").1);
+                    batch.push(s.req);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+    have.sort_unstable();
+    (batch, have)
 }
 
 /// The shared drain-assemble-dispatch loop body: serve every request the
 /// queue delivers (plus locally stashed ones), batching where `key_of`
 /// allows, until the queue disconnects and the stash is empty.
+///
+/// The loop remembers the extent multiset of every group it successfully
+/// dispatched batched (per grouping key — exactly the shapes the executor
+/// recorded batch plans for) and feeds it to `assemble_batch` as the
+/// target, so bursty repeat traffic re-forms replayable group shapes
+/// instead of accreting never-seen ones.
 fn drain_queue(
     opts: &ServeOptions,
     completions: &mut Vec<Completion>,
     metrics: &mut RunMetrics,
     launches: &mut usize,
-    key_of: &mut dyn FnMut(&Request) -> Option<BatchKey>,
+    key_of: &mut dyn FnMut(&Request) -> Option<(BatchKey, i64)>,
     next: &mut dyn FnMut() -> Option<Request>,
     recv_blocking: &mut dyn FnMut() -> Option<Request>,
     run: &mut dyn FnMut(&[Vec<Tensor>]) -> Result<crate::runtime::batching::BatchOutput>,
 ) -> Result<()> {
     let mut pending: VecDeque<Stashed> = VecDeque::new();
+    let mut planned_shapes: HashMap<BatchKey, Vec<i64>> = HashMap::new();
     loop {
-        let (head, head_key) = match pending.pop_front() {
-            Some(s) => (s.req, s.key),
+        let (head, head_tag) = match pending.pop_front() {
+            Some(s) => (s.req, s.tag),
             None => match recv_blocking() {
                 Some(r) => {
                     let k = key_of(&r);
@@ -439,12 +522,15 @@ fn drain_queue(
                 None => break,
             },
         };
-        let batch = assemble_batch(
+        let group = head_tag.as_ref().map(|(k, _)| k.clone());
+        let target = group.as_ref().and_then(|k| planned_shapes.get(k)).cloned();
+        let (batch, shape) = assemble_batch(
             head,
-            head_key,
+            head_tag,
             &mut pending,
             opts.max_batch,
             opts.batch_window,
+            target.as_deref(),
             key_of,
             next,
         );
@@ -456,6 +542,13 @@ fn drain_queue(
         let dt = t0.elapsed();
         *launches += 1;
         *metrics += &out.metrics;
+        if shape.len() > 1 && out.metrics.batched_launches > 0 {
+            if let Some(k) = group {
+                // The executor stacked (and on first sight planned) this
+                // group shape: steer later assemblies back to it.
+                planned_shapes.insert(k, shape);
+            }
+        }
         let mut outs = out.outputs.into_iter();
         for (j, id) in ids.into_iter().enumerate() {
             let produced = outs.next();
@@ -496,7 +589,7 @@ pub fn serve_open_loop(
         let ctx: Option<(Arc<Program>, Arc<BatchAnalysis>)> =
             if opts.max_batch > 1 { model.batch_context() } else { None };
         let mut key_of = |req: &Request| {
-            ctx.as_ref().and_then(|(p, a)| group_key(&p.module, a, &req.inputs))
+            ctx.as_ref().and_then(|(p, a)| group_key_extent(&p.module, a, &req.inputs))
         };
         let mut next = || rx.try_recv().ok();
         let mut recv_blocking = || rx.recv().ok();
@@ -552,7 +645,7 @@ pub fn serve_open_loop(
                     let mut key_of = |req: &Request| {
                         analysis
                             .as_ref()
-                            .and_then(|a| group_key(&prog.module, a, &req.inputs))
+                            .and_then(|a| group_key_extent(&prog.module, a, &req.inputs))
                     };
                     // Hold the receiver lock only for a non-blocking poll
                     // or a dequeue; the (long) dispatch — and the batch
@@ -815,35 +908,43 @@ mod tests {
             inputs: (0..n_inputs).map(|_| Tensor::scalar_f32(0.0)).collect(),
             arrived: Instant::now(),
         };
-        let key_for = |r: &Request| Some(BatchKey {
-            residual: vec![(crate::shape::SymId(0), r.inputs.len() as i64)],
-        });
+        let key_for = |r: &Request| {
+            Some((
+                BatchKey { residual: vec![(crate::shape::SymId(0), r.inputs.len() as i64)] },
+                1i64,
+            ))
+        };
         let stash = |r: Request| {
-            let key = key_for(&r);
-            Stashed { req: r, key }
+            let tag = key_for(&r);
+            Stashed { req: r, tag }
         };
         let mut pending: VecDeque<Stashed> = VecDeque::new();
         pending.push_back(stash(mk(1, 1))); // other group: stays pending
         pending.push_back(stash(mk(2, 0))); // same group: joins
         let mut queued = VecDeque::from([mk(3, 0), mk(4, 1), mk(5, 0), mk(6, 0)]);
-        let mut key_of = |r: &Request| Some(BatchKey {
-            residual: vec![(crate::shape::SymId(0), r.inputs.len() as i64)],
-        });
+        let mut key_of = |r: &Request| {
+            Some((
+                BatchKey { residual: vec![(crate::shape::SymId(0), r.inputs.len() as i64)] },
+                1i64,
+            ))
+        };
         let mut next = || queued.pop_front();
         let head = mk(0, 0);
-        let head_key = key_for(&head);
-        let batch = assemble_batch(
+        let head_tag = key_for(&head);
+        let (batch, shape) = assemble_batch(
             head,
-            head_key,
+            head_tag,
             &mut pending,
             4,
             Duration::ZERO,
+            None,
             &mut key_of,
             &mut next,
         );
         // Head 0 + pending 2 + queued 3, 5 — capped at 4, id 4 stashed.
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 2, 3, 5]);
+        assert_eq!(shape, vec![1, 1, 1, 1], "collected extents reported");
         let stashed: Vec<u64> = pending.iter().map(|s| s.req.id).collect();
         assert_eq!(stashed, vec![1, 4]);
         assert_eq!(queued.len(), 1, "assembly stopped at the cap");
@@ -857,16 +958,110 @@ mod tests {
         let mut next = || -> Option<Request> {
             panic!("solo dispatch must not poll the queue")
         };
-        let batch = assemble_batch(
+        let (batch, shape) = assemble_batch(
             mk(7),
             None,
             &mut pending,
             8,
             Duration::from_millis(50),
+            None,
             &mut key_of,
             &mut next,
         );
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id, 7);
+        assert!(shape.is_empty());
+    }
+
+    #[test]
+    fn assemble_batch_steers_toward_planned_group_shapes() {
+        // Same grouping key throughout; extents vary. A previously planned
+        // shape [2, 3] must be reproduced exactly: the oversized extent-5
+        // straggler is left pending, and assembly stops the moment the
+        // multiset matches instead of greedily draining the queue.
+        let key = BatchKey { residual: vec![(crate::shape::SymId(0), 64)] };
+        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now() };
+        let exts: HashMap<u64, i64> =
+            [(0u64, 2i64), (1, 5), (2, 3), (3, 3), (4, 2)].into_iter().collect();
+        let tag_of = |id: u64, exts: &HashMap<u64, i64>, key: &BatchKey| {
+            Some((key.clone(), exts[&id]))
+        };
+        let mut pending: VecDeque<Stashed> = VecDeque::new();
+        pending.push_back(Stashed { req: mk(1), tag: tag_of(1, &exts, &key) }); // ext 5
+        pending.push_back(Stashed { req: mk(2), tag: tag_of(2, &exts, &key) }); // ext 3
+        let mut queued = VecDeque::from([mk(3), mk(4)]);
+        let exts2 = exts.clone();
+        let key2 = key.clone();
+        let mut key_of = move |r: &Request| tag_of(r.id, &exts2, &key2);
+        let mut next = || queued.pop_front();
+        let target = vec![2i64, 3];
+        let (batch, shape) = assemble_batch(
+            mk(0),
+            tag_of(0, &exts, &key),
+            &mut pending,
+            8,
+            Duration::ZERO,
+            Some(&target),
+            &mut key_of,
+            &mut next,
+        );
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2], "head (ext 2) + pending ext 3 reproduce the plan shape");
+        assert_eq!(shape, target, "assembly stopped exactly at the planned shape");
+        assert_eq!(pending.len(), 1, "the oversized straggler stays stashed");
+        assert_eq!(pending[0].req.id, 1);
+        assert_eq!(queued.len(), 2, "no queue drain past a matched shape");
+    }
+
+    #[test]
+    fn stale_target_shapes_never_pin_a_key_to_solo_dispatches() {
+        // Traffic moved on from the remembered shape: batching must still
+        // coalesce (and the dispatched shape then overwrites the target).
+        let key = BatchKey { residual: vec![(crate::shape::SymId(0), 64)] };
+        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now() };
+
+        // Head extent absent from the target: the target is ignored and
+        // assembly is plain greedy.
+        let mut pending: VecDeque<Stashed> = VecDeque::new();
+        let k2 = key.clone();
+        let mut key_of = move |_: &Request| Some((k2.clone(), 5i64));
+        let mut queued = VecDeque::from([mk(1), mk(2)]);
+        let mut next = || queued.pop_front();
+        let target = vec![2i64, 3];
+        let (batch, shape) = assemble_batch(
+            mk(0),
+            Some((key.clone(), 5)),
+            &mut pending,
+            4,
+            Duration::ZERO,
+            Some(&target),
+            &mut key_of,
+            &mut next,
+        );
+        assert_eq!(batch.len(), 3, "uniform ext-5 traffic must still batch");
+        assert_eq!(shape, vec![5, 5, 5]);
+
+        // Head fits but the rest of the shape never arrives: the window
+        // expires and the same-key stash back-fills greedily.
+        let mut pending: VecDeque<Stashed> = VecDeque::new();
+        pending.push_back(Stashed { req: mk(11), tag: Some((key.clone(), 2)) });
+        pending.push_back(Stashed { req: mk(12), tag: Some((key.clone(), 2)) });
+        let k3 = key.clone();
+        let mut key_of = move |_: &Request| Some((k3.clone(), 2i64));
+        let mut next = || -> Option<Request> { None };
+        let (batch, shape) = assemble_batch(
+            mk(10),
+            Some((key.clone(), 2)),
+            &mut pending,
+            4,
+            Duration::ZERO,
+            Some(&target),
+            &mut key_of,
+            &mut next,
+        );
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10, 11, 12], "stash back-fills when the shape cannot re-form");
+        assert_eq!(shape, vec![2, 2, 2]);
+        assert!(pending.is_empty());
     }
 }

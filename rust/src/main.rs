@@ -144,6 +144,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         disc::util::fmt_bytes(m.batch_padding_bytes as usize),
         disc::util::fmt_bytes(m.batch_stack_bytes as usize)
     );
+    println!(
+        "batch plans: hits={} misses={} guard_misses={}  dev-resident-peak={}",
+        m.batch_plan_hits,
+        m.batch_plan_misses,
+        m.batch_plan_guard_misses,
+        disc::util::fmt_bytes(m.batch_dev_resident_bytes as usize)
+    );
     if report.per_worker.len() > 1 {
         println!(
             "queue delay: p50={:.2?} p99={:.2?}  ({} workers)",
@@ -185,6 +192,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "plan cache: entries={} hits={} misses={} guard_misses={}",
             ps.entries, ps.hits, ps.misses, ps.guard_misses
+        );
+    }
+    if let Some(bs) = model.batch_plan_stats() {
+        println!(
+            "batch plan cache: entries={} hits={} misses={} guard_misses={}",
+            bs.entries, bs.hits, bs.misses, bs.guard_misses
         );
     }
     Ok(())

@@ -42,13 +42,31 @@
 //! reads tensor contents (`ShapeExpr::Elem`) are ineligible and fall back
 //! to solo execution, as does any batch whose residual bindings disagree.
 //! See docs/runtime.md §Cross-request batching.
+//!
+//! Batched dispatches run the same **three tiers** as solo requests:
+//! *interpret* (first sight of a group shape: per-step symbol resolution
+//! and cache hashing over the stacked walk), *record* (interpret plus a
+//! [`BatchPlanRecorder`] capturing the walk as a
+//! [`BatchPlan`](crate::runtime::plan::BatchPlan), keyed by residual
+//! bindings + sorted member extents), and *replay* (repeat same-shape
+//! groups skip resolution, hashing, and the per-step mode branching, and
+//! chain Stacked/Shared fused-kernel/GEMM results dev→dev through
+//! persistent device buffers — only member crossings, host ops, and
+//! program outputs read back). The per-program analysis itself is computed
+//! once at compile time and threaded through `Executor::batch_info`, so no
+//! dispatch ever re-derives the classification.
 
+use crate::codegen::cache::CompiledKernel;
 use crate::dhlo::{DType, Module, Op, ValueId};
-use crate::library::{GemmSrc, WeightKey};
+use crate::library::{GemmKey, GemmSrc, WeightKey};
 use crate::program::{Program, Step};
-use crate::runtime::executor::{crop_box, pad_box, weight_ref_of, ExecOutput, Executor};
+use crate::runtime::executor::{crop_box, pad_box, weight_ref_of, DevSlot, ExecOutput, Executor};
 use crate::runtime::metrics::RunMetrics;
-use crate::runtime::plan::binding_vector;
+use crate::runtime::pjrt::{Device, DeviceTensor};
+use crate::runtime::plan::{
+    binding_vector, host_guards_hold, BatchPlan, BatchPlanKey, BatchPlanRecorder,
+    BatchPlannedStep, PlanWeight, PlannedStep,
+};
 use crate::runtime::reference::eval_op;
 use crate::runtime::shape_env::{NoVals, SymEnv};
 use crate::runtime::tensor::{Data, Tensor};
@@ -106,22 +124,93 @@ impl BatchAnalysis {
 /// batch symbol. Requests may differ in their leading extent (that is the
 /// axis batches stack along) but must agree on every other dynamic dim,
 /// because stacked launches share one set of trailing extent scalars.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub residual: Vec<(SymId, i64)>,
 }
 
-/// Compute the grouping key of a request, or `None` when the program is
-/// ineligible or the inputs do not bind (such requests serve solo and
-/// surface their errors through the normal run path).
-pub fn group_key(m: &Module, analysis: &BatchAnalysis, inputs: &[Tensor]) -> Option<BatchKey> {
+/// Compute the grouping key AND leading extent of a request, or `None`
+/// when the program is ineligible or the inputs do not bind (such requests
+/// serve solo and surface their errors through the normal run path). The
+/// extent lets the coordinator steer assembly toward group shapes that
+/// already have a recorded batch plan.
+pub fn group_key_extent(
+    m: &Module,
+    analysis: &BatchAnalysis,
+    inputs: &[Tensor],
+) -> Option<(BatchKey, i64)> {
     let b = analysis.batch_sym?;
     let mut env = SymEnv::new();
     env.bind_params(m, inputs).ok()?;
+    let ext = *env.resolved().get(&b)?;
     let mut residual = binding_vector(&env);
-    let pos = residual.iter().position(|&(s, _)| s == b)?;
-    residual.remove(pos);
-    Some(BatchKey { residual })
+    residual.retain(|&(s, _)| s != b);
+    Some((BatchKey { residual }, ext))
+}
+
+/// The grouping key alone (see [`group_key_extent`]).
+pub fn group_key(m: &Module, analysis: &BatchAnalysis, inputs: &[Tensor]) -> Option<BatchKey> {
+    group_key_extent(m, analysis, inputs).map(|(k, _)| k)
+}
+
+/// The bound shape of one dispatch group: member environments, leading
+/// extents (arrival order), stacked row offsets, and the shared residual
+/// binding. Deriving it is the **cheap per-group binding check** the plan
+/// tiers run instead of any per-step work: bind each member's parameters,
+/// split off the leading extent, verify the residuals agree.
+pub struct GroupShape {
+    pub envs: Vec<SymEnv>,
+    pub extents: Vec<i64>,
+    pub offsets: Vec<usize>,
+    pub residual: Vec<(SymId, i64)>,
+}
+
+impl GroupShape {
+    /// The batch-plan cache key of this group (extents sorted: the stacked
+    /// walk is order-independent, see `runtime::plan::BatchPlanKey`).
+    pub fn plan_key(&self, program: u64) -> BatchPlanKey {
+        let mut extents = self.extents.clone();
+        extents.sort_unstable();
+        BatchPlanKey { program, residual: self.residual.clone(), extents }
+    }
+}
+
+/// Bind every member of a prospective group and check it can stack.
+/// Returns `None` when any member fails to bind or the residual bindings
+/// disagree — the caller then serves the members solo (binding errors
+/// surface through the normal solo run path).
+pub fn group_shape(
+    m: &Module,
+    analysis: &BatchAnalysis,
+    requests: &[Vec<Tensor>],
+) -> Option<GroupShape> {
+    let b_sym = analysis.batch_sym?;
+    let k = requests.len();
+    let mut envs = Vec::with_capacity(k);
+    let mut extents = Vec::with_capacity(k);
+    let mut offsets = Vec::with_capacity(k + 1);
+    let mut residual0: Option<Vec<(SymId, i64)>> = None;
+    offsets.push(0usize);
+    for (i, r) in requests.iter().enumerate() {
+        let mut e = SymEnv::new();
+        if e.bind_params(m, r).is_err() {
+            return None;
+        }
+        let Some(&ext) = e.resolved().get(&b_sym) else {
+            return None;
+        };
+        let mut residual = binding_vector(&e);
+        residual.retain(|&(s, _)| s != b_sym);
+        match &residual0 {
+            None => residual0 = Some(residual),
+            Some(first) if first != &residual => return None,
+            Some(_) => {}
+        }
+        offsets.push(offsets[i] + ext as usize);
+        extents.push(ext);
+        envs.push(e);
+    }
+    Some(GroupShape { envs, extents, offsets, residual: residual0.unwrap_or_default() })
 }
 
 /// Dims classification relative to the batch symbol.
@@ -535,12 +624,20 @@ fn per_value(
 }
 
 impl Executor {
-    /// The (cached) batchability analysis of a program.
+    /// The (cached) batchability analysis of a program. Normally seeded at
+    /// compile time by `DiscCompiler` (see `Executor::seed_batch_analysis`)
+    /// and shared across forked workers; computing it here is the cold
+    /// fallback for standalone executors, counted in
+    /// `Executor::batch_analyses` so tests can assert dispatches never
+    /// re-derive the classification.
     pub fn batch_analysis(&mut self, prog: &Program) -> Arc<BatchAnalysis> {
-        self.batch_info
-            .entry(prog.id)
-            .or_insert_with(|| Arc::new(analyze(prog)))
-            .clone()
+        if let Some(a) = self.batch_info.get(&prog.id) {
+            return a.clone();
+        }
+        self.batch_analyses += 1;
+        let a = Arc::new(analyze(prog));
+        self.batch_info.insert(prog.id, a.clone());
+        a
     }
 
     /// Execute several requests as one batched dispatch (see the module
@@ -553,11 +650,11 @@ impl Executor {
         anyhow::ensure!(!requests.is_empty(), "empty batch");
         let analysis = self.batch_analysis(prog);
         if requests.len() > 1 && analysis.eligible() {
-            // The stacked walk validates residual-binding agreement from
-            // the member environments it binds anyway (no extra key
-            // derivation on the hot path) and declines mismatched groups.
-            if let Some(out) = self.run_stacked(prog, requests, &analysis)? {
-                return Ok(out);
+            // The cheap per-group binding check: bind member environments
+            // (the stacked walk needs them anyway) and verify residual
+            // agreement. Mismatched groups decline to the solo loop below.
+            if let Some(shape) = group_shape(&prog.module, &analysis, requests) {
+                return self.run_grouped(prog, requests, &analysis, shape);
             }
         }
         let mut outputs = Vec::with_capacity(requests.len());
@@ -570,49 +667,122 @@ impl Executor {
         Ok(BatchOutput { outputs, metrics })
     }
 
-    /// The batched walk proper. `analysis` is known-eligible; returns
-    /// `Ok(None)` when the group cannot stack after all (unbindable member
-    /// inputs, or residual bindings that disagree) — the caller then serves
-    /// the members solo.
+    /// Serve one bindable group through the batch tier pipeline: *replay*
+    /// a recorded batch plan when the group shape is known (and its guards
+    /// hold), otherwise *interpret* the stacked walk — *recording* a fresh
+    /// plan on first sight of the shape.
+    fn run_grouped(
+        &mut self,
+        prog: &Program,
+        requests: &[Vec<Tensor>],
+        analysis: &BatchAnalysis,
+        shape: GroupShape,
+    ) -> Result<BatchOutput> {
+        if !self.opts.plan_cache {
+            return self.run_stacked(prog, requests, analysis, shape, None);
+        }
+        let key = shape.plan_key(prog.id);
+        match self.batch_plans.get(&key).cloned() {
+            Some(plan) => {
+                if plan.param_guards_hold(requests) {
+                    if let Some(out) =
+                        self.replay_batch(prog, requests, analysis, &shape, &plan)?
+                    {
+                        self.batch_plan_stats.hits += 1;
+                        return Ok(out);
+                    }
+                }
+                // Stale shape assumption: this group runs the batched
+                // interpret tier; the cached plan stays (the common shape
+                // keeps replaying).
+                self.batch_plan_stats.guard_misses += 1;
+                let mut out = self.run_stacked(prog, requests, analysis, shape, None)?;
+                out.metrics.batch_plan_guard_misses += 1;
+                Ok(out)
+            }
+            None => {
+                self.batch_plan_stats.misses += 1;
+                let mut rec = BatchPlanRecorder::new();
+                let mut out =
+                    self.run_stacked(prog, requests, analysis, shape, Some(&mut rec))?;
+                out.metrics.batch_plan_misses += 1;
+                let plan = rec.finish(&prog.module);
+                self.install_batch_plan(key, plan);
+                Ok(out)
+            }
+        }
+    }
+
+    /// Install a freshly recorded batch plan: reserve its device-residency
+    /// peak, evict FIFO past `max_plans` (releasing exactly the evicted
+    /// plan's weight pins), pin the new plan's weights.
+    fn install_batch_plan(&mut self, key: BatchPlanKey, plan: BatchPlan) {
+        self.pool.device.reserve(plan.device_peak_bytes);
+        while self.batch_plans.len() >= self.max_plans.max(1) {
+            match self.batch_plan_order.pop_front() {
+                Some(old) => {
+                    self.batch_plans.remove(&old);
+                    for wk in self.batch_plan_pins.remove(&old).unwrap_or_default() {
+                        self.library.unpin_weight(&wk);
+                    }
+                }
+                None => break,
+            }
+        }
+        let mut pinned = Vec::new();
+        for bs in &plan.steps {
+            match bs {
+                BatchPlannedStep::Joint { step, .. } => {
+                    Self::pin_step_weight(&mut self.library, key.program, step, &mut pinned)
+                }
+                BatchPlannedStep::Member { per_extent } => {
+                    for step in per_extent.values() {
+                        Self::pin_step_weight(&mut self.library, key.program, step, &mut pinned);
+                    }
+                }
+            }
+        }
+        self.batch_plan_pins.insert(key.clone(), pinned);
+        self.batch_plans.insert(key.clone(), Arc::new(plan));
+        self.batch_plan_order.push_back(key);
+        self.batch_plan_stats.entries = self.batch_plans.len();
+    }
+
+    /// Pin the cached-weight reference of one planned step, if any —
+    /// the single pin rule shared by the solo (`pin_plan_weights`) and
+    /// batch plan installers, so what the two caches keep resident can
+    /// never silently diverge.
+    pub(crate) fn pin_step_weight(
+        library: &mut crate::library::GemmLibrary,
+        program: u64,
+        step: &PlannedStep,
+        pinned: &mut Vec<WeightKey>,
+    ) {
+        if let PlannedStep::LibraryCall { weight: Some(w), .. } = step {
+            let key = WeightKey { program, value: w.value };
+            if library.pin_weight(&key) {
+                pinned.push(key);
+            }
+        }
+    }
+
+    /// The batched interpret tier: one stacked walk of the flow, resolving
+    /// symbols and hashing cache keys per step (optionally recording a
+    /// [`BatchPlan`] for the group shape).
     fn run_stacked(
         &mut self,
         prog: &Program,
         requests: &[Vec<Tensor>],
         analysis: &BatchAnalysis,
-    ) -> Result<Option<BatchOutput>> {
+        shape: GroupShape,
+        mut rec: Option<&mut BatchPlanRecorder>,
+    ) -> Result<BatchOutput> {
         let t_start = Instant::now();
         let m = &prog.module;
         let k = requests.len();
-        let b_sym = analysis.batch_sym.expect("caller checked eligibility");
         let mut metrics = RunMetrics::default();
         let before = self.stats_snapshot();
-
-        // Per-request environments and leading extents; the residual
-        // bindings (everything except the leading symbol) must agree
-        // across members, because stacked launches share one set of
-        // trailing extent scalars.
-        let mut envs = Vec::with_capacity(k);
-        let mut offsets = Vec::with_capacity(k + 1);
-        let mut residual0: Option<Vec<(SymId, i64)>> = None;
-        offsets.push(0usize);
-        for (i, r) in requests.iter().enumerate() {
-            let mut e = SymEnv::new();
-            if e.bind_params(m, r).is_err() {
-                return Ok(None);
-            }
-            let Some(&ext) = e.resolved().get(&b_sym) else {
-                return Ok(None);
-            };
-            let mut residual = binding_vector(&e);
-            residual.retain(|&(s, _)| s != b_sym);
-            match &residual0 {
-                None => residual0 = Some(residual),
-                Some(first) if first != &residual => return Ok(None),
-                Some(_) => {}
-            }
-            offsets.push(offsets[i] + ext as usize);
-            envs.push(e);
-        }
+        let GroupShape { mut envs, extents, offsets, .. } = shape;
 
         // Stack the entry parameters and bind the batched environment.
         let mut stacked: Vec<Tensor> = Vec::with_capacity(m.params.len());
@@ -624,6 +794,11 @@ impl Executor {
         }
         let mut env_b = SymEnv::new();
         env_b.bind_params(m, &stacked)?;
+        if rec.is_some() {
+            // Log shape reads so the recorder can reuse the solo guard
+            // classification (empty for eligible programs).
+            env_b.elem_log = Some(Vec::new());
+        }
 
         // Value stores: stacked/shared forms plus per-request forms.
         let n = m.instrs.len();
@@ -648,6 +823,10 @@ impl Executor {
                 Step::Dealloc { value } => {
                     joint[*value] = None;
                     per[*value] = None;
+                    if let Some(r) = rec.as_deref_mut() {
+                        r.note_dealloc(*value);
+                        r.push_joint(PlannedStep::Dealloc { value: *value }, false);
+                    }
                 }
                 _ if mode != BatchMode::PerRequest => {
                     self.stacked_step(
@@ -658,6 +837,7 @@ impl Executor {
                         &mut joint,
                         &per,
                         &mut metrics,
+                        rec.as_deref_mut(),
                     )?;
                 }
                 _ => {
@@ -668,8 +848,10 @@ impl Executor {
                         &joint,
                         &mut per,
                         offsets.as_slice(),
+                        &extents,
                         analysis,
                         &mut metrics,
+                        rec.as_deref_mut(),
                     )?;
                 }
             }
@@ -686,18 +868,23 @@ impl Executor {
             }
         }
 
+        if let Some(r) = rec.as_deref_mut() {
+            r.stash_elem_log(env_b.elem_log.take().unwrap_or_default());
+        }
         self.fold_stats(&mut metrics, &before);
         metrics.batched_requests += k as u64;
         metrics.batched_launches += 1;
         metrics.total_time = t_start.elapsed();
-        Ok(Some(BatchOutput { outputs, metrics }))
+        Ok(BatchOutput { outputs, metrics })
     }
 
     /// One GEMM library call on already-materialized operands, routing
     /// constant weights through the persistent device-side cache — the
     /// shared body of the stacked and per-member batched paths (the
     /// recorder-integrated interpret tier keeps its own copy, which also
-    /// serves fingerprint-validated parameter weights).
+    /// serves fingerprint-validated parameter weights). Returns the
+    /// resolved library key and weight reference alongside the result so
+    /// the batch-plan recorder can capture them.
     fn batched_gemm(
         &mut self,
         prog: &Program,
@@ -705,7 +892,7 @@ impl Executor {
         a: &Tensor,
         bt: &Tensor,
         metrics: &mut RunMetrics,
-    ) -> Result<Tensor> {
+    ) -> Result<(Tensor, GemmKey, Option<PlanWeight>)> {
         let m = &prog.module;
         let ins = &m.instrs[value];
         metrics.lib_bytes += (a.byte_size() + bt.byte_size()) as u64;
@@ -740,7 +927,7 @@ impl Executor {
         metrics.compile_time += self.library.stats.build_time - build0;
         metrics.lib_calls += 1;
         metrics.lib_bytes += t.byte_size() as u64;
-        Ok(t)
+        Ok((t, key, weight))
     }
 
     /// One fused-kernel launch on already-materialized inputs: resolve the
@@ -749,7 +936,9 @@ impl Executor {
     /// batched paths. Stacked launches are keyed by the *widened* leading
     /// extent, so a batch rides the same (signature, bucket) family solo
     /// traffic compiles; `count_padding` additionally accounts pad-lane
-    /// traffic into `batch_padding_bytes` for them.
+    /// traffic into `batch_padding_bytes` for them. Returns the compiled
+    /// kernel and resolved extent scalars alongside the result so the
+    /// batch-plan recorder can capture them.
     fn batched_fused(
         &mut self,
         prog: &Program,
@@ -758,7 +947,7 @@ impl Executor {
         inputs: &[Rc<Tensor>],
         count_padding: bool,
         metrics: &mut RunMetrics,
-    ) -> Result<Tensor> {
+    ) -> Result<(Tensor, Arc<CompiledKernel>, Vec<i32>)> {
         let m = &prog.module;
         let fl = &prog.fused[idx];
         let mut actual: HashMap<SymId, usize> = HashMap::with_capacity(fl.syms.len());
@@ -792,10 +981,12 @@ impl Executor {
                 owned.push(padded);
             }
         }
+        let mut extent_vals: Vec<i32> = Vec::with_capacity(spec.extent_locals.len());
         for &li in &spec.extent_locals {
-            let v = actual[&fl.syms[li]];
+            let v = actual[&fl.syms[li]] as i32;
+            extent_vals.push(v);
             srcs.push(Src::Owned(owned.len()));
-            owned.push(Tensor::i32(&[], vec![v as i32]));
+            owned.push(Tensor::i32(&[], vec![v]));
         }
         let args: Vec<&Tensor> = srcs
             .iter()
@@ -827,8 +1018,8 @@ impl Executor {
         metrics.mem_bytes += out.byte_size() as u64;
         metrics.d2h_bytes += out.byte_size() as u64;
         let actual_out = env.resolve_dims(m, &m.ty(fl.root).dims, &NoVals)?;
-        if out.dims == actual_out {
-            Ok(out)
+        let out = if out.dims == actual_out {
+            out
         } else {
             metrics.pad_copies += 1;
             if count_padding {
@@ -836,11 +1027,13 @@ impl Executor {
                     - actual_out.iter().product::<usize>() * spec.out_dtype.byte_size())
                     as u64;
             }
-            crop_box(&out, &actual_out)
-        }
+            crop_box(&out, &actual_out)?
+        };
+        Ok((out, kernel, extent_vals))
     }
 
-    /// Execute one Stacked/Shared step over the joint value store.
+    /// Execute one Stacked/Shared step over the joint value store
+    /// (optionally recording its widened resolution into a batch plan).
     #[allow(clippy::too_many_arguments)]
     fn stacked_step(
         &mut self,
@@ -851,8 +1044,10 @@ impl Executor {
         joint: &mut [Option<Rc<Tensor>>],
         per: &[Option<Vec<Rc<Tensor>>>],
         metrics: &mut RunMetrics,
+        rec: Option<&mut BatchPlanRecorder>,
     ) -> Result<()> {
         let m = &prog.module;
+        let stacked = mode == BatchMode::Stacked;
         match step {
             Step::EvalHost { value } => {
                 let ins = &m.instrs[*value];
@@ -866,6 +1061,9 @@ impl Executor {
                 let t = eval_op(&ins.op, &refs, &out_dims, ins.ty.dtype)
                     .with_context(|| format!("host op %{value} (batched)"))?;
                 metrics.host_ops += 1;
+                if let Some(r) = rec {
+                    r.push_joint(PlannedStep::EvalHost { value: *value, out_dims }, stacked);
+                }
                 joint[*value] = Some(Rc::new(t));
             }
             Step::Bitcast { value } => {
@@ -873,7 +1071,11 @@ impl Executor {
                 let out_dims = env_b.resolve_dims(m, &ins.ty.dims, &NoVals)?;
                 let src = joint_value(joint, per, metrics, ins.operands[0])?;
                 metrics.bitcasts += 1;
-                joint[*value] = Some(Rc::new((*src).clone().with_dims(&out_dims)?));
+                let t = (*src).clone().with_dims(&out_dims)?;
+                if let Some(r) = rec {
+                    r.push_joint(PlannedStep::Bitcast { value: *value, out_dims }, stacked);
+                }
+                joint[*value] = Some(Rc::new(t));
             }
             Step::LaunchOp { value } => {
                 let ins = &m.instrs[*value];
@@ -893,13 +1095,26 @@ impl Executor {
                 metrics.kernel_time += tk.elapsed();
                 metrics.mem_kernels += 1;
                 metrics.mem_bytes += t.byte_size() as u64;
+                if let Some(r) = rec {
+                    r.push_joint(PlannedStep::LaunchOp { value: *value, out_dims }, stacked);
+                }
                 joint[*value] = Some(Rc::new(t));
             }
             Step::LibraryCall { value } => {
                 let ins = &m.instrs[*value];
                 let a = joint_value(joint, per, metrics, ins.operands[0])?;
                 let bt = joint_value(joint, per, metrics, ins.operands[1])?;
-                let t = self.batched_gemm(prog, *value, &a, &bt, metrics)?;
+                let (t, key, weight) = self.batched_gemm(prog, *value, &a, &bt, metrics)?;
+                if let Some(r) = rec {
+                    if self.opts.device_resident {
+                        let out_bytes = (key.batch.max(1) * key.m * key.n * 4) as u64;
+                        r.note_device_out(*value, out_bytes);
+                    }
+                    r.push_joint(
+                        PlannedStep::LibraryCall { value: *value, key, weight },
+                        stacked,
+                    );
+                }
                 joint[*value] = Some(Rc::new(t));
             }
             Step::LaunchFused { idx } => {
@@ -909,14 +1124,37 @@ impl Executor {
                     .iter()
                     .map(|&v| joint_value(joint, per, metrics, v))
                     .collect::<Result<_>>()?;
-                let out = self.batched_fused(
-                    prog,
-                    *idx,
-                    env_b,
-                    &ins_rc,
-                    mode == BatchMode::Stacked,
-                    metrics,
-                )?;
+                let (out, kernel, extent_vals) =
+                    self.batched_fused(prog, *idx, env_b, &ins_rc, stacked, metrics)?;
+                if let Some(r) = rec {
+                    let extents_host: Vec<Tensor> =
+                        extent_vals.iter().map(|&v| Tensor::i32(&[], vec![v])).collect();
+                    let extents_dev = if self.opts.device_resident {
+                        extents_host
+                            .iter()
+                            .map(|t| self.device.h2d(t).map(Arc::new))
+                            .collect::<Result<Vec<_>>>()?
+                    } else {
+                        Vec::new()
+                    };
+                    if self.opts.device_resident {
+                        let spec = &kernel.spec;
+                        let out_bytes = (spec.out_dims.iter().product::<usize>()
+                            * spec.out_dtype.byte_size())
+                            as u64;
+                        r.note_device_out(fl.root, out_bytes);
+                    }
+                    r.push_joint(
+                        PlannedStep::LaunchFused {
+                            idx: *idx,
+                            kernel,
+                            extents_host,
+                            extents_dev,
+                            out_actual: out.dims.clone(),
+                        },
+                        stacked,
+                    );
+                }
                 joint[fl.root] = Some(Rc::new(out));
             }
             Step::Dealloc { .. } => unreachable!("handled by the caller"),
@@ -926,6 +1164,8 @@ impl Executor {
 
     /// Execute one PerRequest step: once per batch member, with that
     /// member's own environment — exactly the solo interpret semantics.
+    /// When recording, one sub-record is captured per distinct member
+    /// extent (residuals agree, so the extent determines the resolution).
     #[allow(clippy::too_many_arguments)]
     fn solo_step(
         &mut self,
@@ -935,11 +1175,15 @@ impl Executor {
         joint: &[Option<Rc<Tensor>>],
         per: &mut [Option<Vec<Rc<Tensor>>>],
         offsets: &[usize],
+        extents: &[i64],
         analysis: &BatchAnalysis,
         metrics: &mut RunMetrics,
+        rec: Option<&mut BatchPlanRecorder>,
     ) -> Result<()> {
         let m = &prog.module;
         let k = envs.len();
+        let recording = rec.is_some();
+        let mut per_rec: HashMap<i64, PlannedStep> = HashMap::new();
         let value = match step {
             Step::EvalHost { value }
             | Step::Bitcast { value }
@@ -951,6 +1195,7 @@ impl Executor {
         let mut results: Vec<Rc<Tensor>> = Vec::with_capacity(k);
         for i in 0..k {
             let env = &mut envs[i];
+            let capture = recording && !per_rec.contains_key(&extents[i]);
             let t = match step {
                 Step::EvalHost { value } | Step::LaunchOp { value } => {
                     let ins = &m.instrs[*value];
@@ -961,6 +1206,14 @@ impl Executor {
                         .map(|&o| per_value(joint, per, analysis, offsets, metrics, o, i))
                         .collect::<Result<_>>()?;
                     let refs: Vec<&Tensor> = ops.iter().map(|t| t.as_ref()).collect();
+                    if capture {
+                        let rs = if matches!(step, Step::LaunchOp { .. }) {
+                            PlannedStep::LaunchOp { value: *value, out_dims: out_dims.clone() }
+                        } else {
+                            PlannedStep::EvalHost { value: *value, out_dims: out_dims.clone() }
+                        };
+                        per_rec.insert(extents[i], rs);
+                    }
                     if matches!(step, Step::LaunchOp { .. }) {
                         for o in &refs {
                             metrics.mem_bytes += o.byte_size() as u64;
@@ -984,14 +1237,28 @@ impl Executor {
                     let src =
                         per_value(joint, per, analysis, offsets, metrics, ins.operands[0], i)?;
                     metrics.bitcasts += 1;
+                    if capture {
+                        per_rec.insert(
+                            extents[i],
+                            PlannedStep::Bitcast { value: *value, out_dims: out_dims.clone() },
+                        );
+                    }
                     (*src).clone().with_dims(&out_dims)?
                 }
                 Step::LibraryCall { value } => {
                     let ins = &m.instrs[*value];
                     let a = per_value(joint, per, analysis, offsets, metrics, ins.operands[0], i)?;
                     let bt = per_value(joint, per, analysis, offsets, metrics, ins.operands[1], i)?;
-                    self.batched_gemm(prog, *value, &a, &bt, metrics)
-                        .with_context(|| format!("library call %{value} (member {i})"))?
+                    let (t, key, weight) = self
+                        .batched_gemm(prog, *value, &a, &bt, metrics)
+                        .with_context(|| format!("library call %{value} (member {i})"))?;
+                    if capture {
+                        per_rec.insert(
+                            extents[i],
+                            PlannedStep::LibraryCall { value: *value, key, weight },
+                        );
+                    }
+                    t
                 }
                 Step::LaunchFused { idx } => {
                     let fl = &prog.fused[*idx];
@@ -1000,15 +1267,857 @@ impl Executor {
                         .iter()
                         .map(|&v| per_value(joint, per, analysis, offsets, metrics, v, i))
                         .collect::<Result<_>>()?;
-                    self.batched_fused(prog, *idx, env, &ins_rc, false, metrics)
-                        .with_context(|| format!("fused launch {idx} (member {i})"))?
+                    let (t, kernel, extent_vals) = self
+                        .batched_fused(prog, *idx, env, &ins_rc, false, metrics)
+                        .with_context(|| format!("fused launch {idx} (member {i})"))?;
+                    if capture {
+                        let extents_host: Vec<Tensor> =
+                            extent_vals.iter().map(|&v| Tensor::i32(&[], vec![v])).collect();
+                        // Member sub-records replay host-side (their values
+                        // cross in and out of the per-request world by row
+                        // slicing), so no device extent scalars are kept.
+                        per_rec.insert(
+                            extents[i],
+                            PlannedStep::LaunchFused {
+                                idx: *idx,
+                                kernel,
+                                extents_host,
+                                extents_dev: Vec::new(),
+                                out_actual: t.dims.clone(),
+                            },
+                        );
+                    }
+                    t
                 }
                 Step::Dealloc { .. } => unreachable!("handled by the caller"),
             };
             results.push(Rc::new(t));
         }
         per[value] = Some(results);
+        if let Some(r) = rec {
+            r.push_member(per_rec);
+        }
         Ok(())
+    }
+}
+
+// --- batched plan replay --------------------------------------------------
+
+/// Materialize a host view of a joint value during batch replay: the host
+/// slot, a readback (+ crop) of the device-resident joint buffer, or a
+/// concatenation of the per-request parts.
+fn replay_joint_value(
+    device: &Device,
+    joint: &mut [Option<Rc<Tensor>>],
+    jdev: &[Option<DevSlot>],
+    per: &[Option<Vec<Rc<Tensor>>>],
+    metrics: &mut RunMetrics,
+    v: ValueId,
+) -> Result<Rc<Tensor>> {
+    if let Some(t) = &joint[v] {
+        return Ok(t.clone());
+    }
+    if let Some(d) = jdev[v].as_ref() {
+        let full = device.d2h(&d.dt)?;
+        metrics.d2h_bytes += full.byte_size() as u64;
+        let t = if full.dims == d.actual {
+            full
+        } else {
+            metrics.pad_copies += 1;
+            crop_box(&full, &d.actual)?
+        };
+        let rc = Rc::new(t);
+        joint[v] = Some(rc.clone());
+        return Ok(rc);
+    }
+    let parts = per[v]
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("value %{v} has no live batched form"))?;
+    let refs: Vec<&Tensor> = parts.iter().map(|r| r.as_ref()).collect();
+    let t = Tensor::concat0(&refs).with_context(|| format!("stacking value %{v} (replay)"))?;
+    metrics.batch_stack_bytes += t.byte_size() as u64;
+    let rc = Rc::new(t);
+    joint[v] = Some(rc.clone());
+    Ok(rc)
+}
+
+/// Materialize request `i`'s view of a value during batch replay: the
+/// per-request slot, the shared joint tensor, or a row slice of the
+/// stacked form (read back from device first when needed).
+#[allow(clippy::too_many_arguments)]
+fn replay_per_value(
+    device: &Device,
+    joint: &mut [Option<Rc<Tensor>>],
+    jdev: &[Option<DevSlot>],
+    per: &mut [Option<Vec<Rc<Tensor>>>],
+    analysis: &BatchAnalysis,
+    offsets: &[usize],
+    metrics: &mut RunMetrics,
+    v: ValueId,
+    i: usize,
+) -> Result<Rc<Tensor>> {
+    if let Some(parts) = &per[v] {
+        return Ok(parts[i].clone());
+    }
+    let t = replay_joint_value(device, joint, jdev, &*per, metrics, v)?;
+    if analysis.value_modes[v] == BatchMode::Shared {
+        return Ok(t);
+    }
+    let k = offsets.len() - 1;
+    let mut parts = Vec::with_capacity(k);
+    for j in 0..k {
+        let rows = offsets[j + 1] - offsets[j];
+        let s = t
+            .slice0(offsets[j], rows)
+            .with_context(|| format!("splitting value %{v} for request {j} (replay)"))?;
+        metrics.batch_stack_bytes += s.byte_size() as u64;
+        parts.push(Rc::new(s));
+    }
+    let out = parts[i].clone();
+    per[v] = Some(parts);
+    Ok(out)
+}
+
+impl Executor {
+    /// Host-path replay of one recorded fused launch over materialized
+    /// inputs: recorded kernel, recorded extent scalars, recorded crop —
+    /// no resolution, no hashing. The member path of batched replays (and
+    /// the joint path when `device_resident` is off).
+    #[allow(clippy::too_many_arguments)]
+    fn replay_fused_host(
+        &mut self,
+        kernel: &Arc<CompiledKernel>,
+        inputs: &[Rc<Tensor>],
+        extents_host: &[Tensor],
+        out_actual: &[usize],
+        count_padding: bool,
+        metrics: &mut RunMetrics,
+        label: &str,
+    ) -> Result<Tensor> {
+        let spec = &kernel.spec;
+        // The recorded kernel replaces signature hashing and the bucket
+        // lookup; account it as a hit so reuse stats stay meaningful.
+        self.cache.stats.hits += 1;
+        enum Src {
+            In(usize),
+            Owned(usize),
+        }
+        let mut owned: Vec<Tensor> = Vec::new();
+        let mut srcs: Vec<Src> = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            if t.dims == spec.input_dims[i] {
+                srcs.push(Src::In(i));
+                metrics.mem_bytes += t.byte_size() as u64;
+            } else {
+                metrics.pad_copies += 1;
+                let padded = pad_box(
+                    t,
+                    &spec.input_dims[i],
+                    if self.opts.pooled_buffers { Some(&mut self.pool) } else { None },
+                )?;
+                metrics.mem_bytes += padded.byte_size() as u64;
+                if count_padding {
+                    metrics.batch_padding_bytes += (padded.byte_size() - t.byte_size()) as u64;
+                }
+                srcs.push(Src::Owned(owned.len()));
+                owned.push(padded);
+            }
+        }
+        let args: Vec<&Tensor> = srcs
+            .iter()
+            .map(|s| match s {
+                Src::In(i) => inputs[*i].as_ref(),
+                Src::Owned(i) => &owned[*i],
+            })
+            .chain(extents_host.iter())
+            .collect();
+        for a in &args {
+            metrics.h2d_bytes += a.byte_size() as u64;
+        }
+        let tk = Instant::now();
+        let out = kernel
+            .exe
+            .run(&args, &spec.out_dims, spec.out_dtype)
+            .with_context(|| format!("replaying fused kernel {} ({label})", spec.name))?;
+        metrics.kernel_time += tk.elapsed();
+        metrics.mem_kernels += 1;
+        drop(args);
+        if self.opts.pooled_buffers {
+            for a in owned {
+                if let Data::F32(v) = a.data {
+                    if v.capacity() > 0 {
+                        self.pool.free_f32(v);
+                    }
+                }
+            }
+        }
+        metrics.mem_bytes += out.byte_size() as u64;
+        metrics.d2h_bytes += out.byte_size() as u64;
+        if out.dims.as_slice() == out_actual {
+            Ok(out)
+        } else {
+            metrics.pad_copies += 1;
+            if count_padding {
+                // Same output pad-lane accounting as the interpret tier's
+                // `batched_fused`, so pad-waste reporting does not dip
+                // when plans start replaying.
+                metrics.batch_padding_bytes += (out.byte_size()
+                    - out_actual.iter().product::<usize>() * spec.out_dtype.byte_size())
+                    as u64;
+            }
+            crop_box(&out, out_actual)
+        }
+    }
+
+    /// Replay one recorded GEMM on host-materialized operands, serving the
+    /// recorded weight from the persistent device cache. Mirrors
+    /// `batched_gemm`'s accounting minus the key/weight derivation.
+    fn replay_gemm_host(
+        &mut self,
+        prog: &Program,
+        key: GemmKey,
+        weight: Option<PlanWeight>,
+        a: &Tensor,
+        bt: &Tensor,
+        metrics: &mut RunMetrics,
+    ) -> Result<Tensor> {
+        let build0 = self.library.stats.build_time;
+        let exec0 = self.library.stats.exec_time;
+        metrics.lib_bytes += (a.byte_size() + bt.byte_size()) as u64;
+        let t = if let Some(w) = &weight {
+            let wdev = self.library.weight_device(
+                WeightKey { program: prog.id, value: w.value },
+                bt,
+                &key.rhs_dims(),
+                w.validate,
+            )?;
+            let (dt, actual) = self.library.matmul_device(
+                GemmSrc::Host(a),
+                GemmSrc::Weight { dt: wdev, actual: &bt.dims },
+                key,
+            )?;
+            self.library.readback(&dt, &actual)?
+        } else {
+            self.library.matmul_with_key(a, bt, key)?
+        };
+        metrics.lib_time += self.library.stats.exec_time - exec0;
+        metrics.compile_time += self.library.stats.build_time - build0;
+        metrics.lib_calls += 1;
+        metrics.lib_bytes += t.byte_size() as u64;
+        Ok(t)
+    }
+
+    /// The batch replay tier: walk a recorded [`BatchPlan`] — no per-step
+    /// symbol resolution, no signature hashing, no mode branching — with
+    /// Stacked/Shared fused-kernel and GEMM results chained dev→dev
+    /// through persistent device buffers. Only member crossings, host-op
+    /// operands, and program outputs read back to the host. Returns
+    /// `Ok(None)` when a recorded host-op guard fails mid-walk (the caller
+    /// then serves the group through the batched interpret tier).
+    fn replay_batch(
+        &mut self,
+        prog: &Program,
+        requests: &[Vec<Tensor>],
+        analysis: &BatchAnalysis,
+        shape: &GroupShape,
+        plan: &BatchPlan,
+    ) -> Result<Option<BatchOutput>> {
+        let t_start = Instant::now();
+        let m = &prog.module;
+        let k = requests.len();
+        let device = self.device.clone();
+        let mut metrics = RunMetrics::default();
+        let before = self.stats_snapshot();
+
+        // Seed the joint store: stacked parameters + constants (the same
+        // assembly the interpret tier performs).
+        let n = m.instrs.len();
+        let mut joint: Vec<Option<Rc<Tensor>>> = vec![None; n];
+        let mut jdev: Vec<Option<DevSlot>> = vec![None; n];
+        let mut per: Vec<Option<Vec<Rc<Tensor>>>> = vec![None; n];
+        for (id, ins) in m.instrs.iter().enumerate() {
+            match &ins.op {
+                Op::Param { index } => {
+                    let parts: Vec<&Tensor> = requests.iter().map(|r| &r[*index]).collect();
+                    let t = Tensor::concat0(&parts)
+                        .with_context(|| format!("stacking param {index} (replay)"))?;
+                    metrics.batch_stack_bytes += t.byte_size() as u64;
+                    joint[id] = Some(Rc::new(t));
+                }
+                Op::Const { lit, dims } => {
+                    joint[id] = Some(Rc::new(Tensor::from_literal(lit, dims)));
+                }
+                _ => {}
+            }
+        }
+        let mut resident_peak: u64 = 0;
+        let walked = self.replay_walk(
+            prog,
+            analysis,
+            shape,
+            plan,
+            device,
+            &mut joint,
+            &mut jdev,
+            &mut per,
+            &mut metrics,
+            &mut resident_peak,
+        );
+        // Release every surviving joint device slot no matter how the walk
+        // ended — the arena gauge must not leak on error or guard-abort
+        // paths (Dealloc steps released their slots already; those are
+        // gone from `jdev`).
+        for d in jdev.iter_mut() {
+            if let Some(s) = d.take() {
+                self.pool.device.release(s.dt.byte_size() as u64);
+            }
+        }
+        let outputs = match walked? {
+            Some(o) => o,
+            None => return Ok(None),
+        };
+
+        self.fold_stats(&mut metrics, &before);
+        metrics.batch_dev_resident_bytes = resident_peak;
+        metrics.batched_requests += k as u64;
+        metrics.batched_launches += 1;
+        metrics.batch_plan_hits += 1;
+        metrics.total_time = t_start.elapsed();
+        Ok(Some(BatchOutput { outputs, metrics }))
+    }
+
+    /// The step walk of [`replay_batch`]: executes every recorded step and
+    /// assembles per-request outputs. Returns `Ok(None)` on a host-guard
+    /// miss. Deliberately does NOT release surviving `jdev` slots — the
+    /// caller does, identically on success, guard-miss, and error paths.
+    #[allow(clippy::too_many_arguments)]
+    fn replay_walk(
+        &mut self,
+        prog: &Program,
+        analysis: &BatchAnalysis,
+        shape: &GroupShape,
+        plan: &BatchPlan,
+        device: Arc<Device>,
+        joint: &mut Vec<Option<Rc<Tensor>>>,
+        jdev: &mut Vec<Option<DevSlot>>,
+        per: &mut Vec<Option<Vec<Rc<Tensor>>>>,
+        metrics: &mut RunMetrics,
+        resident_peak: &mut u64,
+    ) -> Result<Option<Vec<Vec<Tensor>>>> {
+        let m = &prog.module;
+        let k = shape.extents.len();
+        let offsets = shape.offsets.as_slice();
+        let mut resident: u64 = 0;
+
+        for bstep in &plan.steps {
+            match bstep {
+                BatchPlannedStep::Joint { step, stacked } => match step {
+                    PlannedStep::EvalHost { value, out_dims } => {
+                        let ins = &m.instrs[*value];
+                        let mut ops: Vec<Rc<Tensor>> = Vec::with_capacity(ins.operands.len());
+                        for &o in &ins.operands {
+                            ops.push(replay_joint_value(
+                                &device,
+                                &mut joint,
+                                &jdev,
+                                &per,
+                                &mut metrics,
+                                o,
+                            )?);
+                        }
+                        let refs: Vec<&Tensor> = ops.iter().map(|t| t.as_ref()).collect();
+                        let t = eval_op(&ins.op, &refs, out_dims, ins.ty.dtype)
+                            .with_context(|| format!("host op %{value} (batch replay)"))?;
+                        metrics.host_ops += 1;
+                        let t = Rc::new(t);
+                        if let Some(gs) = plan.host_guards.get(value) {
+                            if !host_guards_hold(gs, &t) {
+                                // Stale shape assumption: the caller
+                                // releases the arena accounting and
+                                // discards the partial metrics.
+                                return Ok(None);
+                            }
+                        }
+                        joint[*value] = Some(t);
+                    }
+                    PlannedStep::Bitcast { value, out_dims } => {
+                        let src = replay_joint_value(
+                            &device,
+                            &mut joint,
+                            &jdev,
+                            &per,
+                            &mut metrics,
+                            m.instrs[*value].operands[0],
+                        )?;
+                        metrics.bitcasts += 1;
+                        joint[*value] = Some(Rc::new((*src).clone().with_dims(out_dims)?));
+                    }
+                    PlannedStep::LaunchOp { value, out_dims } => {
+                        let ins = &m.instrs[*value];
+                        let mut ops: Vec<Rc<Tensor>> = Vec::with_capacity(ins.operands.len());
+                        for &o in &ins.operands {
+                            ops.push(replay_joint_value(
+                                &device,
+                                &mut joint,
+                                &jdev,
+                                &per,
+                                &mut metrics,
+                                o,
+                            )?);
+                        }
+                        let refs: Vec<&Tensor> = ops.iter().map(|t| t.as_ref()).collect();
+                        for o in &refs {
+                            metrics.mem_bytes += o.byte_size() as u64;
+                        }
+                        let tk = Instant::now();
+                        let t = eval_op(&ins.op, &refs, out_dims, ins.ty.dtype).with_context(
+                            || format!("singleton kernel %{value} (batch replay)"),
+                        )?;
+                        metrics.kernel_time += tk.elapsed();
+                        metrics.mem_kernels += 1;
+                        metrics.mem_bytes += t.byte_size() as u64;
+                        joint[*value] = Some(Rc::new(t));
+                    }
+                    PlannedStep::LibraryCall { value, key, weight } => {
+                        let ins = &m.instrs[*value];
+                        let (a_id, b_id) = (ins.operands[0], ins.operands[1]);
+                        if self.opts.device_resident {
+                            // Chain dev→dev wherever a device-resident joint
+                            // operand exists; the library adapts buckets and
+                            // masks garbage pad lanes on device. The result
+                            // stays device-resident for the next launch.
+                            let build0 = self.library.stats.build_time;
+                            let exec0 = self.library.stats.exec_time;
+                            let a_host = if jdev[a_id].is_none() {
+                                Some(replay_joint_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &per,
+                                    &mut metrics,
+                                    a_id,
+                                )?)
+                            } else {
+                                None
+                            };
+                            let w_dev = if let Some(w) = weight {
+                                let bt = replay_joint_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &per,
+                                    &mut metrics,
+                                    b_id,
+                                )?;
+                                let dt = self.library.weight_device(
+                                    WeightKey { program: prog.id, value: w.value },
+                                    &bt,
+                                    &key.rhs_dims(),
+                                    w.validate,
+                                )?;
+                                let dims = bt.dims.clone();
+                                Some((dt, dims))
+                            } else {
+                                None
+                            };
+                            let b_host = if w_dev.is_none() && jdev[b_id].is_none() {
+                                Some(replay_joint_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &per,
+                                    &mut metrics,
+                                    b_id,
+                                )?)
+                            } else {
+                                None
+                            };
+                            let src_a = match (&a_host, jdev[a_id].as_ref()) {
+                                (Some(t), _) => GemmSrc::Host(t),
+                                (None, Some(s)) => GemmSrc::Dev {
+                                    dt: &s.dt,
+                                    actual: &s.actual,
+                                    zero_padded: s.zero_padded,
+                                },
+                                _ => unreachable!("lhs has neither host nor device value"),
+                            };
+                            let src_b = match (&w_dev, &b_host, jdev[b_id].as_ref()) {
+                                (Some((dt, dims)), _, _) => {
+                                    GemmSrc::Weight { dt: dt.clone(), actual: dims }
+                                }
+                                (None, Some(t), _) => GemmSrc::Host(t),
+                                (None, None, Some(s)) => GemmSrc::Dev {
+                                    dt: &s.dt,
+                                    actual: &s.actual,
+                                    zero_padded: s.zero_padded,
+                                },
+                                _ => unreachable!("rhs has neither host nor device value"),
+                            };
+                            let a_bytes = src_a.actual_byte_size();
+                            let b_bytes = src_b.actual_byte_size();
+                            let (dt, actual) = self.library.matmul_device(src_a, src_b, *key)?;
+                            metrics.lib_bytes += a_bytes + b_bytes;
+                            metrics.lib_bytes +=
+                                (actual.iter().product::<usize>() * 4) as u64;
+                            metrics.lib_time += self.library.stats.exec_time - exec0;
+                            metrics.compile_time += self.library.stats.build_time - build0;
+                            metrics.lib_calls += 1;
+                            let bytes = dt.byte_size() as u64;
+                            resident += bytes;
+                            *resident_peak = (*resident_peak).max(resident);
+                            self.pool.device.acquire(bytes);
+                            jdev[*value] = Some(DevSlot { dt, actual, zero_padded: true });
+                        } else {
+                            let a = replay_joint_value(
+                                &device,
+                                &mut joint,
+                                &jdev,
+                                &per,
+                                &mut metrics,
+                                a_id,
+                            )?;
+                            let bt = replay_joint_value(
+                                &device,
+                                &mut joint,
+                                &jdev,
+                                &per,
+                                &mut metrics,
+                                b_id,
+                            )?;
+                            let t =
+                                self.replay_gemm_host(prog, *key, *weight, &a, &bt, &mut metrics)?;
+                            joint[*value] = Some(Rc::new(t));
+                        }
+                    }
+                    PlannedStep::LaunchFused {
+                        idx,
+                        kernel,
+                        extents_host,
+                        extents_dev,
+                        out_actual,
+                    } => {
+                        let fl = &prog.fused[*idx];
+                        let spec = &kernel.spec;
+                        if self.opts.device_resident {
+                            self.cache.stats.hits += 1;
+                            enum Src {
+                                Owned(usize),
+                                Slot(usize),
+                                Ext(usize),
+                            }
+                            let mut owned: Vec<DeviceTensor> = Vec::new();
+                            let mut srcs: Vec<Src> =
+                                Vec::with_capacity(fl.inputs.len() + extents_dev.len());
+                            for (ii, &v) in fl.inputs.iter().enumerate() {
+                                let expected = &spec.input_dims[ii];
+                                if let Some(d) = jdev[v].as_ref() {
+                                    if &d.dt.dims == expected {
+                                        // Device-resident chaining: consume
+                                        // the producer's bucket-shaped
+                                        // buffer in place.
+                                        metrics.mem_bytes += d.dt.byte_size() as u64;
+                                        srcs.push(Src::Slot(v));
+                                        continue;
+                                    }
+                                }
+                                let t = replay_joint_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &per,
+                                    &mut metrics,
+                                    v,
+                                )?;
+                                let up = if t.dims == *expected {
+                                    device.h2d(&t)?
+                                } else {
+                                    metrics.pad_copies += 1;
+                                    let padded = pad_box(
+                                        &t,
+                                        expected,
+                                        if self.opts.pooled_buffers {
+                                            Some(&mut self.pool)
+                                        } else {
+                                            None
+                                        },
+                                    )?;
+                                    if *stacked {
+                                        metrics.batch_padding_bytes +=
+                                            (padded.byte_size() - t.byte_size()) as u64;
+                                    }
+                                    let dt = device.h2d(&padded)?;
+                                    if self.opts.pooled_buffers {
+                                        if let Data::F32(v) = padded.data {
+                                            if v.capacity() > 0 {
+                                                self.pool.free_f32(v);
+                                            }
+                                        }
+                                    }
+                                    dt
+                                };
+                                metrics.mem_bytes += up.byte_size() as u64;
+                                metrics.h2d_bytes += up.byte_size() as u64;
+                                srcs.push(Src::Owned(owned.len()));
+                                owned.push(up);
+                            }
+                            for ii in 0..extents_dev.len() {
+                                srcs.push(Src::Ext(ii));
+                            }
+                            let args: Vec<&DeviceTensor> = srcs
+                                .iter()
+                                .map(|s| match s {
+                                    Src::Owned(ii) => &owned[*ii],
+                                    Src::Slot(v) => &jdev[*v].as_ref().unwrap().dt,
+                                    Src::Ext(ii) => extents_dev[*ii].as_ref(),
+                                })
+                                .collect();
+                            let tk = Instant::now();
+                            let out = kernel
+                                .exe
+                                .run_on_device(&args, &spec.out_dims, spec.out_dtype)
+                                .with_context(|| {
+                                    format!("replaying fused kernel {} (batch)", spec.name)
+                                })?;
+                            metrics.kernel_time += tk.elapsed();
+                            metrics.mem_kernels += 1;
+                            metrics.mem_bytes += out.byte_size() as u64;
+                            drop(args);
+                            let bytes = out.byte_size() as u64;
+                            if *stacked {
+                                // The bucket-shaped output's pad lanes stay
+                                // resident (cropped only on readback):
+                                // account them like the interpret tier's
+                                // output crop does.
+                                let actual_bytes = out_actual.iter().product::<usize>()
+                                    * spec.out_dtype.byte_size();
+                                metrics.batch_padding_bytes +=
+                                    (out.byte_size() - actual_bytes) as u64;
+                            }
+                            resident += bytes;
+                            *resident_peak = (*resident_peak).max(resident);
+                            self.pool.device.acquire(bytes);
+                            jdev[fl.root] = Some(DevSlot {
+                                dt: out,
+                                actual: out_actual.clone(),
+                                zero_padded: false,
+                            });
+                        } else {
+                            let mut ins_rc: Vec<Rc<Tensor>> =
+                                Vec::with_capacity(fl.inputs.len());
+                            for &v in &fl.inputs {
+                                ins_rc.push(replay_joint_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &per,
+                                    &mut metrics,
+                                    v,
+                                )?);
+                            }
+                            let out = self.replay_fused_host(
+                                kernel,
+                                &ins_rc,
+                                extents_host,
+                                out_actual,
+                                *stacked,
+                                &mut metrics,
+                                "batch",
+                            )?;
+                            joint[fl.root] = Some(Rc::new(out));
+                        }
+                    }
+                    PlannedStep::Dealloc { value } => {
+                        if let Some(d) = jdev[*value].take() {
+                            let bytes = d.dt.byte_size() as u64;
+                            resident = resident.saturating_sub(bytes);
+                            self.pool.device.release(bytes);
+                        }
+                        joint[*value] = None;
+                        per[*value] = None;
+                    }
+                },
+                BatchPlannedStep::Member { per_extent } => {
+                    let mut results: Vec<Rc<Tensor>> = Vec::with_capacity(k);
+                    let mut out_value: Option<ValueId> = None;
+                    for i in 0..k {
+                        let step = per_extent.get(&shape.extents[i]).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "batch plan missing member record for extent {}",
+                                shape.extents[i]
+                            )
+                        })?;
+                        let t = match step {
+                            PlannedStep::EvalHost { value, out_dims } => {
+                                out_value = Some(*value);
+                                let ins = &m.instrs[*value];
+                                let mut ops: Vec<Rc<Tensor>> =
+                                    Vec::with_capacity(ins.operands.len());
+                                for &o in &ins.operands {
+                                    ops.push(replay_per_value(
+                                        &device,
+                                        &mut joint,
+                                        &jdev,
+                                        &mut per,
+                                        analysis,
+                                        offsets,
+                                        &mut metrics,
+                                        o,
+                                        i,
+                                    )?);
+                                }
+                                let refs: Vec<&Tensor> =
+                                    ops.iter().map(|t| t.as_ref()).collect();
+                                metrics.host_ops += 1;
+                                eval_op(&ins.op, &refs, out_dims, ins.ty.dtype).with_context(
+                                    || format!("host op %{value} (member {i}, replay)"),
+                                )?
+                            }
+                            PlannedStep::LaunchOp { value, out_dims } => {
+                                out_value = Some(*value);
+                                let ins = &m.instrs[*value];
+                                let mut ops: Vec<Rc<Tensor>> =
+                                    Vec::with_capacity(ins.operands.len());
+                                for &o in &ins.operands {
+                                    ops.push(replay_per_value(
+                                        &device,
+                                        &mut joint,
+                                        &jdev,
+                                        &mut per,
+                                        analysis,
+                                        offsets,
+                                        &mut metrics,
+                                        o,
+                                        i,
+                                    )?);
+                                }
+                                let refs: Vec<&Tensor> =
+                                    ops.iter().map(|t| t.as_ref()).collect();
+                                for o in &refs {
+                                    metrics.mem_bytes += o.byte_size() as u64;
+                                }
+                                let tk = Instant::now();
+                                let t = eval_op(&ins.op, &refs, out_dims, ins.ty.dtype)
+                                    .with_context(|| {
+                                        format!("singleton kernel %{value} (member {i}, replay)")
+                                    })?;
+                                metrics.kernel_time += tk.elapsed();
+                                metrics.mem_kernels += 1;
+                                metrics.mem_bytes += t.byte_size() as u64;
+                                t
+                            }
+                            PlannedStep::Bitcast { value, out_dims } => {
+                                out_value = Some(*value);
+                                let src = replay_per_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &mut per,
+                                    analysis,
+                                    offsets,
+                                    &mut metrics,
+                                    m.instrs[*value].operands[0],
+                                    i,
+                                )?;
+                                metrics.bitcasts += 1;
+                                (*src).clone().with_dims(out_dims)?
+                            }
+                            PlannedStep::LibraryCall { value, key, weight } => {
+                                out_value = Some(*value);
+                                let ins = &m.instrs[*value];
+                                let a = replay_per_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &mut per,
+                                    analysis,
+                                    offsets,
+                                    &mut metrics,
+                                    ins.operands[0],
+                                    i,
+                                )?;
+                                let bt = replay_per_value(
+                                    &device,
+                                    &mut joint,
+                                    &jdev,
+                                    &mut per,
+                                    analysis,
+                                    offsets,
+                                    &mut metrics,
+                                    ins.operands[1],
+                                    i,
+                                )?;
+                                self.replay_gemm_host(prog, *key, *weight, &a, &bt, &mut metrics)
+                                    .with_context(|| {
+                                        format!("library call %{value} (member {i}, replay)")
+                                    })?
+                            }
+                            PlannedStep::LaunchFused {
+                                idx,
+                                kernel,
+                                extents_host,
+                                out_actual,
+                                ..
+                            } => {
+                                out_value = Some(prog.fused[*idx].root);
+                                let fl = &prog.fused[*idx];
+                                let mut ins_rc: Vec<Rc<Tensor>> =
+                                    Vec::with_capacity(fl.inputs.len());
+                                for &v in &fl.inputs {
+                                    ins_rc.push(replay_per_value(
+                                        &device,
+                                        &mut joint,
+                                        &jdev,
+                                        &mut per,
+                                        analysis,
+                                        offsets,
+                                        &mut metrics,
+                                        v,
+                                        i,
+                                    )?);
+                                }
+                                self.replay_fused_host(
+                                    kernel,
+                                    &ins_rc,
+                                    extents_host,
+                                    out_actual,
+                                    false,
+                                    &mut metrics,
+                                    "member",
+                                )?
+                            }
+                            PlannedStep::Dealloc { .. } => {
+                                unreachable!("member steps produce values")
+                            }
+                        };
+                        results.push(Rc::new(t));
+                    }
+                    per[out_value.expect("batches have at least one member")] = Some(results);
+                }
+            }
+        }
+
+        // Split per-request outputs back out (reading joint device
+        // residents back exactly once).
+        let mut outputs: Vec<Vec<Tensor>> =
+            (0..k).map(|_| Vec::with_capacity(m.outputs.len())).collect();
+        for &o in &m.outputs {
+            for (i, out) in outputs.iter_mut().enumerate() {
+                let t = replay_per_value(
+                    &device,
+                    &mut joint,
+                    &jdev,
+                    &mut per,
+                    analysis,
+                    offsets,
+                    &mut metrics,
+                    o,
+                    i,
+                )
+                .with_context(|| format!("output %{o} was deallocated"))?;
+                out.push((*t).clone());
+            }
+        }
+        Ok(Some(outputs))
     }
 }
 
@@ -1024,6 +2133,14 @@ mod tests {
 
     fn executor() -> Executor {
         Executor::new(Arc::new(Device::cpu().unwrap()), ExecOptions::default())
+    }
+
+    /// Solo interpret-only reference (no plan cache, host-resident).
+    fn executor_no_plans() -> Executor {
+        Executor::new(
+            Arc::new(Device::cpu().unwrap()),
+            ExecOptions { plan_cache: false, device_resident: false, ..Default::default() },
+        )
     }
 
     fn program_of(m: Module) -> Program {
@@ -1206,6 +2323,175 @@ mod tests {
         for (r, o) in reqs.iter().zip(&out.outputs) {
             assert_eq!(&solo.run(&prog, r).unwrap().outputs, o);
         }
+    }
+
+    #[test]
+    fn repeat_batch_groups_replay_with_bit_identical_outputs() {
+        let prog = transformer_prog();
+        let mut exec = executor();
+        let mut plain = executor_no_plans();
+        let mut rng = Prng::new(31);
+        let requests: Vec<Vec<Tensor>> = [6usize, 9, 12]
+            .iter()
+            .map(|&s| crate::workloads::transformer::gen_inputs(s, &mut rng))
+            .collect();
+        let want: Vec<Vec<Tensor>> =
+            requests.iter().map(|r| plain.run(&prog, r).unwrap().outputs).collect();
+
+        let first = exec.run_batch(&prog, &requests).unwrap();
+        assert_eq!(first.metrics.batch_plan_misses, 1, "first sight of the shape records");
+        assert_eq!(first.metrics.batch_plan_hits, 0);
+        for (got, expect) in first.outputs.iter().zip(&want) {
+            assert_eq!(got, expect, "recorded dispatch diverged from solo interpret runs");
+        }
+
+        // The same group shape again, with fresh request contents.
+        let mut rng2 = Prng::new(77);
+        let requests2: Vec<Vec<Tensor>> = [6usize, 9, 12]
+            .iter()
+            .map(|&s| crate::workloads::transformer::gen_inputs(s, &mut rng2))
+            .collect();
+        let want2: Vec<Vec<Tensor>> =
+            requests2.iter().map(|r| plain.run(&prog, r).unwrap().outputs).collect();
+        let second = exec.run_batch(&prog, &requests2).unwrap();
+        assert_eq!(second.metrics.batch_plan_hits, 1, "repeat shape must replay");
+        assert_eq!(second.metrics.batch_plan_misses, 0);
+        assert_eq!(second.metrics.batched_launches, 1);
+        for (got, expect) in second.outputs.iter().zip(&want2) {
+            assert_eq!(got, expect, "replayed dispatch diverged from solo interpret runs");
+        }
+        assert!(
+            second.metrics.batch_dev_resident_bytes > 0,
+            "stacked steps must chain through device buffers on replay"
+        );
+        assert_eq!(exec.batch_analyses, 1, "the analysis is computed once, never re-derived");
+        assert_eq!(exec.batch_plan_stats.hits, 1);
+        assert_eq!(exec.batch_plan_stats.entries, 1);
+    }
+
+    #[test]
+    fn permuted_same_shape_groups_share_one_plan() {
+        // A [3, 2] arrival order must replay the plan a [2, 3] group
+        // recorded (sorted-extent key), with outputs still matched to the
+        // actual member order.
+        let prog = row_softmax_prog();
+        let mut exec = executor();
+        let mut plain = executor_no_plans();
+        let mut rng = Prng::new(41);
+        let t = |rows: usize, rng: &mut Prng| {
+            vec![Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0))]
+        };
+        let a = vec![t(2, &mut rng), t(3, &mut rng)];
+        let b = vec![t(3, &mut rng), t(2, &mut rng)];
+        let first = exec.run_batch(&prog, &a).unwrap();
+        assert_eq!(first.metrics.batch_plan_misses, 1);
+        let second = exec.run_batch(&prog, &b).unwrap();
+        assert_eq!(second.metrics.batch_plan_hits, 1, "sorted-extent key must hit");
+        assert_eq!(exec.batch_plan_stats.entries, 1, "one plan serves both orders");
+        assert_eq!(second.outputs[0][0].dims, vec![3, 8]);
+        assert_eq!(second.outputs[1][0].dims, vec![2, 8]);
+        for (r, o) in b.iter().zip(&second.outputs) {
+            assert_eq!(&plain.run(&prog, r).unwrap().outputs, o);
+        }
+    }
+
+    #[test]
+    fn batch_plans_respect_the_plan_cache_gate() {
+        let prog = row_softmax_prog();
+        let mut exec = Executor::new(
+            Arc::new(Device::cpu().unwrap()),
+            ExecOptions { plan_cache: false, ..Default::default() },
+        );
+        let mut rng = Prng::new(43);
+        let t = |rows: usize, rng: &mut Prng| {
+            vec![Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0))]
+        };
+        for _ in 0..3 {
+            let reqs = vec![t(2, &mut rng), t(2, &mut rng)];
+            let out = exec.run_batch(&prog, &reqs).unwrap();
+            assert_eq!(out.metrics.batch_plan_hits, 0);
+            assert_eq!(out.metrics.batch_plan_misses, 0);
+            assert_eq!(out.metrics.batched_launches, 1, "interpret tier still stacks");
+        }
+        assert_eq!(exec.batch_plan_stats.entries, 0);
+    }
+
+    #[test]
+    fn poisoned_batch_guard_falls_back_to_the_interpret_tier() {
+        use crate::runtime::plan::ElemGuard;
+        let prog = row_softmax_prog();
+        let mut exec = executor();
+        let mut rng = Prng::new(47);
+        let t = |rows: usize, rng: &mut Prng| {
+            vec![Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0))]
+        };
+        let reqs = vec![t(2, &mut rng), t(3, &mut rng)];
+        exec.run_batch(&prog, &reqs).unwrap();
+        assert_eq!(exec.batch_plans.len(), 1);
+
+        // Poison the recorded plan with a guard no request can satisfy —
+        // the replay gate must reject it and serve the group through the
+        // batched interpret tier, bit-exactly.
+        let (key, plan) = {
+            let (k, p) = exec.batch_plans.iter().next().unwrap();
+            (k.clone(), p.clone())
+        };
+        let mut poisoned = BatchPlan {
+            steps: plan.steps.clone(),
+            param_guards: HashMap::new(),
+            host_guards: plan.host_guards.clone(),
+            device_peak_bytes: plan.device_peak_bytes,
+        };
+        poisoned.param_guards.insert(0, vec![ElemGuard { index: 0, expect: -1 }]);
+        exec.batch_plans.insert(key, Arc::new(poisoned));
+
+        let reqs2 = vec![t(2, &mut rng), t(3, &mut rng)];
+        let out = exec.run_batch(&prog, &reqs2).unwrap();
+        assert_eq!(out.metrics.batch_plan_guard_misses, 1);
+        assert_eq!(out.metrics.batch_plan_hits, 0);
+        assert_eq!(out.metrics.batched_launches, 1, "guard miss still stacks, interpreted");
+        let mut plain = executor_no_plans();
+        for (r, o) in reqs2.iter().zip(&out.outputs) {
+            assert_eq!(&plain.run(&prog, r).unwrap().outputs, o);
+        }
+    }
+
+    #[test]
+    fn batch_plan_cache_is_bounded_fifo() {
+        let prog = row_softmax_prog();
+        let mut exec = executor();
+        exec.max_plans = 1;
+        let mut rng = Prng::new(53);
+        let t = |rows: usize, rng: &mut Prng| {
+            vec![Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0))]
+        };
+        exec.run_batch(&prog, &[t(2, &mut rng), t(2, &mut rng)]).unwrap();
+        exec.run_batch(&prog, &[t(3, &mut rng), t(3, &mut rng)]).unwrap();
+        assert_eq!(exec.batch_plan_stats.entries, 1, "FIFO bound holds");
+        assert_eq!(exec.batch_plan_stats.misses, 2);
+        // The surviving shape replays; the evicted one re-records.
+        let out = exec.run_batch(&prog, &[t(3, &mut rng), t(3, &mut rng)]).unwrap();
+        assert_eq!(out.metrics.batch_plan_hits, 1);
+        let out = exec.run_batch(&prog, &[t(2, &mut rng), t(2, &mut rng)]).unwrap();
+        assert_eq!(out.metrics.batch_plan_misses, 1);
+    }
+
+    #[test]
+    fn group_shape_checks_residual_agreement() {
+        let prog = two_sym_prog();
+        let a = analyze(&prog);
+        let m = &prog.module;
+        let t = |rows: usize, cols: usize| {
+            vec![Tensor::f32(&[rows, cols], vec![0.1; rows * cols])]
+        };
+        let ok = group_shape(m, &a, &[t(2, 5), t(3, 5)]).unwrap();
+        assert_eq!(ok.extents, vec![2, 3]);
+        assert_eq!(ok.offsets, vec![0, 2, 5]);
+        let key_a = ok.plan_key(prog.id);
+        let flipped = group_shape(m, &a, &[t(3, 5), t(2, 5)]).unwrap();
+        assert_eq!(flipped.plan_key(prog.id), key_a, "plan key sorts extents");
+        assert!(group_shape(m, &a, &[t(2, 5), t(2, 6)]).is_none(), "residual mismatch");
+        assert!(group_shape(m, &a, &[t(2, 5), vec![]]).is_none(), "unbindable member");
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!    are served from the library's persistent weight cache (uploaded once
 //!    per program, pinned by installed plans), and only program outputs
 //!    and host-op operands are copied back to the host.
+//!
+//! Batched dispatches run the same three tiers at *group* granularity —
+//! see `runtime::batching` for the stacked walk and its
+//! `BatchPlan` record/replay (`batch_plans` here mirrors `plans`, with
+//! the same FIFO bound and weight-pin discipline).
 
 use crate::codegen::{BucketPolicy, KernelCache};
 use crate::dhlo::{DType, Module, Op, ValueId};
@@ -30,8 +35,8 @@ use crate::runtime::buffers::BufferPool;
 use crate::runtime::metrics::RunMetrics;
 use crate::runtime::pjrt::{Device, DeviceTensor};
 use crate::runtime::plan::{
-    binding_vector, host_guards_hold, LaunchPlan, PlanKey, PlanRecorder, PlanStats, PlanWeight,
-    PlannedStep,
+    binding_vector, host_guards_hold, BatchPlan, BatchPlanKey, LaunchPlan, PlanKey, PlanRecorder,
+    PlanStats, PlanWeight, PlannedStep,
 };
 use crate::runtime::reference::eval_op;
 use crate::runtime::shape_env::SymEnv;
@@ -87,11 +92,12 @@ impl Default for ExecOptions {
 /// whether the pad lanes are exact zeros (GEMM results) or garbage
 /// (fused-kernel outputs) — the library's device-side GEMM path consumes
 /// zero-padded buffers in place and routes the rest through its on-device
-/// bucket adapter.
-struct DevSlot {
-    dt: DeviceTensor,
-    actual: Vec<usize>,
-    zero_padded: bool,
+/// bucket adapter. (Also the joint-lane slot of batched plan replays; see
+/// `runtime::batching`.)
+pub(crate) struct DevSlot {
+    pub(crate) dt: DeviceTensor,
+    pub(crate) actual: Vec<usize>,
+    pub(crate) zero_padded: bool,
 }
 
 /// Is this value a cacheable GEMM weight? Graph constants never change for
@@ -127,8 +133,21 @@ pub struct Executor {
     pub max_plans: usize,
     pub plan_stats: PlanStats,
     /// Cached cross-request batchability analyses, per program id (see
-    /// `runtime::batching`).
+    /// `runtime::batching`). Seeded at compile time by `DiscCompiler` and
+    /// shared across forked workers, so serving never re-derives the
+    /// Stacked/Shared/PerRequest classification.
     pub(crate) batch_info: HashMap<u64, Arc<crate::runtime::batching::BatchAnalysis>>,
+    /// How many batchability analyses THIS executor computed itself (0
+    /// when every program was seeded at compile time; tests assert repeat
+    /// dispatches never re-analyze).
+    pub batch_analyses: u64,
+    /// Recorded batched walks, keyed by group shape (residual bindings +
+    /// sorted member extents); same FIFO bound and weight-pin discipline
+    /// as the solo plan cache.
+    pub(crate) batch_plans: HashMap<BatchPlanKey, Arc<BatchPlan>>,
+    pub(crate) batch_plan_order: std::collections::VecDeque<BatchPlanKey>,
+    pub(crate) batch_plan_pins: HashMap<BatchPlanKey, Vec<WeightKey>>,
+    pub batch_plan_stats: PlanStats,
 }
 
 pub struct ExecOutput {
@@ -192,6 +211,11 @@ impl Executor {
             max_plans: 512,
             plan_stats: PlanStats::default(),
             batch_info: HashMap::new(),
+            batch_analyses: 0,
+            batch_plans: HashMap::new(),
+            batch_plan_order: std::collections::VecDeque::new(),
+            batch_plan_pins: HashMap::new(),
+            batch_plan_stats: PlanStats::default(),
         }
     }
 
@@ -206,12 +230,17 @@ impl Executor {
                 self.library.unpin_weight(&wk);
             }
         }
+        for (_, pins) in self.batch_plan_pins.drain() {
+            for wk in pins {
+                self.library.unpin_weight(&wk);
+            }
+        }
     }
 
     /// Fork a sibling worker: same device, same shared kernel/weight
-    /// stores, same options and plan-cache bound — fresh plan cache,
-    /// pools, and stats. This is how the multi-worker coordinator builds
-    /// its workers.
+    /// stores, same options, plan-cache bound, and (compile-time-seeded)
+    /// batchability analyses — fresh plan caches, pools, and stats. This
+    /// is how the multi-worker coordinator builds its workers.
     pub fn fork(&self) -> Executor {
         let mut e = Self::with_shared(
             self.device.clone(),
@@ -220,7 +249,19 @@ impl Executor {
             self.library.weight_store().clone(),
         );
         e.max_plans = self.max_plans;
+        e.batch_info = self.batch_info.clone();
         e
+    }
+
+    /// Install a precomputed batchability analysis for a program (computed
+    /// once at compile time by `DiscCompiler` and shared, via `fork`, by
+    /// every worker serving the model).
+    pub fn seed_batch_analysis(
+        &mut self,
+        program: u64,
+        analysis: Arc<crate::runtime::batching::BatchAnalysis>,
+    ) {
+        self.batch_info.insert(program, analysis);
     }
 
     /// Component-stat snapshot taken at the start of a run, so the
@@ -345,16 +386,12 @@ impl Executor {
 
     /// Pin every cached-weight reference in a freshly installed plan;
     /// returns the keys whose pin actually took (eviction releases exactly
-    /// these — see `plan_pins`).
+    /// these — see `plan_pins`). One rule per step, shared with the batch
+    /// plan installer (`Self::pin_step_weight` in `runtime::batching`).
     fn pin_plan_weights(&mut self, program: u64, plan: &LaunchPlan) -> Vec<WeightKey> {
         let mut pinned = Vec::new();
         for step in &plan.steps {
-            if let PlannedStep::LibraryCall { weight: Some(w), .. } = step {
-                let key = WeightKey { program, value: w.value };
-                if self.library.pin_weight(&key) {
-                    pinned.push(key);
-                }
-            }
+            Self::pin_step_weight(&mut self.library, program, step, &mut pinned);
         }
         pinned
     }

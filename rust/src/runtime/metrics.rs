@@ -80,6 +80,17 @@ pub struct RunMetrics {
     /// Bytes memcpy'd assembling stacked inputs and splitting per-request
     /// views inside batched dispatches (concat + slice traffic).
     pub batch_stack_bytes: u64,
+    /// Batch plan-cache events, folded like the solo plan stats: a hit
+    /// replays a recorded stacked walk (no per-step symbol resolution,
+    /// no cache hashing, no batching re-analysis); a miss records one; a
+    /// guard miss found a stale shape assumption and fell the group back
+    /// to the batched interpret tier.
+    pub batch_plan_hits: u64,
+    pub batch_plan_misses: u64,
+    pub batch_plan_guard_misses: u64,
+    /// Peak bytes held in device-resident joint buffers during batched
+    /// plan replays (a gauge, like `device_resident_bytes`).
+    pub batch_dev_resident_bytes: u64,
 }
 
 impl RunMetrics {
@@ -131,6 +142,11 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.batched_launches += o.batched_launches;
         self.batch_padding_bytes += o.batch_padding_bytes;
         self.batch_stack_bytes += o.batch_stack_bytes;
+        self.batch_plan_hits += o.batch_plan_hits;
+        self.batch_plan_misses += o.batch_plan_misses;
+        self.batch_plan_guard_misses += o.batch_plan_guard_misses;
+        self.batch_dev_resident_bytes =
+            self.batch_dev_resident_bytes.max(o.batch_dev_resident_bytes);
     }
 }
 
@@ -186,6 +202,7 @@ mod tests {
         a += &b;
         assert_eq!(a.plan_hits, 3);
         assert_eq!(a.compile_dedup_hits, 0);
+        assert_eq!(a.batch_plan_hits, 0);
         assert_eq!(a.plan_misses, 1);
         assert_eq!(a.plan_guard_misses, 1);
         assert_eq!(a.h2d_bytes, 150);
@@ -194,5 +211,26 @@ mod tests {
         assert_eq!(a.weight_cache_hits, 5);
         assert_eq!(a.weight_cache_misses, 1);
         assert_eq!(a.weight_resident_bytes, 1000, "weight residency is a gauge");
+    }
+
+    #[test]
+    fn batch_plan_accumulation() {
+        let mut a = RunMetrics {
+            batch_plan_hits: 1,
+            batch_plan_misses: 1,
+            batch_dev_resident_bytes: 700,
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            batch_plan_hits: 2,
+            batch_plan_guard_misses: 1,
+            batch_dev_resident_bytes: 500,
+            ..Default::default()
+        };
+        a += &b;
+        assert_eq!(a.batch_plan_hits, 3);
+        assert_eq!(a.batch_plan_misses, 1);
+        assert_eq!(a.batch_plan_guard_misses, 1);
+        assert_eq!(a.batch_dev_resident_bytes, 700, "batch residency is a gauge");
     }
 }

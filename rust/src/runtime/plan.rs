@@ -23,6 +23,18 @@
 //! * **Data-dependent suffix** — an `Op::Unique` produces an extent no
 //!   plan can predict, so recording stops there: the plan covers the step
 //!   prefix and replays hand off to the interpreter from `suffix_start`.
+//!
+//! **Batched dispatches** plan the same way at group granularity: a
+//! [`BatchPlan`], keyed by [`BatchPlanKey`] (residual bindings + the
+//! *sorted* member extents, so repeat same-shape groups hit regardless of
+//! arrival order), records the whole stacked walk — one widened
+//! [`PlannedStep`] per Stacked/Shared step, and a per-extent sub-record
+//! per PerRequest step (the residual agrees across members, so a member's
+//! leading extent determines every dim it resolves). Batch-eligible
+//! programs contain no `Unique` and no content-reading shape math (the
+//! batchability analysis rejects both), so batch plans always cover the
+//! full flow; the guard machinery is reused unchanged and is empty in
+//! practice.
 
 use crate::codegen::cache::CompiledKernel;
 use crate::dhlo::{Module, Op, ValueId};
@@ -72,6 +84,7 @@ pub struct PlanWeight {
 
 /// One resolved step of the flow. Mirrors `program::Step`, with everything
 /// the hot path would otherwise recompute baked in.
+#[derive(Clone)]
 pub enum PlannedStep {
     EvalHost { value: ValueId, out_dims: Vec<usize> },
     Bitcast { value: ValueId, out_dims: Vec<usize> },
@@ -109,15 +122,22 @@ pub struct LaunchPlan {
     pub device_peak_bytes: u64,
 }
 
+/// Check a parameter-guard map against one request's inputs. `true` means
+/// the recorded flow is valid for that request (shared by the solo and
+/// batched plans).
+fn param_guards_hold_for(guards: &HashMap<usize, Vec<ElemGuard>>, inputs: &[Tensor]) -> bool {
+    guards.iter().all(|(&param, guards)| {
+        let Some(t) = inputs.get(param) else { return false };
+        let Ok(v) = t.as_i64() else { return false };
+        guards.iter().all(|g| v.get(g.index) == Some(&g.expect))
+    })
+}
+
 impl LaunchPlan {
     /// Check the parameter guards against a request's inputs. `true` means
     /// the recorded flow is valid for this request.
     pub fn param_guards_hold(&self, inputs: &[Tensor]) -> bool {
-        self.param_guards.iter().all(|(&param, guards)| {
-            let Some(t) = inputs.get(param) else { return false };
-            let Ok(v) = t.as_i64() else { return false };
-            guards.iter().all(|g| v.get(g.index) == Some(&g.expect))
-        })
+        param_guards_hold_for(&self.param_guards, inputs)
     }
 }
 
@@ -125,6 +145,41 @@ impl LaunchPlan {
 pub fn host_guards_hold(guards: &[ElemGuard], t: &Tensor) -> bool {
     let Ok(v) = t.as_i64() else { return false };
     guards.iter().all(|g| v.get(g.index) == Some(&g.expect))
+}
+
+/// Classify a recorded shape-read log into parameter guards (checked
+/// against request inputs before replay) and host-op guards (checked as
+/// the producing op replays). Constants need no guard — they cannot change
+/// for a given program. Shared by the solo and batched plan recorders.
+fn classify_elem_log(
+    m: &Module,
+    elem_log: &[(usize, usize, i64)],
+) -> (HashMap<usize, Vec<ElemGuard>>, HashMap<ValueId, Vec<ElemGuard>>) {
+    let mut param_guards: HashMap<usize, Vec<ElemGuard>> = HashMap::new();
+    let mut host_guards: HashMap<ValueId, Vec<ElemGuard>> = HashMap::new();
+    let mut seen: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    for &(value, index, expect) in elem_log {
+        if !seen.insert((value, index)) {
+            continue;
+        }
+        match &m.instrs[value].op {
+            // Constants never change between requests: nothing to guard.
+            Op::Const { .. } => {}
+            // Parameter contents vary per request even at fixed shapes:
+            // check against the inputs before replaying.
+            Op::Param { index: p } => {
+                param_guards.entry(*p).or_default().push(ElemGuard { index, expect });
+            }
+            // Host-op product: re-checked right after that op replays.
+            // (Reads that only happen in the interpreted suffix leave a
+            // guard that is never consulted — harmless, the suffix
+            // re-resolves from scratch.)
+            _ => {
+                host_guards.entry(value).or_default().push(ElemGuard { index, expect });
+            }
+        }
+    }
+    (param_guards, host_guards)
 }
 
 /// Plan-cache statistics (executor-lifetime).
@@ -227,30 +282,7 @@ impl PlanRecorder {
         }
         let stashed = self.elem_log.clone();
         let elem_log: &[(usize, usize, i64)] = stashed.as_deref().unwrap_or(elem_log);
-        let mut param_guards: HashMap<usize, Vec<ElemGuard>> = HashMap::new();
-        let mut host_guards: HashMap<ValueId, Vec<ElemGuard>> = HashMap::new();
-        let mut seen: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
-        for &(value, index, expect) in elem_log {
-            if !seen.insert((value, index)) {
-                continue;
-            }
-            match &m.instrs[value].op {
-                // Constants never change between requests: nothing to guard.
-                Op::Const { .. } => {}
-                // Parameter contents vary per request even at fixed shapes:
-                // check against the inputs before replaying.
-                Op::Param { index: p } => {
-                    param_guards.entry(*p).or_default().push(ElemGuard { index, expect });
-                }
-                // Host-op product: re-checked right after that op replays.
-                // (Reads that only happen in the interpreted suffix leave a
-                // guard that is never consulted — harmless, the suffix
-                // re-resolves from scratch.)
-                _ => {
-                    host_guards.entry(value).or_default().push(ElemGuard { index, expect });
-                }
-            }
-        }
+        let (param_guards, host_guards) = classify_elem_log(m, elem_log);
         Some(LaunchPlan {
             steps: self.steps,
             suffix_start,
@@ -262,6 +294,138 @@ impl PlanRecorder {
 }
 
 impl Default for PlanRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// --- batched plan record/replay -----------------------------------------
+
+/// Cache key for a whole batch group: which program, under which residual
+/// bindings (everything except the leading batch symbol — shared by every
+/// member), stacking which member extents. The extents are **sorted**: the
+/// stacked walk is order-independent (the widened launches see only the
+/// total, and per-member sub-records key on the member's own extent), so a
+/// group arriving as `[3, 2]` replays the plan a `[2, 3]` group recorded.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchPlanKey {
+    pub program: u64,
+    pub residual: Vec<(SymId, i64)>,
+    pub extents: Vec<i64>,
+}
+
+/// One planned step of a batched walk.
+#[derive(Clone)]
+pub enum BatchPlannedStep {
+    /// Executed once over the joint value store: the widened record of a
+    /// Stacked step, or the once-per-batch record of a Shared step.
+    Joint {
+        step: PlannedStep,
+        /// Stacked (widened-extent launch, pad-lane traffic accounted as
+        /// batch padding) vs Shared (constant-derived, no batch axis).
+        stacked: bool,
+    },
+    /// Executed once per member. Records are keyed by the member's leading
+    /// extent: residual bindings agree across the group by construction,
+    /// so the extent determines every dim the member resolves (the
+    /// batchability analysis rejects content-dependent shape math).
+    Member { per_extent: HashMap<i64, PlannedStep> },
+}
+
+/// A cached, fully resolved stacked walk for one [`BatchPlanKey`]. Batch
+/// plans always cover the whole flow — `Unique` programs are batching-
+/// ineligible, so there is no data-dependent suffix to cut.
+pub struct BatchPlan {
+    pub steps: Vec<BatchPlannedStep>,
+    /// Guards over entry-parameter shape tensors, checked against every
+    /// member before replay (same machinery as [`LaunchPlan`]; empty for
+    /// batch-eligible programs, which have no content-read shape math).
+    pub param_guards: HashMap<usize, Vec<ElemGuard>>,
+    /// Guards over joint host-op products, checked as the producing op
+    /// replays.
+    pub host_guards: HashMap<ValueId, Vec<ElemGuard>>,
+    /// Peak bytes of device-resident joint values implied by the plan's
+    /// `Dealloc` placement; reserved in the buffer arena on install.
+    pub device_peak_bytes: u64,
+}
+
+impl BatchPlan {
+    /// Check the parameter guards against every member's inputs. `true`
+    /// means the recorded walk is valid for this group.
+    pub fn param_guards_hold(&self, requests: &[Vec<Tensor>]) -> bool {
+        requests.iter().all(|inputs| param_guards_hold_for(&self.param_guards, inputs))
+    }
+}
+
+/// Accumulates a [`BatchPlan`] while the batched interpret tier executes a
+/// group. Joint steps land via [`push_joint`](Self::push_joint) as the
+/// stacked walk records them; per-member steps collect one sub-record per
+/// distinct extent and land via [`push_member`](Self::push_member). The
+/// device-residency model mirrors [`PlanRecorder`]'s, over the joint lane
+/// only (member sub-records replay host-side).
+pub struct BatchPlanRecorder {
+    steps: Vec<BatchPlannedStep>,
+    dev_live: HashMap<ValueId, u64>,
+    dev_resident: u64,
+    dev_peak: u64,
+    /// Shape reads the batched environment logged during the walk (empty
+    /// for eligible programs; stashed by the executor before `finish`).
+    elem_log: Vec<(usize, usize, i64)>,
+}
+
+impl BatchPlanRecorder {
+    pub fn new() -> BatchPlanRecorder {
+        BatchPlanRecorder {
+            steps: Vec::new(),
+            dev_live: HashMap::new(),
+            dev_resident: 0,
+            dev_peak: 0,
+            elem_log: Vec::new(),
+        }
+    }
+
+    /// Hand over the batched environment's shape-read log (consumed by
+    /// [`finish`](Self::finish)).
+    pub fn stash_elem_log(&mut self, log: Vec<(usize, usize, i64)>) {
+        self.elem_log = log;
+    }
+
+    pub fn push_joint(&mut self, step: PlannedStep, stacked: bool) {
+        self.steps.push(BatchPlannedStep::Joint { step, stacked });
+    }
+
+    pub fn push_member(&mut self, per_extent: HashMap<i64, PlannedStep>) {
+        self.steps.push(BatchPlannedStep::Member { per_extent });
+    }
+
+    /// A joint step whose replay output is device-resident (`bytes` at
+    /// bucket extents).
+    pub fn note_device_out(&mut self, value: ValueId, bytes: u64) {
+        self.dev_live.insert(value, bytes);
+        self.dev_resident += bytes;
+        self.dev_peak = self.dev_peak.max(self.dev_resident);
+    }
+
+    pub fn note_dealloc(&mut self, value: ValueId) {
+        if let Some(bytes) = self.dev_live.remove(&value) {
+            self.dev_resident -= bytes;
+        }
+    }
+
+    /// Finalize against the stashed shape-read log (empty for eligible
+    /// programs; classified by the same rules as solo plans).
+    pub fn finish(self, m: &Module) -> BatchPlan {
+        let (param_guards, host_guards) = classify_elem_log(m, &self.elem_log);
+        BatchPlan {
+            steps: self.steps,
+            param_guards,
+            host_guards,
+            device_peak_bytes: self.dev_peak,
+        }
+    }
+}
+
+impl Default for BatchPlanRecorder {
     fn default() -> Self {
         Self::new()
     }
@@ -291,6 +455,44 @@ mod tests {
         r.note_device_out(5, 1000);
         assert_eq!(r.steps.len(), 1, "steps after the suffix mark are not recorded");
         assert_eq!(r.dev_peak, 0);
+    }
+
+    #[test]
+    fn batch_recorder_tracks_joint_device_peak() {
+        let mut r = BatchPlanRecorder::new();
+        r.push_joint(PlannedStep::Dealloc { value: 9 }, false);
+        r.note_device_out(0, 100);
+        r.note_device_out(1, 50);
+        r.note_dealloc(0);
+        r.note_device_out(2, 60);
+        assert_eq!(r.dev_peak, 150);
+        assert_eq!(r.dev_resident, 110);
+        r.push_member(HashMap::new());
+        assert_eq!(r.steps.len(), 2);
+    }
+
+    #[test]
+    fn batch_plan_key_distinguishes_extent_multisets() {
+        let k = |extents: Vec<i64>| BatchPlanKey { program: 7, residual: vec![], extents };
+        assert_eq!(k(vec![2, 3]), k(vec![2, 3]));
+        assert_ne!(k(vec![2, 3]), k(vec![2, 2]));
+        assert_ne!(k(vec![2, 3]), k(vec![2, 3, 3]));
+    }
+
+    #[test]
+    fn batch_param_guards_check_every_member() {
+        let mut param_guards: HashMap<usize, Vec<ElemGuard>> = HashMap::new();
+        param_guards.insert(0, vec![ElemGuard { index: 0, expect: 4 }]);
+        let plan = BatchPlan {
+            steps: Vec::new(),
+            param_guards,
+            host_guards: HashMap::new(),
+            device_peak_bytes: 0,
+        };
+        let good = vec![vec![Tensor::i64(&[1], vec![4])], vec![Tensor::i64(&[1], vec![4])]];
+        let bad = vec![vec![Tensor::i64(&[1], vec![4])], vec![Tensor::i64(&[1], vec![5])]];
+        assert!(plan.param_guards_hold(&good));
+        assert!(!plan.param_guards_hold(&bad));
     }
 
     #[test]

@@ -679,3 +679,116 @@ fn batching_edge_cases_fall_back_to_solo() {
     assert_eq!(report4.batch_launches, 3, "eager backend dispatches solo");
     assert_eq!(report4.batched_requests, 0);
 }
+
+#[test]
+fn batched_plan_replay_bit_matches_solo_interpret_on_transformer_and_bert() {
+    // The batched-plan acceptance gate: repeat same-shape groups must
+    // replay a recorded batch plan (one record, then hits; zero
+    // re-analysis) with per-request outputs bit-identical to solo
+    // interpret runs of the same requests.
+    for name in ["transformer", "bert"] {
+        let w = disc::workloads::by_name(name).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler
+            .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Disc))
+            .unwrap();
+        // Solo interpret reference: no plan caches, host-resident.
+        let mut ref_opts = CompileOptions::mode(Mode::Disc);
+        ref_opts.plan_cache = false;
+        ref_opts.device_resident = false;
+        let mut reference =
+            compiler.compile(disc::bridge::lower(&w.graph).unwrap(), &ref_opts).unwrap();
+
+        let mut rng = Prng::new(67);
+        let lens = [6usize, 9, 12];
+        for round in 0..3 {
+            // Same group shape every round, fresh request contents.
+            let group: Vec<Vec<Tensor>> = lens.iter().map(|&s| (w.gen)(s, &mut rng)).collect();
+            let out = model.run_batch(&group).unwrap();
+            assert_eq!(out.metrics.batched_launches, 1, "{name}: group must stack");
+            if round == 0 {
+                assert_eq!(out.metrics.batch_plan_misses, 1, "{name}: first dispatch records");
+                assert_eq!(out.metrics.batch_plan_hits, 0);
+            } else {
+                assert_eq!(
+                    out.metrics.batch_plan_hits, 1,
+                    "{name}: repeat shape must replay (round {round})"
+                );
+                assert_eq!(out.metrics.batch_plan_misses, 0);
+            }
+            for (r, got) in group.iter().zip(&out.outputs) {
+                let want = reference.run(r).unwrap().outputs;
+                assert_eq!(
+                    got, &want,
+                    "{name}: batched outputs diverged from solo interpret (round {round})"
+                );
+            }
+        }
+        let stats = model.batch_plan_stats().unwrap();
+        assert_eq!(stats.misses, 1, "{name}: exactly one record");
+        assert_eq!(stats.hits, 2, "{name}: every repeat replayed");
+        assert_eq!(stats.entries, 1);
+
+        // A permuted arrival order of the same shapes still replays (the
+        // key sorts member extents) and keeps outputs member-aligned.
+        let group: Vec<Vec<Tensor>> =
+            [12usize, 6, 9].iter().map(|&s| (w.gen)(s, &mut rng)).collect();
+        let out = model.run_batch(&group).unwrap();
+        assert_eq!(out.metrics.batch_plan_hits, 1, "{name}: permuted group must hit");
+        for (r, got) in group.iter().zip(&out.outputs) {
+            assert_eq!(got, &reference.run(r).unwrap().outputs, "{name}: permuted diverged");
+        }
+    }
+}
+
+#[test]
+fn bursty_batched_serving_replays_group_plans() {
+    // Open-loop flood of a repeating length pattern: once the first group
+    // of a shape records its plan, group-key-aware assembly steers later
+    // bursts back to that shape and the executor replays it. Formation
+    // depends on queue depth at dispatch time, so retry a few times
+    // before declaring a regression; outputs must bit-match an unbatched
+    // reference in every attempt.
+    use disc::coordinator::{serve_open_loop, ServeOptions};
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let compiler = DiscCompiler::new().unwrap();
+    let lens = [6usize, 9, 12];
+    let mut rng = Prng::new(71);
+    let stream: Vec<Vec<Tensor>> =
+        (0..24).map(|i| (w.gen)(lens[i % lens.len()], &mut rng)).collect();
+
+    let mut reference = compiler
+        .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Disc))
+        .unwrap();
+    let want: Vec<Vec<Tensor>> =
+        stream.iter().map(|r| reference.run(r).unwrap().outputs).collect();
+
+    let mut replayed = false;
+    for attempt in 0..3 {
+        let mut model = compiler
+            .compile(disc::bridge::lower(&w.graph).unwrap(), &CompileOptions::mode(Mode::Disc))
+            .unwrap();
+        let report = serve_open_loop(
+            &mut model,
+            stream.clone(),
+            &ServeOptions::rate(1_000_000.0)
+                .bursty(stream.len())
+                .batch(lens.len())
+                .batch_window_us(200)
+                .keep_outputs(),
+        )
+        .unwrap();
+        assert_eq!(report.completed, stream.len());
+        for (id, got) in &report.outputs {
+            assert_eq!(
+                got, &want[*id as usize],
+                "request {id} diverged under batched serving (attempt {attempt})"
+            );
+        }
+        if report.metrics.batch_plan_hits > 0 {
+            replayed = true;
+            break;
+        }
+    }
+    assert!(replayed, "repeat same-shape bursts never replayed a batch plan in 3 attempts");
+}
