@@ -71,12 +71,17 @@ USAGE:
   disc run      --workload <name> [--mode disc] [--requests 50] [--seed 1]
                 [--open-rate <rps>] [--workers N] [--burst B] [--warm]
                 [--batch K] [--batch-window-us U]
+                [--deadline-ms D] [--faults <spec>]
                 (--workers >1 serves the open-loop stream from N executor
                  threads sharing one kernel/weight store; --burst switches
                  to on/off arrivals; --warm precompiles neighbor buckets in
                  the background; --batch >1 coalesces queued same-group
                  requests into one stacked launch, waiting up to U us for
-                 stragglers once the queue runs dry)
+                 stragglers once the queue runs dry; --deadline-ms sheds
+                 requests still queued D ms after arrival; --faults arms a
+                 fault-injection schedule for the worker-panic seam, e.g.
+                 \"seed=7,panic=100:2\" — device seams read DISC_FAULTS,
+                 see docs/runtime.md)
   disc inspect  --workload <name> | --file <graph.json>
   disc import   --file <graph.json> [--mode disc] [--requests N]
   disc list     (show available workloads)

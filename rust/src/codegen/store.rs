@@ -29,6 +29,7 @@
 //! waits on the first caller's in-flight slot rather than compiling again
 //! (`StoreStats::dedup_hits` counts these joins).
 
+use crate::runtime::faults::FaultSite;
 use crate::runtime::pjrt::{Device, Executable};
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
@@ -36,9 +37,17 @@ use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock, recovering from poisoning: the store is process-shared, so a
+/// panicking worker (or an injected chaos panic) must not cascade into
+/// every other worker's kernel lookups. The protected state is a plain
+/// map of slots — always consistent at mutation granularity.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Store key: a shape-agnostic kernel identity (pattern signature,
 /// namespaced by producer — `fused:`, `lib:gemm`, `lib:prep`) plus the
@@ -73,14 +82,14 @@ impl Flight {
     }
 
     fn finish(&self, r: std::result::Result<Arc<Executable>, String>) {
-        *self.state.lock().expect("flight lock") = FlightState::Done(r);
+        *relock(&self.state) = FlightState::Done(r);
         self.cv.notify_all();
     }
 
     fn wait(&self) -> Result<Arc<Executable>> {
-        let mut st = self.state.lock().expect("flight lock");
+        let mut st = relock(&self.state);
         while matches!(*st, FlightState::Pending) {
-            st = self.cv.wait(st).expect("flight wait");
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         match &*st {
             FlightState::Done(Ok(e)) => Ok(e.clone()),
@@ -150,6 +159,42 @@ struct Job {
     flight: Arc<Flight>,
 }
 
+/// Drop guard armed around one compile job. If anything between "job
+/// dequeued" and "flight resolved" panics, the guard removes the in-flight
+/// slot and fails the flight — so every waiter gets an error and a later
+/// lookup retries. Without it, a mid-compile panic would wedge
+/// `FlightState::Pending` forever and deadlock all joiners.
+struct FlightGuard {
+    shards: Arc<Vec<Shard>>,
+    key: StoreKey,
+    flight: Arc<Flight>,
+    armed: bool,
+}
+
+impl FlightGuard {
+    fn new(shards: &Arc<Vec<Shard>>, job: &Job) -> FlightGuard {
+        FlightGuard {
+            shards: shards.clone(),
+            key: job.key.clone(),
+            flight: job.flight.clone(),
+            armed: true,
+        }
+    }
+
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for FlightGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            relock(&self.shards[shard_of(&self.key)]).remove(&self.key);
+            self.flight.finish(Err("compile worker panicked mid-compile".into()));
+        }
+    }
+}
+
 /// The background compile service: a bounded set of threads draining one
 /// job queue, compiling HLO on the shared device and publishing results
 /// into the store's shards.
@@ -172,32 +217,45 @@ impl CompilePool {
                     .name(format!("disc-compile-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().expect("compile queue lock");
+                            let guard = relock(&rx);
                             guard.recv()
                         };
                         let Ok(job) = job else { return };
-                        let result = device.compile_hlo_text_named(&job.name, &job.hlo);
+                        // The guard keeps a panicking compile from wedging
+                        // the flight; catch_unwind keeps the pool thread
+                        // alive to serve the next job.
+                        let panic_guard = FlightGuard::new(&shards, &job);
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            if let Some(f) = device.faults() {
+                                if f.should_fail(FaultSite::CompilePanic) {
+                                    panic!("injected compile-panic fault");
+                                }
+                            }
+                            device.compile_hlo_text_named(&job.name, &job.hlo)
+                        }));
                         let shard = &shards[shard_of(&job.key)];
                         match result {
-                            Ok(exe) => {
+                            Ok(Ok(exe)) => {
                                 stats.compile_ns.fetch_add(
                                     exe.compile_time.as_nanos() as u64,
                                     Ordering::Relaxed,
                                 );
                                 let exe = Arc::new(exe);
-                                shard
-                                    .lock()
-                                    .expect("kernel shard lock")
-                                    .insert(job.key.clone(), Slot::Ready(exe.clone()));
+                                relock(shard).insert(job.key.clone(), Slot::Ready(exe.clone()));
                                 job.flight.finish(Ok(exe));
+                                panic_guard.disarm();
                             }
-                            Err(e) => {
+                            Ok(Err(e)) => {
                                 // Drop the in-flight slot so a later lookup
                                 // may retry; every current waiter sees the
                                 // error.
-                                shard.lock().expect("kernel shard lock").remove(&job.key);
+                                relock(shard).remove(&job.key);
                                 job.flight.finish(Err(format!("{e:#}")));
+                                panic_guard.disarm();
                             }
+                            // Panicked: FlightGuard::drop fails the flight
+                            // and clears the slot.
+                            Err(_) => drop(panic_guard),
                         }
                     })
                     .expect("spawning compile thread")
@@ -252,7 +310,7 @@ impl KernelStore {
 
     /// Enqueue a job on the compile pool, spawning it on first use.
     fn submit(&self, job: Job) {
-        let mut pool = self.pool.lock().expect("compile pool lock");
+        let mut pool = relock(&self.pool);
         let pool = pool.get_or_insert_with(|| {
             CompilePool::spawn(self.device.clone(), self.shards.clone(), self.stats.clone())
         });
@@ -268,7 +326,7 @@ impl KernelStore {
     /// Resolve an in-flight slot with an error and remove it so later
     /// lookups can retry.
     fn fail_inflight(&self, key: &StoreKey, flight: &Arc<Flight>, msg: String) {
-        self.shards[shard_of(key)].lock().expect("kernel shard lock").remove(key);
+        relock(&self.shards[shard_of(key)]).remove(key);
         flight.finish(Err(msg));
     }
 
@@ -291,7 +349,7 @@ impl KernelStore {
         let flight;
         let joined;
         {
-            let mut map = self.shards[shard_of(&key)].lock().expect("kernel shard lock");
+            let mut map = relock(&self.shards[shard_of(&key)]);
             match map.get(&key) {
                 Some(Slot::Ready(e)) => {
                     self.stats.hits.fetch_add(1, Ordering::Relaxed);
@@ -336,7 +394,7 @@ impl KernelStore {
     {
         let key: StoreKey = (sig.to_string(), extents.to_vec());
         let flight = {
-            let mut map = self.shards[shard_of(&key)].lock().expect("kernel shard lock");
+            let mut map = relock(&self.shards[shard_of(&key)]);
             if map.contains_key(&key) {
                 return;
             }
@@ -355,10 +413,7 @@ impl KernelStore {
     /// serving bench to verify warms landed.
     pub fn is_ready(&self, sig: &str, extents: &[usize]) -> bool {
         let key: StoreKey = (sig.to_string(), extents.to_vec());
-        matches!(
-            self.shards[shard_of(&key)].lock().expect("kernel shard lock").get(&key),
-            Some(Slot::Ready(_))
-        )
+        matches!(relock(&self.shards[shard_of(&key)]).get(&key), Some(Slot::Ready(_)))
     }
 
     /// Block until no lookup would stall: every in-flight compile (demand
@@ -368,8 +423,7 @@ impl KernelStore {
             .shards
             .iter()
             .flat_map(|s| {
-                s.lock()
-                    .expect("kernel shard lock")
+                relock(s)
                     .values()
                     .filter_map(|slot| match slot {
                         Slot::InFlight(f) => Some(f.clone()),
@@ -384,11 +438,7 @@ impl KernelStore {
     }
 
     pub fn snapshot(&self) -> StoreSnapshot {
-        let entries = self
-            .shards
-            .iter()
-            .map(|s| s.lock().expect("kernel shard lock").len())
-            .sum();
+        let entries = self.shards.iter().map(|s| relock(s).len()).sum();
         StoreSnapshot {
             hits: self.stats.hits.load(Ordering::Relaxed),
             misses: self.stats.misses.load(Ordering::Relaxed),
@@ -479,6 +529,69 @@ mod tests {
         // A second prefetch of a resident key is a no-op.
         s.prefetch("t:warm", &[16], || panic!("resident key must not re-emit"));
         assert_eq!(s.snapshot().prefetches, 1);
+    }
+
+    #[test]
+    fn failed_flight_broadcasts_to_all_waiters_then_retry_succeeds() {
+        use crate::runtime::faults::FaultPlan;
+        // A device that fails exactly the first compile it is asked for:
+        // whichever racer owns the flight, every joiner must see the error.
+        const M: usize = 4;
+        let plan = Arc::new(FaultPlan::parse("seed=2,compile=1000:1").unwrap());
+        let s = Arc::new(KernelStore::new(Arc::new(
+            Device::cpu_with_faults(Some(plan.clone())).unwrap(),
+        )));
+        let barrier = Arc::new(Barrier::new(M));
+        let handles: Vec<_> = (0..M)
+            .map(|_| {
+                let s = s.clone();
+                let b = barrier.clone();
+                std::thread::spawn(move || {
+                    b.wait();
+                    s.get_or_compile("t:flaky", &[4], || Ok(("k".into(), HLO.into())))
+                        .map(|_| ())
+                        .map_err(|e| format!("{e:#}"))
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let errs = results.iter().filter(|r| r.is_err()).count();
+        assert!(errs >= 1, "the owner must see the injected failure");
+        for r in results.iter().filter(|r| r.is_err()) {
+            let msg = r.as_ref().unwrap_err();
+            assert!(msg.contains("injected compile fault"), "{msg}");
+        }
+        // Losers that arrived after the failed slot was dropped may have
+        // won a fresh (successful) compile; either way the key must now be
+        // compilable — the failed slot never pins the store.
+        let _ = s
+            .get_or_compile("t:flaky", &[4], || Ok(("k".into(), HLO.into())))
+            .unwrap();
+        assert!(s.is_ready("t:flaky", &[4]));
+        assert_eq!(plan.fired(crate::runtime::faults::FaultSite::Compile), 1);
+    }
+
+    #[test]
+    fn mid_compile_panic_cannot_wedge_pending() {
+        use crate::runtime::faults::{FaultPlan, FaultSite};
+        let plan = Arc::new(FaultPlan::parse("seed=3,compile-panic=1000:1").unwrap());
+        let s = Arc::new(KernelStore::new(Arc::new(
+            Device::cpu_with_faults(Some(plan.clone())).unwrap(),
+        )));
+        // The pool thread panics mid-compile: the drop guard must fail the
+        // flight (not leave it Pending) and clear the slot.
+        let err = s
+            .get_or_compile("t:boom", &[4], || Ok(("k".into(), HLO.into())))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("panicked mid-compile"), "{err:#}");
+        assert!(!s.is_ready("t:boom", &[4]));
+        assert_eq!(plan.fired(FaultSite::CompilePanic), 1);
+        // The pool survives the panic and the retry compiles clean.
+        let (_, f) = s
+            .get_or_compile("t:boom", &[4], || Ok(("k".into(), HLO.into())))
+            .unwrap();
+        assert!(f.compiled);
+        assert!(s.is_ready("t:boom", &[4]));
     }
 
     #[test]

@@ -193,6 +193,17 @@ impl CompiledModel {
             ),
         }
     }
+
+    /// Replace a program backend's executor with a freshly forked sibling
+    /// (shared stores, fresh per-worker caches) after a panic unwound
+    /// through a dispatch and left its state suspect. Baseline backends
+    /// keep their engine — they hold no launch state across requests.
+    pub fn restart_worker(&mut self) {
+        if let Backend::Program { exec, .. } = &mut self.backend {
+            let fresh = exec.fork();
+            *exec = fresh;
+        }
+    }
 }
 
 /// The compiler itself: owns the device handle **and the process-wide
@@ -211,6 +222,14 @@ pub struct DiscCompiler {
 impl DiscCompiler {
     pub fn new() -> Result<Self> {
         Ok(Self::with_device(Arc::new(Device::cpu()?)))
+    }
+
+    /// A compiler whose device injects from an explicit fault schedule
+    /// (chaos tests; `new()` reads `DISC_FAULTS` via `Device::cpu`).
+    pub fn with_faults(
+        faults: Option<Arc<crate::runtime::faults::FaultPlan>>,
+    ) -> Result<Self> {
+        Ok(Self::with_device(Arc::new(Device::cpu_with_faults(faults)?)))
     }
 
     pub fn with_device(device: Arc<Device>) -> Self {

@@ -48,16 +48,29 @@
 //! additionally captures every request's outputs (by request id), which
 //! the batching correctness gates compare bit-for-bit against unbatched
 //! runs.
+//!
+//! **Failure model** (see docs/runtime.md §Failure model): every request
+//! offered to [`serve_open_loop`] is accounted exactly once — completed,
+//! shed (`RunMetrics::shed_requests`: queue full at admission, or requeue
+//! budget exhausted), or deadline-missed (`RunMetrics::deadline_misses`) —
+//! and the coordinator `ensure!`s the balance. Worker dispatches run under
+//! `catch_unwind` supervision: a panic mid-dispatch requeues the in-flight
+//! batch (bounded by `ServeOptions::max_requeues`), swaps in a freshly
+//! forked executor, and counts `RunMetrics::worker_restarts`. Panic
+//! injection for the chaos gates is armed via `ServeOptions::faults` or
+//! the `DISC_FAULTS` environment spec (`runtime::faults`).
 
 use crate::compiler::CompiledModel;
 use crate::program::Program;
-use crate::runtime::batching::{group_key_extent, BatchAnalysis, BatchKey};
+use crate::runtime::batching::{group_key_extent, BatchAnalysis, BatchKey, BatchOutput};
+use crate::runtime::faults::{FaultPlan, FaultSite};
 use crate::runtime::metrics::RunMetrics;
 use crate::runtime::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// One inference request.
@@ -65,7 +78,17 @@ pub struct Request {
     pub id: u64,
     pub inputs: Vec<Tensor>,
     pub arrived: Instant,
+    /// Absolute shed deadline (`arrived + ServeOptions::deadline`); `None`
+    /// never expires.
+    pub deadline: Option<Instant>,
+    /// Times this request was requeued after a worker panic interrupted
+    /// its dispatch (bounded by `ServeOptions::max_requeues`).
+    pub requeues: u32,
 }
+
+/// What a supervised dispatch produced: the inner `Result` is the
+/// executor's, the outer layer is `catch_unwind` (a panic mid-dispatch).
+type DispatchResult = std::thread::Result<Result<BatchOutput>>;
 
 /// Per-request record.
 #[derive(Debug, Clone)]
@@ -100,8 +123,10 @@ pub struct ServeOptions {
     /// the model (program backends only).
     pub workers: usize,
     pub arrival: Arrival,
-    /// Bound of the request queue; the producer blocks when it is full
-    /// (backpressure instead of unbounded memory under overload).
+    /// Bound of the request queue. The producer never blocks on a full
+    /// queue (blocking would silently stretch the offered arrival
+    /// process); it sheds the request instead, counted in
+    /// `RunMetrics::shed_requests`.
     pub queue_cap: usize,
     /// Cross-request batching bound: a worker coalesces up to this many
     /// same-group queued requests into one stacked dispatch. `1` disables
@@ -114,6 +139,20 @@ pub struct ServeOptions {
     /// Keep every request's outputs in the report (bit-exactness gates;
     /// costs memory proportional to the stream).
     pub capture_outputs: bool,
+    /// Per-request latency budget measured from arrival. A request still
+    /// undispatched past its deadline is shed at admission control
+    /// (`RunMetrics::deadline_misses`) instead of served uselessly late.
+    /// `None` (the default) never sheds on age.
+    pub deadline: Option<Duration>,
+    /// How many times a request whose dispatch was interrupted by a worker
+    /// panic may be requeued before it is shed
+    /// (`RunMetrics::shed_requests`).
+    pub max_requeues: u32,
+    /// Fault schedule consulted for worker-panic injection (chaos gates).
+    /// `None` falls back to the `DISC_FAULTS` environment spec. Device
+    /// seams (compile / transfer / device OOM) are armed on the device
+    /// itself — see `runtime::faults`.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl ServeOptions {
@@ -128,6 +167,9 @@ impl ServeOptions {
             max_batch: 1,
             batch_window: Duration::ZERO,
             capture_outputs: false,
+            deadline: None,
+            max_requeues: 2,
+            faults: None,
         }
     }
 
@@ -158,6 +200,25 @@ impl ServeOptions {
     /// Capture per-request outputs into the report.
     pub fn keep_outputs(mut self) -> ServeOptions {
         self.capture_outputs = true;
+        self
+    }
+
+    /// Shed requests still undispatched `ms` milliseconds after arrival.
+    pub fn deadline_ms(mut self, ms: u64) -> ServeOptions {
+        self.deadline = Some(Duration::from_millis(ms));
+        self
+    }
+
+    /// Bound panic-driven requeues per request (`0` sheds on the first
+    /// panic that interrupts the request).
+    pub fn max_requeues(mut self, n: u32) -> ServeOptions {
+        self.max_requeues = n;
+        self
+    }
+
+    /// Arm an explicit fault schedule for worker-panic injection.
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> ServeOptions {
+        self.faults = Some(plan);
         self
     }
 }
@@ -317,19 +378,29 @@ pub fn serve_closed_loop(
 /// Spawn the open-loop producer: absolute-deadline scheduling (the gap is
 /// added to the *previous deadline*, never to "now", so per-send overhead
 /// cannot accumulate into the offered rate) with optional on/off bursts.
+///
+/// Admission is non-blocking (`try_send`): a full queue **sheds** the
+/// request instead of stalling the producer — a blocked send would push
+/// every later arrival past its absolute deadline and quietly turn the
+/// offered rate into the service rate, hiding the very overload an open
+/// loop exists to expose. Returns the number of requests shed this way
+/// (plus any the stream could never offer because every consumer died).
 fn spawn_producer(
     tx: mpsc::SyncSender<Request>,
     stream: Vec<Vec<Tensor>>,
     rate_rps: f64,
     arrival: Arrival,
-) -> std::thread::JoinHandle<()> {
+    deadline: Option<Duration>,
+) -> std::thread::JoinHandle<u64> {
     std::thread::spawn(move || {
         let gap = Duration::from_secs_f64(1.0 / rate_rps.max(1e-3));
         let burst = match arrival {
             Arrival::Uniform => 1,
             Arrival::Bursty { burst } => burst.max(1),
         };
+        let n = stream.len();
         let mut next_deadline = Instant::now();
+        let mut shed = 0u64;
         for (i, inputs) in stream.into_iter().enumerate() {
             // Burst heads wait for their deadline; the rest of the burst
             // goes back-to-back. Advancing the deadline by `gap` per
@@ -341,10 +412,26 @@ fn spawn_producer(
                 }
             }
             next_deadline += gap;
-            if tx.send(Request { id: i as u64, inputs, arrived: Instant::now() }).is_err() {
-                return; // consumers died (error path): stop offering
+            let arrived = Instant::now();
+            let req = Request {
+                id: i as u64,
+                inputs,
+                arrived,
+                deadline: deadline.map(|d| arrived + d),
+                requeues: 0,
+            };
+            match tx.try_send(req) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(_)) => shed += 1,
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    // Consumers died (error path): the rest of the stream
+                    // can never be served — account it as shed so the
+                    // caller's request reconciliation still balances.
+                    return shed + (n - i) as u64;
+                }
             }
         }
+        shed
     })
 }
 
@@ -499,6 +586,15 @@ fn assemble_batch(
 /// recorded batch plans for) and feeds it to `assemble_batch` as the
 /// target, so bursty repeat traffic re-forms replayable group shapes
 /// instead of accreting never-seen ones.
+///
+/// Robustness: requests whose deadline passed while queued are shed at
+/// dispatch admission (`deadline_misses`), never run. `run` is a
+/// *supervised* dispatch — its outer `Err` means the dispatch panicked
+/// (and the caller already swapped in a fresh executor): the in-flight
+/// batch is requeued onto the local stash, bounded per request by
+/// `opts.max_requeues` (past it, the request is shed), and the restart is
+/// counted in `worker_restarts`.
+#[allow(clippy::too_many_arguments)]
 fn drain_queue(
     opts: &ServeOptions,
     completions: &mut Vec<Completion>,
@@ -507,7 +603,7 @@ fn drain_queue(
     key_of: &mut dyn FnMut(&Request) -> Option<(BatchKey, i64)>,
     next: &mut dyn FnMut() -> Option<Request>,
     recv_blocking: &mut dyn FnMut() -> Option<Request>,
-    run: &mut dyn FnMut(&[Vec<Tensor>]) -> Result<crate::runtime::batching::BatchOutput>,
+    run: &mut dyn FnMut(&[Vec<Tensor>]) -> DispatchResult,
 ) -> Result<()> {
     let mut pending: VecDeque<Stashed> = VecDeque::new();
     let mut planned_shapes: HashMap<BatchKey, Vec<i64>> = HashMap::new();
@@ -534,30 +630,73 @@ fn drain_queue(
             key_of,
             next,
         );
+        // Admission control: a request whose deadline passed while it sat
+        // queued (or stashed, or requeued) is shed here, not run — serving
+        // it uselessly late only delays the still-live ones behind it.
+        let now = Instant::now();
+        let mut expired = 0u64;
+        let batch: Vec<Request> = batch
+            .into_iter()
+            .filter(|r| match r.deadline {
+                Some(d) if now >= d => {
+                    expired += 1;
+                    false
+                }
+                _ => true,
+            })
+            .collect();
+        metrics.deadline_misses += expired;
+        if batch.is_empty() {
+            continue;
+        }
         let delays: Vec<Duration> = batch.iter().map(|r| r.arrived.elapsed()).collect();
-        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        let metas: Vec<(u64, Instant, Option<Instant>, u32)> =
+            batch.iter().map(|r| (r.id, r.arrived, r.deadline, r.requeues)).collect();
         let inputs: Vec<Vec<Tensor>> = batch.into_iter().map(|r| r.inputs).collect();
         let t0 = Instant::now();
-        let out = run(&inputs)?;
-        let dt = t0.elapsed();
-        *launches += 1;
-        *metrics += &out.metrics;
-        if shape.len() > 1 && out.metrics.batched_launches > 0 {
-            if let Some(k) = group {
-                // The executor stacked (and on first sight planned) this
-                // group shape: steer later assemblies back to it.
-                planned_shapes.insert(k, shape);
+        match run(&inputs) {
+            Ok(Ok(out)) => {
+                let dt = t0.elapsed();
+                *launches += 1;
+                *metrics += &out.metrics;
+                if expired == 0 && shape.len() > 1 && out.metrics.batched_launches > 0 {
+                    if let Some(k) = group {
+                        // The executor stacked (and on first sight planned)
+                        // this group shape: steer later assemblies back to
+                        // it. (Shedding changed the dispatched shape, so an
+                        // expired member suppresses the recording.)
+                        planned_shapes.insert(k, shape);
+                    }
+                }
+                let mut outs = out.outputs.into_iter();
+                for (j, (id, ..)) in metas.into_iter().enumerate() {
+                    let produced = outs.next();
+                    completions.push(Completion {
+                        id,
+                        latency: delays[j] + dt,
+                        queue_delay: delays[j],
+                        outputs: if opts.capture_outputs { produced } else { None },
+                    });
+                }
             }
-        }
-        let mut outs = out.outputs.into_iter();
-        for (j, id) in ids.into_iter().enumerate() {
-            let produced = outs.next();
-            completions.push(Completion {
-                id,
-                latency: delays[j] + dt,
-                queue_delay: delays[j],
-                outputs: if opts.capture_outputs { produced } else { None },
-            });
+            Ok(Err(e)) => return Err(e),
+            Err(_panicked) => {
+                // The dispatch panicked; `run` already replaced the
+                // executor. Requeue the in-flight batch onto the local
+                // stash (retried before the next queue dequeue), shedding
+                // members that burned their whole requeue budget.
+                metrics.worker_restarts += 1;
+                for ((id, arrived, deadline, requeues), ins) in metas.into_iter().zip(inputs) {
+                    if requeues >= opts.max_requeues {
+                        metrics.shed_requests += 1;
+                        continue;
+                    }
+                    let req =
+                        Request { id, inputs: ins, arrived, deadline, requeues: requeues + 1 };
+                    let tag = key_of(&req);
+                    pending.push_back(Stashed { req, tag });
+                }
+            }
         }
     }
     Ok(())
@@ -579,9 +718,10 @@ pub fn serve_open_loop(
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
     let n = stream.len();
+    let faults = opts.faults.clone().or_else(FaultPlan::from_env);
     if opts.workers <= 1 {
         let (tx, rx) = mpsc::sync_channel::<Request>(opts.queue_cap.max(1));
-        let producer = spawn_producer(tx, stream, opts.rate_rps, opts.arrival);
+        let producer = spawn_producer(tx, stream, opts.rate_rps, opts.arrival, opts.deadline);
         let start = Instant::now();
         let mut completions = Vec::with_capacity(n);
         let mut metrics = RunMetrics::default();
@@ -593,7 +733,20 @@ pub fn serve_open_loop(
         };
         let mut next = || rx.try_recv().ok();
         let mut recv_blocking = || rx.recv().ok();
-        let mut run = |inputs: &[Vec<Tensor>]| model.run_batch(inputs);
+        let mut run = |inputs: &[Vec<Tensor>]| {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(f) = &faults {
+                    if f.should_fail(FaultSite::WorkerPanic) {
+                        panic!("injected panic fault (worker dispatch)");
+                    }
+                }
+                model.run_batch(inputs)
+            }));
+            if r.is_err() {
+                model.restart_worker();
+            }
+            r
+        };
         drain_queue(
             opts,
             &mut completions,
@@ -604,12 +757,8 @@ pub fn serve_open_loop(
             &mut recv_blocking,
             &mut run,
         )?;
-        producer.join().ok();
-        anyhow::ensure!(
-            completions.len() == n,
-            "lost requests: {} of {n} completed",
-            completions.len()
-        );
+        metrics.shed_requests += producer.join().unwrap_or(0);
+        reconcile(&completions, &metrics, n)?;
         let wall = start.elapsed();
         let per_worker =
             vec![WorkerReport::summarize(0, &completions, launches, metrics.clone())];
@@ -620,7 +769,7 @@ pub fn serve_open_loop(
     let (prog, workers) = model.fork_workers(opts.workers)?;
     let (tx, rx) = mpsc::sync_channel::<Request>(opts.queue_cap.max(1));
     let rx = Arc::new(Mutex::new(rx));
-    let producer = spawn_producer(tx, stream, opts.rate_rps, opts.arrival);
+    let producer = spawn_producer(tx, stream, opts.rate_rps, opts.arrival, opts.deadline);
     let start = Instant::now();
 
     type WorkerResult = Result<(usize, Vec<Completion>, usize, RunMetrics)>;
@@ -631,6 +780,7 @@ pub fn serve_open_loop(
             let rx = rx.clone();
             let prog = prog.clone();
             let opts = opts.clone();
+            let faults = faults.clone();
             std::thread::Builder::new()
                 .name(format!("disc-worker-{wi}"))
                 .spawn(move || -> WorkerResult {
@@ -649,18 +799,37 @@ pub fn serve_open_loop(
                     };
                     // Hold the receiver lock only for a non-blocking poll
                     // or a dequeue; the (long) dispatch — and the batch
-                    // straggler window — happen outside it.
+                    // straggler window — happen outside it. A sibling that
+                    // panicked while holding the lock poisons nothing
+                    // worth honoring: the protected state is just the
+                    // receiver, valid regardless of who unwound.
                     let mut next = || {
-                        let guard = rx.lock().expect("request queue lock");
+                        let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
                         guard.try_recv().ok()
                     };
                     let mut recv_blocking = || {
-                        let guard = rx.lock().expect("request queue lock");
+                        let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
                         guard.recv().ok()
                     };
                     let mut run = |inputs: &[Vec<Tensor>]| {
-                        exec.run_batch(&prog, inputs)
-                            .with_context(|| format!("worker {wi}"))
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            if let Some(f) = &faults {
+                                if f.should_fail(FaultSite::WorkerPanic) {
+                                    panic!("injected panic fault (worker {wi} dispatch)");
+                                }
+                            }
+                            exec.run_batch(&prog, inputs)
+                                .with_context(|| format!("worker {wi}"))
+                        }));
+                        if r.is_err() {
+                            // The unwound dispatch left this executor's
+                            // per-worker state suspect: replace it with a
+                            // freshly forked sibling (shared stores, fresh
+                            // plan caches and arena).
+                            let fresh = exec.fork();
+                            exec = fresh;
+                        }
+                        r
                     };
                     drain_queue(
                         &opts,
@@ -684,33 +853,53 @@ pub fn serve_open_loop(
     let mut per_worker: Vec<WorkerReport> = Vec::with_capacity(handles.len());
     let mut first_err: Option<anyhow::Error> = None;
     for h in handles {
-        match h.join().expect("worker thread panicked") {
-            Ok((wi, comps, wl, m)) => {
+        match h.join() {
+            Ok(Ok((wi, comps, wl, m))) => {
                 per_worker.push(WorkerReport::summarize(wi, &comps, wl, m.clone()));
                 metrics += &m;
                 launches += wl;
                 completions.extend(comps);
             }
-            Err(e) => first_err = first_err.or(Some(e)),
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            // A worker died *outside* the supervised dispatch (queue
+            // plumbing, assembly): surface it as an error instead of
+            // propagating the panic through the coordinator.
+            Err(_) => {
+                first_err = first_err
+                    .or_else(|| Some(anyhow::anyhow!("worker thread panicked outside dispatch")));
+            }
         }
     }
     // Workers have exited (normally when the producer closed the queue, or
-    // on error). Dropping our receiver handle disconnects a producer that
-    // is still blocked on a full queue after an all-workers failure, so the
-    // join below cannot deadlock.
+    // on error). Dropping our receiver handle disconnects a producer whose
+    // sends can then never be consumed after an all-workers failure, so
+    // the join below cannot deadlock.
     drop(rx);
-    producer.join().ok();
+    let producer_shed = producer.join().unwrap_or(0);
     if let Some(e) = first_err {
         return Err(e);
     }
-    anyhow::ensure!(
-        completions.len() == n,
-        "lost requests: {} of {n} completed",
-        completions.len()
-    );
+    metrics.shed_requests += producer_shed;
+    reconcile(&completions, &metrics, n)?;
     let wall = start.elapsed();
     per_worker.sort_by_key(|w| w.worker);
     Ok(ServeReport::from_completions(completions, wall, metrics, per_worker, launches))
+}
+
+/// The zero-lost-requests invariant: every offered request is completed,
+/// shed, or deadline-missed — nothing silently disappears, with faults
+/// injected or not.
+fn reconcile(completions: &[Completion], metrics: &RunMetrics, n: usize) -> Result<()> {
+    let accounted =
+        completions.len() as u64 + metrics.shed_requests + metrics.deadline_misses;
+    anyhow::ensure!(
+        accounted == n as u64,
+        "lost requests: {} completed + {} shed + {} deadline-missed != {n} offered",
+        completions.len(),
+        metrics.shed_requests,
+        metrics.deadline_misses
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -811,6 +1000,122 @@ mod tests {
         assert!(o.capture_outputs);
         // Degenerate values clamp to "off".
         assert_eq!(ServeOptions::rate(1.0).batch(0).max_batch, 1);
+        // Robustness knobs.
+        let o = ServeOptions::rate(10.0).deadline_ms(5).max_requeues(7);
+        assert_eq!(o.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(o.max_requeues, 7);
+        assert!(o.faults.is_none());
+    }
+
+    #[test]
+    fn worker_panic_requeues_and_restarts() {
+        use crate::runtime::faults::{FaultPlan, FaultSite};
+        // The first dispatch panics (injected); the interrupted request
+        // must be requeued and served by the restarted worker — nothing
+        // lost, one restart on the books.
+        let faults = Arc::new(FaultPlan::parse("seed=9,panic=1000:1").unwrap());
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(5, 49);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(100_000.0).faults(faults.clone()),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 5, "the panicked dispatch must be requeued, not lost");
+        assert_eq!(report.metrics.worker_restarts, 1);
+        assert_eq!(report.metrics.shed_requests, 0);
+        assert_eq!(report.metrics.deadline_misses, 0);
+        assert_eq!(faults.fired(FaultSite::WorkerPanic), 1);
+    }
+
+    #[test]
+    fn multi_worker_panics_requeue_across_restarts() {
+        use crate::runtime::faults::{FaultPlan, FaultSite};
+        // Two injected panics across a shared 3-worker pool: every request
+        // still completes (requeue budget 2 covers a request hit twice)
+        // and each panic shows up as exactly one worker restart.
+        let faults = Arc::new(FaultPlan::parse("seed=10,panic=1000:2").unwrap());
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(12, 50);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(50_000.0).workers(3).faults(faults.clone()),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.metrics.worker_restarts, 2);
+        assert_eq!(report.metrics.shed_requests, 0);
+        assert_eq!(faults.fired(FaultSite::WorkerPanic), 2);
+    }
+
+    #[test]
+    fn exhausted_requeue_budget_sheds_instead_of_looping() {
+        use crate::runtime::faults::FaultPlan;
+        // Every dispatch panics (unlimited injection) and the budget is
+        // zero: each request is shed after its first interrupted dispatch.
+        // The stream still terminates and the accounting balances.
+        let faults = Arc::new(FaultPlan::parse("seed=11,panic=1000").unwrap());
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(4, 51);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(100_000.0).max_requeues(0).faults(faults),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.metrics.shed_requests, 4);
+        assert_eq!(report.metrics.worker_restarts, 4, "one restart per interrupted dispatch");
+    }
+
+    #[test]
+    fn expired_requests_are_shed_not_served() {
+        // A zero deadline expires every request the moment it arrives:
+        // admission control sheds the whole stream as deadline misses and
+        // the reconciliation still balances.
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(4, 52);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(100_000.0).deadline_ms(0),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.metrics.deadline_misses, 4);
+        assert_eq!(report.batch_launches, 0, "expired requests never dispatch");
+        // A generous deadline sheds nothing.
+        let stream = w.request_stream(4, 53);
+        let report = serve_open_loop(
+            &mut model,
+            stream,
+            &ServeOptions::rate(100_000.0).deadline_ms(60_000),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 4);
+        assert_eq!(report.metrics.deadline_misses, 0);
+    }
+
+    #[test]
+    fn full_queue_sheds_instead_of_blocking_the_producer() {
+        // queue_cap 1 with an effectively instantaneous offered stream:
+        // the producer must shed (not block), and completed + shed must
+        // reconcile to the stream length.
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(32, 54);
+        let mut opts = ServeOptions::rate(1e9);
+        opts.queue_cap = 1;
+        let report = serve_open_loop(&mut model, stream, &opts).unwrap();
+        assert!(report.metrics.shed_requests >= 1, "a 1-deep queue under flood must shed");
+        assert_eq!(report.completed as u64 + report.metrics.shed_requests, 32);
+        assert!(report.completed >= 1, "the drained head must still be served");
     }
 
     #[test]
@@ -888,14 +1193,15 @@ mod tests {
         let (tx, rx) = mpsc::sync_channel::<Request>(64);
         let stream: Vec<Vec<Tensor>> = (0..30).map(|_| Vec::new()).collect();
         let t0 = Instant::now();
-        let h = spawn_producer(tx, stream, 1_000.0, Arrival::Uniform);
+        let h = spawn_producer(tx, stream, 1_000.0, Arrival::Uniform, None);
         let mut got = 0;
         while rx.recv().is_ok() {
             got += 1;
         }
-        h.join().unwrap();
+        let shed = h.join().unwrap();
         let took = t0.elapsed();
         assert_eq!(got, 30);
+        assert_eq!(shed, 0, "a drained queue never sheds");
         assert!(took >= Duration::from_millis(25), "offered faster than the rate: {took:?}");
         assert!(took <= Duration::from_millis(250), "producer drifted: {took:?}");
     }
@@ -907,6 +1213,8 @@ mod tests {
             id,
             inputs: (0..n_inputs).map(|_| Tensor::scalar_f32(0.0)).collect(),
             arrived: Instant::now(),
+            deadline: None,
+            requeues: 0,
         };
         let key_for = |r: &Request| {
             Some((
@@ -952,7 +1260,7 @@ mod tests {
 
     #[test]
     fn assemble_batch_without_key_dispatches_solo() {
-        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now() };
+        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now(), deadline: None, requeues: 0 };
         let mut pending: VecDeque<Stashed> = VecDeque::new();
         let mut key_of = |_: &Request| None;
         let mut next = || -> Option<Request> {
@@ -980,7 +1288,7 @@ mod tests {
         // straggler is left pending, and assembly stops the moment the
         // multiset matches instead of greedily draining the queue.
         let key = BatchKey { residual: vec![(crate::shape::SymId(0), 64)] };
-        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now() };
+        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now(), deadline: None, requeues: 0 };
         let exts: HashMap<u64, i64> =
             [(0u64, 2i64), (1, 5), (2, 3), (3, 3), (4, 2)].into_iter().collect();
         let tag_of = |id: u64, exts: &HashMap<u64, i64>, key: &BatchKey| {
@@ -1018,7 +1326,7 @@ mod tests {
         // Traffic moved on from the remembered shape: batching must still
         // coalesce (and the dispatched shape then overwrites the target).
         let key = BatchKey { residual: vec![(crate::shape::SymId(0), 64)] };
-        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now() };
+        let mk = |id: u64| Request { id, inputs: vec![], arrived: Instant::now(), deadline: None, requeues: 0 };
 
         // Head extent absent from the target: the target is ignored and
         // assembly is plain greedy.

@@ -55,6 +55,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let burst = args.get_usize("burst", 0)?;
     let max_batch = args.get_usize("batch", 1)?;
     let batch_window_us = args.get_usize("batch-window-us", 0)? as u64;
+    let deadline_ms = args.get_usize("deadline-ms", 0)? as u64;
 
     let module = disc::bridge::lower(&w.graph)?;
     let compiler = DiscCompiler::new()?;
@@ -83,6 +84,14 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .batch_window_us(batch_window_us);
             if burst > 0 {
                 sopts = sopts.bursty(burst);
+            }
+            if deadline_ms > 0 {
+                sopts = sopts.deadline_ms(deadline_ms);
+            }
+            if let Some(spec) = args.get("faults") {
+                sopts = sopts.faults(std::sync::Arc::new(
+                    disc::runtime::faults::FaultPlan::parse(spec).context("--faults spec")?,
+                ));
             }
             coordinator::serve_open_loop(&mut model, stream, &sopts)?
         }
@@ -150,6 +159,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         m.batch_plan_misses,
         m.batch_plan_guard_misses,
         disc::util::fmt_bytes(m.batch_dev_resident_bytes as usize)
+    );
+    println!(
+        "robustness: shed={} deadline_misses={} retries={} demotions={} worker_restarts={}",
+        m.shed_requests, m.deadline_misses, m.retries, m.demotions, m.worker_restarts
     );
     if report.per_worker.len() > 1 {
         println!(

@@ -649,16 +649,23 @@ impl Executor {
     pub fn run_batch(&mut self, prog: &Program, requests: &[Vec<Tensor>]) -> Result<BatchOutput> {
         anyhow::ensure!(!requests.is_empty(), "empty batch");
         let analysis = self.batch_analysis(prog);
+        let mut metrics = RunMetrics::default();
         if requests.len() > 1 && analysis.eligible() {
             // The cheap per-group binding check: bind member environments
             // (the stacked walk needs them anyway) and verify residual
             // agreement. Mismatched groups decline to the solo loop below.
             if let Some(shape) = group_shape(&prog.module, &analysis, requests) {
-                return self.run_grouped(prog, requests, &analysis, shape);
+                match self.run_grouped(prog, requests, &analysis, shape) {
+                    Ok(out) => return Ok(out),
+                    // A fault mid-group (compile, transfer, OOM) demotes
+                    // the whole batch to sequential solo execution: each
+                    // member then descends its own solo ladder, so one
+                    // faulted launch cannot fail k requests.
+                    Err(_e) => metrics.demotions += 1,
+                }
             }
         }
         let mut outputs = Vec::with_capacity(requests.len());
-        let mut metrics = RunMetrics::default();
         for r in requests {
             let ExecOutput { outputs: o, metrics: rm } = self.run(prog, r)?;
             metrics += &rm;
@@ -685,11 +692,25 @@ impl Executor {
         match self.batch_plans.get(&key).cloned() {
             Some(plan) => {
                 if plan.param_guards_hold(requests) {
-                    if let Some(out) =
-                        self.replay_batch(prog, requests, analysis, &shape, &plan)?
-                    {
-                        self.batch_plan_stats.hits += 1;
-                        return Ok(out);
+                    let resident_before = self.pool.device.resident_bytes;
+                    match self.replay_batch(prog, requests, analysis, &shape, &plan) {
+                        Ok(Some(out)) => {
+                            self.batch_plan_stats.hits += 1;
+                            return Ok(out);
+                        }
+                        Ok(None) => {}
+                        Err(_e) => {
+                            // Device/transfer fault mid-replay: demote the
+                            // group to the batched interpret tier. The plan
+                            // stays installed (the fault is transient); the
+                            // replay's device buffers unwound with it, so
+                            // restore the arena accounting.
+                            self.pool.device.resident_bytes = resident_before;
+                            let mut out =
+                                self.run_stacked(prog, requests, analysis, shape, None)?;
+                            out.metrics.demotions += 1;
+                            return Ok(out);
+                        }
                     }
                 }
                 // Stale shape assumption: this group runs the batched
@@ -1765,7 +1786,9 @@ impl Executor {
                             let bytes = dt.byte_size() as u64;
                             resident += bytes;
                             *resident_peak = (*resident_peak).max(resident);
-                            self.pool.device.acquire(bytes);
+                            self.pool
+                                .device
+                                .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
                             jdev[*value] = Some(DevSlot { dt, actual, zero_padded: true });
                         } else {
                             let a = replay_joint_value(
@@ -1895,7 +1918,9 @@ impl Executor {
                             }
                             resident += bytes;
                             *resident_peak = (*resident_peak).max(resident);
-                            self.pool.device.acquire(bytes);
+                            self.pool
+                                .device
+                                .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
                             jdev[fl.root] = Some(DevSlot {
                                 dt: out,
                                 actual: out_actual.clone(),
@@ -2492,6 +2517,46 @@ mod tests {
         assert_eq!(flipped.plan_key(prog.id), key_a, "plan key sorts extents");
         assert!(group_shape(m, &a, &[t(2, 5), t(2, 6)]).is_none(), "residual mismatch");
         assert!(group_shape(m, &a, &[t(2, 5), vec![]]).is_none(), "unbindable member");
+    }
+
+    #[test]
+    fn batch_replay_oom_demotes_to_stacked_interpret_then_recovers() {
+        use crate::runtime::faults::{FaultPlan, FaultSite};
+        let faults = Arc::new(FaultPlan::parse("seed=21,oom=1000:1").unwrap());
+        let prog = row_softmax_prog();
+        let mut exec = Executor::new(
+            Arc::new(Device::cpu_with_faults(Some(faults.clone())).unwrap()),
+            ExecOptions::default(),
+        );
+        let mut plain = executor_no_plans();
+        let mut rng = Prng::new(59);
+        let t = |rows: usize, rng: &mut Prng| {
+            vec![Tensor::f32(&[rows, 8], rng.fill_f32(rows * 8, 1.0))]
+        };
+
+        // Record the plan (no replay, so the armed OOM stays dormant).
+        let first = exec.run_batch(&prog, &[t(2, &mut rng), t(3, &mut rng)]).unwrap();
+        assert_eq!(first.metrics.batch_plan_misses, 1);
+        assert_eq!(first.metrics.demotions, 0);
+
+        // Replay hits the injected OOM: the group demotes to the batched
+        // interpret tier, outputs stay bit-exact, and the failed replay's
+        // arena accounting unwinds.
+        let reqs2 = vec![t(2, &mut rng), t(3, &mut rng)];
+        let out = exec.run_batch(&prog, &reqs2).unwrap();
+        assert_eq!(out.metrics.demotions, 1);
+        assert_eq!(out.metrics.batch_plan_hits, 0);
+        assert_eq!(out.metrics.batched_launches, 1, "demotion still stacks, interpreted");
+        assert_eq!(exec.pool.device.resident_bytes, 0, "failed replay must unwind the arena");
+        for (r, o) in reqs2.iter().zip(&out.outputs) {
+            assert_eq!(&plain.run(&prog, r).unwrap().outputs, o);
+        }
+        assert_eq!(faults.fired(FaultSite::DeviceOom), 1);
+
+        // Fault exhausted: the installed plan replays clean.
+        let out = exec.run_batch(&prog, &[t(2, &mut rng), t(3, &mut rng)]).unwrap();
+        assert_eq!(out.metrics.batch_plan_hits, 1);
+        assert_eq!(out.metrics.demotions, 0);
     }
 
     #[test]

@@ -63,6 +63,25 @@ impl DeviceArena {
         self.high_water_bytes = self.high_water_bytes.max(self.resident_bytes);
     }
 
+    /// Fallible acquire: the seam where device allocation can fail. With a
+    /// fault plan armed this simulates an OOM (`FaultSite::DeviceOom`)
+    /// *before* accounting the bytes, so a failed acquire leaves the arena
+    /// untouched and the replay tiers demote down the execution ladder
+    /// instead of holding phantom residency.
+    pub fn acquire_checked(
+        &mut self,
+        bytes: u64,
+        faults: Option<&crate::runtime::faults::FaultPlan>,
+    ) -> anyhow::Result<()> {
+        crate::runtime::faults::check(
+            faults,
+            crate::runtime::faults::FaultSite::DeviceOom,
+            "device arena acquire",
+        )?;
+        self.acquire(bytes);
+        Ok(())
+    }
+
     /// A device buffer of `bytes` was released.
     pub fn release(&mut self, bytes: u64) {
         self.resident_bytes = self.resident_bytes.saturating_sub(bytes);
@@ -195,6 +214,22 @@ mod tests {
             p.free_f32(b);
         }
         assert_eq!(p.free.get(&64).map(|l| l.len()), Some(2));
+    }
+
+    #[test]
+    fn checked_acquire_injects_oom_without_phantom_residency() {
+        use crate::runtime::faults::{FaultPlan, FaultSite};
+        let plan = FaultPlan::parse("seed=1,oom=1000:1").unwrap();
+        let mut a = DeviceArena::default();
+        let e = a.acquire_checked(128, Some(&plan)).unwrap_err();
+        assert!(format!("{e:#}").contains("injected oom fault"), "{e:#}");
+        assert_eq!(a.resident_bytes, 0, "failed acquire must not account bytes");
+        a.acquire_checked(128, Some(&plan)).unwrap();
+        assert_eq!(a.resident_bytes, 128);
+        assert_eq!(plan.fired(FaultSite::DeviceOom), 1);
+        let mut b = DeviceArena::default();
+        b.acquire_checked(64, None).unwrap();
+        assert_eq!(b.resident_bytes, 64);
     }
 
     #[test]

@@ -302,8 +302,67 @@ impl Executor {
         metrics.weight_resident_bytes = self.library.weight_resident_bytes();
     }
 
-    /// Execute a program against concrete inputs.
+    /// Execute a program against concrete inputs, descending the
+    /// degradation ladder on faults (see docs/runtime.md §Failure model):
+    ///
+    /// 1. the tiered path (replay → interpret) — a replay that *errors*
+    ///    (transfer fault, simulated OOM) demotes this request to the
+    ///    interpret tier, counted in `RunMetrics::demotions`;
+    /// 2. a tiered attempt that fails on a *compile* error is retried with
+    ///    capped exponential backoff (`RunMetrics::retries`) — the failed
+    ///    single-flight slot was dropped, so a retry re-issues the compile;
+    /// 3. anything still failing falls to the host reference interpreter
+    ///    (`runtime::reference::eval_module`), the always-correct bottom
+    ///    rung that touches neither device nor compiler.
+    ///
+    /// Fault-free requests take exactly the old path: one branch per rung.
     pub fn run(&mut self, prog: &Program, inputs: &[Tensor]) -> Result<ExecOutput> {
+        const MAX_COMPILE_RETRIES: u32 = 3;
+        let t_start = Instant::now();
+        let mut retries = 0u32;
+        let mut backoff = std::time::Duration::from_millis(1);
+        let last_err = loop {
+            match self.run_tiered(prog, inputs) {
+                Ok(mut out) => {
+                    out.metrics.retries += retries as u64;
+                    return Ok(out);
+                }
+                Err(e) => {
+                    let chain = format!("{e:#}");
+                    if chain.contains("compile") && retries < MAX_COMPILE_RETRIES {
+                        retries += 1;
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(std::time::Duration::from_millis(8));
+                        continue;
+                    }
+                    break e;
+                }
+            }
+        };
+        // Bottom rung: serve the request from the host reference
+        // interpreter. Slower, but it answers — the coordinator's
+        // zero-lost-requests guarantee rests on this.
+        match crate::runtime::reference::eval_module(&prog.module, inputs) {
+            Ok(r) => {
+                let metrics = RunMetrics {
+                    mem_kernels: r.launches as u64,
+                    mem_bytes: r.bytes_moved as u64,
+                    retries: retries as u64,
+                    demotions: 1,
+                    total_time: t_start.elapsed(),
+                    ..Default::default()
+                };
+                Ok(ExecOutput { outputs: r.outputs, metrics })
+            }
+            // The reference path failed too (malformed request): report the
+            // ladder's original error, which names the faulted seam.
+            Err(_) => Err(last_err),
+        }
+    }
+
+    /// Tiers 1–3 (replay / record / interpret), with error-driven replay
+    /// demotion. Extracted from `run` so the ladder can retry it whole.
+    fn run_tiered(&mut self, prog: &Program, inputs: &[Tensor]) -> Result<ExecOutput> {
         let t_start = Instant::now();
         let m = &prog.module;
         let mut metrics = RunMetrics::default();
@@ -314,20 +373,36 @@ impl Executor {
 
         let mut outputs: Option<Vec<Tensor>> = None;
         let mut record_key: Option<PlanKey> = None;
+        let mut demoted = false;
         if self.opts.plan_cache {
             let key = PlanKey { program: prog.id, bindings: binding_vector(&env) };
             match self.plans.get(&key).cloned() {
                 Some(plan) => {
                     if plan.param_guards_hold(inputs) {
-                        if let Some(outs) =
-                            self.replay(prog, inputs, &plan, &mut env, &mut metrics)?
-                        {
-                            self.plan_stats.hits += 1;
-                            metrics.plan_hits += 1;
-                            outputs = Some(outs);
+                        let resident_before = self.pool.device.resident_bytes;
+                        match self.replay(prog, inputs, &plan, &mut env, &mut metrics) {
+                            Ok(Some(outs)) => {
+                                self.plan_stats.hits += 1;
+                                metrics.plan_hits += 1;
+                                outputs = Some(outs);
+                            }
+                            Ok(None) => {}
+                            Err(_e) => {
+                                // Device/transfer fault mid-replay: demote
+                                // this request to the interpret tier. The
+                                // plan stays installed (the fault is
+                                // transient, the plan is not stale). The
+                                // replay's device buffers unwound with it,
+                                // so restore the arena accounting.
+                                self.pool.device.resident_bytes = resident_before;
+                                metrics.demotions += 1;
+                                demoted = true;
+                                env = SymEnv::new();
+                                env.bind_params(m, inputs)?;
+                            }
                         }
                     }
-                    if outputs.is_none() {
+                    if outputs.is_none() && !demoted {
                         // Stale host-shape assumption: this request is
                         // interpreted; the cached plan stays (the common
                         // shape keeps replaying).
@@ -886,7 +961,9 @@ impl Executor {
                         let bytes = dt.byte_size() as u64;
                         resident += bytes;
                         resident_peak = resident_peak.max(resident);
-                        self.pool.device.acquire(bytes);
+                        self.pool
+                            .device
+                            .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
                         dev[*value] = Some(DevSlot { dt, actual, zero_padded: true });
                     } else {
                         let a = Self::host_value(&device, metrics, &mut host, &dev, a_id)?;
@@ -994,7 +1071,9 @@ impl Executor {
                         let bytes = out.byte_size() as u64;
                         resident += bytes;
                         resident_peak = resident_peak.max(resident);
-                        self.pool.device.acquire(bytes);
+                        self.pool
+                            .device
+                            .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
                         dev[fl.root] = Some(DevSlot {
                             dt: out,
                             actual: out_actual.clone(),
@@ -1708,5 +1787,65 @@ mod tests {
         let r = exec.run(&prog_w, &[x]).unwrap();
         assert_eq!(r.metrics.weight_cache_misses, 0, "retained weight served");
         assert_eq!(r.metrics.weight_cache_hits, 1);
+    }
+
+    #[test]
+    fn replay_oom_demotes_to_interpreter_then_recovers() {
+        use crate::runtime::faults::FaultPlan;
+        // Two injected device-OOM fires: the replay tier's arena acquire
+        // fails, the request demotes to the interpret tier, outputs stay
+        // bit-identical, and once the schedule is exhausted replay resumes.
+        let plan = Arc::new(FaultPlan::parse("seed=4,oom=1000:2").unwrap());
+        let dev = Arc::new(Device::cpu_with_faults(Some(plan)).unwrap());
+        let mut exec = Executor::new(dev, ExecOptions::default());
+        let prog = softmax_prog();
+        let input = Tensor::f32(&[4, 8], vec![0.25; 32]);
+
+        let first = exec.run(&prog, &[input.clone()]).unwrap();
+        assert_eq!(first.metrics.plan_misses, 1, "record run never touches the arena");
+        assert_eq!(first.metrics.demotions, 0);
+
+        let faulted = exec.run(&prog, &[input.clone()]).unwrap();
+        assert_eq!(faulted.metrics.demotions, 1, "failed replay demotes");
+        assert_eq!(faulted.metrics.plan_hits, 0);
+        assert_eq!(faulted.outputs, first.outputs, "demoted path stays bit-identical");
+        assert_eq!(
+            exec.pool.device.resident_bytes, 0,
+            "failed replay must not leak arena accounting"
+        );
+
+        // One more fire left in the schedule, then clean replays.
+        let faulted2 = exec.run(&prog, &[input.clone()]).unwrap();
+        assert_eq!(faulted2.metrics.demotions, 1);
+        let clean = exec.run(&prog, &[input]).unwrap();
+        assert_eq!(clean.metrics.demotions, 0);
+        assert_eq!(clean.metrics.plan_hits, 1, "exhausted schedule lets replay resume");
+        assert_eq!(clean.outputs, first.outputs);
+    }
+
+    #[test]
+    fn compile_failures_retry_then_fall_back_to_the_reference_path() {
+        use crate::runtime::faults::FaultPlan;
+        // Every compile fails: the ladder retries with backoff, then serves
+        // the request from the host reference interpreter.
+        let plan = Arc::new(FaultPlan::parse("seed=6,compile=1000").unwrap());
+        let dev = Arc::new(Device::cpu_with_faults(Some(plan)).unwrap());
+        let mut exec = Executor::new(dev, ExecOptions::default());
+        let prog = softmax_prog();
+        let input = Tensor::f32(&[3, 5], vec![0.5; 15]);
+
+        let out = exec.run(&prog, &[input.clone()]).unwrap();
+        assert_eq!(out.metrics.retries, 3, "capped backoff before demoting");
+        assert_eq!(out.metrics.demotions, 1, "reference fallback is a demotion");
+        let want = eval_module(&prog.module, &[input.clone()]).unwrap();
+        assert_eq!(out.outputs, want.outputs, "bottom rung IS the reference path");
+
+        // A transient failure (limit 1) is absorbed by a single retry.
+        let plan = Arc::new(FaultPlan::parse("seed=6,compile=1000:1").unwrap());
+        let dev = Arc::new(Device::cpu_with_faults(Some(plan)).unwrap());
+        let mut exec = Executor::new(dev, ExecOptions::default());
+        let out = exec.run(&prog, &[input]).unwrap();
+        assert_eq!(out.metrics.retries, 1);
+        assert_eq!(out.metrics.demotions, 0, "retry recovered without demoting");
     }
 }

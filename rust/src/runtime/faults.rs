@@ -1,0 +1,327 @@
+//! Deterministic fault injection (the chaos-testing substrate).
+//!
+//! Serving robustness claims are only as good as the failures they were
+//! proven against. A [`FaultPlan`] is a seeded, countable schedule of
+//! failures injected at the runtime's existing seams:
+//!
+//! - **`compile`** — kernel compilation returns an error
+//!   (`Device::compile_hlo_*`, surfaced through the `KernelStore`'s
+//!   single-flight machinery to every joined waiter);
+//! - **`compile-panic`** — a compile-pool thread panics mid-compile (the
+//!   store's drop guard must fail the flight instead of wedging it in
+//!   `Pending` forever);
+//! - **`h2d` / `d2h`** — host↔device transfers fail (`Device::h2d`/`d2h`),
+//!   demoting replays back down the execution ladder;
+//! - **`oom`** — device allocation fails (simulated OOM at the
+//!   `DeviceArena` acquire inside the device-resident replay tiers);
+//! - **`panic`** — a coordinator worker panics while serving a request
+//!   (exercises supervision: requeue + worker respawn).
+//!
+//! Firing is deterministic: each site keeps an atomic call counter, and call
+//! `n` fires iff `splitmix64(seed ^ site ^ n) % 1000 < rate` (rates are
+//! per-mille), subject to the site's optional fire limit. Two plans built
+//! from the same spec fire at identical call indices, so chaos tests
+//! reproduce bit-for-bit; the `fired`/`calls` accessors let tests assert a
+//! fault actually happened rather than trusting the schedule.
+//!
+//! Specs look like `"seed=7,compile=200,h2d=100,oom=150:2,panic=1000:1"`:
+//! per-site per-mille rates with an optional `:limit` cap on total fires.
+//! Plans are wired explicitly — `Device` captures `DISC_FAULTS` at
+//! construction ([`FaultPlan::from_env`]), and `ServeOptions::faults` /
+//! `DiscCompiler::with_faults` thread an explicit plan — so fault-free
+//! paths carry a `None` and pay a single branch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// Environment variable holding the process-wide fault spec.
+pub const ENV_VAR: &str = "DISC_FAULTS";
+
+/// Where a fault fires. Each site maps to one seam in the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Kernel compilation returns an error.
+    Compile,
+    /// A compile-pool thread panics mid-compile.
+    CompilePanic,
+    /// A host-to-device transfer fails.
+    H2d,
+    /// A device-to-host transfer fails.
+    D2h,
+    /// Device allocation fails (simulated OOM).
+    DeviceOom,
+    /// A coordinator worker panics while serving a request.
+    WorkerPanic,
+}
+
+/// All sites, in spec-key order.
+pub const SITES: [FaultSite; 6] = [
+    FaultSite::Compile,
+    FaultSite::CompilePanic,
+    FaultSite::H2d,
+    FaultSite::D2h,
+    FaultSite::DeviceOom,
+    FaultSite::WorkerPanic,
+];
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Compile => 0,
+            FaultSite::CompilePanic => 1,
+            FaultSite::H2d => 2,
+            FaultSite::D2h => 3,
+            FaultSite::DeviceOom => 4,
+            FaultSite::WorkerPanic => 5,
+        }
+    }
+
+    /// The spec key (and the tag used in injected error messages).
+    pub fn key(self) -> &'static str {
+        match self {
+            FaultSite::Compile => "compile",
+            FaultSite::CompilePanic => "compile-panic",
+            FaultSite::H2d => "h2d",
+            FaultSite::D2h => "d2h",
+            FaultSite::DeviceOom => "oom",
+            FaultSite::WorkerPanic => "panic",
+        }
+    }
+
+    /// Per-site hash salt so sites with equal rates fire independently.
+    fn salt(self) -> u64 {
+        // Arbitrary distinct odd constants.
+        [
+            0x9e37_79b9_7f4a_7c15,
+            0xbf58_476d_1ce4_e5b9,
+            0x94d0_49bb_1331_11eb,
+            0xd6e8_feb8_6659_fd93,
+            0xa076_1d64_78bd_642f,
+            0xe703_7ed1_a0b4_28db,
+        ][self.index()]
+    }
+}
+
+#[derive(Debug, Default)]
+struct SiteState {
+    /// Firing probability in per-mille (0 = site disabled).
+    rate_permille: u64,
+    /// Max total fires (`u64::MAX` = unlimited).
+    limit: u64,
+    /// Times this site was consulted.
+    calls: AtomicU64,
+    /// Times this site actually fired.
+    fired: AtomicU64,
+}
+
+/// A seeded, countable fault-injection schedule. See the module docs.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    sites: [SiteState; 6],
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// Parse a spec like `"seed=7,compile=200,h2d=100,oom=150:2"`.
+    ///
+    /// Each comma-separated entry is `site=rate[:limit]` with `rate` in
+    /// per-mille (0–1000) and `limit` an optional cap on total fires;
+    /// `seed=N` seeds the hash. Unknown keys are an error so typos cannot
+    /// silently disable a chaos matrix.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { seed: 0, sites: Default::default() };
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (key, value) = entry
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec entry {entry:?}: expected key=value"))?;
+            if key == "seed" {
+                plan.seed = value.parse().map_err(|_| {
+                    anyhow::anyhow!("fault spec entry {entry:?}: seed must be an integer")
+                })?;
+                continue;
+            }
+            let Some(site) = SITES.iter().copied().find(|s| s.key() == key) else {
+                bail!("fault spec entry {entry:?}: unknown site {key:?}");
+            };
+            let (rate, limit) = match value.split_once(':') {
+                Some((r, l)) => (r, Some(l)),
+                None => (value, None),
+            };
+            let rate: u64 = rate.parse().map_err(|_| {
+                anyhow::anyhow!("fault spec entry {entry:?}: rate must be an integer")
+            })?;
+            if rate > 1000 {
+                bail!("fault spec entry {entry:?}: rate is per-mille (0-1000)");
+            }
+            let limit: u64 = match limit {
+                Some(l) => l.parse().map_err(|_| {
+                    anyhow::anyhow!("fault spec entry {entry:?}: limit must be an integer")
+                })?,
+                None => u64::MAX,
+            };
+            let s = &mut plan.sites[site.index()];
+            s.rate_permille = rate;
+            s.limit = limit;
+        }
+        Ok(plan)
+    }
+
+    /// Build a plan from `DISC_FAULTS`, or `None` when the variable is
+    /// unset/empty. A malformed spec is reported on stderr and ignored
+    /// rather than silently dropping the whole serving process.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let spec = std::env::var(ENV_VAR).ok()?;
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(spec) {
+            Ok(p) => Some(Arc::new(p)),
+            Err(e) => {
+                eprintln!("warning: ignoring {ENV_VAR}={spec:?}: {e}");
+                None
+            }
+        }
+    }
+
+    /// The seed this plan hashes call indices with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Consult `site`: advance its call counter and decide (deterministically
+    /// in the counter value) whether this call fails.
+    pub fn should_fail(&self, site: FaultSite) -> bool {
+        let s = &self.sites[site.index()];
+        if s.rate_permille == 0 {
+            return false;
+        }
+        let n = s.calls.fetch_add(1, Ordering::Relaxed);
+        if splitmix64(self.seed ^ site.salt() ^ n) % 1000 >= s.rate_permille {
+            return false;
+        }
+        // Respect the fire limit without ever overshooting it.
+        loop {
+            let f = s.fired.load(Ordering::Relaxed);
+            if f >= s.limit {
+                return false;
+            }
+            if s.fired.compare_exchange(f, f + 1, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+                return true;
+            }
+        }
+    }
+
+    /// Times `site` was consulted so far.
+    pub fn calls(&self, site: FaultSite) -> u64 {
+        self.sites[site.index()].calls.load(Ordering::Relaxed)
+    }
+
+    /// Times `site` actually fired so far.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.sites[site.index()].fired.load(Ordering::Relaxed)
+    }
+
+    /// Total fires across every site.
+    pub fn total_fired(&self) -> u64 {
+        SITES.iter().map(|&s| self.fired(s)).sum()
+    }
+
+    /// True if `site` has a non-zero rate configured.
+    pub fn arms(&self, site: FaultSite) -> bool {
+        self.sites[site.index()].rate_permille > 0
+    }
+}
+
+/// Consult an optional plan at `site`; on a fire, return an injected error
+/// tagged with the site key and `what` (the seam's own description).
+pub fn check(plan: Option<&FaultPlan>, site: FaultSite, what: &str) -> Result<()> {
+    if let Some(p) = plan {
+        if p.should_fail(site) {
+            bail!("injected {} fault ({what})", site.key());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rates_limits_and_seed() {
+        let p = FaultPlan::parse("seed=7,compile=200,h2d=100,oom=150:2,panic=1000:1").unwrap();
+        assert_eq!(p.seed(), 7);
+        assert!(p.arms(FaultSite::Compile));
+        assert!(p.arms(FaultSite::H2d));
+        assert!(!p.arms(FaultSite::D2h));
+        assert_eq!(p.sites[FaultSite::DeviceOom.index()].limit, 2);
+        assert_eq!(p.sites[FaultSite::WorkerPanic.index()].limit, 1);
+        assert_eq!(p.sites[FaultSite::Compile.index()].limit, u64::MAX);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_sites_and_bad_rates() {
+        assert!(FaultPlan::parse("seed=1,compiel=100").is_err());
+        assert!(FaultPlan::parse("compile=1500").is_err());
+        assert!(FaultPlan::parse("compile").is_err());
+        assert!(FaultPlan::parse("compile=abc").is_err());
+    }
+
+    #[test]
+    fn firing_is_deterministic_in_the_call_index() {
+        let a = FaultPlan::parse("seed=42,h2d=300").unwrap();
+        let b = FaultPlan::parse("seed=42,h2d=300").unwrap();
+        let fa: Vec<bool> = (0..200).map(|_| a.should_fail(FaultSite::H2d)).collect();
+        let fb: Vec<bool> = (0..200).map(|_| b.should_fail(FaultSite::H2d)).collect();
+        assert_eq!(fa, fb);
+        assert!(fa.iter().any(|&x| x), "rate 300/1000 over 200 calls must fire");
+        assert!(fa.iter().any(|&x| !x), "rate 300/1000 must not always fire");
+        assert_eq!(a.calls(FaultSite::H2d), 200);
+        assert_eq!(a.fired(FaultSite::H2d), fa.iter().filter(|&&x| x).count() as u64);
+    }
+
+    #[test]
+    fn different_seeds_give_different_schedules() {
+        let a = FaultPlan::parse("seed=1,d2h=500").unwrap();
+        let b = FaultPlan::parse("seed=2,d2h=500").unwrap();
+        let fa: Vec<bool> = (0..64).map(|_| a.should_fail(FaultSite::D2h)).collect();
+        let fb: Vec<bool> = (0..64).map(|_| b.should_fail(FaultSite::D2h)).collect();
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn limit_caps_total_fires() {
+        let p = FaultPlan::parse("seed=3,oom=1000:2").unwrap();
+        let fired = (0..50).filter(|_| p.should_fail(FaultSite::DeviceOom)).count();
+        assert_eq!(fired, 2);
+        assert_eq!(p.fired(FaultSite::DeviceOom), 2);
+        assert_eq!(p.calls(FaultSite::DeviceOom), 50);
+        assert_eq!(p.total_fired(), 2);
+    }
+
+    #[test]
+    fn disabled_sites_never_fire_and_check_tags_errors() {
+        let p = FaultPlan::parse("seed=9,compile=1000:1").unwrap();
+        assert!(!p.should_fail(FaultSite::WorkerPanic));
+        let e = check(Some(&p), FaultSite::Compile, "hlo build").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("injected compile fault"), "{msg}");
+        assert!(msg.contains("hlo build"), "{msg}");
+        assert!(check(Some(&p), FaultSite::Compile, "hlo build").is_ok(), "limit exhausted");
+        assert!(check(None, FaultSite::Compile, "x").is_ok());
+    }
+}

@@ -91,6 +91,22 @@ pub struct RunMetrics {
     /// Peak bytes held in device-resident joint buffers during batched
     /// plan replays (a gauge, like `device_resident_bytes`).
     pub batch_dev_resident_bytes: u64,
+    /// Robustness counters (see `runtime/faults.rs` and the failure-model
+    /// section of docs/runtime.md). All flows; zero on fault-free runs.
+    ///
+    /// Requests dropped by admission control: the producer found the queue
+    /// full, or supervision gave up after `max_requeues` worker crashes.
+    pub shed_requests: u64,
+    /// Requests shed because their deadline expired before dispatch.
+    pub deadline_misses: u64,
+    /// Compile attempts re-issued after a transient compile failure
+    /// (capped exponential backoff, before any demotion).
+    pub retries: u64,
+    /// Degradation-ladder drops: batch-replay → batch-interpret → solo →
+    /// solo replay → interpret → host reference, one count per rung.
+    pub demotions: u64,
+    /// Workers respawned by the coordinator's supervisor after a panic.
+    pub worker_restarts: u64,
 }
 
 impl RunMetrics {
@@ -147,6 +163,11 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.batch_plan_guard_misses += o.batch_plan_guard_misses;
         self.batch_dev_resident_bytes =
             self.batch_dev_resident_bytes.max(o.batch_dev_resident_bytes);
+        self.shed_requests += o.shed_requests;
+        self.deadline_misses += o.deadline_misses;
+        self.retries += o.retries;
+        self.demotions += o.demotions;
+        self.worker_restarts += o.worker_restarts;
     }
 }
 
@@ -232,5 +253,24 @@ mod tests {
         assert_eq!(a.batch_plan_misses, 1);
         assert_eq!(a.batch_plan_guard_misses, 1);
         assert_eq!(a.batch_dev_resident_bytes, 700, "batch residency is a gauge");
+    }
+
+    #[test]
+    fn robustness_counters_accumulate_as_flows() {
+        let mut a = RunMetrics { retries: 1, demotions: 2, ..Default::default() };
+        let b = RunMetrics {
+            shed_requests: 3,
+            deadline_misses: 1,
+            retries: 2,
+            demotions: 1,
+            worker_restarts: 1,
+            ..Default::default()
+        };
+        a += &b;
+        assert_eq!(a.shed_requests, 3);
+        assert_eq!(a.deadline_misses, 1);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.demotions, 3);
+        assert_eq!(a.worker_restarts, 1);
     }
 }

@@ -7,6 +7,7 @@ pub mod batching;
 pub mod buffers;
 pub mod eager;
 pub mod executor;
+pub mod faults;
 pub mod metrics;
 pub mod pjrt;
 pub mod plan;

@@ -20,10 +20,12 @@
 //!   steady-state GEMM moves zero host↔device payload.
 
 use crate::dhlo::DType;
+use crate::runtime::faults::{self, FaultPlan, FaultSite};
 use crate::runtime::tensor::{Data, Tensor};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Distinguishes temp workspaces of multiple devices within one process.
@@ -78,6 +80,10 @@ pub struct Device {
     client: xla::PjRtClient,
     temp: TempWorkspace,
     stats: std::sync::Mutex<DeviceStats>,
+    /// Fault-injection schedule captured at construction (`DISC_FAULTS` by
+    /// default). `None` — the production configuration — costs one branch
+    /// per seam; see `runtime/faults.rs`.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Compile-time proof that the runtime types may cross threads: the
@@ -107,11 +113,18 @@ pub struct DeviceStats {
 
 impl Device {
     pub fn cpu() -> Result<Device> {
+        Self::cpu_with_faults(FaultPlan::from_env())
+    }
+
+    /// A CPU device with an explicit fault-injection schedule (tests pass
+    /// one directly; `cpu()` reads `DISC_FAULTS`).
+    pub fn cpu_with_faults(faults: Option<Arc<FaultPlan>>) -> Result<Device> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
         Ok(Device {
             client,
             temp: TempWorkspace::new()?,
             stats: std::sync::Mutex::new(DeviceStats::default()),
+            faults,
         })
     }
 
@@ -119,9 +132,16 @@ impl Device {
         self.client.platform_name()
     }
 
+    /// The fault schedule this device injects from, if any.
+    pub fn faults(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
+    }
+
     /// Snapshot of the device's accumulated stats.
     pub fn stats(&self) -> DeviceStats {
-        self.stats.lock().expect("device stats lock").clone()
+        // Stats locks recover from poisoning: a panicking worker must not
+        // take device accounting (and every other worker) down with it.
+        self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
     }
 
     /// Compile HLO text into an executable. The text is round-tripped
@@ -142,6 +162,7 @@ impl Device {
     }
 
     pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        faults::check(self.faults.as_deref(), FaultSite::Compile, "compiling HLO")?;
         let start = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(path)
             .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
@@ -149,7 +170,7 @@ impl Device {
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling HLO: {e}"))?;
         let elapsed = start.elapsed();
         {
-            let mut s = self.stats.lock().expect("device stats lock");
+            let mut s = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             s.compilations += 1;
             s.compile_time += elapsed;
         }
@@ -159,13 +180,14 @@ impl Device {
     /// Host→device transfer: upload a host tensor as a device-resident
     /// buffer.
     pub fn h2d(&self, t: &Tensor) -> Result<DeviceTensor> {
+        faults::check(self.faults.as_deref(), FaultSite::H2d, "h2d transfer")?;
         let lit = tensor_to_literal(t)?;
         let buf = self
             .client
             .buffer_from_host_literal(&lit)
             .map_err(|e| anyhow!("h2d transfer: {e}"))?;
         {
-            let mut s = self.stats.lock().expect("device stats lock");
+            let mut s = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             s.h2d_transfers += 1;
             s.h2d_bytes += t.byte_size() as u64;
         }
@@ -174,9 +196,10 @@ impl Device {
 
     /// Device→host readback of a device-resident tensor.
     pub fn d2h(&self, dt: &DeviceTensor) -> Result<Tensor> {
+        faults::check(self.faults.as_deref(), FaultSite::D2h, "d2h readback")?;
         let t = dt.to_host()?;
         {
-            let mut s = self.stats.lock().expect("device stats lock");
+            let mut s = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             s.d2h_transfers += 1;
             s.d2h_bytes += t.byte_size() as u64;
         }
@@ -436,6 +459,39 @@ ENTRY main {
         let stats = dev.stats();
         assert_eq!(stats.h2d_transfers, 1);
         assert_eq!(stats.d2h_transfers, 1);
+    }
+
+    /// Injected faults surface as ordinary `Err`s at the transfer/compile
+    /// seams and are counted on the plan, and the device keeps working once
+    /// the schedule's limits are exhausted.
+    #[test]
+    fn injected_device_faults_surface_and_exhaust() {
+        let plan = Arc::new(
+            FaultPlan::parse("seed=5,compile=1000:1,h2d=1000:1,d2h=1000:1").unwrap(),
+        );
+        let dev = Device::cpu_with_faults(Some(plan.clone())).unwrap();
+        let hlo = r#"HloModule neg, entry_computation_layout={(f32[4]{0})->f32[4]{0}}
+
+ENTRY main {
+  p0 = f32[4]{0} parameter(0)
+  ROOT t = f32[4]{0} tanh(p0)
+}
+"#;
+        let e = dev.compile_hlo_text(hlo).unwrap_err();
+        assert!(format!("{e:#}").contains("injected compile fault"), "{e:#}");
+        let exe = dev.compile_hlo_text(hlo).unwrap();
+        let x = Tensor::f32(&[4], vec![0.1, -0.2, 0.3, -0.4]);
+        let e = dev.h2d(&x).unwrap_err();
+        assert!(format!("{e:#}").contains("injected h2d fault"), "{e:#}");
+        let d = dev.h2d(&x).unwrap();
+        let r = exe.run_on_device(&[&d], &[4], DType::F32).unwrap();
+        let e = dev.d2h(&r).unwrap_err();
+        assert!(format!("{e:#}").contains("injected d2h fault"), "{e:#}");
+        let back = dev.d2h(&r).unwrap();
+        assert_eq!(back.as_f32().unwrap().len(), 4);
+        assert_eq!(plan.fired(FaultSite::Compile), 1);
+        assert_eq!(plan.fired(FaultSite::H2d), 1);
+        assert_eq!(plan.fired(FaultSite::D2h), 1);
     }
 
     /// The temp workspace keeps HLO files in one per-process directory and

@@ -1,0 +1,186 @@
+//! Chaos smoke: end-to-end serving under injected faults.
+//!
+//! The gate (see ISSUE/ROADMAP robustness item): `serve_open_loop` with a
+//! fault schedule armed must lose **zero** requests — every offered
+//! request is either answered bit-identically to a fault-free reference
+//! (the solo interpreter or the host reference evaluator, whichever rung
+//! of the degradation ladder served it) or counted in `shed_requests` /
+//! `deadline_misses`. Fault-free runs must show zero demotions, retries,
+//! and restarts.
+//!
+//! The schedule comes from the `DISC_FAULTS` environment spec (the CI
+//! chaos matrix sweeps compile-fail, device-OOM, and worker-panic seeds)
+//! and falls back to a built-in spec that arms every seam, so a plain
+//! `cargo test --test chaos` exercises the same paths. With
+//! `DISC_BENCH_SMOKE=1` the run also writes a `BENCH_chaos.json`
+//! artifact with the per-site fire counts and robustness counters.
+
+use disc::compiler::{CompileOptions, CompiledModel, DiscCompiler, Mode};
+use disc::coordinator::{serve_open_loop, ServeOptions, ServeReport};
+use disc::runtime::faults::{FaultPlan, FaultSite, SITES};
+use disc::runtime::tensor::Tensor;
+use std::sync::Arc;
+
+/// Every seam armed: moderate compile/transfer/OOM rates with small caps
+/// (so the stream recovers) plus two guaranteed worker panics.
+const DEFAULT_SPEC: &str = "seed=23,compile=150:4,h2d=100:3,d2h=100:3,oom=150:4,panic=1000:2";
+
+/// The armed schedule: the CI matrix env spec, or the built-in default.
+fn armed_plan() -> Arc<FaultPlan> {
+    FaultPlan::from_env().unwrap_or_else(|| Arc::new(FaultPlan::parse(DEFAULT_SPEC).unwrap()))
+}
+
+/// A schedule that never fires — pins serving to fault-free behavior even
+/// when the chaos matrix exports `DISC_FAULTS` for this process.
+fn no_faults() -> Arc<FaultPlan> {
+    Arc::new(FaultPlan::parse("seed=1").unwrap())
+}
+
+fn compile_transformer(faults: Option<Arc<FaultPlan>>, opts: &CompileOptions) -> CompiledModel {
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let compiler = DiscCompiler::with_faults(faults).unwrap();
+    compiler.compile(disc::bridge::lower(&w.graph).unwrap(), opts).unwrap()
+}
+
+/// Fault-free references for the stream: the solo interpreter (plan cache
+/// and device residency off) and the host reference evaluator — the two
+/// fault-free answer sources the degradation ladder can bottom out on.
+fn references(stream: &[Vec<Tensor>]) -> (Vec<Vec<Tensor>>, Vec<Vec<Tensor>>) {
+    let mut interp_opts = CompileOptions::mode(Mode::Disc);
+    interp_opts.plan_cache = false;
+    interp_opts.device_resident = false;
+    let mut interp = compile_transformer(None, &interp_opts);
+    let want_interp: Vec<Vec<Tensor>> =
+        stream.iter().map(|r| interp.run(r).unwrap().outputs).collect();
+    let module = interp.module().clone();
+    let want_ref: Vec<Vec<Tensor>> = stream
+        .iter()
+        .map(|r| disc::runtime::reference::eval_module(&module, r).unwrap().outputs)
+        .collect();
+    (want_interp, want_ref)
+}
+
+#[test]
+fn serving_under_faults_loses_nothing_and_answers_bit_exactly() {
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let stream = w.request_stream(24, 77);
+    let (want_interp, want_ref) = references(&stream);
+
+    let plan = armed_plan();
+    let mut model = compile_transformer(Some(plan.clone()), &CompileOptions::mode(Mode::Disc));
+    let opts = ServeOptions::rate(20_000.0)
+        .workers(2)
+        .batch(3)
+        .batch_window_us(100)
+        .faults(plan.clone())
+        .keep_outputs();
+    let report = serve_open_loop(&mut model, stream, &opts).unwrap();
+
+    // Zero lost requests, with faults firing: completed + shed +
+    // deadline-missed reconciles to the offered stream.
+    assert_eq!(
+        report.completed as u64 + report.metrics.shed_requests + report.metrics.deadline_misses,
+        24,
+        "request accounting must balance under faults"
+    );
+
+    // Every answered request is bit-identical to a fault-free reference:
+    // the solo interpreter (replay/interpret rungs, batched or solo) or
+    // the host reference evaluator (the bottom rung).
+    assert_eq!(report.outputs.len(), report.completed);
+    for (id, got) in &report.outputs {
+        let i = *id as usize;
+        assert!(
+            got == &want_interp[i] || got == &want_ref[i],
+            "request {id} diverged from both fault-free references"
+        );
+    }
+
+    // Every injected worker panic surfaced as exactly one supervised
+    // restart; when the schedule arms the panic seam at all, at least one
+    // restart must be on the books.
+    assert_eq!(report.metrics.worker_restarts, plan.fired(FaultSite::WorkerPanic));
+    if plan.arms(FaultSite::WorkerPanic) {
+        assert!(report.metrics.worker_restarts >= 1, "armed panic seam never restarted");
+    }
+
+    if std::env::var("DISC_BENCH_SMOKE").is_ok() {
+        write_bench_artifact(&plan, &report);
+    }
+}
+
+#[test]
+fn fault_free_serving_shows_zero_demotions() {
+    // The regression half of the gate: with no faults armed, the ladder
+    // never demotes, nothing retries or sheds, and no worker restarts —
+    // robustness must be free when nothing fails. `no_faults()` pins both
+    // the device and the coordinator even if `DISC_FAULTS` is exported.
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let stream = w.request_stream(12, 78);
+    let mut model = compile_transformer(Some(no_faults()), &CompileOptions::mode(Mode::Disc));
+    let report = serve_open_loop(
+        &mut model,
+        stream,
+        &ServeOptions::rate(20_000.0).workers(2).faults(no_faults()),
+    )
+    .unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.metrics.demotions, 0, "fault-free serving must never demote");
+    assert_eq!(report.metrics.retries, 0);
+    assert_eq!(report.metrics.worker_restarts, 0);
+    assert_eq!(report.metrics.shed_requests, 0);
+    assert_eq!(report.metrics.deadline_misses, 0);
+}
+
+#[test]
+fn deadlines_shed_under_injected_overload() {
+    // Deadlines + faults compose: with every dispatch panicking until the
+    // requeue budget burns, a tight deadline converts the requeue churn
+    // into explicit shed/deadline accounting instead of unbounded retry.
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let stream = w.request_stream(6, 79);
+    let plan = Arc::new(FaultPlan::parse("seed=31,panic=1000").unwrap());
+    let mut model = compile_transformer(Some(no_faults()), &CompileOptions::mode(Mode::Disc));
+    let report = serve_open_loop(
+        &mut model,
+        stream,
+        &ServeOptions::rate(50_000.0).deadline_ms(60_000).max_requeues(1).faults(plan),
+    )
+    .unwrap();
+    // Every dispatch panics: each request burns its single requeue and is
+    // then shed (the generous deadline never fires here).
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.metrics.shed_requests, 6);
+    assert_eq!(report.metrics.deadline_misses, 0);
+    assert!(report.metrics.worker_restarts >= 6, "two dispatch attempts per request");
+}
+
+fn write_bench_artifact(plan: &FaultPlan, report: &ServeReport) {
+    use disc::util::json::{to_string_pretty, Value};
+    let sites: Vec<Value> = SITES
+        .iter()
+        .map(|&s| {
+            Value::obj(vec![
+                ("site", Value::Str(s.key().to_string())),
+                ("calls", Value::Num(plan.calls(s) as f64)),
+                ("fired", Value::Num(plan.fired(s) as f64)),
+            ])
+        })
+        .collect();
+    let m = &report.metrics;
+    let doc = Value::obj(vec![
+        ("bench", Value::Str("chaos".into())),
+        ("workload", Value::Str("transformer".into())),
+        ("seed", Value::Num(plan.seed() as f64)),
+        ("completed", Value::Num(report.completed as f64)),
+        ("shed_requests", Value::Num(m.shed_requests as f64)),
+        ("deadline_misses", Value::Num(m.deadline_misses as f64)),
+        ("retries", Value::Num(m.retries as f64)),
+        ("demotions", Value::Num(m.demotions as f64)),
+        ("worker_restarts", Value::Num(m.worker_restarts as f64)),
+        ("throughput_rps", Value::Num(report.throughput_rps)),
+        ("sites", Value::Arr(sites)),
+    ]);
+    std::fs::write("BENCH_chaos.json", to_string_pretty(&doc)).expect("write chaos artifact");
+    println!("wrote BENCH_chaos.json");
+}
