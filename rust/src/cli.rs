@@ -86,7 +86,15 @@ USAGE:
   disc import   --file <graph.json> [--mode disc] [--requests N]
   disc list     (show available workloads)
 
-Workloads: asr_tf asr_pt seq2seq tts bert ad_ranking transformer
+  The 'decode' workload serves autoregressive decode loops instead of
+  one-shot requests: --requests jobs of --prompt-len prompt tokens plus
+  --gen-steps generated tokens each, scheduled with iteration-level
+  continuous batching (--batch slots, --stagger boundaries between
+  arrivals; --deadline-ms and --faults shed/panic as above). Each job's
+  KV cache lives in the executor arena as a bucket-sized slab, so
+  consecutive steps replay one launch-plan family until rollover.
+
+Workloads: asr_tf asr_pt seq2seq tts bert ad_ranking transformer decode
 Modes:     eager (TF/PyTorch baseline), vm (Nimble-like), disc, static (XLA-like), auto
 ";
 

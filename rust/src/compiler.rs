@@ -11,7 +11,8 @@ use crate::passes::static_detect::{analyze, PipelineChoice};
 use crate::program::{generate, Program};
 use crate::runtime::batching::{BatchAnalysis, BatchOutput};
 use crate::runtime::eager::Eager;
-use crate::runtime::executor::{ExecOptions, ExecOutput, Executor};
+use crate::runtime::executor::{DecodeOutput, ExecOptions, ExecOutput, Executor};
+use crate::runtime::kv::DecodeSpec;
 use crate::runtime::pjrt::Device;
 use crate::runtime::tensor::Tensor;
 use crate::vm::Vm;
@@ -131,6 +132,64 @@ impl CompiledModel {
             outputs.push(out.outputs);
         }
         Ok(BatchOutput { outputs, metrics })
+    }
+
+    /// Drive one request's whole autoregressive decode loop (see
+    /// `Executor::run_decode`): per-request KV slab in the arena's KV
+    /// residency class, one plan family replayed per bucket. Program
+    /// backends only — decode serving is a runtime-flow feature.
+    pub fn run_decode(
+        &mut self,
+        spec: &DecodeSpec,
+        prompt: &[i64],
+        gen_steps: usize,
+    ) -> Result<DecodeOutput> {
+        match &mut self.backend {
+            Backend::Program { exec, prog } => exec.run_decode(prog, spec, prompt, gen_steps),
+            _ => anyhow::bail!(
+                "decode serving requires a program backend (disc/static/auto mode)"
+            ),
+        }
+    }
+
+    /// Acquire KV-slab bytes in the executor arena's KV residency class —
+    /// the seam the decode scheduler accounts per-request slabs through
+    /// (and where an injected OOM surfaces). Baselines hold no arena and
+    /// accept silently.
+    pub fn kv_acquire(&mut self, bytes: u64) -> Result<()> {
+        if let Backend::Program { exec, .. } = &mut self.backend {
+            let faults = exec.device.faults().cloned();
+            exec.pool.device.kv_acquire_checked(bytes, faults.as_deref())?;
+        }
+        Ok(())
+    }
+
+    /// Release KV-slab bytes (request exit or bucket rollover).
+    pub fn kv_release(&mut self, bytes: u64) {
+        if let Backend::Program { exec, .. } = &mut self.backend {
+            exec.pool.device.kv_release(bytes);
+        }
+    }
+
+    /// Current and peak KV-slab residency of the backend arena.
+    pub fn kv_residency(&self) -> (u64, u64) {
+        match &self.backend {
+            Backend::Program { exec, .. } => {
+                (exec.pool.device.kv_resident_bytes, exec.pool.device.kv_high_water_bytes)
+            }
+            _ => (0, 0),
+        }
+    }
+
+    /// The bucket policy decode KV slabs grow by (must match the executor
+    /// so every step binds at the slab's padded capacity). Baselines fall
+    /// back to the eager default.
+    pub fn bucket_policy(&self) -> BucketPolicy {
+        match &self.backend {
+            Backend::Vm { vm, .. } => vm.cache.policy(),
+            Backend::Program { exec, .. } => exec.opts.policy,
+            Backend::Eager { .. } => BucketPolicy::NextPow2,
+        }
     }
 
     /// The program plus its (cached) batchability analysis, for batch

@@ -1,0 +1,611 @@
+//! Iteration-level decode scheduling (Orca-style continuous batching).
+//!
+//! Autoregressive decode inverts the serving problem the parent module
+//! solves: a request is not one dispatch but a *loop* of steps, and
+//! batching whole requests would hold every member hostage to the longest
+//! one. This scheduler batches at **step granularity** instead: all
+//! running requests advance one decode step per scheduler iteration, and
+//! requests join and leave the running batch only at step boundaries —
+//! a finished request's slot frees immediately, a queued request joins
+//! mid-flight without waiting for the batch to drain.
+//!
+//! Each iteration re-groups the running members for dispatch by reusing
+//! [`assemble_batch`]'s group-key steering from the parent module: member
+//! step inputs are keyed by `group_key_extent` (for decode the residual is
+//! empty and the extent is the KV slab's bucket capacity), remembered
+//! group shapes steer re-assembly back to recorded batch plans, and ≥2
+//! member groups dispatch as one stacked walk (`CompiledModel::run_batch`,
+//! bit-identical to solo steps).
+//!
+//! Request state is **engine-owned**: each member's [`KvCache`] (embedding
+//! history + per-layer KV slabs at bucket capacity) lives here, its bytes
+//! accounted in the executor arena's KV residency class via
+//! `CompiledModel::kv_acquire`/`kv_release`. That split is what makes the
+//! failure model work — a worker panic mid-step destroys the executor, not
+//! the decode state: the member replays the same step (same token, same
+//! slab → bit-identical) after the restart, bounded by `max_requeues`.
+//! Every exit path (completion, deadline shed, requeue exhaustion, error)
+//! releases the member's slab bytes.
+
+use super::{assemble_batch, Request, Stashed};
+use crate::compiler::CompiledModel;
+use crate::runtime::batching::{group_key_extent, BatchKey};
+use crate::runtime::executor::argmax_token;
+use crate::runtime::faults::{FaultPlan, FaultSite};
+use crate::runtime::kv::{DecodeSpec, KvCache};
+use crate::runtime::metrics::RunMetrics;
+use crate::runtime::tensor::Tensor;
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One decode request: feed the prompt, then generate `gen_steps` tokens.
+pub struct DecodeJob {
+    pub id: u64,
+    pub prompt: Vec<i64>,
+    pub gen_steps: usize,
+    /// Scheduler iteration at which this job becomes visible to admission
+    /// (`0` = at serve start). Deterministic stand-in for arrival time: a
+    /// nonzero value exercises the mid-flight join path.
+    pub arrive_step: u64,
+}
+
+impl DecodeJob {
+    pub fn new(id: u64, prompt: Vec<i64>, gen_steps: usize) -> DecodeJob {
+        DecodeJob { id, prompt, gen_steps, arrive_step: 0 }
+    }
+}
+
+/// Decode-serving knobs (the step-loop analogue of `ServeOptions`).
+#[derive(Debug, Clone)]
+pub struct DecodeServeOptions {
+    /// Bound on concurrently running requests (the batch the step loop
+    /// re-groups each iteration).
+    pub max_batch: usize,
+    /// Per-request budget from admission; checked at step boundaries — an
+    /// expired member is shed (`deadline_misses`), its slab released.
+    pub deadline: Option<Duration>,
+    /// Panic-driven step replays a member may absorb before it is shed.
+    pub max_requeues: u32,
+    /// Fault schedule for worker-panic injection; `None` falls back to the
+    /// `DISC_FAULTS` environment spec.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Keep every member's per-step probability rows in its completion
+    /// (the differential gates compare them bit-for-bit against solo
+    /// loops; costs memory proportional to total steps).
+    pub capture_probs: bool,
+}
+
+impl DecodeServeOptions {
+    pub fn batch(max_batch: usize) -> DecodeServeOptions {
+        DecodeServeOptions {
+            max_batch: max_batch.max(1),
+            deadline: None,
+            max_requeues: 2,
+            faults: None,
+            capture_probs: false,
+        }
+    }
+
+    pub fn deadline(mut self, d: Duration) -> DecodeServeOptions {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn max_requeues(mut self, n: u32) -> DecodeServeOptions {
+        self.max_requeues = n;
+        self
+    }
+
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> DecodeServeOptions {
+        self.faults = Some(plan);
+        self
+    }
+
+    pub fn keep_probs(mut self) -> DecodeServeOptions {
+        self.capture_probs = true;
+        self
+    }
+}
+
+/// One finished decode request.
+#[derive(Debug, Clone)]
+pub struct DecodeCompletion {
+    pub id: u64,
+    /// Argmax-sampled token ids, one per generation step.
+    pub generated: Vec<i64>,
+    /// Total steps executed (prompt + generated).
+    pub steps: usize,
+    /// Per-step probability rows, kept under `capture_probs` only.
+    pub probs: Option<Vec<Tensor>>,
+    /// Admission-to-completion latency.
+    pub latency: Duration,
+}
+
+/// Aggregate decode-serving report.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeServeReport {
+    /// Jobs offered to the scheduler.
+    pub offered: usize,
+    pub completed: Vec<DecodeCompletion>,
+    pub wall: Duration,
+    /// Decode steps executed across all members (== tokens processed).
+    pub total_steps: u64,
+    pub tokens_per_sec: f64,
+    /// Step dispatches performed (a stacked group of k members counts 1).
+    pub dispatches: u64,
+    /// Dispatches that actually ran stacked (≥ 2 members).
+    pub batched_dispatches: u64,
+    /// Largest running batch observed at any step boundary.
+    pub max_occupancy: usize,
+    /// Admissions that joined a batch already mid-decode.
+    pub joins: u64,
+    pub metrics: RunMetrics,
+}
+
+/// One running request's engine-owned decode state.
+struct Member {
+    id: u64,
+    kv: KvCache,
+    prompt: Vec<i64>,
+    gen_steps: usize,
+    /// Steps completed so far (== tokens appended to the KV slab).
+    step: usize,
+    generated: Vec<i64>,
+    last_probs: Option<Tensor>,
+    probs: Vec<Tensor>,
+    admitted: Instant,
+    deadline: Option<Instant>,
+    requeues: u32,
+    slab_resident: bool,
+}
+
+impl Member {
+    fn total_steps(&self) -> usize {
+        self.prompt.len() + self.gen_steps
+    }
+
+    /// The token this member feeds at its current step. Pure — a panicked
+    /// dispatch replays the step with the identical token.
+    fn next_token(&self) -> i64 {
+        if self.step < self.prompt.len() {
+            self.prompt[self.step]
+        } else {
+            argmax_token(self.last_probs.as_ref().expect("post-prompt step has probs"))
+        }
+    }
+}
+
+/// Loop-shape counters the report surfaces next to the folded metrics.
+#[derive(Default)]
+struct LoopStats {
+    dispatches: u64,
+    batched_dispatches: u64,
+    joins: u64,
+    max_occupancy: usize,
+}
+
+/// Serve a set of decode jobs with iteration-level scheduling: admit at
+/// step boundaries up to `max_batch`, advance every running member one
+/// step per iteration (re-grouped through `assemble_batch` and dispatched
+/// stacked where the step graph batches), retire members as they finish.
+/// Upholds the coordinator's zero-lost invariant — every offered job is
+/// completed, shed, or deadline-missed — and releases every member's KV
+/// slab bytes on every exit path.
+pub fn serve_decode(
+    model: &mut CompiledModel,
+    spec: &DecodeSpec,
+    jobs: Vec<DecodeJob>,
+    opts: &DecodeServeOptions,
+) -> Result<DecodeServeReport> {
+    let offered = jobs.len();
+    let faults = opts.faults.clone().or_else(FaultPlan::from_env);
+    let start = Instant::now();
+    let mut arrivals: VecDeque<DecodeJob> = jobs.into();
+    let mut running: Vec<Member> = Vec::new();
+    let mut completions: Vec<DecodeCompletion> = Vec::new();
+    let mut metrics = RunMetrics::default();
+    let mut stats = LoopStats::default();
+
+    let result = drive(
+        model,
+        spec,
+        opts,
+        faults,
+        &mut arrivals,
+        &mut running,
+        &mut completions,
+        &mut metrics,
+        &mut stats,
+    );
+    // Error paths leave members behind: their slabs still die with them.
+    for m in running.drain(..) {
+        if m.slab_resident {
+            model.kv_release(m.kv.slab_bytes());
+        }
+    }
+    result?;
+
+    let (kv_now, kv_peak) = model.kv_residency();
+    anyhow::ensure!(kv_now == 0, "kv slabs leaked: {kv_now} bytes still resident after drain");
+    metrics.kv_resident_bytes = metrics.kv_resident_bytes.max(kv_peak);
+    metrics.decode_joins = stats.joins;
+    let accounted =
+        completions.len() as u64 + metrics.shed_requests + metrics.deadline_misses;
+    anyhow::ensure!(
+        accounted == offered as u64,
+        "lost decode jobs: {} completed + {} shed + {} deadline-missed != {offered} offered",
+        completions.len(),
+        metrics.shed_requests,
+        metrics.deadline_misses
+    );
+    let wall = start.elapsed();
+    let total_steps = metrics.decode_steps;
+    completions.sort_by_key(|c| c.id);
+    Ok(DecodeServeReport {
+        offered,
+        completed: completions,
+        wall,
+        total_steps,
+        tokens_per_sec: total_steps as f64 / wall.as_secs_f64().max(1e-9),
+        dispatches: stats.dispatches,
+        batched_dispatches: stats.batched_dispatches,
+        max_occupancy: stats.max_occupancy,
+        joins: stats.joins,
+        metrics,
+    })
+}
+
+/// The scheduler loop proper; extracted so `serve_decode` can release
+/// held slabs on any error path.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    model: &mut CompiledModel,
+    spec: &DecodeSpec,
+    opts: &DecodeServeOptions,
+    faults: Option<Arc<FaultPlan>>,
+    arrivals: &mut VecDeque<DecodeJob>,
+    running: &mut Vec<Member>,
+    completions: &mut Vec<DecodeCompletion>,
+    metrics: &mut RunMetrics,
+    stats: &mut LoopStats,
+) -> Result<()> {
+    let policy = model.bucket_policy();
+    let ctx = model.batch_context();
+    let mut planned_shapes: HashMap<BatchKey, Vec<i64>> = HashMap::new();
+    let mut iter = 0u64;
+
+    while !arrivals.is_empty() || !running.is_empty() {
+        // -- step-boundary admission (continuous batching's join point) --
+        let mid_flight = running.iter().any(|m| m.step > 0);
+        let mut i = 0;
+        while running.len() < opts.max_batch && i < arrivals.len() {
+            if arrivals[i].arrive_step > iter {
+                i += 1;
+                continue;
+            }
+            let job = arrivals.remove(i).expect("index checked");
+            let kv = KvCache::new(*spec, policy);
+            let slab_resident = model.kv_acquire(kv.slab_bytes()).is_ok();
+            if !slab_resident {
+                metrics.demotions += 1;
+            }
+            let now = Instant::now();
+            running.push(Member {
+                id: job.id,
+                kv,
+                prompt: job.prompt,
+                gen_steps: job.gen_steps,
+                step: 0,
+                generated: Vec::new(),
+                last_probs: None,
+                probs: Vec::new(),
+                admitted: now,
+                deadline: opts.deadline.map(|d| now + d),
+                requeues: 0,
+                slab_resident,
+            });
+            metrics.decode_requests += 1;
+            if mid_flight {
+                stats.joins += 1;
+            }
+        }
+        stats.max_occupancy = stats.max_occupancy.max(running.len());
+
+        // -- step-boundary shedding: expired members never run a step --
+        let now = Instant::now();
+        let mut j = 0;
+        while j < running.len() {
+            if running[j].deadline.is_some_and(|d| now >= d) {
+                let m = running.remove(j);
+                if m.slab_resident {
+                    model.kv_release(m.kv.slab_bytes());
+                }
+                metrics.deadline_misses += 1;
+            } else {
+                j += 1;
+            }
+        }
+        iter += 1;
+        if running.is_empty() {
+            continue; // nothing runnable yet (future arrivals only)
+        }
+
+        // -- build every member's step inputs (rolling buckets over) --
+        let mut tokens: HashMap<u64, i64> = HashMap::new();
+        let mut ready: VecDeque<Stashed> = VecDeque::new();
+        let mut key_of = |req: &Request| {
+            ctx.as_ref().and_then(|(p, a)| group_key_extent(&p.module, a, &req.inputs))
+        };
+        for m in running.iter_mut() {
+            if m.kv.full() {
+                // Bucket rollover at the step boundary: the member's next
+                // step binds (and on first sight records) the next
+                // capacity's plan family.
+                let old_bytes = m.kv.slab_bytes();
+                m.kv.grow();
+                metrics.kv_rollovers += 1;
+                if m.slab_resident {
+                    model.kv_release(old_bytes);
+                    m.slab_resident = model.kv_acquire(m.kv.slab_bytes()).is_ok();
+                    if !m.slab_resident {
+                        metrics.demotions += 1;
+                    }
+                }
+            }
+            let token = m.next_token();
+            tokens.insert(m.id, token);
+            let req = Request {
+                id: m.id,
+                inputs: m.kv.step_inputs(token)?,
+                arrived: m.admitted,
+                deadline: m.deadline,
+                requeues: m.requeues,
+            };
+            let tag = key_of(&req);
+            ready.push_back(Stashed { req, tag });
+        }
+
+        // -- per-step re-group: the parent's group-key steering, verbatim
+        // semantics (members whose keys agree stack; remembered shapes are
+        // preferred so repeat compositions replay recorded batch plans) --
+        while let Some(head) = ready.pop_front() {
+            let group = head.tag.as_ref().map(|(k, _)| k.clone());
+            let target = group.as_ref().and_then(|k| planned_shapes.get(k)).cloned();
+            let (batch, shape) = assemble_batch(
+                head.req,
+                head.tag,
+                &mut ready,
+                opts.max_batch,
+                Duration::ZERO,
+                target.as_deref(),
+                &mut key_of,
+                &mut || None,
+            );
+            let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+            let inputs: Vec<Vec<Tensor>> = batch.into_iter().map(|r| r.inputs).collect();
+            let dispatched = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(f) = &faults {
+                    if f.should_fail(FaultSite::WorkerPanic) {
+                        panic!("injected panic fault (decode step dispatch)");
+                    }
+                }
+                model.run_batch(&inputs)
+            }));
+            match dispatched {
+                Ok(Ok(out)) => {
+                    stats.dispatches += 1;
+                    *metrics += &out.metrics;
+                    if out.metrics.batched_launches > 0 {
+                        stats.batched_dispatches += 1;
+                        if shape.len() > 1 {
+                            if let Some(k) = group {
+                                planned_shapes.insert(k, shape);
+                            }
+                        }
+                    }
+                    for (id, outs) in ids.into_iter().zip(out.outputs) {
+                        advance_member(
+                            running,
+                            id,
+                            tokens[&id],
+                            outs,
+                            spec,
+                            opts,
+                            model,
+                            completions,
+                            metrics,
+                        )?;
+                    }
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(_panicked) => {
+                    // The step dispatch panicked: restart the engine, keep
+                    // the decode state. The fresh executor's arena starts
+                    // empty, so every still-resident member re-accounts
+                    // its slab; members that burned their requeue budget
+                    // are shed, the rest replay this step next iteration.
+                    metrics.worker_restarts += 1;
+                    model.restart_worker();
+                    for m in running.iter_mut() {
+                        if m.slab_resident {
+                            m.slab_resident = model.kv_acquire(m.kv.slab_bytes()).is_ok();
+                            if !m.slab_resident {
+                                metrics.demotions += 1;
+                            }
+                        }
+                    }
+                    for id in ids {
+                        let Some(pos) = running.iter().position(|m| m.id == id) else {
+                            continue;
+                        };
+                        if running[pos].requeues >= opts.max_requeues {
+                            let m = running.remove(pos);
+                            if m.slab_resident {
+                                model.kv_release(m.kv.slab_bytes());
+                            }
+                            metrics.shed_requests += 1;
+                        } else {
+                            running[pos].requeues += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fold one member's step outputs back into its state: append the KV
+/// rows, advance the cursor, retire the member if this was its last step
+/// (releasing its slab and emitting a completion).
+#[allow(clippy::too_many_arguments)]
+fn advance_member(
+    running: &mut Vec<Member>,
+    id: u64,
+    token: i64,
+    mut outs: Vec<Tensor>,
+    spec: &DecodeSpec,
+    opts: &DecodeServeOptions,
+    model: &mut CompiledModel,
+    completions: &mut Vec<DecodeCompletion>,
+    metrics: &mut RunMetrics,
+) -> Result<()> {
+    let pos = running
+        .iter()
+        .position(|m| m.id == id)
+        .expect("dispatched member is running");
+    let m = &mut running[pos];
+    anyhow::ensure!(
+        outs.len() == 1 + spec.layers,
+        "decode step returned {} outputs, want probs + {} kv rows",
+        outs.len(),
+        spec.layers
+    );
+    let kv_rows = outs.split_off(1);
+    m.kv.append(&kv_rows)?;
+    let probs = outs.pop().expect("probs output");
+    if m.step >= m.prompt.len() {
+        m.generated.push(token);
+    }
+    m.step += 1;
+    metrics.decode_steps += 1;
+    if opts.capture_probs {
+        m.probs.push(probs.clone());
+    }
+    m.last_probs = Some(probs);
+    if m.step == m.total_steps() {
+        let m = running.remove(pos);
+        if m.slab_resident {
+            model.kv_release(m.kv.slab_bytes());
+        }
+        completions.push(DecodeCompletion {
+            id: m.id,
+            generated: m.generated,
+            steps: m.step,
+            probs: if opts.capture_probs { Some(m.probs) } else { None },
+            latency: m.admitted.elapsed(),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+
+    fn decode_model() -> CompiledModel {
+        let g = crate::workloads::decode::graph();
+        let m = crate::bridge::lower(&g).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap()
+    }
+
+    #[test]
+    fn continuous_batching_matches_solo_decode_loops() {
+        let spec = crate::workloads::decode::spec();
+        let mut model = decode_model();
+        let jobs = vec![
+            DecodeJob::new(0, vec![3, 1, 4], 8),
+            DecodeJob::new(1, vec![2, 7], 9),
+            DecodeJob { id: 2, prompt: vec![5], gen_steps: 7, arrive_step: 3 },
+        ];
+        let opts = DecodeServeOptions::batch(4).keep_probs();
+        let report = serve_decode(&mut model, &spec, jobs, &opts).unwrap();
+        assert_eq!(report.completed.len(), 3);
+        assert_eq!(report.offered, 3);
+        assert!(report.joins >= 1, "job 2 must join the running batch mid-flight");
+        assert!(report.batched_dispatches >= 1, "same-capacity steps must stack");
+        assert!(report.max_occupancy >= 2);
+        assert_eq!(report.total_steps, (3 + 8) + (2 + 9) + (1 + 7));
+        assert_eq!(model.kv_residency().0, 0, "all slabs released at drain");
+
+        // The lock: continuous batching is bit-identical to solo
+        // step-by-step decode loops, member by member.
+        let mut solo = decode_model();
+        let cases: [(&[i64], usize); 3] = [(&[3, 1, 4], 8), (&[2, 7], 9), (&[5], 7)];
+        for c in &report.completed {
+            let (prompt, gen) = cases[c.id as usize];
+            let want = solo.run_decode(&spec, prompt, gen).unwrap();
+            assert_eq!(c.generated, want.generated, "job {}: token stream", c.id);
+            assert_eq!(c.steps, want.steps);
+            let probs = c.probs.as_ref().expect("captured");
+            assert_eq!(probs.len(), want.step_probs.len());
+            for (a, b) in probs.iter().zip(&want.step_probs) {
+                assert_eq!(a, b, "job {}: step probs must be bit-exact", c.id);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_deadline_sheds_at_step_boundaries() {
+        let spec = crate::workloads::decode::spec();
+        let mut model = decode_model();
+        let jobs = vec![DecodeJob::new(0, vec![1], 4), DecodeJob::new(1, vec![2], 4)];
+        let opts = DecodeServeOptions::batch(2).deadline(Duration::ZERO);
+        let report = serve_decode(&mut model, &spec, jobs, &opts).unwrap();
+        assert_eq!(report.completed.len(), 0);
+        assert_eq!(report.metrics.deadline_misses, 2, "both jobs expire at the boundary");
+        assert_eq!(model.kv_residency().0, 0, "shed members release their slabs");
+    }
+
+    #[test]
+    fn decode_panic_restarts_engine_and_replays_members() {
+        let spec = crate::workloads::decode::spec();
+        let plan = Arc::new(FaultPlan::parse("seed=7,panic=1000:1").unwrap());
+        let mut model = decode_model();
+        let jobs = vec![DecodeJob::new(0, vec![4, 2], 6), DecodeJob::new(1, vec![9], 5)];
+        let opts = DecodeServeOptions::batch(2).max_requeues(2).faults(plan).keep_probs();
+        let report = serve_decode(&mut model, &spec, jobs, &opts).unwrap();
+        assert_eq!(report.metrics.worker_restarts, 1, "one injected panic, one restart");
+        assert_eq!(report.completed.len(), 2, "requeued members finish after the restart");
+        assert_eq!(model.kv_residency().0, 0);
+
+        // Engine-owned KV state survives the restart: the replayed step is
+        // bit-identical, so the whole stream matches a fault-free run.
+        let mut clean = decode_model();
+        let cases: [(&[i64], usize); 2] = [(&[4, 2], 6), (&[9], 5)];
+        for c in &report.completed {
+            let (prompt, gen) = cases[c.id as usize];
+            let want = clean.run_decode(&spec, prompt, gen).unwrap();
+            assert_eq!(c.generated, want.generated, "job {}: restart must not fork", c.id);
+        }
+    }
+
+    #[test]
+    fn decode_requeue_exhaustion_sheds_and_releases() {
+        let spec = crate::workloads::decode::spec();
+        let plan = Arc::new(FaultPlan::parse("seed=8,panic=1000:1").unwrap());
+        let mut model = decode_model();
+        let jobs = vec![DecodeJob::new(0, vec![1], 3), DecodeJob::new(1, vec![2], 3)];
+        let opts = DecodeServeOptions::batch(2).max_requeues(0).faults(plan);
+        let report = serve_decode(&mut model, &spec, jobs, &opts).unwrap();
+        assert_eq!(report.completed.len(), 0, "zero requeue budget sheds on first panic");
+        assert_eq!(report.metrics.shed_requests, 2);
+        assert_eq!(report.metrics.worker_restarts, 1);
+        assert_eq!(model.kv_residency().0, 0, "shed members release their slabs");
+    }
+}

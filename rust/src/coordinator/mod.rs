@@ -60,6 +60,8 @@
 //! injection for the chaos gates is armed via `ServeOptions::faults` or
 //! the `DISC_FAULTS` environment spec (`runtime::faults`).
 
+pub mod decode;
+
 use crate::compiler::CompiledModel;
 use crate::program::Program;
 use crate::runtime::batching::{group_key_extent, BatchAnalysis, BatchKey, BatchOutput};

@@ -48,6 +48,9 @@ fn load_workload(args: &Args) -> Result<disc::workloads::Workload> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let w = load_workload(args)?;
+    if w.name == "decode" {
+        return cmd_run_decode(args);
+    }
     let mode = parse_mode(args.get("mode").unwrap_or("disc"))?;
     let requests = args.get_usize("requests", 50)?;
     let seed = args.get_usize("seed", 1)? as u64;
@@ -213,6 +216,81 @@ fn cmd_run(args: &Args) -> Result<()> {
             bs.entries, bs.hits, bs.misses, bs.guard_misses
         );
     }
+    Ok(())
+}
+
+/// Autoregressive decode serving: jobs step through the model one token
+/// at a time with iteration-level (continuous) batching, their KV caches
+/// living in the executor arena as bucket-sized slabs.
+fn cmd_run_decode(args: &Args) -> Result<()> {
+    let mode = parse_mode(args.get("mode").unwrap_or("disc"))?;
+    let requests = args.get_usize("requests", 8)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let prompt_len = args.get_usize("prompt-len", 4)?.max(1);
+    let gen_steps = args.get_usize("gen-steps", 24)?;
+    let max_batch = args.get_usize("batch", 4)?;
+    let stagger = args.get_usize("stagger", 2)? as u64;
+    let deadline_ms = args.get_usize("deadline-ms", 0)? as u64;
+
+    let graph = disc::workloads::decode::graph();
+    let module = disc::bridge::lower(&graph)?;
+    let compiler = DiscCompiler::new()?;
+    let mut model = compiler.compile(module, &CompileOptions::mode(mode))?;
+    println!(
+        "compiled decode [serving] pipeline={} groups={} kernels-planned={} ({} instrs)",
+        model.report.pipeline,
+        model.report.fusion_groups,
+        model.report.planned_kernels,
+        model.report.instrs_after,
+    );
+
+    let spec = disc::workloads::decode::spec();
+    let mut rng = disc::util::prng::Prng::new(seed);
+    let vocab = disc::workloads::decode::VOCAB as i64;
+    let jobs: Vec<coordinator::decode::DecodeJob> = (0..requests)
+        .map(|i| coordinator::decode::DecodeJob {
+            id: i as u64,
+            prompt: rng.fill_i64(prompt_len, 0, vocab - 1),
+            gen_steps,
+            arrive_step: i as u64 * stagger,
+        })
+        .collect();
+    let mut dopts = coordinator::decode::DecodeServeOptions::batch(max_batch);
+    if deadline_ms > 0 {
+        dopts = dopts.deadline(std::time::Duration::from_millis(deadline_ms));
+    }
+    if let Some(spec_str) = args.get("faults") {
+        dopts = dopts.faults(std::sync::Arc::new(
+            disc::runtime::faults::FaultPlan::parse(spec_str).context("--faults spec")?,
+        ));
+    }
+    let report = coordinator::decode::serve_decode(&mut model, &spec, jobs, &dopts)?;
+
+    let m = &report.metrics;
+    println!(
+        "decoded {}/{} jobs in {:.2?}  {} steps ({:.1} tok/s)",
+        report.completed.len(),
+        report.offered,
+        report.wall,
+        report.total_steps,
+        report.tokens_per_sec,
+    );
+    println!(
+        "scheduling: dispatches={} batched={} max-occupancy={} mid-flight-joins={}",
+        report.dispatches, report.batched_dispatches, report.max_occupancy, report.joins,
+    );
+    println!(
+        "kv: rollovers={} resident-peak={}  plans: hits={} misses={} guard_misses={}",
+        m.kv_rollovers,
+        disc::util::fmt_bytes(m.kv_resident_bytes as usize),
+        m.plan_hits,
+        m.plan_misses,
+        m.plan_guard_misses,
+    );
+    println!(
+        "robustness: shed={} deadline_misses={} demotions={} worker_restarts={}",
+        m.shed_requests, m.deadline_misses, m.demotions, m.worker_restarts
+    );
     Ok(())
 }
 

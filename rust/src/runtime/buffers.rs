@@ -49,6 +49,12 @@ pub struct DeviceArena {
     pub resident_bytes: u64,
     /// Peak residency observed.
     pub high_water_bytes: u64,
+    /// Currently live KV-cache slab bytes (decode requests). A third
+    /// lifetime class next to intermediates and weights: slabs outlive
+    /// every launch of their request but die when the request exits.
+    pub kv_resident_bytes: u64,
+    /// Peak KV slab residency observed.
+    pub kv_high_water_bytes: u64,
 }
 
 impl DeviceArena {
@@ -85,6 +91,34 @@ impl DeviceArena {
     /// A device buffer of `bytes` was released.
     pub fn release(&mut self, bytes: u64) {
         self.resident_bytes = self.resident_bytes.saturating_sub(bytes);
+    }
+
+    /// Fallible KV-slab acquire: same OOM seam as [`acquire_checked`]
+    /// (`FaultSite::DeviceOom` fires *before* accounting), but the bytes
+    /// land in the KV residency class — slabs live across launches for a
+    /// whole decode request, so mixing them into `resident_bytes` would
+    /// poison the per-plan intermediate accounting that replay snapshots
+    /// and restores on demotion.
+    ///
+    /// [`acquire_checked`]: DeviceArena::acquire_checked
+    pub fn kv_acquire_checked(
+        &mut self,
+        bytes: u64,
+        faults: Option<&crate::runtime::faults::FaultPlan>,
+    ) -> anyhow::Result<()> {
+        crate::runtime::faults::check(
+            faults,
+            crate::runtime::faults::FaultSite::DeviceOom,
+            "kv slab acquire",
+        )?;
+        self.kv_resident_bytes += bytes;
+        self.kv_high_water_bytes = self.kv_high_water_bytes.max(self.kv_resident_bytes);
+        Ok(())
+    }
+
+    /// A KV slab of `bytes` was released (request exit or bucket rollover).
+    pub fn kv_release(&mut self, bytes: u64) {
+        self.kv_resident_bytes = self.kv_resident_bytes.saturating_sub(bytes);
     }
 }
 
@@ -230,6 +264,30 @@ mod tests {
         let mut b = DeviceArena::default();
         b.acquire_checked(64, None).unwrap();
         assert_eq!(b.resident_bytes, 64);
+    }
+
+    #[test]
+    fn kv_slabs_account_separately_and_inject_oom() {
+        use crate::runtime::faults::{FaultPlan, FaultSite};
+        let mut a = DeviceArena::default();
+        a.acquire(100);
+        a.kv_acquire_checked(4096, None).unwrap();
+        assert_eq!(a.resident_bytes, 100, "slabs must not count as intermediates");
+        assert_eq!(a.kv_resident_bytes, 4096);
+        assert_eq!(a.kv_high_water_bytes, 4096);
+        // Rollover: release the old slab, acquire the doubled one.
+        a.kv_release(4096);
+        a.kv_acquire_checked(8192, None).unwrap();
+        assert_eq!(a.kv_resident_bytes, 8192);
+        assert_eq!(a.kv_high_water_bytes, 8192);
+        a.kv_release(8192);
+        assert_eq!(a.kv_resident_bytes, 0, "request exit must release its slab");
+        // The OOM seam fires before accounting, like acquire_checked.
+        let plan = FaultPlan::parse("seed=1,oom=1000:1").unwrap();
+        let e = a.kv_acquire_checked(64, Some(&plan)).unwrap_err();
+        assert!(format!("{e:#}").contains("injected oom fault"), "{e:#}");
+        assert_eq!(a.kv_resident_bytes, 0, "failed slab acquire must not account bytes");
+        assert_eq!(plan.fired(FaultSite::DeviceOom), 1);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::dhlo::{DType, Module, Op, ValueId};
 use crate::library::{GemmLibrary, GemmSrc, WeightKey};
 use crate::program::{Program, Step};
 use crate::runtime::buffers::BufferPool;
+use crate::runtime::kv::{DecodeSpec, KvCache};
 use crate::runtime::metrics::RunMetrics;
 use crate::runtime::pjrt::{Device, DeviceTensor};
 use crate::runtime::plan::{
@@ -152,6 +153,17 @@ pub struct Executor {
 
 pub struct ExecOutput {
     pub outputs: Vec<Tensor>,
+    pub metrics: RunMetrics,
+}
+
+/// Result of one request's decode loop (`Executor::run_decode`).
+pub struct DecodeOutput {
+    /// Argmax-sampled token ids, one per generation step.
+    pub generated: Vec<i64>,
+    /// The `[1, vocab]` probability row of every step, prompt included.
+    pub step_probs: Vec<Tensor>,
+    /// Total steps executed (prompt + generated).
+    pub steps: usize,
     pub metrics: RunMetrics,
 }
 
@@ -358,6 +370,97 @@ impl Executor {
             // ladder's original error, which names the faulted seam.
             Err(_) => Err(last_err),
         }
+    }
+
+    /// Drive one request's autoregressive decode loop: feed the prompt,
+    /// then `gen_steps` argmax-sampled tokens, one `run` per step over the
+    /// request's [`KvCache`]. Every step inside a bucket binds the slab at
+    /// the same padded capacity, so the whole bucket replays one
+    /// `LaunchPlan` family; a rollover re-records exactly once (one
+    /// `plan_misses` tick per bucket).
+    ///
+    /// Slab residency: the request's slab bytes are acquired in the
+    /// arena's KV class up front and re-accounted at each rollover. An
+    /// injected OOM on acquisition *demotes* the request to host-resident
+    /// slabs (counted in `demotions`) instead of failing it — the compute
+    /// path is identical, only the residency accounting is lost, matching
+    /// the serving stack's degrade-don't-drop discipline. All exit paths,
+    /// error included, release whatever the request holds.
+    pub fn run_decode(
+        &mut self,
+        prog: &Program,
+        spec: &DecodeSpec,
+        prompt: &[i64],
+        gen_steps: usize,
+    ) -> Result<DecodeOutput> {
+        anyhow::ensure!(!prompt.is_empty(), "decode needs at least one prompt token");
+        let mut kv = KvCache::new(*spec, self.opts.policy);
+        let faults = self.device.faults().cloned();
+        let mut metrics = RunMetrics { decode_requests: 1, ..Default::default() };
+        let mut slab_resident =
+            self.pool.device.kv_acquire_checked(kv.slab_bytes(), faults.as_deref()).is_ok();
+        if !slab_resident {
+            metrics.demotions += 1;
+        }
+
+        let total = prompt.len() + gen_steps;
+        let mut generated = Vec::with_capacity(gen_steps);
+        let mut step_probs = Vec::with_capacity(total);
+        let mut result = Ok(());
+        for step in 0..total {
+            if kv.full() {
+                // Bucket rollover: the next step binds a new capacity (one
+                // fresh plan record); re-account the slab at its new size.
+                let old_bytes = kv.slab_bytes();
+                kv.grow();
+                metrics.kv_rollovers += 1;
+                if slab_resident {
+                    self.pool.device.kv_release(old_bytes);
+                    slab_resident = self
+                        .pool
+                        .device
+                        .kv_acquire_checked(kv.slab_bytes(), faults.as_deref())
+                        .is_ok();
+                    if !slab_resident {
+                        metrics.demotions += 1;
+                    }
+                }
+            }
+            let token = if step < prompt.len() {
+                prompt[step]
+            } else {
+                let t = argmax_token(step_probs.last().expect("probs of previous step"));
+                generated.push(t);
+                t
+            };
+            result = (|| {
+                let inputs = kv.step_inputs(token)?;
+                let out = self.run(prog, &inputs)?;
+                metrics += &out.metrics;
+                metrics.decode_steps += 1;
+                let mut outs = out.outputs;
+                anyhow::ensure!(
+                    outs.len() == 1 + spec.layers,
+                    "decode step returned {} outputs, want probs + {} kv rows",
+                    outs.len(),
+                    spec.layers
+                );
+                let kv_rows = outs.split_off(1);
+                kv.append(&kv_rows)?;
+                step_probs.push(outs.pop().expect("probs output"));
+                Ok(())
+            })();
+            if result.is_err() {
+                break;
+            }
+        }
+        // The request exits here on every path: give its slab bytes back.
+        if slab_resident {
+            self.pool.device.kv_release(kv.slab_bytes());
+        }
+        metrics.kv_resident_bytes = self.pool.device.kv_high_water_bytes;
+        result?;
+        Ok(DecodeOutput { generated, step_probs, steps: total, metrics })
     }
 
     /// Tiers 1–3 (replay / record / interpret), with error-driven replay
@@ -1195,6 +1298,20 @@ impl Executor {
     }
 }
 
+/// First-max argmax over a probability row — the decode loop's
+/// deterministic sampler (ties break to the lowest token id, so every
+/// tier and every batch composition picks the same token).
+pub fn argmax_token(probs: &Tensor) -> i64 {
+    let Ok(v) = probs.as_f32() else { return 0 };
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as i64
+}
+
 /// Copy `src` into a fresh tensor of `bucket_dims` (each `>= src.dims[i]`),
 /// filling the tail with zeros. The valid data occupies the prefix box.
 pub fn pad_box(
@@ -1847,5 +1964,70 @@ mod tests {
         let out = exec.run(&prog, &[input]).unwrap();
         assert_eq!(out.metrics.retries, 1);
         assert_eq!(out.metrics.demotions, 0, "retry recovered without demoting");
+    }
+
+    fn decode_prog() -> Program {
+        let g = crate::workloads::decode::graph();
+        let m = crate::bridge::lower(&g).unwrap();
+        let m = crate::passes::optimize(&m).unwrap();
+        let p = plan(&m, &FusionOptions::default());
+        generate(m, &p).unwrap()
+    }
+
+    #[test]
+    fn decode_loop_replays_one_plan_family_per_bucket() {
+        let prog = decode_prog();
+        let spec = crate::workloads::decode::spec();
+        let dev = Arc::new(Device::cpu().unwrap());
+        let mut exec = Executor::new(
+            dev,
+            ExecOptions { policy: BucketPolicy::MultipleOf(16), ..Default::default() },
+        );
+        // 3 prompt + 17 generated = 20 steps: 16 in the first bucket, one
+        // rollover, 4 in the second.
+        let out = exec.run_decode(&prog, &spec, &[1, 2, 3], 17).unwrap();
+        assert_eq!(out.steps, 20);
+        assert_eq!(out.generated.len(), 17);
+        assert_eq!(out.step_probs.len(), 20);
+        assert_eq!(out.metrics.decode_requests, 1);
+        assert_eq!(out.metrics.decode_steps, 20);
+        assert_eq!(out.metrics.kv_rollovers, 1, "20 steps cross one bucket edge");
+        assert_eq!(out.metrics.plan_misses, 2, "exactly one record per bucket family");
+        assert_eq!(out.metrics.plan_hits, 18, "every other step replays");
+        let vocab = crate::workloads::decode::VOCAB as i64;
+        assert!(out.generated.iter().all(|&t| (0..vocab).contains(&t)));
+        for p in &out.step_probs {
+            assert_eq!(p.dims, vec![1, crate::workloads::decode::VOCAB]);
+        }
+        // Slab accounting: released on exit, high water saw the rollover.
+        assert_eq!(exec.pool.device.kv_resident_bytes, 0, "request exit releases its slab");
+        assert!(exec.pool.device.kv_high_water_bytes >= spec.slab_bytes(32));
+        assert_eq!(out.metrics.kv_resident_bytes, exec.pool.device.kv_high_water_bytes);
+    }
+
+    #[test]
+    fn decode_slab_oom_demotes_to_host_residency() {
+        use crate::runtime::faults::FaultPlan;
+        // The one injected OOM fires on the slab acquire: the request
+        // keeps decoding with host-resident slabs (a demotion, not a
+        // failure) and produces the same tokens as a fault-free run.
+        let prog = decode_prog();
+        let spec = crate::workloads::decode::spec();
+        let faulted = Arc::new(FaultPlan::parse("seed=3,oom=1000:1").unwrap());
+        let dev = Arc::new(Device::cpu_with_faults(Some(faulted)).unwrap());
+        let opts = ExecOptions { policy: BucketPolicy::MultipleOf(16), ..Default::default() };
+        let mut exec = Executor::new(dev, opts.clone());
+        let out = exec.run_decode(&prog, &spec, &[5, 9], 6).unwrap();
+        assert!(out.metrics.demotions >= 1, "slab OOM must demote");
+        assert_eq!(exec.pool.device.kv_resident_bytes, 0);
+        assert_eq!(exec.pool.device.kv_high_water_bytes, 0, "demoted slab never resident");
+
+        let mut clean = Executor::new(Arc::new(Device::cpu().unwrap()), opts);
+        let want = clean.run_decode(&prog, &spec, &[5, 9], 6).unwrap();
+        assert_eq!(out.generated, want.generated, "residency never changes the numerics");
+        assert_eq!(out.step_probs.len(), want.step_probs.len());
+        for (a, b) in out.step_probs.iter().zip(&want.step_probs) {
+            assert_eq!(a, b, "demoted decode stays bit-identical");
+        }
     }
 }

@@ -123,7 +123,11 @@ pub struct FaultPlan {
     sites: [SiteState; 6],
 }
 
-fn splitmix64(mut x: u64) -> u64 {
+/// The SplitMix64 mixing function behind every fault decision. Public so
+/// seeded test harnesses (e.g. the differential property suite) can derive
+/// reproducible per-case seeds from the same primitive without pulling in
+/// an external PRNG crate.
+pub fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
     x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);

@@ -1,0 +1,264 @@
+//! Per-request KV cache for autoregressive decode.
+//!
+//! The hardest dynamic-shape scenario in the paper's lineage is the decode
+//! *loop*: sequence length grows by one per step, so a naive
+//! implementation re-binds (and re-records) a new shape every iteration.
+//! The cache sidesteps that by storing each request's keys/values in
+//! **bucket-sized slabs**: host/device buffers whose leading extent is the
+//! bucket of the current sequence length under the executor's
+//! [`BucketPolicy`]. Appends write in place and the slab is passed to the
+//! decode graph at its *padded capacity* `C`, so every step inside a
+//! bucket binds the identical symbol vector and replays the same
+//! [`LaunchPlan`](crate::runtime::plan::LaunchPlan) family. Only when the
+//! sequence outgrows `C` does the slab **roll over** to the next bucket —
+//! costing exactly one new plan record.
+//!
+//! Pad lanes stay bit-exact for free: the step graph adds an additive mask
+//! (`0.0` on valid lanes, [`MASK_NEG`] on empty ones) to the attention
+//! energies, and `exp(x - max)` underflows to exactly `0.0f32` on masked
+//! lanes, so softmax weights — and therefore every output — are bitwise
+//! identical to an exact-length computation.
+//!
+//! Slab bytes are accounted in the third residency class of the
+//! [`DeviceArena`](crate::runtime::buffers::DeviceArena)
+//! (`kv_resident_bytes`): slabs outlive every launch of their request but
+//! die when the request exits, unlike per-launch intermediates and
+//! process-lifetime GEMM weights. The executor's step-loop driver
+//! (`Executor::run_decode`) and the coordinator's iteration-level
+//! scheduler (`coordinator::decode`) own acquisition/release.
+
+use crate::codegen::BucketPolicy;
+use crate::runtime::tensor::{Data, Tensor};
+use anyhow::{bail, ensure, Result};
+
+/// Additive attention-mask value for empty (future/pad) lanes. Large
+/// enough that `exp(x - max)` underflows to exactly `0.0f32` after the
+/// stable-softmax shift, keeping padded softmax bitwise identical to the
+/// exact-length computation on valid lanes.
+pub const MASK_NEG: f32 = -1e9;
+
+/// Static description of a decode-mode model: what the step graph expects
+/// and how tokens embed. Produced by the workload that built the graph
+/// (see `workloads::decode::spec`).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeSpec {
+    /// Transformer layers == number of per-layer KV slab parameters.
+    pub layers: usize,
+    /// Hidden width `H`; slabs are `[C, 2H]` (keys ++ values columns).
+    pub hidden: usize,
+    /// Vocabulary size of the `probs` output.
+    pub vocab: usize,
+    /// Deterministic host-side token embedding: `(token, hidden) -> [H]`.
+    pub embed: fn(i64, usize) -> Vec<f32>,
+}
+
+impl DecodeSpec {
+    /// Bytes of one request's slabs at bucket capacity `c`: per-layer
+    /// `[c, 2H]` KV slabs plus the `[c, H]` embedding history, f32.
+    pub fn slab_bytes(&self, c: usize) -> u64 {
+        ((self.layers * 2 * self.hidden + self.hidden) * c * 4) as u64
+    }
+}
+
+/// One request's decode state: embedding history + per-layer KV slabs at
+/// the current bucket capacity, plus the append cursor.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    spec: DecodeSpec,
+    policy: BucketPolicy,
+    /// Current bucket capacity `C` (leading extent of every step input).
+    capacity: usize,
+    /// Valid rows: tokens whose k/v have been appended so far.
+    used: usize,
+    /// Embedding history `[C, H]` (row `t` = embedding of token `t`).
+    x_hist: Vec<f32>,
+    /// Per-layer KV slabs `[C, 2H]`, keys in columns `0..H`, values in
+    /// `H..2H`.
+    slabs: Vec<Vec<f32>>,
+    /// Bucket rollovers performed by this cache.
+    pub rollovers: u64,
+}
+
+impl KvCache {
+    pub fn new(spec: DecodeSpec, policy: BucketPolicy) -> KvCache {
+        let capacity = policy.bucket(1);
+        KvCache {
+            spec,
+            policy,
+            capacity,
+            used: 0,
+            x_hist: vec![0.0; capacity * spec.hidden],
+            slabs: vec![vec![0.0; capacity * 2 * spec.hidden]; spec.layers],
+            rollovers: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// No append slot left: the next step must [`grow`](KvCache::grow)
+    /// first (a bucket rollover).
+    pub fn full(&self) -> bool {
+        self.used == self.capacity
+    }
+
+    /// Bytes of this cache's slabs at the current capacity — what the
+    /// arena's KV class holds while the request is device-resident.
+    pub fn slab_bytes(&self) -> u64 {
+        self.spec.slab_bytes(self.capacity)
+    }
+
+    /// Roll the slabs over to the next bucket: reallocate at
+    /// `bucket(capacity + 1)`, copying live rows and zero-filling the new
+    /// tail. The caller re-accounts arena bytes (release old, acquire new)
+    /// and pays one plan record on the next step — the new leading extent
+    /// is a fresh binding vector.
+    pub fn grow(&mut self) {
+        let new_cap = self.policy.bucket(self.capacity + 1);
+        debug_assert!(new_cap > self.capacity, "bucket policy must grow the capacity");
+        let h = self.spec.hidden;
+        self.x_hist.resize(new_cap * h, 0.0);
+        for slab in &mut self.slabs {
+            slab.resize(new_cap * 2 * h, 0.0);
+        }
+        self.capacity = new_cap;
+        self.rollovers += 1;
+    }
+
+    /// Build the step inputs for the next token, in the decode graph's
+    /// parameter order: `[x_hist, aux, slab_0, .., slab_{L-1}]`, every
+    /// tensor at the padded capacity `C` so consecutive steps inside a
+    /// bucket bind identically. Writes the token's embedding into the
+    /// history at row `used`; `aux` column 0 is the additive mask over
+    /// past lanes (`0.0` below `used`, [`MASK_NEG`] from `used` up) and
+    /// column 1 one-hot selects the current row.
+    pub fn step_inputs(&mut self, token: i64) -> Result<Vec<Tensor>> {
+        ensure!(!self.full(), "kv cache full at capacity {}: grow() first", self.capacity);
+        let (c, h) = (self.capacity, self.spec.hidden);
+        let emb = (self.spec.embed)(token, h);
+        ensure!(emb.len() == h, "embed returned {} values, want {h}", emb.len());
+        self.x_hist[self.used * h..(self.used + 1) * h].copy_from_slice(&emb);
+        let mut aux = vec![0.0f32; c * 2];
+        for lane in 0..c {
+            aux[lane * 2] = if lane < self.used { 0.0 } else { MASK_NEG };
+            aux[lane * 2 + 1] = if lane == self.used { 1.0 } else { 0.0 };
+        }
+        let mut inputs = Vec::with_capacity(2 + self.spec.layers);
+        inputs.push(Tensor::f32(&[c, h], self.x_hist.clone()));
+        inputs.push(Tensor::f32(&[c, 2], aux));
+        for slab in &self.slabs {
+            inputs.push(Tensor::f32(&[c, 2 * h], slab.clone()));
+        }
+        Ok(inputs)
+    }
+
+    /// Append one step's per-layer `[1, 2H]` KV rows (the graph's
+    /// `kv_new_*` outputs) in place at row `used`, advancing the cursor.
+    pub fn append(&mut self, kv_rows: &[Tensor]) -> Result<()> {
+        ensure!(!self.full(), "kv cache full at capacity {}: grow() first", self.capacity);
+        ensure!(
+            kv_rows.len() == self.spec.layers,
+            "append wants {} kv rows, got {}",
+            self.spec.layers,
+            kv_rows.len()
+        );
+        let h2 = 2 * self.spec.hidden;
+        for (slab, row) in self.slabs.iter_mut().zip(kv_rows) {
+            ensure!(row.dims == [1, h2], "kv row dims {:?}, want [1, {h2}]", row.dims);
+            let Data::F32(v) = &row.data else {
+                bail!("kv row must be f32");
+            };
+            slab[self.used * h2..(self.used + 1) * h2].copy_from_slice(v);
+        }
+        self.used += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_spec() -> DecodeSpec {
+        fn emb(token: i64, hidden: usize) -> Vec<f32> {
+            (0..hidden).map(|i| (token as f32) + i as f32).collect()
+        }
+        DecodeSpec { layers: 2, hidden: 4, vocab: 8, embed: emb }
+    }
+
+    fn kv_row(h: usize, fill: f32) -> Tensor {
+        Tensor::f32(&[1, 2 * h], vec![fill; 2 * h])
+    }
+
+    #[test]
+    fn capacity_follows_bucket_policy() {
+        let mut kv = KvCache::new(test_spec(), BucketPolicy::MultipleOf(16));
+        assert_eq!(kv.capacity(), 16);
+        for step in 0..16 {
+            assert!(!kv.full(), "step {step}");
+            kv.step_inputs(step as i64).unwrap();
+            kv.append(&[kv_row(4, 1.0), kv_row(4, 2.0)]).unwrap();
+        }
+        assert!(kv.full());
+        kv.grow();
+        assert_eq!(kv.capacity(), 32);
+        assert_eq!(kv.rollovers, 1);
+        assert_eq!(kv.used(), 16, "grow keeps live rows");
+    }
+
+    #[test]
+    fn step_inputs_mask_and_selector() {
+        let spec = test_spec();
+        let mut kv = KvCache::new(spec, BucketPolicy::MultipleOf(4));
+        kv.append(&[kv_row(4, 0.5), kv_row(4, 0.25)]).unwrap(); // one past token
+        let inputs = kv.step_inputs(7).unwrap();
+        assert_eq!(inputs.len(), 4, "x_hist + aux + one slab per layer");
+        assert_eq!(inputs[0].dims, vec![4, 4]);
+        assert_eq!(inputs[1].dims, vec![4, 2]);
+        assert_eq!(inputs[2].dims, vec![4, 8]);
+        let Data::F32(aux) = &inputs[1].data else { panic!("aux dtype") };
+        // Lane 0 is the (only) valid past lane; lane 1 is current (masked
+        // in the past-attention, selected for the embedding row).
+        assert_eq!(aux[0], 0.0);
+        assert_eq!(aux[1], 0.0);
+        assert_eq!(aux[2], MASK_NEG);
+        assert_eq!(aux[3], 1.0);
+        assert_eq!(aux[4], MASK_NEG);
+        assert_eq!(aux[5], 0.0);
+        let Data::F32(xh) = &inputs[0].data else { panic!("x_hist dtype") };
+        assert_eq!(&xh[4..8], &[7.0, 8.0, 9.0, 10.0], "embedding written at row used");
+        let Data::F32(slab) = &inputs[2].data else { panic!("slab dtype") };
+        assert!(slab[..8].iter().all(|&x| x == 0.5), "appended kv row survives");
+    }
+
+    #[test]
+    fn append_round_trips_through_grow() {
+        let mut kv = KvCache::new(test_spec(), BucketPolicy::NextPow2);
+        assert_eq!(kv.capacity(), 1);
+        kv.append(&[kv_row(4, 1.0), kv_row(4, 1.0)]).unwrap();
+        assert!(kv.append(&[kv_row(4, 2.0), kv_row(4, 2.0)]).is_err(), "full slab rejects");
+        kv.grow();
+        assert_eq!(kv.capacity(), 2);
+        kv.append(&[kv_row(4, 2.0), kv_row(4, 2.0)]).unwrap();
+        let inputs = kv.step_inputs(0).unwrap();
+        // Grow happened mid-stream: both rows must survive in the slab.
+        let Data::F32(slab) = &inputs[2].data else { panic!("slab dtype") };
+        assert!(slab[..8].iter().all(|&x| x == 1.0));
+        assert!(slab[8..16].iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn slab_bytes_track_capacity() {
+        let spec = test_spec();
+        let mut kv = KvCache::new(spec, BucketPolicy::MultipleOf(8));
+        // (2 layers * 2H + H) * C * 4 bytes = (16 + 4) * 8 * 4.
+        assert_eq!(kv.slab_bytes(), 640);
+        kv.grow();
+        assert_eq!(kv.slab_bytes(), 1280);
+    }
+}

@@ -107,6 +107,23 @@ pub struct RunMetrics {
     pub demotions: u64,
     /// Workers respawned by the coordinator's supervisor after a panic.
     pub worker_restarts: u64,
+    /// Autoregressive decode counters (see `runtime/kv.rs` and the decode
+    /// section of docs/runtime.md). All flows except `kv_resident_bytes`.
+    ///
+    /// Decode requests driven to completion through the step loop.
+    pub decode_requests: u64,
+    /// Individual decode steps executed (one token each).
+    pub decode_steps: u64,
+    /// KV slab bucket rollovers: the slab outgrew its bucket capacity and
+    /// was re-acquired at the next bucket (each one costs exactly one new
+    /// plan record; every other step replays the current plan family).
+    pub kv_rollovers: u64,
+    /// Requests that joined a running decode batch at a step boundary
+    /// (iteration-level scheduling; zero for solo decode loops).
+    pub decode_joins: u64,
+    /// Peak bytes held in KV-cache slabs during the run (a gauge, like
+    /// `device_resident_bytes`).
+    pub kv_resident_bytes: u64,
 }
 
 impl RunMetrics {
@@ -168,6 +185,11 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.retries += o.retries;
         self.demotions += o.demotions;
         self.worker_restarts += o.worker_restarts;
+        self.decode_requests += o.decode_requests;
+        self.decode_steps += o.decode_steps;
+        self.kv_rollovers += o.kv_rollovers;
+        self.decode_joins += o.decode_joins;
+        self.kv_resident_bytes = self.kv_resident_bytes.max(o.kv_resident_bytes);
     }
 }
 
@@ -253,6 +275,33 @@ mod tests {
         assert_eq!(a.batch_plan_misses, 1);
         assert_eq!(a.batch_plan_guard_misses, 1);
         assert_eq!(a.batch_dev_resident_bytes, 700, "batch residency is a gauge");
+    }
+
+    #[test]
+    fn decode_counters_fold_across_workers() {
+        // Flows sum, the slab gauge maxes — folding per-worker decode
+        // metrics must neither double-count steps nor sum slab residency.
+        let mut a = RunMetrics {
+            decode_requests: 1,
+            decode_steps: 20,
+            kv_rollovers: 1,
+            kv_resident_bytes: 40_960,
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            decode_requests: 2,
+            decode_steps: 35,
+            kv_rollovers: 2,
+            decode_joins: 1,
+            kv_resident_bytes: 24_576,
+            ..Default::default()
+        };
+        a += &b;
+        assert_eq!(a.decode_requests, 3);
+        assert_eq!(a.decode_steps, 55);
+        assert_eq!(a.kv_rollovers, 3);
+        assert_eq!(a.decode_joins, 1);
+        assert_eq!(a.kv_resident_bytes, 40_960, "slab residency is a gauge");
     }
 
     #[test]

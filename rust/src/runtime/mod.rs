@@ -8,6 +8,7 @@ pub mod buffers;
 pub mod eager;
 pub mod executor;
 pub mod faults;
+pub mod kv;
 pub mod metrics;
 pub mod pjrt;
 pub mod plan;

@@ -1,0 +1,315 @@
+//! Autoregressive decode-step workload — the growing-sequence scenario the
+//! paper's lineage (Nimble's loops, Relax's symbolic shapes) targets, and
+//! the graph behind the serving stack's decode mode.
+//!
+//! One invocation computes ONE decode step for one request. Every input
+//! arrives at the request's KV-slab **bucket capacity** `C` (see
+//! `runtime/kv.rs`), so consecutive steps inside a bucket bind the same
+//! symbol vector and replay one `LaunchPlan` family:
+//!
+//! * `x_hist  [C, H]` — embedding history; row `t` embeds token `t`.
+//! * `aux     [C, 2]` — column 0: additive attention mask over past lanes
+//!   (`0.0` valid, `-1e9` empty — exp underflow keeps padded softmax
+//!   bit-exact); column 1: one-hot selector of the current row.
+//! * `kv_slab_l [C, 2H]` per layer — keys in columns `0..H`, values in
+//!   `H..2H`, appended in place by the step-loop driver.
+//!
+//! The step must stay **batch-eligible** (decode serving coalesces
+//! same-capacity *and* mixed-capacity requests into stacked dispatches),
+//! which shapes two choices: every parameter leads with the dynamic
+//! capacity symbol, and column extraction uses exact 0/1 constant
+//! projection GEMMs instead of `Split` — the dynamic-axis `Split` lowering
+//! mints content-reading shape symbols (`DSlice` extents) that make a
+//! program ineligible for batching. The projections are bit-exact (each
+//! output element is `1.0 * x` plus exact zeros) and classify as Stacked
+//! GEMMs, the row-parallel launches batching amortizes.
+//!
+//! This module is also the **shared decode driver**: the growing-time-axis
+//! placeholder and decoder-cell helpers here are reused by the single-step
+//! decoder workloads (`seq2seq`, `tts`) so the loop and the single-step
+//! graphs share one definition of the time axis.
+
+use super::Workload;
+use crate::dhlo::{BinKind, DType, Literal, UnKind};
+use crate::graph::{Edge, GOp, Graph, GraphBuilder};
+use crate::runtime::kv::{DecodeSpec, MASK_NEG};
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+pub const HIDDEN: usize = 64;
+pub const FFN: usize = 128;
+pub const VOCAB: usize = 256;
+pub const LAYERS: usize = 2;
+
+// ---- shared decode-driver pieces (used by seq2seq / tts / decode) -------
+
+/// The growing time axis: a dynamic-leading `[S, cols]` f32 placeholder.
+/// Every decoder-step input that grows with the sequence (encoder memory,
+/// embedding history, KV slabs) is declared through this one definition.
+pub fn time_axis(gb: &mut GraphBuilder, name: &str, cols: usize) -> Edge {
+    gb.placeholder(name, DType::F32, &[-1, cols as i64])
+}
+
+/// The growing time axis for token ids: a dynamic `[S]` i64 placeholder.
+pub fn time_axis_ids(gb: &mut GraphBuilder, name: &str) -> Edge {
+    gb.placeholder(name, DType::I64, &[-1])
+}
+
+/// Gated decoder cell core: `{prefix}z = sigmoid(z_in)` and
+/// `{prefix}cand = tanh(cand_in)` — the sigmoid/tanh pair every decoder
+/// step (seq2seq's GRU-ish cell, tts's gated update) builds on.
+pub fn gate_pair(
+    gb: &mut GraphBuilder,
+    prefix: &str,
+    z_in: Edge,
+    cand_in: Edge,
+) -> (Edge, Edge) {
+    let z = gb.unary(&format!("{prefix}z"), UnKind::Sigmoid, z_in);
+    let cand = gb.unary(&format!("{prefix}cand"), UnKind::Tanh, cand_in);
+    (z, cand)
+}
+
+/// Additive-attention energies over a (dynamic) set of keys:
+/// `tanh(keys + q_row) · v -> [S, 1]`, with the query row broadcast over
+/// the time axis. Shared by tts's encoder-memory attention and the decode
+/// step's KV-slab attention.
+pub fn additive_energy(
+    gb: &mut GraphBuilder,
+    prefix: &str,
+    keys: Edge,
+    q_row: Edge,
+    v: Edge,
+) -> Edge {
+    let added = gb.binary(&format!("{prefix}added"), BinKind::Add, keys, q_row);
+    let th = gb.unary(&format!("{prefix}tanh"), UnKind::Tanh, added);
+    gb.matmul(&format!("{prefix}scores"), th, v)
+}
+
+// ---- the decode-step graph ----------------------------------------------
+
+/// Exact 0/1 constant `[rows, hi-lo]` projection selecting columns
+/// `lo..hi` via GEMM. Bit-exact (`1.0 * x` plus exact zeros) and
+/// batch-classified Stacked, unlike a dynamic-axis `Split`.
+fn col_selector(gb: &mut GraphBuilder, name: &str, rows: usize, lo: usize, hi: usize) -> Edge {
+    let cols = hi - lo;
+    let mut data = vec![0.0f32; rows * cols];
+    for r in lo..hi {
+        data[r * cols + (r - lo)] = 1.0;
+    }
+    gb.add(name, GOp::Const { lit: Literal::F32(data), dims: vec![rows, cols] }, &[])
+}
+
+/// One decode layer: additive attention of the current token's query over
+/// the layer's KV slab (masked past lanes) plus an in-graph self lane,
+/// then out-projection, residual/LN, and FFN. Returns the layer output
+/// `[1, H]` and the packed `[1, 2H]` KV row to append.
+fn decode_layer(
+    gb: &mut GraphBuilder,
+    x: Edge,
+    slab: Edge,
+    mask_row: Edge,
+    layer: usize,
+    seed: u64,
+) -> (Edge, Edge) {
+    let p = |s: &str| format!("l{layer}_{s}");
+    // Split the slab into its K and V halves ([C, H] each, Stacked).
+    let pk = col_selector(gb, &p("proj_k"), 2 * HIDDEN, 0, HIDDEN);
+    let pv = col_selector(gb, &p("proj_v"), 2 * HIDDEN, HIDDEN, 2 * HIDDEN);
+    let k_slab = gb.matmul(&p("k_slab"), slab, pk);
+    let v_slab = gb.matmul(&p("v_slab"), slab, pv);
+
+    // Current-token projections [1, H].
+    let wq = gb.weight(&p("wq"), &[HIDDEN, HIDDEN], seed + 1);
+    let wk = gb.weight(&p("wk"), &[HIDDEN, HIDDEN], seed + 2);
+    let wv = gb.weight(&p("wv"), &[HIDDEN, HIDDEN], seed + 3);
+    let q = gb.matmul(&p("q"), x, wq);
+    let k_new = gb.matmul(&p("k_new"), x, wk);
+    let v_new = gb.matmul(&p("v_new"), x, wv);
+
+    // Additive attention energies over the slab's past lanes (the [C, H]
+    // keys GEMM is the dominant, batching-amortized launch) ...
+    let wm = gb.weight(&p("attn_wm"), &[HIDDEN, HIDDEN], seed + 4);
+    let va = gb.weight(&p("attn_v"), &[HIDDEN, 1], seed + 5);
+    let keys = gb.matmul(&p("attn_keys"), k_slab, wm);
+    let q_row = gb.reshape(&p("attn_q_row"), q, &[HIDDEN as i64]);
+    let e_past = additive_energy(gb, &p("attn_past_"), keys, q_row, va); // [C, 1]
+    let e_past_t = gb.transpose(&p("attn_past_t"), e_past, &[1, 0]); // [1, C]
+    // ... masked additively: empty lanes get -1e9 and underflow to an
+    // exact 0.0 softmax weight. (This Add also unifies the slab's leading
+    // symbol with aux's — one shared capacity symbol across parameters.)
+    let e_masked = gb.binary(&p("attn_masked"), BinKind::Add, e_past_t, mask_row);
+    // ... plus the in-graph self lane (k/v of the current token are not in
+    // the slab yet; they are appended after the step).
+    let keys_self = gb.matmul(&p("attn_keys_self"), k_new, wm); // [1, H]
+    let e_self = additive_energy(gb, &p("attn_self_"), keys_self, q_row, va); // [1, 1]
+    let scores = gb.concat(&p("attn_scores"), &[e_masked, e_self], 1); // [1, C+1]
+    let attn = gb.softmax(&p("attn_weights"), scores);
+    let v_full = gb.concat(&p("v_full"), &[v_slab, v_new], 0); // [C+1, H]
+    let ctx = gb.matmul(&p("attn_ctx"), attn, v_full); // [1, H]
+
+    // Out-projection, residual + LN, FFN — the transformer block tail.
+    let wo = gb.weight(&p("wo"), &[HIDDEN, HIDDEN], seed + 6);
+    let proj = gb.matmul(&p("proj"), ctx, wo);
+    let res1 = gb.binary(&p("res1"), BinKind::Add, x, proj);
+    let g1 = gb.weight(&p("g1"), &[HIDDEN], seed + 7);
+    let b1 = gb.weight(&p("b1"), &[HIDDEN], seed + 8);
+    let ln1 = gb.layernorm(&p("ln1"), res1, g1, b1);
+    let w1 = gb.weight(&p("w1"), &[HIDDEN, FFN], seed + 9);
+    let w2 = gb.weight(&p("w2"), &[FFN, HIDDEN], seed + 10);
+    let bias1 = gb.weight(&p("bias1"), &[FFN], seed + 11);
+    let bias2 = gb.weight(&p("bias2"), &[HIDDEN], seed + 12);
+    let h1 = gb.matmul(&p("ff1"), ln1, w1);
+    let h1b = gb.bias_add(&p("ff1b"), h1, bias1);
+    let act = gb.unary(&p("act"), UnKind::Gelu, h1b);
+    let h2 = gb.matmul(&p("ff2"), act, w2);
+    let h2b = gb.bias_add(&p("ff2b"), h2, bias2);
+    let res2 = gb.binary(&p("res2"), BinKind::Add, ln1, h2b);
+    let g2 = gb.weight(&p("g2"), &[HIDDEN], seed + 13);
+    let b2 = gb.weight(&p("b2"), &[HIDDEN], seed + 14);
+    let out = gb.layernorm(&p("ln2"), res2, g2, b2);
+
+    let kv_row = gb.concat(&p("kv_new"), &[k_new, v_new], 1); // [1, 2H]
+    (out, kv_row)
+}
+
+pub fn graph() -> Graph {
+    let mut gb = GraphBuilder::new("decode");
+    let x_hist = time_axis(&mut gb, "x_hist", HIDDEN);
+    let aux = time_axis(&mut gb, "aux", 2);
+    let slabs: Vec<Edge> =
+        (0..LAYERS).map(|l| time_axis(&mut gb, &format!("kv_slab_{l}"), 2 * HIDDEN)).collect();
+
+    // Column extraction from aux: the additive mask row and the one-hot
+    // current-row selector, both [1, C].
+    let p_mask = col_selector(&mut gb, "proj_mask", 2, 0, 1);
+    let p_sel = col_selector(&mut gb, "proj_sel", 2, 1, 2);
+    let mask_col = gb.matmul("mask_col", aux, p_mask);
+    let sel_col = gb.matmul("sel_col", aux, p_sel);
+    let mask_row = gb.transpose("mask_row", mask_col, &[1, 0]);
+    let sel_row = gb.transpose("sel_row", sel_col, &[1, 0]);
+    // Current-token embedding: exact one-hot row selection from the
+    // history (also ties x_hist's capacity symbol to aux's).
+    let mut x = gb.matmul("x_cur", sel_row, x_hist); // [1, H]
+
+    let mut kv_new = Vec::with_capacity(LAYERS);
+    for (l, &slab) in slabs.iter().enumerate() {
+        let (out, kv_row) = decode_layer(&mut gb, x, slab, mask_row, l, 3000 + 100 * l as u64);
+        x = out;
+        kv_new.push(kv_row);
+    }
+
+    // Vocabulary head.
+    let wo = gb.weight("head_w", &[HIDDEN, VOCAB], 3900);
+    let bo = gb.weight("head_b", &[VOCAB], 3901);
+    let logits = gb.matmul("logits", x, wo);
+    let logits_b = gb.bias_add("logits_b", logits, bo);
+    let probs = gb.softmax("probs", logits_b); // [1, V]
+
+    let mut outs = vec![probs];
+    outs.extend(kv_new);
+    gb.finish(&outs)
+}
+
+/// Deterministic host-side token embedding (the decode analogue of the
+/// other workloads' embedded constant tables).
+pub fn embed(token: i64, hidden: usize) -> Vec<f32> {
+    let mut rng = Prng::new(0x9e37_79b9_7f4a_7c15 ^ (token as u64).wrapping_mul(0x100_0000_01b3));
+    rng.fill_f32(hidden, 0.5)
+}
+
+/// The runtime description of this graph for the decode drivers.
+pub fn spec() -> DecodeSpec {
+    DecodeSpec { layers: LAYERS, hidden: HIDDEN, vocab: VOCAB, embed }
+}
+
+/// One plausible mid-decode binding at capacity `seq`: `seq - 1` appended
+/// past lanes, current row at the last lane. Lets the generic workload
+/// machinery (request streams, mode sweeps) exercise the step graph
+/// without driving a whole loop.
+pub fn gen_inputs(seq: usize, rng: &mut Prng) -> Vec<Tensor> {
+    let c = seq.max(1);
+    let used = c - 1;
+    let mut aux = vec![0.0f32; c * 2];
+    for lane in 0..c {
+        aux[lane * 2] = if lane < used { 0.0 } else { MASK_NEG };
+        aux[lane * 2 + 1] = if lane == used { 1.0 } else { 0.0 };
+    }
+    let mut inputs = vec![
+        Tensor::f32(&[c, HIDDEN], rng.fill_f32(c * HIDDEN, 0.5)),
+        Tensor::f32(&[c, 2], aux),
+    ];
+    for _ in 0..LAYERS {
+        inputs.push(Tensor::f32(&[c, 2 * HIDDEN], rng.fill_f32(c * 2 * HIDDEN, 0.5)));
+    }
+    inputs
+}
+
+pub fn workload() -> Workload {
+    Workload {
+        name: "decode",
+        framework: "serving",
+        batch: 1,
+        graph: graph(),
+        seq_range: (16, 96),
+        gen: Box::new(gen_inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, DiscCompiler, Mode};
+    use crate::runtime::reference::eval_module;
+
+    #[test]
+    fn decode_step_compiles_and_matches_reference() {
+        let w = workload();
+        let m = crate::bridge::lower(&w.graph).unwrap();
+        let compiler = DiscCompiler::new().unwrap();
+        let mut model = compiler.compile(m, &CompileOptions::mode(Mode::Disc)).unwrap();
+        let mut rng = Prng::new(4);
+        for cap in [16usize, 32] {
+            let inputs = gen_inputs(cap, &mut rng);
+            let got = model.run(&inputs).unwrap();
+            let want = eval_module(model.module(), &inputs).unwrap();
+            assert_eq!(got.outputs[0].dims, vec![1, VOCAB]);
+            assert_eq!(got.outputs[1].dims, vec![1, 2 * HIDDEN]);
+            assert_eq!(got.outputs.len(), 1 + LAYERS);
+            for (g, r) in got.outputs.iter().zip(&want.outputs) {
+                assert!(g.allclose(r, 5e-4, 5e-4).unwrap(), "cap {cap}");
+            }
+            // Probabilities sum to ~1.
+            let row: f32 = got.outputs[0].as_f32().unwrap().iter().sum();
+            assert!((row - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn decode_step_is_batch_eligible_with_stacked_launches() {
+        // Continuous batching rides the cross-request machinery: the step
+        // graph must classify as batchable with stacked launches (the
+        // projection-GEMM design exists exactly for this — a dynamic-axis
+        // Split would poison eligibility with content-reading shape math).
+        let m = crate::bridge::lower(&graph()).unwrap();
+        let m = crate::passes::optimize(&m).unwrap();
+        let p = crate::fusion::plan(&m, &crate::fusion::FusionOptions::default());
+        let prog = crate::program::generate(m, &p).unwrap();
+        let analysis = crate::runtime::batching::analyze(&prog);
+        assert!(analysis.eligible(), "ineligible: {:?}", analysis.reason);
+        assert!(analysis.stacked_steps >= 1, "no stacked launches to amortize");
+    }
+
+    #[test]
+    fn masked_lanes_get_exactly_zero_attention() {
+        // The bit-exactness keystone: -1e9 masked energies must underflow
+        // to an exact 0.0 softmax weight, so a padded-capacity step equals
+        // the exact-length computation bitwise.
+        let m = crate::bridge::lower(&graph()).unwrap();
+        let mut rng = Prng::new(9);
+        let inputs = gen_inputs(16, &mut rng);
+        let r = eval_module(&m, &inputs).unwrap();
+        assert!(!r.outputs.is_empty());
+        let x = (MASK_NEG - 1.0f32).exp();
+        assert_eq!(x, 0.0, "mask energies must underflow exactly");
+    }
+}

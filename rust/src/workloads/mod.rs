@@ -10,6 +10,10 @@
 //! | Ad Ranking  | TensorFlow | 512   |
 //! | Transformer | TensorFlow | 1     |
 //!
+//! Plus one beyond Table 1: `decode`, a single autoregressive decode step
+//! over a bucket-capacity KV slab, driving the serving stack's decode mode
+//! (see `workloads::decode` and `runtime/kv.rs`).
+//!
 //! The paper's models are proprietary; these are structurally
 //! representative stand-ins (see DESIGN.md §3): the op mixes (attention
 //! blocks, layernorm/softmax expansions, gated RNN cells, embedding +
@@ -21,6 +25,7 @@
 pub mod ad_ranking;
 pub mod asr;
 pub mod bert;
+pub mod decode;
 pub mod seq2seq;
 pub mod transformer;
 pub mod tts;
@@ -65,6 +70,7 @@ pub fn all() -> Vec<Workload> {
         bert::workload(),
         ad_ranking::workload(),
         transformer::workload(),
+        decode::workload(),
     ]
 }
 
@@ -78,12 +84,13 @@ pub fn by_name(name: &str) -> Option<Workload> {
         "bert" => Some(bert::workload()),
         "ad_ranking" | "ads" => Some(ad_ranking::workload()),
         "transformer" => Some(transformer::workload()),
+        "decode" => Some(decode::workload()),
         _ => None,
     }
 }
 
-pub const NAMES: [&str; 7] =
-    ["asr_tf", "asr_pt", "seq2seq", "tts", "bert", "ad_ranking", "transformer"];
+pub const NAMES: [&str; 8] =
+    ["asr_tf", "asr_pt", "seq2seq", "tts", "bert", "ad_ranking", "transformer", "decode"];
 
 /// Freeze a workload graph's dynamic placeholder dims to `fixed` (consumed
 /// in placeholder order). Used by the Fig. 4 bench to build the

@@ -4,8 +4,10 @@
 //! via flattened gather, dense + tanh, masked-free mean pooling over the
 //! dynamic time axis) and a single decoder step (gated cell + vocabulary
 //! softmax). The batch axis is static (64, per Table 1); the sequence axis
-//! is the dynamism driver.
+//! is the dynamism driver. The growing time axis and the gated cell come
+//! from the shared decode driver (`workloads::decode`).
 
+use super::decode::{gate_pair, time_axis_ids};
 use super::Workload;
 use crate::dhlo::{BinKind, DType, ReduceKind, UnKind};
 use crate::graph::{Graph, GraphBuilder};
@@ -20,7 +22,7 @@ pub const VOCAB: usize = 256;
 pub fn graph() -> Graph {
     let mut gb = GraphBuilder::new("seq2seq");
     // [B*S] flattened ids (PyTorch-style view) with dynamic S.
-    let ids = gb.placeholder("src_ids", DType::I64, &[-1]);
+    let ids = time_axis_ids(&mut gb, "src_ids");
     let prev = gb.placeholder("prev_emb", DType::F32, &[BATCH as i64, EMB as i64]);
 
     let table = gb.weight("src_embedding", &[VOCAB, EMB], 2000);
@@ -46,8 +48,7 @@ pub fn graph() -> Graph {
     let xi = gb.matmul("dec_xi", prev, wi); // [B, H]
     let xc = gb.matmul("dec_xc", ctx, wc); // [B, H]
     let pre = gb.binary("dec_pre", BinKind::Add, xi, xc);
-    let z = gb.unary("dec_z", UnKind::Sigmoid, pre);
-    let cand = gb.unary("dec_cand", UnKind::Tanh, pre);
+    let (z, cand) = gate_pair(&mut gb, "dec_", pre, pre);
     let gated = gb.binary("dec_gated", BinKind::Mul, z, cand);
     let state = gb.binary("dec_state", BinKind::Add, gated, xc); // [B, H]
 

@@ -5,8 +5,11 @@
 //! Pre-net (dense + relu ×2) → additive attention over the memory →
 //! GRU-flavoured gated update → post-net (dense + tanh ×3) emitting the
 //! next mel frame. Heavy on small elementwise/broadcast/reduce ops — the
-//! shape of workload where the paper's fusion shines.
+//! shape of workload where the paper's fusion shines. The growing time
+//! axis, the additive-attention energies, and the gated cell come from the
+//! shared decode driver (`workloads::decode`).
 
+use super::decode::{additive_energy, gate_pair, time_axis};
 use super::Workload;
 use crate::dhlo::{BinKind, DType, UnKind};
 use crate::graph::{Graph, GraphBuilder};
@@ -18,7 +21,7 @@ pub const MEL: usize = 20;
 
 pub fn graph() -> Graph {
     let mut gb = GraphBuilder::new("tts");
-    let memory = gb.placeholder("memory", DType::F32, &[-1, HIDDEN as i64]);
+    let memory = time_axis(&mut gb, "memory", HIDDEN);
     let prev = gb.placeholder("prev_frame", DType::F32, &[1, MEL as i64]);
 
     // Pre-net.
@@ -40,10 +43,8 @@ pub fn graph() -> Graph {
     let qproj = gb.matmul("attn_q", query, wq); // [1, H]
     // Broadcast the query row over the sequence: keys + q.
     let qrow = gb.reshape("attn_q_row", qproj, &[HIDDEN as i64]); // [H]
-    let added = gb.binary("attn_added", BinKind::Add, keys, qrow);
-    let energy_in = gb.unary("attn_tanh", UnKind::Tanh, added);
     let v = gb.weight("attn_v", &[HIDDEN, 1], 1012);
-    let scores = gb.matmul("attn_scores", energy_in, v); // [S, 1]
+    let scores = additive_energy(&mut gb, "attn_", keys, qrow, v); // [S, 1]
     let scores_t = gb.transpose("attn_scores_t", scores, &[1, 0]); // [1, S]
     let weights = gb.softmax("attn_weights", scores_t);
     let context = gb.matmul("attn_ctx", weights, memory); // [1, H]
@@ -54,9 +55,8 @@ pub fn graph() -> Graph {
     let zi = gb.matmul("gate_zi", context, wz);
     let zq = gb.matmul("gate_zq", query, wh);
     let zsum = gb.binary("gate_zsum", BinKind::Add, zi, zq);
-    let z = gb.unary("gate_z", UnKind::Sigmoid, zsum);
     let cand_in = gb.binary("gate_cand_in", BinKind::Add, context, query);
-    let cand = gb.unary("gate_cand", UnKind::Tanh, cand_in);
+    let (z, cand) = gate_pair(&mut gb, "gate_", zsum, cand_in);
     let one = gb.weight("one", &[HIDDEN], 1022);
     let zneg = gb.unary("gate_zneg", UnKind::Neg, z);
     let one_minus = gb.binary("gate_one_minus", BinKind::Add, zneg, one);

@@ -15,7 +15,15 @@
 //! `DISC_BENCH_SMOKE=1` the run also writes a `BENCH_chaos.json`
 //! artifact with the per-site fire counts and robustness counters.
 
+//! The decode tests extend the same gate to the autoregressive step loop:
+//! KV-slab OOM at admission/rollover must demote residency (never the
+//! request), a worker panic mid-decode must restart the engine and replay
+//! the in-flight step from the scheduler-owned KV state, and in both cases
+//! every completed job's token/probability stream must be bit-identical
+//! to a fault-free solo loop.
+
 use disc::compiler::{CompileOptions, CompiledModel, DiscCompiler, Mode};
+use disc::coordinator::decode::{serve_decode, DecodeJob, DecodeServeOptions};
 use disc::coordinator::{serve_open_loop, ServeOptions, ServeReport};
 use disc::runtime::faults::{FaultPlan, FaultSite, SITES};
 use disc::runtime::tensor::Tensor;
@@ -153,6 +161,114 @@ fn deadlines_shed_under_injected_overload() {
     assert_eq!(report.metrics.shed_requests, 6);
     assert_eq!(report.metrics.deadline_misses, 0);
     assert!(report.metrics.worker_restarts >= 6, "two dispatch attempts per request");
+}
+
+fn compile_decode(faults: Option<Arc<FaultPlan>>, opts: &CompileOptions) -> CompiledModel {
+    let w = disc::workloads::by_name("decode").unwrap();
+    let compiler = DiscCompiler::with_faults(faults).unwrap();
+    compiler.compile(disc::bridge::lower(&w.graph).unwrap(), opts).unwrap()
+}
+
+/// Fault-free solo decode loops — the reference every chaos-run job must
+/// match bit-for-bit.
+fn decode_references(
+    spec: &disc::runtime::kv::DecodeSpec,
+    cases: &[(&[i64], usize)],
+) -> Vec<disc::runtime::executor::DecodeOutput> {
+    let mut clean = compile_decode(Some(no_faults()), &CompileOptions::mode(Mode::Disc));
+    cases.iter().map(|(p, g)| clean.run_decode(spec, p, *g).unwrap()).collect()
+}
+
+#[test]
+fn decode_kv_oom_demotes_residency_and_stays_bit_exact() {
+    // Hammer the device-OOM seam with a fixed seed: KV-slab acquisitions
+    // (at admission and at bucket rollover — the long job rolls 16 → 32)
+    // fail, demoting the slab to host residency. The request itself never
+    // degrades: the step loop keeps running and its stream stays
+    // bit-identical to the fault-free reference.
+    let spec = disc::workloads::decode::spec();
+    let cases: [(&[i64], usize); 3] = [(&[3, 1, 4], 16), (&[2, 7], 9), (&[5], 7)];
+    let want = decode_references(&spec, &cases);
+
+    let plan = Arc::new(FaultPlan::parse("seed=41,oom=500:6").unwrap());
+    let mut model = compile_decode(Some(plan.clone()), &CompileOptions::mode(Mode::Disc));
+    let jobs: Vec<DecodeJob> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, g))| DecodeJob {
+            id: i as u64,
+            prompt: p.to_vec(),
+            gen_steps: *g,
+            arrive_step: i as u64,
+        })
+        .collect();
+    let opts = DecodeServeOptions::batch(2).faults(no_faults()).keep_probs();
+    let report = serve_decode(&mut model, &spec, jobs, &opts).unwrap();
+
+    let m = &report.metrics;
+    assert_eq!(
+        report.completed.len() as u64 + m.shed_requests + m.deadline_misses,
+        3,
+        "decode accounting must balance under OOM injection"
+    );
+    assert_eq!(report.completed.len(), 3, "OOM demotes residency, never the request");
+    assert!(m.kv_rollovers >= 1, "the 19-step job must roll its bucket");
+    if plan.fired(FaultSite::DeviceOom) > 0 {
+        assert!(m.demotions >= 1, "fired OOM must surface as demotions");
+    }
+    for c in &report.completed {
+        let want = &want[c.id as usize];
+        assert_eq!(c.generated, want.generated, "job {}: tokens under OOM", c.id);
+        assert_eq!(
+            c.probs.as_ref().unwrap(),
+            &want.step_probs,
+            "job {}: probs under OOM",
+            c.id
+        );
+    }
+    assert_eq!(model.kv_residency().0, 0, "all slab bytes released at drain");
+}
+
+#[test]
+fn decode_panic_mid_loop_restarts_and_streams_match() {
+    // Two guaranteed worker panics interrupt decode dispatches mid-loop.
+    // Supervision restarts the engine; the scheduler-owned KV caches
+    // survive, so the interrupted step replays bit-identically and the
+    // finished streams match a fault-free run.
+    let spec = disc::workloads::decode::spec();
+    let cases: [(&[i64], usize); 2] = [(&[4, 2], 12), (&[9], 10)];
+    let want = decode_references(&spec, &cases);
+
+    let plan = Arc::new(FaultPlan::parse("seed=42,panic=1000:2").unwrap());
+    let mut model = compile_decode(Some(no_faults()), &CompileOptions::mode(Mode::Disc));
+    let jobs: Vec<DecodeJob> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (p, g))| DecodeJob::new(i as u64, p.to_vec(), *g))
+        .collect();
+    let opts = DecodeServeOptions::batch(2).max_requeues(2).faults(plan.clone()).keep_probs();
+    let report = serve_decode(&mut model, &spec, jobs, &opts).unwrap();
+
+    let m = &report.metrics;
+    assert_eq!(m.worker_restarts, plan.fired(FaultSite::WorkerPanic));
+    assert!(m.worker_restarts >= 1, "armed panic seam never restarted");
+    assert_eq!(report.completed.len(), 2, "requeued jobs finish after restarts");
+    assert_eq!(
+        report.completed.len() as u64 + m.shed_requests + m.deadline_misses,
+        2,
+        "decode accounting must balance under panic injection"
+    );
+    for c in &report.completed {
+        let want = &want[c.id as usize];
+        assert_eq!(c.generated, want.generated, "job {}: restart must not fork", c.id);
+        assert_eq!(
+            c.probs.as_ref().unwrap(),
+            &want.step_probs,
+            "job {}: probs across restart",
+            c.id
+        );
+    }
+    assert_eq!(model.kv_residency().0, 0, "all slab bytes released at drain");
 }
 
 fn write_bench_artifact(plan: &FaultPlan, report: &ServeReport) {

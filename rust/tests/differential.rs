@@ -1,0 +1,178 @@
+//! Differential property harness: the runtime's execution tiers must be
+//! **bit-exact**, not merely close.
+//!
+//! The repo's layered runtime (interpret → record → replay, solo → stacked
+//! batch, single step → decode loop) is only safe to mix-and-match in the
+//! serving coordinator because every tier computes the identical floats.
+//! This harness locks that invariant down property-style: seeded random
+//! binding/length streams (per-case seeds derived with `splitmix64`, the
+//! same primitive the fault injector uses — no external PRNG crates) are
+//! pushed through
+//!
+//!   * a **solo interpreter** model (plan cache and device residency off:
+//!     every run walks the program from host buffers),
+//!   * a **solo replay** model (first run records the launch plan, second
+//!     run replays it),
+//!   * a **batched replay** model (groups dispatched twice through
+//!     `run_batch`, so the second round replays recorded batch plans), and
+//!   * for the decode workload, the **step-loop tiers** (`run_decode`
+//!     tiered vs interpret-only) and the continuous-batching scheduler
+//!     (`serve_decode` with staggered mid-flight joins),
+//!
+//! and every output is compared with `assert_eq!` — bit-for-bit. Failures
+//! print the generating case seed, which reproduces deterministically.
+
+use disc::compiler::{CompileOptions, CompiledModel, DiscCompiler, Mode};
+use disc::coordinator::decode::{serve_decode, DecodeJob, DecodeServeOptions};
+use disc::runtime::faults::splitmix64;
+use disc::runtime::tensor::Tensor;
+use disc::util::prng::Prng;
+use disc::workloads;
+
+/// Compile a fresh model of `name` under `opts` (its own plan caches and
+/// arena — tiers must agree *across* independent engines).
+fn fresh_model(name: &str, opts: &CompileOptions) -> CompiledModel {
+    let w = workloads::by_name(name).unwrap();
+    let m = disc::bridge::lower(&w.graph).unwrap();
+    let compiler = DiscCompiler::new().unwrap();
+    compiler.compile(m, opts).unwrap()
+}
+
+/// Disc-mode options with the replay tiers disabled: every run is a pure
+/// interpret/record-free walk (tier 1).
+fn interpret_only() -> CompileOptions {
+    let mut o = CompileOptions::mode(Mode::Disc);
+    o.plan_cache = false;
+    o.device_resident = false;
+    o
+}
+
+/// Derive the next case seed from the stream state.
+fn next_seed(state: &mut u64) -> u64 {
+    *state = splitmix64(*state);
+    *state
+}
+
+#[test]
+fn replay_tiers_are_bit_exact_under_random_binding_streams() {
+    for name in ["transformer", "bert", "seq2seq"] {
+        let w = workloads::by_name(name).unwrap();
+        let mut state = 0x5EED_0000 ^ name.len() as u64;
+        // Small extents keep `cargo test -q` quick; variety in the stream
+        // (repeats included) is what exercises record vs replay.
+        let cases: Vec<(u64, Vec<Tensor>)> = (0..6)
+            .map(|_| {
+                let seed = next_seed(&mut state);
+                let mut rng = Prng::new(seed);
+                let seq = rng.range(w.seq_range.0, w.seq_range.0 + 6);
+                (seed, (w.gen)(seq, &mut rng))
+            })
+            .collect();
+
+        let mut interp = fresh_model(name, &interpret_only());
+        let mut replay = fresh_model(name, &CompileOptions::mode(Mode::Disc));
+        let mut batched = fresh_model(name, &CompileOptions::mode(Mode::Disc));
+
+        // Ground truth: the pure interpreter tier.
+        let want: Vec<Vec<Tensor>> = cases
+            .iter()
+            .map(|(seed, inputs)| {
+                interp
+                    .run(inputs)
+                    .unwrap_or_else(|e| panic!("seed {seed} [{name}]: interpret run: {e:#}"))
+                    .outputs
+            })
+            .collect();
+
+        // Solo record then solo replay: both must match the interpreter.
+        for ((seed, inputs), want) in cases.iter().zip(&want) {
+            let first = replay.run(inputs).unwrap().outputs;
+            assert_eq!(&first, want, "seed {seed} [{name}]: record tier diverged");
+            let second = replay.run(inputs).unwrap().outputs;
+            assert_eq!(&second, want, "seed {seed} [{name}]: replay tier diverged");
+        }
+        let ps = replay.plan_stats().expect("disc mode has a plan cache");
+        assert!(ps.hits > 0, "[{name}]: second runs must replay recorded plans");
+
+        // Batched replay: groups of 3, dispatched twice — the first round
+        // records batch plans, the second replays them. Per-member outputs
+        // must still be bit-identical to the solo interpreter.
+        let groups: Vec<&[(u64, Vec<Tensor>)]> = cases.chunks(3).collect();
+        for round in 0..2 {
+            for (gi, group) in groups.iter().enumerate() {
+                let inputs: Vec<Vec<Tensor>> =
+                    group.iter().map(|(_, i)| i.clone()).collect();
+                let out = batched.run_batch(&inputs).unwrap();
+                for (k, (seed, _)) in group.iter().enumerate() {
+                    assert_eq!(
+                        out.outputs[k], want[gi * 3 + k],
+                        "seed {seed} [{name}]: batched replay (round {round}) diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_loops_are_bit_exact_across_tiers_and_scheduling() {
+    let spec = workloads::decode::spec();
+    let vocab = workloads::decode::VOCAB as i64;
+    let mut state = 0xD1FF_DEC0_DEu64;
+    let jobs: Vec<(u64, Vec<i64>, usize)> = (0..4)
+        .map(|_| {
+            let seed = next_seed(&mut state);
+            let mut rng = Prng::new(seed);
+            let plen = rng.range(1, 4);
+            let gen_steps = rng.range(4, 10);
+            (seed, rng.fill_i64(plen, 0, vocab - 1), gen_steps)
+        })
+        .collect();
+
+    // Ground truth: the tiered solo step loop (records, then replays one
+    // plan family per bucket).
+    let mut tiered = fresh_model("decode", &CompileOptions::mode(Mode::Disc));
+    let want: Vec<disc::runtime::executor::DecodeOutput> = jobs
+        .iter()
+        .map(|(seed, prompt, gen)| {
+            tiered
+                .run_decode(&spec, prompt, *gen)
+                .unwrap_or_else(|e| panic!("seed {seed}: tiered decode: {e:#}"))
+        })
+        .collect();
+
+    // Interpret-only step loop: no plans recorded or replayed at all.
+    let mut interp = fresh_model("decode", &interpret_only());
+    for ((seed, prompt, gen), want) in jobs.iter().zip(&want) {
+        let out = interp.run_decode(&spec, prompt, *gen).unwrap();
+        assert_eq!(out.generated, want.generated, "seed {seed}: interpret decode tokens");
+        assert_eq!(out.step_probs, want.step_probs, "seed {seed}: interpret decode probs");
+    }
+
+    // Continuous batching with staggered mid-flight joins: every job's
+    // step stream must be bit-identical to its solo loop even though its
+    // steps ran stacked with whatever else occupied the batch.
+    let mut served = fresh_model("decode", &CompileOptions::mode(Mode::Disc));
+    let djobs: Vec<DecodeJob> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, (_, prompt, gen))| DecodeJob {
+            id: i as u64,
+            prompt: prompt.clone(),
+            gen_steps: *gen,
+            arrive_step: i as u64 * 2,
+        })
+        .collect();
+    let report =
+        serve_decode(&mut served, &spec, djobs, &DecodeServeOptions::batch(3).keep_probs())
+            .unwrap();
+    assert_eq!(report.completed.len(), jobs.len());
+    assert!(report.joins >= 1, "staggered arrivals must exercise mid-flight joins");
+    for c in &report.completed {
+        let (seed, _, _) = jobs[c.id as usize];
+        let want = &want[c.id as usize];
+        assert_eq!(c.generated, want.generated, "seed {seed}: scheduled decode tokens");
+        let probs = c.probs.as_ref().expect("captured");
+        assert_eq!(probs, &want.step_probs, "seed {seed}: scheduled decode probs");
+    }
+}
