@@ -14,8 +14,8 @@
 //!   the plan-cache-off interpret tier (measured on a deterministic
 //!   repeat-group sweep, not the timing-sensitive open loop).
 //!
-//! Writes `BENCH_batching.json` next to the manifest for the CI bench
-//! artifact (trend tracking across runs).
+//! Writes `BENCH_batching.json` at the repo root (`bench::artifact_path`)
+//! for the CI bench artifact (trend tracking across runs).
 
 use disc::bench::Table;
 use disc::compiler::{CompileOptions, CompiledModel, DiscCompiler, Mode};
@@ -256,6 +256,7 @@ fn main() {
             ]),
         ),
     ]);
-    std::fs::write("BENCH_batching.json", to_string_pretty(&doc)).expect("write bench artifact");
-    println!("\nwrote BENCH_batching.json");
+    let path = disc::bench::artifact_path("BENCH_batching.json");
+    std::fs::write(&path, to_string_pretty(&doc)).expect("write bench artifact");
+    println!("\nwrote {}", path.display());
 }

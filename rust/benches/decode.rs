@@ -16,8 +16,8 @@
 //!   a solo interpret-only step loop (deterministic assert — the same
 //!   invariant the differential harness locks down).
 //!
-//! Writes `BENCH_decode.json` next to the manifest for the CI bench
-//! artifact.
+//! Writes `BENCH_decode.json` at the repo root (`bench::artifact_path`)
+//! for the CI bench artifact.
 
 use disc::bench::Table;
 use disc::compiler::{CompileOptions, CompiledModel, DiscCompiler, Mode};
@@ -232,6 +232,7 @@ fn main() {
         ),
         ("rows", Value::Arr(rows)),
     ]);
-    std::fs::write("BENCH_decode.json", to_string_pretty(&doc)).expect("write bench artifact");
-    println!("\nwrote BENCH_decode.json");
+    let path = disc::bench::artifact_path("BENCH_decode.json");
+    std::fs::write(&path, to_string_pretty(&doc)).expect("write bench artifact");
+    println!("\nwrote {}", path.display());
 }

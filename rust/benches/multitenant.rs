@@ -1,0 +1,212 @@
+//! Multi-tenant serving isolation: the SLO-bulkhead claims, measured.
+//!
+//! * **Flood isolation** — a latency-bound transformer tenant keeps its
+//!   p99 within 1.5× of its solo p99 while throughput-bound BERT and TTS
+//!   tenants flood the shared worker pool (weighted-fair dispatch +
+//!   per-tenant admission queues are what hold the line).
+//! * **Fault isolation** — an armed worker-panic storm against one tenant
+//!   trips *its* circuit breaker (quarantine + probing re-admission) while
+//!   the healthy tenants complete everything with zero sheds, zero
+//!   demotions, zero restarts.
+//! * **Zero-lost accounting** — `completed + shed + missed == offered`
+//!   holds per tenant in every configuration (reconciled inside
+//!   `serve_mix`, spot-checked here).
+//!
+//! `DISC_BENCH_SMOKE=1` shrinks the streams for CI. Writes
+//! `BENCH_multitenant.json` at the repo root (`bench::artifact_path`) for
+//! the CI bench artifact.
+
+use disc::bench::Table;
+use disc::coordinator::tenants::{serve_mix, MixOptions, TenantReport, TenantSpec};
+use disc::runtime::faults::{FaultPlan, FaultSite};
+use disc::util::json::{to_string_pretty, Value};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::obj(fields)
+}
+
+fn tenant_row(label: &str, t: &TenantReport) -> Value {
+    let m = &t.report.metrics;
+    obj(vec![
+        ("run", Value::Str(label.to_string())),
+        ("tenant", Value::Str(t.name.clone())),
+        ("slo", Value::Str(t.slo.as_str().to_string())),
+        ("offered", Value::Num(t.offered as f64)),
+        ("completed", Value::Num(t.report.completed as f64)),
+        ("p50_ms", Value::Num(t.report.p50.as_secs_f64() * 1e3)),
+        ("p99_ms", Value::Num(t.report.p99.as_secs_f64() * 1e3)),
+        ("throughput_rps", Value::Num(t.report.throughput_rps)),
+        ("shed", Value::Num(m.shed_requests as f64)),
+        ("deadline_misses", Value::Num(m.deadline_misses as f64)),
+        ("demotions", Value::Num(m.demotions as f64)),
+        ("worker_restarts", Value::Num(m.worker_restarts as f64)),
+        ("breaker_trips", Value::Num(t.breaker_trips as f64)),
+        ("probes", Value::Num(t.probes as f64)),
+        ("quarantined", Value::Num(m.quarantined as f64)),
+    ])
+}
+
+fn assert_zero_lost(t: &TenantReport) {
+    let m = &t.report.metrics;
+    assert_eq!(
+        t.report.completed as u64 + m.shed_requests + m.deadline_misses,
+        t.offered as u64,
+        "tenant {} lost requests",
+        t.name
+    );
+}
+
+fn main() {
+    let smoke = std::env::var("DISC_BENCH_SMOKE").is_ok();
+    let lat_requests: usize = if smoke { 24 } else { 80 };
+    let flood_requests: usize = if smoke { 40 } else { 160 };
+    let workers = 2;
+
+    let latency_tenant = || {
+        TenantSpec::latency("lat-transformer", "transformer")
+            .requests(lat_requests)
+            .rate(300.0)
+            .seed(31)
+    };
+
+    println!("=== Multi-tenant serving: latency tenant vs flooding neighbors ===\n");
+
+    // --- flood isolation: solo baseline, then the mixed pool ---------------
+    // The p99 ratio is a timing gate on a shared machine, so it gets the
+    // usual retry allowance; the accounting gates are deterministic and
+    // asserted on every attempt.
+    let mut rows: Vec<Value> = Vec::new();
+    let mut attempt = 0;
+    let (solo_p99, mixed) = loop {
+        attempt += 1;
+        let solo = serve_mix(vec![latency_tenant()], &MixOptions::new().workers(workers))
+            .expect("solo serve");
+        let solo_p99 = solo.tenants[0].report.p99;
+        assert_zero_lost(&solo.tenants[0]);
+
+        let specs = vec![
+            latency_tenant(),
+            TenantSpec::throughput("thr-bert", "bert")
+                .requests(flood_requests)
+                .rate(2_000.0)
+                .seed(32),
+            TenantSpec::throughput("thr-tts", "tts")
+                .requests(flood_requests)
+                .rate(2_000.0)
+                .seed(33)
+                .bursty(16),
+        ];
+        let mixed =
+            serve_mix(specs, &MixOptions::new().workers(workers).batch(4)).expect("mixed serve");
+        for t in &mixed.tenants {
+            assert_zero_lost(t);
+            assert_eq!(t.breaker_trips, 0, "fault-free mix must not trip breakers");
+        }
+
+        let mixed_p99 = mixed.tenants[0].report.p99;
+        // 500µs of absolute grace keeps sub-millisecond solo baselines from
+        // turning scheduler jitter into a flaky ratio.
+        let ok = mixed_p99 <= solo_p99.mul_f64(1.5) + Duration::from_micros(500);
+        println!(
+            "attempt {attempt}: latency-tenant p99 solo={solo_p99:.2?} mixed={mixed_p99:.2?} ({})",
+            if ok { "within 1.5x" } else { "OVER 1.5x" }
+        );
+        if ok || attempt >= 3 {
+            assert!(
+                ok,
+                "latency tenant p99 {mixed_p99:.2?} exceeded 1.5x solo {solo_p99:.2?} \
+                 after {attempt} attempts"
+            );
+            rows.push(tenant_row("solo", &solo.tenants[0]));
+            break (solo_p99, mixed);
+        }
+    };
+
+    let mut table = Table::new(&[
+        "tenant", "slo", "completed", "p50", "p99", "throughput(r/s)", "shed", "trips",
+    ]);
+    for t in &mixed.tenants {
+        table.row(&[
+            t.name.clone(),
+            t.slo.as_str().to_string(),
+            format!("{}/{}", t.report.completed, t.offered),
+            format!("{:.2?}", t.report.p50),
+            format!("{:.2?}", t.report.p99),
+            format!("{:.0}", t.report.throughput_rps),
+            t.report.metrics.shed_requests.to_string(),
+            t.breaker_trips.to_string(),
+        ]);
+        rows.push(tenant_row("mixed", t));
+    }
+    table.print();
+    println!(
+        "\nlatency-tenant p99: solo={solo_p99:.2?} mixed={:.2?} (gate: <=1.5x)",
+        mixed.tenants[0].report.p99
+    );
+
+    // --- fault isolation: a panic storm against one tenant -----------------
+    // Deterministic (the fault schedule fires on the first consults), so
+    // every gate here is hard.
+    println!("\n=== Fault storm against one tenant (breaker + quarantine) ===\n");
+    let plan = Arc::new(FaultPlan::parse("seed=17,panic=1000:4").expect("fault spec"));
+    let specs = vec![
+        TenantSpec::latency("healthy", "tts").requests(lat_requests).rate(500.0).seed(41),
+        TenantSpec::throughput("faulty", "tts")
+            .requests(flood_requests)
+            .rate(900.0)
+            .seed(42)
+            .fault_target(),
+    ];
+    let storm = serve_mix(
+        specs,
+        &MixOptions::new().workers(workers).batch(2).faults(plan.clone()).breaker(2, 2),
+    )
+    .expect("storm serve");
+    let healthy = &storm.tenants[0];
+    let faulty = &storm.tenants[1];
+    for t in &storm.tenants {
+        assert_zero_lost(t);
+        rows.push(tenant_row("storm", t));
+    }
+    println!(
+        "faulty tenant: restarts={} breaker_trips={} probes={} quarantined={} (panics fired={})",
+        faulty.report.metrics.worker_restarts,
+        faulty.breaker_trips,
+        faulty.probes,
+        faulty.report.metrics.quarantined,
+        plan.fired(FaultSite::WorkerPanic),
+    );
+    println!(
+        "healthy tenant: completed {}/{} shed={} demotions={} restarts={}",
+        healthy.report.completed,
+        healthy.offered,
+        healthy.report.metrics.shed_requests,
+        healthy.report.metrics.demotions,
+        healthy.report.metrics.worker_restarts,
+    );
+    assert!(faulty.breaker_trips >= 1, "the storm must trip the faulty tenant's breaker");
+    assert!(faulty.report.metrics.quarantined > 0, "open breaker must quarantine");
+    assert_eq!(healthy.report.completed, healthy.offered, "healthy tenant must finish");
+    assert_eq!(healthy.report.metrics.shed_requests, 0, "healthy tenant must shed nothing");
+    assert_eq!(healthy.report.metrics.demotions, 0, "healthy tenant must never demote");
+    assert_eq!(healthy.report.metrics.worker_restarts, 0);
+    assert_eq!(healthy.breaker_trips, 0);
+
+    // Persist for the CI workflow artifact (trend tracking).
+    let doc = obj(vec![
+        ("bench", Value::Str("multitenant".into())),
+        ("smoke", Value::Bool(smoke)),
+        ("workers", Value::Num(workers as f64)),
+        ("solo_p99_ms", Value::Num(solo_p99.as_secs_f64() * 1e3)),
+        (
+            "mixed_p99_ms",
+            Value::Num(mixed.tenants[0].report.p99.as_secs_f64() * 1e3),
+        ),
+        ("rows", Value::Arr(rows)),
+    ]);
+    let path = disc::bench::artifact_path("BENCH_multitenant.json");
+    std::fs::write(&path, to_string_pretty(&doc)).expect("write bench artifact");
+    println!("\nwrote {}", path.display());
+}

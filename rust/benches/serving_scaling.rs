@@ -95,8 +95,9 @@ fn main() {
         ("smoke", Value::Bool(smoke)),
         ("rows", Value::Arr(rows)),
     ]);
-    std::fs::write("BENCH_serving.json", to_string_pretty(&doc)).expect("write bench artifact");
-    println!("\nwrote BENCH_serving.json");
+    let path = disc::bench::artifact_path("BENCH_serving.json");
+    std::fs::write(&path, to_string_pretty(&doc)).expect("write bench artifact");
+    println!("\nwrote {}", path.display());
     let flat = uniform_compiles.windows(2).all(|p| p[0] == p[1]);
     println!(
         "\nkernel-store compiles across worker counts: {:?} — {}",

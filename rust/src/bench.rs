@@ -4,7 +4,18 @@
 //! and fixed-width table printing for the paper-table benches. Used by
 //! every target under `rust/benches/` (each sets `harness = false`).
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+/// Where a bench target writes its `BENCH_*.json` artifact: the repo root
+/// (one directory above the cargo manifest), regardless of the working
+/// directory the bench was launched from. Keeps the perf trajectory
+/// trackable in-tree — every bench and every CI invocation lands artifacts
+/// in the same place.
+pub fn artifact_path(name: &str) -> PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(name)
+}
 
 /// Result of measuring one benchmark case.
 #[derive(Debug, Clone)]

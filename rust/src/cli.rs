@@ -82,6 +82,20 @@ USAGE:
                  fault-injection schedule for the worker-panic seam, e.g.
                  \"seed=7,panic=100:2\" — device seams read DISC_FAULTS,
                  see docs/runtime.md)
+  disc run mix  [--tenants name:workload[:slo[:weight[:floor-mb]]],...]
+                [--requests N] [--rate R] [--workers N] [--batch K]
+                [--deadline-ms D] [--seed S] [--faults <spec>]
+                [--fault-tenant <name>] [--breaker T] [--probe-after P]
+                [--quarantine reference|shed] [--weight-budget-mb M]
+                (multi-tenant serving: each tenant gets its own bounded
+                 queue, SLO class (latency = zero straggler window,
+                 throughput = wide), weighted-fair share of the worker
+                 pool, and a residency floor in the shared weight cache;
+                 consecutive dispatch failures trip a per-tenant circuit
+                 breaker — quarantined requests are answered by the host
+                 reference evaluator (or shed) until a probe re-admits.
+                 --fault-tenant arms --faults worker-panic injection
+                 inside that tenant's dispatches only)
   disc inspect  --workload <name> | --file <graph.json>
   disc import   --file <graph.json> [--mode disc] [--requests N]
   disc list     (show available workloads)

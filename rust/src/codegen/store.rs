@@ -31,23 +31,21 @@
 
 use crate::runtime::faults::FaultSite;
 use crate::runtime::pjrt::{Device, Executable};
+// The store is process-shared, so every lock goes through the
+// poison-recovering `relock`: a panicking worker (or an injected chaos
+// panic) must not cascade into every other worker's kernel lookups. The
+// protected state is a plain map of slots — always consistent at mutation
+// granularity.
+use crate::util::relock;
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-
-/// Lock, recovering from poisoning: the store is process-shared, so a
-/// panicking worker (or an injected chaos panic) must not cascade into
-/// every other worker's kernel lookups. The protected state is a plain
-/// map of slots — always consistent at mutation granularity.
-fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
 
 /// Store key: a shape-agnostic kernel identity (pattern signature,
 /// namespaced by producer — `fused:`, `lib:gemm`, `lib:prep`) plus the

@@ -202,6 +202,16 @@ impl CompiledModel {
         }
     }
 
+    /// The compiled program's process-unique id — the key the shared
+    /// `WeightStore` arbitrates per-tenant residency floors by. `None` for
+    /// baseline backends (they hold no program and cache no weights).
+    pub fn program_id(&self) -> Option<u64> {
+        match &self.backend {
+            Backend::Program { prog, .. } => Some(prog.id),
+            _ => None,
+        }
+    }
+
     /// The module the backend executes (post-optimization).
     pub fn module(&self) -> &Module {
         match &self.backend {

@@ -61,6 +61,7 @@
 //! the `DISC_FAULTS` environment spec (`runtime::faults`).
 
 pub mod decode;
+pub mod tenants;
 
 use crate::compiler::CompiledModel;
 use crate::program::Program;
@@ -72,7 +73,7 @@ use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One inference request.
@@ -803,16 +804,10 @@ pub fn serve_open_loop(
                     // or a dequeue; the (long) dispatch — and the batch
                     // straggler window — happen outside it. A sibling that
                     // panicked while holding the lock poisons nothing
-                    // worth honoring: the protected state is just the
-                    // receiver, valid regardless of who unwound.
-                    let mut next = || {
-                        let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
-                        guard.try_recv().ok()
-                    };
-                    let mut recv_blocking = || {
-                        let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
-                        guard.recv().ok()
-                    };
+                    // worth honoring (`util::relock`): the protected state
+                    // is just the receiver, valid regardless of who unwound.
+                    let mut next = || crate::util::relock(&rx).try_recv().ok();
+                    let mut recv_blocking = || crate::util::relock(&rx).recv().ok();
                     let mut run = |inputs: &[Vec<Tensor>]| {
                         let r = catch_unwind(AssertUnwindSafe(|| {
                             if let Some(f) = &faults {
@@ -1373,5 +1368,66 @@ mod tests {
         assert_eq!(ids, vec![10, 11, 12], "stash back-fills when the shape cannot re-form");
         assert_eq!(shape, vec![2, 2, 2]);
         assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn group_steering_stash_cannot_starve_a_non_matching_request() {
+        // One group-B request arrives inside a long run of group-A traffic.
+        // Assembly stashes it (it can't join A's group), but the drain loop
+        // serves the stash FIFO as the *next head* — so B must dispatch in
+        // the very next group, no matter how much A traffic keeps coming.
+        let key_a = BatchKey { residual: vec![(crate::shape::SymId(0), 64)] };
+        let key_b = BatchKey { residual: vec![(crate::shape::SymId(0), 96)] };
+        let mk = |id: u64| Request {
+            id,
+            inputs: vec![],
+            arrived: Instant::now(),
+            deadline: None,
+            requeues: 0,
+        };
+        let tag = |r: &Request| {
+            let k = if r.id == 1 { key_b.clone() } else { key_a.clone() };
+            Some((k, 1i64))
+        };
+        let mut queued: VecDeque<Request> = (0..20).map(mk).collect();
+        let mut pending: VecDeque<Stashed> = VecDeque::new();
+        let mut dispatches: Vec<Vec<u64>> = Vec::new();
+        // The drain-loop head selection: stash FIFO first, then the queue.
+        loop {
+            let (head, head_tag) = match pending.pop_front() {
+                Some(s) => (s.req, s.tag),
+                None => match queued.pop_front() {
+                    Some(r) => {
+                        let t = tag(&r);
+                        (r, t)
+                    }
+                    None => break,
+                },
+            };
+            let mut key_of = |r: &Request| tag(r);
+            let mut next = || queued.pop_front();
+            let (batch, _shape) = assemble_batch(
+                head,
+                head_tag,
+                &mut pending,
+                4,
+                Duration::ZERO,
+                None,
+                &mut key_of,
+                &mut next,
+            );
+            dispatches.push(batch.iter().map(|r| r.id).collect());
+        }
+        let pos = dispatches
+            .iter()
+            .position(|d| d.contains(&1))
+            .expect("the group-B request must dispatch");
+        assert_eq!(pos, 1, "stashed non-matching request heads the next dispatch: {dispatches:?}");
+        assert_eq!(dispatches[1], vec![1], "group B dispatches alone (nothing else matches)");
+        // Zero-lost: every request dispatched exactly once.
+        let mut all: Vec<u64> = dispatches.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..20).collect::<Vec<u64>>());
+        assert!(pending.is_empty(), "the stash fully drains");
     }
 }

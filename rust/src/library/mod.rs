@@ -135,6 +135,10 @@ struct WeightStoreInner {
     /// Byte budget for resident weights; pinned entries never count
     /// against evictability. Default effectively unbounded.
     max_bytes: u64,
+    /// Per-program residency floors (multi-tenant arbitration): eviction
+    /// never shrinks a program's resident weights below its floor, so one
+    /// tenant's working set cannot flush another's past the guarantee.
+    floors: HashMap<u64, u64>,
     evictions: u64,
 }
 
@@ -151,13 +155,16 @@ impl WeightStore {
                 weights: HashMap::new(),
                 lru: VecDeque::new(),
                 max_bytes: u64::MAX,
+                floors: HashMap::new(),
                 evictions: 0,
             }),
         }
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, WeightStoreInner> {
-        self.inner.lock().expect("weight store lock")
+        // Process-shared, so poison recovery (see `util::relock`): a
+        // panicking worker must not wedge every sibling's weight lookups.
+        crate::util::relock(&self.inner)
     }
 
     /// Set the residency budget and enforce it immediately.
@@ -167,9 +174,23 @@ impl WeightStore {
         inner.enforce();
     }
 
+    /// Guarantee `program` at least `bytes` of residency: eviction (from
+    /// *any* tenant's traffic) will never shrink that program's resident
+    /// weights below the floor. Floors are advisory capacity reservations —
+    /// they don't pre-allocate, they only veto evictions — so the sum of
+    /// floors should stay under `max_bytes` or the budget can overshoot.
+    pub fn set_floor(&self, program: u64, bytes: u64) {
+        self.lock().floors.insert(program, bytes);
+    }
+
     /// Bytes of weights currently resident on device.
     pub fn resident_bytes(&self) -> u64 {
         self.lock().weights.values().map(|e| e.bytes).sum()
+    }
+
+    /// Bytes resident for one program (one tenant's model).
+    pub fn resident_bytes_for(&self, program: u64) -> u64 {
+        self.lock().resident_of(program)
     }
 
     /// Budget evictions performed so far.
@@ -259,12 +280,26 @@ impl WeightStoreInner {
         self.weights.values().map(|e| e.bytes).sum()
     }
 
+    fn resident_of(&self, program: u64) -> u64 {
+        self.weights
+            .iter()
+            .filter(|(k, _)| k.program == program)
+            .map(|(_, e)| e.bytes)
+            .sum()
+    }
+
+    /// Evict cold unpinned entries (LRU order) until the budget holds.
+    /// An entry is exempt while evicting it would drop its program below
+    /// that program's floor; if only pinned or floor-protected entries
+    /// remain, the budget is allowed to overshoot rather than starve a
+    /// tenant's guaranteed working set.
     fn enforce(&mut self) {
         while self.resident() > self.max_bytes {
-            let evictable = self
-                .lru
-                .iter()
-                .position(|k| self.weights.get(k).map(|e| e.pins).unwrap_or(0) == 0);
+            let evictable = self.lru.iter().position(|k| {
+                let Some(e) = self.weights.get(k) else { return true };
+                let floor = self.floors.get(&k.program).copied().unwrap_or(0);
+                e.pins == 0 && self.resident_of(k.program) - e.bytes >= floor
+            });
             let Some(pos) = evictable else { break };
             let k = self.lru.remove(pos).unwrap();
             if self.weights.remove(&k).is_some() {
@@ -891,6 +926,12 @@ impl GemmLibrary {
     pub fn set_max_weight_bytes(&mut self, bytes: u64) {
         self.weights.set_max_bytes(bytes);
     }
+
+    /// Reserve a per-program residency floor in the shared store (see
+    /// [`WeightStore::set_floor`]) — the multi-tenant arbitration knob.
+    pub fn set_weight_floor(&mut self, program: u64, bytes: u64) {
+        self.weights.set_floor(program, bytes);
+    }
 }
 
 #[cfg(test)]
@@ -1004,6 +1045,46 @@ mod tests {
         // A pin attempt on an evicted entry takes no pin (the caller must
         // not later issue a matching unpin).
         assert!(!lib.pin_weight(&kb));
+    }
+
+    #[test]
+    fn weight_floor_protects_a_tenant_from_cross_program_eviction() {
+        let dev = Arc::new(Device::cpu().unwrap());
+        let mut lib = GemmLibrary::new(dev);
+        let w = Tensor::f32(&[2, 2], vec![1.; 4]); // 16 bytes resident each
+        let a1 = WeightKey { program: 1, value: 1 };
+        let a2 = WeightKey { program: 1, value: 2 };
+        let b1 = WeightKey { program: 2, value: 1 };
+        // Program 1 is guaranteed one entry's worth of residency.
+        lib.set_weight_floor(1, 16);
+        lib.weight_device(a1.clone(), &w, &[2, 2], false).unwrap();
+        lib.weight_device(a2.clone(), &w, &[2, 2], false).unwrap();
+        assert_eq!(lib.weight_store().resident_bytes_for(1), 32);
+        // Budget of one entry: program 2's upload must evict program 1's
+        // cold surplus (a1) and then stop — a2 is floor-protected even
+        // though it is unpinned and the budget is still exceeded.
+        lib.set_max_weight_bytes(16);
+        assert_eq!(lib.weight_evictions(), 1, "surplus above the floor goes");
+        lib.weight_device(b1, &w, &[2, 2], false).unwrap();
+        assert_eq!(
+            lib.weight_store().resident_bytes_for(1),
+            16,
+            "program 1 holds exactly its floor"
+        );
+        assert!(
+            lib.weight_store().resident_bytes_for(2) > 0 || lib.weight_evictions() >= 2,
+            "program 2 either stays resident (overshoot) or was evicted itself"
+        );
+        // Program 1's own traffic above its floor is still evictable: a
+        // re-upload of a1 makes a2 the cold surplus entry.
+        let evictions_before = lib.weight_evictions();
+        lib.weight_device(a1, &w, &[2, 2], false).unwrap();
+        assert!(lib.weight_evictions() > evictions_before);
+        assert_eq!(
+            lib.weight_store().resident_bytes_for(1),
+            16,
+            "floor holds, but identity of the survivor follows LRU"
+        );
     }
 
     #[test]

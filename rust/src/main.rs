@@ -47,6 +47,11 @@ fn load_workload(args: &Args) -> Result<disc::workloads::Workload> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    if args.positional.first().map(|s| s.as_str()) == Some("mix")
+        || args.get("workload") == Some("mix")
+    {
+        return cmd_run_mix(args);
+    }
     let w = load_workload(args)?;
     if w.name == "decode" {
         return cmd_run_decode(args);
@@ -290,6 +295,150 @@ fn cmd_run_decode(args: &Args) -> Result<()> {
     println!(
         "robustness: shed={} deadline_misses={} demotions={} worker_restarts={}",
         m.shed_requests, m.deadline_misses, m.demotions, m.worker_restarts
+    );
+    Ok(())
+}
+
+/// Parse the `--tenants` list: `name:workload[:slo[:weight[:floor-mb]]]`
+/// entries separated by commas. Shared flags (`--requests`, `--rate`,
+/// `--deadline-ms`, `--seed`, `--fault-tenant`) refine every entry.
+fn parse_tenants(
+    spec: &str,
+    args: &Args,
+) -> Result<Vec<disc::coordinator::tenants::TenantSpec>> {
+    use disc::coordinator::tenants::TenantSpec;
+    let requests = args.get_usize("requests", 0)?;
+    let rate: Option<f64> = match args.get("rate") {
+        Some(r) => Some(r.parse().context("--rate wants a float")?),
+        None => None,
+    };
+    let deadline_ms = args.get_usize("deadline-ms", 0)? as u64;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let fault_tenant = args.get("fault-tenant");
+    let mut out = Vec::new();
+    for (i, item) in spec.split(',').filter(|s| !s.is_empty()).enumerate() {
+        let mut parts = item.split(':');
+        let name = parts.next().unwrap_or_default();
+        if name.is_empty() {
+            bail!("--tenants entry '{item}' is missing a name");
+        }
+        let workload = parts.next().unwrap_or(name);
+        let slo = parts.next().unwrap_or(if i == 0 { "latency" } else { "throughput" });
+        let mut t = match slo {
+            "latency" | "lat" => TenantSpec::latency(name, workload),
+            "throughput" | "thr" => TenantSpec::throughput(name, workload),
+            other => bail!("tenant '{name}': unknown slo '{other}' (latency|throughput)"),
+        };
+        if let Some(w) = parts.next() {
+            t = t.weight(w.parse().with_context(|| format!("tenant '{name}': weight"))?);
+        }
+        if let Some(mb) = parts.next() {
+            let mb: u64 =
+                mb.parse().with_context(|| format!("tenant '{name}': floor-mb"))?;
+            t = t.floor_bytes(mb << 20);
+        }
+        if requests > 0 {
+            t = t.requests(requests);
+        }
+        if let Some(r) = rate {
+            t = t.rate(r);
+        }
+        if deadline_ms > 0 {
+            t = t.deadline_ms(deadline_ms);
+        }
+        // Distinct deterministic stream per tenant off the shared base seed.
+        t = t.seed(seed.wrapping_add(i as u64));
+        if fault_tenant == Some(name) {
+            t = t.fault_target();
+        }
+        out.push(t);
+    }
+    if out.is_empty() {
+        bail!("--tenants wants at least one name:workload entry");
+    }
+    if let Some(ft) = fault_tenant {
+        if !out.iter().any(|t| t.name == ft) {
+            bail!("--fault-tenant '{ft}' does not name a tenant");
+        }
+    }
+    Ok(out)
+}
+
+/// Multi-tenant serving: N models behind one admission front with
+/// per-tenant bulkheads (own queue, SLO class, fair-share weight,
+/// weight-cache floor) and per-tenant circuit breakers.
+fn cmd_run_mix(args: &Args) -> Result<()> {
+    use disc::coordinator::tenants::{serve_mix, MixOptions, Quarantine};
+    let tenants_spec = args
+        .get("tenants")
+        .unwrap_or("lat:transformer:latency,bert:bert:throughput,tts:tts:throughput");
+    let specs = parse_tenants(tenants_spec, args)?;
+    let mut opts = MixOptions::new()
+        .workers(args.get_usize("workers", 2)?)
+        .batch(args.get_usize("batch", 4)?)
+        .breaker(
+            args.get_usize("breaker", 3)? as u32,
+            args.get_usize("probe-after", 8)? as u64,
+        );
+    match args.get("quarantine") {
+        None | Some("reference") => {}
+        Some("shed") => opts = opts.quarantine(Quarantine::Shed),
+        Some(other) => bail!("--quarantine wants reference|shed, got '{other}'"),
+    }
+    if let Some(spec) = args.get("faults") {
+        opts = opts.faults(std::sync::Arc::new(
+            disc::runtime::faults::FaultPlan::parse(spec).context("--faults spec")?,
+        ));
+    }
+    let budget_mb = args.get_usize("weight-budget-mb", 0)? as u64;
+    if budget_mb > 0 {
+        opts = opts.weight_budget(budget_mb << 20);
+    }
+
+    let report = serve_mix(specs, &opts)?;
+    println!("mix: served {} tenants in {:.2?}", report.tenants.len(), report.wall);
+    for t in &report.tenants {
+        let m = &t.report.metrics;
+        println!(
+            "tenant {:<10} [{:<10}] completed {}/{}  p50={:.2?} p99={:.2?}  ({:.1} req/s)",
+            t.name,
+            t.slo.as_str(),
+            t.report.completed,
+            t.offered,
+            t.report.p50,
+            t.report.p99,
+            t.report.throughput_rps
+        );
+        println!(
+            "  robustness: shed={} deadline_misses={} demotions={} worker_restarts={} \
+             breaker_trips={} probes={} quarantined={}",
+            m.shed_requests,
+            m.deadline_misses,
+            m.demotions,
+            m.worker_restarts,
+            t.breaker_trips,
+            t.probes,
+            m.quarantined
+        );
+        println!(
+            "  service: dispatches={} plans h/m={}/{} compiles={} weight-resident={}",
+            t.report.batch_launches,
+            m.plan_hits,
+            m.plan_misses,
+            m.compile_events,
+            disc::util::fmt_bytes(m.weight_resident_bytes as usize)
+        );
+    }
+    let a = &report.aggregate;
+    println!(
+        "aggregate: compile_events={} shed={} quarantined={} breaker_trips={} \
+         weight cache h/m={}/{}",
+        a.compile_events,
+        a.shed_requests,
+        a.quarantined,
+        a.breaker_trips,
+        a.weight_cache_hits,
+        a.weight_cache_misses
     );
     Ok(())
 }

@@ -107,6 +107,13 @@ pub struct RunMetrics {
     pub demotions: u64,
     /// Workers respawned by the coordinator's supervisor after a panic.
     pub worker_restarts: u64,
+    /// Per-tenant circuit-breaker transitions into the Open state (see
+    /// `coordinator/tenants.rs`): consecutive dispatch failures crossed the
+    /// breaker threshold and the tenant was quarantined.
+    pub breaker_trips: u64,
+    /// Requests served (or shed) under quarantine while a tenant's breaker
+    /// was open — reference-evaluator answers, not replay-tier dispatches.
+    pub quarantined: u64,
     /// Autoregressive decode counters (see `runtime/kv.rs` and the decode
     /// section of docs/runtime.md). All flows except `kv_resident_bytes`.
     ///
@@ -185,6 +192,8 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.retries += o.retries;
         self.demotions += o.demotions;
         self.worker_restarts += o.worker_restarts;
+        self.breaker_trips += o.breaker_trips;
+        self.quarantined += o.quarantined;
         self.decode_requests += o.decode_requests;
         self.decode_steps += o.decode_steps;
         self.kv_rollovers += o.kv_rollovers;
@@ -313,6 +322,8 @@ mod tests {
             retries: 2,
             demotions: 1,
             worker_restarts: 1,
+            breaker_trips: 1,
+            quarantined: 4,
             ..Default::default()
         };
         a += &b;
@@ -321,5 +332,7 @@ mod tests {
         assert_eq!(a.retries, 3);
         assert_eq!(a.demotions, 3);
         assert_eq!(a.worker_restarts, 1);
+        assert_eq!(a.breaker_trips, 1);
+        assert_eq!(a.quarantined, 4);
     }
 }

@@ -139,9 +139,10 @@ impl Device {
 
     /// Snapshot of the device's accumulated stats.
     pub fn stats(&self) -> DeviceStats {
-        // Stats locks recover from poisoning: a panicking worker must not
-        // take device accounting (and every other worker) down with it.
-        self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
+        // Stats locks recover from poisoning (`util::relock`): a panicking
+        // worker must not take device accounting (and every other worker)
+        // down with it.
+        crate::util::relock(&self.stats).clone()
     }
 
     /// Compile HLO text into an executable. The text is round-tripped
@@ -170,7 +171,7 @@ impl Device {
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling HLO: {e}"))?;
         let elapsed = start.elapsed();
         {
-            let mut s = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let mut s = crate::util::relock(&self.stats);
             s.compilations += 1;
             s.compile_time += elapsed;
         }
@@ -187,7 +188,7 @@ impl Device {
             .buffer_from_host_literal(&lit)
             .map_err(|e| anyhow!("h2d transfer: {e}"))?;
         {
-            let mut s = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let mut s = crate::util::relock(&self.stats);
             s.h2d_transfers += 1;
             s.h2d_bytes += t.byte_size() as u64;
         }
@@ -199,7 +200,7 @@ impl Device {
         faults::check(self.faults.as_deref(), FaultSite::D2h, "d2h readback")?;
         let t = dt.to_host()?;
         {
-            let mut s = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let mut s = crate::util::relock(&self.stats);
             s.d2h_transfers += 1;
             s.d2h_bytes += t.byte_size() as u64;
         }

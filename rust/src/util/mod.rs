@@ -5,6 +5,21 @@
 pub mod json;
 pub mod prng;
 
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a process-shared mutex, recovering from poisoning. A panicking
+/// worker (or an injected chaos panic) unwinding while it holds a shared
+/// lock must not cascade into every sibling's lookups: the states guarded
+/// this way (kernel-store shards, device stats, queue receivers, the
+/// weight table) are all consistent at mutation granularity, so the
+/// poison flag carries no information worth honoring. Every shared lock
+/// site in the serving path goes through here — a bare `.unwrap()` on any
+/// of them would let one supervised panic wedge the whole pool, defeating
+/// the coordinator's restart story.
+pub fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// Round `n` up to the next power of two (min 1). Used by the bucketing
 /// scheme in codegen: dynamic dimensions are rounded up so that a small
 /// family of compiled kernel variants covers every runtime shape.
@@ -54,6 +69,21 @@ mod tests {
         assert_eq!(round_up(1, 8), 8);
         assert_eq!(round_up(8, 8), 8);
         assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn relock_recovers_a_poisoned_mutex() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned(), "the panicking holder must poison the mutex");
+        assert_eq!(*relock(&m), 7, "relock serves the state regardless");
+        *relock(&m) += 1;
+        assert_eq!(*relock(&m), 8);
     }
 
     #[test]

@@ -271,6 +271,102 @@ fn decode_panic_mid_loop_restarts_and_streams_match() {
     assert_eq!(model.kv_residency().0, 0, "all slab bytes released at drain");
 }
 
+#[test]
+fn multi_tenant_storm_leaves_the_latency_tenant_untouched() {
+    // The bulkhead gate, under whatever seams the chaos matrix armed: a
+    // latency-bound transformer tenant rides alongside a flooding
+    // throughput tenant that is also the target of the worker-panic
+    // schedule. No matter which matrix line runs this,
+    //
+    //   * the zero-lost invariant reconciles PER TENANT (serve_mix asserts
+    //     it internally; the balance is spot-checked here),
+    //   * the latency tenant loses nothing: everything completes, nothing
+    //     sheds, no restarts, no quarantine, no breaker trips,
+    //   * the latency tenant's answers stay bit-exact — against the solo
+    //     interpreter alone when no device seam is armed (it must also
+    //     show zero demotions then), against the interpreter-or-reference
+    //     disjunction when device faults can demote its dispatches,
+    //   * every injected panic is attributed to the target tenant as
+    //     exactly one supervised restart.
+    use disc::coordinator::tenants::{serve_mix, MixOptions, TenantSpec};
+
+    let plan = armed_plan();
+    let n_lat = 16;
+    let lat_seed = 83;
+    let w = disc::workloads::by_name("transformer").unwrap();
+    let stream = w.request_stream(n_lat, lat_seed);
+    let (want_interp, want_ref) = references(&stream);
+
+    let specs = vec![
+        TenantSpec::latency("lat", "transformer").requests(n_lat).rate(600.0).seed(lat_seed),
+        TenantSpec::throughput("flood", "tts")
+            .requests(48)
+            .rate(4_000.0)
+            .seed(84)
+            .bursty(12)
+            .fault_target(),
+    ];
+    let report = serve_mix(
+        specs,
+        &MixOptions::new().workers(2).batch(3).faults(plan.clone()).breaker(2, 2).keep_outputs(),
+    )
+    .unwrap();
+
+    for t in &report.tenants {
+        let m = &t.report.metrics;
+        assert_eq!(
+            t.report.completed as u64 + m.shed_requests + m.deadline_misses,
+            t.offered as u64,
+            "tenant {}: accounting must balance under the storm",
+            t.name
+        );
+    }
+
+    let healthy = &report.tenants[0];
+    let faulty = &report.tenants[1];
+    let hm = &healthy.report.metrics;
+    assert_eq!(healthy.report.completed, n_lat, "latency tenant must complete everything");
+    assert_eq!(hm.shed_requests, 0, "latency tenant must shed nothing");
+    assert_eq!(hm.worker_restarts, 0, "panic faults must never land on the latency tenant");
+    assert_eq!(hm.quarantined, 0);
+    assert_eq!(healthy.breaker_trips, 0, "healthy tenants keep full service");
+
+    let device_armed = [
+        FaultSite::Compile,
+        FaultSite::CompilePanic,
+        FaultSite::H2d,
+        FaultSite::D2h,
+        FaultSite::DeviceOom,
+    ]
+    .iter()
+    .any(|&s| plan.arms(s));
+    if !device_armed {
+        assert_eq!(hm.demotions, 0, "no device seam armed: the ladder must never demote");
+    }
+    assert_eq!(healthy.report.outputs.len(), n_lat);
+    for (id, got) in &healthy.report.outputs {
+        let i = *id as usize;
+        if device_armed {
+            assert!(
+                got == &want_interp[i] || got == &want_ref[i],
+                "latency request {id} diverged from both fault-free references"
+            );
+        } else {
+            assert_eq!(got, &want_interp[i], "latency request {id} diverged from solo");
+        }
+    }
+
+    // Attribution: the panic seam is consulted only inside the target
+    // tenant's dispatches, so every fire is one of ITS restarts.
+    assert_eq!(faulty.report.metrics.worker_restarts, plan.fired(FaultSite::WorkerPanic));
+    if faulty.breaker_trips > 0 {
+        assert!(
+            faulty.report.metrics.quarantined > 0,
+            "an open breaker must quarantine subsequent dispatches"
+        );
+    }
+}
+
 fn write_bench_artifact(plan: &FaultPlan, report: &ServeReport) {
     use disc::util::json::{to_string_pretty, Value};
     let sites: Vec<Value> = SITES
@@ -297,6 +393,7 @@ fn write_bench_artifact(plan: &FaultPlan, report: &ServeReport) {
         ("throughput_rps", Value::Num(report.throughput_rps)),
         ("sites", Value::Arr(sites)),
     ]);
-    std::fs::write("BENCH_chaos.json", to_string_pretty(&doc)).expect("write chaos artifact");
-    println!("wrote BENCH_chaos.json");
+    let path = disc::bench::artifact_path("BENCH_chaos.json");
+    std::fs::write(&path, to_string_pretty(&doc)).expect("write chaos artifact");
+    println!("wrote {}", path.display());
 }

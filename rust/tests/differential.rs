@@ -115,6 +115,55 @@ fn replay_tiers_are_bit_exact_under_random_binding_streams() {
 }
 
 #[test]
+fn multi_tenant_mix_is_bit_exact_per_tenant() {
+    use disc::coordinator::tenants::{serve_mix, MixOptions, TenantSpec};
+
+    // Each tenant's outputs from the shared-pool mix must be bit-identical
+    // to that tenant served solo — sharing a worker pool, kernel store,
+    // and weight store is invisible in the floats. Request ids are stream
+    // indices, so `outputs` (id-sorted) aligns with the solo stream.
+    let tenants: [(&str, &str, u64); 2] = [("lat", "transformer", 0xA11CE), ("thr", "bert", 0xB0B)];
+    let n = 8;
+    let want: Vec<Vec<Vec<Tensor>>> = tenants
+        .iter()
+        .map(|(_, wl, seed)| {
+            let w = workloads::by_name(wl).unwrap();
+            let mut interp = fresh_model(wl, &interpret_only());
+            w.request_stream(n, *seed)
+                .iter()
+                .map(|inputs| {
+                    interp
+                        .run(inputs)
+                        .unwrap_or_else(|e| panic!("[{wl}] solo interpret run: {e:#}"))
+                        .outputs
+                })
+                .collect()
+        })
+        .collect();
+
+    let specs = vec![
+        TenantSpec::latency(tenants[0].0, tenants[0].1).requests(n).rate(600.0).seed(tenants[0].2),
+        TenantSpec::throughput(tenants[1].0, tenants[1].1)
+            .requests(n)
+            .rate(900.0)
+            .seed(tenants[1].2),
+    ];
+    let report =
+        serve_mix(specs, &MixOptions::new().workers(2).batch(3).keep_outputs()).unwrap();
+    for (t, tr) in report.tenants.iter().enumerate() {
+        assert_eq!(tr.report.completed, n, "tenant {} must complete its stream", tr.name);
+        assert_eq!(tr.report.outputs.len(), n, "tenant {} must capture every output", tr.name);
+        for (id, got) in &tr.report.outputs {
+            assert_eq!(
+                got, &want[t][*id as usize],
+                "tenant {} request {id} diverged from its solo run",
+                tr.name
+            );
+        }
+    }
+}
+
+#[test]
 fn decode_loops_are_bit_exact_across_tiers_and_scheduling() {
     let spec = workloads::decode::spec();
     let vocab = workloads::decode::VOCAB as i64;
