@@ -8,7 +8,9 @@
 //!  5. launch-plan cache + device-resident replay on/off (the per-request
 //!     host-overhead tier; see docs/runtime.md);
 //!  6. persistent device-weight cache on/off (GEMM weights upload once per
-//!     program vs per call — the h2d column isolates the saved traffic).
+//!     program vs per call — the h2d column isolates the saved traffic);
+//!  7. symbolic memory planning on/off (replays acquire one planned arena
+//!     extent vs per-buffer blocks; see runtime/memplan.rs).
 
 use disc::bench::Table;
 use disc::codegen::BucketPolicy;
@@ -78,7 +80,17 @@ fn main() {
         },
         Case {
             name: "no device weight cache",
-            opts: CompileOptions { weight_cache: false, ..base.clone() },
+            opts: CompileOptions {
+                runtime: base.runtime.clone().with_weight_cache(false),
+                ..base.clone()
+            },
+        },
+        Case {
+            name: "no symbolic memory plan",
+            opts: CompileOptions {
+                runtime: base.runtime.clone().with_memory_plan(false),
+                ..base.clone()
+            },
         },
     ];
 

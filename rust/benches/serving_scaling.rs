@@ -154,7 +154,7 @@ fn main() {
         let compiler = DiscCompiler::new().expect("pjrt device");
         let module = disc::bridge::lower(&w.graph).expect("lower");
         let mut copts = CompileOptions::mode(Mode::Disc);
-        copts.speculative_warm = warm;
+        copts.runtime.speculative_warm = warm;
         let mut model = compiler.compile(module, &copts).expect("compile");
         // Modest rate: leaves wall-clock room between requests for the
         // background pool to finish the speculative compiles.

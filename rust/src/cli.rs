@@ -70,12 +70,14 @@ disc — dynamic shape compiler (DISC reproduction)
 USAGE:
   disc run      --workload <name> [--mode disc] [--requests 50] [--seed 1]
                 [--open-rate <rps>] [--workers N] [--burst B] [--warm]
-                [--batch K] [--batch-window-us U]
+                [--batch K] [--batch-window-us U] [--no-memplan]
                 [--deadline-ms D] [--faults <spec>]
                 (--workers >1 serves the open-loop stream from N executor
                  threads sharing one kernel/weight store; --burst switches
                  to on/off arrivals; --warm precompiles neighbor buckets in
-                 the background; --batch >1 coalesces queued same-group
+                 the background; --no-memplan disables the compile-time
+                 symbolic memory planner (replays fall back to per-buffer
+                 arena blocks); --batch >1 coalesces queued same-group
                  requests into one stacked launch, waiting up to U us for
                  stragglers once the queue runs dry; --deadline-ms sheds
                  requests still queued D ms after arrival; --faults arms a

@@ -11,7 +11,7 @@ use crate::passes::static_detect::{analyze, PipelineChoice};
 use crate::program::{generate, Program};
 use crate::runtime::batching::{BatchAnalysis, BatchOutput};
 use crate::runtime::eager::Eager;
-use crate::runtime::executor::{DecodeOutput, ExecOptions, ExecOutput, Executor};
+use crate::runtime::executor::{DecodeOutput, ExecOptions, ExecOutput, Executor, RuntimeOptions};
 use crate::runtime::kv::DecodeSpec;
 use crate::runtime::pjrt::Device;
 use crate::runtime::tensor::Tensor;
@@ -56,13 +56,10 @@ pub struct CompileOptions {
     pub plan_cache: bool,
     /// Keep fused/GEMM results device-resident during plan replays.
     pub device_resident: bool,
-    /// Serve static GEMM weights from the library's persistent device-side
-    /// weight cache (upload once per program; see docs/runtime.md).
-    pub weight_cache: bool,
-    /// Speculative neighbor-bucket warming: recording a plan also enqueues
-    /// background compiles for the next bucket of every dynamic symbol
-    /// (see `ExecOptions::speculative_warm`).
-    pub speculative_warm: bool,
+    /// Runtime feature toggles shared verbatim with the executor (weight
+    /// cache, speculative warming, symbolic memory planning); see
+    /// [`RuntimeOptions`].
+    pub runtime: RuntimeOptions,
 }
 
 impl CompileOptions {
@@ -75,8 +72,7 @@ impl CompileOptions {
             pooled_buffers: true,
             plan_cache: true,
             device_resident: true,
-            weight_cache: true,
-            speculative_warm: false,
+            runtime: RuntimeOptions::default(),
         }
     }
 }
@@ -152,30 +148,32 @@ impl CompiledModel {
         }
     }
 
-    /// Acquire KV-slab bytes in the executor arena's KV residency class —
+    /// Acquire a KV-slab lease in the executor arena's KV residency class —
     /// the seam the decode scheduler accounts per-request slabs through
-    /// (and where an injected OOM surfaces). Baselines hold no arena and
-    /// accept silently.
-    pub fn kv_acquire(&mut self, bytes: u64) -> Result<()> {
+    /// (and where an injected OOM surfaces). Dropping the returned lease
+    /// releases the slab (request exit or bucket rollover). Baselines hold
+    /// no arena and accept silently with `Ok(None)`.
+    pub fn kv_acquire(
+        &mut self,
+        bytes: u64,
+    ) -> Result<Option<crate::runtime::buffers::ArenaLease>> {
         if let Backend::Program { exec, .. } = &mut self.backend {
             let faults = exec.device.faults().cloned();
-            exec.pool.device.kv_acquire_checked(bytes, faults.as_deref())?;
+            let lease = exec.pool.device.acquire(
+                crate::runtime::buffers::ResidencyClass::Kv,
+                bytes,
+                faults.as_deref(),
+            )?;
+            return Ok(Some(lease));
         }
-        Ok(())
-    }
-
-    /// Release KV-slab bytes (request exit or bucket rollover).
-    pub fn kv_release(&mut self, bytes: u64) {
-        if let Backend::Program { exec, .. } = &mut self.backend {
-            exec.pool.device.kv_release(bytes);
-        }
+        Ok(None)
     }
 
     /// Current and peak KV-slab residency of the backend arena.
     pub fn kv_residency(&self) -> (u64, u64) {
         match &self.backend {
             Backend::Program { exec, .. } => {
-                (exec.pool.device.kv_resident_bytes, exec.pool.device.kv_high_water_bytes)
+                (exec.pool.device.kv_resident_bytes(), exec.pool.device.kv_high_water_bytes())
             }
             _ => (0, 0),
         }
@@ -386,8 +384,7 @@ impl DiscCompiler {
                         pooled_buffers: opts.pooled_buffers,
                         plan_cache: opts.plan_cache,
                         device_resident: opts.device_resident,
-                        weight_cache: opts.weight_cache,
-                        speculative_warm: opts.speculative_warm,
+                        runtime: opts.runtime.clone(),
                     },
                     self.store.clone(),
                     self.weights.clone(),
@@ -399,6 +396,14 @@ impl DiscCompiler {
                 exec.seed_batch_analysis(
                     prog.id,
                     Arc::new(crate::runtime::batching::analyze(&prog)),
+                );
+                // So is the symbolic memory plan: live intervals and slot
+                // coloring depend only on the program and bucket policy, so
+                // it is built once at compile time and instantiated per
+                // binding when plans install.
+                exec.seed_memory_plan(
+                    prog.id,
+                    Arc::new(crate::runtime::memplan::MemoryPlan::build(&prog, policy)),
                 );
                 Backend::Program { exec, prog }
             }

@@ -19,13 +19,13 @@
 //!
 //! Request state is **engine-owned**: each member's [`KvCache`] (embedding
 //! history + per-layer KV slabs at bucket capacity) lives here, its bytes
-//! accounted in the executor arena's KV residency class via
-//! `CompiledModel::kv_acquire`/`kv_release`. That split is what makes the
-//! failure model work — a worker panic mid-step destroys the executor, not
-//! the decode state: the member replays the same step (same token, same
-//! slab → bit-identical) after the restart, bounded by `max_requeues`.
-//! Every exit path (completion, deadline shed, requeue exhaustion, error)
-//! releases the member's slab bytes.
+//! accounted in the executor arena's KV residency class through the
+//! `ArenaLease` returned by `CompiledModel::kv_acquire`. That split is
+//! what makes the failure model work — a worker panic mid-step destroys
+//! the executor, not the decode state: the member replays the same step
+//! (same token, same slab → bit-identical) after the restart, bounded by
+//! `max_requeues`. Every exit path (completion, deadline shed, requeue
+//! exhaustion, error) drops the member — and with it its slab lease.
 
 use super::{assemble_batch, Request, Stashed};
 use crate::compiler::CompiledModel;
@@ -159,7 +159,10 @@ struct Member {
     admitted: Instant,
     deadline: Option<Instant>,
     requeues: u32,
-    slab_resident: bool,
+    /// The member's KV-slab lease in the engine arena; `None` while the
+    /// member decodes host-resident (demoted, or a baseline backend with
+    /// no arena). Dropping the member releases the slab.
+    slab: Option<crate::runtime::buffers::ArenaLease>,
 }
 
 impl Member {
@@ -220,12 +223,8 @@ pub fn serve_decode(
         &mut metrics,
         &mut stats,
     );
-    // Error paths leave members behind: their slabs still die with them.
-    for m in running.drain(..) {
-        if m.slab_resident {
-            model.kv_release(m.kv.slab_bytes());
-        }
-    }
+    // Error paths leave members behind: their slab leases die with them.
+    running.clear();
     result?;
 
     let (kv_now, kv_peak) = model.kv_residency();
@@ -288,10 +287,15 @@ fn drive(
             }
             let job = arrivals.remove(i).expect("index checked");
             let kv = KvCache::new(*spec, policy);
-            let slab_resident = model.kv_acquire(kv.slab_bytes()).is_ok();
-            if !slab_resident {
-                metrics.demotions += 1;
-            }
+            // `Ok(None)` (baseline backend, no arena) is not a demotion —
+            // only a failed arena acquire demotes to host residency.
+            let slab = match model.kv_acquire(kv.slab_bytes()) {
+                Ok(l) => l,
+                Err(_) => {
+                    metrics.demotions += 1;
+                    None
+                }
+            };
             let now = Instant::now();
             running.push(Member {
                 id: job.id,
@@ -305,7 +309,7 @@ fn drive(
                 admitted: now,
                 deadline: opts.deadline.map(|d| now + d),
                 requeues: 0,
-                slab_resident,
+                slab,
             });
             metrics.decode_requests += 1;
             if mid_flight {
@@ -319,10 +323,7 @@ fn drive(
         let mut j = 0;
         while j < running.len() {
             if running[j].deadline.is_some_and(|d| now >= d) {
-                let m = running.remove(j);
-                if m.slab_resident {
-                    model.kv_release(m.kv.slab_bytes());
-                }
+                running.remove(j);
                 metrics.deadline_misses += 1;
             } else {
                 j += 1;
@@ -344,15 +345,17 @@ fn drive(
                 // Bucket rollover at the step boundary: the member's next
                 // step binds (and on first sight records) the next
                 // capacity's plan family.
-                let old_bytes = m.kv.slab_bytes();
                 m.kv.grow();
                 metrics.kv_rollovers += 1;
-                if m.slab_resident {
-                    model.kv_release(old_bytes);
-                    m.slab_resident = model.kv_acquire(m.kv.slab_bytes()).is_ok();
-                    if !m.slab_resident {
-                        metrics.demotions += 1;
-                    }
+                if m.slab.is_some() {
+                    drop(m.slab.take());
+                    m.slab = match model.kv_acquire(m.kv.slab_bytes()) {
+                        Ok(l) => l,
+                        Err(_) => {
+                            metrics.demotions += 1;
+                            None
+                        }
+                    };
                 }
             }
             let token = m.next_token();
@@ -414,7 +417,6 @@ fn drive(
                             outs,
                             spec,
                             opts,
-                            model,
                             completions,
                             metrics,
                         )?;
@@ -430,11 +432,18 @@ fn drive(
                     metrics.worker_restarts += 1;
                     model.restart_worker();
                     for m in running.iter_mut() {
-                        if m.slab_resident {
-                            m.slab_resident = model.kv_acquire(m.kv.slab_bytes()).is_ok();
-                            if !m.slab_resident {
-                                metrics.demotions += 1;
-                            }
+                        if m.slab.is_some() {
+                            // The old engine's arena died with it; the
+                            // stale lease unwinds there, and the member
+                            // re-accounts against the fresh arena.
+                            drop(m.slab.take());
+                            m.slab = match model.kv_acquire(m.kv.slab_bytes()) {
+                                Ok(l) => l,
+                                Err(_) => {
+                                    metrics.demotions += 1;
+                                    None
+                                }
+                            };
                         }
                     }
                     for id in ids {
@@ -442,10 +451,7 @@ fn drive(
                             continue;
                         };
                         if running[pos].requeues >= opts.max_requeues {
-                            let m = running.remove(pos);
-                            if m.slab_resident {
-                                model.kv_release(m.kv.slab_bytes());
-                            }
+                            running.remove(pos);
                             metrics.shed_requests += 1;
                         } else {
                             running[pos].requeues += 1;
@@ -460,7 +466,7 @@ fn drive(
 
 /// Fold one member's step outputs back into its state: append the KV
 /// rows, advance the cursor, retire the member if this was its last step
-/// (releasing its slab and emitting a completion).
+/// (dropping its slab lease and emitting a completion).
 #[allow(clippy::too_many_arguments)]
 fn advance_member(
     running: &mut Vec<Member>,
@@ -469,7 +475,6 @@ fn advance_member(
     mut outs: Vec<Tensor>,
     spec: &DecodeSpec,
     opts: &DecodeServeOptions,
-    model: &mut CompiledModel,
     completions: &mut Vec<DecodeCompletion>,
     metrics: &mut RunMetrics,
 ) -> Result<()> {
@@ -498,9 +503,6 @@ fn advance_member(
     m.last_probs = Some(probs);
     if m.step == m.total_steps() {
         let m = running.remove(pos);
-        if m.slab_resident {
-            model.kv_release(m.kv.slab_bytes());
-        }
         completions.push(DecodeCompletion {
             id: m.id,
             generated: m.generated,

@@ -70,7 +70,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut opts = CompileOptions::mode(mode);
     // Serving with workers wants compilation off the hot path: warm the
     // neighbor buckets speculatively while recording.
-    opts.speculative_warm = args.get_bool("warm");
+    opts.runtime.speculative_warm = args.get_bool("warm");
+    if args.get_bool("no-memplan") {
+        opts.runtime.memory_plan = false;
+    }
     let mut model = compiler.compile(module, &opts)?;
     println!(
         "compiled {} [{}] pipeline={} groups={} kernels-planned={} ({} instrs)",
@@ -145,6 +148,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         disc::util::fmt_bytes(m.d2h_bytes as usize),
         disc::util::fmt_bytes(m.device_resident_bytes as usize)
     );
+    if m.planned_peak_bytes > 0 {
+        println!(
+            "memory plan: planned-peak={} reuse-saved={}",
+            disc::util::fmt_bytes(m.planned_peak_bytes as usize),
+            disc::util::fmt_bytes(m.mem_plan_reuse_bytes as usize)
+        );
+    }
     println!(
         "weight cache: hits={} misses={} resident={}",
         m.weight_cache_hits,

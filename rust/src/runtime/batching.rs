@@ -692,7 +692,6 @@ impl Executor {
         match self.batch_plans.get(&key).cloned() {
             Some(plan) => {
                 if plan.param_guards_hold(requests) {
-                    let resident_before = self.pool.device.resident_bytes;
                     match self.replay_batch(prog, requests, analysis, &shape, &plan) {
                         Ok(Some(out)) => {
                             self.batch_plan_stats.hits += 1;
@@ -703,9 +702,8 @@ impl Executor {
                             // Device/transfer fault mid-replay: demote the
                             // group to the batched interpret tier. The plan
                             // stays installed (the fault is transient); the
-                            // replay's device buffers unwound with it, so
-                            // restore the arena accounting.
-                            self.pool.device.resident_bytes = resident_before;
+                            // replay's device leases unwound with it, so the
+                            // arena accounting is already clean.
                             let mut out =
                                 self.run_stacked(prog, requests, analysis, shape, None)?;
                             out.metrics.demotions += 1;
@@ -727,18 +725,46 @@ impl Executor {
                 let mut out =
                     self.run_stacked(prog, requests, analysis, shape, Some(&mut rec))?;
                 out.metrics.batch_plan_misses += 1;
+                let observed = rec.observed().clone();
                 let plan = rec.finish(&prog.module);
-                self.install_batch_plan(key, plan);
+                let mut bindings: HashMap<SymId, i64> = shape.residual.iter().copied().collect();
+                if let Some(b) = analysis.batch_sym {
+                    bindings.insert(b, *shape.offsets.last().unwrap_or(&0) as i64);
+                }
+                self.install_batch_plan(key, plan, prog, &bindings, &observed);
                 Ok(out)
             }
         }
     }
 
-    /// Install a freshly recorded batch plan: reserve its device-residency
-    /// peak, evict FIFO past `max_plans` (releasing exactly the evicted
-    /// plan's weight pins), pin the new plan's weights.
-    fn install_batch_plan(&mut self, key: BatchPlanKey, plan: BatchPlan) {
-        self.pool.device.reserve(plan.device_peak_bytes);
+    /// Install a freshly recorded batch plan: instantiate the program's
+    /// symbolic memory plan for this group shape (planned replays then
+    /// acquire one extent instead of per-buffer slots), hold a `Reserve`
+    /// lease for the planned (or observed) peak, evict FIFO past
+    /// `max_plans` (releasing exactly the evicted plan's weight pins), pin
+    /// the new plan's weights.
+    fn install_batch_plan(
+        &mut self,
+        key: BatchPlanKey,
+        mut plan: BatchPlan,
+        prog: &Program,
+        bindings: &HashMap<SymId, i64>,
+        observed: &HashMap<ValueId, u64>,
+    ) {
+        if self.opts.device_resident && self.opts.runtime.memory_plan && !observed.is_empty() {
+            let mp = self.mem_plan_for(prog);
+            plan.memory = mp.instantiate(bindings, self.opts.policy, observed);
+        }
+        let reserve_bytes = plan
+            .memory
+            .as_ref()
+            .map(|pm| pm.planned_peak_bytes)
+            .unwrap_or(plan.device_peak_bytes);
+        plan.reserve = self
+            .pool
+            .device
+            .acquire(crate::runtime::buffers::ResidencyClass::Reserve, reserve_bytes, None)
+            .ok();
         while self.batch_plans.len() >= self.max_plans.max(1) {
             match self.batch_plan_order.pop_front() {
                 Some(old) => {
@@ -923,7 +949,7 @@ impl Executor {
         // Constant weights ride the persistent device-side cache — the
         // same entries solo runs populate. Parameter weights can be
         // stacked per batch, so they take the plain host path.
-        let weight = if self.opts.device_resident && self.opts.weight_cache {
+        let weight = if self.opts.device_resident && self.opts.runtime.weight_cache {
             weight_ref_of(m, ins.operands[1]).filter(|w| !w.validate && bt.dtype == DType::F32)
         } else {
             None
@@ -1571,7 +1597,16 @@ impl Executor {
                 _ => {}
             }
         }
-        let mut resident_peak: u64 = 0;
+        // Planned replay: one extent lease fronts the whole walk (the only
+        // armed OOM seam); the per-buffer acquires below are skipped.
+        let _extent: Option<crate::runtime::buffers::ArenaLease> = match &plan.memory {
+            Some(pm) => Some(self.pool.device.acquire(
+                crate::runtime::buffers::ResidencyClass::Batch,
+                pm.planned_peak_bytes,
+                self.device.faults().map(|f| f.as_ref()),
+            )?),
+            None => None,
+        };
         let walked = self.replay_walk(
             prog,
             analysis,
@@ -1582,16 +1617,13 @@ impl Executor {
             &mut jdev,
             &mut per,
             &mut metrics,
-            &mut resident_peak,
         );
-        // Release every surviving joint device slot no matter how the walk
-        // ended — the arena gauge must not leak on error or guard-abort
-        // paths (Dealloc steps released their slots already; those are
-        // gone from `jdev`).
+        // Drop every surviving joint device slot no matter how the walk
+        // ended — each slot's lease unwinds its arena accounting, so error
+        // and guard-abort paths cannot leak (Dealloc steps dropped their
+        // slots already; those are gone from `jdev`).
         for d in jdev.iter_mut() {
-            if let Some(s) = d.take() {
-                self.pool.device.release(s.dt.byte_size() as u64);
-            }
+            *d = None;
         }
         let outputs = match walked? {
             Some(o) => o,
@@ -1599,7 +1631,14 @@ impl Executor {
         };
 
         self.fold_stats(&mut metrics, &before);
-        metrics.batch_dev_resident_bytes = resident_peak;
+        metrics.batch_dev_resident_bytes = self
+            .pool
+            .device
+            .footprint_high_water(crate::runtime::buffers::ResidencyClass::Batch);
+        if let Some(pm) = &plan.memory {
+            metrics.planned_peak_bytes = pm.planned_peak_bytes;
+            metrics.mem_plan_reuse_bytes += pm.reuse_bytes;
+        }
         metrics.batched_requests += k as u64;
         metrics.batched_launches += 1;
         metrics.batch_plan_hits += 1;
@@ -1623,12 +1662,11 @@ impl Executor {
         jdev: &mut Vec<Option<DevSlot>>,
         per: &mut Vec<Option<Vec<Rc<Tensor>>>>,
         metrics: &mut RunMetrics,
-        resident_peak: &mut u64,
     ) -> Result<Option<Vec<Vec<Tensor>>>> {
         let m = &prog.module;
         let k = shape.extents.len();
         let offsets = shape.offsets.as_slice();
-        let mut resident: u64 = 0;
+        let planned = plan.memory.is_some();
 
         for bstep in &plan.steps {
             match bstep {
@@ -1783,13 +1821,17 @@ impl Executor {
                             metrics.lib_time += self.library.stats.exec_time - exec0;
                             metrics.compile_time += self.library.stats.build_time - build0;
                             metrics.lib_calls += 1;
-                            let bytes = dt.byte_size() as u64;
-                            resident += bytes;
-                            *resident_peak = (*resident_peak).max(resident);
-                            self.pool
-                                .device
-                                .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
-                            jdev[*value] = Some(DevSlot { dt, actual, zero_padded: true });
+                            let lease = if planned {
+                                None
+                            } else {
+                                Some(self.pool.device.acquire(
+                                    crate::runtime::buffers::ResidencyClass::Batch,
+                                    dt.byte_size() as u64,
+                                    self.device.faults().map(|f| f.as_ref()),
+                                )?)
+                            };
+                            jdev[*value] =
+                                Some(DevSlot { dt, actual, zero_padded: true, lease });
                         } else {
                             let a = replay_joint_value(
                                 &device,
@@ -1916,15 +1958,20 @@ impl Executor {
                                 metrics.batch_padding_bytes +=
                                     (out.byte_size() - actual_bytes) as u64;
                             }
-                            resident += bytes;
-                            *resident_peak = (*resident_peak).max(resident);
-                            self.pool
-                                .device
-                                .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
+                            let lease = if planned {
+                                None
+                            } else {
+                                Some(self.pool.device.acquire(
+                                    crate::runtime::buffers::ResidencyClass::Batch,
+                                    bytes,
+                                    self.device.faults().map(|f| f.as_ref()),
+                                )?)
+                            };
                             jdev[fl.root] = Some(DevSlot {
                                 dt: out,
                                 actual: out_actual.clone(),
                                 zero_padded: false,
+                                lease,
                             });
                         } else {
                             let mut ins_rc: Vec<Rc<Tensor>> =
@@ -1952,11 +1999,7 @@ impl Executor {
                         }
                     }
                     PlannedStep::Dealloc { value } => {
-                        if let Some(d) = jdev[*value].take() {
-                            let bytes = d.dt.byte_size() as u64;
-                            resident = resident.saturating_sub(bytes);
-                            self.pool.device.release(bytes);
-                        }
+                        jdev[*value] = None;
                         joint[*value] = None;
                         per[*value] = None;
                     }
@@ -2466,6 +2509,8 @@ mod tests {
             param_guards: HashMap::new(),
             host_guards: plan.host_guards.clone(),
             device_peak_bytes: plan.device_peak_bytes,
+            memory: plan.memory.clone(),
+            reserve: None,
         };
         poisoned.param_guards.insert(0, vec![ElemGuard { index: 0, expect: -1 }]);
         exec.batch_plans.insert(key, Arc::new(poisoned));
@@ -2547,7 +2592,7 @@ mod tests {
         assert_eq!(out.metrics.demotions, 1);
         assert_eq!(out.metrics.batch_plan_hits, 0);
         assert_eq!(out.metrics.batched_launches, 1, "demotion still stacks, interpreted");
-        assert_eq!(exec.pool.device.resident_bytes, 0, "failed replay must unwind the arena");
+        assert_eq!(exec.pool.device.resident_bytes(), 0, "failed replay must unwind the arena");
         for (r, o) in reqs2.iter().zip(&out.outputs) {
             assert_eq!(&plain.run(&prog, r).unwrap().outputs, o);
         }

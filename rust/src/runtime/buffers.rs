@@ -5,14 +5,20 @@
 //! 1. **Compile-time liveness**: the program generator places `Dealloc`
 //!    steps immediately after a value's last use (free-as-soon-as-dead) and
 //!    computes reuse classes from the tensor-size-equality constraint
-//!    (buffers provably the same size can share an arena slot).
+//!    (buffers provably the same size can share an arena slot — see
+//!    `runtime/memplan.rs` for the symbolic planner built on top).
 //! 2. **Runtime cached allocator**: freed blocks go to size-bucketed free
 //!    lists (the paper lowers `alloc`/`dealloc` to TF/PyTorch's cached
 //!    allocator; ours is built from scratch). Allocation requests are
 //!    served from the pool when possible, avoiding the underlying
 //!    allocator on the hot path.
+//!
+//! Device-side accounting lives in [`DeviceArena`]: one fault-armed
+//! `acquire(class, bytes)` entry point returning an RAII [`ArenaLease`],
+//! shared by solo replay, batch replay, KV slabs, and plan reservations.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Size-bucketed pool of f32 blocks (the dominant tensor dtype on the
 /// device path; other dtypes fall through to the system allocator and are
@@ -27,98 +33,284 @@ pub struct BufferPool {
     pub device: DeviceArena,
 }
 
+/// Lifetime class of a device allocation. Every class shares the single
+/// fault-armed [`DeviceArena::acquire`] path but is accounted separately,
+/// because the classes have different lifetimes and different consumers:
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResidencyClass {
+    /// Solo-replay intermediates (die at a `Dealloc` within one launch
+    /// plan's walk, or at the planned extent's release).
+    Plan,
+    /// Batch-replay intermediates (same lifetime shape, group granularity).
+    Batch,
+    /// KV-cache slabs: live across every launch of a decode request, die
+    /// at request exit or bucket rollover. Never parked — rollover sizes
+    /// differ by construction.
+    Kv,
+    /// Plan-install reservations: capacity promised to an installed
+    /// launch/batch plan, held for the plan's whole cache lifetime and
+    /// released when the plan drops (FIFO eviction shrinks the
+    /// reservation — the lease makes that automatic).
+    Reserve,
+}
+
+/// Per-class accounting inside the arena.
+///
+/// `resident`/`high_water` track *live* bytes. The parked free list models
+/// what a real cached allocator holds on to: a released block stays part
+/// of the process's device footprint until an acquire of the *same size*
+/// reuses it (or `trim` drops it). `footprint_high_water` is therefore the
+/// honest peak-memory figure: max over time of live + parked bytes.
+#[derive(Debug, Default)]
+struct ClassState {
+    resident: u64,
+    high_water: u64,
+    /// Exact-byte-size free list: size -> parked block count.
+    parked: BTreeMap<u64, usize>,
+    parked_bytes: u64,
+    footprint_high_water: u64,
+    /// Outstanding leases (leak check: must reconcile to zero at quiesce).
+    leases: usize,
+}
+
+impl ClassState {
+    fn footprint(&self) -> u64 {
+        self.resident + self.parked_bytes
+    }
+
+    fn acquire(&mut self, bytes: u64, park: bool) {
+        if park {
+            // Consume an exact-size parked block if one exists: the bytes
+            // move from parked back to live, footprint unchanged.
+            if let Some(n) = self.parked.get_mut(&bytes) {
+                *n -= 1;
+                if *n == 0 {
+                    self.parked.remove(&bytes);
+                }
+                self.parked_bytes -= bytes;
+            }
+        }
+        self.resident += bytes;
+        self.high_water = self.high_water.max(self.resident);
+        self.footprint_high_water = self.footprint_high_water.max(self.footprint());
+        self.leases += 1;
+    }
+
+    fn release(&mut self, bytes: u64, park: bool) {
+        self.resident = self.resident.saturating_sub(bytes);
+        if park {
+            *self.parked.entry(bytes).or_insert(0) += 1;
+            self.parked_bytes += bytes;
+            self.footprint_high_water = self.footprint_high_water.max(self.footprint());
+        }
+        self.leases = self.leases.saturating_sub(1);
+    }
+
+    fn trim(&mut self) {
+        self.parked.clear();
+        self.parked_bytes = 0;
+    }
+}
+
+#[derive(Debug, Default)]
+struct ArenaInner {
+    plan: ClassState,
+    batch: ClassState,
+    kv: ClassState,
+    /// Outstanding plan reservations as a size multiset: the arena's
+    /// reserved capacity is the *max* outstanding reservation, and a
+    /// reservation disappears when its lease drops — so FIFO plan
+    /// eviction shrinks the figure instead of ratcheting it up forever.
+    reserve: BTreeMap<u64, usize>,
+    reserve_leases: usize,
+}
+
+impl ArenaInner {
+    fn class(&mut self, c: ResidencyClass) -> &mut ClassState {
+        match c {
+            ResidencyClass::Plan => &mut self.plan,
+            ResidencyClass::Batch => &mut self.batch,
+            ResidencyClass::Kv => &mut self.kv,
+            ResidencyClass::Reserve => unreachable!("Reserve uses the size multiset"),
+        }
+    }
+}
+
 /// Accounting for device-resident buffers held between kernel launches.
 ///
-/// Capacity is *reserved* up front from each installed launch plan's
-/// liveness (the peak over its `Dealloc`-delimited live set — computed at
-/// plan-record time from the compile-time dealloc placement), so a serving
-/// process knows its device footprint before the stream arrives; the
-/// resident counters then track what the replayed flows actually hold.
+/// One entry point: [`acquire`] takes a [`ResidencyClass`] and a byte
+/// count, runs the `FaultSite::DeviceOom` seam *before* accounting (a
+/// failed acquire leaves the arena untouched), and returns an RAII
+/// [`ArenaLease`] that releases its bytes on drop — no caller ever
+/// balances a manual release, so demotion/unwind paths cannot leak.
 ///
-/// The arena covers *intermediates* (values that die at a `Dealloc`).
-/// Persistently resident GEMM weights are a different lifetime class —
-/// they outlive every plan that pins them — and are accounted separately
-/// by the library (`GemmLibrary::weight_resident_bytes`, surfaced as
-/// `RunMetrics::weight_resident_bytes`); a deployment sizes device memory
-/// as arena reservation + weight residency.
+/// `Plan`/`Batch` releases *park* their block on an exact-size free list
+/// (modeling a cached device allocator: the footprint stays until an
+/// equal-size acquire reuses it), so `footprint_high_water` reports what a
+/// real allocator would peak at — the figure the symbolic memory planner
+/// is gated on shrinking. `Kv` releases return bytes outright (slab sizes
+/// differ across rollovers; parking them would never hit). `Reserve`
+/// leases track installed-plan capacity promises as a max-of-multiset.
+///
+/// Persistently resident GEMM weights remain a separate lifetime class
+/// accounted by the library (`GemmLibrary::weight_resident_bytes`); a
+/// deployment sizes device memory as arena reservation + weight residency.
+///
+/// [`acquire`]: DeviceArena::acquire
 #[derive(Debug, Default)]
 pub struct DeviceArena {
-    /// Capacity reserved from installed plans (max over plans).
-    pub reserved_bytes: u64,
-    /// Currently live device-resident bytes.
-    pub resident_bytes: u64,
-    /// Peak residency observed.
-    pub high_water_bytes: u64,
-    /// Currently live KV-cache slab bytes (decode requests). A third
-    /// lifetime class next to intermediates and weights: slabs outlive
-    /// every launch of their request but die when the request exits.
-    pub kv_resident_bytes: u64,
-    /// Peak KV slab residency observed.
-    pub kv_high_water_bytes: u64,
+    inner: Arc<Mutex<ArenaInner>>,
+}
+
+/// RAII guard for one arena allocation: releases its bytes back to the
+/// arena (parking them for `Plan`/`Batch`) when dropped. Cloned-arena
+/// ownership keeps the lease valid wherever it travels (plans in the
+/// executor cache, coordinator decode members, replay device slots).
+#[derive(Debug)]
+pub struct ArenaLease {
+    inner: Arc<Mutex<ArenaInner>>,
+    class: ResidencyClass,
+    bytes: u64,
+}
+
+impl ArenaLease {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn class(&self) -> ResidencyClass {
+        self.class
+    }
+}
+
+impl Drop for ArenaLease {
+    fn drop(&mut self) {
+        let mut g = lock(&self.inner);
+        match self.class {
+            ResidencyClass::Plan | ResidencyClass::Batch => {
+                g.class(self.class).release(self.bytes, true)
+            }
+            ResidencyClass::Kv => g.kv.release(self.bytes, false),
+            ResidencyClass::Reserve => {
+                if let Some(n) = g.reserve.get_mut(&self.bytes) {
+                    *n -= 1;
+                    if *n == 0 {
+                        g.reserve.remove(&self.bytes);
+                    }
+                }
+                g.reserve_leases = g.reserve_leases.saturating_sub(1);
+            }
+        }
+    }
+}
+
+/// Leases drop during panic unwinds (worker supervision); recover the
+/// guard rather than wedging every sibling holding a lease on the same
+/// arena.
+fn lock(inner: &Mutex<ArenaInner>) -> MutexGuard<'_, ArenaInner> {
+    inner.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 impl DeviceArena {
-    /// Reserve capacity for a newly installed plan.
-    pub fn reserve(&mut self, plan_peak_bytes: u64) {
-        self.reserved_bytes = self.reserved_bytes.max(plan_peak_bytes);
-    }
-
-    /// A device buffer of `bytes` became live.
-    pub fn acquire(&mut self, bytes: u64) {
-        self.resident_bytes += bytes;
-        self.high_water_bytes = self.high_water_bytes.max(self.resident_bytes);
-    }
-
-    /// Fallible acquire: the seam where device allocation can fail. With a
-    /// fault plan armed this simulates an OOM (`FaultSite::DeviceOom`)
-    /// *before* accounting the bytes, so a failed acquire leaves the arena
-    /// untouched and the replay tiers demote down the execution ladder
-    /// instead of holding phantom residency.
-    pub fn acquire_checked(
-        &mut self,
-        bytes: u64,
-        faults: Option<&crate::runtime::faults::FaultPlan>,
-    ) -> anyhow::Result<()> {
-        crate::runtime::faults::check(
-            faults,
-            crate::runtime::faults::FaultSite::DeviceOom,
-            "device arena acquire",
-        )?;
-        self.acquire(bytes);
-        Ok(())
-    }
-
-    /// A device buffer of `bytes` was released.
-    pub fn release(&mut self, bytes: u64) {
-        self.resident_bytes = self.resident_bytes.saturating_sub(bytes);
-    }
-
-    /// Fallible KV-slab acquire: same OOM seam as [`acquire_checked`]
-    /// (`FaultSite::DeviceOom` fires *before* accounting), but the bytes
-    /// land in the KV residency class — slabs live across launches for a
-    /// whole decode request, so mixing them into `resident_bytes` would
-    /// poison the per-plan intermediate accounting that replay snapshots
-    /// and restores on demotion.
+    /// Acquire `bytes` in residency class `class`.
     ///
-    /// [`acquire_checked`]: DeviceArena::acquire_checked
-    pub fn kv_acquire_checked(
-        &mut self,
+    /// The `FaultSite::DeviceOom` seam fires *before* accounting for the
+    /// `Plan`/`Batch`/`Kv` classes, so a failed acquire holds no phantom
+    /// residency and the caller demotes down the execution ladder.
+    /// `Reserve` is deliberately un-armed: reservations are taken on the
+    /// record path, which must stay fault-silent so chaos schedules hit
+    /// replays deterministically — callers pass `None`.
+    pub fn acquire(
+        &self,
+        class: ResidencyClass,
         bytes: u64,
         faults: Option<&crate::runtime::faults::FaultPlan>,
-    ) -> anyhow::Result<()> {
-        crate::runtime::faults::check(
-            faults,
-            crate::runtime::faults::FaultSite::DeviceOom,
-            "kv slab acquire",
-        )?;
-        self.kv_resident_bytes += bytes;
-        self.kv_high_water_bytes = self.kv_high_water_bytes.max(self.kv_resident_bytes);
-        Ok(())
+    ) -> anyhow::Result<ArenaLease> {
+        let context = match class {
+            ResidencyClass::Plan | ResidencyClass::Batch => "device arena acquire",
+            ResidencyClass::Kv => "kv slab acquire",
+            ResidencyClass::Reserve => "plan reservation",
+        };
+        if !matches!(class, ResidencyClass::Reserve) {
+            crate::runtime::faults::check(
+                faults,
+                crate::runtime::faults::FaultSite::DeviceOom,
+                context,
+            )?;
+        }
+        let mut g = lock(&self.inner);
+        match class {
+            ResidencyClass::Plan | ResidencyClass::Batch => g.class(class).acquire(bytes, true),
+            ResidencyClass::Kv => g.kv.acquire(bytes, false),
+            ResidencyClass::Reserve => {
+                *g.reserve.entry(bytes).or_insert(0) += 1;
+                g.reserve_leases += 1;
+            }
+        }
+        drop(g);
+        Ok(ArenaLease {
+            inner: Arc::clone(&self.inner),
+            class,
+            bytes,
+        })
     }
 
-    /// A KV slab of `bytes` was released (request exit or bucket rollover).
-    pub fn kv_release(&mut self, bytes: u64) {
-        self.kv_resident_bytes = self.kv_resident_bytes.saturating_sub(bytes);
+    /// Drop the parked free-list blocks of one class (footprint shrinks to
+    /// live bytes; the high-water mark is monotone and keeps its peak).
+    pub fn trim(&self, class: ResidencyClass) {
+        let mut g = lock(&self.inner);
+        match class {
+            ResidencyClass::Reserve => {}
+            _ => g.class(class).trim(),
+        }
+    }
+
+    /// Live `Plan` + `Batch` intermediate bytes.
+    pub fn resident_bytes(&self) -> u64 {
+        let mut g = lock(&self.inner);
+        g.plan.resident + g.batch.resident
+    }
+
+    /// Peak live intermediate bytes (`Plan` + `Batch` high waters summed).
+    pub fn high_water_bytes(&self) -> u64 {
+        let mut g = lock(&self.inner);
+        g.plan.high_water + g.batch.high_water
+    }
+
+    /// Peak footprint (live + parked) of one class — what a cached device
+    /// allocator would have held at its worst moment.
+    pub fn footprint_high_water(&self, class: ResidencyClass) -> u64 {
+        let mut g = lock(&self.inner);
+        match class {
+            ResidencyClass::Reserve => 0,
+            _ => g.class(class).footprint_high_water,
+        }
+    }
+
+    /// Currently live KV slab bytes.
+    pub fn kv_resident_bytes(&self) -> u64 {
+        lock(&self.inner).kv.resident
+    }
+
+    /// Peak KV slab residency observed.
+    pub fn kv_high_water_bytes(&self) -> u64 {
+        lock(&self.inner).kv.high_water
+    }
+
+    /// Reserved capacity: the *max* outstanding plan reservation (zero
+    /// once every holding plan has dropped).
+    pub fn reserved_bytes(&self) -> u64 {
+        lock(&self.inner).reserve.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Outstanding lease count for `class` — the leak check every serving
+    /// harness reconciles to zero at quiesce.
+    pub fn outstanding(&self, class: ResidencyClass) -> usize {
+        let mut g = lock(&self.inner);
+        match class {
+            ResidencyClass::Reserve => g.reserve_leases,
+            _ => g.class(class).leases,
+        }
     }
 }
 
@@ -254,40 +446,104 @@ mod tests {
     fn checked_acquire_injects_oom_without_phantom_residency() {
         use crate::runtime::faults::{FaultPlan, FaultSite};
         let plan = FaultPlan::parse("seed=1,oom=1000:1").unwrap();
-        let mut a = DeviceArena::default();
-        let e = a.acquire_checked(128, Some(&plan)).unwrap_err();
+        let a = DeviceArena::default();
+        let e = a
+            .acquire(ResidencyClass::Plan, 128, Some(&plan))
+            .unwrap_err();
         assert!(format!("{e:#}").contains("injected oom fault"), "{e:#}");
-        assert_eq!(a.resident_bytes, 0, "failed acquire must not account bytes");
-        a.acquire_checked(128, Some(&plan)).unwrap();
-        assert_eq!(a.resident_bytes, 128);
+        assert_eq!(a.resident_bytes(), 0, "failed acquire must not account bytes");
+        assert_eq!(a.outstanding(ResidencyClass::Plan), 0);
+        let lease = a.acquire(ResidencyClass::Plan, 128, Some(&plan)).unwrap();
+        assert_eq!(a.resident_bytes(), 128);
+        assert_eq!(lease.bytes(), 128);
         assert_eq!(plan.fired(FaultSite::DeviceOom), 1);
-        let mut b = DeviceArena::default();
-        b.acquire_checked(64, None).unwrap();
-        assert_eq!(b.resident_bytes, 64);
+        let b = DeviceArena::default();
+        let _l = b.acquire(ResidencyClass::Plan, 64, None).unwrap();
+        assert_eq!(b.resident_bytes(), 64);
     }
 
     #[test]
     fn kv_slabs_account_separately_and_inject_oom() {
         use crate::runtime::faults::{FaultPlan, FaultSite};
-        let mut a = DeviceArena::default();
-        a.acquire(100);
-        a.kv_acquire_checked(4096, None).unwrap();
-        assert_eq!(a.resident_bytes, 100, "slabs must not count as intermediates");
-        assert_eq!(a.kv_resident_bytes, 4096);
-        assert_eq!(a.kv_high_water_bytes, 4096);
-        // Rollover: release the old slab, acquire the doubled one.
-        a.kv_release(4096);
-        a.kv_acquire_checked(8192, None).unwrap();
-        assert_eq!(a.kv_resident_bytes, 8192);
-        assert_eq!(a.kv_high_water_bytes, 8192);
-        a.kv_release(8192);
-        assert_eq!(a.kv_resident_bytes, 0, "request exit must release its slab");
-        // The OOM seam fires before accounting, like acquire_checked.
+        let a = DeviceArena::default();
+        let _inter = a.acquire(ResidencyClass::Plan, 100, None).unwrap();
+        let slab = a.acquire(ResidencyClass::Kv, 4096, None).unwrap();
+        assert_eq!(a.resident_bytes(), 100, "slabs must not count as intermediates");
+        assert_eq!(a.kv_resident_bytes(), 4096);
+        assert_eq!(a.kv_high_water_bytes(), 4096);
+        // Rollover: drop the old slab's lease, acquire the doubled one.
+        drop(slab);
+        let slab = a.acquire(ResidencyClass::Kv, 8192, None).unwrap();
+        assert_eq!(a.kv_resident_bytes(), 8192);
+        assert_eq!(a.kv_high_water_bytes(), 8192);
+        drop(slab);
+        assert_eq!(a.kv_resident_bytes(), 0, "request exit must release its slab");
+        assert_eq!(a.outstanding(ResidencyClass::Kv), 0);
+        // The OOM seam fires before accounting, like the Plan class.
         let plan = FaultPlan::parse("seed=1,oom=1000:1").unwrap();
-        let e = a.kv_acquire_checked(64, Some(&plan)).unwrap_err();
+        let e = a.acquire(ResidencyClass::Kv, 64, Some(&plan)).unwrap_err();
         assert!(format!("{e:#}").contains("injected oom fault"), "{e:#}");
-        assert_eq!(a.kv_resident_bytes, 0, "failed slab acquire must not account bytes");
+        assert_eq!(a.kv_resident_bytes(), 0, "failed slab acquire must not account bytes");
         assert_eq!(plan.fired(FaultSite::DeviceOom), 1);
+    }
+
+    #[test]
+    fn released_blocks_park_and_exact_size_reuse_keeps_footprint_flat() {
+        let a = DeviceArena::default();
+        let l = a.acquire(ResidencyClass::Plan, 1000, None).unwrap();
+        drop(l); // parks: footprint stays at 1000
+        assert_eq!(a.resident_bytes(), 0);
+        assert_eq!(a.footprint_high_water(ResidencyClass::Plan), 1000);
+        // Exact-size reacquire consumes the parked block: no footprint growth.
+        let l = a.acquire(ResidencyClass::Plan, 1000, None).unwrap();
+        assert_eq!(a.footprint_high_water(ResidencyClass::Plan), 1000);
+        drop(l);
+        // A different size cannot reuse the parked block: footprint grows.
+        let l = a.acquire(ResidencyClass::Plan, 600, None).unwrap();
+        assert_eq!(a.footprint_high_water(ResidencyClass::Plan), 1600);
+        drop(l);
+        a.trim(ResidencyClass::Plan);
+        let l = a.acquire(ResidencyClass::Plan, 600, None).unwrap();
+        assert_eq!(
+            a.footprint_high_water(ResidencyClass::Plan),
+            1600,
+            "high water is monotone across a trim"
+        );
+        assert_eq!(a.resident_bytes(), 600);
+        drop(l);
+    }
+
+    #[test]
+    fn reservation_shrinks_when_its_plan_drops() {
+        // Regression: the old `reserve()` only ever maxed `reserved_bytes`,
+        // so FIFO plan eviction never returned capacity. Reservations are
+        // leases now: eviction drops the lease and the figure shrinks to
+        // the largest reservation still outstanding.
+        let a = DeviceArena::default();
+        let big = a.acquire(ResidencyClass::Reserve, 4096, None).unwrap();
+        let small = a.acquire(ResidencyClass::Reserve, 1024, None).unwrap();
+        assert_eq!(a.reserved_bytes(), 4096);
+        assert_eq!(a.outstanding(ResidencyClass::Reserve), 2);
+        drop(big); // FIFO evicts the big plan
+        assert_eq!(a.reserved_bytes(), 1024, "eviction must shrink the reservation");
+        drop(small);
+        assert_eq!(a.reserved_bytes(), 0);
+        assert_eq!(a.outstanding(ResidencyClass::Reserve), 0);
+    }
+
+    #[test]
+    fn batch_class_accounts_separately_from_plan() {
+        let a = DeviceArena::default();
+        let p = a.acquire(ResidencyClass::Plan, 300, None).unwrap();
+        let b = a.acquire(ResidencyClass::Batch, 500, None).unwrap();
+        assert_eq!(a.resident_bytes(), 800);
+        assert_eq!(a.footprint_high_water(ResidencyClass::Plan), 300);
+        assert_eq!(a.footprint_high_water(ResidencyClass::Batch), 500);
+        drop(p);
+        drop(b);
+        assert_eq!(a.resident_bytes(), 0);
+        assert_eq!(a.outstanding(ResidencyClass::Plan), 0);
+        assert_eq!(a.outstanding(ResidencyClass::Batch), 0);
     }
 
     #[test]

@@ -48,6 +48,55 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Runtime behavior toggles shared by `ExecOptions` and
+/// `CompileOptions`: one definition, embedded by both, so a flag added
+/// here reaches the CLI, the compiler driver, and every forked worker
+/// without being duplicated field-by-field.
+#[derive(Debug, Clone)]
+pub struct RuntimeOptions {
+    /// Serve static GEMM RHS operands (graph constants, entry parameters)
+    /// from the library's persistent device-side weight cache: each weight
+    /// uploads once per program and is reused across calls and plan
+    /// replays. Requires `device_resident`.
+    pub weight_cache: bool,
+    /// Speculative neighbor-bucket warming: when a request *records* a new
+    /// plan, enqueue background compiles for the next bucket of every
+    /// dynamic symbol it touched (the bucket a growing sequence length
+    /// lands in next), so that traffic arriving there finds the kernel
+    /// resident and stalls zero. Off by default: it trades background
+    /// compile work for tail latency, which is a serving-process decision
+    /// (`disc run --warm` turns it on).
+    pub speculative_warm: bool,
+    /// Symbolic memory planning (`runtime/memplan.rs`): plan installs
+    /// carry an instantiated `MemoryPlan` and replays acquire one planned
+    /// extent instead of a block per intermediate. On by default;
+    /// `disc run --no-memplan` (and the ablation row) turn it off.
+    pub memory_plan: bool,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        RuntimeOptions { weight_cache: true, speculative_warm: false, memory_plan: true }
+    }
+}
+
+impl RuntimeOptions {
+    pub fn with_weight_cache(mut self, on: bool) -> Self {
+        self.weight_cache = on;
+        self
+    }
+
+    pub fn with_speculative_warm(mut self, on: bool) -> Self {
+        self.speculative_warm = on;
+        self
+    }
+
+    pub fn with_memory_plan(mut self, on: bool) -> Self {
+        self.memory_plan = on;
+        self
+    }
+}
+
 /// Executor options.
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
@@ -60,19 +109,9 @@ pub struct ExecOptions {
     /// During replays, keep fused-kernel and GEMM results device-resident
     /// between launches instead of round-tripping through host tensors.
     pub device_resident: bool,
-    /// Serve static GEMM RHS operands (graph constants, entry parameters)
-    /// from the library's persistent device-side weight cache: each weight
-    /// uploads once per program and is reused across calls and plan
-    /// replays. Requires `device_resident`.
-    pub weight_cache: bool,
-    /// Speculative neighbor-bucket warming: when a request *records* a new
-    /// plan, enqueue background compiles for the next bucket of every
-    /// dynamic symbol it touched (the bucket a growing sequence length
-    /// lands in next), so that traffic arriving there finds the kernel
-    /// resident and stalls zero. Off by default: it trades background
-    /// compile work for tail latency, which is a serving-process decision
-    /// (`CompileOptions::speculative_warm` / `disc run --warm` turn it on).
-    pub speculative_warm: bool,
+    /// Shared runtime toggles (weight cache, speculative warming, memory
+    /// planning) — the same struct `CompileOptions` embeds.
+    pub runtime: RuntimeOptions,
 }
 
 impl Default for ExecOptions {
@@ -82,8 +121,7 @@ impl Default for ExecOptions {
             pooled_buffers: true,
             plan_cache: true,
             device_resident: true,
-            weight_cache: true,
-            speculative_warm: false,
+            runtime: RuntimeOptions::default(),
         }
     }
 }
@@ -99,6 +137,9 @@ pub(crate) struct DevSlot {
     pub(crate) dt: DeviceTensor,
     pub(crate) actual: Vec<usize>,
     pub(crate) zero_padded: bool,
+    /// Per-buffer arena lease (planner-off replay). `None` when the replay
+    /// holds one planned extent for every slot instead.
+    pub(crate) lease: Option<crate::runtime::buffers::ArenaLease>,
 }
 
 /// Is this value a cacheable GEMM weight? Graph constants never change for
@@ -149,6 +190,10 @@ pub struct Executor {
     pub(crate) batch_plan_order: std::collections::VecDeque<BatchPlanKey>,
     pub(crate) batch_plan_pins: HashMap<BatchPlanKey, Vec<WeightKey>>,
     pub batch_plan_stats: PlanStats,
+    /// Compile-time symbolic memory plans, per program id: built once
+    /// (seeded by `DiscCompiler`, shared across forked workers like
+    /// `batch_info`) and instantiated per binding at plan-install time.
+    pub(crate) mem_plans: HashMap<u64, Arc<crate::runtime::memplan::MemoryPlan>>,
 }
 
 pub struct ExecOutput {
@@ -228,6 +273,7 @@ impl Executor {
             batch_plan_order: std::collections::VecDeque::new(),
             batch_plan_pins: HashMap::new(),
             batch_plan_stats: PlanStats::default(),
+            mem_plans: HashMap::new(),
         }
     }
 
@@ -262,6 +308,7 @@ impl Executor {
         );
         e.max_plans = self.max_plans;
         e.batch_info = self.batch_info.clone();
+        e.mem_plans = self.mem_plans.clone();
         e
     }
 
@@ -274,6 +321,31 @@ impl Executor {
         analysis: Arc<crate::runtime::batching::BatchAnalysis>,
     ) {
         self.batch_info.insert(program, analysis);
+    }
+
+    /// Install a compile-time symbolic memory plan for a program (built
+    /// once by `DiscCompiler`, shared across forked workers).
+    pub fn seed_memory_plan(
+        &mut self,
+        program: u64,
+        plan: Arc<crate::runtime::memplan::MemoryPlan>,
+    ) {
+        self.mem_plans.insert(program, plan);
+    }
+
+    /// The program's symbolic memory plan, building it on first use when
+    /// the compiler did not seed one (standalone executors in tests).
+    pub(crate) fn mem_plan_for(
+        &mut self,
+        prog: &Program,
+    ) -> Arc<crate::runtime::memplan::MemoryPlan> {
+        let policy = self.opts.policy;
+        self.mem_plans
+            .entry(prog.id)
+            .or_insert_with(|| {
+                Arc::new(crate::runtime::memplan::MemoryPlan::build(prog, policy))
+            })
+            .clone()
     }
 
     /// Component-stat snapshot taken at the start of a run, so the
@@ -397,9 +469,18 @@ impl Executor {
         let mut kv = KvCache::new(*spec, self.opts.policy);
         let faults = self.device.faults().cloned();
         let mut metrics = RunMetrics { decode_requests: 1, ..Default::default() };
-        let mut slab_resident =
-            self.pool.device.kv_acquire_checked(kv.slab_bytes(), faults.as_deref()).is_ok();
-        if !slab_resident {
+        // The slab is planner-owned as a long-lived KV-class slot: one
+        // lease per bucket, re-planned only at rollover. Drop = release.
+        let mut slab = self
+            .pool
+            .device
+            .acquire(
+                crate::runtime::buffers::ResidencyClass::Kv,
+                kv.slab_bytes(),
+                faults.as_deref(),
+            )
+            .ok();
+        if slab.is_none() {
             metrics.demotions += 1;
         }
 
@@ -410,18 +491,21 @@ impl Executor {
         for step in 0..total {
             if kv.full() {
                 // Bucket rollover: the next step binds a new capacity (one
-                // fresh plan record); re-account the slab at its new size.
-                let old_bytes = kv.slab_bytes();
+                // fresh plan record); re-plan the slab slot at its new size.
                 kv.grow();
                 metrics.kv_rollovers += 1;
-                if slab_resident {
-                    self.pool.device.kv_release(old_bytes);
-                    slab_resident = self
+                if slab.is_some() {
+                    drop(slab.take()); // release the old bucket's lease first
+                    slab = self
                         .pool
                         .device
-                        .kv_acquire_checked(kv.slab_bytes(), faults.as_deref())
-                        .is_ok();
-                    if !slab_resident {
+                        .acquire(
+                            crate::runtime::buffers::ResidencyClass::Kv,
+                            kv.slab_bytes(),
+                            faults.as_deref(),
+                        )
+                        .ok();
+                    if slab.is_none() {
                         metrics.demotions += 1;
                     }
                 }
@@ -454,11 +538,10 @@ impl Executor {
                 break;
             }
         }
-        // The request exits here on every path: give its slab bytes back.
-        if slab_resident {
-            self.pool.device.kv_release(kv.slab_bytes());
-        }
-        metrics.kv_resident_bytes = self.pool.device.kv_high_water_bytes;
+        // The request exits here on every path: the lease gives its slab
+        // bytes back on drop (error paths included).
+        drop(slab);
+        metrics.kv_resident_bytes = self.pool.device.kv_high_water_bytes();
         result?;
         Ok(DecodeOutput { generated, step_probs, steps: total, metrics })
     }
@@ -482,7 +565,6 @@ impl Executor {
             match self.plans.get(&key).cloned() {
                 Some(plan) => {
                     if plan.param_guards_hold(inputs) {
-                        let resident_before = self.pool.device.resident_bytes;
                         match self.replay(prog, inputs, &plan, &mut env, &mut metrics) {
                             Ok(Some(outs)) => {
                                 self.plan_stats.hits += 1;
@@ -495,9 +577,8 @@ impl Executor {
                                 // this request to the interpret tier. The
                                 // plan stays installed (the fault is
                                 // transient, the plan is not stale). The
-                                // replay's device buffers unwound with it,
-                                // so restore the arena accounting.
-                                self.pool.device.resident_bytes = resident_before;
+                                // replay's device leases unwound with it,
+                                // so the arena accounting is already clean.
                                 metrics.demotions += 1;
                                 demoted = true;
                                 env = SymEnv::new();
@@ -529,8 +610,39 @@ impl Executor {
                 let outs = self.interpret(prog, inputs, &mut env, &mut metrics, rec.as_mut())?;
                 if let (Some(key), Some(rec)) = (record_key, rec) {
                     let log = env.elem_log.take().unwrap_or_default();
-                    if let Some(plan) = rec.finish(m, prog, &log) {
-                        self.pool.device.reserve(plan.device_peak_bytes);
+                    let observed = rec.observed().clone();
+                    if let Some(mut plan) = rec.finish(m, prog, &log) {
+                        // Symbolic memory plan: instantiate the program's
+                        // compile-time slot assignment for this binding
+                        // (observed-peak fallback when it declines).
+                        if self.opts.device_resident
+                            && self.opts.runtime.memory_plan
+                            && !observed.is_empty()
+                        {
+                            let mp = self.mem_plan_for(prog);
+                            let bindings: HashMap<crate::shape::SymId, i64> =
+                                key.bindings.iter().copied().collect();
+                            plan.memory =
+                                mp.instantiate(&bindings, self.opts.policy, &observed);
+                        }
+                        // The install's capacity promise is a Reserve-class
+                        // lease: dropped (and therefore shrunk) when FIFO
+                        // eviction drops the plan. Un-armed by design — the
+                        // record path stays fault-silent.
+                        let reserve_bytes = plan
+                            .memory
+                            .as_ref()
+                            .map(|pm| pm.planned_peak_bytes)
+                            .unwrap_or(plan.device_peak_bytes);
+                        plan.reserve = self
+                            .pool
+                            .device
+                            .acquire(
+                                crate::runtime::buffers::ResidencyClass::Reserve,
+                                reserve_bytes,
+                                None,
+                            )
+                            .ok();
                         while self.plans.len() >= self.max_plans.max(1) {
                             match self.plan_order.pop_front() {
                                 Some(old) => {
@@ -693,7 +805,7 @@ impl Executor {
                     // device-side weight cache: upload once per program,
                     // then by reference (transfer deltas fold in at run
                     // level from LibraryStats).
-                    let weight = if self.opts.device_resident && self.opts.weight_cache {
+                    let weight = if self.opts.device_resident && self.opts.runtime.weight_cache {
                         weight_ref_of(m, ins.operands[1]).filter(|_| b.dtype == DType::F32)
                     } else {
                         None
@@ -751,7 +863,7 @@ impl Executor {
                     // sequence lengths find their kernels resident. Replays
                     // never reach this code; warm failures are ignored
                     // (the demand path re-compiles and reports properly).
-                    if self.opts.speculative_warm && rec.is_some() {
+                    if self.opts.runtime.speculative_warm && rec.is_some() {
                         let _ = self.cache.prefetch_neighbor(m, &fl.group, &fl.sig, &actual);
                     }
                     // 3. Marshal inputs: pad to bucket extents when
@@ -939,8 +1051,21 @@ impl Executor {
                 _ => {}
             }
         }
-        let mut resident: u64 = 0;
-        let mut resident_peak: u64 = 0;
+        // Planner-on: acquire the whole planned extent up front (the one
+        // armed OOM seam of this replay); every DevSlot then indexes a
+        // planned slot and carries no lease of its own. Planner-off: each
+        // device output acquires its own Plan-class lease below. Either
+        // way, early returns and faults release by drop — no manual
+        // unwinding.
+        let planned = plan.memory.is_some();
+        let _extent: Option<crate::runtime::buffers::ArenaLease> = match &plan.memory {
+            Some(pm) => Some(self.pool.device.acquire(
+                crate::runtime::buffers::ResidencyClass::Plan,
+                pm.planned_peak_bytes,
+                self.device.faults().map(|f| f.as_ref()),
+            )?),
+            None => None,
+        };
 
         for step in &plan.steps {
             match step {
@@ -955,14 +1080,10 @@ impl Executor {
                     let t = Rc::new(t);
                     if let Some(gs) = plan.host_guards.get(value) {
                         if !host_guards_hold(gs, &t) {
-                            // Stale host-shape assumption: undo the arena
-                            // accounting for the executed prefix; scratch
-                            // metrics are discarded with this return.
-                            for d in dev.iter_mut() {
-                                if let Some(s) = d.take() {
-                                    self.pool.device.release(s.dt.byte_size() as u64);
-                                }
-                            }
+                            // Stale host-shape assumption: the prefix's
+                            // leases (and the planned extent) release by
+                            // drop; scratch metrics are discarded with
+                            // this return.
                             return Ok(None);
                         }
                     }
@@ -1061,13 +1182,16 @@ impl Executor {
                         let (dt, actual) = self.library.matmul_device(src_a, src_b, *key)?;
                         metrics.lib_bytes += a_bytes + b_bytes;
                         metrics.lib_bytes += (actual.iter().product::<usize>() * 4) as u64;
-                        let bytes = dt.byte_size() as u64;
-                        resident += bytes;
-                        resident_peak = resident_peak.max(resident);
-                        self.pool
-                            .device
-                            .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
-                        dev[*value] = Some(DevSlot { dt, actual, zero_padded: true });
+                        let lease = if planned {
+                            None
+                        } else {
+                            Some(self.pool.device.acquire(
+                                crate::runtime::buffers::ResidencyClass::Plan,
+                                dt.byte_size() as u64,
+                                self.device.faults().map(|f| f.as_ref()),
+                            )?)
+                        };
+                        dev[*value] = Some(DevSlot { dt, actual, zero_padded: true, lease });
                     } else {
                         let a = Self::host_value(&device, metrics, &mut host, &dev, a_id)?;
                         let b = Self::host_value(&device, metrics, &mut host, &dev, b_id)?;
@@ -1171,16 +1295,20 @@ impl Executor {
                         metrics.mem_kernels += 1;
                         metrics.mem_bytes += out.byte_size() as u64;
                         drop(args);
-                        let bytes = out.byte_size() as u64;
-                        resident += bytes;
-                        resident_peak = resident_peak.max(resident);
-                        self.pool
-                            .device
-                            .acquire_checked(bytes, self.device.faults().map(|f| f.as_ref()))?;
+                        let lease = if planned {
+                            None
+                        } else {
+                            Some(self.pool.device.acquire(
+                                crate::runtime::buffers::ResidencyClass::Plan,
+                                out.byte_size() as u64,
+                                self.device.faults().map(|f| f.as_ref()),
+                            )?)
+                        };
                         dev[fl.root] = Some(DevSlot {
                             dt: out,
                             actual: out_actual.clone(),
                             zero_padded: false,
+                            lease,
                         });
                     } else {
                         // Host-path replay: recorded marshalling decisions,
@@ -1254,11 +1382,9 @@ impl Executor {
                     }
                 }
                 PlannedStep::Dealloc { value } => {
-                    if let Some(d) = dev[*value].take() {
-                        let bytes = d.dt.byte_size() as u64;
-                        resident = resident.saturating_sub(bytes);
-                        self.pool.device.release(bytes);
-                    }
+                    // Dropping the slot releases its lease (planner-off);
+                    // planned slots just free their entry in the extent.
+                    dev[*value] = None;
                     host[*value] = None;
                 }
             }
@@ -1272,11 +1398,7 @@ impl Executor {
                 }
             }
             for d in dev.iter_mut() {
-                if let Some(s) = d.take() {
-                    let bytes = s.dt.byte_size() as u64;
-                    resident = resident.saturating_sub(bytes);
-                    self.pool.device.release(bytes);
-                }
+                *d = None;
             }
             self.interpret_range(prog, plan.suffix_start, env, &mut host, metrics, None)?;
         }
@@ -1287,12 +1409,18 @@ impl Executor {
                 .with_context(|| format!("output %{o} was deallocated"))?;
             outputs.push((*t).clone());
         }
-        for d in dev.iter_mut() {
-            if let Some(s) = d.take() {
-                self.pool.device.release(s.dt.byte_size() as u64);
-            }
+        drop(dev); // release (park) every remaining per-buffer lease
+        // The honest per-class peak: live + parked bytes of the cached
+        // allocator model (planner-off), or the planned extents
+        // (planner-on, which re-park and reuse exactly at each replay).
+        metrics.device_resident_bytes = self
+            .pool
+            .device
+            .footprint_high_water(crate::runtime::buffers::ResidencyClass::Plan);
+        if let Some(pm) = &plan.memory {
+            metrics.planned_peak_bytes = pm.planned_peak_bytes;
+            metrics.mem_plan_reuse_bytes += pm.reuse_bytes;
         }
-        metrics.device_resident_bytes = resident_peak;
         *out_metrics += &scratch;
         Ok(Some(outputs))
     }
@@ -1927,7 +2055,8 @@ mod tests {
         assert_eq!(faulted.metrics.plan_hits, 0);
         assert_eq!(faulted.outputs, first.outputs, "demoted path stays bit-identical");
         assert_eq!(
-            exec.pool.device.resident_bytes, 0,
+            exec.pool.device.resident_bytes(),
+            0,
             "failed replay must not leak arena accounting"
         );
 
@@ -2000,9 +2129,9 @@ mod tests {
             assert_eq!(p.dims, vec![1, crate::workloads::decode::VOCAB]);
         }
         // Slab accounting: released on exit, high water saw the rollover.
-        assert_eq!(exec.pool.device.kv_resident_bytes, 0, "request exit releases its slab");
-        assert!(exec.pool.device.kv_high_water_bytes >= spec.slab_bytes(32));
-        assert_eq!(out.metrics.kv_resident_bytes, exec.pool.device.kv_high_water_bytes);
+        assert_eq!(exec.pool.device.kv_resident_bytes(), 0, "request exit releases its slab");
+        assert!(exec.pool.device.kv_high_water_bytes() >= spec.slab_bytes(32));
+        assert_eq!(out.metrics.kv_resident_bytes, exec.pool.device.kv_high_water_bytes());
     }
 
     #[test]
@@ -2019,8 +2148,8 @@ mod tests {
         let mut exec = Executor::new(dev, opts.clone());
         let out = exec.run_decode(&prog, &spec, &[5, 9], 6).unwrap();
         assert!(out.metrics.demotions >= 1, "slab OOM must demote");
-        assert_eq!(exec.pool.device.kv_resident_bytes, 0);
-        assert_eq!(exec.pool.device.kv_high_water_bytes, 0, "demoted slab never resident");
+        assert_eq!(exec.pool.device.kv_resident_bytes(), 0);
+        assert_eq!(exec.pool.device.kv_high_water_bytes(), 0, "demoted slab never resident");
 
         let mut clean = Executor::new(Arc::new(Device::cpu().unwrap()), opts);
         let want = clean.run_decode(&prog, &spec, &[5, 9], 6).unwrap();

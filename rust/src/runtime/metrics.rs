@@ -91,6 +91,13 @@ pub struct RunMetrics {
     /// Peak bytes held in device-resident joint buffers during batched
     /// plan replays (a gauge, like `device_resident_bytes`).
     pub batch_dev_resident_bytes: u64,
+    /// Planned arena extent of the symbolic memory plan the run replayed
+    /// under (a gauge; zero when every replay ran planner-off).
+    pub planned_peak_bytes: u64,
+    /// Bytes the symbolic memory plan saved versus giving every
+    /// device-resident value its own slot — Σ member bytes − planned peak,
+    /// summed over planned replays (a flow).
+    pub mem_plan_reuse_bytes: u64,
     /// Robustness counters (see `runtime/faults.rs` and the failure-model
     /// section of docs/runtime.md). All flows; zero on fault-free runs.
     ///
@@ -187,6 +194,8 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.batch_plan_guard_misses += o.batch_plan_guard_misses;
         self.batch_dev_resident_bytes =
             self.batch_dev_resident_bytes.max(o.batch_dev_resident_bytes);
+        self.planned_peak_bytes = self.planned_peak_bytes.max(o.planned_peak_bytes);
+        self.mem_plan_reuse_bytes += o.mem_plan_reuse_bytes;
         self.shed_requests += o.shed_requests;
         self.deadline_misses += o.deadline_misses;
         self.retries += o.retries;
@@ -284,6 +293,23 @@ mod tests {
         assert_eq!(a.batch_plan_misses, 1);
         assert_eq!(a.batch_plan_guard_misses, 1);
         assert_eq!(a.batch_dev_resident_bytes, 700, "batch residency is a gauge");
+    }
+
+    #[test]
+    fn memory_plan_counters_fold_gauge_and_flow() {
+        let mut a = RunMetrics {
+            planned_peak_bytes: 4096,
+            mem_plan_reuse_bytes: 1024,
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            planned_peak_bytes: 2048,
+            mem_plan_reuse_bytes: 512,
+            ..Default::default()
+        };
+        a += &b;
+        assert_eq!(a.planned_peak_bytes, 4096, "planned extent is a gauge");
+        assert_eq!(a.mem_plan_reuse_bytes, 1536, "reuse savings are a flow");
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod eager;
 pub mod executor;
 pub mod faults;
 pub mod kv;
+pub mod memplan;
 pub mod metrics;
 pub mod pjrt;
 pub mod plan;

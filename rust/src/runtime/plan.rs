@@ -117,9 +117,17 @@ pub struct LaunchPlan {
     /// Guards over host-op products, checked as the producing op replays.
     pub host_guards: HashMap<ValueId, Vec<ElemGuard>>,
     /// Peak bytes of device-resident values implied by the plan's
-    /// compile-time `Dealloc` placement; reserved in the buffer arena when
-    /// the plan is installed.
+    /// compile-time `Dealloc` placement; the reservation fallback when no
+    /// symbolic memory plan instantiates for this binding.
     pub device_peak_bytes: u64,
+    /// Instantiated symbolic memory plan for this binding (slot offsets and
+    /// sizes, planned peak): replay acquires one planned extent instead of
+    /// per-buffer blocks. `None` → observed-peak fallback.
+    pub memory: Option<crate::runtime::memplan::PlanMemory>,
+    /// Arena reservation held for the plan's whole cache lifetime; dropping
+    /// the plan (FIFO eviction) drops the lease and shrinks the arena's
+    /// reserved capacity.
+    pub reserve: Option<crate::runtime::buffers::ArenaLease>,
 }
 
 /// Check a parameter-guard map against one request's inputs. `true` means
@@ -205,6 +213,10 @@ pub struct PlanRecorder {
     dev_live: HashMap<ValueId, u64>,
     dev_resident: u64,
     dev_peak: u64,
+    /// Every device-producing value's observed bucket bytes (never removed
+    /// at `Dealloc` — the symbolic memory planner instantiates slot sizes
+    /// from this map when the plan installs).
+    observed: HashMap<ValueId, u64>,
 }
 
 impl PlanRecorder {
@@ -216,7 +228,14 @@ impl PlanRecorder {
             dev_live: HashMap::new(),
             dev_resident: 0,
             dev_peak: 0,
+            observed: HashMap::new(),
         }
+    }
+
+    /// Observed bytes per device-producing value (read before
+    /// [`finish`](Self::finish) consumes the recorder).
+    pub fn observed(&self) -> &HashMap<ValueId, u64> {
+        &self.observed
     }
 
     /// Freeze the shape-read log at the suffix cut: only reads up to here
@@ -253,6 +272,7 @@ impl PlanRecorder {
             return;
         }
         self.dev_live.insert(value, bytes);
+        self.observed.insert(value, bytes);
         self.dev_resident += bytes;
         self.dev_peak = self.dev_peak.max(self.dev_resident);
     }
@@ -289,6 +309,8 @@ impl PlanRecorder {
             param_guards,
             host_guards,
             device_peak_bytes: self.dev_peak,
+            memory: None,
+            reserve: None,
         })
     }
 }
@@ -345,8 +367,15 @@ pub struct BatchPlan {
     /// replays.
     pub host_guards: HashMap<ValueId, Vec<ElemGuard>>,
     /// Peak bytes of device-resident joint values implied by the plan's
-    /// `Dealloc` placement; reserved in the buffer arena on install.
+    /// `Dealloc` placement; the reservation fallback when no symbolic
+    /// memory plan instantiates for this group shape.
     pub device_peak_bytes: u64,
+    /// Instantiated symbolic memory plan for this group shape (same
+    /// per-program `MemoryPlan` as solo plans, instantiated with the
+    /// widened joint sizes). `None` → observed-peak fallback.
+    pub memory: Option<crate::runtime::memplan::PlanMemory>,
+    /// Arena reservation held for the batch plan's cache lifetime.
+    pub reserve: Option<crate::runtime::buffers::ArenaLease>,
 }
 
 impl BatchPlan {
@@ -368,6 +397,9 @@ pub struct BatchPlanRecorder {
     dev_live: HashMap<ValueId, u64>,
     dev_resident: u64,
     dev_peak: u64,
+    /// Observed joint bytes per device-producing value (kept past
+    /// `Dealloc` for the symbolic memory planner, like [`PlanRecorder`]).
+    observed: HashMap<ValueId, u64>,
     /// Shape reads the batched environment logged during the walk (empty
     /// for eligible programs; stashed by the executor before `finish`).
     elem_log: Vec<(usize, usize, i64)>,
@@ -380,8 +412,15 @@ impl BatchPlanRecorder {
             dev_live: HashMap::new(),
             dev_resident: 0,
             dev_peak: 0,
+            observed: HashMap::new(),
             elem_log: Vec::new(),
         }
+    }
+
+    /// Observed joint bytes per device-producing value (read before
+    /// [`finish`](Self::finish) consumes the recorder).
+    pub fn observed(&self) -> &HashMap<ValueId, u64> {
+        &self.observed
     }
 
     /// Hand over the batched environment's shape-read log (consumed by
@@ -402,6 +441,7 @@ impl BatchPlanRecorder {
     /// bucket extents).
     pub fn note_device_out(&mut self, value: ValueId, bytes: u64) {
         self.dev_live.insert(value, bytes);
+        self.observed.insert(value, bytes);
         self.dev_resident += bytes;
         self.dev_peak = self.dev_peak.max(self.dev_resident);
     }
@@ -421,6 +461,8 @@ impl BatchPlanRecorder {
             param_guards,
             host_guards,
             device_peak_bytes: self.dev_peak,
+            memory: None,
+            reserve: None,
         }
     }
 }
@@ -488,6 +530,8 @@ mod tests {
             param_guards,
             host_guards: HashMap::new(),
             device_peak_bytes: 0,
+            memory: None,
+            reserve: None,
         };
         let good = vec![vec![Tensor::i64(&[1], vec![4])], vec![Tensor::i64(&[1], vec![4])]];
         let bad = vec![vec![Tensor::i64(&[1], vec![4])], vec![Tensor::i64(&[1], vec![5])]];

@@ -253,6 +253,26 @@ impl SymbolTable {
         a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| self.dims_equal(x, y))
     }
 
+    /// Decompose a dim vector into the element-count monomial
+    /// `coeff × Π syms`: the product of every fixed extent, times the
+    /// *multiset* of canonical symbolic dims (sorted so equal multisets
+    /// compare equal). Two shapes with equal monomials hold the same
+    /// element count for every binding; the symbolic memory planner
+    /// (`runtime/memplan.rs`) also orders monomials under a bucket lower
+    /// bound to prove one buffer always fits inside another.
+    pub fn size_monomial(&self, dims: &[Dim]) -> (u64, Vec<SymId>) {
+        let mut coeff: u64 = 1;
+        let mut syms = Vec::new();
+        for &d in dims {
+            match self.canon_dim(d) {
+                Dim::Fixed(n) => coeff = coeff.saturating_mul(n.max(1) as u64),
+                Dim::Sym(s) => syms.push(s),
+            }
+        }
+        syms.sort();
+        (coeff, syms)
+    }
+
     // ---- tensor-size equality over IR values ------------------------------
 
     fn size_canon(&self, v: usize) -> usize {
@@ -395,6 +415,22 @@ mod tests {
         assert!(!t.size_equal(3, 4));
         t.record_size_equal(4, 3);
         assert!(t.size_equal(4, 12));
+    }
+
+    #[test]
+    fn size_monomial_canonicalizes_and_sorts() {
+        let mut t = SymbolTable::new();
+        let s = t.fresh("seq", input_dim(0, 1));
+        let s2 = t.fresh("seq2", input_dim(1, 1));
+        let k = t.fresh("k64", ShapeExpr::Const(64));
+        t.unify(s, s2);
+        // [s2, 8, s, k64] → coeff 8·64, syms [s, s] (canonical, sorted).
+        let (coeff, syms) =
+            t.size_monomial(&[Dim::Sym(s2), Dim::Fixed(8), Dim::Sym(s), Dim::Sym(k)]);
+        assert_eq!(coeff, 8 * 64);
+        assert_eq!(syms, vec![t.canon(s), t.canon(s)]);
+        let (c2, sy2) = t.size_monomial(&[Dim::Fixed(2), Dim::Fixed(3)]);
+        assert_eq!((c2, sy2.len()), (6, 0));
     }
 
     #[test]

@@ -115,6 +115,76 @@ fn replay_tiers_are_bit_exact_under_random_binding_streams() {
 }
 
 #[test]
+fn memory_planner_is_bit_exact_against_planner_off() {
+    // The symbolic memory planner changes *where* replay buffers live (one
+    // planned arena extent with shared slots vs a lease per buffer), never
+    // what they hold. Planner-on and planner-off engines must agree
+    // bit-for-bit on every tier that replays: solo, stacked batch, decode.
+    let planner_off = || {
+        let mut o = CompileOptions::mode(Mode::Disc);
+        o.runtime.memory_plan = false;
+        o
+    };
+
+    for name in ["transformer", "bert"] {
+        let w = workloads::by_name(name).unwrap();
+        let mut state = 0x3E3_9_9A7 ^ name.len() as u64;
+        let cases: Vec<(u64, Vec<Tensor>)> = (0..6)
+            .map(|_| {
+                let seed = next_seed(&mut state);
+                let mut rng = Prng::new(seed);
+                let seq = rng.range(w.seq_range.0, w.seq_range.0 + 6);
+                (seed, (w.gen)(seq, &mut rng))
+            })
+            .collect();
+
+        let mut on = fresh_model(name, &CompileOptions::mode(Mode::Disc));
+        let mut off = fresh_model(name, &planner_off());
+        // Two passes: the first records plans on both sides, the second
+        // replays them — the pass where the planner actually runs.
+        for round in 0..2 {
+            for (seed, inputs) in &cases {
+                let a = on.run(inputs).unwrap().outputs;
+                let b = off.run(inputs).unwrap().outputs;
+                assert_eq!(
+                    a, b,
+                    "seed {seed} [{name}]: planner-on solo run (round {round}) diverged"
+                );
+            }
+            let groups: Vec<Vec<Vec<Tensor>>> = cases
+                .chunks(3)
+                .map(|g| g.iter().map(|(_, i)| i.clone()).collect())
+                .collect();
+            for group in &groups {
+                let a = on.run_batch(group).unwrap().outputs;
+                let b = off.run_batch(group).unwrap().outputs;
+                assert_eq!(a, b, "[{name}]: planner-on batched dispatch (round {round}) diverged");
+            }
+        }
+    }
+
+    // Decode: the step loop's activations replay under the planner while
+    // the KV slab stays a planner-owned long-lived residency — token
+    // streams and probability rows must not move.
+    let spec = workloads::decode::spec();
+    let vocab = workloads::decode::VOCAB as i64;
+    let mut state = 0x9_1A2_DEC0u64;
+    let mut on = fresh_model("decode", &CompileOptions::mode(Mode::Disc));
+    let mut off = fresh_model("decode", &planner_off());
+    for _ in 0..3 {
+        let seed = next_seed(&mut state);
+        let mut rng = Prng::new(seed);
+        let plen = rng.range(1, 4);
+        let prompt = rng.fill_i64(plen, 0, vocab - 1);
+        let gen_steps = rng.range(4, 10);
+        let a = on.run_decode(&spec, &prompt, gen_steps).unwrap();
+        let b = off.run_decode(&spec, &prompt, gen_steps).unwrap();
+        assert_eq!(a.generated, b.generated, "seed {seed}: planner-on decode tokens diverged");
+        assert_eq!(a.step_probs, b.step_probs, "seed {seed}: planner-on decode probs diverged");
+    }
+}
+
+#[test]
 fn multi_tenant_mix_is_bit_exact_per_tenant() {
     use disc::coordinator::tenants::{serve_mix, MixOptions, TenantSpec};
 
