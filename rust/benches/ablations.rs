@@ -96,7 +96,15 @@ fn main() {
 
     println!("=== Ablations: transformer, {REQUESTS} dynamic-length requests ===\n");
     let mut t = Table::new(&[
-        "variant", "groups", "mem-kernels", "compiles", "pad-copies", "pool-hit%", "h2d", "wall",
+        "variant",
+        "groups",
+        "mem-kernels",
+        "compiles",
+        "pad-copies",
+        "pad-ratio",
+        "pool-hit%",
+        "h2d",
+        "wall",
     ]);
     for case in cases {
         let module = disc::bridge::lower(&w.graph).expect("lower");
@@ -118,6 +126,7 @@ fn main() {
             m.mem_kernels.to_string(),
             m.compile_events.to_string(),
             m.pad_copies.to_string(),
+            format!("{:.4}", m.padding_ratio()),
             hit,
             disc::util::fmt_bytes(m.h2d_bytes as usize),
             format!("{:.2?}", report.wall),
@@ -126,8 +135,9 @@ fn main() {
     t.print();
     println!(
         "\nReading guide: constraints widen fusion (fewer mem-kernels); \
-         exact buckets recompile per shape (compile column); pooling trades \
-         allocator traffic for reuse; the weight-cache row re-uploads GEMM \
-         weights every call (h2d column)."
+         exact buckets recompile per shape (compile column) but pad \
+         nothing, wider buckets trade padded elements (pad-ratio column) \
+         for kernel reuse; pooling trades allocator traffic for reuse; the \
+         weight-cache row re-uploads GEMM weights every call (h2d column)."
     );
 }

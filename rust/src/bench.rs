@@ -91,6 +91,36 @@ impl Table {
     }
 }
 
+/// Seeded Zipf-skewed length stream over `[lo, hi]`: rank 1 is the most
+/// frequent length, probabilities fall off as `rank^-exponent`. The
+/// ranks walk outward from `lo` so small lengths dominate — the classic
+/// serving traffic shape (most requests short, a heavy tail of long
+/// ones) that adaptive bucketing exploits. Deterministic per seed: tests
+/// and benches that gate on it print the seed so a failure reproduces
+/// with the same stream.
+pub fn zipf_lengths(seed: u64, n: usize, lo: usize, hi: usize, exponent: f64) -> Vec<usize> {
+    assert!(lo <= hi, "zipf_lengths wants lo <= hi");
+    let m = hi - lo + 1;
+    // CDF inversion over the finite rank set.
+    let weights: Vec<f64> =
+        (1..=m).map(|rank| 1.0 / (rank as f64).powf(exponent.max(0.0))).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(m);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut rng = crate::util::prng::Prng::new(seed);
+    (0..n)
+        .map(|_| {
+            let u = rng.f32() as f64;
+            let rank = cdf.partition_point(|&c| c < u).min(m - 1);
+            lo + rank
+        })
+        .collect()
+}
+
 /// Format a ratio as `N.NNx`.
 pub fn speedup(baseline_ms: f64, measured_ms: f64) -> String {
     if measured_ms <= 0.0 {
@@ -123,5 +153,20 @@ mod tests {
     fn speedup_format() {
         assert_eq!(speedup(10.0, 5.0), "2.00x");
         assert_eq!(speedup(10.0, 0.0), "inf");
+    }
+
+    #[test]
+    fn zipf_lengths_is_seeded_skewed_and_bounded() {
+        let a = zipf_lengths(42, 500, 10, 90, 1.2);
+        let b = zipf_lengths(42, 500, 10, 90, 1.2);
+        assert_eq!(a, b, "same seed must reproduce the same stream");
+        assert!(a.iter().all(|&l| (10..=90).contains(&l)));
+        // Skew: the bottom quartile of the range holds most of the mass.
+        let small = a.iter().filter(|&&l| l <= 30).count();
+        assert!(small * 2 > a.len(), "zipf stream must skew small: {small}/500");
+        // Different seed, different stream.
+        assert_ne!(a, zipf_lengths(43, 500, 10, 90, 1.2));
+        // Degenerate range collapses to the single length.
+        assert!(zipf_lengths(7, 16, 5, 5, 1.0).iter().all(|&l| l == 5));
     }
 }

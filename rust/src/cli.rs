@@ -72,6 +72,7 @@ USAGE:
                 [--open-rate <rps>] [--workers N] [--burst B] [--warm]
                 [--batch K] [--batch-window-us U] [--no-memplan]
                 [--deadline-ms D] [--faults <spec>]
+                [--rebucket-interval MS] [--max-buckets K]
                 (--workers >1 serves the open-loop stream from N executor
                  threads sharing one kernel/weight store; --burst switches
                  to on/off arrivals; --warm precompiles neighbor buckets in
@@ -83,12 +84,19 @@ USAGE:
                  requests still queued D ms after arrival; --faults arms a
                  fault-injection schedule for the worker-panic seam, e.g.
                  \"seed=7,panic=100:2\" — device seams read DISC_FAULTS,
-                 see docs/runtime.md)
+                 see docs/runtime.md; --rebucket-interval >0 runs a
+                 background loop every MS ms that re-derives bucket
+                 boundaries (at most --max-buckets cuts per symbol) from
+                 the observed extent histogram, pre-compiles the new
+                 family off the hot path, and hot-swaps the policy epoch
+                 with zero compile stall — see docs/runtime.md
+                 §Bucketing & re-bucketing)
   disc run mix  [--tenants name:workload[:slo[:weight[:floor-mb]]],...]
                 [--requests N] [--rate R] [--workers N] [--batch K]
                 [--deadline-ms D] [--seed S] [--faults <spec>]
                 [--fault-tenant <name>] [--breaker T] [--probe-after P]
                 [--quarantine reference|shed] [--weight-budget-mb M]
+                [--rebucket-interval MS] [--max-buckets K]
                 (multi-tenant serving: each tenant gets its own bounded
                  queue, SLO class (latency = zero straggler window,
                  throughput = wide), weighted-fair share of the worker

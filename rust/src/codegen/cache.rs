@@ -18,6 +18,7 @@
 //! the in-flight compile).
 
 use crate::codegen::hlo::{emit_group, group_syms, KernelSpec};
+use crate::codegen::policy::{Boundaries, PolicyEpoch, PolicySwitch};
 use crate::codegen::store::KernelStore;
 use crate::codegen::BucketPolicy;
 use crate::dhlo::Module;
@@ -68,6 +69,16 @@ pub struct CacheStats {
 pub struct KernelCache {
     store: Arc<KernelStore>,
     policy: BucketPolicy,
+    /// The shared traffic-adaptive policy switch, when the executor serves
+    /// under one. Bucket lookups consult its live [`Boundaries`]; with no
+    /// switch (VM baseline, tests) the static `policy` decides alone.
+    switch: Option<Arc<PolicySwitch>>,
+    /// Epoch-cached snapshot of the switch's current boundaries: the hot
+    /// path pays one atomic epoch load per dispatch and re-locks the switch
+    /// only when a swap happened. Stale-epoch memo entries keep their old
+    /// bucket keys — the kernels stay valid, they just stop being looked up
+    /// once traffic moves to the new buckets.
+    live: Option<(PolicyEpoch, Arc<Boundaries>)>,
     /// Local memo: keys this handle has resolved, with their spec. Lock-free
     /// on repeat lookups.
     map: HashMap<(String, Vec<usize>), Arc<CompiledKernel>>,
@@ -84,31 +95,70 @@ impl KernelCache {
 
     /// A handle over a shared (process-wide) store.
     pub fn with_store(store: Arc<KernelStore>, policy: BucketPolicy) -> Self {
-        KernelCache { store, policy, map: HashMap::new(), stats: CacheStats::default() }
+        KernelCache {
+            store,
+            policy,
+            switch: None,
+            live: None,
+            map: HashMap::new(),
+            stats: CacheStats::default(),
+        }
     }
 
     pub fn policy(&self) -> BucketPolicy {
         self.policy
     }
 
+    /// Attach the shared policy switch (executor setup and forks).
+    pub fn set_switch(&mut self, switch: Arc<PolicySwitch>) {
+        self.switch = Some(switch);
+        self.live = None;
+    }
+
+    /// The live derived boundaries, re-snapshotted only when the epoch
+    /// moved. `None` when no switch is attached or the boundaries are
+    /// trivial (pure base policy) — the caller then uses `policy` directly.
+    fn live_boundaries(&mut self) -> Option<Arc<Boundaries>> {
+        let sw = self.switch.as_ref()?;
+        let e = sw.epoch();
+        let b = match &self.live {
+            Some((le, b)) if *le == e => b.clone(),
+            _ => {
+                let (e, b) = sw.snapshot();
+                self.live = Some((e, b.clone()));
+                b
+            }
+        };
+        if b.is_trivial() {
+            None
+        } else {
+            Some(b)
+        }
+    }
+
     pub fn store(&self) -> &Arc<KernelStore> {
         &self.store
     }
 
-    /// Resolve the bucketed extents of `g`'s symbols under this cache's
-    /// policy.
+    /// Resolve the bucketed extents of `g`'s symbols under the live policy
+    /// (derived boundaries when a non-trivial epoch is installed, the
+    /// static base policy otherwise).
     fn bucketed_extents(
-        &self,
+        &mut self,
         syms: &[SymId],
         actual: &HashMap<SymId, usize>,
     ) -> Result<(HashMap<SymId, usize>, Vec<usize>)> {
+        let live = self.live_boundaries();
         let mut bucketed: HashMap<SymId, usize> = HashMap::with_capacity(syms.len());
         let mut key_dims = Vec::with_capacity(syms.len());
         for s in syms {
             let a = *actual
                 .get(s)
                 .ok_or_else(|| anyhow::anyhow!("missing actual extent for {s}"))?;
-            let bk = self.policy.bucket(a);
+            let bk = match &live {
+                Some(b) => b.bucket(*s, a),
+                None => self.policy.bucket(a),
+            };
             bucketed.insert(*s, bk);
             key_dims.push(bk);
         }
@@ -161,11 +211,14 @@ impl KernelCache {
     /// current bucket): growing traffic moves one axis per step — a
     /// sequence length creeping up, a batch dimension widening — so the
     /// reachable neighbor keys are the single-axis advances, not the joint
-    /// advance of every axis at once. Emits each spec and enqueues the
+    /// advance of every axis at once. The neighbor is what the *live*
+    /// policy produces for the next extent past the current bucket — after
+    /// a boundary swap the warms target the new cut family, never a bucket
+    /// the live policy cannot produce. Emits each spec and enqueues the
     /// compile on the background pool. Never blocks; no-ops for fully
     /// static groups or keys already resident/in flight.
     pub fn prefetch_neighbor(
-        &self,
+        &mut self,
         m: &Module,
         g: &FusionGroup,
         sig: &str,
@@ -175,10 +228,14 @@ impl KernelCache {
         if syms.is_empty() {
             return Ok(());
         }
+        let live = self.live_boundaries();
         let (bucketed, key_dims) = self.bucketed_extents(&syms, actual)?;
         let store_sig = format!("{FUSED_NS}{sig}");
         for (i, s) in syms.iter().enumerate() {
-            let nb = self.policy.bucket(key_dims[i] + 1);
+            let nb = match &live {
+                Some(b) => b.bucket(*s, key_dims[i] + 1),
+                None => self.policy.bucket(key_dims[i] + 1),
+            };
             if nb == key_dims[i] {
                 continue;
             }
@@ -192,6 +249,43 @@ impl KernelCache {
                 Ok((name, spec.hlo))
             });
         }
+        Ok(())
+    }
+
+    /// Warm the kernel for `g` at the buckets a *candidate* policy (not
+    /// necessarily installed yet) assigns to `actual` — the re-bucketing
+    /// pass compiles the next epoch's whole bucket family through this
+    /// before the switch flips, so the swap itself never stalls a dispatch.
+    /// Emits inline, compiles on the background pool; no-ops when the key
+    /// is already resident or in flight.
+    pub fn prefetch_bucketed(
+        &self,
+        m: &Module,
+        g: &FusionGroup,
+        sig: &str,
+        syms: &[SymId],
+        actual: &[usize],
+        bounds: &Boundaries,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            syms.len() == actual.len(),
+            "prefetch_bucketed: {} syms vs {} extents",
+            syms.len(),
+            actual.len()
+        );
+        let mut bucketed: HashMap<SymId, usize> = HashMap::with_capacity(syms.len());
+        let mut key_dims = Vec::with_capacity(syms.len());
+        for (&s, &a) in syms.iter().zip(actual) {
+            let bk = bounds.bucket(s, a);
+            bucketed.insert(s, bk);
+            key_dims.push(bk);
+        }
+        let store_sig = format!("{FUSED_NS}{sig}");
+        let name = format!("re_{}", kernel_name(sig, &key_dims));
+        self.store.prefetch(&store_sig, &key_dims, move || {
+            let spec = emit_group(m, g, &bucketed, &name)?;
+            Ok((name, spec.hlo))
+        });
         Ok(())
     }
 
@@ -335,5 +429,63 @@ mod tests {
         cache.get_for(&m, g, &actual16).unwrap();
         assert_eq!(cache.stats.misses, misses, "warmed bucket must not compile");
         assert_eq!(cache.stats.shared_hits, 1);
+    }
+
+    #[test]
+    fn neighbor_prefetch_consults_live_boundaries() {
+        use crate::codegen::policy::{Boundaries, PolicySwitch};
+        let m = chain();
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let dev = Arc::new(Device::cpu().unwrap());
+        let mut cache = KernelCache::new(dev, BucketPolicy::NextPow2);
+        let syms = group_syms(&m, g);
+        let sw = Arc::new(PolicySwitch::new(BucketPolicy::NextPow2));
+        cache.set_switch(sw.clone());
+        let mut cuts = std::collections::BTreeMap::new();
+        for &s in &syms {
+            cuts.insert(s, vec![8, 12]);
+        }
+        sw.install(Boundaries { base: BucketPolicy::NextPow2, cuts });
+        // Extent 6 buckets to the 8-cut; its neighbor under the live
+        // boundaries is the 12-cut, NOT the pow2 16 the base would pick.
+        let actual: HashMap<SymId, usize> = syms.iter().map(|&s| (s, 6)).collect();
+        cache.get_for(&m, g, &actual).unwrap();
+        let sig = signature(&m, g);
+        cache.prefetch_neighbor(&m, g, &sig, &actual).unwrap();
+        cache.store().quiesce();
+        let store_sig = format!("fused:{sig}");
+        assert!(
+            cache.store().is_ready(&store_sig, &[12]),
+            "neighbor warm must target the live policy's next cut"
+        );
+        assert!(
+            !cache.store().is_ready(&store_sig, &[16]),
+            "must not warm a bucket the live policy cannot produce"
+        );
+    }
+
+    #[test]
+    fn prefetch_bucketed_warms_candidate_family_before_install() {
+        use crate::codegen::policy::Boundaries;
+        let m = chain();
+        let p = plan(&m, &FusionOptions::default());
+        let g = &p.groups[0];
+        let dev = Arc::new(Device::cpu().unwrap());
+        let cache = KernelCache::new(dev, BucketPolicy::NextPow2);
+        let syms = group_syms(&m, g);
+        let mut cuts = std::collections::BTreeMap::new();
+        for &s in &syms {
+            cuts.insert(s, vec![40]);
+        }
+        let cand = Boundaries { base: BucketPolicy::NextPow2, cuts };
+        let sig = signature(&m, g);
+        cache.prefetch_bucketed(&m, g, &sig, &syms, &[33], &cand).unwrap();
+        cache.store().quiesce();
+        let store_sig = format!("fused:{sig}");
+        assert!(
+            cache.store().is_ready(&store_sig, &[40]),
+            "candidate bucket must be compiled before the epoch flips"
+        );
     }
 }

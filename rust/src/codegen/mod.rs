@@ -12,13 +12,23 @@
 //! Reductions over dynamic axes are masked in-kernel against s32 runtime
 //! extent parameters (iota → compare → select with the reduce's neutral
 //! element), so tail garbage in the padding never contaminates results.
+//!
+//! The static [`BucketPolicy`] enum below is the compile-time *base*
+//! policy. Under live traffic the serving path can layer a derived,
+//! epoch-stamped [`policy::Boundaries`] on top of it (cut points fitted to
+//! the observed extent histogram, swapped in without a compile stall) —
+//! see [`policy`] for the traffic-adaptive machinery.
 
 pub mod cache;
 pub mod hlo;
+pub mod policy;
 pub mod store;
 
 pub use cache::{CacheStats, KernelCache};
 pub use hlo::{emit_group, KernelSpec};
+pub use policy::{
+    derive_boundaries, Boundaries, ExtentHistogram, HistSnapshot, PolicyEpoch, PolicySwitch,
+};
 pub use store::{Fetch, KernelStore, StoreSnapshot};
 
 /// How dynamic extents map to compiled-kernel extents.

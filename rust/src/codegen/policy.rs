@@ -1,0 +1,507 @@
+//! Traffic-adaptive bucket policy: extent histograms, padded-FLOP-minimizing
+//! boundary derivation, and the epoch-stamped hot-swap switch.
+//!
+//! The static [`BucketPolicy`](crate::codegen::BucketPolicy) enum picks the
+//! bucket for a dynamic extent with a fixed rule (`NextPow2`,
+//! `MultipleOf(k)`, …) chosen at compile time. Under skewed real traffic a
+//! fixed rule pays padding for headroom most requests never use: a Zipf
+//! stream of sequence lengths clustered at 40 pads every one of them to 64
+//! under `NextPow2`. This module makes the policy a *runtime object* derived
+//! from observed traffic (Nimble's shape-function dispatch over a kernel
+//! family, arXiv 2006.03031; Vortex's strategy selection from observed
+//! shape distributions, arXiv 2409.01075):
+//!
+//! * [`ExtentHistogram`] — a mutex-guarded (tiny critical section — one
+//!   `BTreeMap` bump) per-symbol extent histogram every dispatch records
+//!   into, plus a capped map of *launch sites* (program id, fused-launch
+//!   index, actual extent vectors) the interpret tier records so a
+//!   re-bucketing pass knows exactly which kernels to pre-warm.
+//! * [`derive_boundaries`] — an O(m²·K) dynamic program over the observed
+//!   extents of each symbol: pick ≤K cut points (floored at
+//!   hardware-friendly [`CUT_ALIGN`] multiples) minimizing the expected
+//!   padded element count Σ count·(cut(e) − e).
+//! * [`Boundaries`] — the derived policy: sorted per-symbol cuts, an extent
+//!   buckets to the first cut ≥ it and falls back to the base
+//!   `BucketPolicy` beyond the largest cut (so every extent always has a
+//!   bucket, including symbols never observed).
+//! * [`PolicySwitch`] — the shared, versioned handle: an atomic
+//!   [`PolicyEpoch`] plus the current `Arc<Boundaries>`. Workers read the
+//!   epoch per dispatch (one `Acquire` load; the `KernelCache` re-snapshots
+//!   only on a mismatch), launch-plan keys embed it so stale-epoch plans
+//!   retire through the existing FIFO, and [`PolicySwitch::install`] flips
+//!   it only after the new bucket family is compiled — a zero-stall swap.
+
+use crate::codegen::BucketPolicy;
+use crate::shape::SymId;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone policy version. Epoch 0 is the compile-time base policy; every
+/// [`PolicySwitch::install`] bumps it.
+pub type PolicyEpoch = u64;
+
+/// Hardware-friendly floor for derived cut points: cuts above this are
+/// rounded up to a multiple of it (vector-lane/tile alignment); extents at
+/// or below it keep exact cuts (rounding 3 up to 8 would *add* padding the
+/// static policies don't pay).
+pub const CUT_ALIGN: usize = 8;
+
+/// Cap on distinct launch sites tracked for pre-warming (per histogram).
+const SITES_CAP: usize = 256;
+
+/// Cap on distinct actual-extent vectors tracked per launch site.
+const SITE_ACTUALS_CAP: usize = 64;
+
+/// A derived bucket policy: sorted cut points per symbol. An extent buckets
+/// to the first cut ≥ it; extents beyond the largest cut (and symbols with
+/// no cuts at all) fall back to the base [`BucketPolicy`], so the mapping is
+/// total and monotone for every symbol.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Boundaries {
+    pub base: BucketPolicy,
+    /// Sorted ascending, non-empty per entry.
+    pub cuts: BTreeMap<SymId, Vec<usize>>,
+}
+
+impl Boundaries {
+    /// The epoch-0 policy: no cuts, every extent buckets through `base`.
+    pub fn empty(base: BucketPolicy) -> Boundaries {
+        Boundaries { base, cuts: BTreeMap::new() }
+    }
+
+    /// No derived cuts — behaves exactly like the base policy.
+    pub fn is_trivial(&self) -> bool {
+        self.cuts.is_empty()
+    }
+
+    /// Bucket `n` for `sym`: first cut ≥ `n`, else the base policy.
+    pub fn bucket(&self, sym: SymId, n: usize) -> usize {
+        let n = n.max(1);
+        if let Some(cuts) = self.cuts.get(&sym) {
+            let i = cuts.partition_point(|&c| c < n);
+            if let Some(&c) = cuts.get(i) {
+                return c;
+            }
+        }
+        self.base.bucket(n)
+    }
+
+    /// Smallest bucket ≥ `n` any symbol's cuts can produce (base fallback
+    /// when none can). Used by growth targets that are not tied to one
+    /// symbol (e.g. `KvCache::grow`); always ≥ `n`, so growth progresses.
+    pub fn bucket_any(&self, n: usize) -> usize {
+        let n = n.max(1);
+        self.cuts
+            .values()
+            .filter_map(|cuts| {
+                let i = cuts.partition_point(|&c| c < n);
+                cuts.get(i).copied()
+            })
+            .min()
+            .unwrap_or_else(|| self.base.bucket(n))
+    }
+
+    /// Total number of cut points across all symbols (observability).
+    pub fn cut_count(&self) -> usize {
+        self.cuts.values().map(|v| v.len()).sum()
+    }
+}
+
+#[derive(Default)]
+struct HistInner {
+    /// Per-symbol extent counts: `per_sym[s][e]` = dispatches observing
+    /// extent `e` for symbol `s`.
+    per_sym: BTreeMap<SymId, BTreeMap<usize, u64>>,
+    /// Launch sites seen by the interpret tier: (program id, fused index)
+    /// → distinct actual extent vectors. Capped; used to pre-warm the new
+    /// bucket family before an epoch flip.
+    sites: HashMap<(u64, usize), HashMap<Vec<usize>, u64>>,
+    /// Total binding records (dispatch count proxy).
+    total: u64,
+}
+
+/// An immutable copy of the histogram state (sorted, for determinism).
+#[derive(Debug, Clone, Default)]
+pub struct HistSnapshot {
+    /// Per symbol: sorted `(extent, count)` bins.
+    pub per_sym: Vec<(SymId, Vec<(usize, u64)>)>,
+    /// Per launch site `(program id, fused index)`: distinct actual extent
+    /// vectors, sorted.
+    pub sites: Vec<((u64, usize), Vec<Vec<usize>>)>,
+    /// Total binding records folded in.
+    pub total: u64,
+}
+
+/// Shared traffic histogram. One mutex with a tiny critical section (a
+/// couple of map bumps) — dispatch rates here are request-granular, not
+/// per-element, so a short lock beats the complexity of sharded atomics.
+#[derive(Default)]
+pub struct ExtentHistogram {
+    inner: Mutex<HistInner>,
+}
+
+impl ExtentHistogram {
+    pub fn new() -> ExtentHistogram {
+        ExtentHistogram::default()
+    }
+
+    /// Record one dispatch's binding vector (canonical symbol → extent).
+    pub fn record_bindings(&self, bindings: &[(SymId, i64)]) {
+        if bindings.is_empty() {
+            return;
+        }
+        let mut h = self.inner.lock().unwrap();
+        for &(s, v) in bindings {
+            if v > 0 {
+                *h.per_sym.entry(s).or_default().entry(v as usize).or_insert(0) += 1;
+            }
+        }
+        h.total += 1;
+    }
+
+    /// Record one symbol/extent observation (batched dispatches record the
+    /// per-member batch-symbol extent this way).
+    pub fn record_extent(&self, sym: SymId, extent: usize) {
+        if extent == 0 {
+            return;
+        }
+        let mut h = self.inner.lock().unwrap();
+        *h.per_sym.entry(sym).or_default().entry(extent).or_insert(0) += 1;
+        h.total += 1;
+    }
+
+    /// Record a fused-launch site: the actual extents `actual` of `syms` at
+    /// fused launch `fused` of program `program`. Also folds the extents
+    /// into the per-symbol bins so *derived* symbols (which never appear in
+    /// binding vectors) get cuts too. Only the interpret tier records sites
+    /// — replays skip it — so the site map tracks the distinct shape set,
+    /// not traffic frequency (frequency lives in the binding bins).
+    pub fn record_site(&self, program: u64, fused: usize, syms: &[SymId], actual: &[usize]) {
+        let mut h = self.inner.lock().unwrap();
+        for (&s, &a) in syms.iter().zip(actual) {
+            if a > 0 {
+                *h.per_sym.entry(s).or_default().entry(a).or_insert(0) += 1;
+            }
+        }
+        let key = (program, fused);
+        if h.sites.len() >= SITES_CAP && !h.sites.contains_key(&key) {
+            return;
+        }
+        let per_site = h.sites.entry(key).or_default();
+        if per_site.len() >= SITE_ACTUALS_CAP && !per_site.contains_key(actual) {
+            return;
+        }
+        *per_site.entry(actual.to_vec()).or_insert(0) += 1;
+    }
+
+    /// Total binding records so far (cheap re-bucketing trigger check).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Sorted, immutable copy of the current state.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let h = self.inner.lock().unwrap();
+        let per_sym = h
+            .per_sym
+            .iter()
+            .map(|(&s, bins)| (s, bins.iter().map(|(&e, &c)| (e, c)).collect()))
+            .collect();
+        let mut sites: Vec<((u64, usize), Vec<Vec<usize>>)> = h
+            .sites
+            .iter()
+            .map(|(&k, actuals)| {
+                let mut v: Vec<Vec<usize>> = actuals.keys().cloned().collect();
+                v.sort_unstable();
+                (k, v)
+            })
+            .collect();
+        sites.sort_unstable_by_key(|&(k, _)| k);
+        HistSnapshot { per_sym, sites, total: h.total }
+    }
+}
+
+/// The shared, versioned policy handle: base policy, current derived
+/// [`Boundaries`], the traffic [`ExtentHistogram`], and the atomic epoch.
+/// One `PolicySwitch` is shared (via `Arc`) by every executor forked from a
+/// compiled model, so the histogram aggregates across workers and a swap is
+/// observed by all of them on their next dispatch.
+pub struct PolicySwitch {
+    base: BucketPolicy,
+    epoch: AtomicU64,
+    current: Mutex<Arc<Boundaries>>,
+    pub histogram: ExtentHistogram,
+    swaps: AtomicU64,
+}
+
+impl PolicySwitch {
+    /// Epoch 0: the trivial boundaries (pure base policy).
+    pub fn new(base: BucketPolicy) -> PolicySwitch {
+        PolicySwitch {
+            base,
+            epoch: AtomicU64::new(0),
+            current: Mutex::new(Arc::new(Boundaries::empty(base))),
+            histogram: ExtentHistogram::new(),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    pub fn base(&self) -> BucketPolicy {
+        self.base
+    }
+
+    /// Current epoch (one `Acquire` load — the per-dispatch fast path).
+    pub fn epoch(&self) -> PolicyEpoch {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Consistent (epoch, boundaries) pair.
+    pub fn snapshot(&self) -> (PolicyEpoch, Arc<Boundaries>) {
+        let cur = self.current.lock().unwrap();
+        (self.epoch.load(Ordering::Acquire), cur.clone())
+    }
+
+    /// Flip to `next` and bump the epoch. Callers must have pre-compiled
+    /// the new bucket family first (see `Executor::rebucket`) — the switch
+    /// itself is just the atomic publish.
+    pub fn install(&self, next: Boundaries) -> PolicyEpoch {
+        let mut cur = self.current.lock().unwrap();
+        *cur = Arc::new(next);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.epoch.fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// Number of installs so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+}
+
+/// Round a cut candidate up to the hardware-friendly floor (exact below
+/// [`CUT_ALIGN`] — see the constant's docs).
+fn align_cut(e: usize) -> usize {
+    if e <= CUT_ALIGN {
+        e
+    } else {
+        e.div_ceil(CUT_ALIGN) * CUT_ALIGN
+    }
+}
+
+/// Derive ≤`max_cuts` bucket boundaries per symbol from the observed
+/// extent histogram, minimizing the expected padded element count
+/// Σ count·(cut(e) − e) per symbol (the padded-FLOP proxy: padding scales
+/// multiplicatively with the other dims, identically for every candidate
+/// cut set). The largest observed extent's candidate is always chosen so
+/// all observed traffic is covered; everything beyond it falls back to the
+/// base policy.
+pub fn derive_boundaries(snap: &HistSnapshot, max_cuts: usize, base: BucketPolicy) -> Boundaries {
+    let mut cuts = BTreeMap::new();
+    for (sym, bins) in &snap.per_sym {
+        let c = derive_cuts(bins, max_cuts);
+        if !c.is_empty() {
+            cuts.insert(*sym, c);
+        }
+    }
+    Boundaries { base, cuts }
+}
+
+/// One symbol's DP: aggregate extents into aligned candidates, then pick
+/// ≤`max_cuts` of them minimizing Σ count·(cut(e) − e). O(m²·K) with
+/// prefix sums; m is the number of distinct aligned extents (small — real
+/// traffic clusters).
+fn derive_cuts(bins: &[(usize, u64)], max_cuts: usize) -> Vec<usize> {
+    // Aggregate: candidate cut → (total count, count-weighted extent sum).
+    let mut agg: BTreeMap<usize, (u64, u64)> = BTreeMap::new();
+    for &(e, w) in bins {
+        if e == 0 || w == 0 {
+            continue;
+        }
+        let c = align_cut(e);
+        let ent = agg.entry(c).or_insert((0, 0));
+        ent.0 += w;
+        ent.1 += w * e as u64;
+    }
+    if agg.is_empty() {
+        return Vec::new();
+    }
+    let cands: Vec<(usize, u64, u64)> = agg.iter().map(|(&c, &(w, s))| (c, w, s)).collect();
+    let m = cands.len();
+    let k = max_cuts.max(1).min(m);
+    if m <= k {
+        // Every observed (aligned) extent gets its own cut: zero padding
+        // beyond the alignment floor.
+        return cands.iter().map(|&(c, _, _)| c).collect();
+    }
+    // Prefix sums over candidates: W[i] = Σ counts of cands[..i], S[i] =
+    // Σ count·extent of cands[..i]. Covering cands[i..=j] with a cut at
+    // cands[j] costs cands[j].0·(W[j+1]−W[i]) − (S[j+1]−S[i]).
+    let mut wsum = vec![0u64; m + 1];
+    let mut ssum = vec![0u64; m + 1];
+    for (i, &(_, w, s)) in cands.iter().enumerate() {
+        wsum[i + 1] = wsum[i] + w;
+        ssum[i + 1] = ssum[i] + s;
+    }
+    let cost = |i: usize, j: usize| -> u64 {
+        cands[j].0 as u64 * (wsum[j + 1] - wsum[i]) - (ssum[j + 1] - ssum[i])
+    };
+    const INF: u64 = u64::MAX / 2;
+    // dp[j] after layer t = min padding covering cands[0..=j] with exactly
+    // t+1 cuts, the last at j; parents[t][j] = index of the previous cut.
+    // Exactly-k is the ≤k optimum: splitting any multi-candidate segment
+    // never increases cost, and m > k guarantees room to split.
+    let mut dp: Vec<u64> = (0..m).map(|j| cost(0, j)).collect();
+    let mut parents: Vec<Vec<usize>> = vec![vec![usize::MAX; m]];
+    for _ in 1..k {
+        let mut next = vec![INF; m];
+        let mut parent = vec![usize::MAX; m];
+        for j in 1..m {
+            for i in 0..j {
+                if dp[i] >= INF {
+                    continue;
+                }
+                let c = dp[i] + cost(i + 1, j);
+                if c < next[j] {
+                    next[j] = c;
+                    parent[j] = i;
+                }
+            }
+        }
+        dp = next;
+        parents.push(parent);
+    }
+    // The last candidate is always covered by its own cut (anything less
+    // would push the largest observed extents to the base fallback —
+    // exactly the padding we are trying to shed).
+    let mut chosen = Vec::new();
+    let mut j = m - 1;
+    for t in (0..parents.len()).rev() {
+        chosen.push(cands[j].0);
+        let p = parents[t][j];
+        if p == usize::MAX {
+            break;
+        }
+        j = p;
+    }
+    chosen.sort_unstable();
+    chosen.dedup();
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym(n: u32) -> SymId {
+        SymId(n)
+    }
+
+    #[test]
+    fn boundaries_bucket_first_cut_then_base_fallback() {
+        let mut cuts = BTreeMap::new();
+        cuts.insert(sym(0), vec![16, 40, 96]);
+        let b = Boundaries { base: BucketPolicy::NextPow2, cuts };
+        assert_eq!(b.bucket(sym(0), 1), 16);
+        assert_eq!(b.bucket(sym(0), 16), 16);
+        assert_eq!(b.bucket(sym(0), 17), 40);
+        assert_eq!(b.bucket(sym(0), 96), 96);
+        // Beyond the largest cut and for unknown symbols: base policy.
+        assert_eq!(b.bucket(sym(0), 97), 128);
+        assert_eq!(b.bucket(sym(1), 9), 16);
+    }
+
+    #[test]
+    fn bucket_any_takes_min_cut_over_symbols_and_progresses() {
+        let mut cuts = BTreeMap::new();
+        cuts.insert(sym(0), vec![32, 64]);
+        cuts.insert(sym(1), vec![24, 80]);
+        let b = Boundaries { base: BucketPolicy::NextPow2, cuts };
+        assert_eq!(b.bucket_any(10), 24);
+        assert_eq!(b.bucket_any(33), 64);
+        assert_eq!(b.bucket_any(81), 128, "past every cut: base fallback");
+        for n in 1..200usize {
+            assert!(b.bucket_any(n) >= n, "bucket_any({n}) must not shrink");
+        }
+    }
+
+    #[test]
+    fn derive_gives_each_aligned_extent_a_cut_when_under_budget() {
+        let bins = vec![(9usize, 5u64), (40, 3), (96, 1)];
+        let cuts = derive_cuts(&bins, 8);
+        assert_eq!(cuts, vec![16, 40, 96], "aligned to CUT_ALIGN, all covered");
+    }
+
+    #[test]
+    fn derive_keeps_exact_cuts_below_the_alignment_floor() {
+        let bins = vec![(3usize, 10u64), (5, 4)];
+        let cuts = derive_cuts(&bins, 4);
+        assert_eq!(cuts, vec![3, 5], "tiny extents keep exact cuts");
+    }
+
+    #[test]
+    fn derive_dp_minimizes_weighted_padding_under_cut_budget() {
+        // Heavy cluster at 9..=12 (aligned 16), light outlier at 100
+        // (aligned 104). K=1 must cover everything with one cut at 104;
+        // K=2 splits so the heavy cluster stops padding to 104.
+        let bins =
+            vec![(9usize, 100u64), (10, 100), (11, 100), (12, 100), (100, 1)];
+        assert_eq!(derive_cuts(&bins, 1), vec![104]);
+        assert_eq!(derive_cuts(&bins, 2), vec![16, 104]);
+    }
+
+    #[test]
+    fn derive_respects_frequency_weights() {
+        // Three aligned candidates (16, 48, 104), budget 2: the cut that
+        // merges must sacrifice the *lightest* cluster.
+        let bins = vec![(16usize, 1u64), (48, 1000), (100, 1000)];
+        let cuts = derive_cuts(&bins, 2);
+        // Merging 16 into 48 costs 1·32; merging 48 into 104 costs
+        // 1000·56. The DP must pick {48, 104}.
+        assert_eq!(cuts, vec![48, 104]);
+    }
+
+    #[test]
+    fn histogram_records_and_snapshots() {
+        let h = ExtentHistogram::new();
+        h.record_bindings(&[(sym(0), 9), (sym(1), 4)]);
+        h.record_bindings(&[(sym(0), 9)]);
+        h.record_extent(sym(0), 40);
+        h.record_site(7, 2, &[sym(5)], &[33]);
+        let snap = h.snapshot();
+        assert_eq!(snap.total, 3);
+        let s0 = &snap.per_sym.iter().find(|(s, _)| *s == sym(0)).unwrap().1;
+        assert_eq!(s0.as_slice(), &[(9, 2), (40, 1)]);
+        // Site recording also feeds per-symbol bins (derived symbols).
+        assert!(snap.per_sym.iter().any(|(s, _)| *s == sym(5)));
+        assert_eq!(snap.sites, vec![((7, 2), vec![vec![33]])]);
+    }
+
+    #[test]
+    fn switch_install_bumps_epoch_and_swap_count() {
+        let sw = PolicySwitch::new(BucketPolicy::NextPow2);
+        assert_eq!(sw.epoch(), 0);
+        let (e0, b0) = sw.snapshot();
+        assert_eq!(e0, 0);
+        assert!(b0.is_trivial());
+        let mut cuts = BTreeMap::new();
+        cuts.insert(sym(0), vec![40]);
+        let e1 = sw.install(Boundaries { base: sw.base(), cuts });
+        assert_eq!(e1, 1);
+        assert_eq!(sw.epoch(), 1);
+        assert_eq!(sw.swaps(), 1);
+        let (e, b) = sw.snapshot();
+        assert_eq!(e, 1);
+        assert_eq!(b.bucket(sym(0), 20), 40);
+    }
+
+    #[test]
+    fn derive_boundaries_covers_only_observed_symbols() {
+        let h = ExtentHistogram::new();
+        for _ in 0..10 {
+            h.record_bindings(&[(sym(0), 40)]);
+        }
+        let b = derive_boundaries(&h.snapshot(), 4, BucketPolicy::NextPow2);
+        assert_eq!(b.bucket(sym(0), 33), 40, "observed symbol gets a cut");
+        assert_eq!(b.bucket(sym(9), 33), 64, "unobserved symbol: base");
+    }
+}

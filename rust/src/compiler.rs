@@ -190,6 +190,41 @@ impl CompiledModel {
         }
     }
 
+    /// The live traffic-adaptive policy handle (histogram + epoch + current
+    /// [`Boundaries`](crate::codegen::Boundaries)) — shared with every
+    /// forked worker. `None` for baseline backends, whose policy is fixed
+    /// at compile time.
+    pub fn policy_switch(&self) -> Option<Arc<crate::codegen::PolicySwitch>> {
+        match &self.backend {
+            Backend::Program { exec, .. } => Some(exec.switch.clone()),
+            _ => None,
+        }
+    }
+
+    /// Re-derive bucket boundaries from the traffic observed so far,
+    /// pre-compile the new bucket family, and hot-swap the policy epoch
+    /// (see `Executor::rebucket`). Returns `Ok(true)` when a new policy
+    /// was installed, `Ok(false)` when traffic was empty or the derived
+    /// cuts matched the live ones. Program backends only; baselines are a
+    /// no-op `Ok(false)`. The serving coordinator calls this from its
+    /// background re-bucketing loop; benches call it directly for a
+    /// deterministic flip.
+    pub fn rebucket_now(&mut self, max_cuts: usize) -> Result<bool> {
+        match &mut self.backend {
+            Backend::Program { exec, prog } => exec.rebucket(prog, max_cuts),
+            _ => Ok(false),
+        }
+    }
+
+    /// Shrink (or grow) the executor's launch/batch-plan FIFO capacity —
+    /// tests lower it to watch stale-epoch plans retire. No-op for
+    /// baseline backends.
+    pub fn set_max_plans(&mut self, n: usize) {
+        if let Backend::Program { exec, .. } = &mut self.backend {
+            exec.max_plans = n;
+        }
+    }
+
     /// The program plus its (cached) batchability analysis, for batch
     /// assembly in the serving coordinator. `None` for baseline backends,
     /// which never batch.

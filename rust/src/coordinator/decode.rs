@@ -76,6 +76,13 @@ pub struct DecodeServeOptions {
     /// (the differential gates compare them bit-for-bit against solo
     /// loops; costs memory proportional to total steps).
     pub capture_probs: bool,
+    /// Period of the background re-bucketing loop (see
+    /// `ServeOptions::rebucket_interval`); `None` keeps the compile-time
+    /// policy. Slab rollovers then target the live boundaries via the
+    /// policy switch attached to each member's [`KvCache`].
+    pub rebucket_interval: Option<Duration>,
+    /// Cut-point budget per symbol for derived boundaries.
+    pub max_buckets: usize,
 }
 
 impl DecodeServeOptions {
@@ -86,6 +93,8 @@ impl DecodeServeOptions {
             max_requeues: 2,
             faults: None,
             capture_probs: false,
+            rebucket_interval: None,
+            max_buckets: 8,
         }
     }
 
@@ -106,6 +115,20 @@ impl DecodeServeOptions {
 
     pub fn keep_probs(mut self) -> DecodeServeOptions {
         self.capture_probs = true;
+        self
+    }
+
+    /// Re-derive and hot-swap bucket boundaries every `ms` milliseconds
+    /// (`0` turns the loop off).
+    pub fn rebucket_every_ms(mut self, ms: u64) -> DecodeServeOptions {
+        self.rebucket_interval =
+            if ms == 0 { None } else { Some(Duration::from_millis(ms)) };
+        self
+    }
+
+    /// Cut-point budget per symbol for derived boundaries.
+    pub fn max_buckets(mut self, k: usize) -> DecodeServeOptions {
+        self.max_buckets = k.max(1);
         self
     }
 }
@@ -205,6 +228,10 @@ pub fn serve_decode(
 ) -> Result<DecodeServeReport> {
     let offered = jobs.len();
     let faults = opts.faults.clone().or_else(FaultPlan::from_env);
+    let rebucketer = opts
+        .rebucket_interval
+        .filter(|iv| !iv.is_zero())
+        .and_then(|iv| super::spawn_rebucketer(model, iv, opts.max_buckets));
     let start = Instant::now();
     let mut arrivals: VecDeque<DecodeJob> = jobs.into();
     let mut running: Vec<Member> = Vec::new();
@@ -225,7 +252,11 @@ pub fn serve_decode(
     );
     // Error paths leave members behind: their slab leases die with them.
     running.clear();
+    if let Some(r) = rebucketer {
+        r.stop();
+    }
     result?;
+    super::fold_policy_metrics(model, &mut metrics);
 
     let (kv_now, kv_peak) = model.kv_residency();
     anyhow::ensure!(kv_now == 0, "kv slabs leaked: {kv_now} bytes still resident after drain");
@@ -272,6 +303,7 @@ fn drive(
     stats: &mut LoopStats,
 ) -> Result<()> {
     let policy = model.bucket_policy();
+    let switch = model.policy_switch();
     let ctx = model.batch_context();
     let mut planned_shapes: HashMap<BatchKey, Vec<i64>> = HashMap::new();
     let mut iter = 0u64;
@@ -286,7 +318,13 @@ fn drive(
                 continue;
             }
             let job = arrivals.remove(i).expect("index checked");
-            let kv = KvCache::new(*spec, policy);
+            // Slab rollovers consult the live policy when the backend has
+            // a switch: a mid-stream boundary swap redirects the member's
+            // next `grow` to the new bucket family.
+            let kv = match &switch {
+                Some(sw) => KvCache::new(*spec, policy).with_switch(sw.clone()),
+                None => KvCache::new(*spec, policy),
+            };
             // `Ok(None)` (baseline backend, no arena) is not a demotion —
             // only a failed arena acquire demotes to host residency.
             let slab = match model.kv_acquire(kv.slab_bytes()) {

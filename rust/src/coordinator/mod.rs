@@ -156,6 +156,16 @@ pub struct ServeOptions {
     /// seams (compile / transfer / device OOM) are armed on the device
     /// itself — see `runtime::faults`.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Period of the background re-bucketing loop: every interval, a
+    /// dedicated forked worker re-derives bucket boundaries from the
+    /// traffic histogram, pre-compiles the new bucket family off the hot
+    /// path, and hot-swaps the policy epoch (see `Executor::rebucket`).
+    /// `None` (the default) keeps the compile-time policy for the whole
+    /// run. Program backends only; baselines ignore it.
+    pub rebucket_interval: Option<Duration>,
+    /// Cut-point budget per symbol for derived boundaries (≤K cuts chosen
+    /// to minimize expected padded elements).
+    pub max_buckets: usize,
 }
 
 impl ServeOptions {
@@ -173,6 +183,8 @@ impl ServeOptions {
             deadline: None,
             max_requeues: 2,
             faults: None,
+            rebucket_interval: None,
+            max_buckets: 8,
         }
     }
 
@@ -223,6 +235,89 @@ impl ServeOptions {
     pub fn faults(mut self, plan: Arc<FaultPlan>) -> ServeOptions {
         self.faults = Some(plan);
         self
+    }
+
+    /// Re-derive and hot-swap bucket boundaries every `ms` milliseconds
+    /// (`0` turns the loop off).
+    pub fn rebucket_every_ms(mut self, ms: u64) -> ServeOptions {
+        self.rebucket_interval =
+            if ms == 0 { None } else { Some(Duration::from_millis(ms)) };
+        self
+    }
+
+    /// Cut-point budget per symbol for derived boundaries.
+    pub fn max_buckets(mut self, k: usize) -> ServeOptions {
+        self.max_buckets = k.max(1);
+        self
+    }
+}
+
+/// Handle to the background re-bucketing thread: signal + join on stop.
+pub(crate) struct Rebucketer {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl Rebucketer {
+    pub(crate) fn stop(self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = self.handle.join();
+    }
+}
+
+/// Spawn the coordinator's background re-bucketing loop: a dedicated
+/// worker forked from the model (sharing its policy switch, histogram,
+/// kernel store, and compile pool) wakes every `interval`, re-derives
+/// boundaries from the traffic observed so far, pre-compiles the new
+/// bucket family through the background compile pool, and flips the
+/// epoch — all off the serving hot path (see `Executor::rebucket`).
+/// Returns `None` for baseline backends (no forked workers, no switch).
+pub(crate) fn spawn_rebucketer(
+    model: &CompiledModel,
+    interval: Duration,
+    max_cuts: usize,
+) -> Option<Rebucketer> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let (prog, mut workers) = model.fork_workers(1).ok()?;
+    let mut exec = workers.pop()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("disc-rebucket".into())
+        .spawn(move || loop {
+            // Stop-checked sleep in short slices so shutdown never waits
+            // out a whole interval.
+            let mut slept = Duration::ZERO;
+            while slept < interval {
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                let slice = (interval - slept).min(Duration::from_millis(5));
+                std::thread::sleep(slice);
+                slept += slice;
+            }
+            if flag.load(Ordering::Relaxed) {
+                return;
+            }
+            // A failed cycle (e.g. an injected compile fault during
+            // pre-warm) leaves the live policy untouched; the next tick
+            // retries with more traffic observed.
+            let _ = exec.rebucket(&prog, max_cuts);
+        })
+        .expect("spawning rebucket thread");
+    Some(Rebucketer { stop, handle })
+}
+
+/// Fold the live policy switch's observability gauges into a finished
+/// report: swap count, final epoch, and a snapshot of the per-symbol
+/// extent histogram (the satellite counters next to `padding_ratio`).
+pub(crate) fn fold_policy_metrics(model: &CompiledModel, metrics: &mut RunMetrics) {
+    if let Some(sw) = model.policy_switch() {
+        metrics.rebucket_swaps = metrics.rebucket_swaps.max(sw.swaps());
+        metrics.policy_epoch = metrics.policy_epoch.max(sw.epoch());
+        let snap = sw.histogram.snapshot();
+        metrics.extent_hist =
+            snap.per_sym.into_iter().map(|(s, bins)| (s.0, bins)).collect();
     }
 }
 
@@ -715,7 +810,30 @@ fn drain_queue(
 /// caches, shared kernel/weight stores — the compile-once, upload-once
 /// serving engine. `max_batch > 1` turns on cross-request batching in
 /// either shape (program backends; other backends always dispatch solo).
+///
+/// With `rebucket_interval` set, a background re-bucketing worker runs for
+/// the duration of the serve call (stopped — and its in-flight cycle
+/// joined — before this returns), and the report's metrics carry the
+/// policy gauges (`policy_epoch`, `rebucket_swaps`, `extent_hist`).
 pub fn serve_open_loop(
+    model: &mut CompiledModel,
+    stream: Vec<Vec<Tensor>>,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    let rebucketer = opts
+        .rebucket_interval
+        .filter(|iv| !iv.is_zero())
+        .and_then(|iv| spawn_rebucketer(model, iv, opts.max_buckets));
+    let result = serve_open_loop_inner(model, stream, opts);
+    if let Some(r) = rebucketer {
+        r.stop();
+    }
+    let mut report = result?;
+    fold_policy_metrics(model, &mut report.metrics);
+    Ok(report)
+}
+
+fn serve_open_loop_inner(
     model: &mut CompiledModel,
     stream: Vec<Vec<Tensor>>,
     opts: &ServeOptions,
@@ -1138,6 +1256,33 @@ mod tests {
         assert_eq!(report.batched_requests, 0);
         assert_eq!(report.batch_occupancy, 1.0);
         assert_eq!(report.outputs.len(), 6, "outputs captured per request");
+    }
+
+    #[test]
+    fn rebucketing_serve_stays_bit_exact_and_reports_policy_gauges() {
+        let mut model = small_model();
+        let w = crate::workloads::tts::workload();
+        let stream = w.request_stream(10, 55);
+        let report = serve_open_loop(
+            &mut model,
+            stream.clone(),
+            &ServeOptions::rate(2_000.0).rebucket_every_ms(1).max_buckets(4).keep_outputs(),
+        )
+        .unwrap();
+        assert_eq!(report.completed, 10);
+        assert!(!report.metrics.extent_hist.is_empty(), "policy gauges must be reported");
+        // Whether or not a swap landed mid-stream (timing-dependent), every
+        // output must match a fresh model's solo run bit-for-bit.
+        let mut fresh = small_model();
+        for (id, got) in &report.outputs {
+            let want = fresh.run(&stream[*id as usize]).unwrap().outputs;
+            assert_eq!(got, &want, "request {id} diverged under re-bucketing");
+        }
+        // Options compose; 0 turns the loop off.
+        let o = ServeOptions::rate(1.0).rebucket_every_ms(250).max_buckets(6);
+        assert_eq!(o.rebucket_interval, Some(Duration::from_millis(250)));
+        assert_eq!(o.max_buckets, 6);
+        assert_eq!(ServeOptions::rate(1.0).rebucket_every_ms(0).rebucket_interval, None);
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //!   `WeightStore` honors per-tenant residency floors
 //!   ([`TenantSpec::floor_bytes`]): one model's working set cannot evict
 //!   another's below its guarantee.
+//! * **Bucket policy** — each tenant's model owns its own
+//!   [`crate::codegen::PolicySwitch`]; when adaptive re-bucketing is on
+//!   ([`MixOptions::rebucket_every_ms`]) every tenant gets its own
+//!   background loop re-deriving boundaries from its own extent
+//!   histogram, so one tenant's length skew never reshapes a neighbor's
+//!   bucket family (the compiled kernels still share the process-wide
+//!   store).
 //! * **Fault quarantine** — worker-panic faults are consulted only inside
 //!   the [`TenantSpec::fault_target`] tenant's dispatches, so injected
 //!   storms attribute to exactly one tenant; device-seam faults
@@ -235,6 +242,13 @@ pub struct MixOptions {
     /// Byte budget for the shared weight store (`None` leaves it
     /// unbounded); per-tenant floors bound eviction from below.
     pub weight_budget_bytes: Option<u64>,
+    /// Re-derive every tenant's bucket boundaries from its own traffic at
+    /// this cadence (`None` disables adaptive re-bucketing). Each tenant
+    /// has its own [`crate::codegen::PolicySwitch`], so one tenant's skew
+    /// never reshapes a neighbor's buckets.
+    pub rebucket_interval: Option<Duration>,
+    /// Cut budget per symbol when re-deriving boundaries.
+    pub max_buckets: usize,
 }
 
 impl Default for MixOptions {
@@ -249,6 +263,8 @@ impl Default for MixOptions {
             quarantine: Quarantine::Reference,
             capture_outputs: false,
             weight_budget_bytes: None,
+            rebucket_interval: None,
+            max_buckets: 8,
         }
     }
 }
@@ -296,6 +312,19 @@ impl MixOptions {
 
     pub fn weight_budget(mut self, bytes: u64) -> MixOptions {
         self.weight_budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Enable traffic-adaptive re-bucketing for every tenant at this
+    /// cadence (milliseconds; 0 disables).
+    pub fn rebucket_every_ms(mut self, ms: u64) -> MixOptions {
+        self.rebucket_interval = (ms > 0).then(|| Duration::from_millis(ms));
+        self
+    }
+
+    /// Cut budget per symbol for derived boundaries.
+    pub fn max_buckets(mut self, k: usize) -> MixOptions {
+        self.max_buckets = k.max(1);
         self
     }
 }
@@ -452,6 +481,7 @@ pub fn serve_mix(specs: Vec<TenantSpec>, opts: &MixOptions) -> Result<MixReport>
     // worker.
     let mut progs: Vec<Arc<Program>> = Vec::with_capacity(specs.len());
     let mut modules: Vec<Module> = Vec::with_capacity(specs.len());
+    let mut models = Vec::with_capacity(specs.len());
     let mut worker_execs: Vec<Vec<Executor>> = (0..workers).map(|_| Vec::new()).collect();
     for spec in &specs {
         let w = workloads::by_name(&spec.workload).ok_or_else(|| {
@@ -473,6 +503,9 @@ pub fn serve_mix(specs: Vec<TenantSpec>, opts: &MixOptions) -> Result<MixReport>
         for (wi, e) in execs.into_iter().enumerate() {
             worker_execs[wi].push(e);
         }
+        // Kept alive for the per-tenant re-bucketing loops and the final
+        // policy-gauge fold (each tenant has its own PolicySwitch).
+        models.push(model);
     }
     if let Some(budget) = opts.weight_budget_bytes {
         compiler.weight_store().set_max_bytes(budget);
@@ -498,6 +531,18 @@ pub fn serve_mix(specs: Vec<TenantSpec>, opts: &MixOptions) -> Result<MixReport>
     );
     let specs = Arc::new(specs);
     let modules = Arc::new(modules);
+    // One background re-bucketing loop per tenant: each periodically
+    // re-derives boundaries from its own traffic histogram, pre-compiles
+    // the candidate family through the shared store, and hot-swaps its
+    // tenant's policy epoch — off every worker's hot path.
+    let rebucketers: Vec<super::Rebucketer> =
+        match opts.rebucket_interval.filter(|iv| !iv.is_zero()) {
+            Some(iv) => models
+                .iter()
+                .filter_map(|m| super::spawn_rebucketer(m, iv, opts.max_buckets))
+                .collect(),
+            None => Vec::new(),
+        };
     let start = Instant::now();
 
     type WorkerOut = (Vec<Vec<Completion>>, Vec<RunMetrics>, Vec<usize>);
@@ -766,6 +811,9 @@ pub fn serve_mix(specs: Vec<TenantSpec>, opts: &MixOptions) -> Result<MixReport>
     // their streams to completion regardless of worker health — join them
     // to fold their shed counts into the per-tenant accounting.
     let producer_shed: Vec<u64> = producers.into_iter().map(|p| p.join().unwrap_or(0)).collect();
+    for r in rebucketers {
+        r.stop();
+    }
     if let Some(e) = first_err {
         return Err(e);
     }
@@ -781,6 +829,7 @@ pub fn serve_mix(specs: Vec<TenantSpec>, opts: &MixOptions) -> Result<MixReport>
             (b.trips, b.probes)
         };
         metrics.breaker_trips += trips;
+        super::fold_policy_metrics(&models[t], &mut metrics);
         let completions = std::mem::take(&mut completions_all[t]);
         // The zero-lost invariant, PER TENANT: nothing this tenant offered
         // is unaccounted, no matter what its neighbors (or its own fault
@@ -872,6 +921,37 @@ mod tests {
         }
         assert!(report.tenants[0].report.completed > 0);
         assert!(report.tenants[1].report.completed > 0);
+    }
+
+    #[test]
+    fn rebucketing_mix_stays_reconciled_and_reports_per_tenant_gauges() {
+        let specs = vec![
+            TenantSpec::latency("lat", "transformer").requests(12).rate(600.0).seed(31),
+            TenantSpec::throughput("thr", "tts").requests(18).rate(900.0).seed(32),
+        ];
+        let opts =
+            MixOptions::new().workers(2).batch(3).rebucket_every_ms(1).max_buckets(4);
+        let report = serve_mix(specs, &opts).unwrap();
+        for t in &report.tenants {
+            let m = &t.report.metrics;
+            assert_eq!(
+                t.report.completed as u64 + m.shed_requests + m.deadline_misses,
+                t.offered as u64,
+                "tenant {} lost requests under re-bucketing",
+                t.name
+            );
+            // Every tenant's dispatches feed its own histogram, so each
+            // report carries a non-empty per-symbol snapshot.
+            assert!(
+                !m.extent_hist.is_empty(),
+                "tenant {} must snapshot its extent histogram",
+                t.name
+            );
+        }
+        // Option composition.
+        let off = MixOptions::new().rebucket_every_ms(0);
+        assert!(off.rebucket_interval.is_none());
+        assert_eq!(MixOptions::new().max_buckets(0).max_buckets, 1);
     }
 
     #[test]

@@ -64,6 +64,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("batch", 1)?;
     let batch_window_us = args.get_usize("batch-window-us", 0)? as u64;
     let deadline_ms = args.get_usize("deadline-ms", 0)? as u64;
+    let rebucket_ms = args.get_usize("rebucket-interval", 0)? as u64;
+    let max_buckets = args.get_usize("max-buckets", 8)?;
 
     let module = disc::bridge::lower(&w.graph)?;
     let compiler = DiscCompiler::new()?;
@@ -92,7 +94,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             let mut sopts = coordinator::ServeOptions::rate(rate)
                 .workers(workers)
                 .batch(max_batch)
-                .batch_window_us(batch_window_us);
+                .batch_window_us(batch_window_us)
+                .rebucket_every_ms(rebucket_ms)
+                .max_buckets(max_buckets);
             if burst > 0 {
                 sopts = sopts.bursty(burst);
             }
@@ -179,6 +183,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         disc::util::fmt_bytes(m.batch_dev_resident_bytes as usize)
     );
     println!(
+        "bucketing: epoch={} swaps={} padded_elems={} launch_elems={} padding_ratio={:.4} \
+         hist_syms={}",
+        m.policy_epoch,
+        m.rebucket_swaps,
+        m.padded_elems,
+        m.launch_elems,
+        m.padding_ratio(),
+        m.extent_hist.len()
+    );
+    println!(
         "robustness: shed={} deadline_misses={} retries={} demotions={} worker_restarts={}",
         m.shed_requests, m.deadline_misses, m.retries, m.demotions, m.worker_restarts
     );
@@ -246,6 +260,8 @@ fn cmd_run_decode(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("batch", 4)?;
     let stagger = args.get_usize("stagger", 2)? as u64;
     let deadline_ms = args.get_usize("deadline-ms", 0)? as u64;
+    let rebucket_ms = args.get_usize("rebucket-interval", 0)? as u64;
+    let max_buckets = args.get_usize("max-buckets", 8)?;
 
     let graph = disc::workloads::decode::graph();
     let module = disc::bridge::lower(&graph)?;
@@ -270,7 +286,9 @@ fn cmd_run_decode(args: &Args) -> Result<()> {
             arrive_step: i as u64 * stagger,
         })
         .collect();
-    let mut dopts = coordinator::decode::DecodeServeOptions::batch(max_batch);
+    let mut dopts = coordinator::decode::DecodeServeOptions::batch(max_batch)
+        .rebucket_every_ms(rebucket_ms)
+        .max_buckets(max_buckets);
     if deadline_ms > 0 {
         dopts = dopts.deadline(std::time::Duration::from_millis(deadline_ms));
     }
@@ -301,6 +319,14 @@ fn cmd_run_decode(args: &Args) -> Result<()> {
         m.plan_hits,
         m.plan_misses,
         m.plan_guard_misses,
+    );
+    println!(
+        "bucketing: epoch={} swaps={} padded_elems={} launch_elems={} padding_ratio={:.4}",
+        m.policy_epoch,
+        m.rebucket_swaps,
+        m.padded_elems,
+        m.launch_elems,
+        m.padding_ratio(),
     );
     println!(
         "robustness: shed={} deadline_misses={} demotions={} worker_restarts={}",
@@ -386,6 +412,8 @@ fn cmd_run_mix(args: &Args) -> Result<()> {
     let mut opts = MixOptions::new()
         .workers(args.get_usize("workers", 2)?)
         .batch(args.get_usize("batch", 4)?)
+        .rebucket_every_ms(args.get_usize("rebucket-interval", 0)? as u64)
+        .max_buckets(args.get_usize("max-buckets", 8)?)
         .breaker(
             args.get_usize("breaker", 3)? as u32,
             args.get_usize("probe-after", 8)? as u64,
@@ -431,12 +459,15 @@ fn cmd_run_mix(args: &Args) -> Result<()> {
             m.quarantined
         );
         println!(
-            "  service: dispatches={} plans h/m={}/{} compiles={} weight-resident={}",
+            "  service: dispatches={} plans h/m={}/{} compiles={} weight-resident={} \
+             padding_ratio={:.4} epoch={}",
             t.report.batch_launches,
             m.plan_hits,
             m.plan_misses,
             m.compile_events,
-            disc::util::fmt_bytes(m.weight_resident_bytes as usize)
+            disc::util::fmt_bytes(m.weight_resident_bytes as usize),
+            m.padding_ratio(),
+            m.policy_epoch
         );
     }
     let a = &report.aggregate;

@@ -168,10 +168,12 @@ pub struct GroupShape {
 impl GroupShape {
     /// The batch-plan cache key of this group (extents sorted: the stacked
     /// walk is order-independent, see `runtime::plan::BatchPlanKey`).
-    pub fn plan_key(&self, program: u64) -> BatchPlanKey {
+    /// `epoch` is the live bucket-policy epoch — walks recorded under an
+    /// older bucket family become unreachable after a boundary swap.
+    pub fn plan_key(&self, program: u64, epoch: u64) -> BatchPlanKey {
         let mut extents = self.extents.clone();
         extents.sort_unstable();
-        BatchPlanKey { program, residual: self.residual.clone(), extents }
+        BatchPlanKey { program, residual: self.residual.clone(), extents, epoch }
     }
 }
 
@@ -685,16 +687,28 @@ impl Executor {
         analysis: &BatchAnalysis,
         shape: GroupShape,
     ) -> Result<BatchOutput> {
+        // Members of a batched dispatch never pass the solo tiers, so the
+        // batch tier records each member's binding vector (residual + its
+        // leading extent) in the shared traffic histogram itself.
+        for &e in &shape.extents {
+            let mut bindings = shape.residual.clone();
+            if let Some(bs) = analysis.batch_sym {
+                bindings.push((bs, e));
+            }
+            self.switch.histogram.record_bindings(&bindings);
+        }
         if !self.opts.plan_cache {
             return self.run_stacked(prog, requests, analysis, shape, None);
         }
-        let key = shape.plan_key(prog.id);
+        let key = shape.plan_key(prog.id, self.switch.epoch());
         match self.batch_plans.get(&key).cloned() {
             Some(plan) => {
                 if plan.param_guards_hold(requests) {
                     match self.replay_batch(prog, requests, analysis, &shape, &plan) {
-                        Ok(Some(out)) => {
+                        Ok(Some(mut out)) => {
                             self.batch_plan_stats.hits += 1;
+                            out.metrics.launch_elems += plan.launch_elems;
+                            out.metrics.padded_elems += plan.padded_elems;
                             return Ok(out);
                         }
                         Ok(None) => {}
@@ -726,7 +740,11 @@ impl Executor {
                     self.run_stacked(prog, requests, analysis, shape, Some(&mut rec))?;
                 out.metrics.batch_plan_misses += 1;
                 let observed = rec.observed().clone();
-                let plan = rec.finish(&prog.module);
+                let mut plan = rec.finish(&prog.module);
+                // Replays skip the batched interpret tier; the plan carries
+                // the recording walk's fused-launch element totals.
+                plan.launch_elems = out.metrics.launch_elems;
+                plan.padded_elems = out.metrics.padded_elems;
                 let mut bindings: HashMap<SymId, i64> = shape.residual.iter().copied().collect();
                 if let Some(b) = analysis.batch_sym {
                     bindings.insert(b, *shape.offsets.last().unwrap_or(&0) as i64);
@@ -827,7 +845,8 @@ impl Executor {
         let t_start = Instant::now();
         let m = &prog.module;
         let k = requests.len();
-        let mut metrics = RunMetrics::default();
+        let mut metrics =
+            RunMetrics { policy_epoch: self.switch.epoch(), ..Default::default() };
         let before = self.stats_snapshot();
         let GroupShape { mut envs, extents, offsets, .. } = shape;
 
@@ -1002,6 +1021,8 @@ impl Executor {
             actual.insert(s, env.resolve_dim(m, Dim::Sym(s), &NoVals)?);
         }
         let (kernel, _buckets) = self.cache.get_or_compile(m, &fl.group, &fl.sig, &actual)?;
+        let actual_vec: Vec<usize> = fl.syms.iter().map(|s| actual[s]).collect();
+        self.switch.histogram.record_site(prog.id, idx, &fl.syms, &actual_vec);
         let spec = &kernel.spec;
         enum Src {
             In(usize),
@@ -1010,11 +1031,15 @@ impl Executor {
         let mut owned: Vec<Tensor> = Vec::new();
         let mut srcs: Vec<Src> = Vec::with_capacity(inputs.len() + spec.extent_locals.len());
         for (i, src) in inputs.iter().enumerate() {
+            let bucket_elems = spec.input_dims[i].iter().product::<usize>() as u64;
+            metrics.launch_elems += bucket_elems;
             if src.dims == spec.input_dims[i] {
                 srcs.push(Src::In(i));
                 metrics.mem_bytes += src.byte_size() as u64;
             } else {
                 metrics.pad_copies += 1;
+                metrics.padded_elems +=
+                    bucket_elems - src.dims.iter().product::<usize>() as u64;
                 let padded = pad_box(
                     src,
                     &spec.input_dims[i],
@@ -1065,10 +1090,13 @@ impl Executor {
         metrics.mem_bytes += out.byte_size() as u64;
         metrics.d2h_bytes += out.byte_size() as u64;
         let actual_out = env.resolve_dims(m, &m.ty(fl.root).dims, &NoVals)?;
+        metrics.launch_elems += spec.out_dims.iter().product::<usize>() as u64;
         let out = if out.dims == actual_out {
             out
         } else {
             metrics.pad_copies += 1;
+            metrics.padded_elems += (spec.out_dims.iter().product::<usize>()
+                - actual_out.iter().product::<usize>()) as u64;
             if count_padding {
                 metrics.batch_padding_bytes += (out.byte_size()
                     - actual_out.iter().product::<usize>() * spec.out_dtype.byte_size())
@@ -1573,7 +1601,8 @@ impl Executor {
         let m = &prog.module;
         let k = requests.len();
         let device = self.device.clone();
-        let mut metrics = RunMetrics::default();
+        let mut metrics =
+            RunMetrics { policy_epoch: self.switch.epoch(), ..Default::default() };
         let before = self.stats_snapshot();
 
         // Seed the joint store: stacked parameters + constants (the same
@@ -2557,9 +2586,9 @@ mod tests {
         let ok = group_shape(m, &a, &[t(2, 5), t(3, 5)]).unwrap();
         assert_eq!(ok.extents, vec![2, 3]);
         assert_eq!(ok.offsets, vec![0, 2, 5]);
-        let key_a = ok.plan_key(prog.id);
+        let key_a = ok.plan_key(prog.id, 0);
         let flipped = group_shape(m, &a, &[t(3, 5), t(2, 5)]).unwrap();
-        assert_eq!(flipped.plan_key(prog.id), key_a, "plan key sorts extents");
+        assert_eq!(flipped.plan_key(prog.id, 0), key_a, "plan key sorts extents");
         assert!(group_shape(m, &a, &[t(2, 5), t(2, 6)]).is_none(), "residual mismatch");
         assert!(group_shape(m, &a, &[t(2, 5), vec![]]).is_none(), "unbindable member");
     }

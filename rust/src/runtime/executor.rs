@@ -27,6 +27,7 @@
 //! `BatchPlan` record/replay (`batch_plans` here mirrors `plans`, with
 //! the same FIFO bound and weight-pin discipline).
 
+use crate::codegen::policy::{derive_boundaries, PolicySwitch};
 use crate::codegen::{BucketPolicy, KernelCache};
 use crate::dhlo::{DType, Module, Op, ValueId};
 use crate::library::{GemmLibrary, GemmSrc, WeightKey};
@@ -194,6 +195,11 @@ pub struct Executor {
     /// (seeded by `DiscCompiler`, shared across forked workers like
     /// `batch_info`) and instantiated per binding at plan-install time.
     pub(crate) mem_plans: HashMap<u64, Arc<crate::runtime::memplan::MemoryPlan>>,
+    /// The traffic-adaptive bucket-policy switch: shared (like the kernel
+    /// store) across every worker forked from this executor, so the extent
+    /// histogram aggregates all traffic and a boundary swap is observed by
+    /// the whole pool. `opts.policy` stays the base (epoch-0) policy.
+    pub switch: Arc<PolicySwitch>,
 }
 
 pub struct ExecOutput {
@@ -256,8 +262,11 @@ impl Executor {
         store: Arc<crate::codegen::KernelStore>,
         weights: Arc<crate::library::WeightStore>,
     ) -> Self {
+        let switch = Arc::new(PolicySwitch::new(opts.policy));
+        let mut cache = KernelCache::with_store(store.clone(), opts.policy);
+        cache.set_switch(switch.clone());
         Executor {
-            cache: KernelCache::with_store(store.clone(), opts.policy),
+            cache,
             library: GemmLibrary::with_shared(device.clone(), store, weights),
             pool: BufferPool::new(),
             opts,
@@ -274,6 +283,7 @@ impl Executor {
             batch_plan_pins: HashMap::new(),
             batch_plan_stats: PlanStats::default(),
             mem_plans: HashMap::new(),
+            switch,
         }
     }
 
@@ -309,6 +319,10 @@ impl Executor {
         e.max_plans = self.max_plans;
         e.batch_info = self.batch_info.clone();
         e.mem_plans = self.mem_plans.clone();
+        // One policy switch per worker pool: forks share the parent's, so
+        // the histogram aggregates and epoch flips reach every worker.
+        e.switch = self.switch.clone();
+        e.cache.set_switch(e.switch.clone());
         e
     }
 
@@ -331,6 +345,54 @@ impl Executor {
         plan: Arc<crate::runtime::memplan::MemoryPlan>,
     ) {
         self.mem_plans.insert(program, plan);
+    }
+
+    /// One re-bucketing cycle for `prog`: derive candidate boundaries from
+    /// the shared traffic histogram, pre-compile the candidate bucket
+    /// family for every recorded launch site through the background
+    /// compile pool, wait for those compiles to land, then flip the epoch.
+    /// Dispatches never stall on the swap — by the time the epoch moves,
+    /// the whole new family is resident in the shared store. Returns
+    /// `true` when a new epoch was installed (`false`: no traffic yet, or
+    /// the derived cuts already match the live ones).
+    ///
+    /// The coordinator's re-bucketing loop calls this on a dedicated
+    /// forked worker so histogram snapshots, spec emission, and the
+    /// quiesce wait all happen off the serving hot path.
+    pub fn rebucket(&mut self, prog: &Program, max_cuts: usize) -> Result<bool> {
+        let snap = self.switch.histogram.snapshot();
+        if snap.total == 0 {
+            return Ok(false);
+        }
+        let cand = derive_boundaries(&snap, max_cuts.max(1), self.switch.base());
+        if cand.is_trivial() {
+            return Ok(false);
+        }
+        let (_, cur) = self.switch.snapshot();
+        if cur.cuts == cand.cuts {
+            return Ok(false);
+        }
+        for ((pid, fi), actuals) in &snap.sites {
+            if *pid != prog.id {
+                continue;
+            }
+            let Some(fl) = prog.fused.get(*fi) else { continue };
+            for actual in actuals {
+                self.cache.prefetch_bucketed(
+                    &prog.module,
+                    &fl.group,
+                    &fl.sig,
+                    &fl.syms,
+                    actual,
+                    &cand,
+                )?;
+            }
+        }
+        // Zero-stall swap: the epoch flips only after the candidate family
+        // finished compiling.
+        self.cache.store().quiesce();
+        self.switch.install(cand);
+        Ok(true)
     }
 
     /// The program's symbolic memory plan, building it on first use when
@@ -466,7 +528,7 @@ impl Executor {
         gen_steps: usize,
     ) -> Result<DecodeOutput> {
         anyhow::ensure!(!prompt.is_empty(), "decode needs at least one prompt token");
-        let mut kv = KvCache::new(*spec, self.opts.policy);
+        let mut kv = KvCache::new(*spec, self.opts.policy).with_switch(self.switch.clone());
         let faults = self.device.faults().cloned();
         let mut metrics = RunMetrics { decode_requests: 1, ..Default::default() };
         // The slab is planner-owned as a long-lived KV-class slot: one
@@ -557,11 +619,20 @@ impl Executor {
 
         let before = self.stats_snapshot();
 
+        // Record this dispatch's binding vector in the shared traffic
+        // histogram and read the bucket-policy epoch once: the plan key
+        // embeds it, so plans recorded under an older bucket family become
+        // unreachable after a swap and retire through the FIFO below.
+        let bindings = binding_vector(&env);
+        self.switch.histogram.record_bindings(&bindings);
+        let epoch = self.switch.epoch();
+        metrics.policy_epoch = epoch;
+
         let mut outputs: Option<Vec<Tensor>> = None;
         let mut record_key: Option<PlanKey> = None;
         let mut demoted = false;
         if self.opts.plan_cache {
-            let key = PlanKey { program: prog.id, bindings: binding_vector(&env) };
+            let key = PlanKey { program: prog.id, bindings, epoch };
             match self.plans.get(&key).cloned() {
                 Some(plan) => {
                     if plan.param_guards_hold(inputs) {
@@ -569,6 +640,8 @@ impl Executor {
                             Ok(Some(outs)) => {
                                 self.plan_stats.hits += 1;
                                 metrics.plan_hits += 1;
+                                metrics.launch_elems += plan.launch_elems;
+                                metrics.padded_elems += plan.padded_elems;
                                 outputs = Some(outs);
                             }
                             Ok(None) => {}
@@ -612,6 +685,11 @@ impl Executor {
                     let log = env.elem_log.take().unwrap_or_default();
                     let observed = rec.observed().clone();
                     if let Some(mut plan) = rec.finish(m, prog, &log) {
+                        // Replays skip the interpret tier, so the plan
+                        // carries the recording run's fused-launch element
+                        // totals to keep the padding counters flowing.
+                        plan.launch_elems = metrics.launch_elems;
+                        plan.padded_elems = metrics.padded_elems;
                         // Symbolic memory plan: instantiate the program's
                         // compile-time slot assignment for this binding
                         // (observed-peak fallback when it declines).
@@ -856,6 +934,14 @@ impl Executor {
                     // 2. Cache lookup / compile.
                     let (kernel, _buckets) =
                         self.cache.get_or_compile(m, &fl.group, &fl.sig, &actual)?;
+                    // Log this launch site (fused index + actual extents)
+                    // in the shared histogram: the re-bucketing pass warms
+                    // exactly these sites under candidate boundaries before
+                    // flipping the epoch. Only the interpret tier passes
+                    // here, so the map tracks the distinct shape set.
+                    let actual_vec: Vec<usize> =
+                        fl.syms.iter().map(|s| actual[s]).collect();
+                    self.switch.histogram.record_site(prog.id, *idx, &fl.syms, &actual_vec);
                     // Speculative neighbor-bucket warming: while this
                     // request is being recorded (= a shape the process has
                     // not served before), enqueue background compiles for
@@ -877,11 +963,16 @@ impl Executor {
                     );
                     for (i, &v) in fl.inputs.iter().enumerate() {
                         let src = vals[v].as_deref().unwrap();
+                        let bucket_elems =
+                            spec.input_dims[i].iter().product::<usize>() as u64;
+                        metrics.launch_elems += bucket_elems;
                         if src.dims == spec.input_dims[i] {
                             arg_ix.push(-(v as isize) - 1);
                             metrics.mem_bytes += src.byte_size() as u64;
                         } else {
                             metrics.pad_copies += 1;
+                            metrics.padded_elems +=
+                                bucket_elems - src.dims.iter().product::<usize>() as u64;
                             let padded = pad_box(
                                 src,
                                 &spec.input_dims[i],
@@ -943,10 +1034,14 @@ impl Executor {
                     // 5. Crop to actual extents.
                     let actual_out =
                         env.resolve_dims(m, &m.ty(fl.root).dims, &vals[..])?;
+                    metrics.launch_elems += spec.out_dims.iter().product::<usize>() as u64;
                     let out = if out.dims == actual_out {
                         out
                     } else {
                         metrics.pad_copies += 1;
+                        metrics.padded_elems += (spec.out_dims.iter().product::<usize>()
+                            - actual_out.iter().product::<usize>())
+                            as u64;
                         crop_box(&out, &actual_out)?
                     };
                     if let Some(r) = rec.as_deref_mut() {

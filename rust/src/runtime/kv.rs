@@ -27,9 +27,11 @@
 //! (`Executor::run_decode`) and the coordinator's iteration-level
 //! scheduler (`coordinator::decode`) own acquisition/release.
 
+use crate::codegen::policy::PolicySwitch;
 use crate::codegen::BucketPolicy;
 use crate::runtime::tensor::{Data, Tensor};
 use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
 
 /// Additive attention-mask value for empty (future/pad) lanes. Large
 /// enough that `exp(x - max)` underflows to exactly `0.0f32` after the
@@ -66,6 +68,11 @@ impl DecodeSpec {
 pub struct KvCache {
     spec: DecodeSpec,
     policy: BucketPolicy,
+    /// Live bucket-policy handle: when set, [`grow`](KvCache::grow)
+    /// targets the *current* [`Boundaries`](crate::codegen::Boundaries)
+    /// (re-read per rollover, so an epoch flip mid-request redirects the
+    /// very next rollover); when `None`, the static base policy decides.
+    switch: Option<Arc<PolicySwitch>>,
     /// Current bucket capacity `C` (leading extent of every step input).
     capacity: usize,
     /// Valid rows: tokens whose k/v have been appended so far.
@@ -85,12 +92,20 @@ impl KvCache {
         KvCache {
             spec,
             policy,
+            switch: None,
             capacity,
             used: 0,
             x_hist: vec![0.0; capacity * spec.hidden],
             slabs: vec![vec![0.0; capacity * 2 * spec.hidden]; spec.layers],
             rollovers: 0,
         }
+    }
+
+    /// Attach the executor's live policy handle so rollovers target the
+    /// current adaptive boundaries instead of the static base policy.
+    pub fn with_switch(mut self, switch: Arc<PolicySwitch>) -> KvCache {
+        self.switch = Some(switch);
+        self
     }
 
     pub fn capacity(&self) -> usize {
@@ -119,7 +134,10 @@ impl KvCache {
     /// and pays one plan record on the next step — the new leading extent
     /// is a fresh binding vector.
     pub fn grow(&mut self) {
-        let new_cap = self.policy.bucket(self.capacity + 1);
+        let new_cap = match &self.switch {
+            Some(sw) => sw.snapshot().1.bucket_any(self.capacity + 1),
+            None => self.policy.bucket(self.capacity + 1),
+        };
         debug_assert!(new_cap > self.capacity, "bucket policy must grow the capacity");
         let h = self.spec.hidden;
         self.x_hist.resize(new_cap * h, 0.0);
@@ -250,6 +268,24 @@ mod tests {
         let Data::F32(slab) = &inputs[2].data else { panic!("slab dtype") };
         assert!(slab[..8].iter().all(|&x| x == 1.0));
         assert!(slab[8..16].iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn grow_targets_live_boundaries_through_switch() {
+        use crate::codegen::Boundaries;
+        use crate::shape::SymId;
+        let sw = Arc::new(PolicySwitch::new(BucketPolicy::NextPow2));
+        let mut kv = KvCache::new(test_spec(), BucketPolicy::NextPow2).with_switch(sw.clone());
+        assert_eq!(kv.capacity(), 1);
+        let mut cuts = std::collections::BTreeMap::new();
+        cuts.insert(SymId(0), vec![5, 12]);
+        sw.install(Boundaries { base: BucketPolicy::NextPow2, cuts });
+        kv.grow();
+        assert_eq!(kv.capacity(), 5, "rollover lands on the live cut");
+        kv.grow();
+        assert_eq!(kv.capacity(), 12);
+        kv.grow();
+        assert_eq!(kv.capacity(), 16, "past every cut: base policy");
     }
 
     #[test]

@@ -138,6 +138,28 @@ pub struct RunMetrics {
     /// Peak bytes held in KV-cache slabs during the run (a gauge, like
     /// `device_resident_bytes`).
     pub kv_resident_bytes: u64,
+    /// Elements actually launched through fused kernels (padded/bucket
+    /// extents, inputs + outputs). With `padded_elems` this makes *solo*
+    /// padding waste visible — `batch_padding_bytes` only counts the
+    /// stacking pad lanes of batched dispatches.
+    pub launch_elems: u64,
+    /// Of `launch_elems`, the elements that were pure bucket padding
+    /// (bucket extent minus actual extent). The padded-FLOP proxy the
+    /// traffic-adaptive bucket policy minimizes.
+    pub padded_elems: u64,
+    /// Bucket-policy epoch the run last dispatched under (a gauge —
+    /// folding keeps the max; stays 0 until a re-bucketing swap installs
+    /// derived boundaries).
+    pub policy_epoch: u64,
+    /// Boundary swaps installed on the policy switch so far (a gauge —
+    /// every worker sees the same shared switch, so folding takes the max
+    /// rather than multiplying the count by the worker pool size).
+    pub rebucket_swaps: u64,
+    /// Snapshot of the shared per-symbol extent histogram: for each
+    /// canonical symbol (by raw id), the sorted `(extent, count)` bins.
+    /// Populated by the serve paths when they fold the final report; the
+    /// histogram is shared across workers, so folding merges bins by max.
+    pub extent_hist: Vec<(u32, Vec<(usize, u64)>)>,
 }
 
 impl RunMetrics {
@@ -153,6 +175,38 @@ impl RunMetrics {
 
     pub fn total_kernels(&self) -> u64 {
         self.mem_kernels + self.lib_calls
+    }
+
+    /// Fraction of launched fused-kernel elements that were bucket padding
+    /// (0.0 when nothing launched). The quantity the adaptive bucket
+    /// policy's gated bench drives down versus the static policy.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.launch_elems == 0 {
+            0.0
+        } else {
+            self.padded_elems as f64 / self.launch_elems as f64
+        }
+    }
+}
+
+/// Merge two extent-histogram snapshots bin-wise by max: every worker
+/// snapshots the *same* shared histogram, so summing would multiply counts
+/// by the worker pool size while max keeps the latest (counts are
+/// monotone).
+fn merge_hist(a: &mut Vec<(u32, Vec<(usize, u64)>)>, b: &[(u32, Vec<(usize, u64)>)]) {
+    for (sym, bins) in b {
+        match a.iter_mut().find(|(s, _)| s == sym) {
+            None => a.push((*sym, bins.clone())),
+            Some((_, mine)) => {
+                for &(e, c) in bins {
+                    match mine.iter_mut().find(|(me, _)| *me == e) {
+                        None => mine.push((e, c)),
+                        Some((_, mc)) => *mc = (*mc).max(c),
+                    }
+                }
+                mine.sort_unstable_by_key(|&(e, _)| e);
+            }
+        }
     }
 }
 
@@ -208,6 +262,13 @@ impl AddAssign<&RunMetrics> for RunMetrics {
         self.kv_rollovers += o.kv_rollovers;
         self.decode_joins += o.decode_joins;
         self.kv_resident_bytes = self.kv_resident_bytes.max(o.kv_resident_bytes);
+        self.launch_elems += o.launch_elems;
+        self.padded_elems += o.padded_elems;
+        // Epoch/swap counts and the histogram describe shared state every
+        // worker observes — gauges, not flows.
+        self.policy_epoch = self.policy_epoch.max(o.policy_epoch);
+        self.rebucket_swaps = self.rebucket_swaps.max(o.rebucket_swaps);
+        merge_hist(&mut self.extent_hist, &o.extent_hist);
     }
 }
 
@@ -337,6 +398,37 @@ mod tests {
         assert_eq!(a.kv_rollovers, 3);
         assert_eq!(a.decode_joins, 1);
         assert_eq!(a.kv_resident_bytes, 40_960, "slab residency is a gauge");
+    }
+
+    #[test]
+    fn padding_counters_fold_flows_and_histogram_by_max() {
+        let mut a = RunMetrics {
+            launch_elems: 100,
+            padded_elems: 25,
+            policy_epoch: 1,
+            rebucket_swaps: 1,
+            extent_hist: vec![(0, vec![(9, 5), (40, 2)])],
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            launch_elems: 300,
+            padded_elems: 15,
+            policy_epoch: 1,
+            rebucket_swaps: 1,
+            extent_hist: vec![(0, vec![(9, 7)]), (1, vec![(4, 1)])],
+            ..Default::default()
+        };
+        a += &b;
+        assert_eq!(a.launch_elems, 400, "launched elements are a flow");
+        assert_eq!(a.padded_elems, 40, "padded elements are a flow");
+        assert!((a.padding_ratio() - 0.1).abs() < 1e-9);
+        assert_eq!(a.rebucket_swaps, 1, "shared-switch swap count is a gauge");
+        // Histogram bins merge by max: both workers snapshot one shared
+        // histogram, so (0, 9) keeps 7, not 12.
+        let s0 = &a.extent_hist.iter().find(|(s, _)| *s == 0).unwrap().1;
+        assert_eq!(s0.as_slice(), &[(9, 7), (40, 2)]);
+        assert!(a.extent_hist.iter().any(|(s, _)| *s == 1));
+        assert_eq!(RunMetrics::default().padding_ratio(), 0.0);
     }
 
     #[test]

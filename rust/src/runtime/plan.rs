@@ -48,11 +48,15 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Cache key: which program, under which concrete extents of its dynamic
-/// dims (canonical symbols, sorted for determinism).
+/// dims (canonical symbols, sorted for determinism), recorded under which
+/// bucket-policy epoch. The epoch makes plans from before a boundary swap
+/// unreachable — their kernels used the old bucket family — so they retire
+/// through the executor's FIFO instead of poisoning replays.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub program: u64,
     pub bindings: Vec<(SymId, i64)>,
+    pub epoch: u64,
 }
 
 /// The binding vector of a freshly bound environment (call right after
@@ -128,6 +132,12 @@ pub struct LaunchPlan {
     /// the plan (FIFO eviction) drops the lease and shrinks the arena's
     /// reserved capacity.
     pub reserve: Option<crate::runtime::buffers::ArenaLease>,
+    /// Fused-launch elements one replay of this plan moves (bucket
+    /// extents), and how many of them are bucket padding — captured from
+    /// the recording run so replays keep the padding counters honest
+    /// without re-deriving shapes.
+    pub launch_elems: u64,
+    pub padded_elems: u64,
 }
 
 /// Check a parameter-guard map against one request's inputs. `true` means
@@ -311,6 +321,8 @@ impl PlanRecorder {
             device_peak_bytes: self.dev_peak,
             memory: None,
             reserve: None,
+            launch_elems: 0,
+            padded_elems: 0,
         })
     }
 }
@@ -334,6 +346,9 @@ pub struct BatchPlanKey {
     pub program: u64,
     pub residual: Vec<(SymId, i64)>,
     pub extents: Vec<i64>,
+    /// Bucket-policy epoch the walk was recorded under (see
+    /// [`PlanKey::epoch`]).
+    pub epoch: u64,
 }
 
 /// One planned step of a batched walk.
@@ -376,6 +391,10 @@ pub struct BatchPlan {
     pub memory: Option<crate::runtime::memplan::PlanMemory>,
     /// Arena reservation held for the batch plan's cache lifetime.
     pub reserve: Option<crate::runtime::buffers::ArenaLease>,
+    /// Fused-launch elements one replay moves and the padded share of
+    /// them (see [`LaunchPlan::launch_elems`]).
+    pub launch_elems: u64,
+    pub padded_elems: u64,
 }
 
 impl BatchPlan {
@@ -463,6 +482,8 @@ impl BatchPlanRecorder {
             device_peak_bytes: self.dev_peak,
             memory: None,
             reserve: None,
+            launch_elems: 0,
+            padded_elems: 0,
         }
     }
 }
@@ -515,7 +536,12 @@ mod tests {
 
     #[test]
     fn batch_plan_key_distinguishes_extent_multisets() {
-        let k = |extents: Vec<i64>| BatchPlanKey { program: 7, residual: vec![], extents };
+        let k = |extents: Vec<i64>| BatchPlanKey {
+            program: 7,
+            residual: vec![],
+            extents,
+            epoch: 0,
+        };
         assert_eq!(k(vec![2, 3]), k(vec![2, 3]));
         assert_ne!(k(vec![2, 3]), k(vec![2, 2]));
         assert_ne!(k(vec![2, 3]), k(vec![2, 3, 3]));
@@ -532,6 +558,8 @@ mod tests {
             device_peak_bytes: 0,
             memory: None,
             reserve: None,
+            launch_elems: 0,
+            padded_elems: 0,
         };
         let good = vec![vec![Tensor::i64(&[1], vec![4])], vec![Tensor::i64(&[1], vec![4])]];
         let bad = vec![vec![Tensor::i64(&[1], vec![4])], vec![Tensor::i64(&[1], vec![5])]];

@@ -234,6 +234,133 @@ fn multi_tenant_mix_is_bit_exact_per_tenant() {
 }
 
 #[test]
+fn rebucket_epoch_flip_is_bit_exact_with_zero_stall_and_plan_retirement() {
+    use std::collections::BTreeSet;
+    use std::time::Duration;
+
+    // A Zipf-skewed length stream (the traffic shape adaptive bucketing
+    // exists for) pushed through an epoch flip on every tier: solo,
+    // stacked batch, decode. Outputs must stay bit-identical to the pure
+    // interpreter, the flip must cost zero compile stall (the candidate
+    // family pre-compiles before the swap), and stale-epoch launch plans
+    // must FIFO-retire from a bounded plan cache.
+    let seed = 0x2EB0_5EEDu64;
+    let w = workloads::by_name("transformer").unwrap();
+    let lengths =
+        disc::bench::zipf_lengths(seed, 10, w.seq_range.0 + 1, w.seq_range.0 + 30, 1.1);
+    let distinct: BTreeSet<usize> = lengths.iter().copied().collect();
+    let d = distinct.len();
+    let mut rng = Prng::new(seed ^ 1);
+    let cases: Vec<Vec<Tensor>> = lengths.iter().map(|&l| (w.gen)(l, &mut rng)).collect();
+
+    // Ground truth: the pure interpreter tier.
+    let mut interp = fresh_model("transformer", &interpret_only());
+    let want: Vec<Vec<Tensor>> = cases
+        .iter()
+        .map(|inputs| {
+            interp
+                .run(inputs)
+                .unwrap_or_else(|e| panic!("seed {seed:#x}: interpret run: {e:#}"))
+                .outputs
+        })
+        .collect();
+
+    // --- solo: warm, flip, replay under the new epoch -------------------
+    // The plan cache is clamped to the distinct-binding count, so the
+    // post-flip re-records (new PlanKey epoch) can only fit by evicting
+    // every stale-epoch plan.
+    let mut solo = fresh_model("transformer", &CompileOptions::mode(Mode::Disc));
+    solo.set_max_plans(d);
+    for (inputs, want) in cases.iter().zip(&want) {
+        let out = solo.run(inputs).unwrap();
+        assert_eq!(&out.outputs, want, "seed {seed:#x}: solo warm diverged");
+    }
+    let ps = solo.plan_stats().unwrap();
+    assert_eq!(ps.entries, d, "seed {seed:#x}: warm phase must record {d} plans");
+    let misses_before = ps.misses;
+
+    let swapped = solo.rebucket_now(4).unwrap();
+    assert!(swapped, "seed {seed:#x}: zipf traffic must derive a non-trivial policy");
+    let mut stall = Duration::ZERO;
+    for (inputs, want) in cases.iter().zip(&want) {
+        let out = solo.run(inputs).unwrap();
+        stall += out.metrics.compile_stall;
+        assert_eq!(&out.outputs, want, "seed {seed:#x}: solo post-flip diverged");
+    }
+    assert_eq!(
+        stall,
+        Duration::ZERO,
+        "seed {seed:#x}: post-flip solo dispatches stalled on compilation"
+    );
+    let ps = solo.plan_stats().unwrap();
+    assert_eq!(
+        ps.entries, d,
+        "seed {seed:#x}: stale-epoch plans must retire as new-epoch plans record"
+    );
+    assert_eq!(
+        ps.misses,
+        misses_before + d as u64,
+        "seed {seed:#x}: every distinct binding re-records once under the new epoch"
+    );
+    // Steady state: the new-epoch plans now replay.
+    let hits_before = ps.hits;
+    for (inputs, want) in cases.iter().zip(&want) {
+        let out = solo.run(inputs).unwrap();
+        assert_eq!(&out.outputs, want, "seed {seed:#x}: solo steady-state diverged");
+    }
+    assert!(
+        solo.plan_stats().unwrap().hits > hits_before,
+        "seed {seed:#x}: new-epoch plans must replay after the flip"
+    );
+
+    // --- stacked batch across the flip ----------------------------------
+    let mut batched = fresh_model("transformer", &CompileOptions::mode(Mode::Disc));
+    let groups: Vec<Vec<Vec<Tensor>>> =
+        cases.chunks(2).map(|g| g.to_vec()).collect();
+    let check_rounds = |batched: &mut CompiledModel, label: &str| -> Duration {
+        let mut stall = Duration::ZERO;
+        for round in 0..2 {
+            for (gi, group) in groups.iter().enumerate() {
+                let out = batched.run_batch(group).unwrap();
+                stall += out.metrics.compile_stall;
+                for (k, got) in out.outputs.iter().enumerate() {
+                    assert_eq!(
+                        got, &want[gi * 2 + k],
+                        "seed {seed:#x}: batched {label} (round {round}) diverged"
+                    );
+                }
+            }
+        }
+        stall
+    };
+    let _ = check_rounds(&mut batched, "pre-flip");
+    assert!(batched.rebucket_now(4).unwrap(), "seed {seed:#x}: batched flip");
+    let stall = check_rounds(&mut batched, "post-flip");
+    assert_eq!(
+        stall,
+        Duration::ZERO,
+        "seed {seed:#x}: post-flip batched dispatches stalled on compilation"
+    );
+    let bs = batched.batch_plan_stats().unwrap();
+    assert!(bs.hits > 0, "seed {seed:#x}: new-epoch batch plans must replay");
+
+    // --- decode across the flip ------------------------------------------
+    let spec = workloads::decode::spec();
+    let vocab = workloads::decode::VOCAB as i64;
+    let mut drng = Prng::new(seed ^ 2);
+    let prompt = drng.fill_i64(3, 0, vocab - 1);
+    let mut dinterp = fresh_model("decode", &interpret_only());
+    let dwant = dinterp.run_decode(&spec, &prompt, 8).unwrap();
+    let mut tiered = fresh_model("decode", &CompileOptions::mode(Mode::Disc));
+    let pre = tiered.run_decode(&spec, &prompt, 8).unwrap();
+    assert_eq!(pre.generated, dwant.generated, "seed {seed:#x}: decode pre-flip tokens");
+    tiered.rebucket_now(4).unwrap();
+    let post = tiered.run_decode(&spec, &prompt, 8).unwrap();
+    assert_eq!(post.generated, dwant.generated, "seed {seed:#x}: decode post-flip tokens");
+    assert_eq!(post.step_probs, dwant.step_probs, "seed {seed:#x}: decode post-flip probs");
+}
+
+#[test]
 fn decode_loops_are_bit_exact_across_tiers_and_scheduling() {
     let spec = workloads::decode::spec();
     let vocab = workloads::decode::VOCAB as i64;
